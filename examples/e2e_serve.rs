@@ -1,0 +1,136 @@
+//! END-TO-END DRIVER (DESIGN.md §5 "E2E"): the full three-layer stack on a
+//! real workload, proving every layer composes:
+//!
+//!   trained checkpoint (build-time JAX)            — L2 authoring
+//!     → Rust PTQ pipeline (GPTQ → FGQ FP4 → M2 constraint → LoRC)
+//!     → PJRT executable from an AOT HLO artifact   — L1/L2 lowered once
+//!     → Rust serving coordinator (dynamic batcher) — L3 request path
+//!     → batched scoring requests from concurrent clients
+//!
+//! Reports quality (perplexity parity: Rust engine vs PJRT within 0.2%)
+//! and serving latency/throughput. Python is never loaded at runtime.
+//!
+//! ```bash
+//! make build artifacts ckpt
+//! cargo run --release --example e2e_serve [-- <model> <n_requests>]
+//! ```
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use zeroquant_fp::data::{read_tokens, Corpus, CorpusKind};
+use zeroquant_fp::lorc::LorcConfig;
+use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
+use zeroquant_fp::pipeline::{quantize_checkpoint, PtqConfig};
+use zeroquant_fp::quant::{Scheme, ScaleConstraint};
+use zeroquant_fp::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("opt-m");
+    let n_requests: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(192);
+    let (cfg, alpha) =
+        ModelConfig::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+
+    // ---- load + outlier surrogate ----------------------------------------
+    let mut ck = Checkpoint::load(Path::new(&format!("ckpt/{}.zqckpt", cfg.name)))
+        .map_err(|e| anyhow::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
+    ck.config.name = cfg.name.clone();
+    let mut rng = Rng::seeded(0xA11CE);
+    inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
+    let seq = ck.config.max_seq;
+
+    // ---- PTQ: the paper's headline configuration -------------------------
+    // W4A8 FP-FP + M2 power-of-2 scales + E5M2 cast + LoRC — i.e. the
+    // deployable H100 configuration of Section 3, end to end.
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M2 { rows: 32 })
+        .with_lorc(LorcConfig::default());
+    pcfg.cast_fp4_to_e5m2 = true;
+    let calib: Vec<Vec<u16>> = read_tokens(Path::new("data/calib.tok"))?
+        .chunks_exact(seq)
+        .map(|c| c.to_vec())
+        .collect();
+    println!("[1/4] quantizing {} under {} ...", cfg.name, pcfg.scheme.name());
+    let t0 = Instant::now();
+    let (qck, report) = quantize_checkpoint(&ck, &calib, &pcfg);
+    println!(
+        "      {} tensors in {:.1}s, {:.2}x compression ({} -> {} bytes)",
+        report.layers.len(),
+        t0.elapsed().as_secs_f64(),
+        report.compression(),
+        report.fp16_bytes,
+        report.quant_bytes
+    );
+
+    // ---- quality parity: rust engine vs PJRT -----------------------------
+    println!("[2/4] quality: engine vs PJRT parity on eval_c4 ...");
+    let eval = read_tokens(Path::new("data/eval_c4.tok"))?;
+    let eval = &eval[..(seq * 16).min(eval.len())];
+    let r_eng = zeroquant_fp::eval::perplexity(&qck, pcfg.engine_opts(), eval, seq);
+    let r_hlo = zeroquant_fp::runtime::hlo_perplexity(
+        Path::new("artifacts"),
+        &qck,
+        &pcfg.engine_opts(),
+        eval,
+        seq,
+    )?;
+    let rel = (r_eng.ppl() - r_hlo.ppl()).abs() / r_eng.ppl();
+    println!(
+        "      engine ppl {:.4} | pjrt ppl {:.4} | rel {:.2e}  {}",
+        r_eng.ppl(),
+        r_hlo.ppl(),
+        rel,
+        if rel < 2e-3 { "OK" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(rel < 2e-3, "engine/PJRT parity failed");
+
+    // ---- serving ----------------------------------------------------------
+    println!("[3/4] serving {n_requests} scoring requests through the coordinator ...");
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts: "artifacts".into(),
+        ck: qck,
+        opts: pcfg.engine_opts(),
+        policy: BatchPolicy {
+            max_batch: zeroquant_fp::runtime::SCORE_BATCH,
+            max_wait: Duration::from_millis(2),
+        },
+    });
+    let corpus = Corpus::new(CorpusKind::C4);
+    let stream = corpus.generate(n_requests * seq, 99);
+    let windows: Vec<Vec<u16>> = stream.chunks_exact(seq).map(|c| c.to_vec()).collect();
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..4usize {
+        let client = coord.client();
+        let mine: Vec<Vec<u16>> = windows.iter().skip(c).step_by(4).cloned().collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut nll = 0.0f64;
+            for w in mine {
+                nll += client.score(w)? as f64;
+            }
+            Ok(nll)
+        }));
+    }
+    // the PJRT serving loop runs on this thread (single-client process rule)
+    let report = coord.run()?;
+    let mut total_nll = 0.0;
+    for h in handles {
+        total_nll += h.join().unwrap()?;
+    }
+    let wall = t0.elapsed();
+
+    // ---- report ------------------------------------------------------------
+    println!("[4/4] results");
+    report.print();
+    let scored = windows.len() * (seq - 1);
+    println!(
+        "      workload ppl {:.4} over {} tokens | {:.0} tok/s scored",
+        (total_nll / scored as f64).exp(),
+        scored,
+        scored as f64 / wall.as_secs_f64()
+    );
+    println!("e2e_serve OK");
+    Ok(())
+}

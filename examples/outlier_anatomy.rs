@@ -1,0 +1,72 @@
+//! Anatomy of the activation-outlier problem (the paper's Section 2 /
+//! Figure 1 narrative, interactively): inject outliers of growing strength
+//! into a trained model and watch INT8 activation quantization collapse
+//! while FP8 shrugs.
+//!
+//! ```bash
+//! make ckpt
+//! cargo run --release --example outlier_anatomy [-- <model-name>]
+//! ```
+
+use std::path::Path;
+
+use zeroquant_fp::engine::{ActivationCapture, Engine, EngineOpts, LinearSite};
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("opt-s");
+    let (cfg, _) =
+        ModelConfig::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let base = Checkpoint::load(Path::new(&format!("ckpt/{}.zqckpt", cfg.name)))
+        .map_err(|e| anyhow::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
+
+    let eval = zeroquant_fp::data::Corpus::new(zeroquant_fp::data::CorpusKind::C4)
+        .generate(cfg.max_seq * 16, 5);
+
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "alpha", "fc2 peak/rms", "W16A16", "W16A8-INT", "W16A8-FP8", "INT/FP gap"
+    );
+    for alpha in [1.0f32, 4.0, 16.0, 64.0, 256.0] {
+        let mut ck = base.clone();
+        ck.config.name = cfg.name.clone();
+        let mut rng = Rng::seeded(0xA11CE);
+        inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
+
+        // activation stats at the fc2 input (the paper's worst offender)
+        let engine = Engine::new(&ck);
+        let mut cap = ActivationCapture::default();
+        engine.forward_observed(&eval[..cfg.max_seq], &mut |s, x| cap.record(s, x));
+        let peak = cap.peak_to_rms(LinearSite::Fc2);
+
+        let ppl = |fmt: NumericFormat| {
+            zeroquant_fp::eval::perplexity(
+                &ck,
+                EngineOpts { act: ActQuantConfig::new(fmt) },
+                &eval,
+                cfg.max_seq,
+            )
+            .ppl()
+        };
+        let p16 = ppl(NumericFormat::F16);
+        let pint = ppl(NumericFormat::INT8);
+        let pfp = ppl(NumericFormat::FP8_E4M3);
+        println!(
+            "{:<8} {:>12.1} {:>12.3} {:>12.3} {:>14.3} {:>13.3}x",
+            alpha,
+            peak,
+            p16,
+            pint,
+            pfp,
+            (pint - p16).max(1e-9) / (pfp - p16).max(1e-9)
+        );
+    }
+    println!("\n(the paper's Table 1 column-by-column: as outliers emerge, INT8\n\
+              activation ppl blows up while FP8 tracks W16A16 — and W16A16\n\
+              itself is invariant because the injection is function-preserving)");
+    Ok(())
+}

@@ -1,0 +1,101 @@
+//! The full PTQ pipeline on a trained checkpoint: quantize under several
+//! Table-2 schemes and report perplexity on the three corpora.
+//!
+//! ```bash
+//! make ckpt    # once: trains the model family
+//! cargo run --release --example ptq_pipeline [-- <model-name> [engine|hlo]]
+//! ```
+//!
+//! Defaults to `opt-m` via the PJRT HLO runtime (falls back to the Rust
+//! engine if artifacts are missing).
+
+use std::path::Path;
+
+use zeroquant_fp::data::{read_tokens, CorpusKind};
+use zeroquant_fp::lorc::LorcConfig;
+use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
+use zeroquant_fp::pipeline::{
+    calibrate_finalized, quantize_checkpoint_with_hessians, PtqConfig,
+};
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let name = args.first().map(|s| s.as_str()).unwrap_or("opt-m");
+    let runtime = args.get(1).map(|s| s.as_str()).unwrap_or("hlo");
+    let (cfg, alpha) =
+        ModelConfig::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+
+    let mut ck = Checkpoint::load(Path::new(&format!("ckpt/{}.zqckpt", cfg.name)))
+        .map_err(|e| anyhow::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
+    ck.config.name = cfg.name.clone();
+    let mut rng = Rng::seeded(0xA11CE);
+    inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
+    println!(
+        "model {} ({} params, outlier alpha {alpha}), runtime {runtime}",
+        cfg.name,
+        cfg.n_params()
+    );
+
+    let calib: Vec<Vec<u16>> = read_tokens(Path::new("data/calib.tok"))?
+        .chunks_exact(cfg.max_seq)
+        .map(|c| c.to_vec())
+        .collect();
+    println!("calibrating on {} sequences ...", calib.len());
+    let hessians = calibrate_finalized(&ck, &calib);
+    let calib_tokens = calib.iter().map(|s| s.len()).sum();
+
+    let eval_ppl = |qck: &Checkpoint, cfg: &PtqConfig| -> anyhow::Result<Vec<f64>> {
+        let mut out = Vec::new();
+        for kind in CorpusKind::ALL {
+            let toks = read_tokens(Path::new(&format!("data/eval_{}.tok", kind.name())))?;
+            let r = if runtime == "hlo" {
+                zeroquant_fp::runtime::hlo_perplexity(
+                    Path::new("artifacts"),
+                    qck,
+                    &cfg.engine_opts(),
+                    &toks,
+                    qck.config.max_seq,
+                )?
+            } else {
+                zeroquant_fp::eval::perplexity(qck, cfg.engine_opts(), &toks, qck.config.max_seq)
+            };
+            out.push(r.ppl());
+        }
+        Ok(out)
+    };
+
+    println!(
+        "\n{:<22} {:>8} {:>8} {:>8} {:>8}  {:>9} {:>8}",
+        "scheme", "mean", "wiki", "ptb", "c4", "bytes", "ratio"
+    );
+    for (label, scheme, lorc) in [
+        ("W16A16", "w16a16", false),
+        ("W8A8 FP-FP", "w8a8-fp-fp", false),
+        ("W4A8 INT-INT", "w4a8-int-int", false),
+        ("W4A8 FP-FP", "w4a8-fp-fp", false),
+        ("W4A8 FP-FP +LoRC", "w4a8-fp-fp", true),
+    ] {
+        let mut pcfg = PtqConfig::new(Scheme::parse(scheme).unwrap());
+        if lorc {
+            pcfg = pcfg.with_lorc(LorcConfig::default());
+        }
+        let (qck, report) =
+            quantize_checkpoint_with_hessians(&ck, &hessians, calib_tokens, &pcfg);
+        let ppls = eval_ppl(&qck, &pcfg)?;
+        let mean = ppls.iter().sum::<f64>() / 3.0;
+        println!(
+            "{:<22} {:>8.3} {:>8.3} {:>8.3} {:>8.3}  {:>9} {:>7.2}x",
+            label,
+            mean,
+            ppls[0],
+            ppls[1],
+            ppls[2],
+            report.quant_bytes,
+            report.compression()
+        );
+    }
+    println!("\n(expected shape: FP-FP tracks W16A16; INT-INT degrades with alpha; LoRC helps)");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+"""AOT lowering: jit → StableHLO → XlaComputation → **HLO text** artifacts.
+
+HLO *text* (not `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax≥0.5 serialized protos (64-bit instruction ids); the text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (the contract in rust/src/runtime/mod.rs):
+  score_{arch}_d{d}_l{L}_{act}.hlo.txt   family scoring fns, B=8, S=128
+  score_selfcheck_{act}.hlo.txt          miniature parity-check fn, B=2, S=16
+  qmatmul_m64_k256_n128_g64.hlo.txt      Pallas fused W4A8 GEMM
+  actquant_a8fp_t64_d256.hlo.txt         Pallas token-wise act-quant kernel
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import zqckpt
+from .kernels import act_quant as aqk
+from .kernels import qmatmul as qmk
+
+SCORE_BATCH = 8
+ACTS = ["a16", "a8int", "a8fp"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default printer elides array constants as
+    # `constant({...})`, which the text *parser* silently reads as zeros —
+    # any baked LUT (e.g. the FP4 decode table) would vanish.
+    po = xc._xla.HloPrintOptions()
+    po.print_large_constants = True
+    # no metadata: jax emits source_end_line/... attributes that the 0.5.1
+    # text parser rejects.
+    po.print_metadata = False
+    return comp.as_hlo_module().to_string(po)
+
+
+def write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def lower_score(cfg: zqckpt.ModelConfig, act: str, batch: int) -> str:
+    score = M.make_score_fn(cfg, act)
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.max_seq), jnp.int32)
+    w_specs = [
+        jax.ShapeDtypeStruct((r, c), jnp.float32)
+        for _, r, c in sorted(zqckpt.tensor_schema(cfg))
+    ]
+    lowered = jax.jit(score).lower(tok_spec, *w_specs)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--family-only", action="store_true",
+                    help="skip kernel demo artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    # --- family scoring artifacts -----------------------------------------
+    for arch in ["opt", "llama"]:
+        for cfg, _alpha in zqckpt.family(arch):
+            for act in ACTS:
+                name = f"score_{arch}_d{cfg.d_model}_l{cfg.n_layers}_{act}.hlo.txt"
+                path = os.path.join(args.out, name)
+                write(path, lower_score(cfg, act, SCORE_BATCH))
+
+    # --- selfcheck (engine-parity) artifacts -------------------------------
+    sc = zqckpt.selfcheck_config()
+    for act in ACTS:
+        path = os.path.join(args.out, f"score_selfcheck_{act}.hlo.txt")
+        write(path, lower_score(sc, act, batch=2))
+
+    if args.family_only:
+        return
+
+    # --- Pallas kernel artifacts (interpret=True lowering) ------------------
+    m, k, n, g = 64, 256, 128, 64
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    codes = jax.ShapeDtypeStruct((n, k), jnp.int32)
+    scales = jax.ShapeDtypeStruct((n, k // g), jnp.float32)
+
+    def qmm(x, codes, scales):
+        return (qmk.qmatmul(x, codes, scales, group=g),)
+
+    lowered = jax.jit(qmm).lower(x, codes, scales)
+    write(os.path.join(args.out, f"qmatmul_m{m}_k{k}_n{n}_g{g}.hlo.txt"),
+          to_hlo_text(lowered))
+
+    t, d = 64, 256
+    xs = jax.ShapeDtypeStruct((t, d), jnp.float32)
+
+    def aq(x):
+        return (aqk.act_quant(x, kind="a8fp"),)
+
+    lowered = jax.jit(aq).lower(xs)
+    write(os.path.join(args.out, f"actquant_a8fp_t{t}_d{d}.hlo.txt"),
+          to_hlo_text(lowered))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Pallas kernel: token-wise activation fake-quantization.
+
+TPU mapping (DESIGN.md §3): the grid tiles the token axis; each program
+instance holds a [block_t, D] tile in VMEM, computes per-token absmax
+scales with a VPU row-reduce, and quantizes in registers. interpret=True
+(the CPU PJRT plugin cannot execute Mosaic custom-calls); on a real TPU the
+same BlockSpec schedule stages HBM→VMEM per tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fpq
+
+
+def _act_quant_kernel(x_ref, o_ref, *, kind: str):
+    x = x_ref[...]
+    o_ref[...] = fpq.act_fake_quant(x, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "block_t"))
+def act_quant(x, kind: str = "a8fp", block_t: int = 8):
+    """Token-wise fake-quant of a [T, D] activation matrix."""
+    t, d = x.shape
+    assert t % block_t == 0, f"T={t} not divisible by block_t={block_t}"
+    return pl.pallas_call(
+        functools.partial(_act_quant_kernel, kind=kind),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        grid=(t // block_t,),
+        in_specs=[pl.BlockSpec((block_t, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_t, d), lambda i: (i, 0)),
+        interpret=True,
+    )(x)

@@ -1,0 +1,164 @@
+"""Bit-exact jnp mirrors of the Rust numeric-format codecs.
+
+This module is the Layer-1/Layer-2 twin of ``rust/src/formats/``: the same
+ExMy floating-point fake-quantizer (round-to-nearest-even, saturating, IEEE
+subnormals) and the symmetric INT quantizer, expressed in jnp so it can be
+used inside Pallas kernels and jitted/lowered models.
+
+Bit-exactness argument (mirrors the Rust comments): every scaling step is by
+a power of two, so ``a / quantum`` is exact in f32, and ``jnp.round`` (which
+rounds half to even, like ``f32::round_ties_even``) makes the identical
+decision. The scale division ``x / scale`` is performed in f32 on both
+sides. See rust/src/formats/exmy.rs and python/tests/test_fpq.py.
+"""
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FpFormat:
+    exp_bits: int
+    man_bits: int
+    bias: int
+    inf_reserved: bool = False  # IEEE top-exponent Inf/NaN reservation
+    nan_reserved: bool = False  # NVIDIA E4M3: all-ones code is NaN
+
+    @property
+    def max_exp_field(self) -> int:
+        top = (1 << self.exp_bits) - 1
+        return top - 1 if self.inf_reserved else top
+
+    @property
+    def max_finite(self) -> float:
+        man_max = 2.0 - 2.0 ** (-self.man_bits)
+        if self.nan_reserved and self.man_bits > 0:
+            man_max -= 2.0 ** (-self.man_bits)
+        return man_max * 2.0 ** (self.max_exp_field - self.bias)
+
+    @property
+    def min_normal(self) -> float:
+        return 2.0 ** (1 - self.bias)
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (1 - self.bias - self.man_bits)
+
+    @property
+    def name(self) -> str:
+        return f"E{self.exp_bits}M{self.man_bits}"
+
+
+def ieee(e: int, m: int) -> FpFormat:
+    return FpFormat(e, m, (1 << (e - 1)) - 1, inf_reserved=True)
+
+
+def qtorch(e: int, m: int) -> FpFormat:
+    return FpFormat(e, m, (1 << (e - 1)) - 1, inf_reserved=False)
+
+
+E4M3 = qtorch(4, 3)          # paper default FP8 (max 480, qtorch semantics)
+E5M2 = ieee(5, 2)            # cast target (max 57344)
+E2M1 = qtorch(2, 1)          # paper default FP4
+E3M0 = qtorch(3, 0)          # Table A.1 baseline
+E4M3_NV = FpFormat(4, 3, 7, nan_reserved=True)  # H100 variant (max 448)
+
+
+def fp_quantize(x, fmt: FpFormat):
+    """Quantize f32 values to the nearest representable point of ``fmt``.
+
+    Vectorized over any shape; returns f32 holding exactly-representable
+    values (fake quantization). RNE, saturating.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.abs(x)
+    sign = jnp.where(x < 0, -1.0, 1.0).astype(jnp.float32)
+    max_finite = jnp.float32(fmt.max_finite)
+    # frexp: a = m * 2^e with m in [0.5, 1)  =>  floor(log2 a) = e - 1
+    _, e = jnp.frexp(jnp.where(a == 0, 1.0, a))
+    floor_log2 = e - 1
+    # ldexp, not exp2: jnp.exp2 is a polynomial approximation on CPU and is
+    # NOT exact at integer arguments — ldexp manipulates the exponent field
+    # directly and matches the Rust `pow2` bit-for-bit.
+    quantum = jnp.ldexp(jnp.float32(1.0), floor_log2 - fmt.man_bits)
+    q_normal = jnp.round(a / quantum) * quantum
+    q_normal = jnp.minimum(q_normal, max_finite)
+    min_sub = jnp.float32(fmt.min_subnormal)
+    q_sub = jnp.round(a / min_sub) * min_sub
+    q = jnp.where(
+        a >= max_finite,
+        max_finite,
+        jnp.where(a < jnp.float32(fmt.min_normal), q_sub, q_normal),
+    )
+    return jnp.where(a == 0, jnp.float32(0), sign * q).astype(jnp.float32)
+
+
+def int_quantize(x, qmax: int):
+    """Symmetric integer fake-quant at a given qmax (127 for INT8, 7 for
+    INT4) with the scale already divided out: input is ``x / scale``."""
+    x = jnp.asarray(x, jnp.float32)
+    q = jnp.clip(jnp.round(x), -qmax, qmax)
+    return q.astype(jnp.float32)
+
+
+# --- token-wise activation fake-quant (mirrors quant/activation.rs) --------
+
+def tokenwise_absmax_scale(x, denom: float):
+    """Per-row absmax / denom, guarded for all-zero rows."""
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    return jnp.where(absmax > 0, absmax / jnp.float32(denom), jnp.float32(1.0))
+
+
+def act_fake_quant(x, kind: str):
+    """Token-wise activation fake-quant. ``kind`` in {a16, a8int, a8fp}.
+
+    x: [..., tokens, features]; each token row gets a dynamic absmax scale.
+    """
+    if kind == "a16":
+        return x
+    if kind == "a8int":
+        scale = tokenwise_absmax_scale(x, 127.0)
+        return int_quantize(x / scale, 127) * scale
+    if kind == "a8fp":
+        scale = tokenwise_absmax_scale(x, E4M3.max_finite)
+        return fp_quantize(x / scale, E4M3) * scale
+    raise ValueError(f"unknown act kind {kind}")
+
+
+# --- FP4 code decode (for the fused W4A8 kernel) ---------------------------
+
+def decode_codes(codes, fmt: FpFormat):
+    """Arithmetic bit-field decode of (sign|exp|man) codes — the in-register
+    FP4→FP8 'cast' path. No LUT gather: sign/exponent/mantissa are peeled
+    with shifts and recombined with ldexp, mirroring how the H100 cast is a
+    pure exponent-field manipulation once scales are powers of two.
+    """
+    codes = jnp.asarray(codes, jnp.int32)
+    man_mask = (1 << fmt.man_bits) - 1
+    exp_mask = (1 << fmt.exp_bits) - 1
+    m = (codes & man_mask).astype(jnp.float32)
+    e = (codes >> fmt.man_bits) & exp_mask
+    sign = jnp.where((codes >> (fmt.exp_bits + fmt.man_bits)) & 1 == 1, -1.0, 1.0)
+    sub = m * jnp.float32(fmt.min_subnormal)
+    frac = 1.0 + m * jnp.float32(2.0 ** (-fmt.man_bits))
+    normal = jnp.ldexp(frac, e - fmt.bias)
+    return (sign * jnp.where(e == 0, sub, normal)).astype(jnp.float32)
+
+
+def decode_table(fmt: FpFormat):
+    """All 2^bits code values of a (sign|exp|man) format as an f32 array,
+    indexed by code — the LUT the qmatmul kernel uses to dequantize."""
+    n_bits = 1 + fmt.exp_bits + fmt.man_bits
+    vals = []
+    for code in range(1 << n_bits):
+        man_mask = (1 << fmt.man_bits) - 1
+        m = code & man_mask
+        e_field = (code >> fmt.man_bits) & ((1 << fmt.exp_bits) - 1)
+        sign = -1.0 if (code >> (fmt.exp_bits + fmt.man_bits)) & 1 else 1.0
+        if e_field == 0:
+            mag = m * fmt.min_subnormal
+        else:
+            mag = (1.0 + m * 2.0 ** (-fmt.man_bits)) * 2.0 ** (e_field - fmt.bias)
+        vals.append(sign * mag)
+    return jnp.asarray(vals, jnp.float32)

@@ -1,0 +1,101 @@
+"""Pallas kernel: the fused W4A8 GEMM — the paper's compute hot-spot.
+
+One fused device op performs, per output tile:
+
+  1. token-wise FP8-E4M3 fake-quant of the activation tile (VPU),
+  2. FP4-E2M1 decode of the weight codes via a 16-entry LUT plus the FGQ
+     group-scale multiply — the in-register FP4→FP8 "cast" the paper's
+     power-of-2 scale constraints make a pure exponent shift,
+  3. the tile contraction (MXU on real TPU).
+
+TPU mapping (DESIGN.md §3 Hardware-Adaptation): H100 threadblock tiling
+becomes a (M/bm, N/bn) Pallas grid; shared-memory staging becomes
+BlockSpec-scheduled HBM→VMEM copies; tensor-core WMMA becomes the MXU dot.
+The full K dimension rides in VMEM per tile (our K ≤ 768 → ≤ bm·K + bn·K +
+bm·bn floats ≈ well under the ~16 MB VMEM budget; §Perf in EXPERIMENTS.md
+tabulates footprints per block shape).
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so correctness is validated through the interpreter and real
+TPU performance is estimated analytically (EXPERIMENTS.md §Perf-TPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import fpq
+
+
+def _qmatmul_kernel(x_ref, codes_ref, scales_ref, o_ref, *, group: int,
+                    act_kind: str):
+    x = x_ref[...]                      # [bm, K] f32
+    codes = codes_ref[...]              # [bn, K] i32
+    scales = scales_ref[...]            # [bn, G] f32
+    # 1. token-wise activation quant
+    xq = fpq.act_fake_quant(x, act_kind)
+    # 2. FP4 arithmetic decode + FGQ dequant (the in-register cast path —
+    #    bit-field peel + ldexp; no LUT gather, which the image's XLA 0.5.1
+    #    cannot round-trip through HLO text when the table is a constant)
+    w = fpq.decode_codes(codes, fpq.E2M1)   # [bn, K]
+    w = w * jnp.repeat(scales, group, axis=1)
+    # 3. contraction (lowers to the MXU on TPU)
+    o_ref[...] = jnp.dot(xq, w.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group", "act_kind", "block_m", "block_n"),
+)
+def qmatmul(x, codes, scales, *, group: int = 64, act_kind: str = "a8fp",
+            block_m: int = 32, block_n: int = 32):
+    """Fused W4A8 GEMM: ``act_quant(x) @ dequant(codes, scales)ᵀ``.
+
+    x:      [M, K] f32
+    codes:  [N, K] int32 (FP4 E2M1 codes in the low 4 bits)
+    scales: [N, G] f32, G = K // group
+    -> [M, N] f32
+    """
+    m, k = x.shape
+    n, k2 = codes.shape
+    g = scales.shape[1]
+    assert k == k2 and g * group == k
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0
+    kernel = functools.partial(_qmatmul_kernel, group=group, act_kind=act_kind)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=(m // block_m, n // block_n),
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, g), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, codes, scales)
+
+
+def vmem_footprint_bytes(block_m: int, block_n: int, k: int, group: int) -> int:
+    """Estimated VMEM bytes per program instance (the §Perf-TPU model):
+    activation tile + code tile (i32) + decoded tile + scale tile + output.
+    """
+    g = k // group
+    return 4 * (block_m * k          # x tile f32
+                + block_n * k        # codes i32
+                + block_n * k        # decoded w f32
+                + block_n * g        # scales
+                + block_m * block_n) # out tile
+
+
+def mxu_utilization_estimate(block_m: int, block_n: int, k: int) -> float:
+    """Fraction of MXU 128x128x8 issue slots doing useful work for one tile
+    contraction — the structural efficiency dial for block-shape choice."""
+    pad = lambda v, t: -(-v // t) * t
+    useful = block_m * block_n * k
+    issued = pad(block_m, 128) * pad(block_n, 128) * pad(k, 8)
+    return useful / issued

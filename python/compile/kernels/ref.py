@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract: pytest asserts kernel == ref across shapes/dtypes, hypothesis
+sweeps the space)."""
+
+import jax.numpy as jnp
+
+from . import fpq
+
+
+def ref_act_quant(x, kind: str):
+    """Token-wise activation fake-quant over the last axis."""
+    return fpq.act_fake_quant(x, kind)
+
+
+def ref_qmatmul(x, codes, scales, *, group: int, act_kind: str = "a8fp",
+                wfmt: fpq.FpFormat = fpq.E2M1):
+    """The paper's W4A8 GEMM, unfused reference.
+
+    x:      [M, K] f32 activations
+    codes:  [N, K] int32 FP4 codes (low 4 bits)
+    scales: [N, G] f32 FGQ group scales (G = K / group)
+    returns [M, N] f32 = act_quant(x) @ dequant(codes, scales)^T
+    """
+    m, k = x.shape
+    n, k2 = codes.shape
+    assert k == k2
+    g = scales.shape[1]
+    assert g * group == k, (g, group, k)
+    w = fpq.decode_codes(codes, wfmt)                  # [N, K]
+    w = w * jnp.repeat(scales, group, axis=1)          # FGQ dequant
+    xq = fpq.act_fake_quant(x, act_kind)
+    return xq @ w.T

@@ -1,0 +1,134 @@
+"""Layer 2: the decoder-only transformer in JAX — the computational twin of
+the Rust engine (rust/src/engine/mod.rs).
+
+Same architecture, same op order, same activation-quantization sites; the
+Rust engine is the oracle the lowered HLO is cross-checked against
+(`zqfp selfcheck`). The quantized linears receive *effective* weights
+(already fake-quantized + LoRC-compensated by the Rust pipeline); the
+token-wise activation fake-quant ("a16" | "a8int" | "a8fp") is baked into
+the lowered graph per artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fpq
+from .zqckpt import ModelConfig, tensor_schema
+
+
+def _norm(x, g, b, arch: str, eps: float = 1e-5):
+    if arch == "opt":
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+        return (x - mean) / jnp.sqrt(var + eps) * g + b
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x / jnp.sqrt(ms + eps) * g
+
+
+def _linear(x, w, b=None):
+    y = x @ w.T
+    return y if b is None else y + b
+
+
+def _attention(q, k, v, cfg: ModelConfig):
+    b, s, d = q.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    qh = q.reshape(b, s, h, dh).transpose(0, 2, 1, 3)  # [B,H,S,dh]
+    kh = k.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    vh = v.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", qh, kh) / jnp.sqrt(jnp.float32(dh))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+    return ctx.transpose(0, 2, 1, 3).reshape(b, s, d)
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, act: str = "a16"):
+    """Logits [B, S, vocab] for int32 tokens [B, S].
+
+    `params` maps tensor names (the .zqckpt schema) to 2-D f32 arrays;
+    1-row tensors keep their [1, d] shape and broadcast.
+    """
+    aq = lambda x: fpq.act_fake_quant(x, act)
+    x = params["embed"][tokens] + params["pos_embed"][None, : tokens.shape[1], :]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        if cfg.arch == "opt":
+            a = _norm(x, params[f"{p}.ln1.g"], params[f"{p}.ln1.b"], "opt")
+        else:
+            a = _norm(x, params[f"{p}.ln1.g"], None, "llama")
+        a = aq(a)
+        q = _linear(a, params[f"{p}.attn.q.w"], params[f"{p}.attn.q.b"])
+        k = _linear(a, params[f"{p}.attn.k.w"], params[f"{p}.attn.k.b"])
+        v = _linear(a, params[f"{p}.attn.v.w"], params[f"{p}.attn.v.b"])
+        ctx = _attention(q, k, v, cfg)
+        ctx = aq(ctx)
+        x = x + _linear(ctx, params[f"{p}.attn.o.w"], params[f"{p}.attn.o.b"])
+        if cfg.arch == "opt":
+            m = _norm(x, params[f"{p}.ln2.g"], params[f"{p}.ln2.b"], "opt")
+            m = aq(m)
+            h = jax.nn.relu(_linear(m, params[f"{p}.mlp.fc1.w"], params[f"{p}.mlp.fc1.b"]))
+            h = aq(h)
+            x = x + _linear(h, params[f"{p}.mlp.fc2.w"], params[f"{p}.mlp.fc2.b"])
+        else:
+            m = _norm(x, params[f"{p}.ln2.g"], None, "llama")
+            m = aq(m)
+            g = _linear(m, params[f"{p}.mlp.gate.w"])
+            u = _linear(m, params[f"{p}.mlp.up.w"])
+            h = jax.nn.silu(g) * u
+            h = aq(h)
+            x = x + _linear(h, params[f"{p}.mlp.down.w"], params[f"{p}.mlp.down.b"])
+    if cfg.arch == "opt":
+        x = _norm(x, params["final_norm.g"], params["final_norm.b"], "opt")
+    else:
+        x = _norm(x, params["final_norm.g"], None, "llama")
+    return x @ params["embed"].T  # tied LM head
+
+
+def nll_sums(params: dict, tokens, cfg: ModelConfig, act: str = "a16"):
+    """Per-window teacher-forced NLL sums [B] — the scoring artifact body.
+
+    tokens[b, t] predicts tokens[b, t+1] for t in [0, S-2].
+    """
+    logits = forward(params, tokens, cfg, act)          # [B, S, V]
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    picked = jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return -jnp.sum(picked, axis=-1)
+
+
+def sorted_param_names(cfg: ModelConfig):
+    """Byte-sorted tensor names — the artifact parameter order (matches the
+    Rust BTreeMap iteration)."""
+    return sorted(name for name, _, _ in tensor_schema(cfg))
+
+
+def make_score_fn(cfg: ModelConfig, act: str):
+    """A positional-arg score function ready for jax.jit().lower():
+    f(tokens, *weights_sorted_by_name) -> (nll_sums [B],)."""
+    names = sorted_param_names(cfg)
+
+    def score(tokens, *weights):
+        params = dict(zip(names, weights))
+        return (nll_sums(params, tokens, cfg, act),)
+
+    return score
+
+
+def init_params(cfg: ModelConfig, key):
+    """GPT-2-style init, matching Checkpoint::random's structure (values
+    differ — training replaces them anyway)."""
+    params = {}
+    for name, r, c in tensor_schema(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            params[name] = jnp.zeros((r, c), jnp.float32)
+        elif name.endswith(".g"):
+            params[name] = jnp.ones((r, c), jnp.float32)
+        elif name in ("embed", "pos_embed"):
+            params[name] = 0.02 * jax.random.normal(sub, (r, c), jnp.float32)
+        else:
+            std = 0.4 / jnp.sqrt(jnp.float32(cfg.d_model))
+            params[name] = std * jax.random.normal(sub, (r, c), jnp.float32)
+    return params

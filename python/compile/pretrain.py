@@ -1,0 +1,140 @@
+"""Build-time trainer: pretrains the synthetic model family on the Rust-
+generated corpus mixture and writes `.zqckpt` checkpoints the Rust pipeline
+consumes. Pure JAX (no flax/optax offline) — hand-rolled AdamW + cosine
+schedule.
+
+Usage:  cd python && python -m compile.pretrain --data ../data --out ../ckpt
+        [--arch opt|llama|all] [--steps N] [--batch B] [--log ../ckpt/train_log.txt]
+"""
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from . import zqckpt
+
+
+def adamw_init(params):
+    zeros = lambda: {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros(), "v": zeros(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, lr, wd=0.01, b1=0.9, b2=0.95, eps=1e-8):
+    t = state["t"] + 1
+    out_p, out_m, out_v = {}, {}, {}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    for k in params:
+        g = grads[k]
+        m = b1 * state["m"][k] + (1 - b1) * g
+        v = b2 * state["v"][k] + (1 - b2) * g * g
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        decay = 0.0 if k.endswith(".b") or k.endswith(".g") else wd
+        out_p[k] = params[k] - lr * (update + decay * params[k])
+        out_m[k], out_v[k] = m, v
+    return out_p, {"m": out_m, "v": out_v, "t": t}
+
+
+def make_train_step(cfg):
+    def loss_fn(params, tokens):
+        nll = M.nll_sums(params, tokens, cfg, act="a16")
+        return jnp.sum(nll) / (tokens.shape[0] * (tokens.shape[1] - 1))
+
+    @jax.jit
+    def step(params, state, tokens, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        # global-norm clip at 1.0
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()))
+        scale = jnp.minimum(1.0, 1.0 / (gn + 1e-6))
+        grads = {k: g * scale for k, g in grads.items()}
+        params, state = adamw_update(params, grads, state, lr)
+        return params, state, loss
+
+    return step
+
+
+def batches(tokens: np.ndarray, batch: int, seq: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n_windows = len(tokens) // seq
+    windows = tokens[: n_windows * seq].reshape(n_windows, seq)
+    for _ in range(steps):
+        idx = rng.integers(0, n_windows, size=batch)
+        yield jnp.asarray(windows[idx])
+
+
+def train_one(cfg, train_tokens, steps, batch, base_lr, log):
+    key = jax.random.PRNGKey(hash(cfg.name) & 0x7FFFFFFF)
+    params = M.init_params(cfg, key)
+    state = adamw_init(params)
+    step_fn = make_train_step(cfg)
+    t0 = time.time()
+    warmup = max(10, steps // 20)
+    loss_hist = []
+    for i, toks in enumerate(batches(train_tokens, batch, cfg.max_seq, steps, 1234)):
+        # cosine with warmup
+        if i < warmup:
+            lr = base_lr * (i + 1) / warmup
+        else:
+            prog = (i - warmup) / max(1, steps - warmup)
+            lr = base_lr * 0.5 * (1 + np.cos(np.pi * prog))
+        params, state, loss = step_fn(params, state, toks, jnp.float32(lr))
+        if i % 25 == 0 or i == steps - 1:
+            loss_v = float(loss)
+            loss_hist.append((i, loss_v))
+            msg = (f"[{cfg.name}] step {i:4d}/{steps}  loss {loss_v:.4f}  "
+                   f"ppl {np.exp(loss_v):9.2f}  lr {lr:.2e}  "
+                   f"{time.time() - t0:6.1f}s")
+            print(msg, flush=True)
+            log.write(msg + "\n")
+            log.flush()
+    return params, loss_hist
+
+
+# per-size step budget (larger models converge per-step faster on this data
+# but cost more wall-clock; single-CPU budget)
+STEPS = {"xs": 500, "s": 400, "m": 300, "l": 250}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--data", default="../data")
+    ap.add_argument("--out", default="../ckpt")
+    ap.add_argument("--arch", default="all", choices=["opt", "llama", "all"])
+    ap.add_argument("--steps", type=int, default=0, help="override per-size budget")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--only", default="", help="train only this family tag (e.g. m)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    train_tokens = zqckpt.read_tokens(os.path.join(args.data, "train.tok"))
+    print(f"train corpus: {len(train_tokens)} tokens")
+    archs = ["opt", "llama"] if args.arch == "all" else [args.arch]
+    log_path = os.path.join(args.out, "train_log.txt")
+    with open(log_path, "a") as log:
+        for arch in archs:
+            for cfg, _alpha in zqckpt.family(arch):
+                tag = cfg.name.split("-")[-1]
+                if args.only and tag != args.only:
+                    continue
+                out_path = os.path.join(args.out, f"{cfg.name}.zqckpt")
+                if os.path.exists(out_path):
+                    print(f"{cfg.name}: exists, skipping")
+                    continue
+                steps = args.steps or STEPS[tag]
+                print(f"=== training {cfg.name} "
+                      f"(d={cfg.d_model}, L={cfg.n_layers}, {steps} steps) ===")
+                params, _ = train_one(cfg, train_tokens, steps, args.batch,
+                                      args.lr, log)
+                tensors = {k: np.asarray(v) for k, v in params.items()}
+                zqckpt.save(out_path, cfg, tensors)
+                print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Python reader/writer for the `.zqckpt` checkpoint format.
+
+Mirrors rust/src/model/checkpoint.rs byte-for-byte (the Rust doc comment is
+the normative spec). Tensors are name-sorted on write so the parameter
+order of lowered artifacts matches the Rust BTreeMap iteration order.
+"""
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"ZQCKPT01"
+ARCH_OPT = 0
+ARCH_LLAMA = 1
+
+
+@dataclass
+class ModelConfig:
+    name: str
+    arch: str  # "opt" | "llama"
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    max_seq: int
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+
+# The size family — MUST stay in sync with rust/src/model/config.rs
+# (ModelConfig::family). Checked indirectly by `zqfp info` / table runs.
+def family(arch: str):
+    mk = lambda tag, d, h, l: ModelConfig(
+        name=f"{arch}-{tag}", arch=arch, vocab_size=512, d_model=d,
+        n_heads=h, n_layers=l, d_ff=4 * d, max_seq=128)
+    return [
+        (mk("xs", 64, 2, 2), 1.0),
+        (mk("s", 96, 4, 3), 32.0),
+        (mk("m", 128, 4, 4), 192.0),
+        (mk("l", 192, 6, 4), 768.0),
+    ]
+
+
+def selfcheck_config():
+    """Mirror of rust/src/runtime/mod.rs::selfcheck_config."""
+    return ModelConfig(name="selfcheck", arch="opt", vocab_size=48,
+                       d_model=24, n_heads=3, n_layers=2, d_ff=48, max_seq=16)
+
+
+def tensor_schema(cfg: ModelConfig):
+    """Mirror of Checkpoint::tensor_schema (names and [rows, cols])."""
+    d, ff = cfg.d_model, cfg.d_ff
+    names = [("embed", cfg.vocab_size, d), ("pos_embed", cfg.max_seq, d)]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        names.append((f"{p}.ln1.g", 1, d))
+        if cfg.arch == "opt":
+            names.append((f"{p}.ln1.b", 1, d))
+        for proj in ["q", "k", "v", "o"]:
+            names.append((f"{p}.attn.{proj}.w", d, d))
+            names.append((f"{p}.attn.{proj}.b", 1, d))
+        names.append((f"{p}.ln2.g", 1, d))
+        if cfg.arch == "opt":
+            names.append((f"{p}.ln2.b", 1, d))
+            names.append((f"{p}.mlp.fc1.w", ff, d))
+            names.append((f"{p}.mlp.fc1.b", 1, ff))
+            names.append((f"{p}.mlp.fc2.w", d, ff))
+            names.append((f"{p}.mlp.fc2.b", 1, d))
+        else:
+            names.append((f"{p}.mlp.gate.w", ff, d))
+            names.append((f"{p}.mlp.up.w", ff, d))
+            names.append((f"{p}.mlp.down.w", d, ff))
+            names.append((f"{p}.mlp.down.b", 1, d))
+    names.append(("final_norm.g", 1, d))
+    if cfg.arch == "opt":
+        names.append(("final_norm.b", 1, d))
+    return names
+
+
+def save(path, cfg: ModelConfig, tensors: dict):
+    """Write a checkpoint. `tensors` maps name -> 2-D float32 array."""
+    arch = ARCH_OPT if cfg.arch == "opt" else ARCH_LLAMA
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack(
+            "<8I", arch, cfg.vocab_size, cfg.d_model, cfg.n_heads,
+            cfg.n_layers, cfg.d_ff, cfg.max_seq, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(np.asarray(tensors[name], np.float32))
+            assert arr.ndim == 2, (name, arr.shape)
+            f.write(struct.pack("<I", len(name)))
+            f.write(name.encode())
+            f.write(struct.pack("<II", arr.shape[0], arr.shape[1]))
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load(path):
+    """Read a checkpoint -> (ModelConfig, dict name -> np.float32 [r, c])."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    pos = 8
+    arch, vocab, d, h, l, ff, ms, n = struct.unpack_from("<8I", data, pos)
+    pos += 32
+    cfg = ModelConfig(name="loaded", arch="opt" if arch == ARCH_OPT else "llama",
+                      vocab_size=vocab, d_model=d, n_heads=h, n_layers=l,
+                      d_ff=ff, max_seq=ms)
+    tensors = {}
+    for _ in range(n):
+        (nl,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        name = data[pos:pos + nl].decode()
+        pos += nl
+        r, c = struct.unpack_from("<II", data, pos)
+        pos += 8
+        arr = np.frombuffer(data, "<f4", r * c, pos).reshape(r, c).copy()
+        pos += 4 * r * c
+        tensors[name] = arr
+    assert pos == len(data), "trailing bytes"
+    return cfg, tensors
+
+
+def read_tokens(path):
+    """Read a `.tok` stream (little-endian u16) as an int32 numpy array."""
+    return np.fromfile(path, dtype="<u2").astype(np.int32)

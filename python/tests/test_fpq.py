@@ -1,0 +1,121 @@
+"""Correctness of the jnp numeric-format codecs against an independent
+float64 reference (the same algorithm the Rust side implements), plus
+golden values from the paper's format definitions."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import fpq
+
+
+# --- independent float64 reference (mirrors rust/src/formats/exmy.rs) ------
+
+def ref_quantize(x: float, fmt: fpq.FpFormat) -> float:
+    if x == 0 or not np.isfinite(x):
+        return 0.0 if x == 0 else x
+    a = abs(float(x))
+    sign = -1.0 if x < 0 else 1.0
+    maxf = fmt.max_finite
+    if a >= maxf:
+        return sign * maxf
+    if a < fmt.min_normal:
+        q = fmt.min_subnormal
+        # round-half-even on an exactly-representable quotient
+        r = np.float64(a) / q
+        return sign * float(np.round(r)) * q
+    e = int(np.floor(np.log2(a)))
+    # guard against log2 boundary error
+    if 2.0 ** (e + 1) <= a:
+        e += 1
+    if 2.0 ** e > a:
+        e -= 1
+    quantum = 2.0 ** (e - fmt.man_bits)
+    r = float(np.round(np.float64(a) / quantum)) * quantum
+    return sign * min(r, maxf)
+
+
+FORMATS = [fpq.E4M3, fpq.E5M2, fpq.E2M1, fpq.E3M0]
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_golden_extremes(fmt):
+    golden = {
+        "E4M3": (480.0, 2.0 ** -6, 2.0 ** -9),
+        "E5M2": (57344.0, 2.0 ** -14, 2.0 ** -16),
+        "E2M1": (6.0, 1.0, 0.5),
+        "E3M0": (16.0, 0.25, 0.25),
+    }[fmt.name]
+    assert fmt.max_finite == golden[0]
+    assert fmt.min_normal == golden[1]
+    assert fmt.min_subnormal == golden[2]
+
+
+def test_e2m1_value_set():
+    xs = np.linspace(-8, 8, 2001, dtype=np.float32)
+    q = np.asarray(fpq.fp_quantize(xs, fpq.E2M1))
+    assert set(np.abs(q).tolist()) <= {0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0}
+
+
+def test_rne_ties():
+    q = fpq.fp_quantize(jnp.array([1.25, 1.75, 2.5, 3.5, 5.0]), fpq.E2M1)
+    assert np.allclose(np.asarray(q), [1.0, 2.0, 2.0, 4.0, 4.0])
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+@settings(max_examples=300, deadline=None)
+@given(st.floats(min_value=-1e6, max_value=1e6, allow_nan=False, width=32))
+def test_matches_f64_reference(fmt, x):
+    got = float(fpq.fp_quantize(jnp.float32(x), fmt))
+    want = ref_quantize(np.float32(x), fmt)
+    assert got == pytest.approx(want, abs=0.0), (x, got, want)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_idempotent(fmt):
+    rng = np.random.default_rng(0)
+    xs = (rng.standard_normal(512) * fmt.max_finite * 0.3).astype(np.float32)
+    q1 = np.asarray(fpq.fp_quantize(xs, fmt))
+    q2 = np.asarray(fpq.fp_quantize(q1, fmt))
+    np.testing.assert_array_equal(q1, q2)
+
+
+def test_saturation():
+    for fmt in FORMATS:
+        q = float(fpq.fp_quantize(jnp.float32(1e30), fmt))
+        assert q == fmt.max_finite
+        q = float(fpq.fp_quantize(jnp.float32(-1e30), fmt))
+        assert q == -fmt.max_finite
+
+
+def test_int_quantize_rne():
+    q = np.asarray(fpq.int_quantize(jnp.array([0.5, 1.5, 2.5, -0.5, 200.0]), 127))
+    assert q.tolist() == [0.0, 2.0, 2.0, 0.0, 127.0]
+
+
+def test_tokenwise_act_quant_outlier_isolation():
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((4, 64)).astype(np.float32) * 0.1
+    x[3] *= 1000
+    q = np.asarray(fpq.act_fake_quant(jnp.asarray(x), "a8fp"))
+    # clean rows almost unchanged
+    assert np.max(np.abs(q[0] - x[0])) < 0.01
+    # outlier row scaled by its own absmax
+    assert np.max(np.abs(q[3] - x[3])) < np.max(np.abs(x[3])) * 0.07
+
+
+def test_decode_table_roundtrip():
+    for fmt in [fpq.E2M1, fpq.E3M0]:
+        table = np.asarray(fpq.decode_table(fmt))
+        assert len(table) == 16
+        # every decoded value quantizes to itself
+        q = np.asarray(fpq.fp_quantize(jnp.asarray(table), fmt))
+        np.testing.assert_array_equal(np.abs(q), np.abs(table))
+
+
+def test_a16_passthrough():
+    x = jnp.array([[1.2345, -9.87]])
+    np.testing.assert_array_equal(np.asarray(fpq.act_fake_quant(x, "a16")),
+                                  np.asarray(x))

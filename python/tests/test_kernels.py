@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracle (ref.py): hypothesis sweeps shapes and
+block sizes; assert_allclose at f32 tolerance. This is the L1 correctness
+contract — the same code paths are lowered into the AOT artifacts."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import act_quant as aqk
+from compile.kernels import fpq, qmatmul, ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("kind", ["a16", "a8int", "a8fp"])
+@pytest.mark.parametrize("t,d,bt", [(8, 32, 8), (32, 64, 8), (16, 128, 4), (64, 256, 16)])
+def test_act_quant_matches_ref(kind, t, d, bt):
+    x = rand(t * d, t, d) * 3.0
+    got = aqk.act_quant(x, kind=kind, block_t=bt)
+    want = ref.ref_act_quant(x, kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    bt=st.sampled_from([2, 4, 8]),
+    d=st.sampled_from([16, 48, 128]),
+    kind=st.sampled_from(["a8int", "a8fp"]),
+    seed=st.integers(0, 2**16),
+)
+def test_act_quant_hypothesis(t_blocks, bt, d, kind, seed):
+    t = t_blocks * bt
+    x = rand(seed, t, d) * 10.0
+    got = aqk.act_quant(x, kind=kind, block_t=bt)
+    want = ref.ref_act_quant(x, kind)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=1e-5)
+
+
+def make_qweights(key, n, k, group):
+    kk = jax.random.PRNGKey(key)
+    codes = jax.random.randint(kk, (n, k), 0, 16, jnp.int32)
+    scales = 0.01 + jnp.abs(jax.random.normal(kk, (n, k // group), jnp.float32)) * 0.1
+    return codes, scales
+
+
+@pytest.mark.parametrize("m,k,n,g,bm,bn", [
+    (8, 32, 8, 16, 8, 8),
+    (16, 64, 32, 32, 8, 16),
+    (32, 128, 64, 64, 32, 32),
+    (64, 256, 128, 64, 32, 32),
+])
+def test_qmatmul_matches_ref(m, k, n, g, bm, bn):
+    x = rand(m * k, m, k)
+    codes, scales = make_qweights(7, n, k, g)
+    got = qmatmul.qmatmul(x, codes, scales, group=g, block_m=bm, block_n=bn)
+    want = ref.ref_qmatmul(x, codes, scales, group=g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    mb=st.integers(1, 3),
+    nb=st.integers(1, 3),
+    bm=st.sampled_from([4, 8]),
+    bn=st.sampled_from([4, 8]),
+    kg=st.sampled_from([(32, 16), (64, 32), (64, 64)]),
+    act=st.sampled_from(["a16", "a8int", "a8fp"]),
+    seed=st.integers(0, 2**16),
+)
+def test_qmatmul_hypothesis(mb, nb, bm, bn, kg, act, seed):
+    k, g = kg
+    m, n = mb * bm, nb * bn
+    x = rand(seed, m, k) * 2.0
+    codes, scales = make_qweights(seed + 1, n, k, g)
+    got = qmatmul.qmatmul(x, codes, scales, group=g, act_kind=act,
+                          block_m=bm, block_n=bn)
+    want = ref.ref_qmatmul(x, codes, scales, group=g, act_kind=act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_qmatmul_block_shape_invariance():
+    """Block decomposition must not change results (pure data parallel)."""
+    m, k, n, g = 32, 64, 32, 32
+    x = rand(3, m, k)
+    codes, scales = make_qweights(4, n, k, g)
+    outs = [
+        np.asarray(qmatmul.qmatmul(x, codes, scales, group=g, block_m=bm, block_n=bn))
+        for bm, bn in [(8, 8), (16, 32), (32, 16), (32, 32)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=0, atol=2e-5)
+
+
+def test_vmem_footprint_model():
+    b = qmatmul.vmem_footprint_bytes(32, 32, 256, 64)
+    # 32*256 + 32*256 + 32*256 + 32*4 + 32*32 floats = 25728 * 4
+    assert b == 4 * (3 * 32 * 256 + 32 * 4 + 32 * 32)
+    assert b < 16 * 1024 * 1024  # fits VMEM
+
+
+def test_mxu_estimate_monotone():
+    lo = qmatmul.mxu_utilization_estimate(8, 8, 64)
+    hi = qmatmul.mxu_utilization_estimate(128, 128, 256)
+    assert 0 < lo < hi <= 1.0
+
+
+def test_e3m0_table_used_by_ref():
+    x = rand(11, 8, 32)
+    codes, scales = make_qweights(12, 8, 32, 16)
+    y1 = ref.ref_qmatmul(x, codes, scales, group=16, wfmt=fpq.E3M0)
+    y2 = ref.ref_qmatmul(x, codes, scales, group=16, wfmt=fpq.E2M1)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))

@@ -1,0 +1,61 @@
+"""Checkpoint format: python roundtrip, schema/family agreement, and (when
+the binary is present) cross-validation against the Rust reader."""
+
+import os
+import subprocess
+import tempfile
+
+import numpy as np
+import pytest
+
+import jax
+
+from compile import model as M
+from compile import zqckpt
+
+
+def test_roundtrip():
+    cfg = zqckpt.selfcheck_config()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.zqckpt")
+        zqckpt.save(path, cfg, tensors)
+        cfg2, tensors2 = zqckpt.load(path)
+        assert cfg2.d_model == cfg.d_model
+        assert cfg2.arch == cfg.arch
+        assert set(tensors2) == set(tensors)
+        for k in tensors:
+            np.testing.assert_array_equal(tensors[k], tensors2[k])
+
+
+def test_schema_counts():
+    for arch in ["opt", "llama"]:
+        for cfg, alpha in zqckpt.family(arch):
+            schema = zqckpt.tensor_schema(cfg)
+            names = [n for n, _, _ in schema]
+            assert len(names) == len(set(names))
+            assert alpha >= 1.0
+            # every init param matches schema shape
+            params = M.init_params(cfg, jax.random.PRNGKey(1))
+            for n, r, c in schema:
+                assert params[n].shape == (r, c), n
+
+
+ZQFP = os.path.join(os.path.dirname(__file__), "..", "..", "target",
+                    "release", "zqfp")
+
+
+@pytest.mark.skipif(not os.path.exists(ZQFP), reason="rust binary not built")
+def test_rust_reads_python_checkpoint():
+    cfg = zqckpt.selfcheck_config()
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    tensors = {k: np.asarray(v) for k, v in params.items()}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.zqckpt")
+        zqckpt.save(path, cfg, tensors)
+        out = subprocess.run([ZQFP, "info", "--ckpt", path],
+                             capture_output=True, text=True, check=True)
+        assert "arch=opt" in out.stdout
+        assert "d_model=24" in out.stdout
+        assert f"tensors={len(tensors)}" in out.stdout

@@ -1,0 +1,68 @@
+//! Scoring throughput: the interpretive Rust engine vs the PJRT HLO path,
+//! per activation scheme — quantifies why the table harness runs on PJRT
+//! and what the A8 fake-quant costs end to end.
+//!
+//! Requires `make artifacts`; engine-only numbers print regardless.
+
+use std::path::Path;
+
+use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::engine::{Engine, EngineOpts};
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
+
+fn main() {
+    let mut rng = Rng::seeded(17);
+    let fam = ModelConfig::family(Arch::Opt);
+    let (cfg, _) = &fam[2]; // opt-m
+    let ck = Checkpoint::random(cfg, &mut rng);
+    let seq = cfg.max_seq;
+    let window: Vec<u16> = (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+    let mut bench = Bench::default();
+
+    println!("-- rust engine forward, {} (d={}, L={}), {} tokens --",
+             cfg.name, cfg.d_model, cfg.n_layers, seq);
+    for fmt in [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3] {
+        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let engine = Engine::with_opts(&ck, opts);
+        bench.run(
+            format!("engine fwd act={}", fmt.name()),
+            seq as f64,
+            "tok",
+            || engine.forward(&window),
+        );
+    }
+
+    let artifacts = Path::new("artifacts");
+    let a16 = artifacts.join(score_artifact_name(cfg, "a16"));
+    if !a16.exists() {
+        println!("\n[pjrt section skipped: run `make artifacts`]");
+        return;
+    }
+    println!("\n-- pjrt hlo scorer, batch {} --", SCORE_BATCH);
+    let batch_tokens: Vec<u16> = (0..SCORE_BATCH * seq)
+        .map(|_| rng.below(cfg.vocab_size) as u16)
+        .collect();
+    for fmt in [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3] {
+        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let scorer = HloScorer::load(
+            &artifacts.join(score_artifact_name(cfg, act_tag(&opts).unwrap())),
+            SCORE_BATCH,
+            seq,
+        )
+        .expect("artifact loads");
+        let weights = scorer.upload_weights(&ck).unwrap();
+        bench.run(
+            format!("pjrt score act={}", fmt.name()),
+            (SCORE_BATCH * seq) as f64,
+            "tok",
+            || scorer.score_batch(&batch_tokens, &weights).unwrap(),
+        );
+    }
+    if let Some(s) = bench.speedup("pjrt score act=F16", "engine fwd act=F16") {
+        println!("\npjrt vs engine (per token, F16): {s:.1}x");
+    }
+}

@@ -1,0 +1,59 @@
+//! Codec throughput: fake-quantization rates per format — the L3 hot-path
+//! primitive (token-wise activation quant runs on every linear input).
+//! §Perf baseline/after numbers live in EXPERIMENTS.md.
+
+use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::formats::{FpFormat, NumericFormat};
+use zeroquant_fp::quant::{fake_quant_tokenwise, ActQuantConfig};
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::Matrix;
+
+fn main() {
+    let mut rng = Rng::seeded(7);
+    let n = 1usize << 16;
+    let data: Vec<f32> = (0..n).map(|_| rng.normal_f32() * 0.1).collect();
+    let mut bench = Bench::default();
+
+    println!("-- scalar fake-quant throughput ({} elements) --", n);
+    for fmt in [
+        NumericFormat::FP8_E4M3,
+        NumericFormat::FP8_E5M2,
+        NumericFormat::FP4_E2M1,
+        NumericFormat::FP4_E3M0,
+        NumericFormat::INT8,
+        NumericFormat::INT4,
+    ] {
+        let mut buf = data.clone();
+        bench.run(format!("fake_quant_slice {}", fmt.name()), n as f64, "elt", || {
+            buf.copy_from_slice(&data);
+            fmt.fake_quant_slice_dynamic(&mut buf);
+        });
+    }
+
+    println!("\n-- encode/decode roundtrip --");
+    for fmt in [FpFormat::E4M3, FpFormat::E2M1] {
+        bench.run(format!("encode+decode {}", fmt.name()), n as f64, "elt", || {
+            let mut acc = 0.0f32;
+            for &x in &data {
+                acc += fmt.decode(fmt.encode(x));
+            }
+            acc
+        });
+    }
+
+    println!("\n-- token-wise activation quant (engine hot path), [128 x 512] --");
+    let x0 = Matrix::randn(128, 512, 0.1, &mut rng);
+    for fmt in [NumericFormat::FP8_E4M3, NumericFormat::INT8] {
+        let cfg = ActQuantConfig::new(fmt);
+        let mut x = x0.clone();
+        bench.run(
+            format!("tokenwise {}", fmt.name()),
+            (128 * 512) as f64,
+            "elt",
+            || {
+                x.data.copy_from_slice(&x0.data);
+                fake_quant_tokenwise(&mut x, &cfg);
+            },
+        );
+    }
+}

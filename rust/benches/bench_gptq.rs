@@ -1,0 +1,51 @@
+//! GPTQ pipeline cost: Hessian accumulation, Cholesky inversion, and the
+//! column sweep, per layer size — the PTQ wall-time the paper's Appendix A
+//! reports as "a single V100" (ours: a single CPU core).
+
+use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+use zeroquant_fp::linalg;
+use zeroquant_fp::lorc::{LorcConfig, LorcFactors};
+use zeroquant_fp::quant::{quantize_weight_rtn, WeightQuantConfig};
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::Matrix;
+
+fn main() {
+    let mut rng = Rng::seeded(13);
+    let mut bench = Bench::quick();
+    for dim in [128usize, 256, 512] {
+        let rows = dim;
+        let w = Matrix::randn(rows, dim, 0.05, &mut rng);
+        let x = Matrix::randn(512, dim, 1.0, &mut rng);
+        println!("-- layer [{}x{}], calib 512 tokens --", rows, dim);
+        bench.run(format!("hessian accumulate d={dim}"), (512 * dim * dim) as f64 / 2.0, "MAC", || {
+            let mut acc = HessianAccumulator::new(dim);
+            acc.add_batch(&x);
+            acc.finalize()
+        });
+        let mut acc = HessianAccumulator::new(dim);
+        acc.add_batch(&x);
+        let h = acc.finalize();
+        bench.run(format!("cholesky-inverse   d={dim}"), (dim * dim * dim) as f64, "op", || {
+            let mut hd = h.clone();
+            for i in 0..dim {
+                *hd.at_mut(i, i) += 0.01;
+            }
+            linalg::cholesky_inverse_upper(&hd).unwrap()
+        });
+        let wcfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64);
+        bench.run(format!("gptq sweep         d={dim}"), (rows * dim * dim) as f64 / 2.0, "op", || {
+            gptq_quantize(&w, &h, &wcfg, &GptqConfig::default()).unwrap()
+        });
+        bench.run(format!("rtn (baseline)     d={dim}"), (rows * dim) as f64, "elt", || {
+            quantize_weight_rtn(&w, &wcfg)
+        });
+        let q = quantize_weight_rtn(&w, &wcfg);
+        let deq = q.dequantize();
+        bench.run(format!("lorc svd rank8     d={dim}"), 0.0, "", || {
+            LorcFactors::compute(&w, &deq, &LorcConfig::default()).unwrap()
+        });
+        println!();
+    }
+}

@@ -1,0 +1,34 @@
+//! Matmul kernels: the L3 engine hot path. Naive baseline vs the blocked/
+//! unrolled kernels in tensor::matmul (§Perf records the progression).
+
+use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::{matmul, Matrix};
+
+fn main() {
+    let mut rng = Rng::seeded(11);
+    let mut bench = Bench::default();
+    for (m, k, n) in [(128, 128, 128), (128, 512, 128), (256, 256, 256), (512, 512, 512)] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        println!("-- {m}x{k}x{n} ({:.1} MFLOP) --", flops / 1e6);
+        if m <= 256 {
+            bench.run(format!("naive      {m}x{k}x{n}"), flops, "FLOP", || {
+                matmul::matmul_naive(&a, &b)
+            });
+        }
+        bench.run(format!("blocked    {m}x{k}x{n}"), flops, "FLOP", || a.matmul(&b));
+        bench.run(format!("bt-fused   {m}x{k}x{n}"), flops, "FLOP", || {
+            a.matmul_t(&bt)
+        });
+        if let Some(s) = bench.speedup(
+            &format!("blocked    {m}x{k}x{n}"),
+            &format!("naive      {m}x{k}x{n}"),
+        ) {
+            println!("   blocked vs naive: {s:.2}x");
+        }
+        println!();
+    }
+}

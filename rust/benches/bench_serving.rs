@@ -1,0 +1,72 @@
+//! Serving-policy sweep: dynamic-batching window vs latency/throughput on
+//! the coordinator — the L3 batching dial (§Perf). Requires artifacts.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::runtime::{score_artifact_name, SCORE_BATCH};
+
+fn main() {
+    let fam = ModelConfig::family(Arch::Opt);
+    let (cfg, _) = &fam[0]; // opt-xs: fastest, isolates coordinator overhead
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join(score_artifact_name(cfg, "a16")).exists() {
+        println!("[skipped: run `make artifacts`]");
+        return;
+    }
+    let mut rng = Rng::seeded(19);
+    let ck = Checkpoint::random(cfg, &mut rng);
+    let seq = cfg.max_seq;
+    let n_requests = 160usize;
+    let windows: Vec<Vec<u16>> = (0..n_requests)
+        .map(|_| (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect())
+        .collect();
+
+    println!(
+        "{:>10} {:>10} {:>12} {:>10} {:>10} {:>10}",
+        "wait(ms)", "clients", "req/s", "p50(ms)", "p95(ms)", "batch"
+    );
+    for wait_ms in [0u64, 1, 2, 5, 10] {
+        for clients in [1usize, 4, 8] {
+            let coord = Coordinator::new(CoordinatorConfig {
+                artifacts: artifacts.to_path_buf(),
+                ck: ck.clone(),
+                opts: EngineOpts::default(),
+                policy: BatchPolicy {
+                    max_batch: SCORE_BATCH,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+            });
+            let _t0 = Instant::now();
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let client = coord.client();
+                let mine: Vec<Vec<u16>> =
+                    windows.iter().skip(c).step_by(clients).cloned().collect();
+                handles.push(std::thread::spawn(move || {
+                    for w in mine {
+                        client.score(w).unwrap();
+                    }
+                }));
+            }
+            let report = coord.run().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            println!(
+                "{:>10} {:>10} {:>12.1} {:>10.2} {:>10.2} {:>10.2}",
+                wait_ms,
+                clients,
+                report.throughput_rps(),
+                report.latency.percentile_ms(50.0),
+                report.latency.percentile_ms(95.0),
+                report.mean_batch_size
+            );
+        }
+    }
+    println!("\n(the latency/throughput dial: longer windows fill batches at the cost of p50)");
+}

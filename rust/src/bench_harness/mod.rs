@@ -1,0 +1,165 @@
+//! Micro-benchmark substrate (criterion is not in the offline vendor set).
+//!
+//! Wall-clock timing with warmup, adaptive iteration counts, and
+//! mean/stddev/percentile reporting; `cargo bench` targets are plain
+//! `harness = false` mains built on this.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    /// Optional work-per-iteration for derived throughput (e.g. FLOPs).
+    pub work_per_iter: Option<f64>,
+    pub work_unit: &'static str,
+}
+
+impl Measurement {
+    /// Work units per second (e.g. GFLOP/s when work is FLOPs / 1e9).
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter
+            .map(|w| w / self.mean.as_secs_f64().max(1e-12))
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:8.2} G{}/s", t / 1e9, self.work_unit),
+            Some(t) if t >= 1e6 => format!("  {:8.2} M{}/s", t / 1e6, self.work_unit),
+            Some(t) if t >= 1e3 => format!("  {:8.2} K{}/s", t / 1e3, self.work_unit),
+            Some(t) => format!("  {:8.2} {}/s", t, self.work_unit),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>10.3?} ±{:>9.3?} (min {:>9.3?}, n={}){}",
+            self.name, self.mean, self.stddev, self.min, self.iters, tp
+        )
+    }
+}
+
+/// Benchmark runner with a global time budget per case.
+pub struct Bench {
+    /// Target wall time spent measuring each case.
+    pub budget: Duration,
+    /// Warmup time before measurement.
+    pub warmup: Duration,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(600),
+            warmup: Duration::from_millis(150),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(200),
+            warmup: Duration::from_millis(50),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` repeatedly; `work` is the per-iteration work amount for
+    /// throughput reporting (pass 0.0 to skip).
+    pub fn run<R>(
+        &mut self,
+        name: impl Into<String>,
+        work: f64,
+        unit: &'static str,
+        mut f: impl FnMut() -> R,
+    ) -> &Measurement {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        // choose batch size so one batch is ~1/20 of budget
+        let per = w0.elapsed().as_secs_f64() / warm_iters as f64;
+        let batch = ((self.budget.as_secs_f64() / 20.0 / per.max(1e-9)).ceil() as usize).max(1);
+        let mut samples: Vec<f64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.budget || samples.len() < 3 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(s.elapsed().as_secs_f64() / batch as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let m = Measurement {
+            name: name.into(),
+            iters: samples.len() * batch,
+            mean: Duration::from_secs_f64(mean),
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(min),
+            work_per_iter: if work > 0.0 { Some(work) } else { None },
+            work_unit: unit,
+        };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Comparison line: how much faster is `a` than `b` (by name)?
+    pub fn speedup(&self, a: &str, b: &str) -> Option<f64> {
+        let fa = self.results.iter().find(|m| m.name == a)?;
+        let fb = self.results.iter().find(|m| m.name == b)?;
+        Some(fb.mean.as_secs_f64() / fa.mean.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            budget: Duration::from_millis(30),
+            warmup: Duration::from_millis(5),
+            results: Vec::new(),
+        };
+        // black_box the *input* so release mode cannot constant-fold the
+        // loop away to a true 0ns no-op.
+        let data: Vec<u64> = (0..512).collect();
+        let m = b.run("sum512", 512.0, "op", || {
+            std::hint::black_box(&data).iter().sum::<u64>()
+        });
+        assert!(m.iters > 0);
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn speedup_compares() {
+        let mut b = Bench {
+            budget: Duration::from_millis(20),
+            warmup: Duration::from_millis(2),
+            results: Vec::new(),
+        };
+        let small: Vec<u64> = (0..8).collect();
+        let big: Vec<u64> = (0..20_000).collect();
+        b.run("fast", 0.0, "", || std::hint::black_box(&small).iter().sum::<u64>());
+        b.run("slow", 0.0, "", || std::hint::black_box(&big).iter().sum::<u64>());
+        assert!(b.speedup("fast", "slow").unwrap() > 1.0);
+        assert!(b.speedup("fast", "missing").is_none());
+    }
+}

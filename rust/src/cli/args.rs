@@ -1,0 +1,135 @@
+//! Minimal argument parsing (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments. Unknown
+//! flags are an error; every accessor records the keys it saw so
+//! [`Args::finish`] can report typos.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    used: std::cell::RefCell<BTreeSet<String>>,
+}
+
+pub const FLAG_SENTINEL: &str = "\u{1}true";
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut positional = Vec::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let key = key.to_string();
+                if key.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                // `--key=value` or `--key value` or boolean `--key`
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key, argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key, FLAG_SENTINEL.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { positional, flags, used: Default::default() })
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.used.borrow_mut().insert(key.to_string());
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.used.borrow_mut().insert(key.to_string());
+        let v = self.flags.get(key)?;
+        if v == FLAG_SENTINEL {
+            None
+        } else {
+            Some(v.clone())
+        }
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: not a number: {v}")),
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: not a number: {v}")),
+        }
+    }
+
+    /// Error on any flag never consumed by an accessor.
+    pub fn finish(&self) -> Result<(), String> {
+        let used = self.used.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !used.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown flags: {unknown:?}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        // `--key value` is greedy; boolean flags must precede another flag
+        // or the end (documented semantics).
+        let a = Args::parse(&argv(&["cmd", "--n", "5", "pos2", "--k=v", "--fast"])).unwrap();
+        assert_eq!(a.positional, vec!["cmd", "pos2"]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("k").unwrap(), "v");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn unknown_flags_detected() {
+        let a = Args::parse(&argv(&["--oops", "1"])).unwrap();
+        assert!(a.finish().is_err());
+        let _ = a.get("oops");
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        let a = Args::parse(&argv(&["--verbose", "--n", "3"])).unwrap();
+        // "--verbose" greedily consumed "--n"? no: next starts with -- so
+        // verbose is boolean.
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn numeric_errors() {
+        let a = Args::parse(&argv(&["--n", "abc"])).unwrap();
+        assert!(a.get_usize("n", 0).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! Implementations of the non-experiment CLI commands.
+
+use std::path::{Path, PathBuf};
+
+use crate::cli::Args;
+use crate::data::{read_tokens, write_tokens, Corpus, CorpusKind};
+use crate::engine::EngineOpts;
+use crate::formats::NumericFormat;
+use crate::lorc::LorcConfig;
+use crate::model::{inject_outliers, Checkpoint, OutlierSpec};
+use crate::pipeline::{quantize_checkpoint, PtqConfig};
+use crate::quant::{ScaleConstraint, Scheme};
+use crate::rng::Rng;
+
+pub fn gen_corpus(args: &Args) -> Result<(), String> {
+    let out = PathBuf::from(args.get_or("out", "data"));
+    let train_tokens = args.get_usize("train-tokens", 2_000_000)?;
+    let eval_tokens = args.get_usize("eval-tokens", 8_192)?;
+    let calib_seqs = args.get_usize("calib-seqs", 32)?;
+    let seq = args.get_usize("seq", 128)?;
+    args.finish()?;
+    std::fs::create_dir_all(&out).map_err(|e| e.to_string())?;
+
+    let train = Corpus::training_mixture(train_tokens);
+    write_tokens(&out.join("train.tok"), &train).map_err(|e| e.to_string())?;
+    println!("wrote {} train tokens -> {}", train.len(), out.join("train.tok").display());
+
+    for kind in CorpusKind::ALL {
+        let c = Corpus::new(kind);
+        let eval = c.generate(eval_tokens, 1);
+        let path = out.join(format!("eval_{}.tok", kind.name()));
+        write_tokens(&path, &eval).map_err(|e| e.to_string())?;
+        println!("wrote {} eval tokens -> {}", eval.len(), path.display());
+    }
+    // Calibration: like the paper, random sentences from the C4 surrogate.
+    let calib = Corpus::new(CorpusKind::C4).generate(calib_seqs * seq, 2);
+    write_tokens(&out.join("calib.tok"), &calib).map_err(|e| e.to_string())?;
+    println!("wrote {} calib tokens ({} seqs x {})", calib.len(), calib_seqs, seq);
+    Ok(())
+}
+
+pub fn info(args: &Args) -> Result<(), String> {
+    let path = args.get("ckpt").ok_or("--ckpt required")?;
+    args.finish()?;
+    let ck = Checkpoint::load(Path::new(&path)).map_err(|e| e.to_string())?;
+    let c = &ck.config;
+    println!(
+        "arch={} vocab={} d_model={} heads={} layers={} d_ff={} max_seq={}",
+        c.arch.name(),
+        c.vocab_size,
+        c.d_model,
+        c.n_heads,
+        c.n_layers,
+        c.d_ff,
+        c.max_seq
+    );
+    println!("params={} tensors={}", c.n_params(), ck.tensors.len());
+    let mut names: Vec<_> = ck.tensors.keys().collect();
+    names.sort();
+    for n in names.iter().take(8) {
+        let m = ck.get(n);
+        println!("  {n} [{}x{}] fro={:.4}", m.rows, m.cols, m.fro_norm());
+    }
+    if names.len() > 8 {
+        println!("  ... {} more", names.len() - 8);
+    }
+    Ok(())
+}
+
+/// Shared: load checkpoint and optionally apply outlier injection.
+pub fn load_ckpt_with_alpha(path: &Path, alpha: f32) -> Result<Checkpoint, String> {
+    let mut ck = Checkpoint::load(path).map_err(|e| e.to_string())?;
+    if alpha != 1.0 {
+        let mut rng = Rng::seeded(0xA11CE);
+        inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
+    }
+    Ok(ck)
+}
+
+/// Shared: build a PtqConfig from CLI flags.
+pub fn ptq_config_from_args(args: &Args, scheme: Scheme) -> Result<PtqConfig, String> {
+    let mut cfg = PtqConfig::new(scheme);
+    cfg.group_size = args.get_usize("group", 64)?;
+    cfg.use_gptq = !args.flag("rtn");
+    cfg.cast_fp4_to_e5m2 = args.flag("cast");
+    if let Some(c) = args.get("constraint") {
+        cfg.constraint =
+            ScaleConstraint::parse(&c).ok_or(format!("bad --constraint {c}"))?;
+    }
+    if args.flag("lorc") {
+        cfg.lorc = Some(LorcConfig {
+            rank: args.get_usize("rank", 8)?,
+            factor_format: NumericFormat::FP8_E4M3,
+        });
+    } else {
+        let _ = args.get_usize("rank", 8)?; // consume
+    }
+    Ok(cfg)
+}
+
+/// Load calibration sequences from `<data>/calib.tok`.
+pub fn load_calib(data: &Path, seq: usize) -> Result<Vec<Vec<u16>>, String> {
+    let toks = read_tokens(&data.join("calib.tok"))
+        .map_err(|e| format!("calib.tok: {e} (run `zqfp gen-corpus` first)"))?;
+    Ok(toks.chunks_exact(seq).map(|c| c.to_vec()).collect())
+}
+
+pub fn quantize(args: &Args) -> Result<(), String> {
+    let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
+    let out = args.get("out").ok_or("--out required")?;
+    let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
+    let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
+    let data = PathBuf::from(args.get_or("data", "data"));
+    let seq = args.get_usize("seq", 128)?;
+    let alpha = args.get_f32("alpha", 1.0)?;
+    let cfg = ptq_config_from_args(args, scheme)?;
+    args.finish()?;
+
+    let ck = load_ckpt_with_alpha(Path::new(&ckpt), alpha)?;
+    let calib = load_calib(&data, seq.min(ck.config.max_seq))?;
+    let t0 = std::time::Instant::now();
+    let (qck, report) = quantize_checkpoint(&ck, &calib, &cfg);
+    qck.save(Path::new(&out)).map_err(|e| e.to_string())?;
+    println!(
+        "{}: quantized {} tensors in {:?}",
+        report.scheme_name,
+        report.layers.len(),
+        t0.elapsed()
+    );
+    println!(
+        "  fp16 {} B -> quant {} B  ({:.2}x compression)",
+        report.fp16_bytes,
+        report.quant_bytes,
+        report.compression()
+    );
+    println!("  mean weight-mse {:.3e}", report.total_weight_mse());
+    println!("  wrote effective checkpoint -> {out}");
+    Ok(())
+}
+
+pub fn eval(args: &Args) -> Result<(), String> {
+    let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
+    let data = PathBuf::from(args.get_or("data", "data"));
+    let seq = args.get_usize("seq", 128)?;
+    let max_tokens = args.get_usize("max-tokens", usize::MAX)?;
+    let alpha = args.get_f32("alpha", 1.0)?;
+    let corpus = args.get_or("corpus", "all");
+    let runtime = args.get_or("runtime", "engine");
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let scheme_s = args.get("scheme");
+
+    let ck = load_ckpt_with_alpha(Path::new(&ckpt), alpha)?;
+    // If a scheme is given, quantize first (weights) and set act format.
+    let (ck, opts) = match &scheme_s {
+        None => {
+            args.finish()?;
+            (ck, EngineOpts::default())
+        }
+        Some(s) => {
+            let scheme = Scheme::parse(s).ok_or(format!("bad --scheme {s}"))?;
+            let cfg = ptq_config_from_args(args, scheme)?;
+            args.finish()?;
+            let calib = load_calib(&data, seq.min(ck.config.max_seq))?;
+            let (qck, _) = quantize_checkpoint(&ck, &calib, &cfg);
+            (qck, cfg.engine_opts())
+        }
+    };
+
+    let kinds: Vec<CorpusKind> = if corpus == "all" {
+        CorpusKind::ALL.to_vec()
+    } else {
+        vec![CorpusKind::parse(&corpus).ok_or(format!("bad --corpus {corpus}"))?]
+    };
+    let mut ppls = Vec::new();
+    for kind in kinds {
+        let toks = read_tokens(&data.join(format!("eval_{}.tok", kind.name())))
+            .map_err(|e| format!("eval_{}.tok: {e}", kind.name()))?;
+        let toks = &toks[..toks.len().min(max_tokens)];
+        let seqn = seq.min(ck.config.max_seq);
+        let r = if runtime == "hlo" {
+            crate::runtime::hlo_perplexity(&artifacts, &ck, &opts, toks, seqn)
+                .map_err(|e| e.to_string())?
+        } else {
+            crate::eval::perplexity(&ck, opts, toks, seqn)
+        };
+        println!("{}: ppl {:.4}  ({} tokens)", kind.name(), r.ppl(), r.tokens);
+        ppls.push(r.ppl());
+    }
+    if ppls.len() > 1 {
+        println!("mean: {:.4}", ppls.iter().sum::<f64>() / ppls.len() as f64);
+    }
+    Ok(())
+}
+
+pub fn serve(args: &Args) -> Result<(), String> {
+    crate::coordinator::serve_command(args)
+}
+
+pub fn selfcheck(args: &Args) -> Result<(), String> {
+    crate::runtime::selfcheck(args)
+}

@@ -1,0 +1,54 @@
+//! The `zqfp` command-line interface (Layer-3 driver).
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+const USAGE: &str = "\
+zqfp — ZeroQuant-FP: W4A8 post-training quantization with FP formats
+
+USAGE: zqfp <command> [options]
+
+commands:
+  gen-corpus   --out data/ [--train-tokens N] [--eval-tokens N] [--calib-seqs N]
+               write synthetic train/calib/eval token streams (.tok)
+  info         --ckpt m.zqckpt           inspect a checkpoint
+  quantize     --ckpt m.zqckpt --scheme w4a8-fp-fp --out q.zqckpt
+               [--lorc [--rank N]] [--constraint none|m1|m2] [--group N]
+               [--rtn] [--cast] [--alpha A] [--data data/]
+  eval         --ckpt m.zqckpt [--scheme ...] [--corpus wiki|ptb|c4|all]
+               [--data data/] [--seq N] [--max-tokens N] [--alpha A]
+               [--runtime hlo|engine] [--artifacts artifacts/]
+  table        --id 1|2|3|a1 [--data data/] [--ckpt-dir ckpt/] [--fast]
+               [--runtime hlo|engine] regenerate a paper table
+  figure       --id 1|2 [--ckpt m.zqckpt] regenerate a paper figure
+  serve        --ckpt m.zqckpt --artifacts artifacts/ [--requests N]
+               [--batch-max N] [--scheme ...] PJRT serving demo
+  selfcheck    cross-check rust engine vs PJRT HLO on a tiny model
+";
+
+/// Entry point used by `main.rs` (and by integration tests).
+pub fn run(argv: &[String]) -> Result<(), String> {
+    if argv.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].as_str();
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "gen-corpus" => commands::gen_corpus(&args),
+        "info" => commands::info(&args),
+        "quantize" => commands::quantize(&args),
+        "eval" => commands::eval(&args),
+        "table" => crate::experiments::run_table(&args),
+        "figure" => crate::experiments::run_figure(&args),
+        "serve" => commands::serve(&args),
+        "selfcheck" => commands::selfcheck(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown command '{other}' (try `zqfp help`)")),
+    }
+}

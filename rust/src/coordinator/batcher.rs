@@ -1,0 +1,96 @@
+//! Dynamic batching policy — collect requests into GEMM-efficient batches
+//! without letting the head request wait beyond a deadline.
+//!
+//! The PJRT scoring executable is lowered at a fixed batch `B`; padded
+//! slots waste compute, so the batcher waits up to `max_wait` after the
+//! first request for the batch to fill (the classic dynamic-batching
+//! latency/throughput dial; §Perf sweeps it).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Hard cap (the artifact's lowered batch size).
+    pub max_batch: usize,
+    /// How long the first request of a batch may wait for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Pull one batch from `rx` under the policy. Blocks for the first item
+/// (None = channel closed and drained). Subsequent items are awaited only
+/// until the deadline.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn full_batch_returns_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(1));
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(42).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(20) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, policy).unwrap();
+        assert_eq!(b, vec![42]);
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(15), "{waited:?}");
+        drop(tx);
+    }
+
+    #[test]
+    fn closed_channel_yields_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn drains_remaining_after_close() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) };
+        assert_eq!(next_batch(&rx, policy).unwrap(), vec![1, 2]);
+        assert!(next_batch(&rx, policy).is_none());
+    }
+}

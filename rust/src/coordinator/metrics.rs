@@ -1,0 +1,96 @@
+//! Latency/throughput metrics for the serving coordinator.
+
+use std::time::Duration;
+
+/// Online latency recorder with percentile support.
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
+    }
+
+    /// Percentile in milliseconds (p in [0, 100]).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)] as f64 / 1000.0
+    }
+}
+
+/// Aggregated serving-run report.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub batches: usize,
+    pub wall: Duration,
+    pub latency: LatencyStats,
+    pub mean_batch_size: f64,
+}
+
+impl ServeReport {
+    pub fn throughput_rps(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn print(&self) {
+        println!(
+            "requests={} batches={} mean_batch={:.2} wall={:.2}s",
+            self.requests,
+            self.batches,
+            self.mean_batch_size,
+            self.wall.as_secs_f64()
+        );
+        println!(
+            "throughput {:.1} req/s | latency mean {:.2} ms  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+            self.throughput_rps(),
+            self.latency.mean_ms(),
+            self.latency.percentile_ms(50.0),
+            self.latency.percentile_ms(95.0),
+            self.latency.percentile_ms(99.0),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100u64 {
+            s.record(Duration::from_millis(i));
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean_ms() - 50.5).abs() < 0.01);
+        assert!(s.percentile_ms(50.0) <= s.percentile_ms(95.0));
+        assert!(s.percentile_ms(95.0) <= s.percentile_ms(99.0));
+        assert!((s.percentile_ms(99.0) - 99.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean_ms(), 0.0);
+        assert_eq!(s.percentile_ms(99.0), 0.0);
+    }
+}

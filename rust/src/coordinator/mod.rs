@@ -1,0 +1,223 @@
+//! The serving coordinator — Layer 3's runtime contribution.
+//!
+//! A scoring service over a quantized model: clients submit fixed-length
+//! token windows, the coordinator batches them dynamically (the PJRT
+//! executable is lowered at batch `B`), executes on the PJRT CPU device,
+//! and returns per-window NLL. std::thread + mpsc (tokio is not in the
+//! offline vendor set — the event loop is a plain loop and channels).
+//!
+//! ```text
+//!  client threads ──score(window)──▶ queue ──next_batch──▶ run() loop ──▶ PJRT exe
+//!        ▲                                                      │
+//!        └──────────────── per-request oneshot ◀────────────────┘
+//! ```
+//!
+//! Threading model: **all PJRT work happens on the thread that calls
+//! [`Coordinator::run`]** (xla_extension 0.5.1 deadlocks when a second CPU
+//! client is created on another thread while one is in use, so the process
+//! keeps a single per-thread client — see `runtime::cpu_client`). Client
+//! threads only touch channels. `run` returns when every
+//! [`ScoreClient`] has been dropped and the queue is drained.
+
+pub mod batcher;
+pub mod metrics;
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::time::Instant;
+
+pub use batcher::{next_batch, BatchPolicy};
+pub use metrics::{LatencyStats, ServeReport};
+
+use crate::cli::Args;
+use crate::data::{Corpus, CorpusKind};
+use crate::model::Checkpoint;
+use crate::pipeline::quantize_checkpoint;
+use crate::quant::Scheme;
+use crate::runtime::HloScorer;
+
+/// One in-flight scoring request.
+struct Request {
+    window: Vec<u16>,
+    submitted: Instant,
+    respond: SyncSender<anyhow::Result<f32>>,
+}
+
+/// Handle client threads use to talk to a running coordinator. The serving
+/// loop exits once all clients are dropped.
+#[derive(Clone)]
+pub struct ScoreClient {
+    tx: Sender<Request>,
+    seq: usize,
+}
+
+impl ScoreClient {
+    /// Score one window (blocking). Returns the summed NLL of the window.
+    pub fn score(&self, window: Vec<u16>) -> anyhow::Result<f32> {
+        anyhow::ensure!(window.len() == self.seq, "window must be {} tokens", self.seq);
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Request { window, submitted: Instant::now(), respond: rtx })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        rrx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+    }
+}
+
+/// Everything the serving loop needs.
+pub struct CoordinatorConfig {
+    pub artifacts: PathBuf,
+    pub ck: Checkpoint,
+    pub opts: crate::engine::EngineOpts,
+    pub policy: BatchPolicy,
+}
+
+/// The request queue + serving loop.
+pub struct Coordinator {
+    tx: Option<Sender<Request>>,
+    rx: Receiver<Request>,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(cfg: CoordinatorConfig) -> Coordinator {
+        let (tx, rx) = channel();
+        Coordinator { tx: Some(tx), rx, cfg }
+    }
+
+    /// A client handle. Create one per client thread **before** calling
+    /// [`run`](Self::run); `run` drops the coordinator's own sender, so the
+    /// loop ends when the last client handle is gone.
+    pub fn client(&self) -> ScoreClient {
+        ScoreClient {
+            tx: self.tx.as_ref().expect("before run").clone(),
+            seq: self.cfg.ck.config.max_seq,
+        }
+    }
+
+    /// Run the serving loop on the current thread until every client is
+    /// dropped and the queue is drained; returns the serving report.
+    pub fn run(mut self) -> anyhow::Result<ServeReport> {
+        drop(self.tx.take()); // only client handles keep the queue open
+        let scorer = HloScorer::for_model(&self.cfg.artifacts, &self.cfg.ck.config, &self.cfg.opts)?;
+        let weights = scorer.upload_weights(&self.cfg.ck)?;
+        let b = scorer.batch;
+        let policy = BatchPolicy { max_batch: b, ..self.cfg.policy };
+        let seq = scorer.seq;
+        let mut flat: Vec<u16> = Vec::with_capacity(b * seq);
+        let mut latency = LatencyStats::default();
+        let mut batches = 0usize;
+        let mut requests = 0usize;
+        let t0 = Instant::now();
+        while let Some(batch) = next_batch(&self.rx, policy) {
+            flat.clear();
+            for r in &batch {
+                flat.extend_from_slice(&r.window);
+            }
+            for _ in batch.len()..b {
+                flat.extend_from_slice(&batch[0].window); // pad, discarded
+            }
+            let result = scorer.score_batch(&flat, &weights);
+            let now = Instant::now();
+            batches += 1;
+            requests += batch.len();
+            for r in &batch {
+                latency.record(now - r.submitted);
+            }
+            match result {
+                Ok(nll) => {
+                    for (r, &v) in batch.iter().zip(nll.iter()) {
+                        let _ = r.respond.send(Ok(v));
+                    }
+                }
+                Err(e) => {
+                    for r in batch {
+                        let _ = r.respond.send(Err(anyhow::anyhow!("{e:#}")));
+                    }
+                }
+            }
+        }
+        Ok(ServeReport {
+            requests,
+            batches,
+            wall: t0.elapsed(),
+            latency,
+            mean_batch_size: requests as f64 / batches.max(1) as f64,
+        })
+    }
+}
+
+/// `zqfp serve` — load a checkpoint, quantize it under `--scheme`, start
+/// the coordinator on its PJRT artifact, fire `--requests` scoring
+/// requests from `--clients` threads, and print the latency/throughput
+/// report (the e2e serving validation of DESIGN.md §5).
+pub fn serve_command(args: &Args) -> Result<(), String> {
+    let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let data = PathBuf::from(args.get_or("data", "data"));
+    let n_requests = args.get_usize("requests", 256)?;
+    let n_clients = args.get_usize("clients", 4)?;
+    let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
+    let alpha = args.get_f32("alpha", 1.0)?;
+    let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
+    let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
+    let cfg = crate::cli::commands::ptq_config_from_args(args, scheme)?;
+    args.finish()?;
+
+    let ck = crate::cli::commands::load_ckpt_with_alpha(std::path::Path::new(&ckpt), alpha)?;
+    let seq = ck.config.max_seq;
+    let calib = crate::cli::commands::load_calib(&data, seq)?;
+    println!("quantizing under {} ...", scheme.name());
+    let (qck, report) = quantize_checkpoint(&ck, &calib, &cfg);
+    println!(
+        "  {} tensors, {:.2}x compression",
+        report.layers.len(),
+        report.compression()
+    );
+
+    // workload: eval windows from the C4 surrogate
+    let corpus = Corpus::new(CorpusKind::C4);
+    let stream = corpus.generate(n_requests * seq, 7);
+    let windows: Vec<Vec<u16>> = stream.chunks_exact(seq).map(|c| c.to_vec()).collect();
+    let n_windows = windows.len();
+
+    let opts = cfg.engine_opts();
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts,
+        ck: qck,
+        opts,
+        policy: BatchPolicy {
+            max_batch: crate::runtime::SCORE_BATCH,
+            max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
+        },
+    });
+
+    println!(
+        "serving {n_windows} requests from {n_clients} clients (batch window {max_wait_ms} ms) ..."
+    );
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let client = coord.client();
+        let my: Vec<Vec<u16>> = windows.iter().skip(c).step_by(n_clients).cloned().collect();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut sum = 0.0f64;
+            for w in my {
+                sum += client.score(w)? as f64;
+            }
+            Ok(sum)
+        }));
+    }
+    // PJRT loop on this thread
+    let report = coord.run().map_err(|e| e.to_string())?;
+    let mut total_nll = 0.0f64;
+    for h in handles {
+        total_nll += h.join().map_err(|_| "client panicked")?.map_err(|e| e.to_string())?;
+    }
+    report.print();
+    let tokens = (seq - 1) * n_windows;
+    println!(
+        "workload ppl {:.4} over {} scored tokens",
+        (total_nll / tokens as f64).exp(),
+        tokens
+    );
+    Ok(())
+}

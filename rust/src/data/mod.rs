@@ -1,0 +1,314 @@
+//! Synthetic corpora — the WikiText-2 / PTB / C4 surrogates (DESIGN.md §2).
+//!
+//! Each corpus is a seeded Markov process over a 512-token vocabulary with
+//! Zipfian unigram statistics. The *structure* (transition graph) is fixed
+//! per corpus name; the *sampling* stream differs between train and eval
+//! splits — so eval is held-out but in-distribution, like the paper's
+//! setting where the calibration and test sets share a domain.
+//!
+//! Three presets with deliberately different statistics (the paper averages
+//! PPL over three datasets precisely because the deltas vary by domain):
+//!
+//! * `wiki` — strongly structured (λ=0.85, branch 3): low-entropy text.
+//! * `ptb`  — loosely structured (λ=0.60, branch 8): high-entropy text.
+//! * `c4`   — mixed-domain: two transition graphs, switching every ~64
+//!   tokens (web crawl heterogeneity).
+//!
+//! Token streams serialize as little-endian u16 (`.tok`) — the interchange
+//! the build-time JAX trainer consumes (`python/compile/pretrain.py`), so
+//! Rust is the single source of truth for data.
+
+use std::io::{self, Read};
+use std::path::Path;
+
+use crate::rng::Rng;
+
+pub const VOCAB_SIZE: usize = 512;
+
+/// Identifies a synthetic corpus.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorpusKind {
+    Wiki,
+    Ptb,
+    C4,
+}
+
+impl CorpusKind {
+    pub const ALL: [CorpusKind; 3] = [CorpusKind::Wiki, CorpusKind::Ptb, CorpusKind::C4];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CorpusKind::Wiki => "wiki",
+            CorpusKind::Ptb => "ptb",
+            CorpusKind::C4 => "c4",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "wiki" | "wikitext" | "wikitext2" => Some(CorpusKind::Wiki),
+            "ptb" => Some(CorpusKind::Ptb),
+            "c4" => Some(CorpusKind::C4),
+            _ => None,
+        }
+    }
+
+    fn structure_seed(&self) -> u64 {
+        match self {
+            CorpusKind::Wiki => 0x1111_2222_3333_4444,
+            CorpusKind::Ptb => 0x5555_6666_7777_8888,
+            CorpusKind::C4 => 0x9999_aaaa_bbbb_cccc,
+        }
+    }
+
+    fn params(&self) -> CorpusParams {
+        match self {
+            CorpusKind::Wiki => CorpusParams { lambda: 0.85, branch: 3, zipf_s: 1.1, domains: 1 },
+            CorpusKind::Ptb => CorpusParams { lambda: 0.60, branch: 8, zipf_s: 1.05, domains: 1 },
+            CorpusKind::C4 => CorpusParams { lambda: 0.75, branch: 5, zipf_s: 0.9, domains: 2 },
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct CorpusParams {
+    /// probability of following the transition graph (vs unigram draw)
+    lambda: f64,
+    /// preferred successors per token
+    branch: usize,
+    /// Zipf exponent of the unigram distribution
+    zipf_s: f64,
+    /// number of alternating transition graphs (domain mixing)
+    domains: usize,
+}
+
+/// A seeded synthetic corpus generator.
+pub struct Corpus {
+    kind: CorpusKind,
+    params: CorpusParams,
+    /// `domains × vocab × branch` preferred-successor table
+    succ: Vec<u16>,
+    /// cumulative Zipf distribution for inverse-transform sampling
+    zipf_cdf: Vec<f64>,
+}
+
+impl Corpus {
+    pub fn new(kind: CorpusKind) -> Corpus {
+        let params = kind.params();
+        let mut srng = Rng::seeded(kind.structure_seed());
+        let mut succ = Vec::with_capacity(params.domains * VOCAB_SIZE * params.branch);
+        for _dom in 0..params.domains {
+            for _tok in 0..VOCAB_SIZE {
+                for _b in 0..params.branch {
+                    succ.push(srng.below(VOCAB_SIZE) as u16);
+                }
+            }
+        }
+        // Zipf CDF over a structure-seeded permutation of the vocab (so the
+        // "frequent" tokens differ per corpus).
+        let perm = srng.permutation(VOCAB_SIZE);
+        let mut weights = vec![0.0f64; VOCAB_SIZE];
+        for (rank, &tok) in perm.iter().enumerate() {
+            weights[tok] = 1.0 / ((rank + 1) as f64).powf(params.zipf_s);
+        }
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let zipf_cdf = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Corpus { kind, params, succ, zipf_cdf }
+    }
+
+    pub fn kind(&self) -> CorpusKind {
+        self.kind
+    }
+
+    fn zipf_sample(&self, rng: &mut Rng) -> u16 {
+        let u = rng.uniform();
+        // binary search the CDF
+        let mut lo = 0usize;
+        let mut hi = VOCAB_SIZE - 1;
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.zipf_cdf[mid] < u {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        lo as u16
+    }
+
+    /// Generate `n` tokens using the given sampling stream. `split_seed`
+    /// distinguishes train (0) from eval (1) and calibration (2) draws.
+    pub fn generate(&self, n: usize, split_seed: u64) -> Vec<u16> {
+        let mut rng = Rng::seeded(self.kind.structure_seed() ^ (split_seed.wrapping_mul(0x517c_c1b7_2722_0a95)).wrapping_add(1));
+        let mut out = Vec::with_capacity(n);
+        let mut cur = self.zipf_sample(&mut rng);
+        let mut domain = 0usize;
+        for i in 0..n {
+            if self.params.domains > 1 && i % 64 == 0 {
+                domain = rng.below(self.params.domains);
+            }
+            out.push(cur);
+            cur = if rng.uniform() < self.params.lambda {
+                let b = rng.below(self.params.branch);
+                self.succ[(domain * VOCAB_SIZE + cur as usize) * self.params.branch + b]
+            } else {
+                self.zipf_sample(&mut rng)
+            };
+        }
+        out
+    }
+
+    /// The training mixture: equal thirds of each corpus, interleaved in
+    /// 256-token segments (so every eval set is in-domain for the model).
+    pub fn training_mixture(n: usize) -> Vec<u16> {
+        let corpora: Vec<Corpus> = CorpusKind::ALL.iter().map(|&k| Corpus::new(k)).collect();
+        let seg = 256usize;
+        let per = n / 3 + seg;
+        let streams: Vec<Vec<u16>> = corpora.iter().map(|c| c.generate(per, 0)).collect();
+        let mut out = Vec::with_capacity(n);
+        let mut offsets = [0usize; 3];
+        let mut which = 0usize;
+        while out.len() < n {
+            let s = &streams[which];
+            let o = offsets[which];
+            let end = (o + seg).min(s.len());
+            out.extend_from_slice(&s[o..end]);
+            offsets[which] = end;
+            which = (which + 1) % 3;
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+/// Write a `.tok` file (little-endian u16).
+pub fn write_tokens(path: &Path, tokens: &[u16]) -> io::Result<()> {
+    let mut buf = Vec::with_capacity(tokens.len() * 2);
+    for &t in tokens {
+        buf.extend_from_slice(&t.to_le_bytes());
+    }
+    std::fs::write(path, buf)
+}
+
+/// Read a `.tok` file.
+pub fn read_tokens(path: &Path) -> io::Result<Vec<u16>> {
+    let mut f = std::fs::File::open(path)?;
+    let mut data = Vec::new();
+    f.read_to_end(&mut data)?;
+    if data.len() % 2 != 0 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "odd byte count"));
+    }
+    Ok(data
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let c = Corpus::new(CorpusKind::Wiki);
+        assert_eq!(c.generate(100, 1), c.generate(100, 1));
+        assert_ne!(c.generate(100, 1), c.generate(100, 2));
+    }
+
+    #[test]
+    fn corpora_differ() {
+        let a = Corpus::new(CorpusKind::Wiki).generate(200, 0);
+        let b = Corpus::new(CorpusKind::Ptb).generate(200, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        for kind in CorpusKind::ALL {
+            let toks = Corpus::new(kind).generate(1000, 3);
+            assert!(toks.iter().all(|&t| (t as usize) < VOCAB_SIZE));
+        }
+    }
+
+    #[test]
+    fn unigram_is_zipfian() {
+        let toks = Corpus::new(CorpusKind::Wiki).generate(50_000, 0);
+        let mut counts = vec![0usize; VOCAB_SIZE];
+        for &t in &toks {
+            counts[t as usize] += 1;
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        // head token much more frequent than the median token
+        assert!(counts[0] > counts[VOCAB_SIZE / 2].max(1) * 10);
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // bigram entropy must be far below unigram entropy for wiki —
+        // otherwise there is nothing for the LM to learn.
+        let toks = Corpus::new(CorpusKind::Wiki).generate(200_000, 0);
+        let mut uni = vec![0f64; VOCAB_SIZE];
+        let mut big = std::collections::HashMap::<(u16, u16), f64>::new();
+        for w in toks.windows(2) {
+            uni[w[0] as usize] += 1.0;
+            *big.entry((w[0], w[1])).or_default() += 1.0;
+        }
+        let n = (toks.len() - 1) as f64;
+        let h_uni: f64 = uni
+            .iter()
+            .filter(|&&c| c > 0.0)
+            .map(|&c| -(c / n) * (c / n).log2())
+            .sum();
+        // conditional entropy H(next|cur)
+        let h_joint: f64 = big
+            .values()
+            .map(|&c| -(c / n) * (c / n).log2())
+            .sum();
+        let h_cond = h_joint - h_uni;
+        assert!(h_cond < h_uni * 0.75, "h_uni={h_uni:.2} h_cond={h_cond:.2}");
+    }
+
+    #[test]
+    fn ptb_entropy_higher_than_wiki() {
+        let entropy = |kind: CorpusKind| {
+            let toks = Corpus::new(kind).generate(100_000, 0);
+            let mut big = std::collections::HashMap::<(u16, u16), f64>::new();
+            let mut uni = std::collections::HashMap::<u16, f64>::new();
+            for w in toks.windows(2) {
+                *big.entry((w[0], w[1])).or_default() += 1.0;
+                *uni.entry(w[0]).or_default() += 1.0;
+            }
+            let n = (toks.len() - 1) as f64;
+            let h_joint: f64 = big.values().map(|&c| -(c / n) * (c / n).log2()).sum();
+            let h_uni: f64 = uni.values().map(|&c| -(c / n) * (c / n).log2()).sum();
+            h_joint - h_uni
+        };
+        assert!(entropy(CorpusKind::Ptb) > entropy(CorpusKind::Wiki));
+    }
+
+    #[test]
+    fn tok_file_roundtrip() {
+        let dir = std::env::temp_dir().join("zqfp_test_tok");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.tok");
+        let toks: Vec<u16> = (0..1000).map(|i| (i * 7 % 512) as u16).collect();
+        write_tokens(&path, &toks).unwrap();
+        assert_eq!(read_tokens(&path).unwrap(), toks);
+    }
+
+    #[test]
+    fn mixture_covers_all_corpora() {
+        let mix = Corpus::training_mixture(3000);
+        assert_eq!(mix.len(), 3000);
+        // segments from each corpus present: check first tokens of each
+        // 256-segment cycle differ in distribution (weak check: non-constant)
+        assert!(mix.iter().collect::<std::collections::HashSet<_>>().len() > 50);
+    }
+}

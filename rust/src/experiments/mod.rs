@@ -1,0 +1,239 @@
+//! Experiment harness — regenerates every table and figure of the paper
+//! (DESIGN.md §5 maps each to its module/command).
+//!
+//! `zqfp table --id 1|2|3|a1` and `zqfp figure --id 1|2` print the
+//! paper-shaped rows and write them under `results/`.
+
+mod figures;
+mod tables;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use crate::cli::Args;
+use crate::data::{read_tokens, CorpusKind};
+use crate::engine::EngineOpts;
+use crate::eval::PplResult;
+use crate::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
+use crate::rng::Rng;
+use crate::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
+
+pub fn run_table(args: &Args) -> Result<(), String> {
+    let id = args.get("id").ok_or("--id required (1|2|3|a1)")?;
+    let mut ctx = ExpContext::from_args(args)?;
+    args.finish()?;
+    let out = match id.as_str() {
+        "1" => tables::table1(&mut ctx)?,
+        "2" => tables::table2(&mut ctx)?,
+        "3" => tables::table3(&mut ctx)?,
+        "a1" | "A1" => tables::table_a1(&mut ctx)?,
+        other => return Err(format!("unknown table id {other}")),
+    };
+    println!("{out}");
+    let path = ctx.results.join(format!("table{id}.txt"));
+    std::fs::write(&path, &out).map_err(|e| e.to_string())?;
+    println!("[written to {}]", path.display());
+    Ok(())
+}
+
+pub fn run_figure(args: &Args) -> Result<(), String> {
+    let id = args.get("id").ok_or("--id required (1|2)")?;
+    let mut ctx = ExpContext::from_args(args)?;
+    args.finish()?;
+    let out = match id.as_str() {
+        "1" => figures::figure1(&mut ctx)?,
+        "2" => figures::figure2()?,
+        other => return Err(format!("unknown figure id {other}")),
+    };
+    println!("{out}");
+    let path = ctx.results.join(format!("figure{id}.txt"));
+    std::fs::write(&path, &out).map_err(|e| e.to_string())?;
+    println!("[written to {}]", path.display());
+    Ok(())
+}
+
+/// Which backend evaluates perplexity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RuntimeKind {
+    /// PJRT HLO artifacts (fast, the serving path).
+    Hlo,
+    /// The in-process Rust engine (slow, always available).
+    Engine,
+}
+
+/// Shared state for one experiment run: directories, eval streams,
+/// checkpoint cache, scorer cache.
+pub struct ExpContext {
+    pub data: PathBuf,
+    pub ckpt_dir: PathBuf,
+    pub artifacts: PathBuf,
+    pub results: PathBuf,
+    pub runtime: RuntimeKind,
+    pub fast: bool,
+    pub seq: usize,
+    pub calib_seqs: Vec<Vec<u16>>,
+    eval_streams: HashMap<&'static str, Vec<u16>>,
+    ckpt_cache: HashMap<String, Checkpoint>,
+    pub(crate) hessian_cache: HashMap<String, crate::pipeline::FinalizedHessians>,
+    client: Option<xla::PjRtClient>,
+    scorers: HashMap<String, HloScorer>,
+    pub eval_tokens: usize,
+}
+
+impl ExpContext {
+    pub fn from_args(args: &Args) -> Result<ExpContext, String> {
+        let data = PathBuf::from(args.get_or("data", "data"));
+        let ckpt_dir = PathBuf::from(args.get_or("ckpt-dir", "ckpt"));
+        let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+        let results = PathBuf::from(args.get_or("results", "results"));
+        let runtime = match args.get_or("runtime", "hlo").as_str() {
+            "hlo" => RuntimeKind::Hlo,
+            "engine" => RuntimeKind::Engine,
+            other => return Err(format!("bad --runtime {other}")),
+        };
+        let fast = args.flag("fast");
+        let seq = args.get_usize("seq", 128)?;
+        let eval_tokens = args.get_usize("eval-tokens", if fast { 4096 } else { 8192 })?;
+        let calib_n = args.get_usize("calib-seqs", if fast { 16 } else { 32 })?;
+        std::fs::create_dir_all(&results).map_err(|e| e.to_string())?;
+
+        let calib_all = read_tokens(&data.join("calib.tok"))
+            .map_err(|e| format!("calib.tok: {e} (run `zqfp gen-corpus`)"))?;
+        let calib_seqs: Vec<Vec<u16>> = calib_all
+            .chunks_exact(seq)
+            .take(calib_n)
+            .map(|c| c.to_vec())
+            .collect();
+
+        let mut eval_streams = HashMap::new();
+        for kind in CorpusKind::ALL {
+            let toks = read_tokens(&data.join(format!("eval_{}.tok", kind.name())))
+                .map_err(|e| format!("eval_{}.tok: {e}", kind.name()))?;
+            let n = toks.len().min(eval_tokens);
+            eval_streams.insert(kind.name(), toks[..n].to_vec());
+        }
+
+        Ok(ExpContext {
+            data,
+            ckpt_dir,
+            artifacts,
+            results,
+            runtime,
+            fast,
+            seq,
+            calib_seqs,
+            eval_streams,
+            ckpt_cache: HashMap::new(),
+            hessian_cache: HashMap::new(),
+            client: None,
+            scorers: HashMap::new(),
+            eval_tokens,
+        })
+    }
+
+    /// Load (and cache) a family checkpoint with its per-size outlier α
+    /// applied (DESIGN.md §4: α is the model-size surrogate).
+    pub fn load_model(&mut self, cfg: &ModelConfig, alpha: f32) -> Result<Checkpoint, String> {
+        let key = format!("{}@{alpha}", cfg.name);
+        if let Some(ck) = self.ckpt_cache.get(&key) {
+            return Ok(ck.clone());
+        }
+        let path = self.ckpt_dir.join(format!("{}.zqckpt", cfg.name));
+        let mut ck = Checkpoint::load(&path)
+            .map_err(|e| format!("{}: {e} (run `make ckpt`)", path.display()))?;
+        ck.config.name = cfg.name.clone();
+        if ck.config.d_model != cfg.d_model || ck.config.n_layers != cfg.n_layers {
+            return Err(format!("{}: config mismatch with family", path.display()));
+        }
+        if alpha != 1.0 {
+            let mut rng = Rng::seeded(0xA11CE);
+            inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
+        }
+        self.ckpt_cache.insert(key, ck.clone());
+        Ok(ck)
+    }
+
+    /// Perplexity of `ck` under `opts` on one corpus (via the configured
+    /// runtime; HLO falls back to the engine if the act format has no
+    /// artifact).
+    pub fn ppl(
+        &mut self,
+        ck: &Checkpoint,
+        opts: EngineOpts,
+        corpus: CorpusKind,
+    ) -> Result<f64, String> {
+        let toks = self.eval_streams.get(corpus.name()).unwrap().clone();
+        let seq = self.seq.min(ck.config.max_seq);
+        let r: PplResult = if self.runtime == RuntimeKind::Hlo && act_tag(&opts).is_some() {
+            self.hlo_ppl(ck, &opts, &toks, seq)?
+        } else {
+            crate::eval::perplexity(ck, opts, &toks, seq)
+        };
+        Ok(r.ppl())
+    }
+
+    fn hlo_ppl(
+        &mut self,
+        ck: &Checkpoint,
+        opts: &EngineOpts,
+        toks: &[u16],
+        seq: usize,
+    ) -> Result<PplResult, String> {
+        if seq != ck.config.max_seq {
+            return Err(format!("hlo runtime requires seq == max_seq ({seq})"));
+        }
+        let name = score_artifact_name(&ck.config, act_tag(opts).unwrap());
+        if !self.scorers.contains_key(&name) {
+            let client = match &self.client {
+                Some(c) => c.clone(),
+                None => {
+                    let c = crate::runtime::cpu_client().map_err(|e| e.to_string())?;
+                    self.client = Some(c.clone());
+                    c
+                }
+            };
+            let path = self.artifacts.join(&name);
+            let scorer =
+                HloScorer::load_with_client(client, &path, SCORE_BATCH, ck.config.max_seq)
+                    .map_err(|e| format!("{e:#}"))?;
+            self.scorers.insert(name.clone(), scorer);
+        }
+        let scorer = self.scorers.get(&name).unwrap();
+        let weights = scorer.upload_weights(ck).map_err(|e| format!("{e:#}"))?;
+        scorer.ppl_with(&weights, toks).map_err(|e| format!("{e:#}"))
+    }
+
+    /// Mean + per-corpus PPL, formatted the paper's way
+    /// (`Mean  WIKI/PTB/C4`).
+    pub fn ppl_row(&mut self, ck: &Checkpoint, opts: EngineOpts) -> Result<PplRow, String> {
+        let mut per = Vec::new();
+        for kind in CorpusKind::ALL {
+            per.push(self.ppl(ck, opts, kind)?);
+        }
+        Ok(PplRow { wiki: per[0], ptb: per[1], c4: per[2] })
+    }
+}
+
+/// One table cell: mean + per-dataset breakdown.
+#[derive(Debug, Clone, Copy)]
+pub struct PplRow {
+    pub wiki: f64,
+    pub ptb: f64,
+    pub c4: f64,
+}
+
+impl PplRow {
+    pub fn mean(&self) -> f64 {
+        (self.wiki + self.ptb + self.c4) / 3.0
+    }
+
+    pub fn fmt(&self) -> String {
+        format!(
+            "{:>7.2} {:>6.2}/{:>6.2}/{:>6.2}",
+            self.mean(),
+            self.wiki,
+            self.ptb,
+            self.c4
+        )
+    }
+}

@@ -1,0 +1,409 @@
+//! Generic `ExMy` low-bit floating-point codec.
+//!
+//! ZeroQuant-FP quantizes to floating-point *values* rather than integer
+//! levels. A format `ExMy` allocates `x` exponent bits and `y` mantissa bits
+//! (plus one sign bit). This module implements the codec the paper actually
+//! used: **qtorch semantics** (footnote 3) — IEEE-style subnormals,
+//! round-to-nearest-even, *no* reserved NaN/Inf encodings, saturate to the
+//! largest finite value — plus the NVIDIA H100 `E4M3` variant that reserves
+//! the all-ones mantissa pattern at the top exponent for NaN (max 448
+//! instead of 480).
+//!
+//! All arithmetic goes through `f64` intermediates; every scaling step is by
+//! a power of two, so the rounding decision (`round_ties_even`) is exact and
+//! the codec is bit-reproducible. `python/compile/kernels/fpq.py` mirrors
+//! this algorithm in jnp and is held bit-equal by cross-layer tests.
+
+/// A low-bit floating-point format description (sign + exponent + mantissa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FpFormat {
+    /// Number of exponent bits (`x` in `ExMy`). Must be >= 1.
+    pub exp_bits: u32,
+    /// Number of mantissa bits (`y` in `ExMy`). May be 0 (e.g. E3M0).
+    pub man_bits: u32,
+    /// Exponent bias. IEEE-style default is `2^(x-1) - 1`.
+    pub bias: i32,
+    /// If true, the all-ones-exponent/all-ones-mantissa code is reserved for
+    /// NaN (NVIDIA E4M3 convention), shrinking the max finite value.
+    pub nan_reserved: bool,
+    /// If true, the whole top exponent field is reserved for Inf/NaN (IEEE
+    /// convention, used by E5M2/F16/BF16), shrinking the max finite value
+    /// by one binade.
+    pub inf_reserved: bool,
+}
+
+impl FpFormat {
+    /// Construct an IEEE-biased format: bias = 2^(x-1) - 1, no reserved
+    /// codes (the qtorch / OCP-MX convention for the narrow formats).
+    pub const fn new(exp_bits: u32, man_bits: u32) -> Self {
+        FpFormat {
+            exp_bits,
+            man_bits,
+            bias: (1 << (exp_bits - 1)) - 1,
+            nan_reserved: false,
+            inf_reserved: false,
+        }
+    }
+
+    /// Same but with the IEEE top-exponent Inf/NaN reservation.
+    pub const fn new_ieee(exp_bits: u32, man_bits: u32) -> Self {
+        FpFormat {
+            exp_bits,
+            man_bits,
+            bias: (1 << (exp_bits - 1)) - 1,
+            nan_reserved: false,
+            inf_reserved: true,
+        }
+    }
+
+    /// FP8 E4M3, qtorch semantics (max finite 480). The paper's default FP8
+    /// weight/activation format (Section 4: E4M3 outperforms E5M2).
+    pub const E4M3: FpFormat = FpFormat::new(4, 3);
+    /// FP8 E5M2, IEEE/OCP semantics (max finite 57344; exponent 31 is
+    /// Inf/NaN). Used as the cast target when converting FP4 weights to FP8
+    /// (footnote 4).
+    pub const E5M2: FpFormat = FpFormat::new_ieee(5, 2);
+    /// FP4 E2M1 (values 0, .5, 1, 1.5, 2, 3, 4, 6). The paper's best FP4.
+    pub const E2M1: FpFormat = FpFormat::new(2, 1);
+    /// FP4 E3M0 (pure powers of two, 0.25 .. 16). Table A.1 baseline.
+    pub const E3M0: FpFormat = FpFormat::new(3, 0);
+    /// NVIDIA H100 E4M3 (max finite 448; all-ones code is NaN).
+    pub const E4M3_NV: FpFormat = FpFormat {
+        exp_bits: 4,
+        man_bits: 3,
+        bias: 7,
+        nan_reserved: true,
+        inf_reserved: false,
+    };
+    /// FP16 (IEEE binary16), used for LoRC factor storage experiments.
+    pub const F16: FpFormat = FpFormat::new_ieee(5, 10);
+    /// BF16 (truncation of f32), the MXU-native activation dtype on TPU.
+    pub const BF16: FpFormat = FpFormat::new_ieee(8, 7);
+
+    /// Total number of code bits, including sign.
+    pub fn total_bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    /// Number of distinct codes (2^bits).
+    pub fn code_count(&self) -> usize {
+        1usize << self.total_bits()
+    }
+
+    /// Largest biased exponent field value that encodes a finite number.
+    fn max_exp_field(&self) -> i32 {
+        let all_ones = (1i32 << self.exp_bits) - 1;
+        if self.inf_reserved {
+            all_ones - 1
+        } else {
+            all_ones
+        }
+    }
+
+    /// Largest finite representable magnitude.
+    pub fn max_finite(&self) -> f64 {
+        let e = self.max_exp_field() - self.bias;
+        let man_max = if self.nan_reserved && self.man_bits > 0 {
+            // top mantissa pattern at top exponent is NaN -> one step below.
+            (2.0 - 2.0 * half_ulp(self.man_bits)) - half_ulp(self.man_bits) * 2.0
+        } else {
+            2.0 - 2.0 * half_ulp(self.man_bits)
+        };
+        man_max * pow2(e)
+    }
+
+    /// Smallest positive normal magnitude: 2^(1 - bias).
+    pub fn min_normal(&self) -> f64 {
+        pow2(1 - self.bias)
+    }
+
+    /// Smallest positive subnormal magnitude: 2^(1 - bias - man_bits).
+    pub fn min_subnormal(&self) -> f64 {
+        pow2(1 - self.bias - self.man_bits as i32)
+    }
+
+    /// Quantize `x` to the nearest representable value of this format
+    /// (round-to-nearest-even, saturating). This is the "fake quant" the
+    /// whole paper is built on: the returned value is exactly representable
+    /// in the format but carried in f32.
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return f32::NAN;
+        }
+        let a = x.abs() as f64;
+        if a == 0.0 {
+            // preserve signed zero (harmless either way)
+            return 0.0 * x.signum();
+        }
+        let sign = if x < 0.0 { -1.0f64 } else { 1.0f64 };
+        let max = self.max_finite();
+        // Saturating quantization: values past the midpoint between max and
+        // the (nonexistent) next step clamp to max. qtorch saturates, and
+        // absmax scaling means in-range inputs anyway.
+        let q = if a >= max {
+            max
+        } else if a < self.min_normal() {
+            // Subnormal range: fixed quantum.
+            let quantum = self.min_subnormal();
+            (a / quantum).round_ties_even() * quantum
+        } else {
+            // Normal range: quantum = 2^(floor(log2 a) - man_bits).
+            let e = exponent_floor(a);
+            let quantum = pow2(e - self.man_bits as i32);
+            let r = (a / quantum).round_ties_even() * quantum;
+            // Rounding up may cross into the next binade (e.g. 1.96 -> 2.0);
+            // that result is still exactly representable, but it can also
+            // exceed max_finite at the top binade -> saturate.
+            if r > max {
+                max
+            } else {
+                r
+            }
+        };
+        (sign * q) as f32
+    }
+
+    /// Encode `x` to its code (sign | exponent | mantissa) in the low bits
+    /// of a `u16`. The value encoded is `self.quantize(x)`.
+    pub fn encode(&self, x: f32) -> u16 {
+        let q = self.quantize(x);
+        let sign_bit = if q.is_sign_negative() { 1u16 } else { 0u16 };
+        let a = q.abs() as f64;
+        let (exp_field, man_field) = if a == 0.0 {
+            (0i32, 0u16)
+        } else if a < self.min_normal() {
+            // subnormal: exponent field 0, mantissa counts quanta
+            let m = (a / self.min_subnormal()).round() as u16;
+            (0i32, m)
+        } else {
+            let e = exponent_floor(a);
+            let frac = a / pow2(e); // in [1, 2)
+            let m = ((frac - 1.0) * pow2(self.man_bits as i32)).round() as u16;
+            (e + self.bias, m)
+        };
+        debug_assert!(exp_field >= 0 && exp_field <= self.max_exp_field());
+        (sign_bit << (self.exp_bits + self.man_bits))
+            | ((exp_field as u16) << self.man_bits)
+            | man_field
+    }
+
+    /// Decode a code produced by [`encode`](Self::encode) back to f32.
+    pub fn decode(&self, code: u16) -> f32 {
+        let man_mask = (1u16 << self.man_bits) - 1;
+        let exp_mask = (1u16 << self.exp_bits) - 1;
+        let m = (code & man_mask) as f64;
+        let e_field = ((code >> self.man_bits) & exp_mask) as i32;
+        let sign = if (code >> (self.exp_bits + self.man_bits)) & 1 == 1 {
+            -1.0f64
+        } else {
+            1.0f64
+        };
+        if self.inf_reserved && e_field == (1i32 << self.exp_bits) - 1 {
+            return if m == 0.0 {
+                (sign as f32) * f32::INFINITY
+            } else {
+                f32::NAN
+            };
+        }
+        let mag = if e_field == 0 {
+            m * self.min_subnormal()
+        } else {
+            (1.0 + m * half_ulp(self.man_bits) * 2.0) * pow2(e_field - self.bias)
+        };
+        (sign * mag) as f32
+    }
+
+    /// Enumerate every non-negative representable value, ascending.
+    /// Useful for tests and for building LUT-based quantizers.
+    pub fn positive_values(&self) -> Vec<f32> {
+        let mut v = Vec::new();
+        let half = 1u16 << (self.exp_bits + self.man_bits);
+        for code in 0..half {
+            let x = self.decode(code);
+            if !x.is_finite() || (x as f64) > self.max_finite() {
+                continue;
+            }
+            v.push(x);
+        }
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.dedup();
+        v
+    }
+
+    /// Human-readable name like "E4M3".
+    pub fn name(&self) -> String {
+        let base = format!("E{}M{}", self.exp_bits, self.man_bits);
+        if self.nan_reserved {
+            format!("{base}nv")
+        } else {
+            base
+        }
+    }
+}
+
+/// 2^e as f64 (exact for the exponent ranges used here).
+#[inline]
+pub fn pow2(e: i32) -> f64 {
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// floor(log2(a)) for finite positive `a`, via the f64 bit pattern.
+/// Exact, unlike `a.log2().floor()` which can misplace binade boundaries.
+#[inline]
+pub fn exponent_floor(a: f64) -> i32 {
+    debug_assert!(a > 0.0 && a.is_finite());
+    let bits = a.to_bits();
+    let e = ((bits >> 52) & 0x7ff) as i32;
+    if e == 0 {
+        // f64 subnormal — far below any ExMy min_subnormal we use, but keep
+        // it correct: normalize via log2.
+        a.log2().floor() as i32
+    } else {
+        e - 1023
+    }
+}
+
+/// Half-ULP of a 1.m mantissa with `m` bits: 2^-(m+1) ... helper returns
+/// 2^-(m+1) * 2 = 2^-m / 2. We expose 2^-(m+1) as "half ulp at 1.0".
+#[inline]
+fn half_ulp(man_bits: u32) -> f64 {
+    pow2(-(man_bits as i32) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e2m1_value_set() {
+        // The canonical FP4 E2M1 set from the paper / OCP MX spec.
+        let vals = FpFormat::E2M1.positive_values();
+        assert_eq!(vals, vec![0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn e3m0_value_set() {
+        let vals = FpFormat::E3M0.positive_values();
+        assert_eq!(vals, vec![0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0]);
+    }
+
+    #[test]
+    fn e4m3_extremes() {
+        let f = FpFormat::E4M3;
+        assert_eq!(f.max_finite(), 480.0); // qtorch semantics
+        assert_eq!(f.min_normal(), pow2(-6));
+        assert_eq!(f.min_subnormal(), pow2(-9));
+        assert_eq!(f.quantize(1e6), 480.0);
+        assert_eq!(f.quantize(-1e6), -480.0);
+    }
+
+    #[test]
+    fn e4m3_nv_max_is_448() {
+        assert_eq!(FpFormat::E4M3_NV.max_finite(), 448.0);
+        assert_eq!(FpFormat::E4M3_NV.quantize(1e3), 448.0);
+    }
+
+    #[test]
+    fn e5m2_extremes() {
+        let f = FpFormat::E5M2;
+        assert_eq!(f.max_finite(), 57344.0);
+        assert_eq!(f.min_subnormal(), pow2(-16));
+    }
+
+    #[test]
+    fn round_ties_even_at_midpoints() {
+        let f = FpFormat::E2M1;
+        // midpoint between 1.0 and 1.5 is 1.25 -> ties to even mantissa (1.0)
+        assert_eq!(f.quantize(1.25), 1.0);
+        // midpoint between 1.5 and 2.0 is 1.75 -> 2.0 (mantissa even after carry)
+        assert_eq!(f.quantize(1.75), 2.0);
+        // midpoint between 2 and 3 is 2.5 -> 2 (even)
+        assert_eq!(f.quantize(2.5), 2.0);
+        // midpoint between 3 and 4 is 3.5 -> 4
+        assert_eq!(f.quantize(3.5), 4.0);
+        // above max midpoint saturates
+        assert_eq!(f.quantize(5.0), 4.0); // 5.0 is midpoint 4..6 -> ties-even -> 4
+        assert_eq!(f.quantize(5.1), 6.0);
+        assert_eq!(f.quantize(100.0), 6.0);
+    }
+
+    #[test]
+    fn subnormal_rounding() {
+        let f = FpFormat::E4M3; // min_subnormal = 2^-9
+        let s = pow2(-9) as f32;
+        assert_eq!(f.quantize(s * 0.49), 0.0);
+        assert_eq!(f.quantize(s * 0.5), 0.0); // tie to even (0)
+        assert_eq!(f.quantize(s * 0.51), s);
+        assert_eq!(f.quantize(s * 1.5), 2.0 * s); // tie to even (2)
+        assert_eq!(f.quantize(s * 2.5), 2.0 * s); // tie to even (2)
+    }
+
+    #[test]
+    fn quantize_is_idempotent_on_all_codes() {
+        for fmt in [
+            FpFormat::E4M3,
+            FpFormat::E5M2,
+            FpFormat::E2M1,
+            FpFormat::E3M0,
+            FpFormat::F16,
+        ] {
+            for v in fmt.positive_values() {
+                assert_eq!(fmt.quantize(v), v, "{} value {v}", fmt.name());
+                assert_eq!(fmt.quantize(-v), -v, "{} value -{v}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_codes() {
+        for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+            for code in 0..fmt.code_count() as u16 {
+                let v = fmt.decode(code);
+                if !v.is_finite() || (v as f64) > fmt.max_finite() {
+                    continue;
+                }
+                let code2 = fmt.encode(v);
+                let v2 = fmt.decode(code2);
+                assert_eq!(v, v2, "{} code {code}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_picks_nearest_value() {
+        // brute-force nearest-value check against the enumerated set
+        let mut rng = crate::rng::Rng::seeded(7);
+        for fmt in [FpFormat::E4M3, FpFormat::E2M1, FpFormat::E3M0, FpFormat::E5M2] {
+            let vals = fmt.positive_values();
+            for _ in 0..2000 {
+                let x = (rng.normal_f32()) * fmt.max_finite() as f32 * 0.4;
+                let q = fmt.quantize(x);
+                let a = x.abs();
+                let best = vals
+                    .iter()
+                    .cloned()
+                    .min_by(|u, v| {
+                        (u - a)
+                            .abs()
+                            .partial_cmp(&(v - a).abs())
+                            .unwrap()
+                            .then(u.partial_cmp(v).unwrap())
+                    })
+                    .unwrap();
+                assert!(
+                    (q.abs() - best).abs() <= f32::EPSILON * best.max(1.0),
+                    "{}: x={x} q={q} best={best}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_matches_truncation_semantics() {
+        let f = FpFormat::BF16;
+        // 1 + 2^-8 is exactly halfway between bf16 neighbours 1.0 and 1+2^-7.
+        assert_eq!(f.quantize(1.0 + pow2(-8) as f32), 1.0);
+        assert_eq!(f.quantize(1.0 + pow2(-7) as f32), 1.0 + pow2(-7) as f32);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integer (uniform) quantization codecs: the INT8/INT4 baselines.
+//!
+//! Implements equation (1) of the paper: `Q(x) = INT((x - Z)/S) - Z` with
+//! symmetric (`Z = 0`) and asymmetric (`Z != 0`) variants, restricted
+//! symmetric range (`[-2^(b-1)+1, 2^(b-1)-1]`, i.e. ±127 for INT8 — the
+//! convention used by ZeroQuant / FasterTransformer so that `-S*qmax` and
+//! `+S*qmax` are symmetric), and round-to-nearest-even.
+
+/// An integer quantization format: bit-width + symmetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntFormat {
+    /// Total bits including sign (8 for INT8, 4 for INT4).
+    pub bits: u32,
+    /// Symmetric (zero-point = 0, restricted range) or asymmetric
+    /// (min/max affine mapping over the full 2^bits range).
+    pub symmetric: bool,
+}
+
+impl IntFormat {
+    pub const INT8_SYM: IntFormat = IntFormat { bits: 8, symmetric: true };
+    pub const INT8_ASYM: IntFormat = IntFormat { bits: 8, symmetric: false };
+    pub const INT4_SYM: IntFormat = IntFormat { bits: 4, symmetric: true };
+    pub const INT4_ASYM: IntFormat = IntFormat { bits: 4, symmetric: false };
+
+    /// Largest positive level in symmetric mode (127 for INT8, 7 for INT4).
+    pub fn qmax(&self) -> i32 {
+        (1i32 << (self.bits - 1)) - 1
+    }
+
+    /// Number of levels spanned in asymmetric mode (255 for INT8).
+    pub fn levels(&self) -> i32 {
+        (1i32 << self.bits) - 1
+    }
+
+    pub fn name(&self) -> String {
+        format!(
+            "INT{}{}",
+            self.bits,
+            if self.symmetric { "" } else { "a" }
+        )
+    }
+}
+
+/// Affine quantization parameters for one group of values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IntQParams {
+    /// Real-valued scale S.
+    pub scale: f32,
+    /// Integer zero point Z (0 in symmetric mode).
+    pub zero_point: i32,
+}
+
+impl IntFormat {
+    /// Compute quantization parameters from the observed `(min, max)` of a
+    /// group. Symmetric mode uses absmax; asymmetric stretches the affine
+    /// grid over `[min, max]` (with the grid forced to contain 0 so that
+    /// padding/zeros stay exact, as in standard INT8 practice).
+    pub fn params(&self, min: f32, max: f32) -> IntQParams {
+        if self.symmetric {
+            let absmax = min.abs().max(max.abs());
+            let scale = if absmax > 0.0 {
+                absmax / self.qmax() as f32
+            } else {
+                1.0
+            };
+            IntQParams { scale, zero_point: 0 }
+        } else {
+            let lo = min.min(0.0);
+            let hi = max.max(0.0);
+            let range = (hi - lo).max(f32::MIN_POSITIVE);
+            let scale = range / self.levels() as f32;
+            // zero_point chosen so that level 0 maps to `lo`:
+            //   x ≈ S * (q - z_off) with q in [0, levels], z_off = -lo/S
+            let zero_point = (-lo / scale).round_ties_even() as i32;
+            IntQParams { scale, zero_point }
+        }
+    }
+
+    /// Quantize to an integer level (the stored code). f32 division + f32
+    /// round-to-nearest-even, bit-identical to the jnp mirror.
+    pub fn encode(&self, x: f32, p: IntQParams) -> i32 {
+        if self.symmetric {
+            let q = (x / p.scale).round_ties_even() as i32;
+            q.clamp(-self.qmax(), self.qmax())
+        } else {
+            let q = (x / p.scale).round_ties_even() as i32 + p.zero_point;
+            q.clamp(0, self.levels())
+        }
+    }
+
+    /// Decode an integer level back to f32.
+    pub fn decode(&self, q: i32, p: IntQParams) -> f32 {
+        if self.symmetric {
+            q as f32 * p.scale
+        } else {
+            (q - p.zero_point) as f32 * p.scale
+        }
+    }
+
+    /// Fake-quantize: `decode(encode(x))`.
+    pub fn quantize(&self, x: f32, p: IntQParams) -> f32 {
+        self.decode(self.encode(x, p), p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int8_sym_basics() {
+        let f = IntFormat::INT8_SYM;
+        let p = f.params(-2.0, 1.0);
+        assert_eq!(p.zero_point, 0);
+        assert!((p.scale - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(f.encode(2.0, p), 127);
+        assert_eq!(f.encode(-2.0, p), -127);
+        assert_eq!(f.encode(0.0, p), 0);
+        assert_eq!(f.quantize(0.0, p), 0.0);
+    }
+
+    #[test]
+    fn int8_asym_covers_range() {
+        let f = IntFormat::INT8_ASYM;
+        let p = f.params(-1.0, 3.0);
+        // endpoints map near the code extremes
+        assert_eq!(f.encode(-1.0, p), 0);
+        assert_eq!(f.encode(3.0, p), 255);
+        // zero stays near-exact
+        assert!(f.quantize(0.0, p).abs() <= p.scale * 0.5 + 1e-7);
+    }
+
+    #[test]
+    fn int4_sym_levels() {
+        let f = IntFormat::INT4_SYM;
+        assert_eq!(f.qmax(), 7);
+        let p = f.params(-7.0, 7.0);
+        assert!((p.scale - 1.0).abs() < 1e-7);
+        for q in -7..=7 {
+            assert_eq!(f.encode(q as f32, p), q);
+        }
+    }
+
+    #[test]
+    fn outlier_skew_matches_paper_figure2() {
+        // Figure 2's story: with one outlier at 100, INT8-asym represents the
+        // outlier well but the clustered small values coarsely.
+        let f = IntFormat::INT8_ASYM;
+        let p = f.params(-0.5, 100.0);
+        // quantum is ~0.39 — much larger than the cluster spread
+        assert!(p.scale > 0.3);
+        let err = (f.quantize(0.05, p) - 0.05).abs();
+        assert!(err > 0.01, "cluster error should be visible: {err}");
+        // while FP8 E4M3 with absmax scale represents 0.05 well
+        let fp = crate::formats::FpFormat::E4M3;
+        let s = 100.0 / fp.max_finite() as f32;
+        let fp_err = (fp.quantize(0.05 / s) * s - 0.05).abs();
+        assert!(fp_err < err / 4.0, "fp_err={fp_err} int_err={err}");
+    }
+
+    #[test]
+    fn zero_range_is_safe() {
+        for f in [IntFormat::INT8_SYM, IntFormat::INT8_ASYM, IntFormat::INT4_SYM] {
+            let p = f.params(0.0, 0.0);
+            assert!(p.scale > 0.0);
+            assert_eq!(f.quantize(0.0, p), 0.0);
+        }
+    }
+
+    #[test]
+    fn rne_on_encode() {
+        let f = IntFormat::INT8_SYM;
+        let p = IntQParams { scale: 1.0, zero_point: 0 };
+        assert_eq!(f.encode(0.5, p), 0); // tie to even
+        assert_eq!(f.encode(1.5, p), 2);
+        assert_eq!(f.encode(2.5, p), 2);
+        assert_eq!(f.encode(-0.5, p), 0);
+        assert_eq!(f.encode(-1.5, p), -2);
+    }
+}

@@ -1,0 +1,232 @@
+//! Numeric format substrate: software codecs for every low-bit format the
+//! paper evaluates (FP8 E4M3/E5M2, FP4 E2M1/E3M0, INT8/INT4 sym/asym), plus
+//! a unified [`NumericFormat`] used by the quantization stack.
+//!
+//! Everything here is *bit-exact and deterministic*: round-to-nearest-even
+//! through f64 intermediates (power-of-two scaling only, so rounding is
+//! exact), mirrored 1:1 by `python/compile/kernels/fpq.py` on the JAX side.
+
+mod exmy;
+mod int;
+
+pub use exmy::{exponent_floor, pow2, FpFormat};
+pub use int::{IntFormat, IntQParams};
+
+/// Any scalar format the quantizer can target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NumericFormat {
+    /// Full-precision passthrough (the W16/A16 baseline; we simulate FP16
+    /// models in f32 like the reference GPTQ code does on the GPU).
+    F16,
+    /// A floating-point ExMy format with absmax scaling.
+    Fp(FpFormat),
+    /// An integer format with absmax (sym) or min/max (asym) scaling.
+    Int(IntFormat),
+}
+
+impl NumericFormat {
+    pub const FP8_E4M3: NumericFormat = NumericFormat::Fp(FpFormat::E4M3);
+    pub const FP8_E5M2: NumericFormat = NumericFormat::Fp(FpFormat::E5M2);
+    pub const FP4_E2M1: NumericFormat = NumericFormat::Fp(FpFormat::E2M1);
+    pub const FP4_E3M0: NumericFormat = NumericFormat::Fp(FpFormat::E3M0);
+    pub const INT8: NumericFormat = NumericFormat::Int(IntFormat::INT8_SYM);
+    pub const INT8_ASYM: NumericFormat = NumericFormat::Int(IntFormat::INT8_ASYM);
+    pub const INT4: NumericFormat = NumericFormat::Int(IntFormat::INT4_SYM);
+    pub const INT4_ASYM: NumericFormat = NumericFormat::Int(IntFormat::INT4_ASYM);
+
+    /// Bit width of stored codes (16 for the F16 passthrough).
+    pub fn bits(&self) -> u32 {
+        match self {
+            NumericFormat::F16 => 16,
+            NumericFormat::Fp(f) => f.total_bits(),
+            NumericFormat::Int(i) => i.bits,
+        }
+    }
+
+    pub fn is_fp(&self) -> bool {
+        matches!(self, NumericFormat::Fp(_))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            NumericFormat::F16 => "F16".to_string(),
+            NumericFormat::Fp(f) => format!("FP{}-{}", f.total_bits(), f.name()),
+            NumericFormat::Int(i) => i.name(),
+        }
+    }
+
+    /// Parse names like "fp8_e4m3", "e5m2", "int8", "int4a", "f16".
+    pub fn parse(s: &str) -> Option<NumericFormat> {
+        let t = s.to_ascii_lowercase().replace(['-', '_'], "");
+        Some(match t.as_str() {
+            "f16" | "fp16" | "none" | "w16" | "a16" => NumericFormat::F16,
+            "fp8" | "e4m3" | "fp8e4m3" => NumericFormat::FP8_E4M3,
+            "e5m2" | "fp8e5m2" => NumericFormat::FP8_E5M2,
+            "fp4" | "e2m1" | "fp4e2m1" => NumericFormat::FP4_E2M1,
+            "e3m0" | "fp4e3m0" => NumericFormat::FP4_E3M0,
+            "e4m3nv" | "fp8nv" => NumericFormat::Fp(FpFormat::E4M3_NV),
+            "int8" => NumericFormat::INT8,
+            "int8a" | "int8asym" => NumericFormat::INT8_ASYM,
+            "int4" => NumericFormat::INT4,
+            "int4a" | "int4asym" => NumericFormat::INT4_ASYM,
+            _ => return None,
+        })
+    }
+}
+
+/// Scale+zero-point bundle covering both families, attached to a quant group.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GroupParams {
+    /// Multiplicative scale (for FP: input is divided by `scale` before the
+    /// codec so that absmax maps to max_finite; for INT: the affine scale S).
+    pub scale: f32,
+    /// Zero point (INT asymmetric only; 0 otherwise).
+    pub zero_point: i32,
+}
+
+impl GroupParams {
+    pub const IDENTITY: GroupParams = GroupParams { scale: 1.0, zero_point: 0 };
+}
+
+impl NumericFormat {
+    /// Compute group parameters from observed min/max of the group.
+    pub fn group_params(&self, min: f32, max: f32) -> GroupParams {
+        match self {
+            NumericFormat::F16 => GroupParams::IDENTITY,
+            NumericFormat::Fp(f) => {
+                let absmax = min.abs().max(max.abs());
+                let scale = if absmax > 0.0 {
+                    absmax / f.max_finite() as f32
+                } else {
+                    1.0
+                };
+                GroupParams { scale, zero_point: 0 }
+            }
+            NumericFormat::Int(i) => {
+                let p = i.params(min, max);
+                GroupParams { scale: p.scale, zero_point: p.zero_point }
+            }
+        }
+    }
+
+    /// Fake-quantize one value under `p`.
+    #[inline]
+    pub fn fake_quant(&self, x: f32, p: GroupParams) -> f32 {
+        match self {
+            NumericFormat::F16 => x,
+            NumericFormat::Fp(f) => f.quantize(x / p.scale) * p.scale,
+            NumericFormat::Int(i) => i.quantize(
+                x,
+                IntQParams { scale: p.scale, zero_point: p.zero_point },
+            ),
+        }
+    }
+
+    /// Fake-quantize a slice in place under a single group's params.
+    pub fn fake_quant_slice(&self, xs: &mut [f32], p: GroupParams) {
+        match self {
+            NumericFormat::F16 => {}
+            NumericFormat::Fp(f) => {
+                // f32 division (not reciprocal-multiply): bit-identical to
+                // the jnp mirror in python/compile/kernels/fpq.py.
+                for x in xs.iter_mut() {
+                    *x = f.quantize(*x / p.scale) * p.scale;
+                }
+            }
+            NumericFormat::Int(i) => {
+                let ip = IntQParams { scale: p.scale, zero_point: p.zero_point };
+                for x in xs.iter_mut() {
+                    *x = i.quantize(*x, ip);
+                }
+            }
+        }
+    }
+
+    /// Absmax-style one-shot fake quantization of a slice: compute params
+    /// from the slice itself, then quantize. Returns the params used.
+    pub fn fake_quant_slice_dynamic(&self, xs: &mut [f32]) -> GroupParams {
+        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &x in xs.iter() {
+            mn = mn.min(x);
+            mx = mx.max(x);
+        }
+        if !mn.is_finite() || !mx.is_finite() {
+            return GroupParams::IDENTITY;
+        }
+        let p = self.group_params(mn, mx);
+        self.fake_quant_slice(xs, p);
+        p
+    }
+
+    /// Quantization MSE of a slice under dynamic absmax params — the metric
+    /// Figure 2 visualizes and the LoRC/GPTQ objective decomposes over.
+    pub fn quant_mse(&self, xs: &[f32]) -> f64 {
+        let mut ys = xs.to_vec();
+        self.fake_quant_slice_dynamic(&mut ys);
+        xs.iter()
+            .zip(&ys)
+            .map(|(a, b)| {
+                let d = (*a - *b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / xs.len().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in ["fp8_e4m3", "e5m2", "fp4", "e3m0", "int8", "int4", "int8a", "f16"] {
+            assert!(NumericFormat::parse(s).is_some(), "{s}");
+        }
+        assert!(NumericFormat::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn fp8_beats_int8_on_skewed_data() {
+        // The paper's core observation, as a unit test: with an outlier,
+        // FP8 E4M3 absmax quantization has lower MSE on the cluster than
+        // INT8 symmetric absmax.
+        let mut data: Vec<f32> = (0..64).map(|i| (i as f32 - 32.0) * 0.01).collect();
+        data.push(100.0);
+        let fp = NumericFormat::FP8_E4M3.quant_mse(&data);
+        let int = NumericFormat::INT8.quant_mse(&data);
+        assert!(fp < int, "fp={fp} int={int}");
+    }
+
+    #[test]
+    fn int8_beats_fp8_on_uniform_data() {
+        // And the flip side (van Baalen et al.): on uniformly-spread data
+        // without outliers, INT8's equal spacing wins.
+        let data: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) / 128.0).collect();
+        let fp = NumericFormat::FP8_E4M3.quant_mse(&data);
+        let int = NumericFormat::INT8.quant_mse(&data);
+        assert!(int < fp, "fp={fp} int={int}");
+    }
+
+    #[test]
+    fn dynamic_quant_preserves_absmax_sign() {
+        let mut xs = vec![-3.0f32, 0.1, 2.0];
+        NumericFormat::FP8_E4M3.fake_quant_slice_dynamic(&mut xs);
+        assert_eq!(xs[0], -3.0); // absmax maps exactly to a representable point
+    }
+
+    #[test]
+    fn f16_passthrough() {
+        let mut xs = vec![1.2345f32, -9.87];
+        let orig = xs.clone();
+        NumericFormat::F16.fake_quant_slice_dynamic(&mut xs);
+        assert_eq!(xs, orig);
+    }
+
+    #[test]
+    fn fp4_group_scale_maps_absmax_to_six() {
+        let p = NumericFormat::FP4_E2M1.group_params(-12.0, 3.0);
+        assert!((p.scale - 2.0).abs() < 1e-6); // 12/6
+        assert_eq!(NumericFormat::FP4_E2M1.fake_quant(-12.0, p), -12.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! # zeroquant-fp
+//!
+//! A from-scratch reproduction of **ZeroQuant-FP** (Wu, Yao & He, 2023):
+//! post-training W4A8 quantization of transformer LMs using floating-point
+//! formats (FP8/FP4) — GPTQ weight optimization, fine-grained group-wise
+//! (FGQ) weight quantization, token-wise activation quantization, LoRC
+//! low-rank compensation, and power-of-2 scale constraints (M1/M2) for the
+//! FP4→FP8 bit-shift cast.
+//!
+//! Architecture (see DESIGN.md): a Rust coordinator/PTQ-pipeline (this
+//! crate) drives AOT-compiled JAX/Pallas computations through PJRT; Python
+//! exists only at build time.
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod experiments;
+pub mod formats;
+pub mod gptq;
+pub mod linalg;
+pub mod lorc;
+pub mod model;
+pub mod pipeline;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;

@@ -1,0 +1,366 @@
+//! Dense linear algebra substrate (no LAPACK offline): Cholesky, triangular
+//! ops, symmetric inverse, and a one-sided Jacobi SVD.
+//!
+//! Consumers:
+//! * `gptq` — damped Cholesky factorization/inversion of the Hessian
+//!   `H = 2·X·Xᵀ + λI` (f64 accumulation for stability at in-dims ≤ 1024).
+//! * `lorc` — truncated SVD of the quantization error matrix.
+
+use crate::tensor::Matrix;
+
+/// Errors from numerical routines.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LinalgError {
+    /// Matrix was not positive-definite even after damping.
+    NotPositiveDefinite { pivot: usize, value: f64 },
+    /// Iterative routine failed to converge.
+    NoConvergence { iters: usize },
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NotPositiveDefinite { pivot, value } => {
+                write!(f, "matrix not positive definite (pivot {pivot} = {value})")
+            }
+            LinalgError::NoConvergence { iters } => {
+                write!(f, "no convergence after {iters} iterations")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite matrix
+/// (f64 accumulation). `a` is read as symmetric from its lower triangle.
+pub fn cholesky_lower(a: &Matrix) -> Result<Matrix, LinalgError> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(LinalgError::NotPositiveDefinite { pivot: i, value: s });
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(Matrix::from_vec(n, n, l.iter().map(|&x| x as f32).collect()))
+}
+
+/// Invert a lower-triangular matrix (forward substitution per column).
+pub fn invert_lower(l: &Matrix) -> Matrix {
+    let n = l.rows;
+    let mut inv = vec![0.0f64; n * n];
+    for j in 0..n {
+        inv[j * n + j] = 1.0 / l.at(j, j) as f64;
+        for i in (j + 1)..n {
+            let mut s = 0.0f64;
+            for k in j..i {
+                s -= l.at(i, k) as f64 * inv[k * n + j];
+            }
+            inv[i * n + j] = s / l.at(i, i) as f64;
+        }
+    }
+    Matrix::from_vec(n, n, inv.iter().map(|&x| x as f32).collect())
+}
+
+/// Symmetric positive-definite inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Matrix) -> Result<Matrix, LinalgError> {
+    let l = cholesky_lower(a)?;
+    let linv = invert_lower(&l);
+    // A^-1 = linv^T @ linv
+    let n = a.rows;
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            // (linv^T linv)[i,j] = sum_k linv[k,i] * linv[k,j]; linv lower
+            // triangular so k >= max(i, j).
+            for k in i.max(j)..n {
+                s += linv.at(k, i) as f64 * linv.at(k, j) as f64;
+            }
+            *out.at_mut(i, j) = s as f32;
+        }
+    }
+    Ok(out)
+}
+
+/// The factorization GPTQ consumes: the **upper** Cholesky factor of A⁻¹
+/// (`A⁻¹ = Uᵀ·U` with U upper-triangular… GPTQ indexes `U[i, j≥i]`).
+/// Following the reference implementation this is computed as
+/// `U = chol(A⁻¹)ᵀ`.
+pub fn cholesky_inverse_upper(a: &Matrix) -> Result<Matrix, LinalgError> {
+    let inv = spd_inverse(a)?;
+    let l = cholesky_lower(&inv)?;
+    Ok(l.transpose())
+}
+
+/// Result of a (thin) SVD: `a = u · diag(s) · vᵀ`, singular values
+/// descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Matrix,
+    pub s: Vec<f32>,
+    pub v: Matrix,
+}
+
+/// One-sided Jacobi SVD. Robust and simple; O(m·n²·sweeps) — fine for the
+/// weight-matrix sizes in this repo (≤ 1024²). For m < n the routine runs
+/// on the transpose and swaps U/V back.
+pub fn jacobi_svd(a: &Matrix) -> Result<Svd, LinalgError> {
+    if a.rows < a.cols {
+        let t = jacobi_svd(&a.transpose())?;
+        return Ok(Svd { u: t.v, s: t.s, v: t.u });
+    }
+    let m = a.rows;
+    let n = a.cols;
+    // Work on columns of A (f64 for accumulation stability).
+    let mut u: Vec<f64> = a.data.iter().map(|&x| x as f64).collect(); // m x n row-major
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 60;
+    let eps = 1e-12;
+    let mut converged = false;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries over columns p, q
+                let (mut app, mut aqq, mut apq) = (0.0f64, 0.0f64, 0.0f64);
+                for i in 0..m {
+                    let up = u[i * n + p];
+                    let uq = u[i * n + q];
+                    app += up * up;
+                    aqq += uq * uq;
+                    apq += up * uq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(f64::MIN_POSITIVE) {
+                    continue;
+                }
+                off += apq.abs();
+                // Jacobi rotation zeroing the (p,q) Gram entry
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let up = u[i * n + p];
+                    let uq = u[i * n + q];
+                    u[i * n + p] = c * up - s * uq;
+                    u[i * n + q] = s * up + c * uq;
+                }
+                for i in 0..n {
+                    let vp = v[i * n + p];
+                    let vq = v[i * n + q];
+                    v[i * n + p] = c * vp - s * vq;
+                    v[i * n + q] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < 1e-14 {
+            converged = true;
+            break;
+        }
+    }
+    if !converged {
+        // Jacobi always makes progress; a slack tolerance miss is still a
+        // usable factorization for LoRC. Only hard-fail on NaN.
+        if u.iter().any(|x| !x.is_finite()) {
+            return Err(LinalgError::NoConvergence { iters: max_sweeps });
+        }
+    }
+    // Column norms are the singular values.
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut sigmas = vec![0.0f64; n];
+    for (j, sig) in sigmas.iter_mut().enumerate() {
+        let mut s = 0.0f64;
+        for i in 0..m {
+            s += u[i * n + j] * u[i * n + j];
+        }
+        *sig = s.sqrt();
+    }
+    order.sort_by(|&x, &y| sigmas[y].partial_cmp(&sigmas[x]).unwrap());
+    let mut um = Matrix::zeros(m, n);
+    let mut vm = Matrix::zeros(n, n);
+    let mut sv = vec![0.0f32; n];
+    for (newj, &oldj) in order.iter().enumerate() {
+        let sig = sigmas[oldj];
+        sv[newj] = sig as f32;
+        let inv = if sig > 1e-300 { 1.0 / sig } else { 0.0 };
+        for i in 0..m {
+            *um.at_mut(i, newj) = (u[i * n + oldj] * inv) as f32;
+        }
+        for i in 0..n {
+            *vm.at_mut(i, newj) = v[i * n + oldj] as f32;
+        }
+    }
+    Ok(Svd { u: um, s: sv, v: vm })
+}
+
+/// Rank-`r` truncation of an SVD: returns (A_r = U_r Σ_r V_rᵀ as factors)
+/// `(U·Σ^{1/2} [m×r], Σ^{1/2}·Vᵀ [r×n])` — the two low-rank matrices LoRC
+/// stores (Section 3 of the paper: "two low-rank matrices derived from the
+/// matrices in the first step").
+pub fn truncate_svd(svd: &Svd, r: usize) -> (Matrix, Matrix) {
+    let m = svd.u.rows;
+    let n = svd.v.rows;
+    let r = r.min(svd.s.len());
+    let mut e1 = Matrix::zeros(m, r);
+    let mut e2 = Matrix::zeros(r, n);
+    for j in 0..r {
+        let root = svd.s[j].max(0.0).sqrt();
+        for i in 0..m {
+            *e1.at_mut(i, j) = svd.u.at(i, j) * root;
+        }
+        for i in 0..n {
+            *e2.at_mut(j, i) = svd.v.at(i, j) * root;
+        }
+    }
+    (e1, e2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> Matrix {
+        let a = Matrix::randn(n, n, 1.0, rng);
+        let mut h = a.matmul_t(&a); // A Aᵀ is PSD
+        for i in 0..n {
+            *h.at_mut(i, i) += 0.5; // damp to PD
+        }
+        h
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::seeded(31);
+        let h = random_spd(24, &mut rng);
+        let l = cholesky_lower(&h).unwrap();
+        let rec = l.matmul_t(&l); // L Lᵀ
+        assert!(rec.mse(&h) < 1e-6, "mse={}", rec.mse(&h));
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigen -1, 3
+        assert!(matches!(
+            cholesky_lower(&a),
+            Err(LinalgError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn invert_lower_works() {
+        let mut rng = Rng::seeded(32);
+        let h = random_spd(16, &mut rng);
+        let l = cholesky_lower(&h).unwrap();
+        let linv = invert_lower(&l);
+        let prod = l.matmul(&linv);
+        assert!(prod.mse(&Matrix::eye(16)) < 1e-8);
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let mut rng = Rng::seeded(33);
+        let h = random_spd(20, &mut rng);
+        let hinv = spd_inverse(&h).unwrap();
+        let prod = h.matmul(&hinv);
+        assert!(prod.mse(&Matrix::eye(20)) < 1e-5, "mse={}", prod.mse(&Matrix::eye(20)));
+    }
+
+    #[test]
+    fn cholesky_inverse_upper_identity() {
+        let mut rng = Rng::seeded(34);
+        let h = random_spd(12, &mut rng);
+        let u = cholesky_inverse_upper(&h).unwrap();
+        // U should be upper triangular with Uᵀ U = H⁻¹
+        for i in 0..12 {
+            for j in 0..i {
+                assert_eq!(u.at(i, j), 0.0);
+            }
+        }
+        let uut = u.transpose().matmul(&u);
+        let hinv = spd_inverse(&h).unwrap();
+        assert!(uut.mse(&hinv) < 1e-6);
+    }
+
+    #[test]
+    fn svd_reconstructs_random() {
+        let mut rng = Rng::seeded(35);
+        for (m, n) in [(10, 6), (6, 10), (16, 16), (1, 5), (32, 8)] {
+            let a = Matrix::randn(m, n, 1.0, &mut rng);
+            let svd = jacobi_svd(&a).unwrap();
+            // full reconstruction
+            let k = svd.s.len();
+            let mut usv = Matrix::zeros(m, n);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut s = 0.0f64;
+                    for t in 0..k {
+                        s += svd.u.at(i, t) as f64 * svd.s[t] as f64 * svd.v.at(j, t) as f64;
+                    }
+                    *usv.at_mut(i, j) = s as f32;
+                }
+            }
+            assert!(usv.mse(&a) < 1e-8, "({m},{n}) mse={}", usv.mse(&a));
+            // singular values descending and non-negative
+            for t in 1..k {
+                assert!(svd.s[t - 1] >= svd.s[t] - 1e-6);
+                assert!(svd.s[t] >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn svd_orthogonality() {
+        let mut rng = Rng::seeded(36);
+        let a = Matrix::randn(20, 12, 1.0, &mut rng);
+        let svd = jacobi_svd(&a).unwrap();
+        let utu = svd.u.transpose().matmul(&svd.u);
+        let vtv = svd.v.transpose().matmul(&svd.v);
+        assert!(utu.mse(&Matrix::eye(12)) < 1e-8);
+        assert!(vtv.mse(&Matrix::eye(12)) < 1e-8);
+    }
+
+    #[test]
+    fn truncated_svd_is_best_rank_r() {
+        // Eckart–Young sanity: rank-r truncation error equals the tail
+        // singular values' energy.
+        let mut rng = Rng::seeded(37);
+        let a = Matrix::randn(16, 12, 1.0, &mut rng);
+        let svd = jacobi_svd(&a).unwrap();
+        let r = 4;
+        let (e1, e2) = truncate_svd(&svd, r);
+        let approx = e1.matmul(&e2);
+        let err = a.sub(&approx).fro_norm();
+        let tail: f64 = svd.s[r..].iter().map(|&s| (s as f64) * (s as f64)).sum();
+        assert!((err * err - tail).abs() / tail.max(1e-12) < 1e-4);
+    }
+
+    #[test]
+    fn svd_rank_deficient() {
+        // rank-1 matrix: one singular value, rest ~0
+        let u = Matrix::from_vec(4, 1, vec![1., 2., 3., 4.]);
+        let v = Matrix::from_vec(1, 3, vec![1., 0., -1.]);
+        let a = u.matmul(&v);
+        let svd = jacobi_svd(&a).unwrap();
+        assert!(svd.s[0] > 1.0);
+        for &s in &svd.s[1..] {
+            assert!(s < 1e-5, "s={s}");
+        }
+    }
+}

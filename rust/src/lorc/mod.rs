@@ -1,0 +1,172 @@
+//! LoRC — Low Rank Compensation (ZeroQuant-V2, adopted by this paper).
+//!
+//! After quantizing `W` to `Ŵ`, the residual `E = W − Ŵ` is approximated by
+//! a rank-`r` factorization obtained from its SVD:
+//!
+//! ```text
+//!   E ≈ Ê = E₁·E₂,   E₁ = U_r·Σ_r^{1/2}  [out × r],   E₂ = Σ_r^{1/2}·V_rᵀ  [r × out_in]
+//! ```
+//!
+//! and the deployed weight is `Ŵ + Ê`. The factors are tiny (r ≤ 64 ≪ dims)
+//! and stored in a higher-precision format (FP8/FP16), so the memory
+//! overhead is negligible while a large share of the quantization error —
+//! especially its low-rank structure — is recovered. The paper finds LoRC
+//! most effective for smaller models and for mitigating the loss from scale
+//! constraints (Tables 2 & 3).
+
+use crate::formats::NumericFormat;
+use crate::linalg::{jacobi_svd, truncate_svd, LinalgError};
+use crate::tensor::Matrix;
+
+/// LoRC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LorcConfig {
+    /// Rank of the compensation factors. The paper uses 8 for LLaMA and
+    /// 16–56 for OPT; ZeroQuant-V2 reports insensitivity above 8.
+    pub rank: usize,
+    /// Storage format for the factors (quantized on store). FP8 E4M3 by
+    /// default; `F16` keeps them unquantized.
+    pub factor_format: NumericFormat,
+}
+
+impl Default for LorcConfig {
+    fn default() -> Self {
+        LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 }
+    }
+}
+
+/// The stored low-rank compensation factors for one layer.
+#[derive(Debug, Clone)]
+pub struct LorcFactors {
+    /// `[out, r]`
+    pub e1: Matrix,
+    /// `[r, in]`
+    pub e2: Matrix,
+    pub format: NumericFormat,
+}
+
+impl LorcFactors {
+    /// Compute factors for the error `E = w − ŵ`.
+    pub fn compute(
+        w: &Matrix,
+        dequantized: &Matrix,
+        cfg: &LorcConfig,
+    ) -> Result<LorcFactors, LinalgError> {
+        let err = w.sub(dequantized);
+        let svd = jacobi_svd(&err)?;
+        let (mut e1, mut e2) = truncate_svd(&svd, cfg.rank);
+        // Factors are themselves stored low-precision (per-tensor absmax —
+        // they are small and well-conditioned).
+        if !matches!(cfg.factor_format, NumericFormat::F16) {
+            cfg.factor_format.fake_quant_slice_dynamic(&mut e1.data);
+            cfg.factor_format.fake_quant_slice_dynamic(&mut e2.data);
+        }
+        Ok(LorcFactors { e1, e2, format: cfg.factor_format })
+    }
+
+    /// `Ê = E₁·E₂`.
+    pub fn approx_error(&self) -> Matrix {
+        self.e1.matmul(&self.e2)
+    }
+
+    /// Apply to a dequantized weight: `Ŵ + Ê`.
+    pub fn apply(&self, dequantized: &Matrix) -> Matrix {
+        let mut out = dequantized.clone();
+        out.add_assign(&self.approx_error());
+        out
+    }
+
+    /// Extra bytes the factors cost at their storage precision.
+    pub fn packed_bytes(&self) -> usize {
+        let elems = self.e1.data.len() + self.e2.data.len();
+        elems * self.format.bits() as usize / 8
+    }
+
+    pub fn rank(&self) -> usize {
+        self.e1.cols
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_weight_rtn, WeightQuantConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn lorc_reduces_weight_error() {
+        let mut rng = Rng::seeded(81);
+        let w = Matrix::randn(64, 96, 0.1, &mut rng);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(32),
+        );
+        let deq = q.dequantize();
+        let before = deq.mse(&w);
+        let lorc = LorcFactors::compute(&w, &deq, &LorcConfig { rank: 16, factor_format: NumericFormat::F16 }).unwrap();
+        let after = lorc.apply(&deq).mse(&w);
+        assert!(after < before, "after={after} before={before}");
+    }
+
+    #[test]
+    fn higher_rank_recovers_more() {
+        let mut rng = Rng::seeded(82);
+        let w = Matrix::randn(48, 48, 0.1, &mut rng);
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::INT4));
+        let deq = q.dequantize();
+        let mut last = f64::INFINITY;
+        for rank in [2, 8, 32] {
+            let lorc = LorcFactors::compute(
+                &w,
+                &deq,
+                &LorcConfig { rank, factor_format: NumericFormat::F16 },
+            )
+            .unwrap();
+            let e = lorc.apply(&deq).mse(&w);
+            assert!(e <= last + 1e-12, "rank {rank}: {e} vs {last}");
+            last = e;
+        }
+    }
+
+    #[test]
+    fn quantized_factors_still_help() {
+        // the paper stores factors cheaply; FP8 factors must retain most of
+        // the benefit
+        let mut rng = Rng::seeded(83);
+        let w = Matrix::randn(64, 64, 0.1, &mut rng);
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP4_E2M1));
+        let deq = q.dequantize();
+        let before = deq.mse(&w);
+        let lorc8 = LorcFactors::compute(&w, &deq, &LorcConfig::default()).unwrap();
+        let after8 = lorc8.apply(&deq).mse(&w);
+        assert!(after8 < before * 0.9, "after8={after8} before={before}");
+    }
+
+    #[test]
+    fn overhead_accounting() {
+        let mut rng = Rng::seeded(84);
+        let w = Matrix::randn(256, 256, 0.1, &mut rng);
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP4_E2M1));
+        let lorc = LorcFactors::compute(&w, &q.dequantize(), &LorcConfig::default()).unwrap();
+        // rank-8 FP8 factors on 256²: 2*256*8 bytes = 4096 ≪ 256*256/2 = 32768
+        assert_eq!(lorc.packed_bytes(), 2 * 256 * 8);
+        assert!(lorc.packed_bytes() < q.packed_bytes() / 4);
+        assert_eq!(lorc.rank(), 8);
+    }
+
+    #[test]
+    fn rank_clamps_to_matrix_size() {
+        let mut rng = Rng::seeded(85);
+        let w = Matrix::randn(8, 6, 0.1, &mut rng);
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::INT4));
+        let lorc = LorcFactors::compute(
+            &w,
+            &q.dequantize(),
+            &LorcConfig { rank: 999, factor_format: NumericFormat::F16 },
+        )
+        .unwrap();
+        assert_eq!(lorc.rank(), 6);
+        // full-rank compensation recovers the weight exactly
+        assert!(lorc.apply(&q.dequantize()).mse(&w) < 1e-10);
+    }
+}

@@ -1,0 +1,22 @@
+//! `zqfp` — the ZeroQuant-FP command-line driver (Layer 3 entrypoint).
+//!
+//! Subcommands:
+//!   gen-corpus   write the synthetic train/calib/eval token streams
+//!   info         inspect a .zqckpt checkpoint
+//!   quantize     run the PTQ pipeline on a checkpoint
+//!   eval         perplexity of a (quantized) checkpoint on the corpora
+//!   table        regenerate a paper table   (1 | 2 | 3 | a1)
+//!   figure       regenerate a paper figure  (1 | 2)
+//!   serve        PJRT serving demo through the coordinator
+//!
+//! No clap offline — a small hand-rolled arg parser in `cli`.
+
+use zeroquant_fp::cli;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = cli::run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

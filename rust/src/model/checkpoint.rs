@@ -1,0 +1,325 @@
+//! `.zqckpt` — the binary checkpoint interchange format.
+//!
+//! Written by the build-time JAX trainer (`python/compile/pretrain.py`) and
+//! by the Rust PTQ pipeline (quantized checkpoints are stored dequantized
+//! for engine replay plus a sidecar of quant metadata); read by the engine,
+//! the pipeline and the AOT lowering step. Deliberately dumb and fully
+//! specified so two independent implementations can't drift:
+//!
+//! ```text
+//! magic  b"ZQCKPT01"
+//! u32    arch            (0 = opt, 1 = llama)
+//! u32×6  vocab, d_model, n_heads, n_layers, d_ff, max_seq
+//! u32    n_tensors
+//! repeat n_tensors:
+//!   u32  name_len, name (utf-8)
+//!   u32  rows, u32 cols
+//!   f32×(rows·cols)     row-major little-endian
+//! ```
+//!
+//! Linear weights are `[out_features, in_features]`; a linear computes
+//! `y = x·Wᵀ + b`. Embeddings are `[vocab, d]` and the LM head is tied.
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+use crate::model::config::{Arch, ModelConfig};
+use crate::rng::Rng;
+use crate::tensor::Matrix;
+
+const MAGIC: &[u8; 8] = b"ZQCKPT01";
+
+/// A named-tensor checkpoint plus its architecture config.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub config: ModelConfig,
+    /// BTreeMap so iteration (and thus serialization) is deterministic.
+    pub tensors: BTreeMap<String, Matrix>,
+}
+
+impl Checkpoint {
+    /// Canonical tensor names for a config (the schema both the Python
+    /// trainer and the Rust engine agree on).
+    pub fn tensor_schema(config: &ModelConfig) -> Vec<(String, usize, usize)> {
+        let d = config.d_model;
+        let ff = config.d_ff;
+        let mut names: Vec<(String, usize, usize)> = vec![
+            ("embed".into(), config.vocab_size, d),
+            ("pos_embed".into(), config.max_seq, d),
+        ];
+        for i in 0..config.n_layers {
+            let p = format!("layers.{i}");
+            names.push((format!("{p}.ln1.g"), 1, d));
+            if config.arch == Arch::Opt {
+                names.push((format!("{p}.ln1.b"), 1, d));
+            }
+            for proj in ["q", "k", "v", "o"] {
+                names.push((format!("{p}.attn.{proj}.w"), d, d));
+                names.push((format!("{p}.attn.{proj}.b"), 1, d));
+            }
+            names.push((format!("{p}.ln2.g"), 1, d));
+            if config.arch == Arch::Opt {
+                names.push((format!("{p}.ln2.b"), 1, d));
+                names.push((format!("{p}.mlp.fc1.w"), ff, d));
+                names.push((format!("{p}.mlp.fc1.b"), 1, ff));
+                names.push((format!("{p}.mlp.fc2.w"), d, ff));
+                names.push((format!("{p}.mlp.fc2.b"), 1, d));
+            } else {
+                names.push((format!("{p}.mlp.gate.w"), ff, d));
+                names.push((format!("{p}.mlp.up.w"), ff, d));
+                names.push((format!("{p}.mlp.down.w"), d, ff));
+                names.push((format!("{p}.mlp.down.b"), 1, d));
+            }
+        }
+        names.push(("final_norm.g".into(), 1, d));
+        if config.arch == Arch::Opt {
+            names.push(("final_norm.b".into(), 1, d));
+        }
+        names
+    }
+
+    /// Randomly-initialized checkpoint (GPT-2-style init). Used by tests
+    /// and as a fallback when no trained checkpoint is present.
+    pub fn random(config: &ModelConfig, rng: &mut Rng) -> Checkpoint {
+        let mut tensors = BTreeMap::new();
+        let d = config.d_model as f32;
+        for (name, rows, cols) in Checkpoint::tensor_schema(config) {
+            let m = if name.ends_with(".b") && name.contains('.') {
+                Matrix::zeros(rows, cols)
+            } else if name.ends_with("norm.g") || name.contains("ln1.g") || name.contains("ln2.g")
+            {
+                Matrix::from_fn(rows, cols, |_, _| 1.0)
+            } else if name == "embed" || name == "pos_embed" {
+                Matrix::randn(rows, cols, 0.02, rng)
+            } else {
+                // residual-scaled init
+                let std = 0.4 / d.sqrt();
+                Matrix::randn(rows, cols, std, rng)
+            };
+            tensors.insert(name, m);
+        }
+        Checkpoint { config: config.clone(), tensors }
+    }
+
+    pub fn get(&self, name: &str) -> &Matrix {
+        self.tensors
+            .get(name)
+            .unwrap_or_else(|| panic!("missing tensor {name}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Matrix {
+        self.tensors
+            .get_mut(name)
+            .unwrap_or_else(|| panic!("missing tensor {name}"))
+    }
+
+    /// Validate the tensor set against the schema.
+    pub fn validate(&self) -> Result<(), String> {
+        for (name, rows, cols) in Checkpoint::tensor_schema(&self.config) {
+            match self.tensors.get(&name) {
+                None => return Err(format!("missing tensor {name}")),
+                Some(m) if m.rows != rows || m.cols != cols => {
+                    return Err(format!(
+                        "tensor {name}: expected [{rows},{cols}], got [{},{}]",
+                        m.rows, m.cols
+                    ))
+                }
+                _ => {}
+            }
+        }
+        if self.tensors.len() != Checkpoint::tensor_schema(&self.config).len() {
+            return Err(format!(
+                "unexpected extra tensors: have {}, schema {}",
+                self.tensors.len(),
+                Checkpoint::tensor_schema(&self.config).len()
+            ));
+        }
+        Ok(())
+    }
+
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        let arch = match self.config.arch {
+            Arch::Opt => 0u32,
+            Arch::Llama => 1u32,
+        };
+        for v in [
+            arch,
+            self.config.vocab_size as u32,
+            self.config.d_model as u32,
+            self.config.n_heads as u32,
+            self.config.n_layers as u32,
+            self.config.d_ff as u32,
+            self.config.max_seq as u32,
+            self.tensors.len() as u32,
+        ] {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for (name, m) in &self.tensors {
+            buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            for &x in &m.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        std::fs::write(path, buf)
+    }
+
+    pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let mut f = std::fs::File::open(path)?;
+        let mut data = Vec::new();
+        f.read_to_end(&mut data)?;
+        Checkpoint::from_bytes(&data)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+
+    pub fn from_bytes(data: &[u8]) -> Result<Checkpoint, String> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
+            if *pos + n > data.len() {
+                return Err(format!("truncated at {pos}"));
+            }
+            let s = &data[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        let magic = take(&mut pos, 8)?;
+        if magic != MAGIC {
+            return Err("bad magic (not a .zqckpt file)".into());
+        }
+        let ru32 = |pos: &mut usize| -> Result<u32, String> {
+            let b = take(pos, 4)?;
+            Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        };
+        let arch = match ru32(&mut pos)? {
+            0 => Arch::Opt,
+            1 => Arch::Llama,
+            x => return Err(format!("unknown arch {x}")),
+        };
+        let vocab = ru32(&mut pos)? as usize;
+        let d_model = ru32(&mut pos)? as usize;
+        let n_heads = ru32(&mut pos)? as usize;
+        let n_layers = ru32(&mut pos)? as usize;
+        let d_ff = ru32(&mut pos)? as usize;
+        let max_seq = ru32(&mut pos)? as usize;
+        let n_tensors = ru32(&mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n_tensors {
+            let name_len = ru32(&mut pos)? as usize;
+            let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+                .map_err(|e| e.to_string())?;
+            let rows = ru32(&mut pos)? as usize;
+            let cols = ru32(&mut pos)? as usize;
+            let bytes = take(&mut pos, rows * cols * 4)?;
+            let mut v = Vec::with_capacity(rows * cols);
+            for c in bytes.chunks_exact(4) {
+                v.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            tensors.insert(name, Matrix::from_vec(rows, cols, v));
+        }
+        if pos != data.len() {
+            return Err(format!("{} trailing bytes", data.len() - pos));
+        }
+        let config = ModelConfig {
+            name: "loaded".into(),
+            arch,
+            vocab_size: vocab,
+            d_model,
+            n_heads,
+            n_layers,
+            d_ff,
+            max_seq,
+        };
+        let ck = Checkpoint { config, tensors };
+        ck.validate()?;
+        Ok(ck)
+    }
+}
+
+// `Write` is used via buf writes above; silence unused-import pedantry by
+// keeping the trait in scope for future streaming writers.
+#[allow(unused)]
+fn _assert_write_usable<W: Write>(_: W) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelConfig {
+        ModelConfig {
+            name: "test-tiny".into(),
+            arch: Arch::Opt,
+            vocab_size: 32,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 32,
+            max_seq: 8,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::seeded(91);
+        let cfg = tiny();
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let dir = std::env::temp_dir().join("zqfp_test_ckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("tiny.zqckpt");
+        ck.save(&path).unwrap();
+        let ck2 = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.tensors.len(), ck2.tensors.len());
+        for (name, m) in &ck.tensors {
+            assert_eq!(m, ck2.get(name), "{name}");
+        }
+        assert_eq!(ck2.config.d_model, 16);
+        assert_eq!(ck2.config.arch, Arch::Opt);
+    }
+
+    #[test]
+    fn llama_schema_differs() {
+        let mut cfg = tiny();
+        cfg.arch = Arch::Llama;
+        let schema = Checkpoint::tensor_schema(&cfg);
+        assert!(schema.iter().any(|(n, _, _)| n.contains("mlp.gate")));
+        assert!(!schema.iter().any(|(n, _, _)| n.contains("ln1.b")));
+        let mut rng = Rng::seeded(92);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        assert!(ck.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_catches_missing_and_misshapen() {
+        let mut rng = Rng::seeded(93);
+        let cfg = tiny();
+        let mut ck = Checkpoint::random(&cfg, &mut rng);
+        ck.tensors.remove("embed");
+        assert!(ck.validate().unwrap_err().contains("missing"));
+        let mut ck = Checkpoint::random(&cfg, &mut rng);
+        *ck.get_mut("embed") = Matrix::zeros(3, 3);
+        assert!(ck.validate().unwrap_err().contains("expected"));
+    }
+
+    #[test]
+    fn from_bytes_rejects_garbage() {
+        assert!(Checkpoint::from_bytes(b"not a checkpoint").is_err());
+        assert!(Checkpoint::from_bytes(b"ZQCKPT01").is_err()); // truncated
+    }
+
+    #[test]
+    fn random_init_statistics() {
+        let mut rng = Rng::seeded(94);
+        let cfg = tiny();
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        // norms init to 1, biases to 0
+        assert!(ck.get("layers.0.ln1.g").data.iter().all(|&x| x == 1.0));
+        assert!(ck.get("layers.0.attn.q.b").data.iter().all(|&x| x == 0.0));
+        // weights non-degenerate
+        let w = ck.get("layers.0.attn.q.w");
+        assert!(w.fro_norm() > 0.1);
+    }
+}

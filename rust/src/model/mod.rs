@@ -1,0 +1,10 @@
+//! Model substrate: architecture configs, the `.zqckpt` checkpoint format,
+//! and the function-preserving outlier injection (DESIGN.md §4).
+
+pub mod checkpoint;
+pub mod config;
+pub mod outliers;
+
+pub use checkpoint::Checkpoint;
+pub use config::{Arch, ModelConfig};
+pub use outliers::{inject_outliers, OutlierSpec};

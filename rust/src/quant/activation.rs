@@ -1,0 +1,108 @@
+//! Token-wise activation quantization.
+//!
+//! The paper (following ZeroQuant) quantizes activations **per token**: each
+//! row of the `[tokens, features]` activation matrix gets its own dynamic
+//! absmax scale, computed on the fly at inference time ("to accommodate the
+//! latency requirements", Appendix A). This module is the Rust mirror of
+//! the Pallas kernel `python/compile/kernels/act_quant.py`.
+
+use crate::formats::NumericFormat;
+use crate::tensor::Matrix;
+
+/// Activation quantization config.
+#[derive(Debug, Clone, Copy)]
+pub struct ActQuantConfig {
+    pub format: NumericFormat,
+}
+
+impl ActQuantConfig {
+    pub fn new(format: NumericFormat) -> Self {
+        ActQuantConfig { format }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        matches!(self.format, NumericFormat::F16)
+    }
+}
+
+/// Fake-quantize each row (token) of `x` with its own dynamic absmax scale.
+/// Returns the per-token scales (useful for capture/telemetry).
+pub fn fake_quant_tokenwise(x: &mut Matrix, cfg: &ActQuantConfig) -> Vec<f32> {
+    if cfg.is_noop() {
+        return vec![1.0; x.rows];
+    }
+    let mut scales = Vec::with_capacity(x.rows);
+    for r in 0..x.rows {
+        let p = cfg.format.fake_quant_slice_dynamic(x.row_mut(r));
+        scales.push(p.scale);
+    }
+    scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn tokenwise_isolation() {
+        // An outlier token must not affect other tokens' quantization —
+        // the whole point of token-wise over per-tensor.
+        let mut rng = Rng::seeded(61);
+        let mut x = Matrix::randn(4, 64, 0.1, &mut rng);
+        x.row_mut(3).iter_mut().for_each(|v| *v *= 1000.0);
+        let clean_row = x.row(0).to_vec();
+
+        let mut tw = x.clone();
+        fake_quant_tokenwise(&mut tw, &ActQuantConfig::new(NumericFormat::INT8));
+
+        // per-tensor for contrast
+        let mut pt = x.clone();
+        NumericFormat::INT8.fake_quant_slice_dynamic(&mut pt.data);
+
+        let err_tw: f64 = tw.row(0).iter().zip(&clean_row).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let err_pt: f64 = pt.row(0).iter().zip(&clean_row).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(err_tw < err_pt / 100.0, "tw={err_tw} pt={err_pt}");
+    }
+
+    #[test]
+    fn fp8_tokenwise_tracks_outlier_rows_better_than_int8() {
+        // Within a single token with in-row outliers (the fc2-input case),
+        // FP8 wins over INT8 even token-wise — Table 1's mechanism.
+        let mut rng = Rng::seeded(62);
+        let mut x = Matrix::zeros(8, 512);
+        for r in 0..8 {
+            for c in 0..512 {
+                // ReLU-like skew: mostly near-zero, a few big positives
+                let v = rng.normal_f32().max(0.0) * 0.05;
+                *x.at_mut(r, c) = v;
+            }
+            *x.at_mut(r, 7) = 8.0 + rng.uniform_f32(0.0, 2.0); // outlier channel
+        }
+        let orig = x.clone();
+        let mut xfp = x.clone();
+        let mut xint = x.clone();
+        fake_quant_tokenwise(&mut xfp, &ActQuantConfig::new(NumericFormat::FP8_E4M3));
+        fake_quant_tokenwise(&mut xint, &ActQuantConfig::new(NumericFormat::INT8));
+        assert!(xfp.mse(&orig) < xint.mse(&orig));
+    }
+
+    #[test]
+    fn noop_for_f16() {
+        let mut rng = Rng::seeded(63);
+        let x0 = Matrix::randn(3, 16, 1.0, &mut rng);
+        let mut x = x0.clone();
+        let scales = fake_quant_tokenwise(&mut x, &ActQuantConfig::new(NumericFormat::F16));
+        assert_eq!(x, x0);
+        assert!(scales.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn scales_count_matches_tokens() {
+        let mut rng = Rng::seeded(64);
+        let mut x = Matrix::randn(7, 32, 1.0, &mut rng);
+        let scales = fake_quant_tokenwise(&mut x, &ActQuantConfig::new(NumericFormat::FP8_E4M3));
+        assert_eq!(scales.len(), 7);
+        assert!(scales.iter().all(|&s| s > 0.0));
+    }
+}

@@ -1,0 +1,230 @@
+//! Power-of-2 scale constraints — Section 3, "Casting the FP4 to FP8".
+//!
+//! On H100 the W4A8 GEMM must cast FP4 weights up to FP8 before the MXU/
+//! tensor-core multiply. If the weight scale S is an arbitrary real, the
+//! cast is a dequant+requant (slow); if `S = 2^n` the cast is a pure
+//! exponent-field add (bit shift). The paper proposes two projections:
+//!
+//! * **M1** — snap each scale independently: `Ŝ = 2^⌈log2 S⌉`.
+//! * **M2** — per *compute group* (several rows of the matrix sharing one
+//!   GEMM tile): keep one arbitrary `S_max = max_i S_i` per group and make
+//!   every member's *ratio* a power of two:
+//!   `Ŝ_i = S_max / 2^⌈log2(S_max / S_i)⌉`. Only the ratios need to be
+//!   shifts at compute time, so M2 approximates the original scales far
+//!   better than M1 (Table 3: M2 ≳ M1).
+
+/// Which constraint to apply to the FGQ scale tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleConstraint {
+    /// Unconstrained real scales (the paper's ✗ rows).
+    None,
+    /// M1: snap every scale to the next power of two.
+    M1,
+    /// M2: power-of-two *ratios* within compute groups of `rows` rows.
+    /// The paper's compute group is "a (multiple) row(s) of the weight
+    /// matrix"; scales of the same column-group across `rows` consecutive
+    /// rows form one group.
+    M2 { rows: usize },
+}
+
+impl ScaleConstraint {
+    pub fn parse(s: &str) -> Option<ScaleConstraint> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "x" | "off" => Some(ScaleConstraint::None),
+            "m1" => Some(ScaleConstraint::M1),
+            "m2" => Some(ScaleConstraint::M2 { rows: 32 }),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScaleConstraint::None => "none",
+            ScaleConstraint::M1 => "M1",
+            ScaleConstraint::M2 { .. } => "M2",
+        }
+    }
+}
+
+/// `2^⌈log2 x⌉` for positive finite x, exact at powers of two.
+#[inline]
+pub fn next_pow2(x: f32) -> f32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let e = crate::formats::exponent_floor(x as f64);
+    let p = crate::formats::pow2(e);
+    if (x as f64) == p {
+        p as f32
+    } else {
+        crate::formats::pow2(e + 1) as f32
+    }
+}
+
+/// Apply a constraint to an FGQ scale tensor laid out `[rows, n_groups]`
+/// row-major (the layout [`crate::quant::QuantizedWeight`] uses).
+pub fn constrain_scales(
+    scales: &mut [f32],
+    rows: usize,
+    n_groups: usize,
+    constraint: ScaleConstraint,
+) {
+    debug_assert_eq!(scales.len(), rows * n_groups);
+    match constraint {
+        ScaleConstraint::None => {}
+        ScaleConstraint::M1 => {
+            for s in scales.iter_mut() {
+                if *s > 0.0 {
+                    *s = next_pow2(*s);
+                }
+            }
+        }
+        ScaleConstraint::M2 { rows: block } => {
+            let block = block.max(1);
+            // Group = same column-group across `block` consecutive rows.
+            for g in 0..n_groups {
+                for r0 in (0..rows).step_by(block) {
+                    let r1 = (r0 + block).min(rows);
+                    let mut smax = 0.0f32;
+                    for r in r0..r1 {
+                        smax = smax.max(scales[r * n_groups + g]);
+                    }
+                    if smax <= 0.0 {
+                        continue;
+                    }
+                    for r in r0..r1 {
+                        let s = scales[r * n_groups + g];
+                        if s <= 0.0 {
+                            continue;
+                        }
+                        let ratio = smax / s; // >= 1
+                        let shift = next_pow2(ratio); // 2^ceil(log2 ratio)
+                        scales[r * n_groups + g] = smax / shift;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// True if `x` is exactly a power of two (sanity helper for tests and for
+/// the bit-shift cast path).
+pub fn is_pow2(x: f32) -> bool {
+    if !(x > 0.0) || !x.is_finite() {
+        return false;
+    }
+    let bits = (x as f64).to_bits();
+    bits & ((1u64 << 52) - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1.0), 1.0);
+        assert_eq!(next_pow2(1.1), 2.0);
+        assert_eq!(next_pow2(2.0), 2.0);
+        assert_eq!(next_pow2(0.3), 0.5);
+        assert_eq!(next_pow2(0.25), 0.25);
+        assert_eq!(next_pow2(1000.0), 1024.0);
+    }
+
+    #[test]
+    fn m1_makes_all_scales_pow2() {
+        let mut s = vec![0.013, 0.9, 3.7, 0.0625];
+        constrain_scales(&mut s, 2, 2, ScaleConstraint::M1);
+        for &x in &s {
+            assert!(is_pow2(x), "{x}");
+        }
+        // and each is >= original (ceil)
+        assert!(s[0] >= 0.013 && s[0] < 0.026);
+    }
+
+    #[test]
+    fn m2_ratios_are_pow2_and_max_preserved() {
+        let mut s = vec![0.5, 0.011, 0.32, 0.07];
+        let orig = s.clone();
+        constrain_scales(&mut s, 4, 1, ScaleConstraint::M2 { rows: 4 });
+        let smax = orig.iter().cloned().fold(0.0f32, f32::max);
+        // the max scale is untouched
+        assert!(s.contains(&smax));
+        for &x in &s {
+            assert!(is_pow2(smax / x), "ratio {}", smax / x);
+            // Ŝ_i = smax / 2^ceil(...) <= S_i
+        }
+        for (a, b) in s.iter().zip(&orig) {
+            assert!(*a <= *b + 1e-9);
+            assert!(*a >= *b / 2.0 - 1e-9, "within one shift: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn m2_blocks_are_independent() {
+        let mut s = vec![1.0, 0.3, /* block 2 */ 0.011, 0.004];
+        constrain_scales(&mut s, 4, 1, ScaleConstraint::M2 { rows: 2 });
+        // block 1 max = 1.0 preserved; block 2 max = 0.011 preserved
+        assert_eq!(s[0], 1.0);
+        assert_eq!(s[2], 0.011);
+        assert!(is_pow2(1.0 / s[1]));
+        assert!(is_pow2(0.011 / s[3]));
+    }
+
+    #[test]
+    fn m2_exact_on_clustered_scales_where_m1_is_not() {
+        // The mechanism behind "M2 provides a far superior approximation":
+        // M2 keeps one arbitrary-precision S_max per compute group and only
+        // quantizes the *ratios*. When a group's scales coincide (common for
+        // rows of the same layer), M2 reproduces them exactly, while M1
+        // forces every scale to a power of two.
+        let s0 = 0.0137f32; // not a power of two
+        let mut m1 = vec![s0; 16];
+        let mut m2 = vec![s0; 16];
+        constrain_scales(&mut m1, 16, 1, ScaleConstraint::M1);
+        constrain_scales(&mut m2, 16, 1, ScaleConstraint::M2 { rows: 16 });
+        assert!(m2.iter().all(|&x| x == s0), "M2 must be exact here");
+        assert!(m1.iter().all(|&x| x != s0), "M1 cannot represent 0.0137");
+        // scales exactly a pow2 ratio below smax are also exact under M2
+        let mut m2b = vec![s0, s0 / 2.0, s0 / 8.0, s0];
+        let orig = m2b.clone();
+        constrain_scales(&mut m2b, 4, 1, ScaleConstraint::M2 { rows: 4 });
+        assert_eq!(m2b, orig);
+    }
+
+    #[test]
+    fn both_constraints_bounded_by_one_binade() {
+        // Worst-case scale distortion for either method is < 2x.
+        let mut rng = crate::rng::Rng::seeded(51);
+        let orig: Vec<f32> = (0..256).map(|_| rng.uniform_f32(0.001, 0.1)).collect();
+        for c in [ScaleConstraint::M1, ScaleConstraint::M2 { rows: 8 }] {
+            let mut s = orig.clone();
+            constrain_scales(&mut s, 8, 32, c);
+            for (a, o) in s.iter().zip(&orig) {
+                let ratio = a / o;
+                assert!(
+                    (0.5..2.0).contains(&ratio) || (ratio - 0.5).abs() < 1e-6,
+                    "{:?}: ratio {ratio}",
+                    c
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut s = vec![0.123, 4.56];
+        let orig = s.clone();
+        constrain_scales(&mut s, 1, 2, ScaleConstraint::None);
+        assert_eq!(s, orig);
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(ScaleConstraint::parse("m1"), Some(ScaleConstraint::M1));
+        assert_eq!(
+            ScaleConstraint::parse("M2"),
+            Some(ScaleConstraint::M2 { rows: 32 })
+        );
+        assert_eq!(ScaleConstraint::parse("none"), Some(ScaleConstraint::None));
+        assert_eq!(ScaleConstraint::parse("m3"), None);
+    }
+}

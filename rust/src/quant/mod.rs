@@ -1,0 +1,114 @@
+//! The quantization stack: weight FGQ (fine-grained group-wise) quantization,
+//! token-wise activation quantization, power-of-2 scale constraints (M1/M2),
+//! and the FP4→FP8 cast policy — i.e. everything Section 3 of ZeroQuant-FP
+//! describes apart from GPTQ itself (see [`crate::gptq`]) and LoRC (see
+//! [`crate::lorc`]).
+
+pub mod activation;
+pub mod constraints;
+pub mod weight;
+
+pub use activation::{fake_quant_tokenwise, ActQuantConfig};
+pub use constraints::{constrain_scales, is_pow2, next_pow2, ScaleConstraint};
+pub use weight::{encode_value, quantize_weight_rtn, QuantizedWeight, WeightQuantConfig};
+
+use crate::formats::NumericFormat;
+
+/// A full W·A precision scheme, e.g. "W4A8 FP-FP" from Table 2's rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scheme {
+    pub weight: NumericFormat,
+    pub activation: NumericFormat,
+}
+
+impl Scheme {
+    pub const W16A16: Scheme = Scheme {
+        weight: NumericFormat::F16,
+        activation: NumericFormat::F16,
+    };
+
+    /// Parse paper-style scheme names: "w8a8-int-int", "w4a8-fp-fp",
+    /// "w4a8-int-fp", "w16a16", "w16a8-int" …
+    pub fn parse(s: &str) -> Option<Scheme> {
+        let t = s.to_ascii_lowercase();
+        let parts: Vec<&str> = t.split('-').collect();
+        let wa = parts[0];
+        let (wbits, abits) = match wa {
+            "w16a16" => (16u32, 16u32),
+            "w16a8" => (16, 8),
+            "w8a8" => (8, 8),
+            "w4a8" => (4, 8),
+            "w4a16" => (4, 16),
+            "w8a16" => (8, 16),
+            _ => return None,
+        };
+        let wkind = parts.get(1).copied().unwrap_or("int");
+        let akind = parts.get(2).copied().unwrap_or(wkind);
+        let weight = match (wbits, wkind) {
+            (16, _) => NumericFormat::F16,
+            (8, "int") => NumericFormat::INT8,
+            (8, "fp") => NumericFormat::FP8_E4M3,
+            (4, "int") => NumericFormat::INT4,
+            (4, "fp") => NumericFormat::FP4_E2M1,
+            (4, "fpe3m0") => NumericFormat::FP4_E3M0,
+            _ => return None,
+        };
+        let activation = match (abits, akind) {
+            (16, _) => NumericFormat::F16,
+            (8, "int") => NumericFormat::INT8,
+            (8, "fp") => NumericFormat::FP8_E4M3,
+            _ => return None,
+        };
+        Some(Scheme { weight, activation })
+    }
+
+    pub fn name(&self) -> String {
+        let wb = self.weight.bits();
+        let ab = self.activation.bits();
+        let kind = |f: &NumericFormat| {
+            if matches!(f, NumericFormat::F16) {
+                "-"
+            } else if f.is_fp() {
+                "FP"
+            } else {
+                "INT"
+            }
+        };
+        format!(
+            "W{}A{} {}-{}",
+            wb,
+            ab,
+            kind(&self.weight),
+            kind(&self.activation)
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_parsing() {
+        let s = Scheme::parse("w4a8-fp-fp").unwrap();
+        assert_eq!(s.weight, NumericFormat::FP4_E2M1);
+        assert_eq!(s.activation, NumericFormat::FP8_E4M3);
+
+        let s = Scheme::parse("w8a8-int-fp").unwrap();
+        assert_eq!(s.weight, NumericFormat::INT8);
+        assert_eq!(s.activation, NumericFormat::FP8_E4M3);
+
+        let s = Scheme::parse("w16a8-int").unwrap();
+        assert_eq!(s.weight, NumericFormat::F16);
+        assert_eq!(s.activation, NumericFormat::INT8);
+
+        assert_eq!(Scheme::parse("w16a16").unwrap(), Scheme::W16A16);
+        assert!(Scheme::parse("w2a2").is_none());
+    }
+
+    #[test]
+    fn scheme_names() {
+        assert_eq!(Scheme::parse("w4a8-int-fp").unwrap().name(), "W4A8 INT-FP");
+        assert_eq!(Scheme::W16A16.name(), "W16A16 ---");
+    }
+}

@@ -1,0 +1,348 @@
+//! FGQ (fine-grained group-wise) weight quantization and the quantized
+//! weight container.
+//!
+//! Weights are stored `[out_features, in_features]` (row = output channel).
+//! FGQ assigns one scale per `(row, column-group)` where a column group is
+//! `group_size` consecutive input dims — the paper uses group 256 (320 for
+//! LLaMA-3b). `group_size == 0` means one group per row (per-channel).
+//!
+//! The container stores true low-bit *codes* (not just dequantized floats)
+//! so model-size accounting, bit-shift casting, and the PJRT kernel path all
+//! operate on the real representation.
+
+use crate::formats::{FpFormat, GroupParams, NumericFormat};
+use crate::tensor::Matrix;
+
+use super::constraints::{constrain_scales, ScaleConstraint};
+
+/// Configuration for weight quantization.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightQuantConfig {
+    /// Target format (INT4/INT8/FP4/FP8 or F16 passthrough).
+    pub format: NumericFormat,
+    /// FGQ group size along the input dimension (0 = whole row).
+    pub group_size: usize,
+    /// Power-of-2 scale constraint (Section 3 "Casting the FP4 to FP8").
+    pub constraint: ScaleConstraint,
+    /// Footnote 4: once a matrix is quantized to FP4, re-quantize the
+    /// dequantized values to FP8 E5M2 so the runtime weight is exactly an
+    /// FP8 number (the H100 cast path). Applied by `dequantize`.
+    pub cast_fp4_to_e5m2: bool,
+}
+
+impl WeightQuantConfig {
+    pub fn new(format: NumericFormat) -> Self {
+        WeightQuantConfig {
+            format,
+            group_size: 256,
+            constraint: ScaleConstraint::None,
+            cast_fp4_to_e5m2: false,
+        }
+    }
+
+    pub fn with_group_size(mut self, g: usize) -> Self {
+        self.group_size = g;
+        self
+    }
+
+    pub fn with_constraint(mut self, c: ScaleConstraint) -> Self {
+        self.constraint = c;
+        self
+    }
+
+    pub fn with_cast(mut self, cast: bool) -> Self {
+        self.cast_fp4_to_e5m2 = cast;
+        self
+    }
+
+    /// Effective group size for a row length.
+    pub fn group_for(&self, cols: usize) -> usize {
+        if self.group_size == 0 || self.group_size > cols {
+            cols
+        } else {
+            self.group_size
+        }
+    }
+}
+
+/// A quantized weight matrix: codes + per-(row, group) parameters.
+#[derive(Debug, Clone)]
+pub struct QuantizedWeight {
+    pub rows: usize,
+    pub cols: usize,
+    pub group_size: usize,
+    pub format: NumericFormat,
+    /// One code per weight. FP codes are the ExMy bit pattern; INT codes are
+    /// the signed level offset-encoded as `level + 128`.
+    pub codes: Vec<u8>,
+    /// `rows * n_groups` scales, row-major.
+    pub scales: Vec<f32>,
+    /// Zero points (INT asymmetric only; empty otherwise).
+    pub zeros: Vec<i32>,
+    /// Whether dequantization re-quantizes to FP8 E5M2 (footnote 4 cast).
+    pub cast_fp4_to_e5m2: bool,
+}
+
+impl QuantizedWeight {
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    #[inline]
+    pub fn scale_at(&self, row: usize, col: usize) -> f32 {
+        self.scales[row * self.n_groups() + col / self.group_size]
+    }
+
+    /// Serialized size in bytes of the quantized representation
+    /// (codes at true bit-width + one f16 scale (+ i8 zero) per group).
+    pub fn packed_bytes(&self) -> usize {
+        let code_bits = self.format.bits() as usize * self.rows * self.cols;
+        let scale_bytes = 2 * self.scales.len();
+        let zero_bytes = self.zeros.len();
+        code_bits.div_ceil(8) + scale_bytes + zero_bytes
+    }
+
+    /// Dequantize a single element.
+    #[inline]
+    pub fn dequant_at(&self, row: usize, col: usize) -> f32 {
+        let ng = self.n_groups();
+        let g = row * ng + col / self.group_size;
+        let code = self.codes[row * self.cols + col];
+        let scale = self.scales[g];
+        let v = match self.format {
+            NumericFormat::F16 => unreachable!("F16 weights are not stored quantized"),
+            NumericFormat::Fp(f) => f.decode(code as u16) * scale,
+            NumericFormat::Int(i) => {
+                let z = if i.symmetric { 0 } else { self.zeros[g] };
+                (code as i32 - 128 - z) as f32 * scale
+            }
+        };
+        if self.cast_fp4_to_e5m2 {
+            FpFormat::E5M2.quantize(v)
+        } else {
+            v
+        }
+    }
+
+    /// Dequantize the whole matrix to f32.
+    pub fn dequantize(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        let ng = self.n_groups();
+        for r in 0..self.rows {
+            for g in 0..ng {
+                let scale = self.scales[r * ng + g];
+                let zero = if self.zeros.is_empty() { 0 } else { self.zeros[r * ng + g] };
+                let c0 = g * self.group_size;
+                let c1 = (c0 + self.group_size).min(self.cols);
+                for c in c0..c1 {
+                    let code = self.codes[r * self.cols + c];
+                    let v = match self.format {
+                        NumericFormat::F16 => unreachable!(),
+                        NumericFormat::Fp(f) => f.decode(code as u16) * scale,
+                        NumericFormat::Int(i) => {
+                            let _ = i;
+                            (code as i32 - 128 - zero) as f32 * scale
+                        }
+                    };
+                    out.data[r * self.cols + c] = if self.cast_fp4_to_e5m2 {
+                        FpFormat::E5M2.quantize(v)
+                    } else {
+                        v
+                    };
+                }
+            }
+        }
+        out
+    }
+
+    /// Quantization error matrix `W - dequant(Q(W))`.
+    pub fn error_vs(&self, w: &Matrix) -> Matrix {
+        w.sub(&self.dequantize())
+    }
+}
+
+/// Encode one value under (format, params); returns (code, dequant value).
+#[inline]
+pub fn encode_value(format: NumericFormat, x: f32, p: GroupParams) -> (u8, f32) {
+    match format {
+        NumericFormat::F16 => (0, x),
+        NumericFormat::Fp(f) => {
+            let code = f.encode(x / p.scale);
+            (code as u8, f.decode(code) * p.scale)
+        }
+        NumericFormat::Int(i) => {
+            let ip = crate::formats::IntQParams { scale: p.scale, zero_point: p.zero_point };
+            let level = i.encode(x, ip);
+            let stored = if i.symmetric { level } else { level - p.zero_point };
+            ((stored + 128) as u8, i.decode(level, ip))
+        }
+    }
+}
+
+/// Round-to-nearest (RTN) FGQ quantization of a weight matrix — the
+/// non-GPTQ baseline, also used to initialize scales for GPTQ.
+pub fn quantize_weight_rtn(w: &Matrix, cfg: &WeightQuantConfig) -> QuantizedWeight {
+    let group = cfg.group_for(w.cols);
+    let ng = w.cols.div_ceil(group);
+    let mut scales = vec![1.0f32; w.rows * ng];
+    let mut zeros_v: Vec<i32> = Vec::new();
+    let asym = matches!(cfg.format, NumericFormat::Int(i) if !i.symmetric);
+    if asym {
+        zeros_v = vec![0i32; w.rows * ng];
+    }
+    // Pass 1: group params.
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for g in 0..ng {
+            let c0 = g * group;
+            let c1 = (c0 + group).min(w.cols);
+            let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in &row[c0..c1] {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            let p = cfg.format.group_params(mn, mx);
+            scales[r * ng + g] = p.scale;
+            if asym {
+                zeros_v[r * ng + g] = p.zero_point;
+            }
+        }
+    }
+    // Scale constraint projection (power-of-2 methods M1/M2).
+    constrain_scales(&mut scales, w.rows, ng, cfg.constraint);
+    // Pass 2: encode with the (possibly constrained) scales.
+    let mut codes = vec![0u8; w.rows * w.cols];
+    for r in 0..w.rows {
+        for g in 0..ng {
+            let p = GroupParams {
+                scale: scales[r * ng + g],
+                zero_point: if asym { zeros_v[r * ng + g] } else { 0 },
+            };
+            let c0 = g * group;
+            let c1 = (c0 + group).min(w.cols);
+            for c in c0..c1 {
+                let (code, _) = encode_value(cfg.format, w.at(r, c), p);
+                codes[r * w.cols + c] = code;
+            }
+        }
+    }
+    QuantizedWeight {
+        rows: w.rows,
+        cols: w.cols,
+        group_size: group,
+        format: cfg.format,
+        codes,
+        scales,
+        zeros: zeros_v,
+        cast_fp4_to_e5m2: cfg.cast_fp4_to_e5m2 && matches!(cfg.format, NumericFormat::Fp(f) if f.total_bits() == 4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rtn_roundtrip_error_bounded() {
+        let mut rng = Rng::seeded(41);
+        let w = Matrix::randn(32, 128, 0.05, &mut rng);
+        for fmt in [
+            NumericFormat::INT8,
+            NumericFormat::FP8_E4M3,
+            NumericFormat::INT4,
+            NumericFormat::FP4_E2M1,
+        ] {
+            let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(fmt).with_group_size(64));
+            let deq = q.dequantize();
+            let rel = deq.sub(&w).fro_norm() / w.fro_norm();
+            // INT grids are uniform (tight near zero); FP grids are relative
+            // (coarser near absmax). RMS bounds per family, Gaussian data:
+            let bound = match fmt {
+                NumericFormat::INT8 => 0.012,
+                NumericFormat::FP8_E4M3 => 0.04,
+                _ => 0.15, // 4-bit
+            };
+            assert!(rel < bound, "{}: rel={rel}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn eight_bit_beats_four_bit() {
+        let mut rng = Rng::seeded(42);
+        let w = Matrix::randn(16, 256, 0.02, &mut rng);
+        let q8 = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP8_E4M3));
+        let q4 = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP4_E2M1));
+        assert!(q8.dequantize().mse(&w) < q4.dequantize().mse(&w));
+    }
+
+    #[test]
+    fn smaller_groups_reduce_error() {
+        let mut rng = Rng::seeded(43);
+        // heavy-tailed rows: per-row absmax dominated by outliers
+        let mut w = Matrix::randn(8, 512, 0.02, &mut rng);
+        for r in 0..8 {
+            w.row_mut(r)[r * 7] = 1.0; // a few outliers
+        }
+        let big = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::INT4).with_group_size(0),
+        );
+        let small = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::INT4).with_group_size(64),
+        );
+        assert!(small.dequantize().mse(&w) < big.dequantize().mse(&w));
+    }
+
+    #[test]
+    fn dequant_at_matches_dequantize() {
+        let mut rng = Rng::seeded(44);
+        let w = Matrix::randn(9, 130, 0.1, &mut rng); // ragged last group
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64),
+        );
+        let full = q.dequantize();
+        for r in 0..9 {
+            for c in 0..130 {
+                assert_eq!(q.dequant_at(r, c), full.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn asymmetric_int_roundtrip() {
+        let mut rng = Rng::seeded(45);
+        // shifted distribution favours asym
+        let w = Matrix::from_fn(8, 64, |_, _| rng.normal_f32() * 0.02 + 0.1);
+        let qa = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::INT4_ASYM));
+        let qs = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::INT4));
+        assert!(qa.dequantize().mse(&w) < qs.dequantize().mse(&w));
+    }
+
+    #[test]
+    fn cast_policy_makes_values_e5m2() {
+        let mut rng = Rng::seeded(46);
+        let w = Matrix::randn(4, 64, 0.1, &mut rng);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_cast(true),
+        );
+        let deq = q.dequantize();
+        for &v in &deq.data {
+            assert_eq!(FpFormat::E5M2.quantize(v), v, "value {v} not an E5M2 point");
+        }
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        let w = Matrix::zeros(16, 256);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64),
+        );
+        // 16*256 4-bit codes = 2048 bytes; 16*4 scales * 2B = 128
+        assert_eq!(q.packed_bytes(), 2048 + 128);
+    }
+}

@@ -1,0 +1,165 @@
+//! Matmul kernels — the L3 hot path.
+//!
+//! Single-core target (this testbed exposes one CPU), so the optimization
+//! levers are loop order, register blocking, and cache blocking rather than
+//! threading. Two kernels:
+//!
+//! * [`matmul_into`]  — C += A·B with an i-k-j loop (unit-stride inner loop
+//!   over B's rows) plus 4-wide k unrolling. Auto-vectorizes well.
+//! * [`matmul_bt_into`] — C = A·Bᵀ as blocked dot products (both operands
+//!   walk unit-stride), used where the engine naturally holds Bᵀ (weight
+//!   matrices are stored [out, in]).
+//!
+//! §Perf in EXPERIMENTS.md records the measured GFLOP/s of each variant and
+//! the naive baseline they replaced.
+
+use super::Matrix;
+
+/// `out = a @ b` (out must be zeroed or hold the accumulation base).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    // Cache-block over k so b's working set stays in L1/L2.
+    const KB: usize = 256;
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            let mut kk = kb;
+            // 4-wide unroll over k: each step is an axpy over the out row.
+            while kk + 4 <= kend {
+                let a0 = arow[kk];
+                let a1 = arow[kk + 1];
+                let a2 = arow[kk + 2];
+                let a3 = arow[kk + 3];
+                let b0 = &b.data[kk * n..kk * n + n];
+                let b1 = &b.data[(kk + 1) * n..(kk + 1) * n + n];
+                let b2 = &b.data[(kk + 2) * n..(kk + 2) * n + n];
+                let b3 = &b.data[(kk + 3) * n..(kk + 3) * n + n];
+                for j in 0..n {
+                    orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+                }
+                kk += 4;
+            }
+            while kk < kend {
+                let av = arow[kk];
+                if av != 0.0 {
+                    let brow = &b.data[kk * n..kk * n + n];
+                    for j in 0..n {
+                        orow[j] += av * brow[j];
+                    }
+                }
+                kk += 1;
+            }
+        }
+    }
+}
+
+/// `out = a @ bᵀ` where `b` is `[n, k]` (i.e. rows of `b` are the columns of
+/// the logical right operand). Both inner loops are unit-stride.
+pub fn matmul_bt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    assert_eq!(a.cols, b.cols);
+    assert_eq!(out.rows, a.rows);
+    assert_eq!(out.cols, b.rows);
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    // Register-block 1x4 over output columns: 4 dot products share one read
+    // of the a-row.
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b.data[j * k..j * k + k];
+            let b1 = &b.data[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &b.data[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &b.data[(j + 3) * k..(j + 3) * k + k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for kk in 0..k {
+                let av = arow[kk];
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            let base = i * n + j;
+            out.data[base] = s0;
+            out.data[base + 1] = s1;
+            out.data[base + 2] = s2;
+            out.data[base + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &b.data[j * k..j * k + k];
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += arow[kk] * brow[kk];
+            }
+            out.data[i * n + j] = s;
+            j += 1;
+        }
+    }
+}
+
+/// Reference (naive triple loop) kernel kept for correctness testing and as
+/// the §Perf baseline.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows);
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    for i in 0..a.rows {
+        for j in 0..b.cols {
+            let mut s = 0.0f32;
+            for kk in 0..a.cols {
+                s += a.at(i, kk) * b.at(kk, j);
+            }
+            *out.at_mut(i, j) = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn optimized_matches_naive() {
+        let mut rng = Rng::seeded(21);
+        for (m, k, n) in [(1, 1, 1), (3, 5, 7), (16, 16, 16), (33, 65, 17), (64, 256, 48)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            let fast = a.matmul(&b);
+            let slow = matmul_naive(&a, &b);
+            assert!(fast.mse(&slow) < 1e-8, "({m},{k},{n}) mse={}", fast.mse(&slow));
+        }
+    }
+
+    #[test]
+    fn bt_matches_naive() {
+        let mut rng = Rng::seeded(22);
+        for (m, k, n) in [(2, 3, 4), (17, 31, 9), (40, 128, 40)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let bt = Matrix::randn(n, k, 1.0, &mut rng);
+            let fast = a.matmul_t(&bt);
+            let slow = matmul_naive(&a, &bt.transpose());
+            assert!(fast.mse(&slow) < 1e-8);
+        }
+    }
+
+    #[test]
+    fn accumulation_base_is_respected() {
+        let mut rng = Rng::seeded(23);
+        let a = Matrix::randn(4, 4, 1.0, &mut rng);
+        let b = Matrix::randn(4, 4, 1.0, &mut rng);
+        let mut out = Matrix::eye(4);
+        matmul_into(&a, &b, &mut out);
+        let expect = {
+            let mut e = a.matmul(&b);
+            e.add_assign(&Matrix::eye(4));
+            e
+        };
+        assert!(out.mse(&expect) < 1e-10);
+    }
+}

@@ -1,0 +1,163 @@
+//! PJRT runtime integration: these tests require `make artifacts` to have
+//! run (they skip gracefully otherwise, so `cargo test` stays green on a
+//! fresh clone before the build pipeline).
+
+use std::path::{Path, PathBuf};
+
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::model::Checkpoint;
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if p.join("score_selfcheck_a16.hlo.txt").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn selfcheck_parity_engine_vs_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    runtime::selfcheck_impl(&dir).expect("selfcheck must pass");
+}
+
+#[test]
+fn hlo_scorer_batching_invariance() {
+    // padded final batch and different batching must give identical totals
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = runtime::selfcheck_config();
+    let mut rng = Rng::seeded(31337);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::F16) };
+    let path = dir.join("score_selfcheck_a16.hlo.txt");
+    let scorer = runtime::HloScorer::load(&path, 2, cfg.max_seq).unwrap();
+    let weights = scorer.upload_weights(&ck).unwrap();
+    // 5 windows: exercises a padded final batch (5 = 2+2+1)
+    let toks: Vec<u16> = (0..cfg.max_seq * 5)
+        .map(|_| rng.below(cfg.vocab_size) as u16)
+        .collect();
+    let r1 = scorer.ppl_with(&weights, &toks).unwrap();
+    let eng = zeroquant_fp::eval::perplexity(&ck, opts, &toks, cfg.max_seq);
+    assert_eq!(r1.tokens, eng.tokens);
+    let rel = (r1.ppl() - eng.ppl()).abs() / eng.ppl();
+    assert!(rel < 2e-3, "hlo={} engine={}", r1.ppl(), eng.ppl());
+}
+
+#[test]
+fn weight_upload_roundtrip_changes_scores() {
+    // two different checkpoints through the same executable give different
+    // nll -> weights are really parameters, not baked constants.
+    let Some(dir) = artifacts_dir() else { return };
+    let cfg = runtime::selfcheck_config();
+    let mut rng = Rng::seeded(555);
+    let ck1 = Checkpoint::random(&cfg, &mut rng);
+    let ck2 = Checkpoint::random(&cfg, &mut rng);
+    let path = dir.join("score_selfcheck_a16.hlo.txt");
+    let scorer = runtime::HloScorer::load(&path, 2, cfg.max_seq).unwrap();
+    let w1 = scorer.upload_weights(&ck1).unwrap();
+    let w2 = scorer.upload_weights(&ck2).unwrap();
+    let toks: Vec<u16> = (0..cfg.max_seq * 2)
+        .map(|_| rng.below(cfg.vocab_size) as u16)
+        .collect();
+    let n1 = scorer.score_batch(&toks, &w1).unwrap();
+    let n2 = scorer.score_batch(&toks, &w2).unwrap();
+    assert_ne!(n1, n2);
+}
+
+#[test]
+fn qmatmul_artifact_matches_rust_quant_semantics() {
+    // the Pallas fused kernel, loaded and run from rust, must agree with
+    // the rust-side dequant + tokenwise-quant + matmul composition.
+    let Some(dir) = artifacts_dir() else { return };
+    let (m, k, n, g) = (64usize, 256usize, 128usize, 64usize);
+    let path = dir.join(format!("qmatmul_m{m}_k{k}_n{n}_g{g}.hlo.txt"));
+    if !path.exists() {
+        eprintln!("SKIP: qmatmul artifact missing");
+        return;
+    }
+    let art = runtime::QMatmulArtifact::load(&path, m, k, n, k / g).unwrap();
+    let mut rng = Rng::seeded(2024);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+    let codes: Vec<i32> = (0..n * k).map(|_| rng.below(16) as i32).collect();
+    let scales: Vec<f32> = (0..n * (k / g)).map(|_| rng.uniform_f32(0.01, 0.1)).collect();
+    let y = art.run(&x, &codes, &scales).unwrap();
+    assert_eq!(y.len(), m * n);
+
+    // rust-side reference
+    use zeroquant_fp::formats::FpFormat;
+    use zeroquant_fp::quant::fake_quant_tokenwise;
+    use zeroquant_fp::tensor::Matrix;
+    let mut xm = Matrix::from_vec(m, k, x);
+    fake_quant_tokenwise(
+        &mut xm,
+        &ActQuantConfig::new(NumericFormat::FP8_E4M3),
+    );
+    let mut wm = Matrix::zeros(n, k);
+    for r in 0..n {
+        for c in 0..k {
+            let code = codes[r * k + c] as u16;
+            let scale = scales[r * (k / g) + c / g];
+            *wm.at_mut(r, c) = FpFormat::E2M1.decode(code) * scale;
+        }
+    }
+    let want = xm.matmul_t(&wm);
+    let mut max_diff = 0.0f32;
+    for (a, b) in y.iter().zip(&want.data) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-3, "max diff {max_diff}");
+}
+
+#[test]
+fn coordinator_serves_batches() {
+    // dynamic batching end to end: client threads feed the queue, the PJRT
+    // loop runs on this (test) thread.
+    let Some(dir) = artifacts_dir() else { return };
+    use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+    let fam = zeroquant_fp::model::ModelConfig::family(zeroquant_fp::model::Arch::Opt);
+    let (mcfg, _) = &fam[0];
+    let art = dir.join(runtime::score_artifact_name(mcfg, "a16"));
+    if !art.exists() {
+        eprintln!("SKIP: family artifacts missing");
+        return;
+    }
+    let mut rng = Rng::seeded(888);
+    let ck = Checkpoint::random(mcfg, &mut rng);
+    let seq = ck.config.max_seq;
+    let coord = Coordinator::new(CoordinatorConfig {
+        artifacts: dir.clone(),
+        ck: ck.clone(),
+        opts: EngineOpts::default(),
+        policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
+    });
+    let mut handles = Vec::new();
+    for c in 0..3 {
+        let cl = coord.client();
+        let mut r = Rng::seeded(c as u64);
+        let windows: Vec<Vec<u16>> = (0..6)
+            .map(|_| (0..seq).map(|_| r.below(ck.config.vocab_size) as u16).collect())
+            .collect();
+        handles.push(std::thread::spawn(move || {
+            windows
+                .into_iter()
+                .map(|w| cl.score(w).unwrap())
+                .collect::<Vec<f32>>()
+        }));
+    }
+    let report = coord.run().unwrap();
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().unwrap());
+    }
+    assert_eq!(all.len(), 18);
+    assert!(all.iter().all(|v| v.is_finite() && *v > 0.0));
+    assert_eq!(report.requests, 18);
+    assert!(report.batches <= 18);
+    assert!(report.mean_batch_size >= 1.0);
+}
