@@ -16,13 +16,13 @@ use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec}
 use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> zeroquant_fp::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let name = args.first().map(|s| s.as_str()).unwrap_or("opt-s");
-    let (cfg, _) =
-        ModelConfig::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let (cfg, _) = ModelConfig::by_name(name)
+        .ok_or_else(|| zeroquant_fp::anyhow!("unknown model {name}"))?;
     let base = Checkpoint::load(Path::new(&format!("ckpt/{}.zqckpt", cfg.name)))
-        .map_err(|e| anyhow::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
+        .map_err(|e| zeroquant_fp::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
 
     let eval = zeroquant_fp::data::Corpus::new(zeroquant_fp::data::CorpusKind::C4)
         .generate(cfg.max_seq * 16, 5);

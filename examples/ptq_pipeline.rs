@@ -20,15 +20,15 @@ use zeroquant_fp::pipeline::{
 use zeroquant_fp::quant::Scheme;
 use zeroquant_fp::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> zeroquant_fp::error::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let name = args.first().map(|s| s.as_str()).unwrap_or("opt-m");
     let runtime = args.get(1).map(|s| s.as_str()).unwrap_or("hlo");
-    let (cfg, alpha) =
-        ModelConfig::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown model {name}"))?;
+    let (cfg, alpha) = ModelConfig::by_name(name)
+        .ok_or_else(|| zeroquant_fp::anyhow!("unknown model {name}"))?;
 
     let mut ck = Checkpoint::load(Path::new(&format!("ckpt/{}.zqckpt", cfg.name)))
-        .map_err(|e| anyhow::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
+        .map_err(|e| zeroquant_fp::anyhow!("ckpt/{}.zqckpt: {e} (run `make ckpt`)", cfg.name))?;
     ck.config.name = cfg.name.clone();
     let mut rng = Rng::seeded(0xA11CE);
     inject_outliers(&mut ck, OutlierSpec::new(alpha), &mut rng);
@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
     let hessians = calibrate_finalized(&ck, &calib);
     let calib_tokens = calib.iter().map(|s| s.len()).sum();
 
-    let eval_ppl = |qck: &Checkpoint, cfg: &PtqConfig| -> anyhow::Result<Vec<f64>> {
+    let eval_ppl = |qck: &Checkpoint, cfg: &PtqConfig| -> zeroquant_fp::error::Result<Vec<f64>> {
         let mut out = Vec::new();
         for kind in CorpusKind::ALL {
             let toks = read_tokens(Path::new(&format!("data/eval_{}.tok", kind.name())))?;

@@ -1,8 +1,11 @@
-//! Scoring throughput: the interpretive Rust engine vs the PJRT HLO path,
-//! per activation scheme — quantifies why the table harness runs on PJRT
-//! and what the A8 fake-quant costs end to end.
+//! Decode throughput: the reference string-keyed engine vs the prepacked
+//! compiled plan, per activation scheme — the headline measurement of the
+//! compiled-execution-plan PR (EXPERIMENTS.md §Perf), plus the PJRT HLO
+//! path when artifacts are present.
 //!
-//! Requires `make artifacts`; engine-only numbers print regardless.
+//! Always runs (no artifacts needed for the engine/compiled sections) and
+//! writes `bench_results/bench_engine.json` so future PRs have a perf
+//! trajectory: tokens/s for `engine fwd act=*` vs `compiled fwd act=*`.
 
 use std::path::Path;
 
@@ -10,9 +13,13 @@ use zeroquant_fp::bench_harness::Bench;
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
+
+const FORMATS: [NumericFormat; 3] =
+    [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3];
 
 fn main() {
     let mut rng = Rng::seeded(17);
@@ -23,9 +30,11 @@ fn main() {
     let window: Vec<u16> = (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
     let mut bench = Bench::default();
 
-    println!("-- rust engine forward, {} (d={}, L={}), {} tokens --",
-             cfg.name, cfg.d_model, cfg.n_layers, seq);
-    for fmt in [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3] {
+    println!(
+        "-- reference engine forward, {} (d={}, L={}), {} tokens --",
+        cfg.name, cfg.d_model, cfg.n_layers, seq
+    );
+    for fmt in FORMATS {
         let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
         let engine = Engine::with_opts(&ck, opts);
         bench.run(
@@ -36,6 +45,64 @@ fn main() {
         );
     }
 
+    println!("\n-- compiled plan forward (prepacked, arena, LUT actq) --");
+    for fmt in FORMATS {
+        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let model = CompiledModel::compile(&ck, opts);
+        let mut scratch = model.scratch();
+        bench.run(
+            format!("compiled fwd act={}", fmt.name()),
+            seq as f64,
+            "tok",
+            || {
+                std::hint::black_box(model.forward(&window, &mut scratch));
+            },
+        );
+    }
+
+    println!();
+    for fmt in FORMATS {
+        if let Some(s) = bench.speedup(
+            &format!("compiled fwd act={}", fmt.name()),
+            &format!("engine fwd act={}", fmt.name()),
+        ) {
+            println!("compiled vs reference (act={}): {s:.2}x", fmt.name());
+        }
+    }
+
+    // sanity: compiled logits must match the reference bit-for-bit
+    let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::FP8_E4M3) };
+    let reference = Engine::with_opts(&ck, opts).forward(&window);
+    let compiled = CompiledModel::compile(&ck, opts).forward_alloc(&window);
+    assert_eq!(
+        reference.data.len(),
+        compiled.data.len(),
+        "logit shape mismatch"
+    );
+    let identical = reference
+        .data
+        .iter()
+        .zip(&compiled.data)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "compiled path diverged from the reference engine");
+    println!("bit-identity check: OK");
+
+    pjrt_section(&mut bench, cfg, &ck, &mut rng, seq);
+
+    let out = Path::new("bench_results/bench_engine.json");
+    match bench.write_json("bench_engine", out) {
+        Ok(()) => println!("\n[json -> {}]", out.display()),
+        Err(e) => println!("\n[json write failed: {e}]"),
+    }
+}
+
+fn pjrt_section(
+    bench: &mut Bench,
+    cfg: &ModelConfig,
+    ck: &Checkpoint,
+    rng: &mut Rng,
+    seq: usize,
+) {
     let artifacts = Path::new("artifacts");
     let a16 = artifacts.join(score_artifact_name(cfg, "a16"));
     if !a16.exists() {
@@ -46,15 +113,17 @@ fn main() {
     let batch_tokens: Vec<u16> = (0..SCORE_BATCH * seq)
         .map(|_| rng.below(cfg.vocab_size) as u16)
         .collect();
-    for fmt in [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3] {
+    for fmt in FORMATS {
         let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
-        let scorer = HloScorer::load(
-            &artifacts.join(score_artifact_name(cfg, act_tag(&opts).unwrap())),
-            SCORE_BATCH,
-            seq,
-        )
-        .expect("artifact loads");
-        let weights = scorer.upload_weights(&ck).unwrap();
+        let path = artifacts.join(score_artifact_name(cfg, act_tag(&opts).unwrap()));
+        let scorer = match HloScorer::load(&path, SCORE_BATCH, seq) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("[pjrt act={} skipped: {e}]", fmt.name());
+                continue;
+            }
+        };
+        let weights = scorer.upload_weights(ck).expect("weights upload");
         bench.run(
             format!("pjrt score act={}", fmt.name()),
             (SCORE_BATCH * seq) as f64,

@@ -1,23 +1,31 @@
 //! Serving-policy sweep: dynamic-batching window vs latency/throughput on
-//! the coordinator — the L3 batching dial (§Perf). Requires artifacts.
+//! the coordinator — the L3 batching dial (§Perf).
+//!
+//! Runs on whichever backend is available: PJRT when `make artifacts` has
+//! produced the scoring executable (and the `pjrt` feature is on),
+//! otherwise the prepacked compiled in-process engine — so the sweep (and
+//! the reference-vs-compiled decode comparison below it) works on a fresh
+//! clone. Writes `bench_results/bench_serving.json` with decode tokens/s
+//! so future PRs have a perf trajectory.
 
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
-use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::coordinator::{
+    pick_backend, BatchPolicy, Coordinator, CoordinatorConfig, ScoreBackend,
+};
+use zeroquant_fp::engine::{Engine, EngineOpts};
+use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::CompiledModel;
+use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
-use zeroquant_fp::runtime::{score_artifact_name, SCORE_BATCH};
+use zeroquant_fp::runtime::SCORE_BATCH;
 
 fn main() {
     let fam = ModelConfig::family(Arch::Opt);
     let (cfg, _) = &fam[0]; // opt-xs: fastest, isolates coordinator overhead
-    let artifacts = Path::new("artifacts");
-    if !artifacts.join(score_artifact_name(cfg, "a16")).exists() {
-        println!("[skipped: run `make artifacts`]");
-        return;
-    }
     let mut rng = Rng::seeded(19);
     let ck = Checkpoint::random(cfg, &mut rng);
     let seq = cfg.max_seq;
@@ -26,22 +34,37 @@ fn main() {
         .map(|_| (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect())
         .collect();
 
+    let opts = EngineOpts::default();
+    let backend = pick_backend(Path::new("artifacts"), &ck, &opts);
+    // The batching-window dial only exists on the PJRT backend (a batched
+    // GEMM to fill); the compiled backend decodes per request and drains the
+    // queue eagerly, so sweeping wait_ms there would print a dead dial.
+    let waits: &[u64] = match &backend {
+        ScoreBackend::Pjrt { .. } => {
+            println!("backend: pjrt");
+            &[0, 1, 2, 5, 10]
+        }
+        ScoreBackend::Compiled => {
+            println!("backend: compiled in-process engine (no batching dial — clients sweep only)");
+            &[0]
+        }
+    };
+
     println!(
         "{:>10} {:>10} {:>12} {:>10} {:>10} {:>10}",
         "wait(ms)", "clients", "req/s", "p50(ms)", "p95(ms)", "batch"
     );
-    for wait_ms in [0u64, 1, 2, 5, 10] {
+    for &wait_ms in waits {
         for clients in [1usize, 4, 8] {
             let coord = Coordinator::new(CoordinatorConfig {
-                artifacts: artifacts.to_path_buf(),
+                backend: backend.clone(),
                 ck: ck.clone(),
-                opts: EngineOpts::default(),
+                opts,
                 policy: BatchPolicy {
                     max_batch: SCORE_BATCH,
                     max_wait: Duration::from_millis(wait_ms),
                 },
             });
-            let _t0 = Instant::now();
             let mut handles = Vec::new();
             for c in 0..clients {
                 let client = coord.client();
@@ -68,5 +91,44 @@ fn main() {
             );
         }
     }
-    println!("\n(the latency/throughput dial: longer windows fill batches at the cost of p50)");
+    if matches!(backend, ScoreBackend::Pjrt { .. }) {
+        println!("\n(the latency/throughput dial: longer windows fill batches at the cost of p50)");
+    }
+
+    // ---- reference vs compiled decode, the serving-side perf trajectory --
+    println!("\n-- reference engine vs compiled plan decode ({}, A8 FP) --", cfg.name);
+    let mut bench = Bench::default();
+    let window = &windows[0];
+    for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
+        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let engine = Engine::with_opts(&ck, opts);
+        bench.run(
+            format!("engine decode act={}", fmt.name()),
+            seq as f64,
+            "tok",
+            || engine.forward(window),
+        );
+        let model = CompiledModel::compile(&ck, opts);
+        let mut scratch = model.scratch();
+        bench.run(
+            format!("compiled decode act={}", fmt.name()),
+            seq as f64,
+            "tok",
+            || {
+                std::hint::black_box(model.forward(window, &mut scratch));
+            },
+        );
+        if let Some(s) = bench.speedup(
+            &format!("compiled decode act={}", fmt.name()),
+            &format!("engine decode act={}", fmt.name()),
+        ) {
+            println!("   compiled vs reference (act={}): {s:.2}x", fmt.name());
+        }
+    }
+
+    let out = Path::new("bench_results/bench_serving.json");
+    match bench.write_json("bench_serving", out) {
+        Ok(()) => println!("\n[json -> {}]", out.display()),
+        Err(e) => println!("\n[json write failed: {e}]"),
+    }
 }

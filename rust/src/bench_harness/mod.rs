@@ -124,6 +124,50 @@ impl Bench {
         let fb = self.results.iter().find(|m| m.name == b)?;
         Some(fb.mean.as_secs_f64() / fa.mean.as_secs_f64())
     }
+
+    /// All measurements as a JSON document:
+    /// `{"bench": <name>, "results": [{name, iters, mean_ns, stddev_ns,
+    /// min_ns, throughput, unit}, ...]}`. Hand-rolled (serde is not in the
+    /// offline vendor set); names are escaped for quotes/backslashes.
+    pub fn to_json(&self, bench_name: &str) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::new();
+        out.push_str(&format!("{{\"bench\": \"{}\", \"results\": [", esc(bench_name)));
+        for (i, m) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let tp = match m.throughput() {
+                Some(t) => format!("{t:.3}"),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "{{\"name\": \"{}\", \"iters\": {}, \"mean_ns\": {}, \"stddev_ns\": {}, \
+                 \"min_ns\": {}, \"throughput\": {}, \"unit\": \"{}\"}}",
+                esc(&m.name),
+                m.iters,
+                m.mean.as_nanos(),
+                m.stddev.as_nanos(),
+                m.min.as_nanos(),
+                tp,
+                esc(m.work_unit),
+            ));
+        }
+        out.push_str("]}\n");
+        out
+    }
+
+    /// Write the JSON report to `path`, creating parent directories. Bench
+    /// mains call this so every run leaves a machine-readable perf trace
+    /// (the perf trajectory EXPERIMENTS.md §Perf tracks across PRs).
+    pub fn write_json(&self, bench_name: &str, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json(bench_name))
+    }
 }
 
 #[cfg(test)]
@@ -146,6 +190,28 @@ mod tests {
         assert!(m.iters > 0);
         assert!(m.mean > Duration::ZERO);
         assert!(m.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_is_well_formed() {
+        let mut b = Bench {
+            budget: Duration::from_millis(10),
+            warmup: Duration::from_millis(1),
+            results: Vec::new(),
+        };
+        let data: Vec<u64> = (0..64).collect();
+        b.run("sum \"quoted\"", 64.0, "op", || {
+            std::hint::black_box(&data).iter().sum::<u64>()
+        });
+        b.run("no-throughput", 0.0, "", || 1 + 1);
+        let j = b.to_json("bench_test");
+        assert!(j.starts_with("{\"bench\": \"bench_test\""));
+        assert!(j.contains("\"name\": \"sum \\\"quoted\\\"\""));
+        assert!(j.contains("\"throughput\": null"));
+        assert!(j.trim_end().ends_with("]}"));
+        // balanced braces/brackets — cheap structural sanity check
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 
     #[test]

@@ -1,22 +1,33 @@
 //! The serving coordinator — Layer 3's runtime contribution.
 //!
 //! A scoring service over a quantized model: clients submit fixed-length
-//! token windows, the coordinator batches them dynamically (the PJRT
-//! executable is lowered at batch `B`), executes on the PJRT CPU device,
-//! and returns per-window NLL. std::thread + mpsc (tokio is not in the
-//! offline vendor set — the event loop is a plain loop and channels).
+//! token windows, the coordinator batches them dynamically, executes on a
+//! [`ScoreBackend`], and returns per-window NLL. std::thread + mpsc (tokio
+//! is not in the offline vendor set — the event loop is a plain loop and
+//! channels).
 //!
 //! ```text
-//!  client threads ──score(window)──▶ queue ──next_batch──▶ run() loop ──▶ PJRT exe
+//!  client threads ──score(window)──▶ queue ──next_batch──▶ run() loop ──▶ backend
 //!        ▲                                                      │
 //!        └──────────────── per-request oneshot ◀────────────────┘
 //! ```
 //!
-//! Threading model: **all PJRT work happens on the thread that calls
-//! [`Coordinator::run`]** (xla_extension 0.5.1 deadlocks when a second CPU
-//! client is created on another thread while one is in use, so the process
-//! keeps a single per-thread client — see `runtime::cpu_client`). Client
-//! threads only touch channels. `run` returns when every
+//! Two backends:
+//!
+//! * [`ScoreBackend::Pjrt`] — the AOT HLO executable (batch lowered at
+//!   `B = SCORE_BATCH`). All PJRT work happens on the thread that calls
+//!   [`Coordinator::run`] (xla_extension 0.5.1 deadlocks when a second CPU
+//!   client is created on another thread while one is in use, so the
+//!   process keeps a single per-thread client). Needs `make artifacts` and
+//!   the `pjrt` cargo feature.
+//! * [`ScoreBackend::Compiled`] — the prepacked in-process engine
+//!   ([`crate::plan::CompiledModel`]): the checkpoint is compiled once at
+//!   loop start and every request decodes allocation-free through the
+//!   scratch arena. Always available; this is what `zqfp serve`, the
+//!   serving bench and the e2e example fall back to when artifacts (or the
+//!   feature) are missing.
+//!
+//! Client threads only touch channels. `run` returns when every
 //! [`ScoreClient`] has been dropped and the queue is drained.
 
 pub mod batcher;
@@ -31,16 +42,28 @@ pub use metrics::{LatencyStats, ServeReport};
 
 use crate::cli::Args;
 use crate::data::{Corpus, CorpusKind};
+use crate::ensure;
+use crate::error::Result;
 use crate::model::Checkpoint;
 use crate::pipeline::quantize_checkpoint;
+use crate::plan::CompiledModel;
 use crate::quant::Scheme;
 use crate::runtime::HloScorer;
+
+/// Which execution engine serves scoring requests.
+#[derive(Debug, Clone)]
+pub enum ScoreBackend {
+    /// AOT PJRT HLO artifacts under this directory.
+    Pjrt { artifacts: PathBuf },
+    /// The prepacked in-process engine (always available).
+    Compiled,
+}
 
 /// One in-flight scoring request.
 struct Request {
     window: Vec<u16>,
     submitted: Instant,
-    respond: SyncSender<anyhow::Result<f32>>,
+    respond: SyncSender<Result<f32>>,
 }
 
 /// Handle client threads use to talk to a running coordinator. The serving
@@ -53,19 +76,20 @@ pub struct ScoreClient {
 
 impl ScoreClient {
     /// Score one window (blocking). Returns the summed NLL of the window.
-    pub fn score(&self, window: Vec<u16>) -> anyhow::Result<f32> {
-        anyhow::ensure!(window.len() == self.seq, "window must be {} tokens", self.seq);
+    pub fn score(&self, window: Vec<u16>) -> Result<f32> {
+        ensure!(window.len() == self.seq, "window must be {} tokens", self.seq);
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         self.tx
             .send(Request { window, submitted: Instant::now(), respond: rtx })
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        rrx.recv().map_err(|_| anyhow::anyhow!("coordinator dropped request"))?
+            .map_err(|_| crate::anyhow!("coordinator stopped"))?;
+        rrx.recv()
+            .map_err(|_| crate::anyhow!("coordinator dropped request"))?
     }
 }
 
 /// Everything the serving loop needs.
 pub struct CoordinatorConfig {
-    pub artifacts: PathBuf,
+    pub backend: ScoreBackend,
     pub ck: Checkpoint,
     pub opts: crate::engine::EngineOpts,
     pub policy: BatchPolicy,
@@ -96,9 +120,16 @@ impl Coordinator {
 
     /// Run the serving loop on the current thread until every client is
     /// dropped and the queue is drained; returns the serving report.
-    pub fn run(mut self) -> anyhow::Result<ServeReport> {
+    pub fn run(mut self) -> Result<ServeReport> {
         drop(self.tx.take()); // only client handles keep the queue open
-        let scorer = HloScorer::for_model(&self.cfg.artifacts, &self.cfg.ck.config, &self.cfg.opts)?;
+        match self.cfg.backend.clone() {
+            ScoreBackend::Pjrt { artifacts } => self.run_pjrt(&artifacts),
+            ScoreBackend::Compiled => self.run_compiled(),
+        }
+    }
+
+    fn run_pjrt(self, artifacts: &std::path::Path) -> Result<ServeReport> {
+        let scorer = HloScorer::for_model(artifacts, &self.cfg.ck.config, &self.cfg.opts)?;
         let weights = scorer.upload_weights(&self.cfg.ck)?;
         let b = scorer.batch;
         let policy = BatchPolicy { max_batch: b, ..self.cfg.policy };
@@ -131,9 +162,50 @@ impl Coordinator {
                 }
                 Err(e) => {
                     for r in batch {
-                        let _ = r.respond.send(Err(anyhow::anyhow!("{e:#}")));
+                        let _ = r.respond.send(Err(crate::anyhow!("{e:#}")));
                     }
                 }
+            }
+        }
+        Ok(ServeReport {
+            requests,
+            batches,
+            wall: t0.elapsed(),
+            latency,
+            mean_batch_size: requests as f64 / batches.max(1) as f64,
+        })
+    }
+
+    fn run_compiled(self) -> Result<ServeReport> {
+        // Compile once; every request then decodes through the prepacked
+        // plan with zero steady-state allocations.
+        let model = CompiledModel::compile(&self.cfg.ck, self.cfg.opts);
+        let mut scratch = model.scratch();
+        // No batched GEMM to amortize on this backend — requests are decoded
+        // one at a time — so waiting for a batch to fill would buy zero
+        // throughput and only inflate head-request latency. Drain eagerly.
+        let policy = BatchPolicy { max_wait: std::time::Duration::ZERO, ..self.cfg.policy };
+        let vocab = self.cfg.ck.config.vocab_size;
+        let mut latency = LatencyStats::default();
+        let mut batches = 0usize;
+        let mut requests = 0usize;
+        let t0 = Instant::now();
+        while let Some(batch) = next_batch(&self.rx, policy) {
+            batches += 1;
+            requests += batch.len();
+            for r in batch {
+                // Validate before decoding: an out-of-range token id would
+                // panic inside the embedding lookup and take down the whole
+                // serving loop, where the PJRT backend fails one request.
+                let result = if r.window.len() < 2 {
+                    Err(crate::anyhow!("window needs at least 2 tokens for scoring"))
+                } else if let Some(&bad) = r.window.iter().find(|&&t| t as usize >= vocab) {
+                    Err(crate::anyhow!("token id {bad} out of range (vocab size {vocab})"))
+                } else {
+                    Ok(model.score_nll(&r.window, &mut scratch))
+                };
+                latency.record(Instant::now() - r.submitted);
+                let _ = r.respond.send(result);
             }
         }
         Ok(ServeReport {
@@ -147,10 +219,11 @@ impl Coordinator {
 }
 
 /// `zqfp serve` — load a checkpoint, quantize it under `--scheme`, start
-/// the coordinator on its PJRT artifact, fire `--requests` scoring
-/// requests from `--clients` threads, and print the latency/throughput
-/// report (the e2e serving validation of DESIGN.md §5).
-pub fn serve_command(args: &Args) -> Result<(), String> {
+/// the coordinator (PJRT when the artifact exists, otherwise the compiled
+/// in-process engine), fire `--requests` scoring requests from `--clients`
+/// threads, and print the latency/throughput report (the e2e serving
+/// validation of DESIGN.md §5).
+pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let data = PathBuf::from(args.get_or("data", "data"));
@@ -174,15 +247,21 @@ pub fn serve_command(args: &Args) -> Result<(), String> {
         report.compression()
     );
 
+    let opts = cfg.engine_opts();
+    let backend = pick_backend(&artifacts, &qck, &opts);
+    match &backend {
+        ScoreBackend::Pjrt { .. } => println!("backend: pjrt ({})", artifacts.display()),
+        ScoreBackend::Compiled => println!("backend: compiled in-process engine"),
+    }
+
     // workload: eval windows from the C4 surrogate
     let corpus = Corpus::new(CorpusKind::C4);
     let stream = corpus.generate(n_requests * seq, 7);
     let windows: Vec<Vec<u16>> = stream.chunks_exact(seq).map(|c| c.to_vec()).collect();
     let n_windows = windows.len();
 
-    let opts = cfg.engine_opts();
     let coord = Coordinator::new(CoordinatorConfig {
-        artifacts,
+        backend,
         ck: qck,
         opts,
         policy: BatchPolicy {
@@ -198,7 +277,7 @@ pub fn serve_command(args: &Args) -> Result<(), String> {
     for c in 0..n_clients {
         let client = coord.client();
         let my: Vec<Vec<u16>> = windows.iter().skip(c).step_by(n_clients).cloned().collect();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+        handles.push(std::thread::spawn(move || -> Result<f64> {
             let mut sum = 0.0f64;
             for w in my {
                 sum += client.score(w)? as f64;
@@ -206,7 +285,7 @@ pub fn serve_command(args: &Args) -> Result<(), String> {
             Ok(sum)
         }));
     }
-    // PJRT loop on this thread
+    // backend loop on this thread (PJRT single-client-process rule)
     let report = coord.run().map_err(|e| e.to_string())?;
     let mut total_nll = 0.0f64;
     for h in handles {
@@ -220,4 +299,111 @@ pub fn serve_command(args: &Args) -> Result<(), String> {
         tokens
     );
     Ok(())
+}
+
+/// PJRT when this build can execute artifacts and the one we need exists;
+/// otherwise the compiled in-process engine.
+pub fn pick_backend(
+    artifacts: &std::path::Path,
+    ck: &Checkpoint,
+    opts: &crate::engine::EngineOpts,
+) -> ScoreBackend {
+    let available = crate::runtime::PJRT_AVAILABLE
+        && crate::runtime::act_tag(opts)
+            .map(|act| {
+                artifacts
+                    .join(crate::runtime::score_artifact_name(&ck.config, act))
+                    .exists()
+            })
+            .unwrap_or(false);
+    if available {
+        ScoreBackend::Pjrt { artifacts: artifacts.to_path_buf() }
+    } else {
+        ScoreBackend::Compiled
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineOpts;
+    use crate::model::{Arch, Checkpoint, ModelConfig};
+    use crate::rng::Rng;
+    use std::time::Duration;
+
+    fn tiny_ck() -> Checkpoint {
+        let cfg = ModelConfig {
+            name: "coord-test".into(),
+            arch: Arch::Opt,
+            vocab_size: 48,
+            d_model: 24,
+            n_heads: 3,
+            n_layers: 2,
+            d_ff: 48,
+            max_seq: 8,
+        };
+        let mut rng = Rng::seeded(611);
+        Checkpoint::random(&cfg, &mut rng)
+    }
+
+    #[test]
+    fn compiled_backend_serves_requests() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(CoordinatorConfig {
+            backend: ScoreBackend::Compiled,
+            ck: ck.clone(),
+            opts: EngineOpts::default(),
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        });
+        let mut handles = Vec::new();
+        for c in 0..3usize {
+            let client = coord.client();
+            handles.push(std::thread::spawn(move || -> Result<Vec<f32>> {
+                let mut out = Vec::new();
+                for i in 0..5u16 {
+                    let window: Vec<u16> = (0..8).map(|t| (c as u16 + i + t) % 48).collect();
+                    out.push(client.score(window)?);
+                }
+                Ok(out)
+            }));
+        }
+        let report = coord.run().unwrap();
+        for h in handles {
+            let nlls = h.join().unwrap().unwrap();
+            assert!(nlls.iter().all(|v| v.is_finite() && *v > 0.0));
+        }
+        assert_eq!(report.requests, 15);
+        assert!(report.latency.count() == 15);
+
+        // NLL parity with a direct compiled-model score.
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window: Vec<u16> = (0..8).map(|t| t % 48).collect();
+        let direct = model.score_nll(&window, &mut s);
+        let coord2 = Coordinator::new(CoordinatorConfig {
+            backend: ScoreBackend::Compiled,
+            ck,
+            opts: EngineOpts::default(),
+            policy: BatchPolicy::default(),
+        });
+        let client = coord2.client();
+        let h = std::thread::spawn(move || client.score(window).unwrap());
+        coord2.run().unwrap();
+        assert_eq!(h.join().unwrap(), direct);
+    }
+
+    #[test]
+    fn rejects_wrong_window_length() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(CoordinatorConfig {
+            backend: ScoreBackend::Compiled,
+            ck,
+            opts: EngineOpts::default(),
+            policy: BatchPolicy::default(),
+        });
+        let client = coord.client();
+        assert!(client.score(vec![1, 2, 3]).is_err());
+        drop(client);
+        coord.run().unwrap();
+    }
 }

@@ -13,6 +13,13 @@
 //! GPU harness (qtorch fake-quant in an FP16 pipeline): weights arrive
 //! already fake-quantized in the checkpoint; activations are fake-quantized
 //! token-wise at each linear input when [`EngineOpts::act`] says so.
+//!
+//! This is the *reference* implementation: tensors are resolved through
+//! string keys and weights are transposed per call, uniformly for every
+//! batch size (the old `mm_wt` small-batch heuristic is gone — the serving
+//! path that cares about speed is [`crate::plan::CompiledModel`], which
+//! prepacks all of this once and must match these logits bit-for-bit; see
+//! `tests/plan_equivalence.rs`).
 
 use crate::model::{Arch, Checkpoint};
 use crate::quant::{fake_quant_tokenwise, ActQuantConfig};
@@ -167,21 +174,27 @@ impl<'a> Engine<'a> {
         m
     }
 
+    /// `y = b + x @ wᵀ`, bias seeding the accumulator of the axpy kernel.
+    ///
+    /// This is the engine's *numeric contract*, shared bit-for-bit with the
+    /// prepacked fast path ([`crate::plan::CompiledModel`]): one kernel
+    /// ([`crate::tensor::matmul::matmul_into`]) for every batch size, bias
+    /// fused as the accumulation base. The reference engine re-derives `wᵀ`
+    /// per call (it is the slow oracle); the compiled path packs it once.
     fn linear(&self, x: &Matrix, prefix: &str) -> Matrix {
         let w = self.ck.get(&format!("{prefix}.w"));
         let b = self.ck.get(&format!("{prefix}.b"));
-        let mut y = mm_wt(x, w);
+        let wt = w.transpose();
+        let mut y = Matrix::zeros(x.rows, w.rows);
         for r in 0..y.rows {
-            let row = y.row_mut(r);
-            for (c, v) in row.iter_mut().enumerate() {
-                *v += b.data[c];
-            }
+            y.row_mut(r).copy_from_slice(&b.data);
         }
+        crate::tensor::matmul::matmul_into(x, &wt, &mut y);
         y
     }
 
     fn linear_nobias(&self, x: &Matrix, wname: &str) -> Matrix {
-        mm_wt(x, self.ck.get(wname))
+        x.matmul(&self.ck.get(wname).transpose())
     }
 
     fn norm(&self, x: &Matrix, prefix: &str) -> Matrix {
@@ -260,19 +273,6 @@ impl<'a> Engine<'a> {
             }
         }
         ctx
-    }
-}
-
-/// `x @ wᵀ` for the engine's linears. §Perf: the axpy-style blocked kernel
-/// (`matmul`) sustains ~23 GFLOP/s on this host vs ~7 for the dot-product
-/// kernel (`matmul_t`), so for seq-sized batches it pays to transpose the
-/// weight once (O(d²) copy vs O(T·d²) FLOPs) and take the fast kernel.
-/// Tiny batches (calibration single rows) keep the transpose-free path.
-fn mm_wt(x: &Matrix, w: &Matrix) -> Matrix {
-    if x.rows >= 8 {
-        x.matmul(&w.transpose())
-    } else {
-        x.matmul_t(w)
     }
 }
 

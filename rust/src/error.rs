@@ -1,0 +1,138 @@
+//! Minimal error plumbing for the serving/runtime layers.
+//!
+//! The offline vendor set has no `anyhow`, so this module supplies the tiny
+//! subset the crate actually uses: a string-backed [`Error`], a [`Result`]
+//! alias, the [`anyhow!`](crate::anyhow)/[`bail!`](crate::bail)/
+//! [`ensure!`](crate::ensure) macros, and a [`Context`] extension trait.
+//! Everything is deliberately boring — errors here are operator-facing
+//! messages, not recoverable values.
+
+use std::fmt;
+
+/// A string-backed error with optional context frames (outermost first).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Wrap with an outer context line, anyhow-style (`context: cause`).
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` (anyhow's whole-chain form) and `{}` are the same here:
+        // the chain is already flattened into one line.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` intentionally does NOT implement `std::error::Error`, so
+// this blanket conversion cannot overlap the reflexive `From<Error>`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => { $crate::error::Error::msg(format!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+/// `anyhow::Context`-alike for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("boom {}", 42)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = fails().unwrap_err();
+        assert_eq!(format!("{e}"), "boom 42");
+        assert_eq!(format!("{e:#}"), "boom 42");
+
+        let io: std::io::Result<()> =
+            Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        let e = io.context("loading artifact").unwrap_err();
+        assert!(format!("{e}").starts_with("loading artifact: "));
+
+        let n: Option<u32> = None;
+        assert!(n.with_context(|| "empty").is_err());
+
+        let ok: Result<u32> = (|| {
+            ensure!(1 + 1 == 2, "math broke");
+            Ok(7)
+        })();
+        assert_eq!(ok.unwrap(), 7);
+    }
+
+    #[test]
+    fn question_mark_on_std_errors() {
+        fn inner() -> Result<String> {
+            let s = String::from_utf8(vec![0xff])?; // FromUtf8Error: std::error::Error
+            Ok(s)
+        }
+        assert!(inner().is_err());
+    }
+}

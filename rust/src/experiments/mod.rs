@@ -75,7 +75,6 @@ pub struct ExpContext {
     eval_streams: HashMap<&'static str, Vec<u16>>,
     ckpt_cache: HashMap<String, Checkpoint>,
     pub(crate) hessian_cache: HashMap<String, crate::pipeline::FinalizedHessians>,
-    client: Option<xla::PjRtClient>,
     scorers: HashMap<String, HloScorer>,
     pub eval_tokens: usize,
 }
@@ -125,7 +124,6 @@ impl ExpContext {
             eval_streams,
             ckpt_cache: HashMap::new(),
             hessian_cache: HashMap::new(),
-            client: None,
             scorers: HashMap::new(),
             eval_tokens,
         })
@@ -184,18 +182,11 @@ impl ExpContext {
         }
         let name = score_artifact_name(&ck.config, act_tag(opts).unwrap());
         if !self.scorers.contains_key(&name) {
-            let client = match &self.client {
-                Some(c) => c.clone(),
-                None => {
-                    let c = crate::runtime::cpu_client().map_err(|e| e.to_string())?;
-                    self.client = Some(c.clone());
-                    c
-                }
-            };
+            // HloScorer::load reuses the per-thread PJRT client, so loading
+            // dozens of artifacts here still shares one client.
             let path = self.artifacts.join(&name);
-            let scorer =
-                HloScorer::load_with_client(client, &path, SCORE_BATCH, ck.config.max_seq)
-                    .map_err(|e| format!("{e:#}"))?;
+            let scorer = HloScorer::load(&path, SCORE_BATCH, ck.config.max_seq)
+                .map_err(|e| format!("{e:#}"))?;
             self.scorers.insert(name.clone(), scorer);
         }
         let scorer = self.scorers.get(&name).unwrap();

@@ -142,18 +142,46 @@ impl NumericFormat {
         }
     }
 
+    /// True when group parameters depend only on `|x|` (absmax scaling):
+    /// the FP formats, symmetric INT formats, and the F16 passthrough.
+    /// Asymmetric INT needs the full (min, max) affine fit.
+    pub fn is_symmetric(&self) -> bool {
+        match self {
+            NumericFormat::F16 => true,
+            NumericFormat::Fp(_) => true,
+            NumericFormat::Int(i) => i.symmetric,
+        }
+    }
+
     /// Absmax-style one-shot fake quantization of a slice: compute params
     /// from the slice itself, then quantize. Returns the params used.
+    ///
+    /// Symmetric formats (the A8 hot path) use a single fused absmax scan —
+    /// one read of the row instead of a min/max pass followed by a quantize
+    /// pass re-deriving absmax. Asymmetric INT keeps the two-sided scan.
+    /// NaNs are ignored by the scan either way (f32 min/max semantics);
+    /// a non-finite range degenerates to the identity params.
     pub fn fake_quant_slice_dynamic(&self, xs: &mut [f32]) -> GroupParams {
-        let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
-        for &x in xs.iter() {
-            mn = mn.min(x);
-            mx = mx.max(x);
-        }
-        if !mn.is_finite() || !mx.is_finite() {
-            return GroupParams::IDENTITY;
-        }
-        let p = self.group_params(mn, mx);
+        let p = if self.is_symmetric() {
+            let mut am = 0.0f32;
+            for &x in xs.iter() {
+                am = am.max(x.abs());
+            }
+            if !am.is_finite() {
+                return GroupParams::IDENTITY;
+            }
+            self.group_params(-am, am)
+        } else {
+            let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+            for &x in xs.iter() {
+                mn = mn.min(x);
+                mx = mx.max(x);
+            }
+            if !mn.is_finite() || !mx.is_finite() {
+                return GroupParams::IDENTITY;
+            }
+            self.group_params(mn, mx)
+        };
         self.fake_quant_slice(xs, p);
         p
     }
@@ -213,6 +241,47 @@ mod tests {
         let mut xs = vec![-3.0f32, 0.1, 2.0];
         NumericFormat::FP8_E4M3.fake_quant_slice_dynamic(&mut xs);
         assert_eq!(xs[0], -3.0); // absmax maps exactly to a representable point
+    }
+
+    #[test]
+    fn fused_absmax_matches_two_pass_scan() {
+        // The single-pass symmetric scan must produce the same params (and
+        // therefore the same quantized values) as an explicit min/max scan.
+        let mut rng = crate::rng::Rng::seeded(9001);
+        for fmt in [
+            NumericFormat::FP8_E4M3,
+            NumericFormat::FP4_E2M1,
+            NumericFormat::INT8,
+            NumericFormat::INT4,
+            NumericFormat::INT8_ASYM, // asym path must be untouched
+        ] {
+            for _ in 0..20 {
+                let xs: Vec<f32> = (0..64).map(|_| rng.normal_f32() * 5.0).collect();
+                let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
+                for &x in &xs {
+                    mn = mn.min(x);
+                    mx = mx.max(x);
+                }
+                let expect = fmt.group_params(mn, mx);
+                let mut ys = xs.clone();
+                let got = fmt.fake_quant_slice_dynamic(&mut ys);
+                assert_eq!(got.scale.to_bits(), expect.scale.to_bits(), "{}", fmt.name());
+                assert_eq!(got.zero_point, expect.zero_point, "{}", fmt.name());
+                let mut zs = xs.clone();
+                fmt.fake_quant_slice(&mut zs, expect);
+                for (a, b) in ys.iter().zip(&zs) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", fmt.name());
+                }
+            }
+        }
+        // degenerate inputs keep the old guarantees
+        for fmt in [NumericFormat::FP8_E4M3, NumericFormat::INT8] {
+            let mut empty: Vec<f32> = vec![];
+            assert_eq!(fmt.fake_quant_slice_dynamic(&mut empty).scale, 1.0);
+            let mut inf = vec![1.0f32, f32::INFINITY];
+            assert_eq!(fmt.fake_quant_slice_dynamic(&mut inf), GroupParams::IDENTITY);
+            assert_eq!(inf[0], 1.0, "non-finite range must leave data untouched");
+        }
     }
 
     #[test]

@@ -11,11 +11,18 @@
 //! crate) drives AOT-compiled JAX/Pallas computations through PJRT; Python
 //! exists only at build time.
 
+// The numeric kernels are written as explicit index loops on purpose: the
+// compiled fast path must be bit-identical to the reference engine, so the
+// floating-point operation order is part of the contract and iterator
+// rewrites that obscure it are not wanted here.
+#![allow(clippy::needless_range_loop)]
+
 pub mod bench_harness;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod engine;
+pub mod error;
 pub mod eval;
 pub mod experiments;
 pub mod formats;
@@ -24,6 +31,7 @@ pub mod linalg;
 pub mod lorc;
 pub mod model;
 pub mod pipeline;
+pub mod plan;
 pub mod quant;
 pub mod rng;
 pub mod runtime;

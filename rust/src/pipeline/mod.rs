@@ -10,11 +10,12 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::engine::{Engine, LinearSite, Site};
+use crate::engine::{LinearSite, Site};
 use crate::formats::NumericFormat;
 use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
 use crate::lorc::{LorcConfig, LorcFactors};
 use crate::model::{Arch, Checkpoint};
+use crate::plan::CompiledModel;
 use crate::quant::{
     quantize_weight_rtn, ActQuantConfig, ScaleConstraint, Scheme, WeightQuantConfig,
 };
@@ -131,11 +132,18 @@ pub fn quantizable_tensors(arch: Arch, layer: usize) -> Vec<(String, LinearSite)
 
 /// Run calibration forward passes and accumulate per-site Hessians.
 /// Calibration uses full-precision activations (the GPTQ-repo protocol).
+///
+/// Runs on the prepacked [`CompiledModel`] path: weights are transposed
+/// once for the whole calibration set (the reference engine re-transposes
+/// per linear call) and the scratch arena is reused across sequences, so
+/// even single-row calibration batches allocate nothing per pass. The
+/// observed activations are bit-identical to `Engine::forward_observed`.
 pub fn calibrate(ck: &Checkpoint, calib_seqs: &[Vec<u16>]) -> HashMap<Site, HessianAccumulator> {
-    let engine = Engine::new(ck);
+    let model = CompiledModel::compile(ck, crate::engine::EngineOpts::default());
+    let mut scratch = model.scratch();
     let mut accs: HashMap<Site, HessianAccumulator> = HashMap::new();
     for seq in calib_seqs {
-        engine.forward_observed(seq, &mut |site, x: &Matrix| {
+        model.forward_observed(seq, &mut scratch, &mut |site, x: &Matrix| {
             accs.entry(site)
                 .or_insert_with(|| HessianAccumulator::new(x.cols))
                 .add_batch(x);
@@ -270,6 +278,7 @@ pub fn quantize_and_eval(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Engine;
     use crate::model::ModelConfig;
     use crate::rng::Rng;
 

@@ -1,0 +1,182 @@
+//! LUT-based fast path for the ExMy codecs.
+//!
+//! [`FpFormat::quantize`] is the crate's bit-exactness oracle: per scalar it
+//! widens to f64, extracts the binade, divides by the quantum, rounds
+//! ties-to-even and narrows back. Correct, and far too slow for the A8 hot
+//! path where it runs on every element of every linear input.
+//!
+//! [`FpQuantLut`] precomputes, for each of the 256 possible f32 exponent
+//! buckets, the rounding quantum of that binade and its reciprocal — both
+//! exact powers of two — derived from the format's enumerated value set
+//! ([`FpFormat::positive_values`], which advertises exactly this use). A
+//! quantize is then four f32 ops and one table load:
+//!
+//! ```text
+//!   q = rte(|x| * inv_quantum[exp(x)]) * quantum[exp(x)]   (copysign x)
+//! ```
+//!
+//! **Bit-exactness argument.** Every scaling step multiplies an f32 by a
+//! power of two whose product stays in range, so no rounding occurs before
+//! the `round_ties_even`, and the rounded integer (≤ 2^(m+1)) and its
+//! rescaling are exact in f32. The oracle performs the same real-number
+//! computation in f64 on exactly-widened inputs, so both paths round the
+//! same real value at the same single point — the results are bit-identical.
+//! `lut_matches_oracle_*` in `tests/plan_equivalence.rs` verifies this over
+//! every exponent bucket and every 16-bit code pattern.
+
+use crate::formats::{pow2, FpFormat, GroupParams};
+
+/// Per-exponent-bucket quantization table for one [`FpFormat`].
+#[derive(Debug, Clone)]
+pub struct FpQuantLut {
+    fmt: FpFormat,
+    /// `max_finite()` narrowed to f32 (exact for every supported format).
+    max: f32,
+    /// Rounding quantum of the binade `[2^(e8-127), 2^(e8-126))`.
+    quantum: [f32; 256],
+    /// `1 / quantum` (exact: quanta are powers of two).
+    inv_quantum: [f32; 256],
+}
+
+impl FpQuantLut {
+    /// Build the table from the format's enumerated value set.
+    pub fn new(fmt: FpFormat) -> FpQuantLut {
+        let vals = fmt.positive_values();
+        assert!(vals.len() >= 2 && vals[0] == 0.0, "degenerate format");
+        let max = *vals.last().unwrap();
+        let top_step = f64::from(vals[vals.len() - 1]) - f64::from(vals[vals.len() - 2]);
+        let mut quantum = [0.0f32; 256];
+        let mut inv_quantum = [0.0f32; 256];
+        for e8 in 0..256usize {
+            // Probe the low edge of the binade; the spacing of representable
+            // values is constant within a binade (and within the whole
+            // subnormal range), so the gap around the probe IS the quantum.
+            let probe = pow2(e8 as i32 - 127);
+            let q = if probe >= f64::from(max) {
+                // Bucket fully saturates — entry unreachable (the |x| >= max
+                // check fires first); keep the top-binade spacing anyway.
+                top_step
+            } else {
+                let idx = vals.partition_point(|&v| f64::from(v) <= probe);
+                // idx >= 1 because vals[0] = 0 <= probe, and idx < len
+                // because probe < max.
+                f64::from(vals[idx]) - f64::from(vals[idx - 1])
+            };
+            debug_assert!(q > 0.0 && q.log2().fract() == 0.0, "quantum must be a power of two");
+            quantum[e8] = q as f32;
+            inv_quantum[e8] = (1.0 / q) as f32;
+        }
+        FpQuantLut { fmt, max, quantum, inv_quantum }
+    }
+
+    pub fn format(&self) -> FpFormat {
+        self.fmt
+    }
+
+    /// Largest representable magnitude, as f32.
+    pub fn max_finite(&self) -> f32 {
+        self.max
+    }
+
+    /// Quantize one value to the nearest representable point of the format.
+    /// Bit-identical to [`FpFormat::quantize`].
+    #[inline]
+    pub fn quantize(&self, x: f32) -> f32 {
+        if x.is_nan() {
+            return f32::NAN;
+        }
+        let a = x.abs();
+        if a >= self.max {
+            return self.max.copysign(x);
+        }
+        let e8 = ((a.to_bits() >> 23) & 0xff) as usize;
+        let r = (a * self.inv_quantum[e8]).round_ties_even() * self.quantum[e8];
+        r.copysign(x)
+    }
+
+    /// Fake-quantize a slice under fixed group params, mirroring
+    /// [`crate::formats::NumericFormat::fake_quant_slice`] for FP formats.
+    #[inline]
+    pub fn fake_quant_slice(&self, xs: &mut [f32], p: GroupParams) {
+        // f32 division (not reciprocal-multiply), same as the oracle slice
+        // quantizer — required for bit-identity.
+        for x in xs.iter_mut() {
+            *x = self.quantize(*x / p.scale) * p.scale;
+        }
+    }
+
+    /// One token row of the A8 hot path: fused absmax scan + LUT quantize,
+    /// bit-identical to `NumericFormat::Fp(fmt).fake_quant_slice_dynamic`.
+    /// Returns the scale used (1.0 for the degenerate identity cases).
+    #[inline]
+    pub fn fake_quant_row(&self, xs: &mut [f32]) -> f32 {
+        let mut am = 0.0f32;
+        for &x in xs.iter() {
+            am = am.max(x.abs());
+        }
+        if !am.is_finite() {
+            return 1.0; // identity, matching the oracle's non-finite guard
+        }
+        // Same expression as NumericFormat::group_params for Fp.
+        let scale = if am > 0.0 { am / self.max } else { 1.0 };
+        self.fake_quant_slice(xs, GroupParams { scale, zero_point: 0 });
+        scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lut_quantizes_own_values_exactly() {
+        for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+            let lut = FpQuantLut::new(fmt);
+            for v in fmt.positive_values() {
+                assert_eq!(lut.quantize(v), v, "{} value {v}", fmt.name());
+                assert_eq!(lut.quantize(-v), -v, "{} value -{v}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn lut_matches_oracle_on_random_samples() {
+        let mut rng = crate::rng::Rng::seeded(77);
+        for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+            let lut = FpQuantLut::new(fmt);
+            for _ in 0..5000 {
+                let x = rng.normal_f32() * fmt.max_finite() as f32 * 0.5;
+                let a = lut.quantize(x);
+                let b = fmt.quantize(x);
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: x={x} lut={a} oracle={b}", fmt.name());
+            }
+        }
+    }
+
+    #[test]
+    fn lut_handles_specials_like_oracle() {
+        let lut = FpQuantLut::new(FpFormat::E4M3);
+        let f = FpFormat::E4M3;
+        for x in [0.0f32, -0.0, 1e-30, -1e-30, 1e30, -1e30, f32::INFINITY, f32::NEG_INFINITY] {
+            assert_eq!(lut.quantize(x).to_bits(), f.quantize(x).to_bits(), "x={x}");
+        }
+        assert!(lut.quantize(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn row_path_matches_dynamic_oracle() {
+        let mut rng = crate::rng::Rng::seeded(78);
+        let lut = FpQuantLut::new(FpFormat::E4M3);
+        let fmt = crate::formats::NumericFormat::FP8_E4M3;
+        for len in [1usize, 7, 64, 513] {
+            let mut a: Vec<f32> = (0..len).map(|_| rng.normal_f32() * 3.0).collect();
+            let mut b = a.clone();
+            let s = lut.fake_quant_row(&mut a);
+            let p = fmt.fake_quant_slice_dynamic(&mut b);
+            assert_eq!(s, p.scale);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

@@ -1,0 +1,614 @@
+//! Prepacked execution plans — the allocation-free fast path of the engine.
+//!
+//! [`crate::engine::Engine`] is the *reference* implementation: it resolves
+//! every tensor through `format!`-built string keys on each forward pass and
+//! re-transposes each weight matrix per linear call. That is the right shape
+//! for an oracle, and the wrong shape for a decode loop.
+//!
+//! [`CompiledModel::compile`] runs all of that work **once** per
+//! `(Checkpoint, EngineOpts)`:
+//!
+//! * every tensor is resolved out of the `BTreeMap` into per-layer structs —
+//!   the decode loop performs zero string formatting and zero map lookups;
+//! * weights are prepacked transposed (`[in, out]`), the layout the axpy
+//!   kernel [`crate::tensor::matmul::matmul_into`] streams unit-stride; the
+//!   q/k/v projections (and llama's gate/up) are fused into one wide matmul;
+//! * biases are fused into the matmul epilogue by seeding the accumulator,
+//!   eliminating the separate bias pass;
+//! * FP8/FP4 token-wise activation fake-quant runs through the
+//!   [`FpQuantLut`] table instead of the per-scalar f64 oracle codec;
+//! * all intermediates live in a [`DecodeScratch`] arena sized once for
+//!   `max_seq` — steady-state decode performs **zero heap allocations**
+//!   (asserted by `tests/plan_alloc.rs` with a counting allocator).
+//!
+//! The compiled path is **bit-identical** to the reference engine: every
+//! float is produced by the same operation sequence (fusing q/k/v widens the
+//! matmul but preserves each output scalar's accumulation order, and the LUT
+//! quantizer is bit-equal to the oracle codec by construction). The
+//! equivalence is enforced across architectures, activation formats and
+//! sequence lengths by `tests/plan_equivalence.rs`.
+
+mod lut;
+
+pub use lut::FpQuantLut;
+
+use crate::engine::{EngineOpts, LinearSite, Site};
+use crate::formats::NumericFormat;
+use crate::model::{Arch, Checkpoint, ModelConfig};
+use crate::tensor::{matmul, Matrix};
+
+/// A linear layer prepacked for the axpy kernel: transposed weight
+/// (`[d_in, d_out]`) plus an optional fused bias. Several source linears
+/// sharing one input may be packed side by side into a single wide matmul.
+#[derive(Debug, Clone)]
+pub struct PackedLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// `[d_in, d_out]` — column `j` is output feature `j`.
+    wt: Matrix,
+    /// Fused bias (`d_out`), or empty when every packed source is bias-free.
+    bias: Vec<f32>,
+}
+
+impl PackedLinear {
+    /// Pack one or more `[out, in]` weight matrices (with optional biases)
+    /// that share the same input into one transposed, fused linear.
+    /// Either every source has a bias or none does.
+    fn pack(parts: &[(&Matrix, Option<&Matrix>)]) -> PackedLinear {
+        let d_in = parts[0].0.cols;
+        let d_out: usize = parts.iter().map(|(w, _)| w.rows).sum();
+        let n_biased = parts.iter().filter(|(_, b)| b.is_some()).count();
+        assert!(
+            n_biased == 0 || n_biased == parts.len(),
+            "cannot fuse biased with bias-free linears"
+        );
+        let mut wt = Matrix::zeros(d_in, d_out);
+        let mut bias = Vec::new();
+        let mut off = 0usize;
+        for (w, b) in parts {
+            assert_eq!(w.cols, d_in, "fused linears must share the input dim");
+            // Blocked transpose-copy into the fused layout.
+            const BLK: usize = 32;
+            for rb in (0..w.rows).step_by(BLK) {
+                for cb in (0..w.cols).step_by(BLK) {
+                    for r in rb..(rb + BLK).min(w.rows) {
+                        for c in cb..(cb + BLK).min(w.cols) {
+                            wt.data[c * d_out + off + r] = w.data[r * w.cols + c];
+                        }
+                    }
+                }
+            }
+            if let Some(b) = b {
+                assert_eq!(b.data.len(), w.rows, "bias shape mismatch");
+                bias.extend_from_slice(&b.data);
+            }
+            off += w.rows;
+        }
+        PackedLinear { d_in, d_out, wt, bias }
+    }
+
+    /// `out = bias + x @ wt` into a scratch buffer (resized, no allocation
+    /// when the buffer's capacity suffices). Bias seeds the accumulator —
+    /// the same operation order as the reference engine's linear.
+    pub fn run_into(&self, x: &Matrix, out: &mut Matrix) {
+        assert_eq!(x.cols, self.d_in, "linear input dim mismatch");
+        if self.bias.is_empty() {
+            out.resize_to(x.rows, self.d_out); // zeroed accumulation base
+        } else {
+            // Seed the accumulator with the bias directly — one write pass
+            // instead of a zero fill followed by a bias copy.
+            out.resize_rows_to(x.rows, &self.bias);
+        }
+        matmul::matmul_into(x, &self.wt, out);
+    }
+}
+
+/// A resolved norm: LayerNorm (gain + bias, Opt) or RMSNorm (gain, Llama).
+#[derive(Debug, Clone)]
+struct CompiledNorm {
+    gain: Vec<f32>,
+    /// `Some` for LayerNorm, `None` for RMSNorm.
+    bias: Option<Vec<f32>>,
+}
+
+impl CompiledNorm {
+    fn from_ck(ck: &Checkpoint, prefix: &str) -> CompiledNorm {
+        let gain = ck.get(&format!("{prefix}.g")).data.clone();
+        let bias = match ck.config.arch {
+            Arch::Opt => Some(ck.get(&format!("{prefix}.b")).data.clone()),
+            Arch::Llama => None,
+        };
+        CompiledNorm { gain, bias }
+    }
+
+    /// Normalize `x` into `out` — the exact arithmetic of `Engine::norm`.
+    fn run_into(&self, x: &Matrix, out: &mut Matrix) {
+        out.resize_to(x.rows, x.cols);
+        let eps = 1e-5f32;
+        match &self.bias {
+            Some(bias) => {
+                for r in 0..x.rows {
+                    let row = x.row(r);
+                    let mean = row.iter().sum::<f32>() / row.len() as f32;
+                    let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>()
+                        / row.len() as f32;
+                    let inv = 1.0 / (var + eps).sqrt();
+                    let orow = out.row_mut(r);
+                    for c in 0..row.len() {
+                        orow[c] = (row[c] - mean) * inv * self.gain[c] + bias[c];
+                    }
+                }
+            }
+            None => {
+                for r in 0..x.rows {
+                    let row = x.row(r);
+                    let ms = row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
+                    let inv = 1.0 / (ms + eps).sqrt();
+                    let orow = out.row_mut(r);
+                    for c in 0..row.len() {
+                        orow[c] = row[c] * inv * self.gain[c];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The MLP of one block, prepacked.
+#[derive(Debug, Clone)]
+enum CompiledMlp {
+    /// Opt: fc1 → relu → fc2.
+    Relu { fc1: PackedLinear, fc2: PackedLinear },
+    /// Llama: fused gate|up → silu·mul → down.
+    GatedSilu { gate_up: PackedLinear, down: PackedLinear },
+}
+
+/// One transformer block with every tensor resolved and prepacked.
+#[derive(Debug, Clone)]
+struct CompiledLayer {
+    ln1: CompiledNorm,
+    /// Fused q|k|v projection: `[d, 3d]`.
+    qkv: PackedLinear,
+    out_proj: PackedLinear,
+    ln2: CompiledNorm,
+    mlp: CompiledMlp,
+}
+
+/// How token-wise activation fake-quant executes in the compiled path.
+#[derive(Debug, Clone)]
+enum ActPath {
+    /// F16 passthrough — no-op.
+    Noop,
+    /// FP formats: fused absmax + LUT quantize (bit-equal to the oracle).
+    Lut(FpQuantLut),
+    /// INT formats: the oracle slice quantizer (already single-pass).
+    Oracle(NumericFormat),
+}
+
+/// A checkpoint compiled into an execution plan for the decode loop.
+#[derive(Debug, Clone)]
+pub struct CompiledModel {
+    pub config: ModelConfig,
+    pub opts: EngineOpts,
+    embed: Matrix,
+    pos: Matrix,
+    layers: Vec<CompiledLayer>,
+    final_norm: CompiledNorm,
+    act: ActPath,
+}
+
+/// Reusable per-sequence arena: every buffer is sized for `max_seq` at
+/// construction, then reshaped (never reallocated) per forward call.
+#[derive(Debug, Clone)]
+pub struct DecodeScratch {
+    /// Residual stream `[seq, d]`.
+    x: Matrix,
+    /// Norm output / quantized linear input `[seq, d]`.
+    nrm: Matrix,
+    /// Fused q|k|v activations `[seq, 3d]`.
+    qkv: Matrix,
+    /// Attention context `[seq, d]`.
+    ctx: Matrix,
+    /// Residual-branch projection output `[seq, d]`.
+    proj: Matrix,
+    /// MLP hidden: `[seq, ff]` (Opt) or fused gate|up `[seq, 2ff]` (Llama).
+    hidden: Matrix,
+    /// Llama silu(gate)·up `[seq, ff]` (empty for Opt).
+    act2: Matrix,
+    /// Attention score row (`max_seq`).
+    scores: Vec<f32>,
+    /// Output logits `[seq, vocab]`.
+    logits: Matrix,
+}
+
+impl DecodeScratch {
+    pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        let s = cfg.max_seq;
+        let d = cfg.d_model;
+        let (hidden_cols, act2_rows) = match cfg.arch {
+            Arch::Opt => (cfg.d_ff, 0),
+            Arch::Llama => (2 * cfg.d_ff, s),
+        };
+        DecodeScratch {
+            x: Matrix::zeros(s, d),
+            nrm: Matrix::zeros(s, d),
+            qkv: Matrix::zeros(s, 3 * d),
+            ctx: Matrix::zeros(s, d),
+            proj: Matrix::zeros(s, d),
+            hidden: Matrix::zeros(s, hidden_cols),
+            act2: Matrix::zeros(act2_rows, cfg.d_ff),
+            scores: vec![0.0; s],
+            logits: Matrix::zeros(s, cfg.vocab_size),
+        }
+    }
+}
+
+impl CompiledModel {
+    /// Resolve + prepack a checkpoint under the given engine options.
+    /// All string-keyed lookups, transposes and LUT builds happen here.
+    pub fn compile(ck: &Checkpoint, opts: EngineOpts) -> CompiledModel {
+        let cfg = ck.config.clone();
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for layer in 0..cfg.n_layers {
+            let p = format!("layers.{layer}");
+            let ln1 = CompiledNorm::from_ck(ck, &format!("{p}.ln1"));
+            let qkv = PackedLinear::pack(&[
+                (ck.get(&format!("{p}.attn.q.w")), Some(ck.get(&format!("{p}.attn.q.b")))),
+                (ck.get(&format!("{p}.attn.k.w")), Some(ck.get(&format!("{p}.attn.k.b")))),
+                (ck.get(&format!("{p}.attn.v.w")), Some(ck.get(&format!("{p}.attn.v.b")))),
+            ]);
+            let out_proj = PackedLinear::pack(&[(
+                ck.get(&format!("{p}.attn.o.w")),
+                Some(ck.get(&format!("{p}.attn.o.b"))),
+            )]);
+            let ln2 = CompiledNorm::from_ck(ck, &format!("{p}.ln2"));
+            let mlp = match cfg.arch {
+                Arch::Opt => CompiledMlp::Relu {
+                    fc1: PackedLinear::pack(&[(
+                        ck.get(&format!("{p}.mlp.fc1.w")),
+                        Some(ck.get(&format!("{p}.mlp.fc1.b"))),
+                    )]),
+                    fc2: PackedLinear::pack(&[(
+                        ck.get(&format!("{p}.mlp.fc2.w")),
+                        Some(ck.get(&format!("{p}.mlp.fc2.b"))),
+                    )]),
+                },
+                Arch::Llama => CompiledMlp::GatedSilu {
+                    gate_up: PackedLinear::pack(&[
+                        (ck.get(&format!("{p}.mlp.gate.w")), None),
+                        (ck.get(&format!("{p}.mlp.up.w")), None),
+                    ]),
+                    down: PackedLinear::pack(&[(
+                        ck.get(&format!("{p}.mlp.down.w")),
+                        Some(ck.get(&format!("{p}.mlp.down.b"))),
+                    )]),
+                },
+            };
+            layers.push(CompiledLayer { ln1, qkv, out_proj, ln2, mlp });
+        }
+        let act = match opts.act.format {
+            NumericFormat::F16 => ActPath::Noop,
+            NumericFormat::Fp(f) => ActPath::Lut(FpQuantLut::new(f)),
+            other => ActPath::Oracle(other),
+        };
+        CompiledModel {
+            embed: ck.get("embed").clone(),
+            pos: ck.get("pos_embed").clone(),
+            final_norm: CompiledNorm::from_ck(ck, "final_norm"),
+            config: cfg,
+            opts,
+            layers,
+            act,
+        }
+    }
+
+    /// A fresh arena sized for this model's `max_seq`.
+    pub fn scratch(&self) -> DecodeScratch {
+        DecodeScratch::new(&self.config)
+    }
+
+    /// Forward pass into the arena; returns the logits buffer `[seq, vocab]`.
+    /// Allocation-free once `s` is warm.
+    pub fn forward<'s>(&self, tokens: &[u16], s: &'s mut DecodeScratch) -> &'s Matrix {
+        self.forward_observed(tokens, s, &mut |_, _| {})
+    }
+
+    /// Forward pass reporting every linear input (pre activation-quant) to
+    /// `observe` — the calibration entry point (GPTQ Hessian accumulation),
+    /// mirroring `Engine::forward_observed` site for site.
+    pub fn forward_observed<'s>(
+        &self,
+        tokens: &[u16],
+        s: &'s mut DecodeScratch,
+        observe: &mut dyn FnMut(Site, &Matrix),
+    ) -> &'s Matrix {
+        let cfg = &self.config;
+        assert!(
+            tokens.len() <= cfg.max_seq,
+            "sequence {} exceeds max_seq {}",
+            tokens.len(),
+            cfg.max_seq
+        );
+        let seq = tokens.len();
+        let d = cfg.d_model;
+
+        s.x.resize_to(seq, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let e = self.embed.row(tok as usize);
+            let p = self.pos.row(t);
+            let row = s.x.row_mut(t);
+            for i in 0..d {
+                row[i] = e[i] + p[i];
+            }
+        }
+
+        for (layer, cl) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            cl.ln1.run_into(&s.x, &mut s.nrm);
+            observe(Site { layer, site: LinearSite::Qkv }, &s.nrm);
+            self.actq(&mut s.nrm);
+            cl.qkv.run_into(&s.nrm, &mut s.qkv);
+            attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
+            observe(Site { layer, site: LinearSite::OutProj }, &s.ctx);
+            self.actq(&mut s.ctx);
+            cl.out_proj.run_into(&s.ctx, &mut s.proj);
+            s.x.add_assign(&s.proj);
+            // ---- mlp ----
+            cl.ln2.run_into(&s.x, &mut s.nrm);
+            observe(Site { layer, site: LinearSite::Fc1 }, &s.nrm);
+            self.actq(&mut s.nrm);
+            match &cl.mlp {
+                CompiledMlp::Relu { fc1, fc2 } => {
+                    fc1.run_into(&s.nrm, &mut s.hidden);
+                    for v in s.hidden.data.iter_mut() {
+                        *v = v.max(0.0); // relu
+                    }
+                    observe(Site { layer, site: LinearSite::Fc2 }, &s.hidden);
+                    self.actq(&mut s.hidden);
+                    fc2.run_into(&s.hidden, &mut s.proj);
+                }
+                CompiledMlp::GatedSilu { gate_up, down } => {
+                    gate_up.run_into(&s.nrm, &mut s.hidden); // [seq, 2ff]
+                    let ff = cfg.d_ff;
+                    s.act2.resize_to(seq, ff);
+                    for r in 0..seq {
+                        let hrow = s.hidden.row(r);
+                        let arow = s.act2.row_mut(r);
+                        for c in 0..ff {
+                            let g = hrow[c];
+                            let u = hrow[ff + c];
+                            let sl = g / (1.0 + (-g).exp()); // silu
+                            arow[c] = sl * u;
+                        }
+                    }
+                    observe(Site { layer, site: LinearSite::Fc2 }, &s.act2);
+                    self.actq(&mut s.act2);
+                    down.run_into(&s.act2, &mut s.proj);
+                }
+            }
+            s.x.add_assign(&s.proj);
+        }
+
+        self.final_norm.run_into(&s.x, &mut s.nrm);
+        // tied LM head: logits = x @ embedᵀ — the embed matrix is already in
+        // the `[n, k]` layout the bt kernel wants, no prepack needed.
+        s.logits.resize_to(seq, cfg.vocab_size);
+        matmul::matmul_bt_into(&s.nrm, &self.embed, &mut s.logits);
+        &s.logits
+    }
+
+    /// Convenience for tests/one-shot callers: forward with a throwaway
+    /// arena, returning owned logits.
+    pub fn forward_alloc(&self, tokens: &[u16]) -> Matrix {
+        let mut s = self.scratch();
+        self.forward(tokens, &mut s);
+        s.logits
+    }
+
+    /// Summed teacher-forced NLL of one window (positions `1..len` scored),
+    /// the quantity the serving scorer returns per request. Allocation-free.
+    pub fn score_nll(&self, window: &[u16], s: &mut DecodeScratch) -> f32 {
+        assert!(window.len() >= 2, "scoring needs at least 2 tokens");
+        let logits = self.forward(window, s);
+        logits_nll(logits, window) as f32
+    }
+
+    /// Token-wise activation fake-quant, dispatched through the plan's
+    /// precompiled path. Bit-identical to the reference engine's
+    /// `fake_quant_tokenwise` for every `NumericFormat`.
+    fn actq(&self, m: &mut Matrix) {
+        match &self.act {
+            ActPath::Noop => {}
+            ActPath::Lut(lut) => {
+                for r in 0..m.rows {
+                    lut.fake_quant_row(m.row_mut(r));
+                }
+            }
+            ActPath::Oracle(fmt) => {
+                for r in 0..m.rows {
+                    fmt.fake_quant_slice_dynamic(m.row_mut(r));
+                }
+            }
+        }
+    }
+}
+
+/// Summed teacher-forced NLL of `window` from its already-computed logits
+/// (`logits.row(t)` predicts `window[t+1]`): the crate's one definition of
+/// the per-window scoring quantity, shared by [`CompiledModel::score_nll`]
+/// and callers that already hold the logits.
+pub fn logits_nll(logits: &Matrix, window: &[u16]) -> f64 {
+    debug_assert!(logits.rows + 1 >= window.len());
+    let mut nll_sum = 0.0f64;
+    for (t, &target) in window[1..].iter().enumerate() {
+        let row = logits.row(t);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f64 = row.iter().map(|&x| ((x - mx) as f64).exp()).sum::<f64>().ln() + mx as f64;
+        nll_sum += lse - row[target as usize] as f64;
+    }
+    nll_sum
+}
+
+/// Multi-head causal self-attention over the fused q|k|v buffer `[seq, 3d]`
+/// (q at column 0, k at `d`, v at `2d`), writing `[seq, d]` into `ctx`.
+/// The exact arithmetic of `Engine::attention`.
+fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mut [f32]) {
+    let seq = qkv.rows;
+    let d = cfg.d_model;
+    let h = cfg.n_heads;
+    let dh = cfg.head_dim();
+    let scale = 1.0 / (dh as f32).sqrt();
+    ctx.resize_to(seq, d);
+    let scores = &mut scores[..seq];
+    for head in 0..h {
+        let off = head * dh;
+        for i in 0..seq {
+            let qrow = &qkv.row(i)[off..off + dh];
+            // scores over j <= i
+            let mut mx = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
+                let krow = &qkv.row(j)[d + off..d + off + dh];
+                let mut dot = 0.0f32;
+                for t in 0..dh {
+                    dot += qrow[t] * krow[t];
+                }
+                *sc = dot * scale;
+                mx = mx.max(*sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(i + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let crow = &mut ctx.row_mut(i)[off..off + dh];
+            for (j, &p) in scores.iter().enumerate().take(i + 1) {
+                let w = p * inv;
+                let vrow = &qkv.row(j)[2 * d + off..2 * d + off + dh];
+                for t in 0..dh {
+                    crow[t] += w * vrow[t];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tiny(arch: Arch) -> ModelConfig {
+        ModelConfig {
+            name: "plan-test".into(),
+            arch,
+            vocab_size: 48,
+            d_model: 24,
+            n_heads: 3,
+            n_layers: 2,
+            d_ff: 48,
+            max_seq: 16,
+        }
+    }
+
+    #[test]
+    fn pack_matches_transpose() {
+        let mut rng = Rng::seeded(211);
+        let w1 = Matrix::randn(5, 7, 1.0, &mut rng);
+        let w2 = Matrix::randn(3, 7, 1.0, &mut rng);
+        let b1 = Matrix::randn(1, 5, 1.0, &mut rng);
+        let b2 = Matrix::randn(1, 3, 1.0, &mut rng);
+        let p = PackedLinear::pack(&[(&w1, Some(&b1)), (&w2, Some(&b2))]);
+        assert_eq!((p.d_in, p.d_out), (7, 8));
+        let t1 = w1.transpose();
+        let t2 = w2.transpose();
+        for k in 0..7 {
+            for j in 0..5 {
+                assert_eq!(p.wt.at(k, j), t1.at(k, j));
+            }
+            for j in 0..3 {
+                assert_eq!(p.wt.at(k, 5 + j), t2.at(k, j));
+            }
+        }
+        assert_eq!(&p.bias[..5], &b1.data[..]);
+        assert_eq!(&p.bias[5..], &b2.data[..]);
+    }
+
+    #[test]
+    fn run_into_equals_unfused_linears() {
+        let mut rng = Rng::seeded(212);
+        let w1 = Matrix::randn(6, 10, 0.3, &mut rng);
+        let w2 = Matrix::randn(4, 10, 0.3, &mut rng);
+        let x = Matrix::randn(9, 10, 1.0, &mut rng);
+        let p = PackedLinear::pack(&[(&w1, None), (&w2, None)]);
+        let mut out = Matrix::zeros(0, 0);
+        p.run_into(&x, &mut out);
+        let y1 = x.matmul(&w1.transpose());
+        let y2 = x.matmul(&w2.transpose());
+        for r in 0..9 {
+            for c in 0..6 {
+                assert_eq!(out.at(r, c), y1.at(r, c));
+            }
+            for c in 0..4 {
+                assert_eq!(out.at(r, 6 + c), y2.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn forward_shapes_and_finite() {
+        for arch in [Arch::Opt, Arch::Llama] {
+            let mut rng = Rng::seeded(213);
+            let ck = Checkpoint::random(&tiny(arch), &mut rng);
+            let model = CompiledModel::compile(&ck, EngineOpts::default());
+            let mut s = model.scratch();
+            let logits = model.forward(&[1, 2, 3, 4, 5], &mut s);
+            assert_eq!((logits.rows, logits.cols), (5, 48));
+            assert!(logits.data.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn scratch_is_reusable_across_lengths() {
+        let mut rng = Rng::seeded(214);
+        let ck = Checkpoint::random(&tiny(Arch::Llama), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let long = model.forward(&[1, 2, 3, 4, 5, 6, 7, 8], &mut s).clone();
+        let _short = model.forward(&[9, 9], &mut s);
+        let long2 = model.forward(&[1, 2, 3, 4, 5, 6, 7, 8], &mut s);
+        assert_eq!(&long.data, &long2.data, "scratch reuse must not leak state");
+    }
+
+    #[test]
+    fn observer_sees_all_sites() {
+        let mut rng = Rng::seeded(215);
+        let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let mut seen = std::collections::HashSet::new();
+        model.forward_observed(&[1, 2, 3], &mut s, &mut |site, x| {
+            assert_eq!(x.rows, 3);
+            seen.insert(site);
+        });
+        assert_eq!(seen.len(), 2 * 4);
+    }
+
+    #[test]
+    fn score_nll_matches_eval_cross_entropy() {
+        let mut rng = Rng::seeded(216);
+        let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let nll = model.score_nll(&window, &mut s) as f64;
+        let logits = model.forward_alloc(&window);
+        let pred = Matrix::from_vec(
+            window.len() - 1,
+            logits.cols,
+            logits.data[..(window.len() - 1) * logits.cols].to_vec(),
+        );
+        let r = crate::eval::cross_entropy(&pred, &window[1..]);
+        assert!((nll - r.nll_sum).abs() < 1e-4, "{nll} vs {}", r.nll_sum);
+    }
+}

@@ -19,38 +19,39 @@
 //!   to cross-validate PJRT numerics against the Rust engine.
 //! * `qmatmul_*.hlo.txt` artifacts carry the Pallas fused W4A8 kernel
 //!   (lowered with interpret=True) — see [`QMatmulArtifact`].
+//!
+//! ## Feature gating
+//!
+//! The xla_extension bindings are not part of the offline vendor set, so
+//! the PJRT execution path is behind the `pjrt` cargo feature. The default
+//! build substitutes [`stub`] — an API-identical module whose entry points
+//! return descriptive errors — and the serving stack falls back to the
+//! prepacked in-process engine ([`crate::plan::CompiledModel`]).
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::bail;
 use crate::engine::EngineOpts;
+use crate::error::Result;
 use crate::eval::PplResult;
 use crate::formats::NumericFormat;
 use crate::model::{Checkpoint, ModelConfig};
 
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
 /// Batch size every scoring artifact is lowered with.
 pub const SCORE_BATCH: usize = 8;
 
-thread_local! {
-    // One PJRT CPU client per thread, kept alive for the thread's lifetime:
-    // xla_extension 0.5.1 segfaults when a client is destroyed and a new one
-    // created in the same process, so we never drop it. `PjRtClient` is an
-    // `Rc` handle, so clones are cheap and share the underlying client.
-    static CPU_CLIENT: std::cell::RefCell<Option<xla::PjRtClient>> =
-        const { std::cell::RefCell::new(None) };
-}
-
-/// The shared per-thread PJRT CPU client.
-pub fn cpu_client() -> Result<xla::PjRtClient> {
-    CPU_CLIENT.with(|c| {
-        let mut slot = c.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu()?);
-        }
-        Ok(slot.as_ref().unwrap().clone())
-    })
-}
+/// True when this build can actually execute PJRT artifacts.
+pub const PJRT_AVAILABLE: bool = cfg!(feature = "pjrt");
 
 /// Activation tag an [`EngineOpts`] maps to in artifact names.
 pub fn act_tag(opts: &EngineOpts) -> Option<&'static str> {
@@ -71,128 +72,6 @@ pub fn score_artifact_name(cfg: &ModelConfig, act: &str) -> String {
         cfg.n_layers,
         act
     )
-}
-
-/// A compiled scoring executable bound to a PJRT CPU client.
-pub struct HloScorer {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub batch: usize,
-    pub seq: usize,
-    path: PathBuf,
-}
-
-impl HloScorer {
-    /// Load + compile an artifact. `seq` must match the `max_seq` the
-    /// artifact was lowered with (checked at execute time via shapes).
-    pub fn load(path: &Path, batch: usize, seq: usize) -> Result<HloScorer> {
-        HloScorer::load_with_client(cpu_client()?, path, batch, seq)
-    }
-
-    /// Same, sharing an existing client (`PjRtClient` is an `Rc` handle —
-    /// the table harness compiles dozens of artifacts on one client).
-    pub fn load_with_client(
-        client: xla::PjRtClient,
-        path: &Path,
-        batch: usize,
-        seq: usize,
-    ) -> Result<HloScorer> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("loading HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(HloScorer { client, exe, batch, seq, path: path.to_path_buf() })
-    }
-
-    /// Convenience: locate + load the scoring artifact for (config, opts).
-    pub fn for_model(artifacts: &Path, cfg: &ModelConfig, opts: &EngineOpts) -> Result<HloScorer> {
-        let act = act_tag(opts)
-            .ok_or_else(|| anyhow!("activation format {:?} has no HLO artifact", opts.act))?;
-        let path = artifacts.join(score_artifact_name(cfg, act));
-        if !path.exists() {
-            bail!("missing artifact {} (run `make artifacts`)", path.display());
-        }
-        HloScorer::load(&path, SCORE_BATCH, cfg.max_seq)
-    }
-
-    /// Upload the checkpoint weights once; reuse across many score calls.
-    pub fn upload_weights(&self, ck: &Checkpoint) -> Result<WeightSet> {
-        let mut bufs = Vec::with_capacity(ck.tensors.len());
-        let mut literals = Vec::with_capacity(ck.tensors.len());
-        // BTreeMap iterates name-sorted — the artifact's parameter order.
-        for (_name, m) in &ck.tensors {
-            let lit = xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?;
-            bufs.push(self.client.buffer_from_host_literal(None, &lit)?);
-            // PJRT's CopyFromLiteral is asynchronous: the literal must stay
-            // alive until the device copy completes, so WeightSet owns it.
-            literals.push(lit);
-        }
-        Ok(WeightSet { bufs, _literals: literals })
-    }
-
-    /// Score `batch` windows of `seq` tokens; returns per-window NLL sums
-    /// (summed over the `seq-1` predicted positions).
-    pub fn score_batch(&self, tokens: &[u16], weights: &WeightSet) -> Result<Vec<f32>> {
-        if tokens.len() != self.batch * self.seq {
-            bail!(
-                "score_batch: got {} tokens, artifact {} expects {}x{}",
-                tokens.len(),
-                self.path.display(),
-                self.batch,
-                self.seq
-            );
-        }
-        let toks_i32: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let tok_lit =
-            xla::Literal::vec1(&toks_i32).reshape(&[self.batch as i64, self.seq as i64])?;
-        let tok_buf = self.client.buffer_from_host_literal(None, &tok_lit)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + weights.bufs.len());
-        args.push(&tok_buf);
-        for b in &weights.bufs {
-            args.push(b);
-        }
-        let out = self.exe.execute_b(&args)?;
-        let lit = out[0][0].to_literal_sync()?;
-        let nll = lit.to_tuple1()?.to_vec::<f32>()?;
-        Ok(nll)
-    }
-
-    /// Perplexity of a token stream with already-uploaded weights.
-    pub fn ppl_with(&self, weights: &WeightSet, tokens: &[u16]) -> Result<PplResult> {
-        let win = self.seq;
-        let windows: Vec<&[u16]> = tokens.chunks_exact(win).collect();
-        let mut total = PplResult { nll_sum: 0.0, tokens: 0 };
-        let mut batch_buf: Vec<u16> = Vec::with_capacity(self.batch * win);
-        let mut i = 0;
-        while i < windows.len() {
-            let n = (windows.len() - i).min(self.batch);
-            batch_buf.clear();
-            for w in &windows[i..i + n] {
-                batch_buf.extend_from_slice(w);
-            }
-            // pad with the first window; padded outputs are discarded
-            for _ in n..self.batch {
-                batch_buf.extend_from_slice(windows[i]);
-            }
-            let nll = self.score_batch(&batch_buf, weights)?;
-            for &v in nll.iter().take(n) {
-                total.nll_sum += v as f64;
-                total.tokens += win - 1;
-            }
-            i += n;
-        }
-        Ok(total)
-    }
-}
-
-/// Device-resident weight buffers for one (quantized) checkpoint. Owns the
-/// host literals too — PJRT's host→device copies are asynchronous and
-/// xla_extension 0.5.1 does not pin the source (use-after-free otherwise).
-pub struct WeightSet {
-    bufs: Vec<xla::PjRtBuffer>,
-    _literals: Vec<xla::Literal>,
 }
 
 /// Perplexity through the PJRT path (the serving-grade evaluator the table
@@ -230,7 +109,7 @@ pub fn selfcheck_config() -> ModelConfig {
 /// `zqfp selfcheck`: PJRT vs Rust-engine numerics parity on a random tiny
 /// checkpoint, for each activation scheme with an artifact.
 pub fn selfcheck(args: &crate::cli::Args) -> std::result::Result<(), String> {
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let artifacts = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
     args.finish()?;
     selfcheck_impl(&artifacts).map_err(|e| format!("{e:#}"))
 }
@@ -266,51 +145,4 @@ pub fn selfcheck_impl(artifacts: &Path) -> Result<()> {
     }
     println!("selfcheck OK");
     Ok(())
-}
-
-/// A compiled Pallas fused W4A8 matmul artifact:
-/// `f(x f32[M,K], codes i32[N,K], scales f32[N,G]) -> (y f32[M,N],)` where
-/// the kernel token-wise-quantizes `x` to FP8 E4M3, decodes the FP4 E2M1
-/// codes with their FGQ group scales, and contracts — the paper's W4A8
-/// GEMM as one fused device op.
-pub struct QMatmulArtifact {
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
-    pub m: usize,
-    pub k: usize,
-    pub n: usize,
-    pub groups: usize,
-}
-
-impl QMatmulArtifact {
-    pub fn load(path: &Path, m: usize, k: usize, n: usize, groups: usize) -> Result<Self> {
-        let client = cpu_client()?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        Ok(QMatmulArtifact { client, exe, m, k, n, groups })
-    }
-
-    pub fn run(&self, x: &[f32], codes: &[i32], scales: &[f32]) -> Result<Vec<f32>> {
-        if x.len() != self.m * self.k
-            || codes.len() != self.n * self.k
-            || scales.len() != self.n * self.groups
-        {
-            bail!("qmatmul: shape mismatch");
-        }
-        // host->device copies are async in xla_extension 0.5.1: stage via
-        // buffers and keep the literals alive until the output sync below.
-        let xl = xla::Literal::vec1(x).reshape(&[self.m as i64, self.k as i64])?;
-        let cl = xla::Literal::vec1(codes).reshape(&[self.n as i64, self.k as i64])?;
-        let sl = xla::Literal::vec1(scales).reshape(&[self.n as i64, self.groups as i64])?;
-        let xb = self.client.buffer_from_host_literal(None, &xl)?;
-        let cb = self.client.buffer_from_host_literal(None, &cl)?;
-        let sb = self.client.buffer_from_host_literal(None, &sl)?;
-        let out = self.exe.execute_b(&[&xb, &cb, &sb])?;
-        let lit = out[0][0].to_literal_sync()?;
-        drop((xl, cl, sl));
-        Ok(lit.to_tuple1()?.to_vec::<f32>()?)
-    }
 }

@@ -1,0 +1,80 @@
+//! API-identical stand-in for the PJRT runtime, used when the crate is
+//! built without the `pjrt` feature (the default — the xla_extension
+//! bindings are not in the offline vendor set).
+//!
+//! Every constructor returns a descriptive error; none of the types can
+//! actually be instantiated, so the methods are unreachable and exist only
+//! to keep callers (coordinator, experiments, benches, CLI) compiling
+//! unchanged. The serving stack detects the failure and falls back to the
+//! prepacked in-process engine ([`crate::plan::CompiledModel`]).
+
+use std::path::Path;
+
+use crate::bail;
+use crate::engine::EngineOpts;
+use crate::error::Result;
+use crate::eval::PplResult;
+use crate::model::{Checkpoint, ModelConfig};
+
+const NO_PJRT: &str =
+    "built without the `pjrt` feature: PJRT artifacts cannot be executed \
+     (enable the feature with the vendored xla_extension bindings, or use \
+     the compiled in-process engine)";
+
+/// Stub scoring executable — see the module docs.
+pub struct HloScorer {
+    pub batch: usize,
+    pub seq: usize,
+    // Not constructible: every `load` path errors out first.
+    _priv: (),
+}
+
+impl HloScorer {
+    pub fn load(_path: &Path, _batch: usize, _seq: usize) -> Result<HloScorer> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn for_model(
+        _artifacts: &Path,
+        _cfg: &ModelConfig,
+        _opts: &EngineOpts,
+    ) -> Result<HloScorer> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn upload_weights(&self, _ck: &Checkpoint) -> Result<WeightSet> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn score_batch(&self, _tokens: &[u16], _weights: &WeightSet) -> Result<Vec<f32>> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn ppl_with(&self, _weights: &WeightSet, _tokens: &[u16]) -> Result<PplResult> {
+        bail!("{NO_PJRT}");
+    }
+}
+
+/// Stub device-resident weight set.
+pub struct WeightSet {
+    _priv: (),
+}
+
+/// Stub fused-W4A8-matmul artifact.
+pub struct QMatmulArtifact {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub groups: usize,
+    _priv: (),
+}
+
+impl QMatmulArtifact {
+    pub fn load(_path: &Path, _m: usize, _k: usize, _n: usize, _groups: usize) -> Result<Self> {
+        bail!("{NO_PJRT}");
+    }
+
+    pub fn run(&self, _x: &[f32], _codes: &[i32], _scales: &[f32]) -> Result<Vec<f32>> {
+        bail!("{NO_PJRT}");
+    }
+}

@@ -27,6 +27,32 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// Reshape in place to `[rows, cols]` with all entries zeroed.
+    ///
+    /// This is the arena primitive behind [`crate::plan`]'s scratch buffers:
+    /// when the new element count fits the existing `Vec` capacity (always
+    /// true for buffers pre-sized to `max_seq`), no heap allocation happens —
+    /// steady-state decode reuses the same backing storage every call.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Reshape in place to `[rows, row.len()]` with every row initialized
+    /// from `row` — a single write pass (no intermediate zero fill), for
+    /// bias-seeded matmul accumulators. Same no-allocation guarantee as
+    /// [`resize_to`](Self::resize_to) when capacity suffices.
+    pub fn resize_rows_to(&mut self, rows: usize, row: &[f32]) {
+        self.rows = rows;
+        self.cols = row.len();
+        self.data.clear();
+        for _ in 0..rows {
+            self.data.extend_from_slice(row);
+        }
+    }
+
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for r in 0..rows {
@@ -211,6 +237,34 @@ mod tests {
         let c = a.col(2);
         a.set_col(2, &c);
         assert_eq!(a.col(2), c);
+    }
+
+    #[test]
+    fn resize_to_reuses_capacity() {
+        let mut m = Matrix::zeros(8, 16);
+        let cap = m.data.capacity();
+        let ptr = m.data.as_ptr();
+        m.row_mut(3).iter_mut().for_each(|v| *v = 7.0);
+        m.resize_to(4, 16);
+        assert_eq!((m.rows, m.cols), (4, 16));
+        assert!(m.data.iter().all(|&v| v == 0.0), "resize_to must zero");
+        assert_eq!(m.data.capacity(), cap);
+        assert_eq!(m.data.as_ptr(), ptr, "shrinking reshape must not realloc");
+        m.resize_to(8, 16);
+        assert_eq!(m.data.as_ptr(), ptr, "growing back within capacity must not realloc");
+    }
+
+    #[test]
+    fn resize_rows_to_broadcasts_row() {
+        let mut m = Matrix::zeros(4, 6);
+        let ptr = m.data.as_ptr();
+        let bias = [1.0f32, 2.0, 3.0];
+        m.resize_rows_to(4, &bias);
+        assert_eq!((m.rows, m.cols), (4, 3));
+        for r in 0..4 {
+            assert_eq!(m.row(r), &bias);
+        }
+        assert_eq!(m.data.as_ptr(), ptr, "within-capacity reshape must not realloc");
     }
 
     #[test]

@@ -1,0 +1,90 @@
+//! Steady-state decode through the compiled plan performs ZERO heap
+//! allocations — asserted with a counting global allocator.
+//!
+//! This file holds exactly one test: the allocation counter is global, so
+//! any concurrently running test in the same binary would pollute it.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::CompiledModel;
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+
+static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+// SAFETY: defers entirely to `System`; only a counter is layered on top.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_decode_is_allocation_free() {
+    for (arch, fmt) in [
+        (Arch::Opt, NumericFormat::F16),
+        (Arch::Opt, NumericFormat::FP8_E4M3),
+        (Arch::Opt, NumericFormat::INT8),
+        (Arch::Llama, NumericFormat::FP8_E4M3),
+    ] {
+        let cfg = ModelConfig {
+            name: "alloc-test".into(),
+            arch,
+            vocab_size: 48,
+            d_model: 24,
+            n_heads: 3,
+            n_layers: 2,
+            d_ff: 48,
+            max_seq: 16,
+        };
+        let mut rng = Rng::seeded(0xA110C);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let model = CompiledModel::compile(&ck, opts);
+        let mut scratch = model.scratch();
+        let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
+        let short: Vec<u16> = long[..5].to_vec();
+
+        // Warm the arena at the largest shape that will be used.
+        std::hint::black_box(model.forward(&long, &mut scratch));
+        std::hint::black_box(model.forward(&short, &mut scratch));
+
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..8 {
+            std::hint::black_box(model.forward(&long, &mut scratch));
+            std::hint::black_box(model.forward(&short, &mut scratch));
+            std::hint::black_box(model.score_nll(&long, &mut scratch));
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state decode allocated ({arch:?}, act={})",
+            fmt.name()
+        );
+    }
+}

@@ -1,0 +1,234 @@
+//! The compiled execution plan's correctness contract:
+//!
+//! 1. `CompiledModel` logits are **bit-identical** to `Engine::forward`
+//!    across both architectures, every `NumericFormat` activation setting,
+//!    and every sequence length `1..=max_seq`.
+//! 2. The FP8/FP4 LUT quantizer matches the `FpFormat::quantize` oracle on
+//!    every f32 exponent bucket and on all 2^16 upper-half bit patterns
+//!    (plus every representable code of every format).
+
+use zeroquant_fp::engine::{Engine, EngineOpts, Site};
+use zeroquant_fp::formats::{FpFormat, NumericFormat};
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::{CompiledModel, FpQuantLut};
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+
+fn tiny(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        name: format!("equiv-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 12,
+    }
+}
+
+const ACT_FORMATS: [NumericFormat; 8] = [
+    NumericFormat::F16,
+    NumericFormat::FP8_E4M3,
+    NumericFormat::FP8_E5M2,
+    NumericFormat::FP4_E2M1,
+    NumericFormat::FP4_E3M0,
+    NumericFormat::INT8,
+    NumericFormat::INT8_ASYM,
+    NumericFormat::INT4,
+];
+
+fn assert_bit_identical(reference: &zeroquant_fp::tensor::Matrix, compiled: &zeroquant_fp::tensor::Matrix, what: &str) {
+    assert_eq!((reference.rows, reference.cols), (compiled.rows, compiled.cols), "{what}: shape");
+    for (i, (a, b)) in reference.data.iter().zip(&compiled.data).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: element {i} reference={a} compiled={b}"
+        );
+    }
+}
+
+#[test]
+fn compiled_logits_bit_identical_across_arch_format_seqlen() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0x5EED + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        for fmt in ACT_FORMATS {
+            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let engine = Engine::with_opts(&ck, opts);
+            let model = CompiledModel::compile(&ck, opts);
+            let mut scratch = model.scratch();
+            for seq in 1..=cfg.max_seq {
+                let tokens: Vec<u16> =
+                    (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+                let reference = engine.forward(&tokens);
+                let compiled = model.forward(&tokens, &mut scratch);
+                assert_bit_identical(
+                    &reference,
+                    compiled,
+                    &format!("{arch:?} act={} seq={seq}", fmt.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_logits_bit_identical_with_injected_outliers() {
+    // The regime the paper cares about: strong activation outliers.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xB0B + arch as u64);
+        let mut ck = Checkpoint::random(&cfg, &mut rng);
+        zeroquant_fp::model::inject_outliers(
+            &mut ck,
+            zeroquant_fp::model::OutlierSpec { alpha: 64.0, channels: 3 },
+            &mut rng,
+        );
+        for fmt in [NumericFormat::FP8_E4M3, NumericFormat::INT8] {
+            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let tokens: Vec<u16> =
+                (0..cfg.max_seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+            let reference = Engine::with_opts(&ck, opts).forward(&tokens);
+            let compiled = CompiledModel::compile(&ck, opts).forward_alloc(&tokens);
+            assert_bit_identical(&reference, &compiled, &format!("{arch:?} act={}", fmt.name()));
+        }
+    }
+}
+
+#[test]
+fn compiled_observed_activations_bit_identical() {
+    // Calibration parity: the Hessians GPTQ sees must not depend on which
+    // engine ran the forward pass.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xCA11B + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let tokens: Vec<u16> =
+            (0..cfg.max_seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+
+        let mut ref_sites: std::collections::HashMap<Site, zeroquant_fp::tensor::Matrix> =
+            std::collections::HashMap::new();
+        Engine::new(&ck).forward_observed(&tokens, &mut |site, x| {
+            ref_sites.insert(site, x.clone());
+        });
+
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut scratch = model.scratch();
+        let mut n = 0usize;
+        model.forward_observed(&tokens, &mut scratch, &mut |site, x| {
+            let reference = ref_sites.get(&site).expect("site seen by reference");
+            for (a, b) in reference.data.iter().zip(&x.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{arch:?} site {site:?}");
+            }
+            n += 1;
+        });
+        assert_eq!(n, ref_sites.len());
+    }
+}
+
+#[test]
+fn lut_matches_oracle_on_every_exponent_bucket() {
+    // Every f32 exponent byte × a spread of mantissa patterns × both signs.
+    let mantissas: [u32; 9] = [
+        0x000000, 0x000001, 0x200000, 0x3fffff, 0x400000, 0x400001, 0x600000, 0x7ffffe,
+        0x7fffff,
+    ];
+    for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+        let lut = FpQuantLut::new(fmt);
+        for e8 in 0u32..=255 {
+            for &m in &mantissas {
+                for sign in [0u32, 1] {
+                    let bits = (sign << 31) | (e8 << 23) | m;
+                    let x = f32::from_bits(bits);
+                    let a = lut.quantize(x);
+                    let b = fmt.quantize(x);
+                    if b.is_nan() {
+                        assert!(a.is_nan(), "{}: bits={bits:#010x}", fmt.name());
+                    } else {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{}: x={x:e} (bits {bits:#010x}) lut={a} oracle={b}",
+                            fmt.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lut_matches_oracle_on_all_u16_upper_patterns() {
+    // All 2^16 values of the f32 upper half-word (sign+exp+7 mantissa bits):
+    // a bf16-dense sweep of the entire f32 range, both tails included.
+    for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+        let lut = FpQuantLut::new(fmt);
+        for code in 0u32..=0xffff {
+            let x = f32::from_bits(code << 16);
+            let a = lut.quantize(x);
+            let b = fmt.quantize(x);
+            if b.is_nan() {
+                assert!(a.is_nan(), "{}: code={code:#06x}", fmt.name());
+            } else {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: code={code:#06x} x={x:e} lut={a} oracle={b}",
+                    fmt.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lut_fixes_every_representable_code() {
+    // decode(code) must be a fixed point of the LUT quantizer for all codes
+    // of all formats (the idempotence property the oracle guarantees).
+    for fmt in [FpFormat::E4M3, FpFormat::E5M2, FpFormat::E2M1, FpFormat::E3M0] {
+        let lut = FpQuantLut::new(fmt);
+        for code in 0..fmt.code_count() as u16 {
+            let v = fmt.decode(code);
+            if !v.is_finite() || (v as f64) > fmt.max_finite() {
+                continue;
+            }
+            assert_eq!(
+                lut.quantize(v).to_bits(),
+                fmt.quantize(v).to_bits(),
+                "{} code {code}",
+                fmt.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tokenwise_lut_path_matches_reference_quantizer() {
+    // The full A8 hot path (absmax scale + divide + quantize + rescale) on
+    // realistic activation rows, against quant::fake_quant_tokenwise.
+    let mut rng = Rng::seeded(0xF00D);
+    for fmt in [
+        NumericFormat::FP8_E4M3,
+        NumericFormat::FP8_E5M2,
+        NumericFormat::FP4_E2M1,
+        NumericFormat::FP4_E3M0,
+    ] {
+        let NumericFormat::Fp(fp) = fmt else { unreachable!() };
+        let lut = FpQuantLut::new(fp);
+        for _ in 0..50 {
+            let mut a: Vec<f32> = (0..96).map(|_| rng.normal_f32() * 2.0).collect();
+            a[17] = 40.0 * rng.normal_f32(); // outlier channel
+            let mut m_ref = zeroquant_fp::tensor::Matrix::from_vec(1, 96, a.clone());
+            zeroquant_fp::quant::fake_quant_tokenwise(&mut m_ref, &ActQuantConfig::new(fmt));
+            let mut b = a;
+            lut.fake_quant_row(&mut b);
+            for (x, y) in m_ref.data.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", fmt.name());
+            }
+        }
+    }
+}

@@ -12,6 +12,10 @@ use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    if !runtime::PJRT_AVAILABLE {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if p.join("score_selfcheck_a16.hlo.txt").exists() {
         Some(p)
@@ -119,7 +123,7 @@ fn coordinator_serves_batches() {
     // dynamic batching end to end: client threads feed the queue, the PJRT
     // loop runs on this (test) thread.
     let Some(dir) = artifacts_dir() else { return };
-    use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig};
+    use zeroquant_fp::coordinator::{BatchPolicy, Coordinator, CoordinatorConfig, ScoreBackend};
     let fam = zeroquant_fp::model::ModelConfig::family(zeroquant_fp::model::Arch::Opt);
     let (mcfg, _) = &fam[0];
     let art = dir.join(runtime::score_artifact_name(mcfg, "a16"));
@@ -131,7 +135,7 @@ fn coordinator_serves_batches() {
     let ck = Checkpoint::random(mcfg, &mut rng);
     let seq = ck.config.max_seq;
     let coord = Coordinator::new(CoordinatorConfig {
-        artifacts: dir.clone(),
+        backend: ScoreBackend::Pjrt { artifacts: dir.clone() },
         ck: ck.clone(),
         opts: EngineOpts::default(),
         policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
