@@ -6,12 +6,16 @@
 //!     → compiled execution plan (prepacked weights, arena, LUT A8)
 //!     → Rust serving coordinator (dynamic batcher) — L3 request path
 //!     → batched scoring requests from concurrent clients
+//!     → continuous-batching generation (prefill + KV-cached decode_step,
+//!       sequences joining and leaving mid-flight)
 //!
 //! Reports quality (bit-identity of the compiled plan vs the reference
-//! engine, plus PJRT parity within 0.2% when artifacts are present) and
-//! serving latency/throughput. Python is never loaded at runtime; the
-//! example runs on a completely fresh clone (no `make` required — trained
-//! checkpoint, calibration data and PJRT artifacts are all optional).
+//! engine, plus PJRT parity within 0.2% when artifacts are present),
+//! serving latency/throughput, and decode tokens/s — and asserts that
+//! coordinator-served generation reproduces a direct greedy decode token
+//! for token. Python is never loaded at runtime; the example runs on a
+//! completely fresh clone (no `make` required — trained checkpoint,
+//! calibration data and PJRT artifacts are all optional).
 //!
 //! ```bash
 //! cargo run --release --example e2e_serve [-- <model> <n_requests>]
@@ -29,8 +33,8 @@ use zeroquant_fp::error::Result;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
 use zeroquant_fp::pipeline::{quantize_checkpoint, PtqConfig};
-use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::plan::logits_nll;
+use zeroquant_fp::plan::{argmax, CompiledModel};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::rng::Rng;
 
@@ -78,7 +82,7 @@ fn main() -> Result<()> {
         }
         Err(e) => return Err(zeroquant_fp::anyhow!("data/calib.tok: {e}")),
     };
-    println!("[1/4] quantizing {} under {} ...", cfg.name, pcfg.scheme.name());
+    println!("[1/5] quantizing {} under {} ...", cfg.name, pcfg.scheme.name());
     let t0 = Instant::now();
     let (qck, report) = quantize_checkpoint(&ck, &calib, &pcfg);
     println!(
@@ -91,7 +95,7 @@ fn main() -> Result<()> {
     );
 
     // ---- quality: compiled plan must match the reference bit-for-bit -----
-    println!("[2/4] quality: compiled plan vs reference engine on eval_c4 ...");
+    println!("[2/5] quality: compiled plan vs reference engine on eval_c4 ...");
     let eval = match read_tokens(Path::new("data/eval_c4.tok")) {
         // A stream shorter than one window would make every check below
         // vacuous (zero windows -> NaN ppl) — treat it like a missing file.
@@ -154,15 +158,16 @@ fn main() -> Result<()> {
         Err(e) => println!("      [pjrt parity skipped: {e}]"),
     }
 
-    // ---- serving ----------------------------------------------------------
+    // ---- serving: scoring -------------------------------------------------
     let backend = pick_backend(Path::new("artifacts"), &qck, &opts);
     let backend_name = match &backend {
         ScoreBackend::Pjrt { .. } => "pjrt",
         ScoreBackend::Compiled => "compiled plan",
     };
     println!(
-        "[3/4] serving {n_requests} scoring requests through the coordinator ({backend_name}) ..."
+        "[3/5] serving {n_requests} scoring requests through the coordinator ({backend_name}) ..."
     );
+    let qck_gen = qck.clone(); // the generation coordinator compiles its own
     let coord = Coordinator::new(CoordinatorConfig {
         backend,
         ck: qck,
@@ -171,6 +176,7 @@ fn main() -> Result<()> {
             max_batch: zeroquant_fp::runtime::SCORE_BATCH,
             max_wait: Duration::from_millis(2),
         },
+        kv_quant: None,
     });
     let corpus = Corpus::new(CorpusKind::C4);
     let stream = corpus.generate(n_requests * seq, 99);
@@ -196,8 +202,94 @@ fn main() -> Result<()> {
     }
     let wall = t0.elapsed();
 
+    // ---- serving: continuous-batching generation --------------------------
+    // Prompts prefill into per-sequence KV caches; every in-flight sequence
+    // then advances one token per interleaved decode_step_batch call,
+    // joining/leaving mid-flight. Always the compiled plan (the incremental
+    // state lives there).
+    let n_gen = 24usize.min(windows.len());
+    let prompt_len = seq / 2;
+    let gen_new = seq / 4;
+    if n_gen == 0 {
+        // zero-request runs have nothing to prefill or to parity-check
+        println!("[4/5] continuous-batching generation skipped (no request windows)");
+        println!("[5/5] results");
+        report.print();
+        println!("e2e_serve OK");
+        return Ok(());
+    }
+    println!(
+        "[4/5] continuous-batching generation: {n_gen} requests, {prompt_len}-token \
+         prompts, {gen_new} new tokens each ..."
+    );
+    // direct greedy decode of the first prompt — the coordinator must
+    // reproduce it token for token (same compiled plan, same argmax)
+    let expect_first: Vec<u16> = {
+        let mut cache = model.kv_cache();
+        let logits = model.prefill(&windows[0][..prompt_len], &mut cache, &mut scratch);
+        let mut out = vec![argmax(logits.row(logits.rows - 1)) as u16];
+        while out.len() < gen_new {
+            let last = *out.last().unwrap();
+            let row = model.decode_step(last, &mut cache, &mut scratch);
+            out.push(argmax(row.row(0)) as u16);
+        }
+        out
+    };
+    let gen_coord = Coordinator::new(CoordinatorConfig {
+        backend: ScoreBackend::Compiled,
+        ck: qck_gen,
+        opts,
+        policy: BatchPolicy {
+            max_batch: zeroquant_fp::runtime::SCORE_BATCH,
+            max_wait: Duration::ZERO,
+        },
+        kv_quant: None,
+    });
+    let mut gen_handles = Vec::new();
+    for c in 0..3usize {
+        let client = gen_coord.gen_client();
+        let mine: Vec<Vec<u16>> = windows
+            .iter()
+            .take(n_gen)
+            .skip(c)
+            .step_by(3)
+            .map(|w| w[..prompt_len].to_vec())
+            .collect();
+        gen_handles.push(std::thread::spawn(
+            move || -> Result<Vec<zeroquant_fp::coordinator::Generated>> {
+                let mut out = Vec::new();
+                for p in mine {
+                    out.push(client.generate(p, gen_new)?);
+                }
+                Ok(out)
+            },
+        ));
+    }
+    let gen_report = gen_coord.run()?;
+    let mut gen_results: Vec<Vec<zeroquant_fp::coordinator::Generated>> = Vec::new();
+    for h in gen_handles {
+        gen_results.push(h.join().unwrap()?);
+    }
+    for per_client in &gen_results {
+        for g in per_client {
+            zeroquant_fp::ensure!(g.tokens.len() == gen_new, "short generation");
+        }
+    }
+    let coord_first = &gen_results[0][0];
+    zeroquant_fp::ensure!(
+        coord_first.tokens == expect_first,
+        "coordinator generation diverged from direct greedy decode"
+    );
+    println!(
+        "      {} sequences, decode {:.0} tok/s aggregate (mean in-flight {:.2})  \
+         GREEDY-PARITY OK",
+        gen_report.gen_requests,
+        gen_report.decode_tok_s(),
+        gen_report.mean_decode_batch(),
+    );
+
     // ---- report ------------------------------------------------------------
-    println!("[4/4] results");
+    println!("[5/5] results");
     report.print();
     let scored = windows.len() * (seq - 1);
     println!(
@@ -206,6 +298,7 @@ fn main() -> Result<()> {
         scored,
         scored as f64 / wall.as_secs_f64()
     );
+    gen_report.print();
     println!("e2e_serve OK");
     Ok(())
 }

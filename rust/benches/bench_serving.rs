@@ -1,24 +1,33 @@
-//! Serving-policy sweep: dynamic-batching window vs latency/throughput on
-//! the coordinator — the L3 batching dial (§Perf).
+//! Serving-stack sweep: the batching dial, KV-cached vs full-recompute
+//! decode, and the continuous-batching batch-size curve (§Perf).
 //!
-//! Runs on whichever backend is available: PJRT when `make artifacts` has
-//! produced the scoring executable (and the `pjrt` feature is on),
-//! otherwise the prepacked compiled in-process engine — so the sweep (and
-//! the reference-vs-compiled decode comparison below it) works on a fresh
-//! clone. Writes `bench_results/bench_serving.json` with decode tokens/s
-//! so future PRs have a perf trajectory.
+//! Four sections, all on whichever backend a fresh clone has (PJRT when
+//! `make artifacts` produced the scoring executable and the `pjrt` feature
+//! is on, otherwise the prepacked compiled in-process engine):
+//!
+//! 1. coordinator scoring sweep — the dynamic-batching wait window;
+//! 2. full-recompute vs KV-cached generation — the `O(n²)` → `O(n)`
+//!    attention win of `prefill` + `decode_step`;
+//! 3. model-level batched decode, `B ∈ {1,2,4,8}` — decode tokens/s vs
+//!    batch width (weight-streaming amortization, the continuous-batching
+//!    rationale);
+//! 4. coordinator continuous-batching generation, `max_batch ∈ {1,2,4,8}`
+//!    — the same curve end to end through the request queue.
+//!
+//! Writes `bench_results/bench_serving.json` (decode tokens/s in the
+//! `throughput` fields) so future PRs have a perf trajectory.
 
 use std::path::Path;
 use std::time::Duration;
 
-use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::bench_harness::{Bench, Measurement};
 use zeroquant_fp::coordinator::{
     pick_backend, BatchPolicy, Coordinator, CoordinatorConfig, ScoreBackend,
 };
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::plan::CompiledModel;
+use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
 use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::SCORE_BATCH;
@@ -37,15 +46,16 @@ fn main() {
     let opts = EngineOpts::default();
     let backend = pick_backend(Path::new("artifacts"), &ck, &opts);
     // The batching-window dial only exists on the PJRT backend (a batched
-    // GEMM to fill); the compiled backend decodes per request and drains the
-    // queue eagerly, so sweeping wait_ms there would print a dead dial.
+    // GEMM to fill); the compiled backend joins sequences mid-flight
+    // instead of waiting, so sweeping wait_ms there would print a dead
+    // dial — its batching curve is section 4.
     let waits: &[u64] = match &backend {
         ScoreBackend::Pjrt { .. } => {
             println!("backend: pjrt");
             &[0, 1, 2, 5, 10]
         }
         ScoreBackend::Compiled => {
-            println!("backend: compiled in-process engine (no batching dial — clients sweep only)");
+            println!("backend: compiled in-process engine (scoring: clients sweep only)");
             &[0]
         }
     };
@@ -64,6 +74,7 @@ fn main() {
                     max_batch: SCORE_BATCH,
                     max_wait: Duration::from_millis(wait_ms),
                 },
+                kv_quant: None,
             });
             let mut handles = Vec::new();
             for c in 0..clients {
@@ -95,9 +106,10 @@ fn main() {
         println!("\n(the latency/throughput dial: longer windows fill batches at the cost of p50)");
     }
 
-    // ---- reference vs compiled decode, the serving-side perf trajectory --
-    println!("\n-- reference engine vs compiled plan decode ({}, A8 FP) --", cfg.name);
     let mut bench = Bench::default();
+
+    // ---- reference vs compiled decode, the serving-side perf trajectory --
+    println!("\n-- reference engine vs compiled plan forward ({}, A8 FP) --", cfg.name);
     let window = &windows[0];
     for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
         let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
@@ -124,6 +136,112 @@ fn main() {
         ) {
             println!("   compiled vs reference (act={}): {s:.2}x", fmt.name());
         }
+    }
+
+    // ---- full-recompute vs KV-cached generation ---------------------------
+    // The tentpole number: generating n tokens by re-running forward over
+    // the growing window is O(n²·d) in attention; prefill + decode_step is
+    // O(n·d) per token. Both sides produce bit-identical tokens.
+    println!("\n-- full-recompute vs kv-cached generation ({}, 64-token prompt) --", cfg.name);
+    let model = CompiledModel::compile(&ck, opts);
+    let mut scratch = model.scratch();
+    let prompt = &windows[0][..64];
+    bench.run("gen 64 (full-recompute fwd)", 64.0, "tok", || {
+        let mut window: Vec<u16> = prompt.to_vec();
+        for _ in 0..64 {
+            let logits = model.forward(&window, &mut scratch);
+            let next = argmax(logits.row(logits.rows - 1)) as u16;
+            window.push(next);
+        }
+        std::hint::black_box(window.len());
+    });
+    let mut cache = model.kv_cache();
+    bench.run("gen 64 (kv-cached decode)", 64.0, "tok", || {
+        cache.reset();
+        let logits = model.prefill(prompt, &mut cache, &mut scratch);
+        let mut next = argmax(logits.row(logits.rows - 1)) as u16;
+        for _ in 0..63 {
+            let row = model.decode_step(next, &mut cache, &mut scratch);
+            next = argmax(row.row(0)) as u16;
+        }
+        std::hint::black_box(next);
+    });
+    if let Some(s) = bench.speedup("gen 64 (kv-cached decode)", "gen 64 (full-recompute fwd)") {
+        println!("   kv cache vs full recompute: {s:.2}x");
+    }
+
+    // ---- batched decode: tokens/s vs batch width --------------------------
+    // One decode_step_batch call runs every linear as a [B, ·] matmul, so
+    // each layer's weights stream from memory once per step for B
+    // sequences instead of once per sequence — decode tokens/s should rise
+    // with B. (Per-sequence logits stay bit-identical to solo decode.)
+    println!("\n-- batched kv decode: tokens/s vs batch width --");
+    for b in [1usize, 2, 4, 8] {
+        let mut caches: Vec<KvCache> = (0..b).map(|_| model.kv_cache()).collect();
+        let mut toks: Vec<u16> = vec![0; b];
+        bench.run(format!("batched decode B={b} (ctx 16+48)"), (b * 48) as f64, "tok", || {
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.reset();
+                model.prefill(&windows[i][..16], c, &mut scratch);
+            }
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = windows[i][16];
+            }
+            for _ in 0..48 {
+                let logits = model.decode_step_batch(&toks, &mut caches, &mut scratch);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(logits.row(i)) as u16;
+                }
+            }
+        });
+    }
+
+    // ---- the same curve end to end: coordinator continuous batching -------
+    println!("\n-- coordinator continuous-batching generation (8 clients, 48 requests) --");
+    for max_batch in [1usize, 2, 4, 8] {
+        let coord = Coordinator::new(CoordinatorConfig {
+            backend: ScoreBackend::Compiled,
+            ck: ck.clone(),
+            opts,
+            policy: BatchPolicy { max_batch, max_wait: Duration::ZERO },
+            kv_quant: None,
+        });
+        let mut handles = Vec::new();
+        for c in 0..8usize {
+            let client = coord.gen_client();
+            let mine: Vec<Vec<u16>> = windows
+                .iter()
+                .skip(c)
+                .step_by(8)
+                .take(6)
+                .map(|w| w[..64].to_vec())
+                .collect();
+            handles.push(std::thread::spawn(move || {
+                for p in mine {
+                    client.generate(p, 32).unwrap();
+                }
+            }));
+        }
+        let report = coord.run().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = Measurement {
+            name: format!("coord gen max_batch={max_batch}"),
+            iters: report.decode_steps,
+            mean: report.decode_wall / report.decode_steps.max(1) as u32,
+            stddev: Duration::ZERO,
+            min: report.decode_wall / report.decode_steps.max(1) as u32,
+            work_per_iter: Some(report.mean_decode_batch()),
+            work_unit: "tok",
+        };
+        println!("{}", m.report());
+        println!(
+            "   max_batch={max_batch}: decode {:.0} tok/s aggregate, mean in-flight {:.2}",
+            report.decode_tok_s(),
+            report.mean_decode_batch()
+        );
+        bench.results.push(m);
     }
 
     let out = Path::new("bench_results/bench_serving.json");

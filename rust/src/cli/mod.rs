@@ -23,8 +23,11 @@ commands:
   table        --id 1|2|3|a1 [--data data/] [--ckpt-dir ckpt/] [--fast]
                [--runtime hlo|engine] regenerate a paper table
   figure       --id 1|2 [--ckpt m.zqckpt] regenerate a paper figure
-  serve        --ckpt m.zqckpt --artifacts artifacts/ [--requests N]
-               [--batch-max N] [--scheme ...] PJRT serving demo
+  serve        --ckpt m.zqckpt [--requests N] [--clients N] [--scheme ...]
+               [--max-batch N] [--max-wait-ms MS] [--artifacts artifacts/]
+               window-scoring demo (PJRT when artifacts exist, else the
+               compiled engine); with --generate N [--kv-cache e4m3|e5m2]
+               serves continuous-batching KV-cached generation instead
   selfcheck    cross-check rust engine vs PJRT HLO on a tiny model
 ";
 

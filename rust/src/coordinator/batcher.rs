@@ -1,10 +1,32 @@
 //! Dynamic batching policy — collect requests into GEMM-efficient batches
 //! without letting the head request wait beyond a deadline.
 //!
-//! The PJRT scoring executable is lowered at a fixed batch `B`; padded
-//! slots waste compute, so the batcher waits up to `max_wait` after the
-//! first request for the batch to fill (the classic dynamic-batching
-//! latency/throughput dial; §Perf sweeps it).
+//! # The latency/throughput dial
+//!
+//! Batching amortizes per-request fixed costs (weight-matrix streaming on
+//! the compiled backend, the lowered batch dimension on PJRT) at the price
+//! of making the *first* request of a batch wait for company. The two
+//! [`BatchPolicy`] knobs are exactly that trade:
+//!
+//! * `max_batch` — the hard cap. On PJRT it is the executable's lowered
+//!   batch size `B` (padded slots burn compute, so filling real slots is
+//!   pure win). On the compiled backend it caps how many sequences decode
+//!   interleaved (each one holds a `max_seq`-sized KV cache, so this is
+//!   also the memory bound).
+//! * `max_wait` — how long the head request may wait for the batch to
+//!   fill. Longer windows raise mean batch size (throughput) and p50
+//!   latency together; §Perf in EXPERIMENTS.md sweeps it.
+//!
+//! # Two consumption patterns
+//!
+//! [`next_batch`] is the *group* pull: block for the first request, then
+//! wait out the deadline — the PJRT scoring loop's shape, and the idle
+//! path of the compiled loop. [`try_fill`] is the *join* pull: grab
+//! whatever is already queued, never block — the continuous-batching
+//! loop calls it between decode steps so new sequences join mid-flight
+//! without stalling the sequences already decoding (and departures free
+//! slots for the next `try_fill`). A continuous loop therefore wants
+//! `max_wait = 0`: the join path replaces the wait window.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -45,6 +67,25 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
     Some(batch)
 }
 
+/// Non-blocking pull of at most `slots` already-queued items into `out`
+/// (appended; `out` is not cleared). Returns how many were taken. This is
+/// the continuous-batching *join* path: between decode steps the serving
+/// loop offers freed slots to waiting requests without ever stalling the
+/// sequences currently in flight.
+pub fn try_fill<T>(rx: &Receiver<T>, out: &mut Vec<T>, slots: usize) -> usize {
+    let mut taken = 0usize;
+    while taken < slots {
+        match rx.try_recv() {
+            Ok(item) => {
+                out.push(item);
+                taken += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    taken
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +122,28 @@ mod tests {
         let (tx, rx) = channel::<u32>();
         drop(tx);
         assert!(next_batch(&rx, BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn try_fill_never_blocks_and_respects_slots() {
+        let (tx, rx) = channel();
+        let mut out = vec![0];
+        // empty queue: returns immediately with nothing
+        let t0 = Instant::now();
+        assert_eq!(try_fill(&rx, &mut out, 4), 0);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+        assert_eq!(out, vec![0]);
+        // queued items: appended up to the slot cap
+        for i in 1..=5 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(try_fill(&rx, &mut out, 3), 3);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+        assert_eq!(try_fill(&rx, &mut out, 10), 2);
+        assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
+        // closed channel: still just returns 0
+        drop(tx);
+        assert_eq!(try_fill(&rx, &mut out, 4), 0);
     }
 
     #[test]

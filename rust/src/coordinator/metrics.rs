@@ -1,4 +1,10 @@
 //! Latency/throughput metrics for the serving coordinator.
+//!
+//! Two sample recorders ([`LatencyStats`] for durations, [`RateStats`] for
+//! per-request token rates) feed one [`ServeReport`], which covers both
+//! workload shapes the coordinator serves: window *scoring* (requests,
+//! batches, request latency) and incremental *generation* (prefill vs
+//! decode token counts, aggregate and per-request decode tokens/s).
 
 use std::time::Duration;
 
@@ -36,19 +42,83 @@ impl LatencyStats {
     }
 }
 
+/// Per-request rate recorder (decode tokens/s of each finished generation).
+#[derive(Debug, Default, Clone)]
+pub struct RateStats {
+    samples: Vec<f64>,
+}
+
+impl RateStats {
+    pub fn record(&mut self, rate: f64) {
+        self.samples.push(rate);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
 /// Aggregated serving-run report.
-#[derive(Debug, Clone)]
+///
+/// The scoring fields (`requests`, `batches`, `latency`, …) are filled by
+/// every backend; the generation fields (`gen_requests` onward) only move
+/// off zero on the compiled backend's continuous-batching loop.
+#[derive(Debug, Clone, Default)]
 pub struct ServeReport {
+    /// Completed requests of any kind (scores + generations).
     pub requests: usize,
+    /// Admission groups pulled off the queue.
     pub batches: usize,
     pub wall: Duration,
+    /// Submit→respond latency, every request kind.
     pub latency: LatencyStats,
     pub mean_batch_size: f64,
+    /// Generation requests completed.
+    pub gen_requests: usize,
+    /// Prompt tokens run through `prefill`.
+    pub prefill_tokens: usize,
+    /// Tokens produced by interleaved `decode_step_batch` calls.
+    pub decode_tokens: usize,
+    /// Interleaved decode steps executed.
+    pub decode_steps: usize,
+    /// Wall time spent inside `decode_step_batch`.
+    pub decode_wall: Duration,
+    /// Per-request decode tokens/s (recorded when a generation finishes).
+    pub request_tok_s: RateStats,
 }
 
 impl ServeReport {
     pub fn throughput_rps(&self) -> f64 {
         self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Aggregate decode throughput: generated tokens per second of time
+    /// spent decoding (the number continuous batching is meant to raise).
+    pub fn decode_tok_s(&self) -> f64 {
+        self.decode_tokens as f64 / self.decode_wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Mean sequences in flight per decode step.
+    pub fn mean_decode_batch(&self) -> f64 {
+        self.decode_tokens as f64 / self.decode_steps.max(1) as f64
     }
 
     pub fn print(&self) {
@@ -67,6 +137,25 @@ impl ServeReport {
             self.latency.percentile_ms(95.0),
             self.latency.percentile_ms(99.0),
         );
+        if self.gen_requests > 0 {
+            println!(
+                "generation: {} requests | prefill {} tok | decode {} tok in {} steps \
+                 (mean batch {:.2})",
+                self.gen_requests,
+                self.prefill_tokens,
+                self.decode_tokens,
+                self.decode_steps,
+                self.mean_decode_batch(),
+            );
+            println!(
+                "decode {:.0} tok/s aggregate | per-request mean {:.0} tok/s \
+                 (min {:.0}, max {:.0})",
+                self.decode_tok_s(),
+                self.request_tok_s.mean(),
+                self.request_tok_s.min(),
+                self.request_tok_s.max(),
+            );
+        }
     }
 }
 
@@ -92,5 +181,37 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.mean_ms(), 0.0);
         assert_eq!(s.percentile_ms(99.0), 0.0);
+        let r = RateStats::default();
+        assert_eq!(r.count(), 0);
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.max(), 0.0);
+    }
+
+    #[test]
+    fn rate_stats_aggregate() {
+        let mut r = RateStats::default();
+        for v in [10.0, 20.0, 30.0] {
+            r.record(v);
+        }
+        assert_eq!(r.count(), 3);
+        assert!((r.mean() - 20.0).abs() < 1e-12);
+        assert_eq!(r.min(), 10.0);
+        assert_eq!(r.max(), 30.0);
+    }
+
+    #[test]
+    fn decode_throughput_derivations() {
+        let report = ServeReport {
+            decode_tokens: 600,
+            decode_steps: 200,
+            decode_wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((report.decode_tok_s() - 300.0).abs() < 1e-9);
+        assert!((report.mean_decode_batch() - 3.0).abs() < 1e-12);
+        // zero-field report stays finite
+        let empty = ServeReport::default();
+        assert_eq!(empty.mean_decode_batch(), 0.0);
+        assert!(empty.decode_tok_s().abs() < 1e-3);
     }
 }

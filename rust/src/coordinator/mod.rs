@@ -1,52 +1,76 @@
 //! The serving coordinator — Layer 3's runtime contribution.
 //!
-//! A scoring service over a quantized model: clients submit fixed-length
-//! token windows, the coordinator batches them dynamically, executes on a
-//! [`ScoreBackend`], and returns per-window NLL. std::thread + mpsc (tokio
-//! is not in the offline vendor set — the event loop is a plain loop and
-//! channels).
+//! Two workloads over a quantized model, one request queue:
+//!
+//! * **Scoring** — clients submit fixed-length token windows and get the
+//!   summed NLL back ([`ScoreClient::score`]). Windows are batched
+//!   dynamically and executed in one shot.
+//! * **Generation** — clients submit a prompt plus a token budget and get
+//!   greedy-decoded tokens back ([`GenClient::generate`]). The compiled
+//!   backend serves these with **continuous batching**: each prompt is
+//!   [`prefill`](crate::plan::CompiledModel::prefill)ed into its own
+//!   [`KvCache`], then every in-flight sequence advances one token per
+//!   [`decode_step_batch`](crate::plan::CompiledModel::decode_step_batch)
+//!   call. Sequences join mid-flight (the [`try_fill`] path runs between
+//!   steps) and leave the moment their budget is spent — no
+//!   wait-for-the-slowest batch barrier.
+//!
+//! std::thread + mpsc (tokio is not in the offline vendor set — the event
+//! loop is a plain loop and channels).
 //!
 //! ```text
-//!  client threads ──score(window)──▶ queue ──next_batch──▶ run() loop ──▶ backend
-//!        ▲                                                      │
+//!  client threads ──score/generate──▶ queue ─┬─ idle: next_batch ──▶ run() loop
+//!        ▲                                   └─ busy: try_fill  (join mid-flight)
+//!        │                                                      │
 //!        └──────────────── per-request oneshot ◀────────────────┘
 //! ```
 //!
 //! Two backends:
 //!
 //! * [`ScoreBackend::Pjrt`] — the AOT HLO executable (batch lowered at
-//!   `B = SCORE_BATCH`). All PJRT work happens on the thread that calls
+//!   `B = SCORE_BATCH`). Scoring only — generation requests are answered
+//!   with an error (the incremental-decode state lives in the compiled
+//!   plan). All PJRT work happens on the thread that calls
 //!   [`Coordinator::run`] (xla_extension 0.5.1 deadlocks when a second CPU
 //!   client is created on another thread while one is in use, so the
 //!   process keeps a single per-thread client). Needs `make artifacts` and
 //!   the `pjrt` cargo feature.
 //! * [`ScoreBackend::Compiled`] — the prepacked in-process engine
 //!   ([`crate::plan::CompiledModel`]): the checkpoint is compiled once at
-//!   loop start and every request decodes allocation-free through the
-//!   scratch arena. Always available; this is what `zqfp serve`, the
-//!   serving bench and the e2e example fall back to when artifacts (or the
-//!   feature) are missing.
+//!   loop start; scoring decodes allocation-free through the scratch
+//!   arena, and generation runs the continuous-batching loop above.
+//!   Finished sequences' caches return to a free pool, so the steady state
+//!   allocates only per-request response buffers. Always available; this
+//!   is what `zqfp serve`, the serving bench and the e2e example fall back
+//!   to when artifacts (or the feature) are missing.
 //!
-//! Client threads only touch channels. `run` returns when every
-//! [`ScoreClient`] has been dropped and the queue is drained.
+//! Scoring requests share the loop with generation: they are executed at
+//! admission time, between decode steps — a scoring burst therefore adds
+//! head-of-line latency to in-flight generations (and vice versa), which
+//! is the usual single-worker trade; [`ServeReport`] separates the two
+//! workloads so the effect is visible.
+//!
+//! Client threads only touch channels. `run` returns when every client
+//! handle has been dropped and the queue is drained.
 
 pub mod batcher;
 pub mod metrics;
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-pub use batcher::{next_batch, BatchPolicy};
-pub use metrics::{LatencyStats, ServeReport};
+pub use batcher::{next_batch, try_fill, BatchPolicy};
+pub use metrics::{LatencyStats, RateStats, ServeReport};
 
 use crate::cli::Args;
 use crate::data::{Corpus, CorpusKind};
 use crate::ensure;
 use crate::error::Result;
+use crate::formats::{FpFormat, NumericFormat};
 use crate::model::Checkpoint;
 use crate::pipeline::quantize_checkpoint;
-use crate::plan::CompiledModel;
+use crate::plan::{argmax, CompiledModel, KvCache};
 use crate::quant::Scheme;
 use crate::runtime::HloScorer;
 
@@ -60,17 +84,44 @@ pub enum ScoreBackend {
 }
 
 /// One in-flight scoring request.
-struct Request {
+struct ScoreRequest {
     window: Vec<u16>,
     submitted: Instant,
     respond: SyncSender<Result<f32>>,
 }
 
-/// Handle client threads use to talk to a running coordinator. The serving
-/// loop exits once all clients are dropped.
+/// One in-flight generation request.
+struct GenRequest {
+    prompt: Vec<u16>,
+    max_new: usize,
+    submitted: Instant,
+    respond: SyncSender<Result<Generated>>,
+}
+
+/// Everything a client can ask of the coordinator.
+enum Work {
+    Score(ScoreRequest),
+    Generate(GenRequest),
+}
+
+/// A finished generation.
+#[derive(Debug, Clone)]
+pub struct Generated {
+    /// The `max_new` greedily-decoded tokens (prompt not included).
+    pub tokens: Vec<u16>,
+    /// Prompt length that was prefilled.
+    pub prompt_len: usize,
+    /// This request's decode-phase rate (tokens/s over the interleaved
+    /// steps it was in flight; 0.0 when `max_new == 1`, which needs no
+    /// decode step).
+    pub decode_tok_s: f64,
+}
+
+/// Handle client threads use to submit scoring requests. The serving loop
+/// exits once all client handles (score and generation) are dropped.
 #[derive(Clone)]
 pub struct ScoreClient {
-    tx: Sender<Request>,
+    tx: Sender<Work>,
     seq: usize,
 }
 
@@ -80,11 +131,59 @@ impl ScoreClient {
         ensure!(window.len() == self.seq, "window must be {} tokens", self.seq);
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         self.tx
-            .send(Request { window, submitted: Instant::now(), respond: rtx })
+            .send(Work::Score(ScoreRequest {
+                window,
+                submitted: Instant::now(),
+                respond: rtx,
+            }))
             .map_err(|_| crate::anyhow!("coordinator stopped"))?;
         rrx.recv()
             .map_err(|_| crate::anyhow!("coordinator dropped request"))?
     }
+}
+
+/// Handle client threads use to submit generation requests.
+#[derive(Clone)]
+pub struct GenClient {
+    tx: Sender<Work>,
+    max_seq: usize,
+    vocab: usize,
+}
+
+impl GenClient {
+    /// Greedily generate `max_new` tokens after `prompt` (blocking).
+    pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> Result<Generated> {
+        validate_gen(&prompt, max_new, self.max_seq, self.vocab)?;
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .send(Work::Generate(GenRequest {
+                prompt,
+                max_new,
+                submitted: Instant::now(),
+                respond: rtx,
+            }))
+            .map_err(|_| crate::anyhow!("coordinator stopped"))?;
+        rrx.recv()
+            .map_err(|_| crate::anyhow!("coordinator dropped request"))?
+    }
+}
+
+/// Shared request validation (client side for fast failure, coordinator
+/// side for defense — an invalid token id would otherwise panic the loop).
+fn validate_gen(prompt: &[u16], max_new: usize, max_seq: usize, vocab: usize) -> Result<()> {
+    ensure!(!prompt.is_empty(), "prompt must be non-empty");
+    ensure!(max_new >= 1, "max_new must be at least 1");
+    // saturating: `prompt.len() + max_new` could wrap for adversarial
+    // max_new and sneak past the guard into a capacity-overflow panic
+    ensure!(
+        max_new <= max_seq.saturating_sub(prompt.len()),
+        "prompt ({}) + max_new ({max_new}) exceeds max_seq {max_seq}",
+        prompt.len()
+    );
+    if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= vocab) {
+        return Err(crate::anyhow!("token id {bad} out of range (vocab size {vocab})"));
+    }
+    Ok(())
 }
 
 /// Everything the serving loop needs.
@@ -93,13 +192,30 @@ pub struct CoordinatorConfig {
     pub ck: Checkpoint,
     pub opts: crate::engine::EngineOpts,
     pub policy: BatchPolicy,
+    /// `Some(fmt)` ⇒ the compiled backend stores generation K/V caches
+    /// fake-quantized to this FP format (the paper's activation formats
+    /// applied to the dominant serving memory stream). `None` = exact f32
+    /// caches, bit-identical to full recompute.
+    pub kv_quant: Option<FpFormat>,
 }
 
 /// The request queue + serving loop.
 pub struct Coordinator {
-    tx: Option<Sender<Request>>,
-    rx: Receiver<Request>,
+    tx: Option<Sender<Work>>,
+    rx: Receiver<Work>,
     cfg: CoordinatorConfig,
+}
+
+/// Decode-side state of one in-flight generation (its [`KvCache`] lives in
+/// a parallel vector so the caches can be borrowed as one slice per step).
+struct ActiveGen {
+    /// Tokens decoded so far; the last one is the next step's input.
+    generated: Vec<u16>,
+    max_new: usize,
+    prompt_len: usize,
+    submitted: Instant,
+    decode_start: Instant,
+    respond: SyncSender<Result<Generated>>,
 }
 
 impl Coordinator {
@@ -108,13 +224,23 @@ impl Coordinator {
         Coordinator { tx: Some(tx), rx, cfg }
     }
 
-    /// A client handle. Create one per client thread **before** calling
+    /// A scoring client handle. Create handles **before** calling
     /// [`run`](Self::run); `run` drops the coordinator's own sender, so the
     /// loop ends when the last client handle is gone.
     pub fn client(&self) -> ScoreClient {
         ScoreClient {
             tx: self.tx.as_ref().expect("before run").clone(),
             seq: self.cfg.ck.config.max_seq,
+        }
+    }
+
+    /// A generation client handle (same lifetime rules as
+    /// [`client`](Self::client)).
+    pub fn gen_client(&self) -> GenClient {
+        GenClient {
+            tx: self.tx.as_ref().expect("before run").clone(),
+            max_seq: self.cfg.ck.config.max_seq,
+            vocab: self.cfg.ck.config.vocab_size,
         }
     }
 
@@ -139,7 +265,28 @@ impl Coordinator {
         let mut batches = 0usize;
         let mut requests = 0usize;
         let t0 = Instant::now();
-        while let Some(batch) = next_batch(&self.rx, policy) {
+        while let Some(work) = next_batch(&self.rx, policy) {
+            let mut batch = Vec::with_capacity(work.len());
+            for w in work {
+                match w {
+                    Work::Score(r) => batch.push(r),
+                    Work::Generate(g) => {
+                        // the incremental-decode state lives in the
+                        // compiled plan; the AOT scoring executable has no
+                        // generation entry point. Counted like any other
+                        // answered request so backend reports stay
+                        // comparable for identical traffic.
+                        requests += 1;
+                        latency.record(Instant::now() - g.submitted);
+                        let _ = g.respond.send(Err(crate::anyhow!(
+                            "generation requires the compiled backend"
+                        )));
+                    }
+                }
+            }
+            if batch.is_empty() {
+                continue;
+            }
             flat.clear();
             for r in &batch {
                 flat.extend_from_slice(&r.window);
@@ -173,39 +320,163 @@ impl Coordinator {
             wall: t0.elapsed(),
             latency,
             mean_batch_size: requests as f64 / batches.max(1) as f64,
+            ..ServeReport::default()
         })
     }
 
+    /// The compiled backend: immediate scoring plus continuous-batching
+    /// generation (see the module docs for the loop shape).
     fn run_compiled(self) -> Result<ServeReport> {
         // Compile once; every request then decodes through the prepacked
-        // plan with zero steady-state allocations.
+        // plan with zero steady-state allocations in the model itself.
         let model = CompiledModel::compile(&self.cfg.ck, self.cfg.opts);
         let mut scratch = model.scratch();
-        // No batched GEMM to amortize on this backend — requests are decoded
-        // one at a time — so waiting for a batch to fill would buy zero
-        // throughput and only inflate head-request latency. Drain eagerly.
-        let policy = BatchPolicy { max_wait: std::time::Duration::ZERO, ..self.cfg.policy };
         let vocab = self.cfg.ck.config.vocab_size;
+        let max_seq = self.cfg.ck.config.max_seq;
+        let kv_quant = self.cfg.kv_quant;
+        // No lowered batch dimension to fill on this backend, and joins
+        // happen between decode steps anyway — drain the queue eagerly
+        // instead of holding the head request for company. In-flight
+        // sequences are additionally clamped to max_seq: the scratch arena
+        // is pre-sized for max_seq rows and decode_step_batch asserts it.
+        let policy = BatchPolicy { max_wait: Duration::ZERO, ..self.cfg.policy };
+        let max_active = policy.max_batch.max(1).min(max_seq);
+
         let mut latency = LatencyStats::default();
+        let mut request_tok_s = RateStats::default();
         let mut batches = 0usize;
         let mut requests = 0usize;
+        let mut gen_requests = 0usize;
+        let mut prefill_tokens = 0usize;
+        let mut decode_tokens = 0usize;
+        let mut decode_steps = 0usize;
+        let mut decode_wall = Duration::ZERO;
+
+        let mut active: Vec<ActiveGen> = Vec::new();
+        let mut caches: Vec<KvCache> = Vec::new();
+        let mut pool: Vec<KvCache> = Vec::new();
+        let mut step_tokens: Vec<u16> = Vec::with_capacity(max_active);
+        let mut admit: Vec<Work> = Vec::with_capacity(max_active);
+
         let t0 = Instant::now();
-        while let Some(batch) = next_batch(&self.rx, policy) {
-            batches += 1;
-            requests += batch.len();
-            for r in batch {
-                // Validate before decoding: an out-of-range token id would
-                // panic inside the embedding lookup and take down the whole
-                // serving loop, where the PJRT backend fails one request.
-                let result = if r.window.len() < 2 {
-                    Err(crate::anyhow!("window needs at least 2 tokens for scoring"))
-                } else if let Some(&bad) = r.window.iter().find(|&&t| t as usize >= vocab) {
-                    Err(crate::anyhow!("token id {bad} out of range (vocab size {vocab})"))
+        loop {
+            // ---- admission: block when idle, join mid-flight when busy --
+            admit.clear();
+            if active.is_empty() {
+                match next_batch(&self.rx, policy) {
+                    Some(work) => {
+                        batches += 1;
+                        admit.extend(work);
+                    }
+                    None => break, // queue closed and drained, nothing in flight
+                }
+            } else if active.len() < max_active
+                && try_fill(&self.rx, &mut admit, max_active - active.len()) > 0
+            {
+                batches += 1;
+            }
+            for work in admit.drain(..) {
+                match work {
+                    Work::Score(r) => {
+                        requests += 1;
+                        // Validate before decoding: an out-of-range token id
+                        // would panic inside the embedding lookup and take
+                        // down the whole serving loop, where the PJRT
+                        // backend fails one request.
+                        let result = if r.window.len() < 2 {
+                            Err(crate::anyhow!("window needs at least 2 tokens for scoring"))
+                        } else if let Some(&bad) =
+                            r.window.iter().find(|&&t| t as usize >= vocab)
+                        {
+                            Err(crate::anyhow!(
+                                "token id {bad} out of range (vocab size {vocab})"
+                            ))
+                        } else {
+                            Ok(model.score_nll(&r.window, &mut scratch))
+                        };
+                        latency.record(Instant::now() - r.submitted);
+                        let _ = r.respond.send(result);
+                    }
+                    Work::Generate(g) => {
+                        requests += 1;
+                        if let Err(e) = validate_gen(&g.prompt, g.max_new, max_seq, vocab) {
+                            latency.record(Instant::now() - g.submitted);
+                            let _ = g.respond.send(Err(e));
+                            continue;
+                        }
+                        gen_requests += 1;
+                        let mut cache = pool.pop().unwrap_or_else(|| match kv_quant {
+                            Some(fmt) => model.kv_cache_quantized(fmt),
+                            None => model.kv_cache(),
+                        });
+                        cache.reset();
+                        let logits = model.prefill(&g.prompt, &mut cache, &mut scratch);
+                        prefill_tokens += g.prompt.len();
+                        let first = argmax(logits.row(logits.rows - 1)) as u16;
+                        let mut generated = Vec::with_capacity(g.max_new);
+                        generated.push(first);
+                        if g.max_new == 1 {
+                            let now = Instant::now();
+                            latency.record(now - g.submitted);
+                            let _ = g.respond.send(Ok(Generated {
+                                tokens: generated,
+                                prompt_len: g.prompt.len(),
+                                decode_tok_s: 0.0,
+                            }));
+                            pool.push(cache);
+                        } else {
+                            active.push(ActiveGen {
+                                generated,
+                                max_new: g.max_new,
+                                prompt_len: g.prompt.len(),
+                                submitted: g.submitted,
+                                decode_start: Instant::now(),
+                                respond: g.respond,
+                            });
+                            caches.push(cache);
+                        }
+                    }
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+
+            // ---- one interleaved decode step for every in-flight seq ----
+            step_tokens.clear();
+            for a in &active {
+                step_tokens.push(*a.generated.last().expect("active seq has a token"));
+            }
+            let ts = Instant::now();
+            let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
+            decode_wall += ts.elapsed();
+            decode_steps += 1;
+            decode_tokens += active.len();
+            // sample by original row index first — swap_remove below
+            // reorders `active`, the logits rows do not move with it
+            for (row, a) in active.iter_mut().enumerate() {
+                a.generated.push(argmax(logits.row(row)) as u16);
+            }
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].generated.len() >= active[i].max_new {
+                    let done = active.swap_remove(i);
+                    let cache = caches.swap_remove(i);
+                    let now = Instant::now();
+                    let steps = done.generated.len() - 1;
+                    let rate =
+                        steps as f64 / (now - done.decode_start).as_secs_f64().max(1e-9);
+                    request_tok_s.record(rate);
+                    latency.record(now - done.submitted);
+                    let _ = done.respond.send(Ok(Generated {
+                        tokens: done.generated,
+                        prompt_len: done.prompt_len,
+                        decode_tok_s: rate,
+                    }));
+                    pool.push(cache); // recycle the ring for the next join
                 } else {
-                    Ok(model.score_nll(&r.window, &mut scratch))
-                };
-                latency.record(Instant::now() - r.submitted);
-                let _ = r.respond.send(result);
+                    i += 1;
+                }
             }
         }
         Ok(ServeReport {
@@ -214,15 +485,24 @@ impl Coordinator {
             wall: t0.elapsed(),
             latency,
             mean_batch_size: requests as f64 / batches.max(1) as f64,
+            gen_requests,
+            prefill_tokens,
+            decode_tokens,
+            decode_steps,
+            decode_wall,
+            request_tok_s,
         })
     }
 }
 
 /// `zqfp serve` — load a checkpoint, quantize it under `--scheme`, start
 /// the coordinator (PJRT when the artifact exists, otherwise the compiled
-/// in-process engine), fire `--requests` scoring requests from `--clients`
+/// in-process engine), fire `--requests` requests from `--clients`
 /// threads, and print the latency/throughput report (the e2e serving
-/// validation of DESIGN.md §5).
+/// validation of DESIGN.md §5). With `--generate N` the workload is
+/// continuous-batching generation (N new tokens per request, compiled
+/// backend) instead of window scoring; `--kv-cache e4m3|e5m2` additionally
+/// stores the generation K/V caches in that FP8 format.
 pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -230,14 +510,24 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let n_requests = args.get_usize("requests", 256)?;
     let n_clients = args.get_usize("clients", 4)?;
     let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
+    let max_batch = args.get_usize("max-batch", crate::runtime::SCORE_BATCH)?;
+    let gen_new = args.get_usize("generate", 0)?;
     let alpha = args.get_f32("alpha", 1.0)?;
     let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
     let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
+    let kv_quant = match args.get("kv-cache") {
+        None => None,
+        Some(s) => match NumericFormat::parse(&s) {
+            Some(NumericFormat::Fp(f)) => Some(f),
+            _ => return Err(format!("--kv-cache: not an FP format: {s}")),
+        },
+    };
     let cfg = crate::cli::commands::ptq_config_from_args(args, scheme)?;
     args.finish()?;
 
     let ck = crate::cli::commands::load_ckpt_with_alpha(std::path::Path::new(&ckpt), alpha)?;
     let seq = ck.config.max_seq;
+    ensure_gen_fits(gen_new, seq)?;
     let calib = crate::cli::commands::load_calib(&data, seq)?;
     println!("quantizing under {} ...", scheme.name());
     let (qck, report) = quantize_checkpoint(&ck, &calib, &cfg);
@@ -248,10 +538,17 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     );
 
     let opts = cfg.engine_opts();
-    let backend = pick_backend(&artifacts, &qck, &opts);
+    let backend = if gen_new > 0 {
+        ScoreBackend::Compiled // generation path: compiled plan only
+    } else {
+        pick_backend(&artifacts, &qck, &opts)
+    };
     match &backend {
         ScoreBackend::Pjrt { .. } => println!("backend: pjrt ({})", artifacts.display()),
         ScoreBackend::Compiled => println!("backend: compiled in-process engine"),
+    }
+    if let Some(fmt) = kv_quant {
+        println!("kv cache: {}", fmt.name());
     }
 
     // workload: eval windows from the C4 surrogate
@@ -265,39 +562,73 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
         ck: qck,
         opts,
         policy: BatchPolicy {
-            max_batch: crate::runtime::SCORE_BATCH,
+            max_batch,
             max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
         },
+        kv_quant,
     });
 
-    println!(
-        "serving {n_windows} requests from {n_clients} clients (batch window {max_wait_ms} ms) ..."
-    );
     let mut handles = Vec::new();
-    for c in 0..n_clients {
-        let client = coord.client();
-        let my: Vec<Vec<u16>> = windows.iter().skip(c).step_by(n_clients).cloned().collect();
-        handles.push(std::thread::spawn(move || -> Result<f64> {
-            let mut sum = 0.0f64;
-            for w in my {
-                sum += client.score(w)? as f64;
-            }
-            Ok(sum)
-        }));
-    }
-    // backend loop on this thread (PJRT single-client-process rule)
-    let report = coord.run().map_err(|e| e.to_string())?;
-    let mut total_nll = 0.0f64;
+    let report = if gen_new > 0 {
+        let prompt_len = seq - gen_new;
+        println!(
+            "serving {n_windows} generation requests ({prompt_len}-token prompts, \
+             {gen_new} new tokens) from {n_clients} clients (max {max_batch} in flight) ..."
+        );
+        for c in 0..n_clients {
+            let client = coord.gen_client();
+            let my: Vec<Vec<u16>> =
+                windows.iter().skip(c).step_by(n_clients).cloned().collect();
+            handles.push(std::thread::spawn(move || -> Result<f64> {
+                let mut tokens = 0usize;
+                for w in my {
+                    tokens += client.generate(w[..prompt_len].to_vec(), gen_new)?.tokens.len();
+                }
+                Ok(tokens as f64)
+            }));
+        }
+        coord.run().map_err(|e| e.to_string())?
+    } else {
+        println!(
+            "serving {n_windows} scoring requests from {n_clients} clients \
+             (batch window {max_wait_ms} ms) ..."
+        );
+        for c in 0..n_clients {
+            let client = coord.client();
+            let my: Vec<Vec<u16>> =
+                windows.iter().skip(c).step_by(n_clients).cloned().collect();
+            handles.push(std::thread::spawn(move || -> Result<f64> {
+                let mut sum = 0.0f64;
+                for w in my {
+                    sum += client.score(w)? as f64;
+                }
+                Ok(sum)
+            }));
+        }
+        coord.run().map_err(|e| e.to_string())?
+    };
+    let mut total = 0.0f64;
     for h in handles {
-        total_nll += h.join().map_err(|_| "client panicked")?.map_err(|e| e.to_string())?;
+        total += h.join().map_err(|_| "client panicked")?.map_err(|e| e.to_string())?;
     }
     report.print();
-    let tokens = (seq - 1) * n_windows;
-    println!(
-        "workload ppl {:.4} over {} scored tokens",
-        (total_nll / tokens as f64).exp(),
-        tokens
-    );
+    if gen_new > 0 {
+        println!("generated {} tokens total", total as usize);
+    } else {
+        let tokens = (seq - 1) * n_windows;
+        println!(
+            "workload ppl {:.4} over {} scored tokens",
+            (total / tokens as f64).exp(),
+            tokens
+        );
+    }
+    Ok(())
+}
+
+fn ensure_gen_fits(gen_new: usize, seq: usize) -> std::result::Result<(), String> {
+    if gen_new >= seq {
+        return Err(format!("--generate {gen_new} must be < max_seq {seq} (prompt needs room)"));
+    }
     Ok(())
 }
 
@@ -346,15 +677,23 @@ mod tests {
         Checkpoint::random(&cfg, &mut rng)
     }
 
+    fn compiled_cfg(ck: Checkpoint, policy: BatchPolicy) -> CoordinatorConfig {
+        CoordinatorConfig {
+            backend: ScoreBackend::Compiled,
+            ck,
+            opts: EngineOpts::default(),
+            policy,
+            kv_quant: None,
+        }
+    }
+
     #[test]
     fn compiled_backend_serves_requests() {
         let ck = tiny_ck();
-        let coord = Coordinator::new(CoordinatorConfig {
-            backend: ScoreBackend::Compiled,
-            ck: ck.clone(),
-            opts: EngineOpts::default(),
-            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
-        });
+        let coord = Coordinator::new(compiled_cfg(
+            ck.clone(),
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) },
+        ));
         let mut handles = Vec::new();
         for c in 0..3usize {
             let client = coord.client();
@@ -374,18 +713,15 @@ mod tests {
         }
         assert_eq!(report.requests, 15);
         assert!(report.latency.count() == 15);
+        assert_eq!(report.gen_requests, 0);
+        assert_eq!(report.decode_tokens, 0);
 
         // NLL parity with a direct compiled-model score.
         let model = CompiledModel::compile(&ck, EngineOpts::default());
         let mut s = model.scratch();
         let window: Vec<u16> = (0..8).map(|t| t % 48).collect();
         let direct = model.score_nll(&window, &mut s);
-        let coord2 = Coordinator::new(CoordinatorConfig {
-            backend: ScoreBackend::Compiled,
-            ck,
-            opts: EngineOpts::default(),
-            policy: BatchPolicy::default(),
-        });
+        let coord2 = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
         let client = coord2.client();
         let h = std::thread::spawn(move || client.score(window).unwrap());
         coord2.run().unwrap();
@@ -395,15 +731,122 @@ mod tests {
     #[test]
     fn rejects_wrong_window_length() {
         let ck = tiny_ck();
-        let coord = Coordinator::new(CoordinatorConfig {
-            backend: ScoreBackend::Compiled,
-            ck,
-            opts: EngineOpts::default(),
-            policy: BatchPolicy::default(),
-        });
+        let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
         let client = coord.client();
         assert!(client.score(vec![1, 2, 3]).is_err());
         drop(client);
         coord.run().unwrap();
+    }
+
+    #[test]
+    fn generation_matches_direct_greedy_decode() {
+        let ck = tiny_ck();
+        // direct: prefill + greedy decode on a compiled model
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let prompt: Vec<u16> = vec![5, 11, 17];
+        let max_new = 4usize;
+        let mut cache = model.kv_cache();
+        let logits = model.prefill(&prompt, &mut cache, &mut s);
+        let mut expect = vec![argmax(logits.row(logits.rows - 1)) as u16];
+        while expect.len() < max_new {
+            let last = *expect.last().unwrap();
+            let row = model.decode_step(last, &mut cache, &mut s);
+            expect.push(argmax(row.row(0)) as u16);
+        }
+
+        let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
+        let client = coord.gen_client();
+        let p = prompt.clone();
+        let h = std::thread::spawn(move || client.generate(p, max_new).unwrap());
+        let report = coord.run().unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.tokens, expect);
+        assert_eq!(got.prompt_len, 3);
+        assert_eq!(report.gen_requests, 1);
+        assert_eq!(report.prefill_tokens, 3);
+        assert_eq!(report.decode_tokens, max_new - 1);
+        assert_eq!(report.request_tok_s.count(), 1);
+    }
+
+    #[test]
+    fn continuous_batching_joins_and_leaves_midflight() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(compiled_cfg(
+            ck.clone(),
+            BatchPolicy { max_batch: 3, max_wait: Duration::from_millis(1) },
+        ));
+        // mixed lengths/budgets so sequences finish at different steps,
+        // plus a scoring request sharing the same loop
+        let score_client = coord.client();
+        let mut handles = Vec::new();
+        for (c, (plen, max_new)) in
+            [(1usize, 2usize), (2, 5), (3, 4), (1, 6), (4, 3)].iter().enumerate()
+        {
+            let client = coord.gen_client();
+            let prompt: Vec<u16> = (0..*plen).map(|t| ((c + t) % 48) as u16).collect();
+            let n = *max_new;
+            handles.push(std::thread::spawn(move || client.generate(prompt, n).unwrap()));
+        }
+        let sh = std::thread::spawn(move || {
+            let window: Vec<u16> = (0..8).map(|t| t % 48).collect();
+            score_client.score(window).unwrap()
+        });
+        let report = coord.run().unwrap();
+        let results: Vec<Generated> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(sh.join().unwrap().is_finite());
+        for (r, (_, max_new)) in
+            results.iter().zip([(1usize, 2usize), (2, 5), (3, 4), (1, 6), (4, 3)])
+        {
+            assert_eq!(r.tokens.len(), max_new);
+            assert!(r.tokens.iter().all(|&t| (t as usize) < 48));
+        }
+        assert_eq!(report.gen_requests, 5);
+        assert_eq!(report.requests, 6);
+        // 5 requests, budgets (2+5+4+6+3) = 20 tokens, first token of each
+        // comes from prefill => 15 decode-step tokens
+        assert_eq!(report.decode_tokens, 15);
+        assert!(report.decode_steps >= 5, "longest budget needs >= 5 steps");
+        assert_eq!(report.request_tok_s.count(), 5);
+        // continuity: a sequence's result must not depend on batch mates —
+        // re-serve one request alone and compare
+        let coord2 = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
+        let client = coord2.gen_client();
+        let prompt: Vec<u16> = (0..2).map(|t| ((1 + t) % 48) as u16).collect();
+        let h = std::thread::spawn(move || client.generate(prompt, 5).unwrap());
+        coord2.run().unwrap();
+        assert_eq!(h.join().unwrap().tokens, results[1].tokens);
+    }
+
+    #[test]
+    fn generation_rejects_bad_requests() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
+        let client = coord.gen_client();
+        assert!(client.generate(vec![], 3).is_err(), "empty prompt");
+        assert!(client.generate(vec![1, 2], 0).is_err(), "zero budget");
+        assert!(client.generate(vec![1, 2, 3, 4, 5, 6, 7], 2).is_err(), "exceeds max_seq");
+        assert!(client.generate(vec![1, 200], 2).is_err(), "token out of vocab");
+        drop(client);
+        coord.run().unwrap();
+    }
+
+    #[test]
+    fn quantized_kv_generation_is_deterministic() {
+        let ck = tiny_ck();
+        let prompt: Vec<u16> = vec![9, 21, 33];
+        let mut runs = Vec::new();
+        for _ in 0..2 {
+            let mut cfg = compiled_cfg(ck.clone(), BatchPolicy::default());
+            cfg.kv_quant = Some(crate::formats::FpFormat::E4M3);
+            let coord = Coordinator::new(cfg);
+            let client = coord.gen_client();
+            let p = prompt.clone();
+            let h = std::thread::spawn(move || client.generate(p, 4).unwrap());
+            coord.run().unwrap();
+            runs.push(h.join().unwrap().tokens);
+        }
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0].len(), 4);
     }
 }

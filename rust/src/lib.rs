@@ -9,7 +9,11 @@
 //!
 //! Architecture (see DESIGN.md): a Rust coordinator/PTQ-pipeline (this
 //! crate) drives AOT-compiled JAX/Pallas computations through PJRT; Python
-//! exists only at build time.
+//! exists only at build time. The serving stack — request queue, dynamic
+//! batcher, KV-cached incremental decode with continuous batching, and
+//! metrics — is documented end to end in the repo-root `ARCHITECTURE.md`
+//! (and `README.md` maps the crate); the load-bearing modules are
+//! [`coordinator`], [`plan`] and [`plan::kv`].
 
 // The numeric kernels are written as explicit index loops on purpose: the
 // compiled fast path must be bit-identical to the reference engine, so the

@@ -1,0 +1,251 @@
+//! Per-sequence K/V cache — the state that makes decode incremental.
+//!
+//! # Why
+//!
+//! [`CompiledModel::forward`](super::CompiledModel::forward) recomputes
+//! attention over the **entire** token window for every forward call:
+//! generating one token after `n` costs `O(n²·d)` in attention alone. The
+//! serving decode loop instead carries a [`KvCache`] and calls
+//! [`prefill`](super::CompiledModel::prefill) once per prompt and
+//! [`decode_step`](super::CompiledModel::decode_step) once per generated
+//! token — each step computes the q/k/v projections for the *new* position
+//! only and attends against the cached keys/values, `O(n·d)` per token.
+//!
+//! # Layout
+//!
+//! One ring per layer, two matrices per ring:
+//!
+//! ```text
+//!   k[layer]: [max_seq, d_model]   row p = key   vector of position p
+//!   v[layer]: [max_seq, d_model]   row p = value vector of position p
+//! ```
+//!
+//! Rows are stored head-interleaved exactly as the fused q|k|v projection
+//! emits them (head `h` occupies columns `h·dh .. (h+1)·dh`), so the cached
+//! attention kernel walks the same unit-stride slices as the full-recompute
+//! kernel — this is what makes the bit-equivalence contract (below) cheap.
+//!
+//! Every buffer is allocated once at construction and sized to the model's
+//! `max_seq`; appending rows and [`reset`](KvCache::reset) never
+//! touch the heap, so the serving loop's steady state stays allocation-free
+//! (asserted by `tests/plan_alloc.rs`).
+//!
+//! # Eviction and reset rules
+//!
+//! The ring is sized to `max_seq` — the hard window of the learned position
+//! table — so a *single* sequence can never overflow it: the write cursor
+//! advances from 0 to at most `max_seq` and `prefill`/`decode_step` assert
+//! before ever wrapping a live sequence (evicting position 0 mid-sequence
+//! would silently change attention semantics, and the position table has no
+//! row to give the overflowing token anyway). Eviction is therefore always
+//! *whole-sequence*: [`reset`](KvCache::reset) rewinds the cursor to slot 0
+//! and the next sequence lazily overwrites the stale rows — no zeroing
+//! pass. The serving coordinator keeps finished sequences' caches in a free
+//! pool and recycles them via `reset` (see `coordinator/`).
+//!
+//! # FP8 quantization (the paper's formats, applied to the cache)
+//!
+//! [`KvCache::quantized`] stores every appended K/V row through the same
+//! [`FpQuantLut`] fast path the A8 activation hot loop uses: one absmax
+//! scan + LUT quantize per row (token-wise scaling, exactly
+//! `NumericFormat::fake_quant_slice_dynamic` semantics). This halves the
+//! dominant serving memory stream the way ZeroQuant-FP's W4A8 formats are
+//! meant to be deployed, at the cost of leaving the bit-equivalence
+//! contract: a quantized cache is **not** bit-identical to
+//! full-recompute `forward` (the reference keeps exact f32 K/V). What it
+//! *does* keep is split-invariance — where the prompt/decode boundary falls
+//! cannot change the logits, because rows are quantized independently of
+//! when they were appended (`tests/kv_equivalence.rs` asserts both
+//! properties).
+
+use super::FpQuantLut;
+use crate::formats::FpFormat;
+use crate::model::ModelConfig;
+use crate::tensor::Matrix;
+
+/// Per-layer K/V rings for one sequence. See the module docs for layout,
+/// reset/eviction rules and the quantization contract.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    /// Ring capacity in positions (= the model's `max_seq`).
+    capacity: usize,
+    /// Valid positions: rows `0..len` of every ring hold live K/V.
+    len: usize,
+    /// Per-layer key rows `[capacity, d_model]`.
+    k: Vec<Matrix>,
+    /// Per-layer value rows `[capacity, d_model]`.
+    v: Vec<Matrix>,
+    /// `Some` ⇒ every stored row is token-wise fake-quantized on append.
+    quant: Option<FpQuantLut>,
+}
+
+impl KvCache {
+    /// An exact (f32) cache: decode through it is bit-identical to
+    /// `CompiledModel::forward` over the same window.
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        KvCache::build(cfg, None)
+    }
+
+    /// A cache that fake-quantizes every stored K/V row to `fmt` (token-wise
+    /// absmax scaling through the LUT fast path).
+    pub fn quantized(cfg: &ModelConfig, fmt: FpFormat) -> KvCache {
+        KvCache::build(cfg, Some(FpQuantLut::new(fmt)))
+    }
+
+    fn build(cfg: &ModelConfig, quant: Option<FpQuantLut>) -> KvCache {
+        let capacity = cfg.max_seq;
+        let d = cfg.d_model;
+        KvCache {
+            capacity,
+            len: 0,
+            k: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+            v: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+            quant,
+        }
+    }
+
+    /// Number of cached positions (the next token decodes at this position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Ring capacity in positions (= the model's `max_seq`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions still available before the ring is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// The storage format of appended rows (`None` = exact f32).
+    pub fn quant_format(&self) -> Option<FpFormat> {
+        self.quant.as_ref().map(|lut| lut.format())
+    }
+
+    /// Rewind the write cursor to slot 0, invalidating every cached
+    /// position. Stale rows are overwritten lazily by the next sequence —
+    /// no zeroing pass, no allocation.
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Store the K/V rows of one position in one layer's ring (quantizing
+    /// if configured). Does **not** advance the cursor: callers stage every
+    /// layer's rows for a token first and [`advance`](Self::advance) once.
+    pub(super) fn store(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(pos < self.capacity, "kv store past ring capacity");
+        let KvCache { k, v, quant, .. } = self;
+        let kr = k[layer].row_mut(pos);
+        kr.copy_from_slice(k_row);
+        if let Some(lut) = quant.as_ref() {
+            lut.fake_quant_row(kr);
+        }
+        let vr = v[layer].row_mut(pos);
+        vr.copy_from_slice(v_row);
+        if let Some(lut) = quant.as_ref() {
+            lut.fake_quant_row(vr);
+        }
+    }
+
+    /// One layer's (K, V) rings; rows `0..len()` are live (plus any rows
+    /// staged by [`store`](Self::store) ahead of the cursor).
+    pub(super) fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
+        (&self.k[layer], &self.v[layer])
+    }
+
+    /// Commit `n` staged positions.
+    pub(super) fn advance(&mut self, n: usize) {
+        self.len += n;
+        debug_assert!(self.len <= self.capacity, "kv ring overfull");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Arch;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "kv-test".into(),
+            arch: Arch::Opt,
+            vocab_size: 32,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 3,
+            d_ff: 16,
+            max_seq: 4,
+        }
+    }
+
+    #[test]
+    fn store_and_readback() {
+        let cfg = cfg();
+        let mut c = KvCache::new(&cfg);
+        assert_eq!((c.len(), c.capacity(), c.remaining()), (0, 4, 4));
+        assert!(c.is_empty());
+        let krow: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        for layer in 0..3 {
+            c.store(layer, 0, &krow, &vrow);
+        }
+        c.advance(1);
+        assert_eq!(c.len(), 1);
+        let (k, v) = c.layer(2);
+        assert_eq!(k.row(0), &krow[..]);
+        assert_eq!(v.row(0), &vrow[..]);
+    }
+
+    #[test]
+    fn reset_rewinds_without_clearing_storage() {
+        let cfg = cfg();
+        let mut c = KvCache::new(&cfg);
+        let row = [1.0f32; 8];
+        c.store(0, 0, &row, &row);
+        c.advance(1);
+        c.reset();
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.remaining(), 4);
+        // lazily overwritten on the next sequence — old bytes may linger
+        let row2 = [2.0f32; 8];
+        c.store(0, 0, &row2, &row2);
+        c.advance(1);
+        assert_eq!(c.layer(0).0.row(0), &row2[..]);
+    }
+
+    #[test]
+    fn quantized_store_applies_the_tokenwise_lut_path() {
+        let cfg = cfg();
+        let fmt = FpFormat::E4M3;
+        let mut c = KvCache::quantized(&cfg, fmt);
+        assert_eq!(c.quant_format(), Some(fmt));
+        let krow = [0.1f32, -1.7, 3.14, 0.0, 42.0, -0.003, 7.5, 1.0];
+        let vrow = [9.0f32, -0.25, 0.6, 2.0, -8.0, 0.01, -1.0, 5.0];
+        c.store(0, 0, &krow, &vrow);
+        c.advance(1);
+        // stored rows must be exactly fake_quant_row of the inputs
+        let lut = FpQuantLut::new(fmt);
+        let mut ek = krow;
+        lut.fake_quant_row(&mut ek);
+        let mut ev = vrow;
+        lut.fake_quant_row(&mut ev);
+        let (k, v) = c.layer(0);
+        for i in 0..8 {
+            assert_eq!(k.row(0)[i].to_bits(), ek[i].to_bits());
+            assert_eq!(v.row(0)[i].to_bits(), ev[i].to_bits());
+        }
+        // and quantization actually engaged (some element moved)
+        assert!(k.row(0).iter().zip(&krow).any(|(a, b)| a.to_bits() != b.to_bits()));
+    }
+
+    #[test]
+    fn exact_cache_reports_no_format() {
+        assert_eq!(KvCache::new(&cfg()).quant_format(), None);
+    }
+}

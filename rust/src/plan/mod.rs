@@ -19,7 +19,15 @@
 //!   [`FpQuantLut`] table instead of the per-scalar f64 oracle codec;
 //! * all intermediates live in a [`DecodeScratch`] arena sized once for
 //!   `max_seq` — steady-state decode performs **zero heap allocations**
-//!   (asserted by `tests/plan_alloc.rs` with a counting allocator).
+//!   (asserted by `tests/plan_alloc.rs` with a counting allocator);
+//! * serving decode is **incremental**: [`CompiledModel::prefill`] runs the
+//!   prompt once and stashes every layer's K/V rows in a [`KvCache`], and
+//!   [`CompiledModel::decode_step`] /
+//!   [`CompiledModel::decode_step_batch`] then compute attention only for
+//!   the new position(s) — `O(n·d)` per token instead of the
+//!   `O(n²·d)` full-window recompute that [`CompiledModel::forward`]
+//!   performs (`forward` remains the oracle and the calibration path; see
+//!   [`kv`] for the cache design).
 //!
 //! The compiled path is **bit-identical** to the reference engine: every
 //! float is produced by the same operation sequence (fusing q/k/v widens the
@@ -27,13 +35,26 @@
 //! quantizer is bit-equal to the oracle codec by construction). The
 //! equivalence is enforced across architectures, activation formats and
 //! sequence lengths by `tests/plan_equivalence.rs`.
+//!
+//! The same contract extends to the cached decode path: `forward`,
+//! `prefill` and `decode_step` all execute **one** layer walk
+//! (`run_mode`), differing only in where attention sources K/V, and every
+//! per-row operation (norms, linears, activation fake-quant, MLP, logits)
+//! is row-local — so `prefill + N × decode_step` over a window produces
+//! logits bit-identical to one `forward` over that window (asserted across
+//! architectures, activation formats and prompt/decode split points by
+//! `tests/kv_equivalence.rs`). An FP8-quantized cache deliberately leaves
+//! this contract — see the [`kv`] module docs for what it preserves
+//! instead.
 
+pub mod kv;
 mod lut;
 
+pub use kv::KvCache;
 pub use lut::FpQuantLut;
 
 use crate::engine::{EngineOpts, LinearSite, Site};
-use crate::formats::NumericFormat;
+use crate::formats::{FpFormat, NumericFormat};
 use crate::model::{Arch, Checkpoint, ModelConfig};
 use crate::tensor::{matmul, Matrix};
 
@@ -197,28 +218,48 @@ pub struct CompiledModel {
     act: ActPath,
 }
 
-/// Reusable per-sequence arena: every buffer is sized for `max_seq` at
-/// construction, then reshaped (never reallocated) per forward call.
+/// Reusable activation arena: every buffer is sized for `max_seq` rows at
+/// construction, then reshaped (never reallocated) per call. One arena
+/// serves every execution mode — a full-window `forward` uses `seq` rows,
+/// an incremental `decode_step` uses 1, and a continuous-batching
+/// `decode_step_batch` uses one row per in-flight sequence (so any batch
+/// width up to `max_seq` stays inside the preallocated capacity).
 #[derive(Debug, Clone)]
 pub struct DecodeScratch {
-    /// Residual stream `[seq, d]`.
+    /// Residual stream `[rows, d]`.
     x: Matrix,
-    /// Norm output / quantized linear input `[seq, d]`.
+    /// Norm output / quantized linear input `[rows, d]`.
     nrm: Matrix,
-    /// Fused q|k|v activations `[seq, 3d]`.
+    /// Fused q|k|v activations `[rows, 3d]`.
     qkv: Matrix,
-    /// Attention context `[seq, d]`.
+    /// Attention context `[rows, d]`.
     ctx: Matrix,
-    /// Residual-branch projection output `[seq, d]`.
+    /// Residual-branch projection output `[rows, d]`.
     proj: Matrix,
-    /// MLP hidden: `[seq, ff]` (Opt) or fused gate|up `[seq, 2ff]` (Llama).
+    /// MLP hidden: `[rows, ff]` (Opt) or fused gate|up `[rows, 2ff]` (Llama).
     hidden: Matrix,
-    /// Llama silu(gate)·up `[seq, ff]` (empty for Opt).
+    /// Llama silu(gate)·up `[rows, ff]` (empty for Opt).
     act2: Matrix,
-    /// Attention score row (`max_seq`).
+    /// Attention score row (`max_seq`) — shared by the full-recompute and
+    /// the KV-cached attention kernels (one query row at a time each).
     scores: Vec<f32>,
-    /// Output logits `[seq, vocab]`.
+    /// Output logits `[rows, vocab]`.
     logits: Matrix,
+}
+
+/// Where the unified layer walk (`CompiledModel::run_mode`) sources
+/// attention K/V — and, implicitly, how token positions are assigned.
+enum KvMode<'a> {
+    /// Full-window recompute: K/V live in the fused qkv scratch buffer,
+    /// token `t` sits at position `t`. (`forward` / calibration / scoring.)
+    Off,
+    /// One sequence extending through a cache: `tokens` is the next
+    /// contiguous chunk, token `t` sits at position `cache.len() + t`.
+    /// (`prefill`, and `decode_step` as the 1-token case.)
+    Seq(&'a mut KvCache),
+    /// One token from each of several independent sequences (continuous
+    /// batching): token `b` sits at position `caches[b].len()`.
+    Batch(&'a mut [KvCache]),
 }
 
 impl DecodeScratch {
@@ -307,8 +348,25 @@ impl CompiledModel {
         DecodeScratch::new(&self.config)
     }
 
-    /// Forward pass into the arena; returns the logits buffer `[seq, vocab]`.
-    /// Allocation-free once `s` is warm.
+    /// A fresh exact (f32) K/V cache sized for this model's `max_seq`.
+    pub fn kv_cache(&self) -> KvCache {
+        KvCache::new(&self.config)
+    }
+
+    /// A fresh K/V cache that stores rows fake-quantized to `fmt` (e.g.
+    /// [`FpFormat::E4M3`] for an FP8 cache). See [`kv`] for the contract.
+    pub fn kv_cache_quantized(&self, fmt: FpFormat) -> KvCache {
+        KvCache::quantized(&self.config, fmt)
+    }
+
+    /// Full-window forward pass into the arena; returns the logits buffer
+    /// `[seq, vocab]`. Allocation-free once `s` is warm.
+    ///
+    /// This recomputes attention over the whole window — it is the oracle
+    /// the incremental path is checked against and the scoring/calibration
+    /// entry point. The serving *decode* loop should use
+    /// [`prefill`](Self::prefill) + [`decode_step`](Self::decode_step),
+    /// which produce bit-identical logits in `O(n·d)` per token.
     pub fn forward<'s>(&self, tokens: &[u16], s: &'s mut DecodeScratch) -> &'s Matrix {
         self.forward_observed(tokens, s, &mut |_, _| {})
     }
@@ -322,20 +380,110 @@ impl CompiledModel {
         s: &'s mut DecodeScratch,
         observe: &mut dyn FnMut(Site, &Matrix),
     ) -> &'s Matrix {
-        let cfg = &self.config;
-        assert!(
-            tokens.len() <= cfg.max_seq,
-            "sequence {} exceeds max_seq {}",
-            tokens.len(),
-            cfg.max_seq
-        );
-        let seq = tokens.len();
-        let d = cfg.d_model;
+        self.run_mode(tokens, KvMode::Off, s, observe)
+    }
 
-        s.x.resize_to(seq, d);
+    /// Run the prompt through the model, appending every layer's K/V rows
+    /// for `tokens` to `cache`; returns the logits buffer `[seq, vocab]`.
+    ///
+    /// The cache may already hold earlier positions (chunked prefill): the
+    /// new tokens are treated as the next contiguous chunk of the same
+    /// sequence and attend over everything cached so far. With an exact
+    /// cache, `prefill` over a whole window is bit-identical to
+    /// [`forward`](Self::forward) over that window, and any
+    /// `prefill`/`decode_step` split of the window produces the same bits
+    /// (`tests/kv_equivalence.rs`). Allocation-free once warm.
+    pub fn prefill<'s>(
+        &self,
+        tokens: &[u16],
+        cache: &mut KvCache,
+        s: &'s mut DecodeScratch,
+    ) -> &'s Matrix {
+        self.run_mode(tokens, KvMode::Seq(cache), s, &mut |_, _| {})
+    }
+
+    /// Decode one token at the next position of `cache`'s sequence,
+    /// computing attention only for that position; returns the logits row
+    /// `[1, vocab]`. Bit-identical to the corresponding row of a
+    /// full-window [`forward`](Self::forward) (exact cache). Zero heap
+    /// allocations once `s` and `cache` are warm (`tests/plan_alloc.rs`).
+    pub fn decode_step<'s>(
+        &self,
+        token: u16,
+        cache: &mut KvCache,
+        s: &'s mut DecodeScratch,
+    ) -> &'s Matrix {
+        self.run_mode(std::slice::from_ref(&token), KvMode::Seq(cache), s, &mut |_, _| {})
+    }
+
+    /// One interleaved decode step for several independent sequences
+    /// (continuous batching): row `b` of the returned `[B, vocab]` logits
+    /// is the next-token distribution of the sequence behind `caches[b]`.
+    ///
+    /// Each row is bit-identical to a solo [`decode_step`](Self::decode_step)
+    /// of that sequence — batching exists purely to amortize weight-matrix
+    /// streaming across sequences (every linear runs as one `[B, ·]` matmul
+    /// instead of `B` single-row matmuls), which is where CPU decode
+    /// throughput comes from (§Perf in EXPERIMENTS.md sweeps `B`).
+    pub fn decode_step_batch<'s>(
+        &self,
+        tokens: &[u16],
+        caches: &mut [KvCache],
+        s: &'s mut DecodeScratch,
+    ) -> &'s Matrix {
+        self.run_mode(tokens, KvMode::Batch(caches), s, &mut |_, _| {})
+    }
+
+    /// The single layer walk behind `forward`, `prefill` and `decode_step*`:
+    /// one code path, so the bit-equivalence between the full-recompute and
+    /// cached-decode paths is structural rather than re-implemented. The
+    /// modes differ only in token positions and in where attention reads
+    /// K/V; every other operation is row-local (see `tests/kv_equivalence.rs`
+    /// for the enforced contract).
+    fn run_mode<'s>(
+        &self,
+        tokens: &[u16],
+        mut kv: KvMode<'_>,
+        s: &'s mut DecodeScratch,
+        observe: &mut dyn FnMut(Site, &Matrix),
+    ) -> &'s Matrix {
+        let cfg = &self.config;
+        let rows = tokens.len();
+        let d = cfg.d_model;
+        match &kv {
+            KvMode::Off => {
+                assert!(rows <= cfg.max_seq, "sequence {rows} exceeds max_seq {}", cfg.max_seq);
+            }
+            KvMode::Seq(cache) => {
+                assert!(rows >= 1, "prefill/decode needs at least one token");
+                assert!(
+                    cache.len() + rows <= cfg.max_seq,
+                    "{} cached + {rows} new tokens exceeds max_seq {}",
+                    cache.len(),
+                    cfg.max_seq
+                );
+            }
+            KvMode::Batch(caches) => {
+                assert!(rows >= 1, "decode batch must be non-empty");
+                assert_eq!(rows, caches.len(), "decode batch needs one cache per sequence");
+                // the arena is pre-sized for max_seq rows; a wider batch
+                // would silently reallocate every buffer per step
+                assert!(rows <= cfg.max_seq, "decode batch {rows} exceeds max_seq {}", cfg.max_seq);
+                for c in caches.iter() {
+                    assert!(c.len() < cfg.max_seq, "a batched sequence is already at max_seq");
+                }
+            }
+        }
+
+        s.x.resize_to(rows, d);
         for (t, &tok) in tokens.iter().enumerate() {
+            let pos = match &kv {
+                KvMode::Off => t,
+                KvMode::Seq(cache) => cache.len() + t,
+                KvMode::Batch(caches) => caches[t].len(),
+            };
             let e = self.embed.row(tok as usize);
-            let p = self.pos.row(t);
+            let p = self.pos.row(pos);
             let row = s.x.row_mut(t);
             for i in 0..d {
                 row[i] = e[i] + p[i];
@@ -348,7 +496,51 @@ impl CompiledModel {
             observe(Site { layer, site: LinearSite::Qkv }, &s.nrm);
             self.actq(&mut s.nrm);
             cl.qkv.run_into(&s.nrm, &mut s.qkv);
-            attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
+            match &mut kv {
+                KvMode::Off => {
+                    attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
+                }
+                KvMode::Seq(cache) => {
+                    // stage the new K/V rows, then attend each new position
+                    // over the cache (which now includes them)
+                    let base = cache.len();
+                    for t in 0..rows {
+                        let row = s.qkv.row(t);
+                        cache.store(layer, base + t, &row[d..2 * d], &row[2 * d..]);
+                    }
+                    s.ctx.resize_to(rows, d);
+                    let (kc, vc) = cache.layer(layer);
+                    for t in 0..rows {
+                        attend_cached_row(
+                            cfg,
+                            &s.qkv.row(t)[..d],
+                            kc,
+                            vc,
+                            base + t,
+                            s.ctx.row_mut(t),
+                            &mut s.scores,
+                        );
+                    }
+                }
+                KvMode::Batch(caches) => {
+                    s.ctx.resize_to(rows, d);
+                    for t in 0..rows {
+                        let pos = caches[t].len();
+                        let row = s.qkv.row(t);
+                        caches[t].store(layer, pos, &row[d..2 * d], &row[2 * d..]);
+                        let (kc, vc) = caches[t].layer(layer);
+                        attend_cached_row(
+                            cfg,
+                            &s.qkv.row(t)[..d],
+                            kc,
+                            vc,
+                            pos,
+                            s.ctx.row_mut(t),
+                            &mut s.scores,
+                        );
+                    }
+                }
+            }
             observe(Site { layer, site: LinearSite::OutProj }, &s.ctx);
             self.actq(&mut s.ctx);
             cl.out_proj.run_into(&s.ctx, &mut s.proj);
@@ -368,10 +560,10 @@ impl CompiledModel {
                     fc2.run_into(&s.hidden, &mut s.proj);
                 }
                 CompiledMlp::GatedSilu { gate_up, down } => {
-                    gate_up.run_into(&s.nrm, &mut s.hidden); // [seq, 2ff]
+                    gate_up.run_into(&s.nrm, &mut s.hidden); // [rows, 2ff]
                     let ff = cfg.d_ff;
-                    s.act2.resize_to(seq, ff);
-                    for r in 0..seq {
+                    s.act2.resize_to(rows, ff);
+                    for r in 0..rows {
                         let hrow = s.hidden.row(r);
                         let arow = s.act2.row_mut(r);
                         for c in 0..ff {
@@ -389,10 +581,21 @@ impl CompiledModel {
             s.x.add_assign(&s.proj);
         }
 
+        // commit the staged cache positions
+        match &mut kv {
+            KvMode::Off => {}
+            KvMode::Seq(cache) => cache.advance(rows),
+            KvMode::Batch(caches) => {
+                for c in caches.iter_mut() {
+                    c.advance(1);
+                }
+            }
+        }
+
         self.final_norm.run_into(&s.x, &mut s.nrm);
         // tied LM head: logits = x @ embedᵀ — the embed matrix is already in
         // the `[n, k]` layout the bt kernel wants, no prepack needed.
-        s.logits.resize_to(seq, cfg.vocab_size);
+        s.logits.resize_to(rows, cfg.vocab_size);
         matmul::matmul_bt_into(&s.nrm, &self.embed, &mut s.logits);
         &s.logits
     }
@@ -491,6 +694,69 @@ fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mu
             }
         }
     }
+}
+
+/// Causal attention for **one** query row at absolute position `pos`,
+/// reading K/V rows `0..=pos` from a cache layer and accumulating into the
+/// (zeroed) context row. This is the per-`(head, i)` body of
+/// [`attention_into`] with the K/V loads redirected at the cache — the same
+/// dot/softmax/weighted-sum operations in the same order, which is what
+/// makes cached decode bit-identical to full recompute (exact cache).
+fn attend_cached_row(
+    cfg: &ModelConfig,
+    qrow: &[f32],
+    kc: &Matrix,
+    vc: &Matrix,
+    pos: usize,
+    crow: &mut [f32],
+    scores: &mut [f32],
+) {
+    let dh = cfg.head_dim();
+    let scale = 1.0 / (dh as f32).sqrt();
+    let scores = &mut scores[..pos + 1];
+    for head in 0..cfg.n_heads {
+        let off = head * dh;
+        let q = &qrow[off..off + dh];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let krow = &kc.row(j)[off..off + dh];
+            let mut dot = 0.0f32;
+            for t in 0..dh {
+                dot += q[t] * krow[t];
+            }
+            *sc = dot * scale;
+            mx = mx.max(*sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let c = &mut crow[off..off + dh];
+        for (j, &p) in scores.iter().enumerate() {
+            let w = p * inv;
+            let vrow = &vc.row(j)[off..off + dh];
+            for t in 0..dh {
+                c[t] += w * vrow[t];
+            }
+        }
+    }
+}
+
+/// Greedy sampling: index of the largest logit (lowest index wins ties —
+/// deterministic, so coordinator-served generation can be checked against a
+/// direct decode loop).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -610,5 +876,68 @@ mod tests {
         );
         let r = crate::eval::cross_entropy(&pred, &window[1..]);
         assert!((nll - r.nll_sum).abs() < 1e-4, "{nll} vs {}", r.nll_sum);
+    }
+
+    #[test]
+    fn argmax_picks_lowest_index_on_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, 0.0]), 1);
+    }
+
+    #[test]
+    fn prefill_then_decode_matches_forward_smoke() {
+        // the exhaustive property test lives in tests/kv_equivalence.rs;
+        // this is the in-crate smoke check.
+        let mut rng = Rng::seeded(217);
+        let ck = Checkpoint::random(&tiny(Arch::Llama), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let full = model.forward(&window, &mut s).clone();
+        let mut cache = model.kv_cache();
+        let pre = model.prefill(&window[..5], &mut cache, &mut s).clone();
+        for (t, row) in pre.data.chunks_exact(pre.cols).enumerate() {
+            for (a, b) in row.iter().zip(full.row(t)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "prefill row {t}");
+            }
+        }
+        for (t, &tok) in window[5..].iter().enumerate() {
+            let step = model.decode_step(tok, &mut cache, &mut s);
+            for (a, b) in step.row(0).iter().zip(full.row(5 + t)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "decode row {}", 5 + t);
+            }
+        }
+        assert_eq!(cache.len(), window.len());
+    }
+
+    #[test]
+    fn batched_decode_matches_sequential_decode() {
+        let mut rng = Rng::seeded(218);
+        let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        // two sequences with different prompts and lengths
+        let p0: Vec<u16> = vec![1, 2, 3];
+        let p1: Vec<u16> = vec![7, 8, 9, 10, 11];
+        let mut solo0 = model.kv_cache();
+        let mut solo1 = model.kv_cache();
+        model.prefill(&p0, &mut solo0, &mut s);
+        model.prefill(&p1, &mut solo1, &mut s);
+        let a0 = model.decode_step(4, &mut solo0, &mut s).clone();
+        let a1 = model.decode_step(12, &mut solo1, &mut s).clone();
+
+        let mut caches = vec![model.kv_cache(), model.kv_cache()];
+        model.prefill(&p0, &mut caches[0], &mut s);
+        model.prefill(&p1, &mut caches[1], &mut s);
+        let b = model.decode_step_batch(&[4, 12], &mut caches, &mut s);
+        assert_eq!(b.rows, 2);
+        for (x, y) in b.row(0).iter().zip(&a0.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        for (x, y) in b.row(1).iter().zip(&a1.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!((caches[0].len(), caches[1].len()), (4, 6));
     }
 }

@@ -1,0 +1,248 @@
+//! The incremental-decode correctness contract:
+//!
+//! 1. `prefill + N × decode_step` over a window produces logits
+//!    **bit-identical** to one full-recompute `forward` over that window —
+//!    across both architectures, every activation `NumericFormat`, every
+//!    prompt/decode split point, chunked prefill, and ring-capacity
+//!    (`seq == max_seq`) sequences, including cache reuse after `reset`.
+//! 2. Batched continuous decode (`decode_step_batch`) is bit-identical per
+//!    sequence to solo decode — a sequence's logits cannot depend on its
+//!    batch mates.
+//! 3. An FP8-quantized cache deliberately leaves contract (1) but keeps
+//!    *split-invariance*: where the prompt/decode boundary falls cannot
+//!    change the logits, because rows are quantized independently of when
+//!    they were appended.
+
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::formats::{FpFormat, NumericFormat};
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::{CompiledModel, KvCache};
+use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::Matrix;
+
+fn tiny(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        name: format!("kv-equiv-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 12,
+    }
+}
+
+const ACT_FORMATS: [NumericFormat; 8] = [
+    NumericFormat::F16,
+    NumericFormat::FP8_E4M3,
+    NumericFormat::FP8_E5M2,
+    NumericFormat::FP4_E2M1,
+    NumericFormat::FP4_E3M0,
+    NumericFormat::INT8,
+    NumericFormat::INT8_ASYM,
+    NumericFormat::INT4,
+];
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+fn random_window(len: usize, vocab: usize, rng: &mut Rng) -> Vec<u16> {
+    (0..len).map(|_| rng.below(vocab) as u16).collect()
+}
+
+/// Run `window` as `prefill(window[..split])` + one `decode_step` per
+/// remaining token, asserting every produced logits row is bit-identical
+/// to the corresponding row of `full`.
+fn check_split(
+    model: &CompiledModel,
+    cache: &mut KvCache,
+    window: &[u16],
+    split: usize,
+    full: &Matrix,
+    what: &str,
+) {
+    let mut s = model.scratch();
+    let pre = model.prefill(&window[..split], cache, &mut s).clone();
+    assert_eq!(pre.rows, split, "{what}: prefill row count");
+    for t in 0..split {
+        assert_eq!(
+            bits(pre.row(t)),
+            bits(full.row(t)),
+            "{what}: prefill row {t} of split {split}"
+        );
+    }
+    for (off, &tok) in window[split..].iter().enumerate() {
+        let t = split + off;
+        let step = model.decode_step(tok, cache, &mut s);
+        assert_eq!((step.rows, step.cols), (1, full.cols), "{what}: step shape");
+        assert_eq!(bits(step.row(0)), bits(full.row(t)), "{what}: decode row {t} of split {split}");
+    }
+    assert_eq!(cache.len(), window.len(), "{what}: cache cursor");
+}
+
+#[test]
+fn prefill_plus_decode_bit_identical_to_forward() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xCACE + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        for fmt in ACT_FORMATS {
+            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let model = CompiledModel::compile(&ck, opts);
+            let mut s = model.scratch();
+            let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+            let full = model.forward(&window, &mut s).clone();
+            // literally every prompt/decode split of the window — the docs
+            // promise as much (split == max_seq is the pure-prefill case)
+            for split in 1..=cfg.max_seq {
+                let mut cache = model.kv_cache();
+                check_split(
+                    &model,
+                    &mut cache,
+                    &window,
+                    split,
+                    &full,
+                    &format!("{arch:?} act={}", fmt.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_prefill_matches_single_shot() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xC0FFEE + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
+            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let model = CompiledModel::compile(&ck, opts);
+            let mut s = model.scratch();
+            let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+            let full = model.forward(&window, &mut s).clone();
+            let mut cache = model.kv_cache();
+            let mut done = 0usize;
+            for chunk in [4usize, 5, 3] {
+                let pre = model.prefill(&window[done..done + chunk], &mut cache, &mut s);
+                for t in 0..chunk {
+                    assert_eq!(
+                        bits(pre.row(t)),
+                        bits(full.row(done + t)),
+                        "{arch:?} act={} chunked row {}",
+                        fmt.name(),
+                        done + t
+                    );
+                }
+                done += chunk;
+            }
+            assert_eq!(cache.len(), cfg.max_seq);
+        }
+    }
+}
+
+#[test]
+fn cache_reuse_after_reset_is_clean() {
+    // Fill the ring to capacity, reset, and serve a different sequence
+    // through the recycled rings (the coordinator's cache-pool pattern) —
+    // stale rows must be invisible.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0x5EED2 + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let first = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let second = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let mut cache = model.kv_cache();
+        model.prefill(&first, &mut cache, &mut s);
+        assert_eq!(cache.remaining(), 0, "ring at capacity");
+        cache.reset();
+        assert_eq!(cache.remaining(), cfg.max_seq);
+        let full = model.forward(&second, &mut s).clone();
+        check_split(&model, &mut cache, &second, 7, &full, &format!("{arch:?} reused ring"));
+    }
+}
+
+#[test]
+fn quantized_cache_is_split_invariant_and_actually_quantizes() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xFB8 + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let exact = model.forward(&window, &mut s).clone();
+
+        // single-shot prefill through an FP8 cache
+        let mut c_once = model.kv_cache_quantized(FpFormat::E4M3);
+        let once = model.prefill(&window, &mut c_once, &mut s).clone();
+
+        // quantization must actually engage (the cache is not a no-op) …
+        assert!(
+            once.data.iter().zip(&exact.data).any(|(a, b)| a.to_bits() != b.to_bits()),
+            "{arch:?}: FP8 cache produced bit-identical logits — quantization inactive?"
+        );
+        // … logits stay finite …
+        assert!(once.data.iter().all(|x| x.is_finite()), "{arch:?}: FP8 cache logits finite");
+
+        // … and every prompt/decode split reproduces the same bits
+        // (rows are quantized independently of when they were appended).
+        for split in 1..=cfg.max_seq {
+            let mut cache = model.kv_cache_quantized(FpFormat::E4M3);
+            check_split(
+                &model,
+                &mut cache,
+                &window,
+                split,
+                &once,
+                &format!("{arch:?} fp8-kv split {split}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_decode_bit_identical_to_solo_decode() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xBA7C4 + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::FP8_E4M3) };
+        let model = CompiledModel::compile(&ck, opts);
+        let mut s = model.scratch();
+        // three sequences at different positions in their own windows
+        let prompts: [Vec<u16>; 3] = [
+            random_window(2, cfg.vocab_size, &mut rng),
+            random_window(5, cfg.vocab_size, &mut rng),
+            random_window(3, cfg.vocab_size, &mut rng),
+        ];
+        let steps: Vec<Vec<u16>> =
+            (0..4).map(|_| random_window(3, cfg.vocab_size, &mut rng)).collect();
+
+        let mut solo: Vec<KvCache> = (0..3).map(|_| model.kv_cache()).collect();
+        let mut batch: Vec<KvCache> = (0..3).map(|_| model.kv_cache()).collect();
+        for i in 0..3 {
+            model.prefill(&prompts[i], &mut solo[i], &mut s);
+            model.prefill(&prompts[i], &mut batch[i], &mut s);
+        }
+        for step in &steps {
+            let mut expect: Vec<Vec<u32>> = Vec::new();
+            for i in 0..3 {
+                expect.push(bits(model.decode_step(step[i], &mut solo[i], &mut s).row(0)));
+            }
+            let got = model.decode_step_batch(step, &mut batch, &mut s);
+            assert_eq!(got.rows, 3);
+            for i in 0..3 {
+                assert_eq!(bits(got.row(i)), expect[i], "{arch:?} batched row {i}");
+            }
+        }
+        for i in 0..3 {
+            assert_eq!(solo[i].len(), batch[i].len());
+        }
+    }
+}

@@ -1,5 +1,8 @@
 //! Steady-state decode through the compiled plan performs ZERO heap
-//! allocations — asserted with a counting global allocator.
+//! allocations — asserted with a counting global allocator. Covers both
+//! execution shapes: full-window `forward` scoring, and the KV-cached
+//! serving loop (`reset` → `prefill` → `decode_step`/`decode_step_batch`)
+//! once the arena, the caches and the cache pool are warm.
 //!
 //! This file holds exactly one test: the allocation counter is global, so
 //! any concurrently running test in the same binary would pollute it.
@@ -84,6 +87,43 @@ fn steady_state_decode_is_allocation_free() {
             after - before,
             0,
             "steady-state decode allocated ({arch:?}, act={})",
+            fmt.name()
+        );
+
+        // ---- the KV-cached serving loop: reset → prefill → decode ------
+        // (single-sequence and continuous-batching shapes; the caches play
+        // the coordinator's recycled-pool role)
+        let mut cache = model.kv_cache();
+        let mut caches = vec![model.kv_cache(), model.kv_cache()];
+        let prompt = &long[..6];
+        let gen = &long[6..10];
+        let toks = [long[0], long[1]];
+        let mut serve_pass = |cache: &mut zeroquant_fp::plan::KvCache,
+                              caches: &mut Vec<zeroquant_fp::plan::KvCache>,
+                              scratch: &mut zeroquant_fp::plan::DecodeScratch| {
+            cache.reset();
+            std::hint::black_box(model.prefill(prompt, cache, scratch));
+            for &t in gen {
+                std::hint::black_box(model.decode_step(t, cache, scratch));
+            }
+            for c in caches.iter_mut() {
+                c.reset();
+                std::hint::black_box(model.prefill(&prompt[..3], c, scratch));
+            }
+            for _ in 0..3 {
+                std::hint::black_box(model.decode_step_batch(&toks, caches, scratch));
+            }
+        };
+        serve_pass(&mut cache, &mut caches, &mut scratch); // warm
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..6 {
+            serve_pass(&mut cache, &mut caches, &mut scratch);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "kv serving loop allocated ({arch:?}, act={})",
             fmt.name()
         );
     }

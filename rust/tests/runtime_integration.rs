@@ -139,6 +139,7 @@ fn coordinator_serves_batches() {
         ck: ck.clone(),
         opts: EngineOpts::default(),
         policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
+        kv_quant: None,
     });
     let mut handles = Vec::new();
     for c in 0..3 {
