@@ -177,6 +177,7 @@ fn main() -> Result<()> {
             max_wait: Duration::from_millis(2),
         },
         kv_quant: None,
+        sidecar: None,
     });
     let corpus = Corpus::new(CorpusKind::C4);
     let stream = corpus.generate(n_requests * seq, 99);
@@ -244,6 +245,7 @@ fn main() -> Result<()> {
             max_wait: Duration::ZERO,
         },
         kv_quant: None,
+        sidecar: None,
     });
     let mut gen_handles = Vec::new();
     for c in 0..3usize {

@@ -13,7 +13,6 @@ use std::path::Path;
 use zeroquant_fp::engine::{ActivationCapture, Engine, EngineOpts, LinearSite};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
-use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 
 fn main() -> zeroquant_fp::error::Result<()> {
@@ -44,12 +43,7 @@ fn main() -> zeroquant_fp::error::Result<()> {
         let peak = cap.peak_to_rms(LinearSite::Fc2);
 
         let ppl = |fmt: NumericFormat| {
-            zeroquant_fp::eval::perplexity(
-                &ck,
-                EngineOpts { act: ActQuantConfig::new(fmt) },
-                &eval,
-                cfg.max_seq,
-            )
+            zeroquant_fp::eval::perplexity(&ck, EngineOpts::with_act(fmt), &eval, cfg.max_seq)
             .ppl()
         };
         let p16 = ppl(NumericFormat::F16);

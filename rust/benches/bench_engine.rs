@@ -13,8 +13,9 @@ use zeroquant_fp::bench_harness::Bench;
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
-use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
 
@@ -35,7 +36,7 @@ fn main() {
         cfg.name, cfg.d_model, cfg.n_layers, seq
     );
     for fmt in FORMATS {
-        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let engine = Engine::with_opts(&ck, opts);
         bench.run(
             format!("engine fwd act={}", fmt.name()),
@@ -47,7 +48,7 @@ fn main() {
 
     println!("\n-- compiled plan forward (prepacked, arena, LUT actq) --");
     for fmt in FORMATS {
-        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let model = CompiledModel::compile(&ck, opts);
         let mut scratch = model.scratch();
         bench.run(
@@ -70,8 +71,47 @@ fn main() {
         }
     }
 
+    // ---- packed W4 plan: memory footprint + tokens/s vs the f32 plan ----
+    // (same quantized checkpoint; the packed plan stores bit-packed codes
+    // and decodes through the fused shift-dequant GEMV)
+    println!("\n-- packed W4 plan (bit-packed codes, fused dequant GEMV) --");
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M2 { rows: 32 });
+    pcfg.use_gptq = false; // RTN: codes only, no calibration passes
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
+    let qopts = pcfg.engine_opts();
+    let dense_q = CompiledModel::compile(&qck, qopts);
+    let packed_q = CompiledModel::compile_quantized(&qck, &sidecar, qopts.packed(1));
+    let (db, pb) = (dense_q.linear_weight_bytes(), packed_q.linear_weight_bytes());
+    bench.note("f32 plan linear weight bytes", db as f64);
+    bench.note("packed plan linear weight bytes", pb as f64);
+    bench.note("packed/f32 weight bytes ratio", pb as f64 / db.max(1) as f64);
+    {
+        let mut ds = dense_q.scratch();
+        bench.run("compiled fwd w4a8 f32-plan", seq as f64, "tok", || {
+            std::hint::black_box(dense_q.forward(&window, &mut ds));
+        });
+        let mut ps = packed_q.scratch();
+        bench.run("compiled fwd w4a8 packed-plan", seq as f64, "tok", || {
+            std::hint::black_box(packed_q.forward(&window, &mut ps));
+        });
+        if let Some(sp) =
+            bench.speedup("compiled fwd w4a8 packed-plan", "compiled fwd w4a8 f32-plan")
+        {
+            println!("packed vs f32 plan (w4a8 fwd): {sp:.2}x");
+        }
+        // packed logits must match the f32 plan bit-for-bit
+        let a = dense_q.forward(&window, &mut ds).clone();
+        let b = packed_q.forward(&window, &mut ps);
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "packed plan diverged from the f32 plan"
+        );
+        println!("packed bit-identity check: OK");
+    }
+
     // sanity: compiled logits must match the reference bit-for-bit
-    let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::FP8_E4M3) };
+    let opts = EngineOpts::with_act(NumericFormat::FP8_E4M3);
     let reference = Engine::with_opts(&ck, opts).forward(&window);
     let compiled = CompiledModel::compile(&ck, opts).forward_alloc(&window);
     assert_eq!(
@@ -114,7 +154,7 @@ fn pjrt_section(
         .map(|_| rng.below(cfg.vocab_size) as u16)
         .collect();
     for fmt in FORMATS {
-        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let path = artifacts.join(score_artifact_name(cfg, act_tag(&opts).unwrap()));
         let scorer = match HloScorer::load(&path, SCORE_BATCH, seq) {
             Ok(s) => s,

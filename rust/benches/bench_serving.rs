@@ -27,8 +27,9 @@ use zeroquant_fp::coordinator::{
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
-use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::SCORE_BATCH;
 
@@ -75,6 +76,7 @@ fn main() {
                     max_wait: Duration::from_millis(wait_ms),
                 },
                 kv_quant: None,
+                sidecar: None,
             });
             let mut handles = Vec::new();
             for c in 0..clients {
@@ -112,7 +114,7 @@ fn main() {
     println!("\n-- reference engine vs compiled plan forward ({}, A8 FP) --", cfg.name);
     let window = &windows[0];
     for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
-        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let engine = Engine::with_opts(&ck, opts);
         bench.run(
             format!("engine decode act={}", fmt.name()),
@@ -196,6 +198,47 @@ fn main() {
         });
     }
 
+    // ---- packed W4 plan vs f32 plan: decode tokens/s + weight bytes -------
+    // The deployment question the packed layout answers: same bits out,
+    // how much less memory streamed and how many tokens/s? Recorded in
+    // the JSON artifact (measurements + notes) as the packed-vs-f32 perf
+    // trajectory.
+    println!("\n-- packed W4 plan vs f32 plan (w4a8, batched kv decode) --");
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M2 { rows: 32 });
+    pcfg.use_gptq = false; // RTN: codes only, no calibration passes
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
+    let qopts = pcfg.engine_opts();
+    let dense_q = CompiledModel::compile(&qck, qopts);
+    let packed_q = CompiledModel::compile_quantized(&qck, &sidecar, qopts.packed(1));
+    let (db, pb) = (dense_q.linear_weight_bytes(), packed_q.linear_weight_bytes());
+    bench.note("f32 plan linear weight bytes", db as f64);
+    bench.note("packed plan linear weight bytes", pb as f64);
+    bench.note("packed/f32 weight bytes ratio", pb as f64 / db.max(1) as f64);
+    for (tag, m) in [("f32-plan", &dense_q), ("packed-plan", &packed_q)] {
+        let mut qscratch = m.scratch();
+        let mut caches: Vec<KvCache> = (0..4).map(|_| m.kv_cache()).collect();
+        let mut toks: Vec<u16> = vec![0; 4];
+        bench.run(format!("w4a8 decode B=4 ({tag})"), (4 * 48) as f64, "tok", || {
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.reset();
+                m.prefill(&windows[i][..16], c, &mut qscratch);
+            }
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = windows[i][16];
+            }
+            for _ in 0..48 {
+                let logits = m.decode_step_batch(&toks, &mut caches, &mut qscratch);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(logits.row(i)) as u16;
+                }
+            }
+        });
+    }
+    if let Some(sp) = bench.speedup("w4a8 decode B=4 (packed-plan)", "w4a8 decode B=4 (f32-plan)") {
+        println!("   packed vs f32 plan decode: {sp:.2}x");
+    }
+
     // ---- the same curve end to end: coordinator continuous batching -------
     println!("\n-- coordinator continuous-batching generation (8 clients, 48 requests) --");
     for max_batch in [1usize, 2, 4, 8] {
@@ -205,6 +248,7 @@ fn main() {
             opts,
             policy: BatchPolicy { max_batch, max_wait: Duration::ZERO },
             kv_quant: None,
+            sidecar: None,
         });
         let mut handles = Vec::new();
         for c in 0..8usize {

@@ -48,6 +48,10 @@ pub struct Bench {
     /// Warmup time before measurement.
     pub warmup: Duration,
     pub results: Vec<Measurement>,
+    /// Named scalar facts recorded alongside the measurements (memory
+    /// footprints, ratios, …) — serialized under `"notes"` in the JSON
+    /// artifact so perf trajectories can track more than wall time.
+    pub notes: Vec<(String, f64)>,
 }
 
 impl Default for Bench {
@@ -56,6 +60,7 @@ impl Default for Bench {
             budget: Duration::from_millis(600),
             warmup: Duration::from_millis(150),
             results: Vec::new(),
+            notes: Vec::new(),
         }
     }
 }
@@ -66,7 +71,16 @@ impl Bench {
             budget: Duration::from_millis(200),
             warmup: Duration::from_millis(50),
             results: Vec::new(),
+            notes: Vec::new(),
         }
+    }
+
+    /// Record a named scalar fact (printed immediately, kept for the JSON
+    /// artifact).
+    pub fn note(&mut self, name: impl Into<String>, value: f64) {
+        let name = name.into();
+        println!("{name}: {value}");
+        self.notes.push((name, value));
     }
 
     /// Time `f` repeatedly; `work` is the per-iteration work amount for
@@ -127,7 +141,8 @@ impl Bench {
 
     /// All measurements as a JSON document:
     /// `{"bench": <name>, "results": [{name, iters, mean_ns, stddev_ns,
-    /// min_ns, throughput, unit}, ...]}`. Hand-rolled (serde is not in the
+    /// min_ns, throughput, unit}, ...], "notes": [{name, value}, ...]}`
+    /// (`notes` only when present). Hand-rolled (serde is not in the
     /// offline vendor set); names are escaped for quotes/backslashes.
     pub fn to_json(&self, bench_name: &str) -> String {
         fn esc(s: &str) -> String {
@@ -155,7 +170,19 @@ impl Bench {
                 esc(m.work_unit),
             ));
         }
-        out.push_str("]}\n");
+        out.push(']');
+        if !self.notes.is_empty() {
+            out.push_str(", \"notes\": [");
+            for (i, (name, value)) in self.notes.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                let v = if value.is_finite() { format!("{value}") } else { "null".to_string() };
+                out.push_str(&format!("{{\"name\": \"{}\", \"value\": {v}}}", esc(name)));
+            }
+            out.push(']');
+        }
+        out.push_str("}\n");
         out
     }
 
@@ -179,7 +206,7 @@ mod tests {
         let mut b = Bench {
             budget: Duration::from_millis(30),
             warmup: Duration::from_millis(5),
-            results: Vec::new(),
+            ..Bench::default()
         };
         // black_box the *input* so release mode cannot constant-fold the
         // loop away to a true 0ns no-op.
@@ -197,7 +224,7 @@ mod tests {
         let mut b = Bench {
             budget: Duration::from_millis(10),
             warmup: Duration::from_millis(1),
-            results: Vec::new(),
+            ..Bench::default()
         };
         let data: Vec<u64> = (0..64).collect();
         b.run("sum \"quoted\"", 64.0, "op", || {
@@ -215,11 +242,24 @@ mod tests {
     }
 
     #[test]
+    fn notes_serialize() {
+        let mut b = Bench::default();
+        b.note("packed bytes", 1234.0);
+        b.note("ratio \"x\"", 0.125);
+        let j = b.to_json("bench_notes");
+        assert!(j.contains("\"notes\": ["));
+        assert!(j.contains("\"name\": \"packed bytes\", \"value\": 1234"));
+        assert!(j.contains("0.125"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
     fn speedup_compares() {
         let mut b = Bench {
             budget: Duration::from_millis(20),
             warmup: Duration::from_millis(2),
-            results: Vec::new(),
+            ..Bench::default()
         };
         let small: Vec<u64> = (0..8).collect();
         let big: Vec<u64> = (0..20_000).collect();

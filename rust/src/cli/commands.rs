@@ -147,23 +147,49 @@ pub fn eval(args: &Args) -> Result<(), String> {
     let corpus = args.get_or("corpus", "all");
     let runtime = args.get_or("runtime", "engine");
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let packed = args.flag("packed");
+    let gemv_threads = args.get_usize("gemv-threads", 1)?;
     let scheme_s = args.get("scheme");
 
     let ck = load_ckpt_with_alpha(Path::new(&ckpt), alpha)?;
     // If a scheme is given, quantize first (weights) and set act format.
-    let (ck, opts) = match &scheme_s {
+    let (ck, mut opts, sidecar) = match &scheme_s {
         None => {
             args.finish()?;
-            (ck, EngineOpts::default())
+            (ck, EngineOpts::default(), crate::quant::QuantSidecar::new())
         }
         Some(s) => {
             let scheme = Scheme::parse(s).ok_or(format!("bad --scheme {s}"))?;
             let cfg = ptq_config_from_args(args, scheme)?;
             args.finish()?;
             let calib = load_calib(&data, seq.min(ck.config.max_seq))?;
-            let (qck, _) = quantize_checkpoint(&ck, &calib, &cfg);
-            (qck, cfg.engine_opts())
+            let (qck, sidecar, _) = crate::pipeline::quantize_checkpoint_full(&ck, &calib, &cfg);
+            (qck, cfg.engine_opts(), sidecar)
         }
+    };
+
+    // --packed: evaluate through the bit-packed weight plan (bit-identical
+    // logits; this flag changes memory and speed, never numbers).
+    let packed_model = if packed {
+        if runtime == "hlo" {
+            return Err("--packed runs in-process; drop --runtime hlo".to_string());
+        }
+        if sidecar.is_empty() {
+            return Err(
+                "--packed needs quantized codes: pass a quantized --scheme and drop --lorc"
+                    .to_string(),
+            );
+        }
+        opts = opts.packed(gemv_threads);
+        let model = crate::plan::CompiledModel::compile_quantized(&ck, &sidecar, opts);
+        println!(
+            "packed plan: {} B of linear weights ({} gemv threads)",
+            model.linear_weight_bytes(),
+            opts.weights.threads()
+        );
+        Some(model)
+    } else {
+        None
     };
 
     let kinds: Vec<CorpusKind> = if corpus == "all" {
@@ -177,7 +203,9 @@ pub fn eval(args: &Args) -> Result<(), String> {
             .map_err(|e| format!("eval_{}.tok: {e}", kind.name()))?;
         let toks = &toks[..toks.len().min(max_tokens)];
         let seqn = seq.min(ck.config.max_seq);
-        let r = if runtime == "hlo" {
+        let r = if let Some(model) = &packed_model {
+            crate::eval::perplexity_model(model, toks, seqn)
+        } else if runtime == "hlo" {
             crate::runtime::hlo_perplexity(&artifacts, &ck, &opts, toks, seqn)
                 .map_err(|e| e.to_string())?
         } else {
@@ -198,4 +226,30 @@ pub fn serve(args: &Args) -> Result<(), String> {
 
 pub fn selfcheck(args: &Args) -> Result<(), String> {
     crate::runtime::selfcheck(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn constraint_m2_rows_threads_through_cli() {
+        let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
+        let args = Args::parse(&argv(&["--constraint", "m2:16"])).unwrap();
+        let cfg = ptq_config_from_args(&args, scheme).unwrap();
+        assert_eq!(cfg.constraint, ScaleConstraint::M2 { rows: 16 });
+        // zero-row compute groups are rejected with a parse error
+        let bad = Args::parse(&argv(&["--constraint", "m2:0"])).unwrap();
+        assert!(ptq_config_from_args(&bad, scheme).is_err());
+        // default stays the paper's 32-row group
+        let dflt = Args::parse(&argv(&["--constraint", "m2"])).unwrap();
+        assert_eq!(
+            ptq_config_from_args(&dflt, scheme).unwrap().constraint,
+            ScaleConstraint::M2 { rows: 32 }
+        );
+    }
 }

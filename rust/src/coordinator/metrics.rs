@@ -30,15 +30,24 @@ impl LatencyStats {
         self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64 / 1000.0
     }
 
-    /// Percentile in milliseconds (p in [0, 100]).
-    pub fn percentile_ms(&self, p: f64) -> f64 {
+    /// Percentile in milliseconds, or `None` with no samples — the
+    /// safe form for a [`ServeReport`] built before any request completed
+    /// (`v.len() - 1` must never be evaluated on an empty sample set).
+    /// Out-of-range or non-finite `p` clamps into [0, 100].
+    pub fn try_percentile_ms(&self, p: f64) -> Option<f64> {
         if self.samples_us.is_empty() {
-            return 0.0;
+            return None;
         }
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 100.0 };
         let mut v = self.samples_us.clone();
         v.sort_unstable();
         let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)] as f64 / 1000.0
+        Some(v[idx.min(v.len() - 1)] as f64 / 1000.0)
+    }
+
+    /// Percentile in milliseconds (p in [0, 100]); 0.0 with no samples.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        self.try_percentile_ms(p).unwrap_or(0.0)
     }
 }
 
@@ -181,10 +190,34 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.mean_ms(), 0.0);
         assert_eq!(s.percentile_ms(99.0), 0.0);
+        assert_eq!(s.try_percentile_ms(99.0), None);
         let r = RateStats::default();
         assert_eq!(r.count(), 0);
         assert_eq!(r.mean(), 0.0);
         assert_eq!(r.max(), 0.0);
+    }
+
+    #[test]
+    fn report_before_any_request_completes_is_safe() {
+        // Regression: a ServeReport built while the queue is still empty
+        // (zero completed requests, zero samples) must survive every
+        // derived metric and the full print path — the percentile index
+        // `len() - 1` must never underflow.
+        let report = ServeReport::default();
+        assert_eq!(report.latency.percentile_ms(50.0), 0.0);
+        assert_eq!(report.latency.percentile_ms(99.0), 0.0);
+        assert_eq!(report.latency.try_percentile_ms(0.0), None);
+        assert_eq!(report.throughput_rps(), 0.0);
+        assert_eq!(report.mean_decode_batch(), 0.0);
+        assert_eq!(report.request_tok_s.min(), 0.0);
+        report.print(); // must not panic
+        // degenerate percentile arguments on a single sample
+        let mut one = LatencyStats::default();
+        one.record(Duration::from_millis(7));
+        for p in [-5.0, 0.0, 50.0, 100.0, 250.0, f64::NAN, f64::INFINITY] {
+            let v = one.percentile_ms(p);
+            assert!((v - 7.0).abs() < 0.01, "p={p}: {v}");
+        }
     }
 
     #[test]

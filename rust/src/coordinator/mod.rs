@@ -69,7 +69,7 @@ use crate::ensure;
 use crate::error::Result;
 use crate::formats::{FpFormat, NumericFormat};
 use crate::model::Checkpoint;
-use crate::pipeline::quantize_checkpoint;
+use crate::pipeline::quantize_checkpoint_full;
 use crate::plan::{argmax, CompiledModel, KvCache};
 use crate::quant::Scheme;
 use crate::runtime::HloScorer;
@@ -197,6 +197,10 @@ pub struct CoordinatorConfig {
     /// applied to the dominant serving memory stream). `None` = exact f32
     /// caches, bit-identical to full recompute.
     pub kv_quant: Option<FpFormat>,
+    /// Quantized-code sidecar of the PTQ run
+    /// ([`crate::pipeline::quantize_checkpoint_full`]) — required when
+    /// `opts.weights` selects the packed layout; ignored otherwise.
+    pub sidecar: Option<crate::quant::QuantSidecar>,
 }
 
 /// The request queue + serving loop.
@@ -329,7 +333,17 @@ impl Coordinator {
     fn run_compiled(self) -> Result<ServeReport> {
         // Compile once; every request then decodes through the prepacked
         // plan with zero steady-state allocations in the model itself.
-        let model = CompiledModel::compile(&self.cfg.ck, self.cfg.opts);
+        // The packed weight layout compiles from the quantized-code
+        // sidecar and serves bit-identical logits at a fraction of the
+        // resident weight bytes.
+        let model = if self.cfg.opts.weights.is_dense() {
+            CompiledModel::compile(&self.cfg.ck, self.cfg.opts)
+        } else {
+            let sidecar = self.cfg.sidecar.as_ref().ok_or_else(|| {
+                crate::anyhow!("packed weight layout requires the quantized-code sidecar")
+            })?;
+            CompiledModel::compile_quantized(&self.cfg.ck, sidecar, self.cfg.opts)
+        };
         let mut scratch = model.scratch();
         let vocab = self.cfg.ck.config.vocab_size;
         let max_seq = self.cfg.ck.config.max_seq;
@@ -502,7 +516,10 @@ impl Coordinator {
 /// validation of DESIGN.md §5). With `--generate N` the workload is
 /// continuous-batching generation (N new tokens per request, compiled
 /// backend) instead of window scoring; `--kv-cache e4m3|e5m2` additionally
-/// stores the generation K/V caches in that FP8 format.
+/// stores the generation K/V caches in that FP8 format. `--packed` serves
+/// from the bit-packed weight layout (compiled backend; bit-identical
+/// logits, ~1/7 the resident weight bytes for W4), and `--gemv-threads N`
+/// shards the packed GEMV rows across N workers.
 pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -512,6 +529,8 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
     let max_batch = args.get_usize("max-batch", crate::runtime::SCORE_BATCH)?;
     let gen_new = args.get_usize("generate", 0)?;
+    let packed = args.flag("packed");
+    let gemv_threads = args.get_usize("gemv-threads", 1)?;
     let alpha = args.get_f32("alpha", 1.0)?;
     let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
     let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
@@ -530,16 +549,25 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     ensure_gen_fits(gen_new, seq)?;
     let calib = crate::cli::commands::load_calib(&data, seq)?;
     println!("quantizing under {} ...", scheme.name());
-    let (qck, report) = quantize_checkpoint(&ck, &calib, &cfg);
+    let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &calib, &cfg);
     println!(
         "  {} tensors, {:.2}x compression",
         report.layers.len(),
         report.compression()
     );
 
-    let opts = cfg.engine_opts();
-    let backend = if gen_new > 0 {
-        ScoreBackend::Compiled // generation path: compiled plan only
+    let mut opts = cfg.engine_opts();
+    if packed {
+        if sidecar.is_empty() {
+            return Err(
+                "--packed needs quantized codes: pick a quantized --scheme and drop --lorc"
+                    .to_string(),
+            );
+        }
+        opts = opts.packed(gemv_threads);
+    }
+    let backend = if gen_new > 0 || packed {
+        ScoreBackend::Compiled // generation / packed path: compiled plan only
     } else {
         pick_backend(&artifacts, &qck, &opts)
     };
@@ -549,6 +577,21 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     }
     if let Some(fmt) = kv_quant {
         println!("kv cache: {}", fmt.name());
+    }
+    if packed {
+        // Banner from the accounting already in hand — no extra compile or
+        // pack pass (the serving loop builds the real packed plan once,
+        // and `zqfp eval --packed` / the benches print the exact resident
+        // bytes including scale/shift metadata).
+        let dense_b = 2 * report.fp16_bytes; // f32 plan = 2 × fp16 accounting
+        println!(
+            "weights: ~{} B packed (codes + f16-scale accounting) vs {} B f32 plan \
+             (~{:.1}x smaller), {} gemv threads",
+            report.quant_bytes,
+            dense_b,
+            dense_b as f64 / report.quant_bytes.max(1) as f64,
+            gemv_threads.max(1),
+        );
     }
 
     // workload: eval windows from the C4 surrogate
@@ -566,6 +609,7 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
         },
         kv_quant,
+        sidecar: if packed { Some(sidecar) } else { None },
     });
 
     let mut handles = Vec::new();
@@ -684,6 +728,7 @@ mod tests {
             opts: EngineOpts::default(),
             policy,
             kv_quant: None,
+            sidecar: None,
         }
     }
 

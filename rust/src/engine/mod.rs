@@ -58,17 +58,69 @@ pub struct Site {
     pub site: LinearSite,
 }
 
+/// How the compiled plan ([`crate::plan::CompiledModel`]) stores and
+/// executes its weight matrices. The reference [`Engine`] always runs the
+/// dense f32 layout — it is the oracle the packed path is checked against
+/// (`tests/packed_equivalence.rs`), so this knob only changes *where the
+/// same bits come from*, never what they are.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightLayout {
+    /// Dense f32, prepacked transposed — the reference layout.
+    #[default]
+    Dense,
+    /// Bit-packed low-bit codes (two 4-bit codes per byte) decoded on the
+    /// fly by the fused dequant GEMV, with the output rows sharded across
+    /// `threads` workers (1 = inline; the zero-allocation decode contract
+    /// holds only at 1). Requires the quantized-code sidecar:
+    /// `CompiledModel::compile_quantized`.
+    Packed {
+        /// GEMV row shards (clamped to ≥ 1).
+        threads: usize,
+    },
+}
+
+impl WeightLayout {
+    pub fn is_dense(&self) -> bool {
+        matches!(self, WeightLayout::Dense)
+    }
+
+    /// Worker count for the packed GEMV (1 for the dense layout).
+    pub fn threads(&self) -> usize {
+        match self {
+            WeightLayout::Dense => 1,
+            WeightLayout::Packed { threads } => (*threads).max(1),
+        }
+    }
+}
+
 /// Engine options.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOpts {
     /// Token-wise activation fake-quant applied at every linear input
     /// (the paper's A8; `F16` = off).
     pub act: ActQuantConfig,
+    /// Weight storage/execution layout of the compiled plan (the
+    /// reference engine ignores this — it is always dense).
+    pub weights: WeightLayout,
 }
 
 impl Default for EngineOpts {
     fn default() -> Self {
-        EngineOpts { act: ActQuantConfig::new(crate::formats::NumericFormat::F16) }
+        EngineOpts::with_act(crate::formats::NumericFormat::F16)
+    }
+}
+
+impl EngineOpts {
+    /// Options with the given activation format and the default dense
+    /// weight layout — the common construction across tests and benches.
+    pub fn with_act(fmt: crate::formats::NumericFormat) -> EngineOpts {
+        EngineOpts { act: ActQuantConfig::new(fmt), weights: WeightLayout::Dense }
+    }
+
+    /// Switch to the packed weight layout with `threads` GEMV shards.
+    pub fn packed(mut self, threads: usize) -> EngineOpts {
+        self.weights = WeightLayout::Packed { threads: threads.max(1) };
+        self
     }
 }
 
@@ -425,9 +477,7 @@ mod tests {
         let mut rng = Rng::seeded(114);
         let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
         let base = Engine::new(&ck).forward(&[3, 1, 4, 1, 5]);
-        let opts = EngineOpts {
-            act: crate::quant::ActQuantConfig::new(crate::formats::NumericFormat::FP8_E4M3),
-        };
+        let opts = EngineOpts::with_act(crate::formats::NumericFormat::FP8_E4M3);
         let q = Engine::with_opts(&ck, opts).forward(&[3, 1, 4, 1, 5]);
         let rel = base.sub(&q).fro_norm() / base.fro_norm();
         assert!(rel > 0.0, "quantization must do something");
@@ -447,7 +497,7 @@ mod tests {
         let tokens = [3u16, 1, 4, 1, 5, 9, 2, 6];
         let base = Engine::new(&ck).forward(&tokens);
         let err = |fmt| {
-            let opts = EngineOpts { act: crate::quant::ActQuantConfig::new(fmt) };
+            let opts = EngineOpts::with_act(fmt);
             let l = Engine::with_opts(&ck, opts).forward(&tokens);
             l.sub(&base).fro_norm() / base.fro_norm()
         };

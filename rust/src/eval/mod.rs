@@ -65,6 +65,28 @@ pub fn perplexity(
     total
 }
 
+/// Perplexity through an already-compiled plan — the entry point for the
+/// packed weight layout (`zqfp eval --packed`), and allocation-free per
+/// window either way. Bit-identical to [`perplexity`] for any layout,
+/// since the compiled plan's logits match the reference engine's.
+pub fn perplexity_model(
+    model: &crate::plan::CompiledModel,
+    tokens: &[u16],
+    seq_len: usize,
+) -> PplResult {
+    let seq_len = seq_len.min(model.config.max_seq);
+    let mut s = model.scratch();
+    let mut total = PplResult { nll_sum: 0.0, tokens: 0 };
+    for window in tokens.chunks_exact(seq_len) {
+        let logits = model.forward(window, &mut s);
+        total.merge(PplResult {
+            nll_sum: crate::plan::logits_nll(logits, window),
+            tokens: seq_len - 1,
+        });
+    }
+    total
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -12,7 +12,7 @@ use crate::model::{Arch, ModelConfig};
 use crate::pipeline::{
     calibrate_finalized, quantize_checkpoint_with_hessians, FinalizedHessians, PtqConfig,
 };
-use crate::quant::{ActQuantConfig, ScaleConstraint, Scheme};
+use crate::quant::{ScaleConstraint, Scheme};
 
 fn family_for(ctx: &ExpContext, arch: Arch) -> Vec<(ModelConfig, f32)> {
     let fam = ModelConfig::family(arch);
@@ -25,7 +25,7 @@ fn family_for(ctx: &ExpContext, arch: Arch) -> Vec<(ModelConfig, f32)> {
 }
 
 fn act_opts(fmt: NumericFormat) -> EngineOpts {
-    EngineOpts { act: ActQuantConfig::new(fmt) }
+    EngineOpts::with_act(fmt)
 }
 
 /// Table 1 — FP16 vs INT8 activation (weights untouched): the activation-

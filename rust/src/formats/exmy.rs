@@ -270,6 +270,28 @@ fn half_ulp(man_bits: u32) -> f64 {
     pow2(-(man_bits as i32) - 1)
 }
 
+/// The exponent `n` with `x == 2^n`, if `x` is a positive power of two in
+/// the f32 **normal** range — the precondition for multiplying by `x` via
+/// a pure add on the f32 exponent field (the packed-weight shift-dequant
+/// path). Subnormal powers of two return `None`: an exponent-field add
+/// cannot represent them.
+#[inline]
+pub fn pow2_exponent(x: f32) -> Option<i32> {
+    if !(x > 0.0) || !x.is_finite() {
+        return None;
+    }
+    let bits = x.to_bits();
+    if bits & 0x007f_ffff != 0 {
+        return None; // mantissa bits set: subnormal, or not a power of two
+    }
+    let e = ((bits >> 23) & 0xff) as i32;
+    if e == 0 {
+        None // subnormal (0.mantissa form)
+    } else {
+        Some(e - 127)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,6 +419,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pow2_exponent_roundtrips() {
+        for e in [-126i32, -10, -1, 0, 1, 10, 127] {
+            let x = pow2(e) as f32;
+            assert_eq!(pow2_exponent(x), Some(e), "e={e}");
+        }
+        assert_eq!(pow2_exponent(3.0), None);
+        assert_eq!(pow2_exponent(0.0), None);
+        assert_eq!(pow2_exponent(-2.0), None);
+        assert_eq!(pow2_exponent(f32::INFINITY), None);
+        assert_eq!(pow2_exponent(f32::NAN), None);
+        // subnormal powers of two are excluded (exponent-add can't reach them)
+        assert_eq!(pow2_exponent(f32::from_bits(1 << 22)), None);
     }
 
     #[test]

@@ -9,7 +9,7 @@
 mod exmy;
 mod int;
 
-pub use exmy::{exponent_floor, pow2, FpFormat};
+pub use exmy::{exponent_floor, pow2, pow2_exponent, FpFormat};
 pub use int::{IntFormat, IntQParams};
 
 /// Any scalar format the quantizer can target.

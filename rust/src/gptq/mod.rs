@@ -247,6 +247,7 @@ pub fn gptq_quantize(
             zeros,
             cast_fp4_to_e5m2: wcfg.cast_fp4_to_e5m2
                 && matches!(wcfg.format, NumericFormat::Fp(f) if f.total_bits() == 4),
+            constraint: wcfg.constraint,
         },
         loss: total_loss,
         dead_frac: dead as f64 / cols as f64,

@@ -13,7 +13,11 @@
 //! batcher, KV-cached incremental decode with continuous batching, and
 //! metrics — is documented end to end in the repo-root `ARCHITECTURE.md`
 //! (and `README.md` maps the crate); the load-bearing modules are
-//! [`coordinator`], [`plan`] and [`plan::kv`].
+//! [`coordinator`], [`plan`] and [`plan::kv`]. W4 deployment is *real*
+//! here, not just accounted for: [`quant::packed`] bit-packs codes two
+//! per byte and [`tensor::packed_matmul`] fuses shift-dequant into the
+//! GEMV, bit-identical to the fake-quant reference
+//! (`tests/packed_equivalence.rs`).
 
 // The numeric kernels are written as explicit index loops on purpose: the
 // compiled fast path must be bit-identical to the reference engine, so the

@@ -17,7 +17,7 @@ use crate::lorc::{LorcConfig, LorcFactors};
 use crate::model::{Arch, Checkpoint};
 use crate::plan::CompiledModel;
 use crate::quant::{
-    quantize_weight_rtn, ActQuantConfig, ScaleConstraint, Scheme, WeightQuantConfig,
+    quantize_weight_rtn, QuantSidecar, ScaleConstraint, Scheme, WeightQuantConfig,
 };
 use crate::tensor::Matrix;
 
@@ -62,7 +62,7 @@ impl PtqConfig {
 
     /// Engine options matching this scheme's activation side.
     pub fn engine_opts(&self) -> crate::engine::EngineOpts {
-        crate::engine::EngineOpts { act: ActQuantConfig::new(self.scheme.activation) }
+        crate::engine::EngineOpts::with_act(self.scheme.activation)
     }
 
     fn weight_cfg(&self) -> WeightQuantConfig {
@@ -173,6 +173,22 @@ pub fn quantize_checkpoint(
     calib_seqs: &[Vec<u16>],
     cfg: &PtqConfig,
 ) -> (Checkpoint, PtqReport) {
+    let (qck, _, report) = quantize_checkpoint_full(ck, calib_seqs, cfg);
+    (qck, report)
+}
+
+/// Like [`quantize_checkpoint`], additionally returning the quantized-code
+/// **sidecar**: one [`crate::quant::QuantizedWeight`] per transformer
+/// linear, the input the packed execution plan compiles from
+/// ([`CompiledModel::compile_quantized`]). The sidecar is empty for W16
+/// (nothing quantized) and when LoRC is enabled — LoRC folds a dense
+/// low-rank correction into the effective weights, so codes alone no
+/// longer reproduce them and the packed layout would break bit-identity.
+pub fn quantize_checkpoint_full(
+    ck: &Checkpoint,
+    calib_seqs: &[Vec<u16>],
+    cfg: &PtqConfig,
+) -> (Checkpoint, QuantSidecar, PtqReport) {
     let calib_tokens: usize = calib_seqs.iter().map(|s| s.len()).sum();
     let needs_hessians = cfg.use_gptq && !matches!(cfg.scheme.weight, NumericFormat::F16);
     let hessians = if needs_hessians {
@@ -180,7 +196,7 @@ pub fn quantize_checkpoint(
     } else {
         HashMap::new()
     };
-    quantize_checkpoint_with_hessians(ck, &hessians, calib_tokens, cfg)
+    quantize_checkpoint_with_hessians_full(ck, &hessians, calib_tokens, cfg)
 }
 
 /// Same, with pre-computed Hessians (reused across schemes).
@@ -190,8 +206,21 @@ pub fn quantize_checkpoint_with_hessians(
     calib_tokens: usize,
     cfg: &PtqConfig,
 ) -> (Checkpoint, PtqReport) {
+    let (qck, _, report) = quantize_checkpoint_with_hessians_full(ck, hessians, calib_tokens, cfg);
+    (qck, report)
+}
+
+/// The full-result form of [`quantize_checkpoint_with_hessians`]; see
+/// [`quantize_checkpoint_full`] for the sidecar contract.
+pub fn quantize_checkpoint_with_hessians_full(
+    ck: &Checkpoint,
+    hessians: &FinalizedHessians,
+    calib_tokens: usize,
+    cfg: &PtqConfig,
+) -> (Checkpoint, QuantSidecar, PtqReport) {
     let t0 = Instant::now();
     let mut out = ck.clone();
+    let mut sidecar = QuantSidecar::new();
     let mut layers = Vec::new();
     let mut fp16_bytes = 0usize;
     let mut quant_bytes = 0usize;
@@ -200,6 +229,7 @@ pub fn quantize_checkpoint_with_hessians(
         // W16: nothing to quantize; report is trivially empty.
         return (
             out,
+            sidecar,
             PtqReport {
                 scheme_name: cfg.scheme.name(),
                 layers,
@@ -240,17 +270,21 @@ pub fn quantize_checkpoint_with_hessians(
             let weight_mse = effective.mse(w);
             *out.get_mut(&tensor) = effective;
             layers.push(LayerReport {
-                tensor,
+                tensor: tensor.clone(),
                 gptq_loss,
                 weight_mse,
                 packed_bytes: qw.packed_bytes(),
                 lorc_bytes,
             });
+            if cfg.lorc.is_none() {
+                sidecar.insert(tensor, qw);
+            }
         }
     }
 
     (
         out,
+        sidecar,
         PtqReport {
             scheme_name: cfg.scheme.name(),
             layers,
@@ -378,6 +412,31 @@ mod tests {
         .ppl();
         assert!(ppl_gptq < ppl_fp * 3.0);
         assert!(ppl_rtn < ppl_fp * 3.0);
+    }
+
+    #[test]
+    fn sidecar_codes_reproduce_effective_weights() {
+        let ck = tiny_ck(Arch::Llama);
+        let seqs = calib_seqs(3, 10);
+        let cfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+            .with_constraint(ScaleConstraint::M2 { rows: 8 });
+        let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &seqs, &cfg);
+        assert_eq!(sidecar.len(), report.layers.len());
+        for (name, qw) in &sidecar {
+            let effective = qck.get(name);
+            let deq = qw.dequantize();
+            for (a, b) in effective.data.iter().zip(&deq.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+            }
+            assert_eq!(qw.constraint, ScaleConstraint::M2 { rows: 8 });
+        }
+        // LoRC folds a dense correction in — codes no longer reproduce the
+        // effective weights, so no sidecar is produced.
+        let lorc_cfg = cfg
+            .clone()
+            .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
+        let (_, sidecar, _) = quantize_checkpoint_full(&ck, &seqs, &lorc_cfg);
+        assert!(sidecar.is_empty());
     }
 
     #[test]

@@ -53,10 +53,11 @@ mod lut;
 pub use kv::KvCache;
 pub use lut::FpQuantLut;
 
-use crate::engine::{EngineOpts, LinearSite, Site};
+use crate::engine::{EngineOpts, LinearSite, Site, WeightLayout};
 use crate::formats::{FpFormat, NumericFormat};
 use crate::model::{Arch, Checkpoint, ModelConfig};
-use crate::tensor::{matmul, Matrix};
+use crate::quant::{PackedWeight, QuantSidecar};
+use crate::tensor::{matmul, packed_matmul, Matrix};
 
 /// A linear layer prepacked for the axpy kernel: transposed weight
 /// (`[d_in, d_out]`) plus an optional fused bias. Several source linears
@@ -124,6 +125,87 @@ impl PackedLinear {
     }
 }
 
+/// A linear whose weights live as bit-packed low-bit codes, executed by
+/// the fused dequant GEMV ([`crate::tensor::packed_matmul`]). Same fusion
+/// rules as [`PackedLinear`] (q|k|v and gate|up row-stacked), same bias
+/// seeding, bit-identical output.
+#[derive(Debug, Clone)]
+pub struct PackedQLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    w: PackedWeight,
+    bias: Vec<f32>,
+    threads: usize,
+}
+
+impl PackedQLinear {
+    fn pack(
+        parts: &[(&crate::quant::QuantizedWeight, Option<&Matrix>)],
+        threads: usize,
+    ) -> PackedQLinear {
+        let qs: Vec<&crate::quant::QuantizedWeight> = parts.iter().map(|(q, _)| *q).collect();
+        let n_biased = parts.iter().filter(|(_, b)| b.is_some()).count();
+        assert!(
+            n_biased == 0 || n_biased == parts.len(),
+            "cannot fuse biased with bias-free linears"
+        );
+        let mut bias = Vec::new();
+        for (q, b) in parts {
+            if let Some(b) = b {
+                assert_eq!(b.data.len(), q.rows, "bias shape mismatch");
+                bias.extend_from_slice(&b.data);
+            }
+        }
+        let w = PackedWeight::pack(&qs);
+        PackedQLinear { d_in: w.cols, d_out: w.rows, w, bias, threads: threads.max(1) }
+    }
+
+    /// `out = bias + x @ dequant(w)ᵀ`, decoded on the fly. `deq` is the
+    /// arena's decode strip (`len >= d_in`); allocation-free at
+    /// `threads == 1`.
+    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, deq: &mut [f32]) {
+        assert_eq!(x.cols, self.d_in, "linear input dim mismatch");
+        if self.bias.is_empty() {
+            out.resize_to(x.rows, self.d_out);
+        } else {
+            out.resize_rows_to(x.rows, &self.bias);
+        }
+        packed_matmul::packed_matmul_into(x, &self.w, out, deq, self.threads);
+    }
+
+    /// Resident bytes of the packed weight payload (codes + scales +
+    /// tables + shift metadata; bias excluded).
+    pub fn weight_bytes(&self) -> usize {
+        self.w.mem_bytes()
+    }
+}
+
+/// One linear slot of a compiled layer: the dense f32 prepack or the
+/// packed low-bit codes, selected by [`EngineOpts::weights`]. Both
+/// variants produce bit-identical outputs for the same source weights.
+#[derive(Debug, Clone)]
+pub enum LayerWeights {
+    Dense(PackedLinear),
+    Packed(PackedQLinear),
+}
+
+impl LayerWeights {
+    fn run_into(&self, x: &Matrix, out: &mut Matrix, deq: &mut [f32]) {
+        match self {
+            LayerWeights::Dense(l) => l.run_into(x, out),
+            LayerWeights::Packed(l) => l.run_into(x, out, deq),
+        }
+    }
+
+    /// Resident bytes of the weight payload (weights + bias).
+    fn weight_bytes(&self) -> usize {
+        match self {
+            LayerWeights::Dense(l) => 4 * (l.wt.data.len() + l.bias.len()),
+            LayerWeights::Packed(l) => l.weight_bytes() + 4 * l.bias.len(),
+        }
+    }
+}
+
 /// A resolved norm: LayerNorm (gain + bias, Opt) or RMSNorm (gain, Llama).
 #[derive(Debug, Clone)]
 struct CompiledNorm {
@@ -179,9 +261,9 @@ impl CompiledNorm {
 #[derive(Debug, Clone)]
 enum CompiledMlp {
     /// Opt: fc1 → relu → fc2.
-    Relu { fc1: PackedLinear, fc2: PackedLinear },
+    Relu { fc1: LayerWeights, fc2: LayerWeights },
     /// Llama: fused gate|up → silu·mul → down.
-    GatedSilu { gate_up: PackedLinear, down: PackedLinear },
+    GatedSilu { gate_up: LayerWeights, down: LayerWeights },
 }
 
 /// One transformer block with every tensor resolved and prepacked.
@@ -189,10 +271,22 @@ enum CompiledMlp {
 struct CompiledLayer {
     ln1: CompiledNorm,
     /// Fused q|k|v projection: `[d, 3d]`.
-    qkv: PackedLinear,
-    out_proj: PackedLinear,
+    qkv: LayerWeights,
+    out_proj: LayerWeights,
     ln2: CompiledNorm,
     mlp: CompiledMlp,
+}
+
+impl CompiledLayer {
+    fn weight_bytes(&self) -> usize {
+        let mlp = match &self.mlp {
+            CompiledMlp::Relu { fc1, fc2 } => fc1.weight_bytes() + fc2.weight_bytes(),
+            CompiledMlp::GatedSilu { gate_up, down } => {
+                gate_up.weight_bytes() + down.weight_bytes()
+            }
+        };
+        self.qkv.weight_bytes() + self.out_proj.weight_bytes() + mlp
+    }
 }
 
 /// How token-wise activation fake-quant executes in the compiled path.
@@ -243,6 +337,9 @@ pub struct DecodeScratch {
     /// Attention score row (`max_seq`) — shared by the full-recompute and
     /// the KV-cached attention kernels (one query row at a time each).
     scores: Vec<f32>,
+    /// Weight-row decode strip for the packed GEMV (`max(d, ff)`); unused
+    /// by the dense layout.
+    deq: Vec<f32>,
     /// Output logits `[rows, vocab]`.
     logits: Matrix,
 }
@@ -279,6 +376,7 @@ impl DecodeScratch {
             hidden: Matrix::zeros(s, hidden_cols),
             act2: Matrix::zeros(act2_rows, cfg.d_ff),
             scores: vec![0.0; s],
+            deq: vec![0.0; d.max(cfg.d_ff)],
             logits: Matrix::zeros(s, cfg.vocab_size),
         }
     }
@@ -287,42 +385,89 @@ impl DecodeScratch {
 impl CompiledModel {
     /// Resolve + prepack a checkpoint under the given engine options.
     /// All string-keyed lookups, transposes and LUT builds happen here.
+    /// Dense layout only — the packed layout needs the quantized-code
+    /// sidecar, so use [`compile_quantized`](Self::compile_quantized).
     pub fn compile(ck: &Checkpoint, opts: EngineOpts) -> CompiledModel {
+        assert!(
+            opts.weights.is_dense(),
+            "packed weight layout needs the quantized-code sidecar: \
+             use CompiledModel::compile_quantized"
+        );
+        Self::build(ck, None, opts)
+    }
+
+    /// Like [`compile`](Self::compile), but with the PTQ run's
+    /// quantized-code sidecar
+    /// ([`crate::pipeline::quantize_checkpoint_full`]). When
+    /// `opts.weights` selects [`WeightLayout::Packed`], every transformer
+    /// linear is stored as bit-packed codes and executed by the fused
+    /// dequant GEMV — bit-identical to the dense plan over the same
+    /// (fake-quantized) checkpoint, at a fraction of the resident weight
+    /// bytes (`tests/packed_equivalence.rs` enforces both claims). With a
+    /// dense layout the sidecar is ignored.
+    pub fn compile_quantized(
+        ck: &Checkpoint,
+        sidecar: &QuantSidecar,
+        opts: EngineOpts,
+    ) -> CompiledModel {
+        Self::build(ck, Some(sidecar), opts)
+    }
+
+    fn build(ck: &Checkpoint, sidecar: Option<&QuantSidecar>, opts: EngineOpts) -> CompiledModel {
         let cfg = ck.config.clone();
+        let threads = opts.weights.threads();
+        // One linear slot: dense prepack, or packed codes from the sidecar.
+        let linear = |parts: &[(String, Option<String>)]| -> LayerWeights {
+            match (&opts.weights, sidecar) {
+                (WeightLayout::Packed { .. }, Some(sc)) => {
+                    let qparts: Vec<(&crate::quant::QuantizedWeight, Option<&Matrix>)> = parts
+                        .iter()
+                        .map(|(w, b)| {
+                            let q = sc.get(w.as_str()).unwrap_or_else(|| {
+                                panic!(
+                                    "packed layout: no quantized codes for {w} in the sidecar \
+                                     (W16 scheme or LoRC-compensated weights cannot pack)"
+                                )
+                            });
+                            (q, b.as_ref().map(|b| ck.get(b)))
+                        })
+                        .collect();
+                    LayerWeights::Packed(PackedQLinear::pack(&qparts, threads))
+                }
+                (WeightLayout::Packed { .. }, None) => {
+                    panic!("packed weight layout needs the quantized-code sidecar")
+                }
+                (WeightLayout::Dense, _) => {
+                    let dparts: Vec<(&Matrix, Option<&Matrix>)> = parts
+                        .iter()
+                        .map(|(w, b)| (ck.get(w), b.as_ref().map(|b| ck.get(b))))
+                        .collect();
+                    LayerWeights::Dense(PackedLinear::pack(&dparts))
+                }
+            }
+        };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for layer in 0..cfg.n_layers {
             let p = format!("layers.{layer}");
             let ln1 = CompiledNorm::from_ck(ck, &format!("{p}.ln1"));
-            let qkv = PackedLinear::pack(&[
-                (ck.get(&format!("{p}.attn.q.w")), Some(ck.get(&format!("{p}.attn.q.b")))),
-                (ck.get(&format!("{p}.attn.k.w")), Some(ck.get(&format!("{p}.attn.k.b")))),
-                (ck.get(&format!("{p}.attn.v.w")), Some(ck.get(&format!("{p}.attn.v.b")))),
+            let qkv = linear(&[
+                (format!("{p}.attn.q.w"), Some(format!("{p}.attn.q.b"))),
+                (format!("{p}.attn.k.w"), Some(format!("{p}.attn.k.b"))),
+                (format!("{p}.attn.v.w"), Some(format!("{p}.attn.v.b"))),
             ]);
-            let out_proj = PackedLinear::pack(&[(
-                ck.get(&format!("{p}.attn.o.w")),
-                Some(ck.get(&format!("{p}.attn.o.b"))),
-            )]);
+            let out_proj = linear(&[(format!("{p}.attn.o.w"), Some(format!("{p}.attn.o.b")))]);
             let ln2 = CompiledNorm::from_ck(ck, &format!("{p}.ln2"));
             let mlp = match cfg.arch {
                 Arch::Opt => CompiledMlp::Relu {
-                    fc1: PackedLinear::pack(&[(
-                        ck.get(&format!("{p}.mlp.fc1.w")),
-                        Some(ck.get(&format!("{p}.mlp.fc1.b"))),
-                    )]),
-                    fc2: PackedLinear::pack(&[(
-                        ck.get(&format!("{p}.mlp.fc2.w")),
-                        Some(ck.get(&format!("{p}.mlp.fc2.b"))),
-                    )]),
+                    fc1: linear(&[(format!("{p}.mlp.fc1.w"), Some(format!("{p}.mlp.fc1.b")))]),
+                    fc2: linear(&[(format!("{p}.mlp.fc2.w"), Some(format!("{p}.mlp.fc2.b")))]),
                 },
                 Arch::Llama => CompiledMlp::GatedSilu {
-                    gate_up: PackedLinear::pack(&[
-                        (ck.get(&format!("{p}.mlp.gate.w")), None),
-                        (ck.get(&format!("{p}.mlp.up.w")), None),
+                    gate_up: linear(&[
+                        (format!("{p}.mlp.gate.w"), None),
+                        (format!("{p}.mlp.up.w"), None),
                     ]),
-                    down: PackedLinear::pack(&[(
-                        ck.get(&format!("{p}.mlp.down.w")),
-                        Some(ck.get(&format!("{p}.mlp.down.b"))),
-                    )]),
+                    down: linear(&[(format!("{p}.mlp.down.w"), Some(format!("{p}.mlp.down.b")))]),
                 },
             };
             layers.push(CompiledLayer { ln1, qkv, out_proj, ln2, mlp });
@@ -341,6 +486,14 @@ impl CompiledModel {
             layers,
             act,
         }
+    }
+
+    /// Resident bytes of the transformer linears' weight payloads (the
+    /// part the packed layout shrinks; embeddings and norms are identical
+    /// across layouts and excluded so the dense-vs-packed ratio is the
+    /// honest one).
+    pub fn linear_weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
     }
 
     /// A fresh arena sized for this model's `max_seq`.
@@ -495,7 +648,7 @@ impl CompiledModel {
             cl.ln1.run_into(&s.x, &mut s.nrm);
             observe(Site { layer, site: LinearSite::Qkv }, &s.nrm);
             self.actq(&mut s.nrm);
-            cl.qkv.run_into(&s.nrm, &mut s.qkv);
+            cl.qkv.run_into(&s.nrm, &mut s.qkv, &mut s.deq);
             match &mut kv {
                 KvMode::Off => {
                     attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
@@ -543,7 +696,7 @@ impl CompiledModel {
             }
             observe(Site { layer, site: LinearSite::OutProj }, &s.ctx);
             self.actq(&mut s.ctx);
-            cl.out_proj.run_into(&s.ctx, &mut s.proj);
+            cl.out_proj.run_into(&s.ctx, &mut s.proj, &mut s.deq);
             s.x.add_assign(&s.proj);
             // ---- mlp ----
             cl.ln2.run_into(&s.x, &mut s.nrm);
@@ -551,16 +704,16 @@ impl CompiledModel {
             self.actq(&mut s.nrm);
             match &cl.mlp {
                 CompiledMlp::Relu { fc1, fc2 } => {
-                    fc1.run_into(&s.nrm, &mut s.hidden);
+                    fc1.run_into(&s.nrm, &mut s.hidden, &mut s.deq);
                     for v in s.hidden.data.iter_mut() {
                         *v = v.max(0.0); // relu
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.hidden);
                     self.actq(&mut s.hidden);
-                    fc2.run_into(&s.hidden, &mut s.proj);
+                    fc2.run_into(&s.hidden, &mut s.proj, &mut s.deq);
                 }
                 CompiledMlp::GatedSilu { gate_up, down } => {
-                    gate_up.run_into(&s.nrm, &mut s.hidden); // [rows, 2ff]
+                    gate_up.run_into(&s.nrm, &mut s.hidden, &mut s.deq); // [rows, 2ff]
                     let ff = cfg.d_ff;
                     s.act2.resize_to(rows, ff);
                     for r in 0..rows {
@@ -575,7 +728,7 @@ impl CompiledModel {
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.act2);
                     self.actq(&mut s.act2);
-                    down.run_into(&s.act2, &mut s.proj);
+                    down.run_into(&s.act2, &mut s.proj, &mut s.deq);
                 }
             }
             s.x.add_assign(&s.proj);

@@ -28,8 +28,19 @@ pub enum ScaleConstraint {
 }
 
 impl ScaleConstraint {
+    /// Parse `none`/`x`/`off`, `m1`, `m2` (compute group of 32 rows), or
+    /// `m2:<rows>` for an explicit compute-group height (`m2:0` is
+    /// rejected — a zero-row group is meaningless).
     pub fn parse(s: &str) -> Option<ScaleConstraint> {
-        match s.to_ascii_lowercase().as_str() {
+        let t = s.to_ascii_lowercase();
+        if let Some(rows) = t.strip_prefix("m2:") {
+            let rows: usize = rows.parse().ok()?;
+            if rows == 0 {
+                return None;
+            }
+            return Some(ScaleConstraint::M2 { rows });
+        }
+        match t.as_str() {
             "none" | "x" | "off" => Some(ScaleConstraint::None),
             "m1" => Some(ScaleConstraint::M1),
             "m2" => Some(ScaleConstraint::M2 { rows: 32 }),
@@ -44,19 +55,35 @@ impl ScaleConstraint {
             ScaleConstraint::M2 { .. } => "M2",
         }
     }
+
+    /// Round-trippable label (`m2:16` parses back to `M2 { rows: 16 }`).
+    pub fn label(&self) -> String {
+        match self {
+            ScaleConstraint::None => "none".to_string(),
+            ScaleConstraint::M1 => "m1".to_string(),
+            ScaleConstraint::M2 { rows } => format!("m2:{rows}"),
+        }
+    }
 }
 
-/// `2^⌈log2 x⌉` for positive finite x, exact at powers of two.
+/// `2^⌈log2 x⌉`, exact at powers of two. Total over the degenerate inputs
+/// real scale tensors produce: `0.0` (an all-zero weight group) maps to
+/// `0.0`, negative/NaN/infinite inputs pass through unchanged, and the
+/// result is clamped into the f32 *normal* range — a subnormal scale snaps
+/// up to at least `f32::MIN_POSITIVE` so downstream `x / scale` divisions
+/// never hit a flushed-to-zero or subnormal divisor.
 #[inline]
 pub fn next_pow2(x: f32) -> f32 {
-    debug_assert!(x > 0.0 && x.is_finite());
+    if !(x > 0.0) || !x.is_finite() {
+        return x; // zero, negative, NaN, inf: passthrough
+    }
     let e = crate::formats::exponent_floor(x as f64);
     let p = crate::formats::pow2(e);
-    if (x as f64) == p {
-        p as f32
-    } else {
-        crate::formats::pow2(e + 1) as f32
-    }
+    let e = if (x as f64) == p { e } else { e + 1 };
+    // f32 normal exponents span [-126, 127]; outside that, bit-shift
+    // dequant is meaningless anyway, so clamp rather than produce a
+    // subnormal (or zero/inf) power of two.
+    crate::formats::pow2(e.clamp(-126, 127)) as f32
 }
 
 /// Apply a constraint to an FGQ scale tensor laid out `[rows, n_groups]`
@@ -71,8 +98,12 @@ pub fn constrain_scales(
     match constraint {
         ScaleConstraint::None => {}
         ScaleConstraint::M1 => {
+            // Zero scales (an absmax so tiny the `absmax / max_finite`
+            // division underflowed) stay zero — such a group quantizes to
+            // all-zero codes either way. Subnormal scales are snapped up
+            // into the normal range by `next_pow2`.
             for s in scales.iter_mut() {
-                if *s > 0.0 {
+                if *s > 0.0 && s.is_finite() {
                     *s = next_pow2(*s);
                 }
             }
@@ -85,19 +116,33 @@ pub fn constrain_scales(
                     let r1 = (r0 + block).min(rows);
                     let mut smax = 0.0f32;
                     for r in r0..r1 {
-                        smax = smax.max(scales[r * n_groups + g]);
+                        let s = scales[r * n_groups + g];
+                        if s.is_finite() {
+                            smax = smax.max(s);
+                        }
                     }
                     if smax <= 0.0 {
-                        continue;
+                        continue; // all-zero compute group: nothing to snap
                     }
                     for r in r0..r1 {
                         let s = scales[r * n_groups + g];
-                        if s <= 0.0 {
-                            continue;
+                        if s <= 0.0 || !s.is_finite() {
+                            continue; // zero group inside a nonzero block
                         }
                         let ratio = smax / s; // >= 1
+                        if !ratio.is_finite() {
+                            // `s` is so far below `smax` (subnormal vs
+                            // normal) that the ratio overflows; no finite
+                            // power-of-two shift exists — leave the scale
+                            // as-is (the packed path validates and falls
+                            // back to multiply for such groups).
+                            continue;
+                        }
                         let shift = next_pow2(ratio); // 2^ceil(log2 ratio)
-                        scales[r * n_groups + g] = smax / shift;
+                        let snapped = smax / shift;
+                        if snapped > 0.0 {
+                            scales[r * n_groups + g] = snapped;
+                        }
                     }
                 }
             }
@@ -226,5 +271,73 @@ mod tests {
         );
         assert_eq!(ScaleConstraint::parse("none"), Some(ScaleConstraint::None));
         assert_eq!(ScaleConstraint::parse("m3"), None);
+    }
+
+    #[test]
+    fn parse_m2_with_explicit_rows() {
+        assert_eq!(
+            ScaleConstraint::parse("m2:16"),
+            Some(ScaleConstraint::M2 { rows: 16 })
+        );
+        assert_eq!(
+            ScaleConstraint::parse("M2:1"),
+            Some(ScaleConstraint::M2 { rows: 1 })
+        );
+        assert_eq!(ScaleConstraint::parse("m2:0"), None, "zero-row group rejected");
+        assert_eq!(ScaleConstraint::parse("m2:"), None);
+        assert_eq!(ScaleConstraint::parse("m2:abc"), None);
+        assert_eq!(ScaleConstraint::parse("m2:-4"), None);
+        // labels round-trip through parse
+        for c in [
+            ScaleConstraint::None,
+            ScaleConstraint::M1,
+            ScaleConstraint::M2 { rows: 16 },
+        ] {
+            assert_eq!(ScaleConstraint::parse(&c.label()), Some(c));
+        }
+    }
+
+    #[test]
+    fn next_pow2_degenerate_inputs() {
+        // zero (all-zero weight group) maps to zero — no panic
+        assert_eq!(next_pow2(0.0), 0.0);
+        // subnormal scales snap up into the normal range
+        let sub = f32::from_bits(1); // smallest positive subnormal
+        let p = next_pow2(sub);
+        assert!(p >= f32::MIN_POSITIVE && is_pow2(p), "{p}");
+        assert!(p >= sub);
+        // non-finite passthrough (callers skip these)
+        assert!(next_pow2(f32::INFINITY).is_infinite());
+        assert!(next_pow2(f32::NAN).is_nan());
+        assert_eq!(next_pow2(-2.0), -2.0);
+    }
+
+    #[test]
+    fn m1_handles_zero_and_subnormal_scales() {
+        let sub = f32::from_bits(3);
+        let mut s = vec![0.0f32, sub, 0.013, 0.0];
+        constrain_scales(&mut s, 2, 2, ScaleConstraint::M1);
+        assert_eq!(s[0], 0.0, "zero scale stays zero");
+        assert_eq!(s[3], 0.0);
+        assert!(s[1] >= f32::MIN_POSITIVE && is_pow2(s[1]));
+        assert!(is_pow2(s[2]));
+    }
+
+    #[test]
+    fn m2_handles_zero_and_subnormal_scales() {
+        // block contains a zero scale, a subnormal (ratio overflows to inf)
+        // and two normal scales — must not panic, and the normal members
+        // must still get power-of-two ratios.
+        let sub = f32::from_bits(1);
+        let mut s = vec![1.0e30f32, 0.0, sub, 0.3e30];
+        constrain_scales(&mut s, 4, 1, ScaleConstraint::M2 { rows: 4 });
+        assert_eq!(s[0], 1.0e30, "max preserved");
+        assert_eq!(s[1], 0.0, "zero member untouched");
+        assert_eq!(s[2], sub, "unshiftable subnormal member untouched");
+        assert!(is_pow2(s[0] / s[3]), "normal member ratio snapped");
+        // an all-zero compute group is a no-op
+        let mut z = vec![0.0f32; 8];
+        constrain_scales(&mut z, 8, 1, ScaleConstraint::M2 { rows: 4 });
+        assert!(z.iter().all(|&x| x == 0.0));
     }
 }

@@ -1,15 +1,18 @@
 //! The quantization stack: weight FGQ (fine-grained group-wise) quantization,
 //! token-wise activation quantization, power-of-2 scale constraints (M1/M2),
-//! and the FP4→FP8 cast policy — i.e. everything Section 3 of ZeroQuant-FP
-//! describes apart from GPTQ itself (see [`crate::gptq`]) and LoRC (see
-//! [`crate::lorc`]).
+//! the FP4→FP8 cast policy, and true bit-packed weight storage with
+//! shift-dequant planning ([`packed`]) — i.e. everything Section 3 of
+//! ZeroQuant-FP describes apart from GPTQ itself (see [`crate::gptq`]) and
+//! LoRC (see [`crate::lorc`]).
 
 pub mod activation;
 pub mod constraints;
+pub mod packed;
 pub mod weight;
 
 pub use activation::{fake_quant_tokenwise, ActQuantConfig};
 pub use constraints::{constrain_scales, is_pow2, next_pow2, ScaleConstraint};
+pub use packed::{PackedWeight, QuantSidecar};
 pub use weight::{encode_value, quantize_weight_rtn, QuantizedWeight, WeightQuantConfig};
 
 use crate::formats::NumericFormat;

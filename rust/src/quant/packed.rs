@@ -1,0 +1,687 @@
+//! True packed storage for quantized weights — the layout the paper ships.
+//!
+//! [`crate::quant::QuantizedWeight`] keeps one byte per code so the PTQ
+//! algorithms stay simple; its `packed_bytes()` only *accounts* for the
+//! memory a deployment would save. [`PackedWeight`] realizes it: 4-bit
+//! codes are bit-packed two per byte, 8-bit codes one per byte, with the
+//! per-(row, column-group) scales alongside, and the fused GEMV
+//! ([`crate::tensor::packed_matmul`]) decodes codes on the fly against the
+//! activation stream.
+//!
+//! ## Layout
+//!
+//! * Codes are row-major over the **original** `[out_features,
+//!   in_features]` orientation (the GEMV walks a weight row per output
+//!   feature, unit-stride, like `matmul_bt_into`). Row stride is
+//!   `cols.div_ceil(2)` bytes for nibble formats (even column in the low
+//!   nibble, odd column in the high nibble; a trailing odd column leaves
+//!   the last high nibble zero) and `cols` bytes for byte formats.
+//! * FP codes store the ExMy bit pattern unchanged. INT4 codes are
+//!   re-based to fit a nibble: symmetric stores `level + 8` (level ∈
+//!   [-7, 7]), asymmetric stores the raw level (∈ [0, 15]) with the
+//!   group's dequant offset folded into `offs`. INT8 keeps the container's
+//!   `level + 128` byte.
+//! * `scales` is `[rows, n_groups]` f32, row-major — bit-for-bit the
+//!   container's scale tensor (an f16 scale would change the dequant
+//!   values and break the bit-identity contract).
+//!
+//! ## Shift dequant (Section 3, "Casting the FP4 to FP8")
+//!
+//! Dequantizing a code is `decode(code) * scale`. When the scale tensor
+//! went through the paper's power-of-two projections, that multiply is a
+//! pure **add on the f32 exponent field**:
+//!
+//! * **M1** — every scale is `2^n`: each group's 16-entry dequant table is
+//!   the base decode table with `n << 23` added to each entry's bits
+//!   (`ScalePlan::Shift`).
+//! * **M2** — scales are `S_max / 2^k` per compute block: the base table
+//!   premultiplied by the block's one arbitrary-precision `S_max` is built
+//!   at pack time, and each member row applies only its ratio as an
+//!   exponent subtract (`ScalePlan::BlockShift`) — exactly the paper's
+//!   "only the ratios need to be shifts at compute time".
+//!
+//! Both plans are **validated at pack time**: every group's shift-built
+//! table is compared bit-for-bit against the multiply reference; any
+//! mismatch (exponent over/underflow, subnormal scales, asymmetric
+//! offsets) falls the whole matrix back to `ScalePlan::Mul`. The packed
+//! path is therefore bit-identical to the fake-quant reference by
+//! construction, never by hope.
+
+use std::collections::BTreeMap;
+
+use crate::formats::{pow2_exponent, FpFormat, NumericFormat};
+use crate::tensor::Matrix;
+
+use super::constraints::ScaleConstraint;
+use super::weight::QuantizedWeight;
+
+/// Quantized-code sidecar of a PTQ run: tensor name → container, the input
+/// the packed execution plan compiles from (see
+/// [`crate::pipeline::quantize_checkpoint_full`]).
+pub type QuantSidecar = BTreeMap<String, QuantizedWeight>;
+
+/// How group dequant tables are materialized at GEMV time.
+#[derive(Debug, Clone)]
+enum ScalePlan {
+    /// Arbitrary scales: table entry = `fl(base · scale)` (f32 multiply).
+    Mul,
+    /// Every scale is a power of two (M1): per-(row, group) exponent-field
+    /// add on the base table bits. Exponents are stored narrow (i16, they
+    /// live in [-126, 127]) and widened to `e << 23` once per group.
+    Shift { shift_exp: Vec<i16> },
+    /// Power-of-two ratios to one anchor per M2 compute block: per-block
+    /// anchor-premultiplied tables plus a per-(row, group) exponent
+    /// subtract for the ratio. 4-bit formats only (a 256-entry premul
+    /// table per block would rival the codes themselves).
+    BlockShift {
+        block_rows: usize,
+        /// `[n_blocks * n_groups * 16]` — `fl(base · S_max)` per block.
+        premul: Vec<f32>,
+        /// `[rows * n_groups]` ratio exponents (≤ 0: ratios are ≥ 1).
+        shift_exp: Vec<i16>,
+    },
+}
+
+/// A quantized weight matrix in true packed form, ready for the fused
+/// dequant GEMV. Constructed from one or more [`QuantizedWeight`]s sharing
+/// a format (row-stacked, preserving the compiled plan's fused q|k|v and
+/// gate|up layouts).
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    pub rows: usize,
+    pub cols: usize,
+    pub group_size: usize,
+    pub format: NumericFormat,
+    /// Bit-packed codes (see module docs for the layout).
+    pub data: Vec<u8>,
+    /// `[rows, n_groups]` scales, row-major.
+    pub scales: Vec<f32>,
+    /// Per-(row, group) dequant offsets (asymmetric INT only; empty
+    /// otherwise), pre-folded to reproduce the container's `dequantize`
+    /// arithmetic exactly.
+    offs: Vec<f32>,
+    pub cast_fp4_to_e5m2: bool,
+    /// Raw-code decode table: 16 entries for nibble formats, 256 for byte.
+    base: Vec<f32>,
+    plan: ScalePlan,
+}
+
+/// `v · 2^(shift_bits >> 23)` as a pure exponent-field add. Exact (equal to
+/// the f32 multiply) whenever `v` and the result are normal or zero —
+/// which pack-time validation guarantees before this path is selected.
+#[inline(always)]
+fn shift_f32(v: f32, shift_bits: i32) -> f32 {
+    if v == 0.0 {
+        v // ±0 has no exponent field to add to
+    } else {
+        f32::from_bits((v.to_bits() as i32).wrapping_add(shift_bits) as u32)
+    }
+}
+
+impl PackedWeight {
+    /// Pack one container.
+    pub fn from_quantized(q: &QuantizedWeight) -> PackedWeight {
+        PackedWeight::pack(&[q])
+    }
+
+    /// Pack one or more containers that share `cols`, `group_size`,
+    /// `format`, cast flag and constraint, stacking their rows — the fused
+    /// q|k|v / gate|up layout of the compiled plan.
+    pub fn pack(parts: &[&QuantizedWeight]) -> PackedWeight {
+        assert!(!parts.is_empty(), "nothing to pack");
+        let head = parts[0];
+        let format = head.format;
+        assert!(
+            !matches!(format, NumericFormat::F16),
+            "F16 weights are dense — the packed layout needs a quantized format"
+        );
+        for p in parts {
+            assert_eq!(p.cols, head.cols, "fused parts must share the input dim");
+            assert_eq!(p.group_size, head.group_size, "fused parts must share the group size");
+            assert_eq!(p.format, head.format, "fused parts must share the format");
+            assert_eq!(p.cast_fp4_to_e5m2, head.cast_fp4_to_e5m2, "cast policy mismatch");
+            assert_eq!(p.constraint, head.constraint, "constraint mismatch");
+        }
+        let cols = head.cols;
+        let group_size = head.group_size;
+        let rows: usize = parts.iter().map(|p| p.rows).sum();
+        let ng = cols.div_ceil(group_size);
+        let nibble = format.bits() == 4;
+        let stride = if nibble { cols.div_ceil(2) } else { cols };
+        let asym = matches!(format, NumericFormat::Int(i) if !i.symmetric);
+
+        let base = base_table(format);
+        let mut data = vec![0u8; rows * stride];
+        let mut scales = Vec::with_capacity(rows * ng);
+        let mut offs: Vec<f32> = if asym { Vec::with_capacity(rows * ng) } else { Vec::new() };
+
+        let mut out_r = 0usize;
+        for p in parts {
+            for r in 0..p.rows {
+                scales.extend_from_slice(&p.scales[r * ng..(r + 1) * ng]);
+                if asym {
+                    // Fold the container's dequant arithmetic into one
+                    // integer offset per group (exact: all quantities are
+                    // small integers). The container stores `level - z +
+                    // 128` and dequantizes `(code - 128 - z) · s`; we
+                    // re-base nibbles to the raw level, so the offset
+                    // doubles for 4-bit codes.
+                    for g in 0..ng {
+                        let z = p.zeros[r * ng + g];
+                        offs.push(if nibble { (2 * z) as f32 } else { z as f32 });
+                    }
+                }
+                let dst = &mut data[out_r * stride..(out_r + 1) * stride];
+                for c in 0..cols {
+                    let code8 = p.codes[r * p.cols + c] as i32;
+                    let packed = if !nibble {
+                        code8
+                    } else {
+                        match format {
+                            // FP4: the 4-bit ExMy pattern, stored as-is.
+                            NumericFormat::Fp(_) => code8,
+                            NumericFormat::Int(i) if i.symmetric => {
+                                // container byte = level + 128, level ∈ [-7, 7]
+                                code8 - 128 + 8
+                            }
+                            NumericFormat::Int(_) => {
+                                // container byte = level - z + 128 → raw level
+                                let z = p.zeros[r * ng + c / group_size];
+                                code8 - 128 + z
+                            }
+                            NumericFormat::F16 => unreachable!(),
+                        }
+                    };
+                    assert!(
+                        (0..if nibble { 16 } else { 256 }).contains(&packed),
+                        "code {packed} out of packed range"
+                    );
+                    if nibble {
+                        dst[c / 2] |= (packed as u8) << ((c & 1) * 4);
+                    } else {
+                        dst[c] = packed as u8;
+                    }
+                }
+                out_r += 1;
+            }
+        }
+
+        let mut pw = PackedWeight {
+            rows,
+            cols,
+            group_size,
+            format,
+            data,
+            scales,
+            offs,
+            cast_fp4_to_e5m2: head.cast_fp4_to_e5m2,
+            base,
+            plan: ScalePlan::Mul,
+        };
+        pw.plan = pw.plan_shift(head.constraint);
+        pw
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.cols.div_ceil(self.group_size)
+    }
+
+    /// Bytes per packed row of codes.
+    pub fn row_stride(&self) -> usize {
+        if self.format.bits() == 4 {
+            self.cols.div_ceil(2)
+        } else {
+            self.cols
+        }
+    }
+
+    /// True when this matrix dequantizes through exponent-field adds
+    /// (the M1/M2 bit-shift cast) rather than per-group multiplies.
+    pub fn uses_shift_dequant(&self) -> bool {
+        !matches!(self.plan, ScalePlan::Mul)
+    }
+
+    /// Actual resident bytes of the packed representation: codes + scales
+    /// + offsets + decode/premul tables + shift metadata.
+    pub fn mem_bytes(&self) -> usize {
+        let plan = match &self.plan {
+            ScalePlan::Mul => 0,
+            ScalePlan::Shift { shift_exp } => 2 * shift_exp.len(),
+            ScalePlan::BlockShift { premul, shift_exp, .. } => {
+                4 * premul.len() + 2 * shift_exp.len()
+            }
+        };
+        self.data.len() + 4 * self.scales.len() + 4 * self.offs.len() + 4 * self.base.len() + plan
+    }
+
+    /// The packed code of one element (tests / tooling).
+    pub fn code_at(&self, row: usize, col: usize) -> u8 {
+        let stride = self.row_stride();
+        if self.format.bits() == 4 {
+            let b = self.data[row * stride + col / 2];
+            (b >> ((col & 1) * 4)) & 0xf
+        } else {
+            self.data[row * stride + col]
+        }
+    }
+
+    /// The dequant value of packed code `c` in group `(row, g)`, computed
+    /// the reference way (multiply + offset + optional cast). This is the
+    /// ground truth the shift plans are validated against, and the slow
+    /// path [`Self::dequant_at`] uses.
+    #[inline]
+    fn ref_entry(&self, c: usize, gi: usize) -> f32 {
+        let off = if self.offs.is_empty() { 0.0 } else { self.offs[gi] };
+        let v = (self.base[c] - off) * self.scales[gi];
+        if self.cast_fp4_to_e5m2 {
+            FpFormat::E5M2.quantize(v)
+        } else {
+            v
+        }
+    }
+
+    /// Dequantize one element (slow; the GEMV uses the row decoder).
+    pub fn dequant_at(&self, row: usize, col: usize) -> f32 {
+        let gi = row * self.n_groups() + col / self.group_size;
+        self.ref_entry(self.code_at(row, col) as usize, gi)
+    }
+
+    /// Fill `t` with the 16-entry dequant table of group `(row, g)` —
+    /// nibble formats only. One table serves `group_size` elements, so the
+    /// inner GEMV loop is a pure nibble→table load with **zero multiplies
+    /// per weight** on every plan.
+    #[inline]
+    fn fill_group_table(&self, row: usize, g: usize, t: &mut [f32; 16]) {
+        let gi = row * self.n_groups() + g;
+        match &self.plan {
+            ScalePlan::Mul => {
+                let s = self.scales[gi];
+                let off = if self.offs.is_empty() { 0.0 } else { self.offs[gi] };
+                for (c, tv) in t.iter_mut().enumerate() {
+                    *tv = (self.base[c] - off) * s;
+                }
+            }
+            ScalePlan::Shift { shift_exp } => {
+                let sb = (shift_exp[gi] as i32) << 23;
+                for (c, tv) in t.iter_mut().enumerate() {
+                    *tv = shift_f32(self.base[c], sb);
+                }
+            }
+            ScalePlan::BlockShift { block_rows, premul, shift_exp } => {
+                let ng = self.n_groups();
+                let block = (row / block_rows) * ng + g;
+                let p = &premul[block * 16..block * 16 + 16];
+                let sb = (shift_exp[gi] as i32) << 23;
+                for (c, tv) in t.iter_mut().enumerate() {
+                    *tv = shift_f32(p[c], sb);
+                }
+            }
+        }
+        if self.cast_fp4_to_e5m2 {
+            for tv in t.iter_mut() {
+                *tv = FpFormat::E5M2.quantize(*tv);
+            }
+        }
+    }
+
+    /// Decode one whole weight row into `out[..cols]` — the stream the
+    /// fused GEMV dots against the activations. Bit-identical to the
+    /// corresponding row of [`QuantizedWeight::dequantize`].
+    pub fn dequant_row_into(&self, row: usize, out: &mut [f32]) {
+        assert!(out.len() >= self.cols, "decode scratch too small");
+        let ng = self.n_groups();
+        let stride = self.row_stride();
+        let bytes = &self.data[row * stride..(row + 1) * stride];
+        if self.format.bits() == 4 {
+            let mut t = [0.0f32; 16];
+            for g in 0..ng {
+                self.fill_group_table(row, g, &mut t);
+                let c0 = g * self.group_size;
+                let c1 = (c0 + self.group_size).min(self.cols);
+                for (c, ov) in out[c0..c1].iter_mut().enumerate() {
+                    let c = c0 + c;
+                    let b = bytes[c / 2];
+                    *ov = t[((b >> ((c & 1) * 4)) & 0xf) as usize];
+                }
+            }
+        } else {
+            // Byte codes: 256-entry tables are too large to rebuild per
+            // group — dequantize per element, with the scale applied as an
+            // exponent add when the plan allows.
+            for g in 0..ng {
+                let gi = row * ng + g;
+                let c0 = g * self.group_size;
+                let c1 = (c0 + self.group_size).min(self.cols);
+                match &self.plan {
+                    ScalePlan::Shift { shift_exp } => {
+                        let sb = (shift_exp[gi] as i32) << 23;
+                        for (c, ov) in out[c0..c1].iter_mut().enumerate() {
+                            *ov = shift_f32(self.base[bytes[c0 + c] as usize], sb);
+                        }
+                    }
+                    _ => {
+                        let s = self.scales[gi];
+                        let off = if self.offs.is_empty() { 0.0 } else { self.offs[gi] };
+                        for (c, ov) in out[c0..c1].iter_mut().enumerate() {
+                            *ov = (self.base[bytes[c0 + c] as usize] - off) * s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dequantize the whole matrix (tests / the dense-fallback path).
+    pub fn dequantize(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let row = &mut m.data[r * self.cols..(r + 1) * self.cols];
+            self.dequant_row_into(r, row);
+        }
+        m
+    }
+
+    /// Try to plan shift dequant for this matrix's scale tensor; falls
+    /// back to `ScalePlan::Mul` unless **every** group's shift-built
+    /// table reproduces the multiply reference bit-for-bit.
+    fn plan_shift(&self, constraint: ScaleConstraint) -> ScalePlan {
+        if !self.offs.is_empty() || self.cast_fp4_to_e5m2 {
+            // Asymmetric offsets break the pure-multiply structure, and the
+            // E5M2 re-quantization makes the shift a dequant+requant anyway
+            // (the cast is applied after either path — correctness would
+            // hold, but validation cost buys nothing; keep it simple).
+            return ScalePlan::Mul;
+        }
+        let ng = self.n_groups();
+
+        // M1 / naturally power-of-two scales: one shift per (row, group).
+        let m1 = || -> Option<ScalePlan> {
+            let mut shift_exp = Vec::with_capacity(self.scales.len());
+            for &s in &self.scales {
+                shift_exp.push(pow2_exponent(s)? as i16);
+            }
+            let plan = ScalePlan::Shift { shift_exp };
+            self.validate_plan(&plan).then_some(plan)
+        };
+        if let Some(p) = m1() {
+            return p;
+        }
+
+        // M2: power-of-two ratios against one anchor per compute block.
+        if let ScaleConstraint::M2 { rows: block_rows } = constraint {
+            if self.format.bits() == 4 {
+                let block_rows = block_rows.max(1);
+                if let Some(p) = self.plan_block_shift(block_rows, ng) {
+                    return p;
+                }
+            }
+        }
+        ScalePlan::Mul
+    }
+
+    fn plan_block_shift(&self, block_rows: usize, ng: usize) -> Option<ScalePlan> {
+        let n_blocks = self.rows.div_ceil(block_rows);
+        let mut premul = vec![0.0f32; n_blocks * ng * 16];
+        let mut shift_exp = vec![0i16; self.scales.len()];
+        for g in 0..ng {
+            for b in 0..n_blocks {
+                let r0 = b * block_rows;
+                let r1 = (r0 + block_rows).min(self.rows);
+                let mut smax = 0.0f32;
+                for r in r0..r1 {
+                    let s = self.scales[r * ng + g];
+                    if s.is_finite() {
+                        smax = smax.max(s);
+                    }
+                }
+                let tb = &mut premul[(b * ng + g) * 16..(b * ng + g) * 16 + 16];
+                for (c, tv) in tb.iter_mut().enumerate() {
+                    *tv = self.base[c] * smax;
+                }
+                for r in r0..r1 {
+                    let s = self.scales[r * ng + g];
+                    if s == 0.0 {
+                        // all-zero group: every code decodes to ±0 either
+                        // way; shift 0 against the premul table would be
+                        // wrong unless the base entry is 0 too, so bail
+                        // out to Mul for safety via validation below.
+                        shift_exp[r * ng + g] = 0;
+                        continue;
+                    }
+                    // ratio must be an exact power of two (the M2 invariant)
+                    let k = pow2_exponent(smax / s)?;
+                    shift_exp[r * ng + g] = -(k as i16);
+                }
+            }
+        }
+        let plan = ScalePlan::BlockShift { block_rows, premul, shift_exp };
+        self.validate_plan(&plan).then_some(plan)
+    }
+
+    /// Bit-compare every group's plan-built table against the multiply
+    /// reference. Non-finite base entries (inf/NaN codes of IEEE-style
+    /// formats, which a saturating encoder never emits) are skipped.
+    fn validate_plan(&self, plan: &ScalePlan) -> bool {
+        let ng = self.n_groups();
+        let tbl = self.base.len(); // 16 or 256
+        for r in 0..self.rows {
+            for g in 0..ng {
+                let gi = r * ng + g;
+                for c in 0..tbl {
+                    if !self.base[c].is_finite() {
+                        continue;
+                    }
+                    let want = self.base[c] * self.scales[gi];
+                    let got = match plan {
+                        ScalePlan::Mul => want,
+                        ScalePlan::Shift { shift_exp } => {
+                            shift_f32(self.base[c], (shift_exp[gi] as i32) << 23)
+                        }
+                        ScalePlan::BlockShift { block_rows, premul, shift_exp } => {
+                            let block = (r / block_rows) * ng + g;
+                            shift_f32(premul[block * tbl + c], (shift_exp[gi] as i32) << 23)
+                        }
+                    };
+                    if got.to_bits() != want.to_bits() {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Decode table over raw packed codes (the scale-free part of dequant).
+fn base_table(format: NumericFormat) -> Vec<f32> {
+    match format {
+        NumericFormat::F16 => unreachable!("checked by pack"),
+        NumericFormat::Fp(f) if f.total_bits() == 4 => {
+            (0..16).map(|c| f.decode(c as u16)).collect()
+        }
+        NumericFormat::Fp(f) => (0..256).map(|c| f.decode(c as u16)).collect(),
+        NumericFormat::Int(i) if i.bits == 4 => {
+            if i.symmetric {
+                // nibble = level + 8
+                (0..16i32).map(|c| (c - 8) as f32).collect()
+            } else {
+                // nibble = raw level; group offset folded into `offs`
+                (0..16i32).map(|c| c as f32).collect()
+            }
+        }
+        NumericFormat::Int(_) => {
+            // container byte = level(+z-fold) + 128
+            (0..256i32).map(|c| (c - 128) as f32).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::weight::{quantize_weight_rtn, WeightQuantConfig};
+    use crate::rng::Rng;
+
+    const FORMATS: [NumericFormat; 7] = [
+        NumericFormat::FP4_E2M1,
+        NumericFormat::FP4_E3M0,
+        NumericFormat::INT4,
+        NumericFormat::INT4_ASYM,
+        NumericFormat::FP8_E4M3,
+        NumericFormat::INT8,
+        NumericFormat::INT8_ASYM,
+    ];
+
+    const CONSTRAINTS: [ScaleConstraint; 4] = [
+        ScaleConstraint::None,
+        ScaleConstraint::M1,
+        ScaleConstraint::M2 { rows: 4 },
+        ScaleConstraint::M2 { rows: 3 }, // ragged blocks
+    ];
+
+    fn assert_matches_container(q: &QuantizedWeight, what: &str) {
+        let p = PackedWeight::from_quantized(q);
+        let reference = q.dequantize();
+        let packed = p.dequantize();
+        for (i, (a, b)) in reference.data.iter().zip(&packed.data).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{what}: element {i} reference={a} packed={b}"
+            );
+        }
+        // and the element accessor agrees
+        for r in [0, q.rows - 1] {
+            for c in [0, q.cols / 2, q.cols - 1] {
+                assert_eq!(p.dequant_at(r, c).to_bits(), q.dequant_at(r, c).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_dequant_bit_identical_across_formats_and_constraints() {
+        let mut rng = Rng::seeded(0xBAC);
+        for fmt in FORMATS {
+            for cst in CONSTRAINTS {
+                for cols in [64usize, 65, 130] {
+                    // odd cols: trailing nibble
+                    let w = Matrix::randn(9, cols, 0.05, &mut rng);
+                    let q = quantize_weight_rtn(
+                        &w,
+                        &WeightQuantConfig::new(fmt).with_group_size(32).with_constraint(cst),
+                    );
+                    assert_matches_container(
+                        &q,
+                        &format!("{} {} cols={cols}", fmt.name(), cst.name()),
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn m1_and_m2_select_shift_plans() {
+        let mut rng = Rng::seeded(0xBAD);
+        let w = Matrix::randn(16, 64, 0.05, &mut rng);
+        for (cst, fmt) in [
+            (ScaleConstraint::M1, NumericFormat::FP4_E2M1),
+            (ScaleConstraint::M1, NumericFormat::FP8_E4M3),
+            (ScaleConstraint::M2 { rows: 4 }, NumericFormat::FP4_E2M1),
+            (ScaleConstraint::M2 { rows: 4 }, NumericFormat::INT4),
+        ] {
+            let q = quantize_weight_rtn(
+                &w,
+                &WeightQuantConfig::new(fmt).with_group_size(32).with_constraint(cst),
+            );
+            let p = PackedWeight::from_quantized(&q);
+            assert!(
+                p.uses_shift_dequant(),
+                "{} {} should dequantize by exponent-add",
+                fmt.name(),
+                cst.name()
+            );
+        }
+        // unconstrained scales are arbitrary → multiply fallback
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP4_E2M1));
+        assert!(!PackedWeight::from_quantized(&q).uses_shift_dequant());
+    }
+
+    #[test]
+    fn cast_policy_flows_through_packed_path() {
+        let mut rng = Rng::seeded(0xCAF);
+        let w = Matrix::randn(6, 48, 0.1, &mut rng);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1)
+                .with_group_size(16)
+                .with_cast(true),
+        );
+        assert!(q.cast_fp4_to_e5m2);
+        assert_matches_container(&q, "fp4 cast");
+    }
+
+    #[test]
+    fn all_zero_group_packs_and_dequantizes() {
+        // the end-to-end regression for the zero-scale constraint fix: an
+        // all-zero weight survives quantize → constrain → pack → decode
+        // under every constraint, for both a 4-bit and an 8-bit format.
+        let w = Matrix::zeros(8, 64);
+        for fmt in [NumericFormat::FP4_E2M1, NumericFormat::INT8] {
+            for cst in CONSTRAINTS {
+                let q = quantize_weight_rtn(
+                    &w,
+                    &WeightQuantConfig::new(fmt).with_group_size(32).with_constraint(cst),
+                );
+                let p = PackedWeight::from_quantized(&q);
+                let d = p.dequantize();
+                assert!(
+                    d.data.iter().all(|&x| x == 0.0),
+                    "{} {}: zero weight must decode to zero",
+                    fmt.name(),
+                    cst.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pack_stacks_rows() {
+        let mut rng = Rng::seeded(0xFAB);
+        let cfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(32);
+        let a = quantize_weight_rtn(&Matrix::randn(5, 64, 0.05, &mut rng), &cfg);
+        let b = quantize_weight_rtn(&Matrix::randn(3, 64, 0.05, &mut rng), &cfg);
+        let fused = PackedWeight::pack(&[&a, &b]);
+        assert_eq!((fused.rows, fused.cols), (8, 64));
+        let da = a.dequantize();
+        let db = b.dequantize();
+        let df = fused.dequantize();
+        for r in 0..5 {
+            assert_eq!(&df.data[r * 64..(r + 1) * 64], &da.data[r * 64..(r + 1) * 64]);
+        }
+        for r in 0..3 {
+            assert_eq!(
+                &df.data[(5 + r) * 64..(6 + r) * 64],
+                &db.data[r * 64..(r + 1) * 64]
+            );
+        }
+    }
+
+    #[test]
+    fn packed_memory_is_a_fraction_of_dense() {
+        let mut rng = Rng::seeded(0xFEE);
+        let w = Matrix::randn(64, 256, 0.05, &mut rng);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64),
+        );
+        let p = PackedWeight::from_quantized(&q);
+        let dense = 4 * w.rows * w.cols;
+        assert!(
+            p.mem_bytes() * 6 <= dense,
+            "packed {} vs dense {dense}: not ≤ 1/6",
+            p.mem_bytes()
+        );
+        // and packing really used nibbles
+        assert_eq!(p.data.len(), 64 * 128);
+    }
+}

@@ -81,6 +81,10 @@ pub struct QuantizedWeight {
     pub zeros: Vec<i32>,
     /// Whether dequantization re-quantizes to FP8 E5M2 (footnote 4 cast).
     pub cast_fp4_to_e5m2: bool,
+    /// The scale constraint the scales were projected under — recorded so
+    /// the packed execution path ([`crate::quant::PackedWeight`]) can plan
+    /// shift-dequant against the M1/M2 structure without re-deriving it.
+    pub constraint: ScaleConstraint,
 }
 
 impl QuantizedWeight {
@@ -235,6 +239,7 @@ pub fn quantize_weight_rtn(w: &Matrix, cfg: &WeightQuantConfig) -> QuantizedWeig
         scales,
         zeros: zeros_v,
         cast_fp4_to_e5m2: cfg.cast_fp4_to_e5m2 && matches!(cfg.format, NumericFormat::Fp(f) if f.total_bits() == 4),
+        constraint: cfg.constraint,
     }
 }
 

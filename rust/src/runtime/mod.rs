@@ -122,7 +122,7 @@ pub fn selfcheck_impl(artifacts: &Path) -> Result<()> {
         .map(|_| rng.below(cfg.vocab_size) as u16)
         .collect();
     for fmt in [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3] {
-        let opts = EngineOpts { act: crate::quant::ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let act = act_tag(&opts).unwrap();
         let path = artifacts.join(format!("score_selfcheck_{act}.hlo.txt"));
         if !path.exists() {

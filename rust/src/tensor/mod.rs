@@ -6,6 +6,7 @@
 //! subject of the L3 perf pass (see EXPERIMENTS.md §Perf).
 
 pub mod matmul;
+pub mod packed_matmul;
 
 use crate::rng::Rng;
 

@@ -1,0 +1,260 @@
+//! Fused dequant-GEMV over [`PackedWeight`] — the packed plan's hot path.
+//!
+//! Computes `out += x · Wᵀ` with `W` stored as bit-packed codes: each
+//! weight row (one output feature) is decoded into a small scratch strip
+//! through the per-group dequant tables (exponent-add when the scale
+//! tensor allows, multiply otherwise — see [`crate::quant::packed`]) and
+//! immediately dotted against every activation row while it is L1-hot.
+//! Memory traffic per weight drops from 4 bytes (dense f32 plan) to
+//! ~0.56 bytes (W4 codes + f32 group scales), which is the whole game for
+//! a bandwidth-bound decode loop.
+//!
+//! ## Bit-identity contract
+//!
+//! The result is bit-identical to seeding `out` the same way and calling
+//! [`matmul_into`](super::matmul::matmul_into)`(x, dequantize(W)ᵀ, out)` —
+//! the dense compiled plan's exact kernel. Two facts make this hold:
+//!
+//! 1. the decoded strip is bit-equal to the dequantized weight row
+//!    ([`PackedWeight::dequant_row_into`]'s contract), and
+//! 2. the accumulation order is identical: `matmul_into` k-blocks by
+//!    `KB = 256` and 4-way unrolls inside each block. Because `KB` is a
+//!    multiple of 4, its 4-term groups sit at `k ≡ 0 (mod 4)` globally
+//!    with only the final `k mod 4` elements handled singly (with the
+//!    same `a != 0` skip) — exactly the flat loop below.
+//!
+//! `tests/packed_equivalence.rs` enforces the end-to-end version of this
+//! across architectures, formats and scale constraints.
+//!
+//! ## Sharding
+//!
+//! With `threads > 1` the weight rows (output features) are sharded across
+//! `std::thread` workers — each worker decodes only its own rows, so the
+//! dequant work parallelizes with the FLOPs. Each worker accumulates into
+//! a private `[batch, shard]` strip that is scattered into `out` after the
+//! join, keeping the hot loops free of sharing. The threaded path spawns
+//! (and therefore allocates) per call; the zero-allocation decode contract
+//! (`tests/plan_alloc.rs`) applies to `threads == 1`, the default.
+
+use crate::quant::PackedWeight;
+
+use super::Matrix;
+
+/// `out += x · wᵀ` over packed codes. `out` must be pre-seeded (zeroed or
+/// bias rows) and shaped `[x.rows, w.rows]`; `deq` is the caller's decode
+/// scratch with `deq.len() >= w.cols` (unused when `threads > 1`, where
+/// each worker owns a private strip).
+pub fn packed_matmul_into(
+    x: &Matrix,
+    w: &PackedWeight,
+    out: &mut Matrix,
+    deq: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(x.cols, w.cols, "gemv input dim mismatch");
+    assert_eq!(out.rows, x.rows);
+    assert_eq!(out.cols, w.rows);
+    if x.rows == 0 || w.rows == 0 {
+        return; // nothing to accumulate (and nothing to shard)
+    }
+    let threads = threads.max(1).min(w.rows);
+    if threads == 1 {
+        packed_rows_into(x, w, 0..w.rows, &mut deq[..w.cols], &mut out.data, w.rows, 0);
+        return;
+    }
+
+    // Shard the GEMV rows (output features) across workers. Each worker
+    // copies its columns' seeds out of `out`, accumulates into a private
+    // [batch, span] strip (so the accumulator chain — seed first, then the
+    // k-groups — is the same as the inline path, keeping the result
+    // bit-identical to threads == 1), and the strips are scattered back
+    // after the join.
+    let n = w.rows;
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+        .filter(|(a, b)| a < b)
+        .collect();
+    let parts: Vec<(usize, Vec<f32>)> = {
+        let out_data: &[f32] = &out.data;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(j0, j1)| {
+                    s.spawn(move || {
+                        let span = j1 - j0;
+                        let mut strip = vec![0.0f32; x.rows * span];
+                        for r in 0..x.rows {
+                            strip[r * span..(r + 1) * span]
+                                .copy_from_slice(&out_data[r * n + j0..r * n + j1]);
+                        }
+                        let mut deq = vec![0.0f32; w.cols];
+                        packed_rows_into(x, w, j0..j1, &mut deq, &mut strip, span, j0);
+                        (j0, strip)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gemv worker panicked")).collect()
+        })
+    };
+    for (j0, strip) in parts {
+        let span = strip.len() / x.rows;
+        for r in 0..x.rows {
+            out.data[r * n + j0..r * n + j0 + span]
+                .copy_from_slice(&strip[r * span..(r + 1) * span]);
+        }
+    }
+}
+
+/// Decode-and-dot for one contiguous range of weight rows, accumulating
+/// into `sink` laid out `[x.rows, sink_cols]` at column `j - col_off`.
+/// The inner accumulation replicates `matmul_into`'s order exactly (see
+/// module docs).
+fn packed_rows_into(
+    x: &Matrix,
+    w: &PackedWeight,
+    rows: std::ops::Range<usize>,
+    deq: &mut [f32],
+    sink: &mut [f32],
+    sink_cols: usize,
+    col_off: usize,
+) {
+    let k = w.cols;
+    let deq = &mut deq[..k];
+    for j in rows {
+        w.dequant_row_into(j, deq);
+        for r in 0..x.rows {
+            let xrow = &x.data[r * k..(r + 1) * k];
+            let mut acc = sink[r * sink_cols + (j - col_off)];
+            let mut kk = 0usize;
+            // 4-term groups, matching matmul_into's unroll (left-assoc sum
+            // added to the accumulator as one expression).
+            while kk + 4 <= k {
+                acc += xrow[kk] * deq[kk]
+                    + xrow[kk + 1] * deq[kk + 1]
+                    + xrow[kk + 2] * deq[kk + 2]
+                    + xrow[kk + 3] * deq[kk + 3];
+                kk += 4;
+            }
+            // tail: singles with the reference kernel's zero skip
+            while kk < k {
+                let av = xrow[kk];
+                if av != 0.0 {
+                    acc += av * deq[kk];
+                }
+                kk += 1;
+            }
+            sink[r * sink_cols + (j - col_off)] = acc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::NumericFormat;
+    use crate::quant::{quantize_weight_rtn, ScaleConstraint, WeightQuantConfig};
+    use crate::rng::Rng;
+    use crate::tensor::matmul::matmul_into;
+
+    fn reference(x: &Matrix, w: &PackedWeight, seed: &Matrix) -> Matrix {
+        let wt = w.dequantize().transpose();
+        let mut out = seed.clone();
+        matmul_into(x, &wt, &mut out);
+        out
+    }
+
+    #[test]
+    fn fused_gemv_bit_identical_to_dense_kernel() {
+        let mut rng = Rng::seeded(0x6E3);
+        // shapes exercise the 4-wide body, the mod-4 tail and odd cols
+        for (rows, cols, batch) in [(8, 64, 1), (7, 65, 3), (12, 130, 2), (5, 33, 4)] {
+            for fmt in [
+                NumericFormat::FP4_E2M1,
+                NumericFormat::INT4,
+                NumericFormat::FP8_E4M3,
+            ] {
+                for cst in [ScaleConstraint::None, ScaleConstraint::M1] {
+                    let wm = Matrix::randn(rows, cols, 0.05, &mut rng);
+                    let q = quantize_weight_rtn(
+                        &wm,
+                        &WeightQuantConfig::new(fmt).with_group_size(32).with_constraint(cst),
+                    );
+                    let w = PackedWeight::from_quantized(&q);
+                    let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+                    let seed = Matrix::randn(batch, rows, 0.1, &mut rng); // bias rows
+                    let want = reference(&x, &w, &seed);
+                    let mut got = seed.clone();
+                    let mut deq = vec![0.0f32; cols];
+                    packed_matmul_into(&x, &w, &mut got, &mut deq, 1);
+                    for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} {} [{rows}x{cols}]x{batch} elem {i}: {a} vs {b}",
+                            fmt.name(),
+                            cst.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_activation_tail_skip_matches() {
+        // the tail's `av != 0.0` skip must mirror the dense kernel even
+        // when activations contain exact zeros
+        let mut rng = Rng::seeded(0x6E4);
+        let wm = Matrix::randn(6, 39, 0.05, &mut rng); // 39 = 4·9 + 3 tail
+        let q = quantize_weight_rtn(
+            &wm,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(16),
+        );
+        let w = PackedWeight::from_quantized(&q);
+        let mut x = Matrix::randn(2, 39, 1.0, &mut rng);
+        for c in [0, 5, 36, 37, 38] {
+            x.data[c] = 0.0;
+            x.data[39 + c] = 0.0;
+        }
+        let seed = Matrix::zeros(2, 6);
+        let want = reference(&x, &w, &seed);
+        let mut got = seed.clone();
+        let mut deq = vec![0.0f32; 39];
+        packed_matmul_into(&x, &w, &mut got, &mut deq, 1);
+        assert_eq!(
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sharded_gemv_matches_single_thread() {
+        let mut rng = Rng::seeded(0x6E5);
+        let wm = Matrix::randn(21, 64, 0.05, &mut rng);
+        let q = quantize_weight_rtn(
+            &wm,
+            &WeightQuantConfig::new(NumericFormat::INT4).with_group_size(32),
+        );
+        let w = PackedWeight::from_quantized(&q);
+        let x = Matrix::randn(3, 64, 1.0, &mut rng);
+        let seed = Matrix::randn(3, 21, 0.1, &mut rng);
+        let mut solo = seed.clone();
+        let mut deq = vec![0.0f32; 64];
+        packed_matmul_into(&x, &w, &mut solo, &mut deq, 1);
+        for threads in [2usize, 3, 5, 64] {
+            let mut sharded = seed.clone();
+            packed_matmul_into(&x, &w, &mut sharded, &mut deq, threads);
+            assert_eq!(
+                solo.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                sharded.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+        // empty activation batch: a no-op on every thread count
+        let empty = Matrix::zeros(0, 64);
+        let mut empty_out = Matrix::zeros(0, 21);
+        packed_matmul_into(&empty, &w, &mut empty_out, &mut deq, 1);
+        packed_matmul_into(&empty, &w, &mut empty_out, &mut deq, 3);
+    }
+}

@@ -8,7 +8,7 @@ use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Arch, Checkpoint, ModelConfig, OutlierSpec};
 use zeroquant_fp::pipeline::{quantize_checkpoint, PtqConfig};
-use zeroquant_fp::quant::{ActQuantConfig, ScaleConstraint, Scheme};
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::rng::Rng;
 
 fn test_config(arch: Arch) -> ModelConfig {
@@ -103,20 +103,8 @@ fn outlier_injection_reproduces_table1_ordering() {
     inject_outliers(&mut ck, OutlierSpec::new(64.0), &mut rng);
     let toks = eval_tokens(&ck, 640);
     let p16 = perplexity(&ck, EngineOpts::default(), &toks, 32).ppl();
-    let p_int = perplexity(
-        &ck,
-        EngineOpts { act: ActQuantConfig::new(NumericFormat::INT8) },
-        &toks,
-        32,
-    )
-    .ppl();
-    let p_fp = perplexity(
-        &ck,
-        EngineOpts { act: ActQuantConfig::new(NumericFormat::FP8_E4M3) },
-        &toks,
-        32,
-    )
-    .ppl();
+    let p_int = perplexity(&ck, EngineOpts::with_act(NumericFormat::INT8), &toks, 32).ppl();
+    let p_fp = perplexity(&ck, EngineOpts::with_act(NumericFormat::FP8_E4M3), &toks, 32).ppl();
     let d_int = p_int - p16;
     let d_fp = p_fp - p16;
     assert!(

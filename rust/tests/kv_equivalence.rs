@@ -17,7 +17,6 @@ use zeroquant_fp::engine::EngineOpts;
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{CompiledModel, KvCache};
-use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::tensor::Matrix;
 
@@ -90,7 +89,7 @@ fn prefill_plus_decode_bit_identical_to_forward() {
         let mut rng = Rng::seeded(0xCACE + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
         for fmt in ACT_FORMATS {
-            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let opts = EngineOpts::with_act(fmt);
             let model = CompiledModel::compile(&ck, opts);
             let mut s = model.scratch();
             let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
@@ -119,7 +118,7 @@ fn chunked_prefill_matches_single_shot() {
         let mut rng = Rng::seeded(0xC0FFEE + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
         for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
-            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let opts = EngineOpts::with_act(fmt);
             let model = CompiledModel::compile(&ck, opts);
             let mut s = model.scratch();
             let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
@@ -212,7 +211,7 @@ fn batched_decode_bit_identical_to_solo_decode() {
         let cfg = tiny(arch);
         let mut rng = Rng::seeded(0xBA7C4 + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
-        let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::FP8_E4M3) };
+        let opts = EngineOpts::with_act(NumericFormat::FP8_E4M3);
         let model = CompiledModel::compile(&ck, opts);
         let mut s = model.scratch();
         // three sequences at different positions in their own windows

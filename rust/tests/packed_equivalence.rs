@@ -1,0 +1,198 @@
+//! The packed weight layout's correctness contract:
+//!
+//! 1. A [`CompiledModel`] compiled with `WeightLayout::Packed` produces
+//!    logits **bit-identical** to the dense fake-quant reference plan (and
+//!    therefore to the reference `Engine`) over the same quantized
+//!    checkpoint — across both architectures, FP4/INT4/8-bit weight
+//!    formats, every scale constraint (none/M1/M2), odd hidden dims
+//!    (trailing-nibble packing), RTN and GPTQ codes, and the KV-cached
+//!    decode path.
+//! 2. The packed plan's resident linear-weight bytes are ≤ 1/6 of the
+//!    dense f32 plan for W4 — the memory claim `packed_bytes()` used to
+//!    only account for.
+
+use zeroquant_fp::engine::Engine;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
+use zeroquant_fp::plan::CompiledModel;
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::rng::Rng;
+
+fn cfg(arch: Arch, name: &str, d: usize, heads: usize, ff: usize) -> ModelConfig {
+    ModelConfig {
+        name: format!("packed-{name}-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: d,
+        n_heads: heads,
+        n_layers: 2,
+        d_ff: ff,
+        max_seq: 12,
+    }
+}
+
+fn calib(n: usize, len: usize, vocab: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::seeded(0xCA11);
+    (0..n).map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect()).collect()
+}
+
+fn assert_bit_identical(
+    a: &zeroquant_fp::tensor::Matrix,
+    b: &zeroquant_fp::tensor::Matrix,
+    what: &str,
+) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} dense={x} packed={y}");
+    }
+}
+
+/// Quantize `ck` under `scheme`/`constraint`, then check packed-vs-dense
+/// bit-identity of full-window forwards (and the engine reference).
+fn check(ck: &Checkpoint, scheme: &str, constraint: ScaleConstraint, use_gptq: bool, what: &str) {
+    let mut cfg = PtqConfig::new(Scheme::parse(scheme).unwrap()).with_constraint(constraint);
+    cfg.group_size = 16; // several groups per row even at toy dims
+    cfg.use_gptq = use_gptq;
+    let seqs = calib(3, 8, ck.config.vocab_size);
+    let (qck, sidecar, _) = quantize_checkpoint_full(ck, &seqs, &cfg);
+    assert!(!sidecar.is_empty(), "{what}: sidecar missing");
+
+    let opts = cfg.engine_opts();
+    let dense = CompiledModel::compile(&qck, opts);
+    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+
+    let mut rng = Rng::seeded(0x7E57);
+    let mut ds = dense.scratch();
+    let mut ps = packed.scratch();
+    let vocab = ck.config.vocab_size;
+    for seq in [1usize, 5, ck.config.max_seq] {
+        let tokens: Vec<u16> = (0..seq).map(|_| rng.below(vocab) as u16).collect();
+        let want = dense.forward(&tokens, &mut ds).clone();
+        let got = packed.forward(&tokens, &mut ps);
+        assert_bit_identical(&want, got, &format!("{what} seq={seq}"));
+        // and the reference engine agrees (the plan_equivalence contract
+        // extended through the packed layout)
+        let reference = Engine::with_opts(&qck, opts).forward(&tokens);
+        assert_bit_identical(&reference, got, &format!("{what} seq={seq} vs engine"));
+    }
+}
+
+#[test]
+fn packed_plan_bit_identical_across_formats_and_constraints() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let mut rng = Rng::seeded(0x5EED + arch as u64);
+        let ck = Checkpoint::random(&cfg(arch, "even", 24, 3, 48), &mut rng);
+        for scheme in ["w4a8-fp-fp", "w4a8-int-int", "w4a16-fpe3m0", "w8a8-fp-fp", "w8a8-int-int"] {
+            for constraint in [
+                ScaleConstraint::None,
+                ScaleConstraint::M1,
+                ScaleConstraint::M2 { rows: 4 },
+            ] {
+                let what = format!("{arch:?} {scheme} {}", constraint.label());
+                check(&ck, scheme, constraint, false, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_plan_bit_identical_with_gptq_codes() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let mut rng = Rng::seeded(0x69 + arch as u64);
+        let ck = Checkpoint::random(&cfg(arch, "gptq", 24, 3, 48), &mut rng);
+        let what = format!("{arch:?} gptq");
+        check(&ck, "w4a8-fp-fp", ScaleConstraint::M2 { rows: 8 }, true, &what);
+    }
+}
+
+#[test]
+fn packed_plan_bit_identical_with_odd_dims() {
+    // d_model = 25 and d_ff = 49: every linear has an odd input dim, so
+    // each packed row ends on a trailing half-byte nibble.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let mut rng = Rng::seeded(0x0DD + arch as u64);
+        let ck = Checkpoint::random(&cfg(arch, "odd", 25, 5, 49), &mut rng);
+        for scheme in ["w4a8-fp-fp", "w4a8-int-int"] {
+            let what = format!("{arch:?} {scheme} odd-dims");
+            check(&ck, scheme, ScaleConstraint::M1, false, &what);
+        }
+    }
+}
+
+#[test]
+fn packed_decode_path_matches_dense_decode() {
+    // prefill + decode_step + decode_step_batch through the packed layout
+    // match the dense plan token for token, bit for bit.
+    let mut rng = Rng::seeded(0xDEC0);
+    let ck = Checkpoint::random(&cfg(Arch::Llama, "decode", 24, 3, 48), &mut rng);
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M2 { rows: 8 });
+    pcfg.use_gptq = false;
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
+    let opts = pcfg.engine_opts();
+    let dense = CompiledModel::compile(&qck, opts);
+    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+
+    let window: Vec<u16> = (0..10).map(|i| (i * 7 % 48) as u16).collect();
+    let mut ds = dense.scratch();
+    let mut ps = packed.scratch();
+    let mut dc = dense.kv_cache();
+    let mut pc = packed.kv_cache();
+    let a = dense.prefill(&window[..6], &mut dc, &mut ds).clone();
+    let b = packed.prefill(&window[..6], &mut pc, &mut ps);
+    assert_bit_identical(&a, b, "prefill");
+    for (t, &tok) in window[6..].iter().enumerate() {
+        let a = dense.decode_step(tok, &mut dc, &mut ds).clone();
+        let b = packed.decode_step(tok, &mut pc, &mut ps);
+        assert_bit_identical(&a, b, &format!("decode step {t}"));
+    }
+    // continuous batching: two sequences interleaved
+    let mut dcs = vec![dense.kv_cache(), dense.kv_cache()];
+    let mut pcs = vec![packed.kv_cache(), packed.kv_cache()];
+    for (c, p) in dcs.iter_mut().zip(pcs.iter_mut()) {
+        dense.prefill(&window[..3], c, &mut ds);
+        packed.prefill(&window[..3], p, &mut ps);
+    }
+    let a = dense.decode_step_batch(&[window[3], window[4]], &mut dcs, &mut ds).clone();
+    let b = packed.decode_step_batch(&[window[3], window[4]], &mut pcs, &mut ps);
+    assert_bit_identical(&a, b, "batched decode");
+}
+
+#[test]
+fn sharded_packed_plan_matches_inline() {
+    let mut rng = Rng::seeded(0x54A2);
+    let ck = Checkpoint::random(&cfg(Arch::Opt, "shard", 24, 3, 48), &mut rng);
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
+    pcfg.use_gptq = false;
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
+    let opts = pcfg.engine_opts();
+    let solo = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let sharded = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(3));
+    let tokens: Vec<u16> = (0..8).map(|i| (i * 5 % 48) as u16).collect();
+    assert_bit_identical(
+        &solo.forward_alloc(&tokens),
+        &sharded.forward_alloc(&tokens),
+        "threads=3",
+    );
+}
+
+#[test]
+fn packed_w4_weights_fit_in_a_sixth_of_dense() {
+    // Big enough dims that per-group scale overhead is amortized the way
+    // real models amortize it (group 64 ⇒ one f32 scale per 64 codes).
+    let mut rng = Rng::seeded(0x512E);
+    let ck = Checkpoint::random(&cfg(Arch::Opt, "mem", 64, 4, 128), &mut rng);
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
+    pcfg.group_size = 64;
+    pcfg.use_gptq = false;
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
+    let opts = pcfg.engine_opts();
+    let dense = CompiledModel::compile(&qck, opts);
+    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let (db, pb) = (dense.linear_weight_bytes(), packed.linear_weight_bytes());
+    assert!(pb > 0 && db > 0);
+    assert!(
+        pb * 6 <= db,
+        "packed linear weights {pb} B must be ≤ 1/6 of dense {db} B"
+    );
+}

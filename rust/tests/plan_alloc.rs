@@ -2,7 +2,10 @@
 //! allocations — asserted with a counting global allocator. Covers both
 //! execution shapes: full-window `forward` scoring, and the KV-cached
 //! serving loop (`reset` → `prefill` → `decode_step`/`decode_step_batch`)
-//! once the arena, the caches and the cache pool are warm.
+//! once the arena, the caches and the cache pool are warm — for the dense
+//! f32 weight layout **and** the bit-packed layout (whose fused GEMV
+//! decodes weight rows into the arena's strip; `threads == 1`, the
+//! threaded shard path spawns by design).
 //!
 //! This file holds exactly one test: the allocation counter is global, so
 //! any concurrently running test in the same binary would pollute it.
@@ -13,8 +16,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use zeroquant_fp::engine::EngineOpts;
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
-use zeroquant_fp::quant::ActQuantConfig;
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::rng::Rng;
 
 static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
@@ -66,7 +70,7 @@ fn steady_state_decode_is_allocation_free() {
         };
         let mut rng = Rng::seeded(0xA110C);
         let ck = Checkpoint::random(&cfg, &mut rng);
-        let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+        let opts = EngineOpts::with_act(fmt);
         let model = CompiledModel::compile(&ck, opts);
         let mut scratch = model.scratch();
         let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
@@ -127,4 +131,69 @@ fn steady_state_decode_is_allocation_free() {
             fmt.name()
         );
     }
+
+    // ---- the packed weight layout: same contract, decoded weights ------
+    // Quantize (RTN) to get codes, compile the packed plan, and require
+    // the identical zero-allocation steady state for full-window forwards
+    // and the KV-cached serving loop.
+    let cfg = ModelConfig {
+        name: "alloc-test-packed".into(),
+        arch: Arch::Llama,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 16,
+    };
+    let mut rng = Rng::seeded(0xA110D);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M2 { rows: 8 });
+    pcfg.use_gptq = false; // RTN needs no calibration passes
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
+    let model = CompiledModel::compile_quantized(&qck, &sidecar, pcfg.engine_opts().packed(1));
+    let mut scratch = model.scratch();
+    let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
+    let short: Vec<u16> = long[..5].to_vec();
+
+    std::hint::black_box(model.forward(&long, &mut scratch));
+    std::hint::black_box(model.forward(&short, &mut scratch));
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..8 {
+        std::hint::black_box(model.forward(&long, &mut scratch));
+        std::hint::black_box(model.forward(&short, &mut scratch));
+        std::hint::black_box(model.score_nll(&long, &mut scratch));
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "packed steady-state decode allocated");
+
+    let mut cache = model.kv_cache();
+    let mut caches = vec![model.kv_cache(), model.kv_cache()];
+    let prompt = &long[..6];
+    let gen = &long[6..10];
+    let toks = [long[0], long[1]];
+    let mut serve_pass = |cache: &mut zeroquant_fp::plan::KvCache,
+                          caches: &mut Vec<zeroquant_fp::plan::KvCache>,
+                          scratch: &mut zeroquant_fp::plan::DecodeScratch| {
+        cache.reset();
+        std::hint::black_box(model.prefill(prompt, cache, scratch));
+        for &t in gen {
+            std::hint::black_box(model.decode_step(t, cache, scratch));
+        }
+        for c in caches.iter_mut() {
+            c.reset();
+            std::hint::black_box(model.prefill(&prompt[..3], c, scratch));
+        }
+        for _ in 0..3 {
+            std::hint::black_box(model.decode_step_batch(&toks, caches, scratch));
+        }
+    };
+    serve_pass(&mut cache, &mut caches, &mut scratch); // warm
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..6 {
+        serve_pass(&mut cache, &mut caches, &mut scratch);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "packed kv serving loop allocated");
 }

@@ -11,7 +11,6 @@ use zeroquant_fp::engine::{Engine, EngineOpts, Site};
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{CompiledModel, FpQuantLut};
-use zeroquant_fp::quant::ActQuantConfig;
 use zeroquant_fp::rng::Rng;
 
 fn tiny(arch: Arch) -> ModelConfig {
@@ -56,7 +55,7 @@ fn compiled_logits_bit_identical_across_arch_format_seqlen() {
         let mut rng = Rng::seeded(0x5EED + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
         for fmt in ACT_FORMATS {
-            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let opts = EngineOpts::with_act(fmt);
             let engine = Engine::with_opts(&ck, opts);
             let model = CompiledModel::compile(&ck, opts);
             let mut scratch = model.scratch();
@@ -88,7 +87,7 @@ fn compiled_logits_bit_identical_with_injected_outliers() {
             &mut rng,
         );
         for fmt in [NumericFormat::FP8_E4M3, NumericFormat::INT8] {
-            let opts = EngineOpts { act: ActQuantConfig::new(fmt) };
+            let opts = EngineOpts::with_act(fmt);
             let tokens: Vec<u16> =
                 (0..cfg.max_seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
             let reference = Engine::with_opts(&ck, opts).forward(&tokens);
@@ -223,7 +222,10 @@ fn tokenwise_lut_path_matches_reference_quantizer() {
             let mut a: Vec<f32> = (0..96).map(|_| rng.normal_f32() * 2.0).collect();
             a[17] = 40.0 * rng.normal_f32(); // outlier channel
             let mut m_ref = zeroquant_fp::tensor::Matrix::from_vec(1, 96, a.clone());
-            zeroquant_fp::quant::fake_quant_tokenwise(&mut m_ref, &ActQuantConfig::new(fmt));
+            zeroquant_fp::quant::fake_quant_tokenwise(
+                &mut m_ref,
+                &zeroquant_fp::quant::ActQuantConfig::new(fmt),
+            );
             let mut b = a;
             lut.fake_quant_row(&mut b);
             for (x, y) in m_ref.data.iter().zip(&b) {

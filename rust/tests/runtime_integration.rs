@@ -38,7 +38,7 @@ fn hlo_scorer_batching_invariance() {
     let cfg = runtime::selfcheck_config();
     let mut rng = Rng::seeded(31337);
     let ck = Checkpoint::random(&cfg, &mut rng);
-    let opts = EngineOpts { act: ActQuantConfig::new(NumericFormat::F16) };
+    let opts = EngineOpts::with_act(NumericFormat::F16);
     let path = dir.join("score_selfcheck_a16.hlo.txt");
     let scorer = runtime::HloScorer::load(&path, 2, cfg.max_seq).unwrap();
     let weights = scorer.upload_weights(&ck).unwrap();
@@ -140,6 +140,7 @@ fn coordinator_serves_batches() {
         opts: EngineOpts::default(),
         policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
         kv_quant: None,
+        sidecar: None,
     });
     let mut handles = Vec::new();
     for c in 0..3 {
