@@ -7,7 +7,8 @@
 //!     → Rust serving coordinator (dynamic batcher) — L3 request path
 //!     → batched scoring requests from concurrent clients
 //!     → continuous-batching generation (prefill + KV-cached decode_step,
-//!       sequences joining and leaving mid-flight)
+//!       sequences joining and leaving mid-flight) served from the
+//!       bit-packed W4 plan with the LoRC factors riding along as codes
 //!
 //! Reports quality (bit-identity of the compiled plan vs the reference
 //! engine, plus PJRT parity within 0.2% when artifacts are present),
@@ -32,7 +33,7 @@ use zeroquant_fp::engine::Engine;
 use zeroquant_fp::error::Result;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
-use zeroquant_fp::pipeline::{quantize_checkpoint, PtqConfig};
+use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::logits_nll;
 use zeroquant_fp::plan::{argmax, CompiledModel};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
@@ -84,7 +85,7 @@ fn main() -> Result<()> {
     };
     println!("[1/5] quantizing {} under {} ...", cfg.name, pcfg.scheme.name());
     let t0 = Instant::now();
-    let (qck, report) = quantize_checkpoint(&ck, &calib, &pcfg);
+    let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &calib, &pcfg);
     println!(
         "      {} tensors in {:.1}s, {:.2}x compression ({} -> {} bytes)",
         report.layers.len(),
@@ -221,7 +222,7 @@ fn main() -> Result<()> {
     }
     println!(
         "[4/5] continuous-batching generation: {n_gen} requests, {prompt_len}-token \
-         prompts, {gen_new} new tokens each ..."
+         prompts, {gen_new} new tokens each (packed W4 + LoRC plan) ..."
     );
     // direct greedy decode of the first prompt — the coordinator must
     // reproduce it token for token (same compiled plan, same argmax)
@@ -236,16 +237,21 @@ fn main() -> Result<()> {
         }
         out
     };
+    // Serve generation from the bit-packed layout with the LoRC factors
+    // riding along as codes — the paper's best small-model configuration
+    // (W4A8+LoRC) at packed-memory footprint. The greedy-parity assert
+    // below still checks against the *dense* plan's direct decode: the
+    // packed+LoRC plan is bit-identical to it, so the tokens must match.
     let gen_coord = Coordinator::new(CoordinatorConfig {
         backend: ScoreBackend::Compiled,
         ck: qck_gen,
-        opts,
+        opts: opts.packed(1),
         policy: BatchPolicy {
             max_batch: zeroquant_fp::runtime::SCORE_BATCH,
             max_wait: Duration::ZERO,
         },
         kv_quant: None,
-        sidecar: None,
+        sidecar: Some(sidecar),
     });
     let mut gen_handles = Vec::new();
     for c in 0..3usize {

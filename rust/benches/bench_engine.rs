@@ -12,6 +12,7 @@ use std::path::Path;
 use zeroquant_fp::bench_harness::Bench;
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
@@ -108,6 +109,46 @@ fn main() {
             "packed plan diverged from the f32 plan"
         );
         println!("packed bit-identity check: OK");
+    }
+
+    // ---- packed W4 + LoRC: factor bytes + the compensation's fwd cost ----
+    // (rank-8 FP8 factors riding along the packed codes; the GEMV folds
+    // the rank-r error into each decoded row, bit-identical to the dense
+    // plan over the LoRC-folded checkpoint)
+    println!("\n-- packed W4 + LoRC (rank 8, FP8 factors) --");
+    let lorc_pcfg = pcfg
+        .clone()
+        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 });
+    let (lqck, lsidecar, lreport) = quantize_checkpoint_full(&ck, &[], &lorc_pcfg);
+    let dense_l = CompiledModel::compile(&lqck, qopts);
+    let packed_l = CompiledModel::compile_quantized(&lqck, &lsidecar, qopts.packed(1));
+    let lorc_factor_bytes: usize = lreport.layers.iter().map(|l| l.lorc_bytes).sum();
+    bench.note("packed+lorc plan linear weight bytes", packed_l.linear_weight_bytes() as f64);
+    bench.note("lorc factor bytes (rank 8 fp8)", lorc_factor_bytes as f64);
+    bench.note(
+        "packed+lorc/f32 weight bytes ratio",
+        packed_l.linear_weight_bytes() as f64 / dense_l.linear_weight_bytes().max(1) as f64,
+    );
+    {
+        let mut ps = packed_l.scratch();
+        bench.run("compiled fwd w4a8 packed-lorc-plan", seq as f64, "tok", || {
+            std::hint::black_box(packed_l.forward(&window, &mut ps));
+        });
+        if let Some(sp) =
+            bench.speedup("compiled fwd w4a8 packed-lorc-plan", "compiled fwd w4a8 packed-plan")
+        {
+            println!("lorc-on vs lorc-off packed fwd: {sp:.2}x");
+        }
+        // packed+LoRC logits must match the dense plan over the folded
+        // effective checkpoint bit-for-bit
+        let mut ds = dense_l.scratch();
+        let a = dense_l.forward(&window, &mut ds).clone();
+        let b = packed_l.forward(&window, &mut ps);
+        assert!(
+            a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "packed+lorc plan diverged from the folded f32 plan"
+        );
+        println!("packed+lorc bit-identity check: OK");
     }
 
     // sanity: compiled logits must match the reference bit-for-bit

@@ -26,6 +26,7 @@ use zeroquant_fp::coordinator::{
 };
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
@@ -237,6 +238,51 @@ fn main() {
     }
     if let Some(sp) = bench.speedup("w4a8 decode B=4 (packed-plan)", "w4a8 decode B=4 (f32-plan)") {
         println!("   packed vs f32 plan decode: {sp:.2}x");
+    }
+
+    // ---- packed W4A8 + LoRC: the compensation's decode cost ---------------
+    // LoRC-on vs LoRC-off on the same packed layout. The GEMV materializes
+    // each weight row's rank-r error in the fold's accumulation order (the
+    // price of bit-identity with the dense effective checkpoint — see
+    // ARCHITECTURE.md §LoRC runtime path), so decode pays ~rank extra MACs
+    // per weight; this section records how that lands in tokens/s, plus
+    // the factor-byte overhead, in the JSON artifact.
+    println!("\n-- packed W4A8 + LoRC (rank 8, FP8 factors): decode cost of compensation --");
+    let lorc_pcfg = pcfg
+        .clone()
+        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 });
+    let (lqck, lsidecar, lreport) = quantize_checkpoint_full(&ck, &[], &lorc_pcfg);
+    let packed_lorc = CompiledModel::compile_quantized(&lqck, &lsidecar, qopts.packed(1));
+    let lorc_factor_bytes: usize = lreport.layers.iter().map(|l| l.lorc_bytes).sum();
+    bench.note("packed+lorc plan linear weight bytes", packed_lorc.linear_weight_bytes() as f64);
+    bench.note("lorc factor bytes (rank 8 fp8)", lorc_factor_bytes as f64);
+    {
+        let mut qscratch = packed_lorc.scratch();
+        let mut caches: Vec<KvCache> = (0..4).map(|_| packed_lorc.kv_cache()).collect();
+        let mut toks: Vec<u16> = vec![0; 4];
+        bench.run("w4a8 decode B=4 (packed-lorc-plan)", (4 * 48) as f64, "tok", || {
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.reset();
+                packed_lorc.prefill(&windows[i][..16], c, &mut qscratch);
+            }
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = windows[i][16];
+            }
+            for _ in 0..48 {
+                let logits = packed_lorc.decode_step_batch(&toks, &mut caches, &mut qscratch);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(logits.row(i)) as u16;
+                }
+            }
+        });
+    }
+    if let Some(sp) =
+        bench.speedup("w4a8 decode B=4 (packed-lorc-plan)", "w4a8 decode B=4 (packed-plan)")
+    {
+        println!(
+            "   lorc-on vs lorc-off packed decode: {sp:.2}x ({} factor B on top of packed codes)",
+            lorc_factor_bytes
+        );
     }
 
     // ---- the same curve end to end: coordinator continuous batching -------

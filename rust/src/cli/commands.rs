@@ -77,6 +77,13 @@ pub fn load_ckpt_with_alpha(path: &Path, alpha: f32) -> Result<Checkpoint, Strin
     Ok(ck)
 }
 
+/// The one wording of the `--packed`-without-codes rejection, shared by
+/// `zqfp eval` and `zqfp serve` so the restriction lives (and is tested)
+/// in exactly one place. Only W16 trips it now — LoRC runs keep their
+/// codes (+ factors) in the sidecar and serve packed.
+pub const PACKED_NEEDS_CODES: &str =
+    "--packed needs quantized codes: pick a quantized --scheme (W16 leaves nothing to pack)";
+
 /// Shared: build a PtqConfig from CLI flags.
 pub fn ptq_config_from_args(args: &Args, scheme: Scheme) -> Result<PtqConfig, String> {
     let mut cfg = PtqConfig::new(scheme);
@@ -88,12 +95,39 @@ pub fn ptq_config_from_args(args: &Args, scheme: Scheme) -> Result<PtqConfig, St
             ScaleConstraint::parse(&c).ok_or(format!("bad --constraint {c}"))?;
     }
     if args.flag("lorc") {
-        cfg.lorc = Some(LorcConfig {
-            rank: args.get_usize("rank", 8)?,
-            factor_format: NumericFormat::FP8_E4M3,
-        });
+        // a valueless `--lorc-rank`/`--lorc-format`/`--rank` would
+        // silently fall back to the default (Args stores a sentinel `get`
+        // reports as absent) — reject instead of guessing
+        for knob in ["lorc-rank", "lorc-format", "rank"] {
+            if args.flag(knob) && args.get(knob).is_none() {
+                return Err(format!("--{knob} needs a value"));
+            }
+        }
+        // --rank is the historical spelling; --lorc-rank wins when both
+        // are given.
+        let rank = args.get_usize("lorc-rank", args.get_usize("rank", 8)?)?;
+        if rank == 0 {
+            return Err("--lorc-rank must be at least 1".to_string());
+        }
+        let fmt_s = args.get_or("lorc-format", "fp8-e4m3");
+        let factor_format = match NumericFormat::parse(&fmt_s) {
+            Some(f @ (NumericFormat::F16 | NumericFormat::Fp(_))) => f,
+            Some(_) => {
+                return Err(format!(
+                    "--lorc-format: factors are stored FP or F16, not integer: {fmt_s}"
+                ))
+            }
+            None => return Err(format!("bad --lorc-format {fmt_s}")),
+        };
+        cfg.lorc = Some(LorcConfig { rank, factor_format });
     } else {
-        let _ = args.get_usize("rank", 8)?; // consume
+        let _ = args.get_usize("rank", 8)?; // historical knob: consumed leniently
+        // the new knobs without --lorc are almost certainly a dropped flag —
+        // silently serving without compensation would be a quality surprise.
+        // (`flag`, not `get`: a valueless knob must trip this too.)
+        if args.flag("lorc-rank") || args.flag("lorc-format") {
+            return Err("--lorc-rank/--lorc-format have no effect without --lorc".to_string());
+        }
     }
     Ok(cfg)
 }
@@ -175,16 +209,14 @@ pub fn eval(args: &Args) -> Result<(), String> {
             return Err("--packed runs in-process; drop --runtime hlo".to_string());
         }
         if sidecar.is_empty() {
-            return Err(
-                "--packed needs quantized codes: pass a quantized --scheme and drop --lorc"
-                    .to_string(),
-            );
+            return Err(PACKED_NEEDS_CODES.to_string());
         }
         opts = opts.packed(gemv_threads);
         let model = crate::plan::CompiledModel::compile_quantized(&ck, &sidecar, opts);
         println!(
-            "packed plan: {} B of linear weights ({} gemv threads)",
+            "packed plan: {} B of linear weights{} ({} gemv threads)",
             model.linear_weight_bytes(),
+            if sidecar.has_lorc() { " incl. LoRC factors" } else { "" },
             opts.weights.threads()
         );
         Some(model)
@@ -251,5 +283,39 @@ mod tests {
             ptq_config_from_args(&dflt, scheme).unwrap().constraint,
             ScaleConstraint::M2 { rows: 32 }
         );
+    }
+
+    #[test]
+    fn lorc_rank_and_format_thread_through_cli() {
+        let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
+        let args =
+            Args::parse(&argv(&["--lorc", "--lorc-rank", "16", "--lorc-format", "f16"])).unwrap();
+        let l = ptq_config_from_args(&args, scheme).unwrap().lorc.unwrap();
+        assert_eq!(l.rank, 16);
+        assert!(matches!(l.factor_format, NumericFormat::F16));
+        // the historical --rank spelling still works (and FP8 E4M3 stays
+        // the default factor format)
+        let args = Args::parse(&argv(&["--lorc", "--rank", "4"])).unwrap();
+        let l = ptq_config_from_args(&args, scheme).unwrap().lorc.unwrap();
+        assert_eq!(l.rank, 4);
+        assert_eq!(l.factor_format, NumericFormat::FP8_E4M3);
+        // integer factor formats and rank 0 are rejected
+        let bad = Args::parse(&argv(&["--lorc", "--lorc-format", "int8"])).unwrap();
+        assert!(ptq_config_from_args(&bad, scheme).is_err());
+        let bad = Args::parse(&argv(&["--lorc", "--lorc-rank", "0"])).unwrap();
+        assert!(ptq_config_from_args(&bad, scheme).is_err());
+        // LoRC knobs without --lorc are a dropped-flag mistake, not a no-op
+        // — with a value or bare (the bare form parses as a sentinel flag)
+        let off = Args::parse(&argv(&["--lorc-rank", "4"])).unwrap();
+        assert!(ptq_config_from_args(&off, scheme).is_err());
+        let bare = Args::parse(&argv(&["--lorc-format"])).unwrap();
+        assert!(ptq_config_from_args(&bare, scheme).is_err());
+        // a valueless knob under --lorc is rejected, not defaulted
+        let noval = Args::parse(&argv(&["--lorc", "--lorc-rank"])).unwrap();
+        assert!(ptq_config_from_args(&noval, scheme).is_err());
+        // ...but the bare run (no LoRC flags at all) stays clean
+        let none = Args::parse(&argv(&[])).unwrap();
+        assert!(ptq_config_from_args(&none, scheme).unwrap().lorc.is_none());
+        assert!(none.finish().is_ok());
     }
 }

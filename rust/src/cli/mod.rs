@@ -15,13 +15,15 @@ commands:
                write synthetic train/calib/eval token streams (.tok)
   info         --ckpt m.zqckpt           inspect a checkpoint
   quantize     --ckpt m.zqckpt --scheme w4a8-fp-fp --out q.zqckpt
-               [--lorc [--rank N]] [--constraint none|m1|m2|m2:<rows>]
+               [--lorc [--lorc-rank N] [--lorc-format fp8|e5m2|f16]]
+               [--constraint none|m1|m2|m2:<rows>]
                [--group N] [--rtn] [--cast] [--alpha A] [--data data/]
   eval         --ckpt m.zqckpt [--scheme ...] [--corpus wiki|ptb|c4|all]
                [--data data/] [--seq N] [--max-tokens N] [--alpha A]
                [--runtime hlo|engine] [--artifacts artifacts/]
                [--packed [--gemv-threads N]] evaluate through the
-               bit-packed weight plan (same bits, ~1/7 the weight bytes)
+               bit-packed weight plan (same bits, ~1/7 the weight bytes;
+               composes with --lorc — factors ride along as codes)
   table        --id 1|2|3|a1 [--data data/] [--ckpt-dir ckpt/] [--fast]
                [--runtime hlo|engine] regenerate a paper table
   figure       --id 1|2 [--ckpt m.zqckpt] regenerate a paper figure
@@ -31,6 +33,7 @@ commands:
                compiled engine); with --generate N [--kv-cache e4m3|e5m2]
                serves continuous-batching KV-cached generation instead;
                --packed [--gemv-threads N] serves from bit-packed weights
+               (composes with --lorc: W4A8+LoRC at packed footprint)
   selfcheck    cross-check rust engine vs PJRT HLO on a tiny model
 ";
 

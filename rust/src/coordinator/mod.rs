@@ -197,9 +197,10 @@ pub struct CoordinatorConfig {
     /// applied to the dominant serving memory stream). `None` = exact f32
     /// caches, bit-identical to full recompute.
     pub kv_quant: Option<FpFormat>,
-    /// Quantized-code sidecar of the PTQ run
-    /// ([`crate::pipeline::quantize_checkpoint_full`]) — required when
-    /// `opts.weights` selects the packed layout; ignored otherwise.
+    /// Quantized-artifact sidecar of the PTQ run (codes + optional LoRC
+    /// factors per linear, [`crate::pipeline::quantize_checkpoint_full`])
+    /// — required when `opts.weights` selects the packed layout; ignored
+    /// otherwise.
     pub sidecar: Option<crate::quant::QuantSidecar>,
 }
 
@@ -330,7 +331,7 @@ impl Coordinator {
 
     /// The compiled backend: immediate scoring plus continuous-batching
     /// generation (see the module docs for the loop shape).
-    fn run_compiled(self) -> Result<ServeReport> {
+    fn run_compiled(mut self) -> Result<ServeReport> {
         // Compile once; every request then decodes through the prepacked
         // plan with zero steady-state allocations in the model itself.
         // The packed weight layout compiles from the quantized-code
@@ -344,6 +345,15 @@ impl Coordinator {
             })?;
             CompiledModel::compile_quantized(&self.cfg.ck, sidecar, self.cfg.opts)
         };
+        // The plan owns copies of everything it serves (prepacked or
+        // bit-packed weights, factor codes, embeddings, norms). Free the
+        // PTQ artifacts for the serving run's lifetime: the sidecar
+        // (codes + dense f32 LoRC factor matrices) and the checkpoint's
+        // dense tensors — the latter dominate resident memory on a packed
+        // run and would otherwise defeat the packed footprint. Only
+        // `ck.config` is read below.
+        self.cfg.sidecar = None;
+        self.cfg.ck.tensors.clear();
         let mut scratch = model.scratch();
         let vocab = self.cfg.ck.config.vocab_size;
         let max_seq = self.cfg.ck.config.max_seq;
@@ -518,8 +528,12 @@ impl Coordinator {
 /// backend) instead of window scoring; `--kv-cache e4m3|e5m2` additionally
 /// stores the generation K/V caches in that FP8 format. `--packed` serves
 /// from the bit-packed weight layout (compiled backend; bit-identical
-/// logits, ~1/7 the resident weight bytes for W4), and `--gemv-threads N`
-/// shards the packed GEMV rows across N workers.
+/// logits, ~1/7 the resident weight bytes for W4), composable with
+/// `--lorc [--lorc-rank N] [--lorc-format fp8|f16]` — the low-rank
+/// compensation factors ride along as codes and the GEMV folds them into
+/// each decoded row, so W4A8+LoRC (the paper's best small-model recipe)
+/// serves at packed-memory footprint. `--gemv-threads N` shards the
+/// packed GEMV rows across N workers.
 pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -559,10 +573,7 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let mut opts = cfg.engine_opts();
     if packed {
         if sidecar.is_empty() {
-            return Err(
-                "--packed needs quantized codes: pick a quantized --scheme and drop --lorc"
-                    .to_string(),
-            );
+            return Err(crate::cli::commands::PACKED_NEEDS_CODES.to_string());
         }
         opts = opts.packed(gemv_threads);
     }
@@ -592,6 +603,17 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             dense_b as f64 / report.quant_bytes.max(1) as f64,
             gemv_threads.max(1),
         );
+        if cfg.lorc.is_some() {
+            let lorc_b: usize = report.layers.iter().map(|l| l.lorc_bytes).sum();
+            // quant_bytes already includes the factors — subtract them so
+            // the printed ratio is factors : codes, as labeled
+            let code_b = report.quant_bytes.saturating_sub(lorc_b);
+            println!(
+                "  lorc: factors ride along packed ({} B, +{:.1}% on the packed code bytes)",
+                lorc_b,
+                100.0 * lorc_b as f64 / code_b.max(1) as f64
+            );
+        }
     }
 
     // workload: eval windows from the C4 surrogate
@@ -874,6 +896,45 @@ mod tests {
         assert!(client.generate(vec![1, 200], 2).is_err(), "token out of vocab");
         drop(client);
         coord.run().unwrap();
+    }
+
+    #[test]
+    fn packed_lorc_generation_matches_dense_generation() {
+        // the tentpole's serving-level contract: a coordinator serving from
+        // the packed layout with LoRC factors attached generates exactly
+        // the tokens the dense (folded-checkpoint) coordinator generates
+        use crate::lorc::LorcConfig;
+        use crate::pipeline::PtqConfig;
+        use crate::quant::QuantSidecar;
+
+        let ck = tiny_ck();
+        let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+            .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
+        pcfg.use_gptq = false;
+        let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
+        assert!(!sidecar.is_empty() && sidecar.has_lorc());
+        let opts = pcfg.engine_opts();
+        let prompt: Vec<u16> = vec![3, 14, 15];
+
+        let run = |opts: EngineOpts, sidecar: Option<QuantSidecar>| -> Vec<u16> {
+            let coord = Coordinator::new(CoordinatorConfig {
+                backend: ScoreBackend::Compiled,
+                ck: qck.clone(),
+                opts,
+                policy: BatchPolicy::default(),
+                kv_quant: None,
+                sidecar,
+            });
+            let client = coord.gen_client();
+            let p = prompt.clone();
+            let h = std::thread::spawn(move || client.generate(p, 4).unwrap());
+            coord.run().unwrap();
+            h.join().unwrap().tokens
+        };
+        let dense = run(opts, None);
+        let packed = run(opts.packed(1), Some(sidecar));
+        assert_eq!(dense, packed);
+        assert_eq!(dense.len(), 4);
     }
 
     #[test]

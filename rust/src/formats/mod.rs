@@ -153,6 +153,28 @@ impl NumericFormat {
         }
     }
 
+    /// The group params the dynamic (absmax) path derives for a symmetric
+    /// format over `xs`, without quantizing anything: one fused absmax
+    /// scan, then [`group_params`](Self::group_params). `None` when the
+    /// scan degenerates (non-finite absmax), in which case the dynamic
+    /// quantizer leaves the data untouched.
+    ///
+    /// This is the **single** definition of that derivation — both
+    /// [`fake_quant_slice_dynamic`](Self::fake_quant_slice_dynamic) and
+    /// the LoRC factor-code encoder (`crate::lorc`) go through it, which
+    /// is what keeps factor codes bit-equal to the fake-quant fold.
+    pub fn dynamic_symmetric_params(&self, xs: &[f32]) -> Option<GroupParams> {
+        debug_assert!(self.is_symmetric());
+        let mut am = 0.0f32;
+        for &x in xs.iter() {
+            am = am.max(x.abs());
+        }
+        if !am.is_finite() {
+            return None;
+        }
+        Some(self.group_params(-am, am))
+    }
+
     /// Absmax-style one-shot fake quantization of a slice: compute params
     /// from the slice itself, then quantize. Returns the params used.
     ///
@@ -163,14 +185,10 @@ impl NumericFormat {
     /// a non-finite range degenerates to the identity params.
     pub fn fake_quant_slice_dynamic(&self, xs: &mut [f32]) -> GroupParams {
         let p = if self.is_symmetric() {
-            let mut am = 0.0f32;
-            for &x in xs.iter() {
-                am = am.max(x.abs());
+            match self.dynamic_symmetric_params(xs) {
+                Some(p) => p,
+                None => return GroupParams::IDENTITY,
             }
-            if !am.is_finite() {
-                return GroupParams::IDENTITY;
-            }
-            self.group_params(-am, am)
         } else {
             let (mut mn, mut mx) = (f32::INFINITY, f32::NEG_INFINITY);
             for &x in xs.iter() {

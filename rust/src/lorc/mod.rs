@@ -13,8 +13,28 @@
 //! especially its low-rank structure — is recovered. The paper finds LoRC
 //! most effective for smaller models and for mitigating the loss from scale
 //! constraints (Tables 2 & 3).
+//!
+//! Two representations live here:
+//!
+//! * [`LorcFactors`] — the PTQ-time container: the fake-quantized f32
+//!   factor matrices (what the pipeline folds into the *effective*
+//!   checkpoint for the reference engine) **plus** the true low-bit codes
+//!   they decode from. For ≤ 8-bit FP factor formats the codes are the
+//!   storage (`value == format.decode(code) · scale` bit-for-bit, by
+//!   construction); `F16` factors stay unquantized f32, matching the fold.
+//! * [`PackedLorc`] — the serving-time representation the packed execution
+//!   plan attaches to each linear: codes + per-tensor scales only (the
+//!   dense f32 matrices are dropped), with the fused q|k|v / gate|up
+//!   stacking of the compiled plan (per-sub-tensor E₁ blocks row-stacked,
+//!   per-sub-tensor E₂ kept separate), and the two runtime applications —
+//!   the exact per-weight-row error materialization the fused GEMV uses
+//!   ([`PackedLorc::err_row_into`], bit-identical to the pipeline fold)
+//!   and the cheap activation-side `acc += E₁·(E₂·x)`
+//!   ([`PackedLorc::apply_into`]). See the module docs of
+//!   [`crate::tensor::packed_matmul`] and ARCHITECTURE.md §LoRC runtime
+//!   path for why the serving path uses the former.
 
-use crate::formats::NumericFormat;
+use crate::formats::{FpFormat, NumericFormat};
 use crate::linalg::{jacobi_svd, truncate_svd, LinalgError};
 use crate::tensor::Matrix;
 
@@ -35,14 +55,68 @@ impl Default for LorcConfig {
     }
 }
 
+/// The code-level storage of one factor matrix: one byte per element plus a
+/// per-tensor scale, produced when the factor format is an FP format of at
+/// most 8 code bits. `None` means the f32 values are the storage (the `F16`
+/// passthrough, non-FP formats, and the degenerate non-finite-absmax case).
+#[derive(Debug, Clone)]
+struct FactorCodes {
+    fmt: FpFormat,
+    codes: Vec<u8>,
+    scale: f32,
+}
+
+/// Quantize `data` in place to `fmt` under a per-tensor absmax scale,
+/// returning the codes. The written values satisfy
+/// `data[i] == fmt.decode(codes[i]) · scale` **bit-for-bit**, and are
+/// bit-identical to `NumericFormat::fake_quant_slice_dynamic` over the same
+/// slice (same absmax scan, same scale derivation, and
+/// `decode(encode(y)) == quantize(y)` for every finite `y` — `encode`
+/// computes `quantize` and the roundtrip is exact on representable values).
+fn encode_factor(fmt: FpFormat, data: &mut [f32]) -> Option<FactorCodes> {
+    if fmt.total_bits() > 8 {
+        return None; // wider-than-byte codes: keep the f32 values
+    }
+    // The one shared absmax-scan/scale derivation (formats/mod.rs) — the
+    // same params fake_quant_slice_dynamic would use, so the codes decode
+    // to exactly the values the pipeline folds. None = degenerate tensor,
+    // which the dynamic path leaves untouched.
+    let scale = NumericFormat::Fp(fmt).dynamic_symmetric_params(data)?.scale;
+    if scale == 0.0 || !scale.is_finite() {
+        // subnormal/degenerate absmax: the division-based codec misbehaves
+        // identically on both paths — keep the historical fake-quant one
+        return None;
+    }
+    let mut codes = Vec::with_capacity(data.len());
+    for x in data.iter_mut() {
+        let code = fmt.encode(*x / scale);
+        codes.push(code as u8);
+        *x = fmt.decode(code) * scale;
+    }
+    Some(FactorCodes { fmt, codes, scale })
+}
+
+impl FactorCodes {
+    /// Decode element `i` — bit-identical to the fake-quantized f32 value
+    /// the pipeline folded (see [`encode_factor`]).
+    #[inline]
+    fn get(&self, i: usize) -> f32 {
+        self.fmt.decode(self.codes[i] as u16) * self.scale
+    }
+}
+
 /// The stored low-rank compensation factors for one layer.
 #[derive(Debug, Clone)]
 pub struct LorcFactors {
-    /// `[out, r]`
+    /// `[out, r]`, fake-quantized to `format`.
     pub e1: Matrix,
-    /// `[r, in]`
+    /// `[r, in]`, fake-quantized to `format`.
     pub e2: Matrix,
     pub format: NumericFormat,
+    /// True low-bit codes of `e1` (present for ≤ 8-bit FP formats).
+    e1_codes: Option<FactorCodes>,
+    /// True low-bit codes of `e2`.
+    e2_codes: Option<FactorCodes>,
 }
 
 impl LorcFactors {
@@ -56,12 +130,35 @@ impl LorcFactors {
         let svd = jacobi_svd(&err)?;
         let (mut e1, mut e2) = truncate_svd(&svd, cfg.rank);
         // Factors are themselves stored low-precision (per-tensor absmax —
-        // they are small and well-conditioned).
-        if !matches!(cfg.factor_format, NumericFormat::F16) {
-            cfg.factor_format.fake_quant_slice_dynamic(&mut e1.data);
-            cfg.factor_format.fake_quant_slice_dynamic(&mut e2.data);
+        // they are small and well-conditioned). FP formats of ≤ 8 bits
+        // produce true codes; anything else falls back to the fake-quant
+        // slice path with f32 storage.
+        let (mut e1_codes, mut e2_codes) = (None, None);
+        match cfg.factor_format {
+            NumericFormat::F16 => {}
+            NumericFormat::Fp(f) => {
+                e1_codes = encode_factor(f, &mut e1.data);
+                e2_codes = encode_factor(f, &mut e2.data);
+                if e1_codes.is_none() || e2_codes.is_none() {
+                    // byte codes unavailable (wide format / degenerate
+                    // tensor): apply the plain fake-quant so the values
+                    // match the historical behavior exactly
+                    if e1_codes.is_none() {
+                        cfg.factor_format.fake_quant_slice_dynamic(&mut e1.data);
+                    }
+                    if e2_codes.is_none() {
+                        cfg.factor_format.fake_quant_slice_dynamic(&mut e2.data);
+                    }
+                    e1_codes = None;
+                    e2_codes = None;
+                }
+            }
+            _ => {
+                cfg.factor_format.fake_quant_slice_dynamic(&mut e1.data);
+                cfg.factor_format.fake_quant_slice_dynamic(&mut e2.data);
+            }
         }
-        Ok(LorcFactors { e1, e2, format: cfg.factor_format })
+        Ok(LorcFactors { e1, e2, format: cfg.factor_format, e1_codes, e2_codes })
     }
 
     /// `Ê = E₁·E₂`.
@@ -69,14 +166,18 @@ impl LorcFactors {
         self.e1.matmul(&self.e2)
     }
 
-    /// Apply to a dequantized weight: `Ŵ + Ê`.
+    /// Apply to a dequantized weight: `Ŵ + Ê`. This is the pipeline's fold
+    /// and the bit-level reference for the runtime path
+    /// ([`PackedLorc::err_row_into`] + the fused GEMV's per-row add).
     pub fn apply(&self, dequantized: &Matrix) -> Matrix {
         let mut out = dequantized.clone();
         out.add_assign(&self.approx_error());
         out
     }
 
-    /// Extra bytes the factors cost at their storage precision.
+    /// Serialized size the factors cost at their storage precision (the
+    /// PTQ report's accounting; [`PackedLorc::mem_bytes`] reports the
+    /// actual resident bytes of the serving representation).
     pub fn packed_bytes(&self) -> usize {
         let elems = self.e1.data.len() + self.e2.data.len();
         elems * self.format.bits() as usize / 8
@@ -85,6 +186,301 @@ impl LorcFactors {
     pub fn rank(&self) -> usize {
         self.e1.cols
     }
+
+    /// True when the factors are stored as true byte codes (≤ 8-bit FP
+    /// formats) rather than f32 values.
+    pub fn has_codes(&self) -> bool {
+        self.e1_codes.is_some() && self.e2_codes.is_some()
+    }
+}
+
+/// One factor matrix as the serving path holds it.
+#[derive(Debug, Clone)]
+enum FactorStore {
+    /// Byte codes + per-tensor scale: 1 B/element resident,
+    /// `decode(code) · scale` reproduces the folded f32 value bit-for-bit.
+    Codes(FactorCodes),
+    /// f32 values (F16 factors stay unquantized, matching the fold; also
+    /// the fallback for non-FP or wide formats).
+    Dense(Vec<f32>),
+}
+
+impl FactorStore {
+    fn from_factors(codes: &Option<FactorCodes>, values: &Matrix) -> FactorStore {
+        match codes {
+            Some(c) => FactorStore::Codes(c.clone()),
+            None => FactorStore::Dense(values.data.clone()),
+        }
+    }
+
+    #[inline]
+    fn get(&self, i: usize) -> f32 {
+        match self {
+            FactorStore::Codes(c) => c.get(i),
+            FactorStore::Dense(v) => v[i],
+        }
+    }
+
+    /// Actual resident bytes (codes are 1 B each + the f32 scale; dense
+    /// values are honest f32 — F16 factors are *accounted* at 2 B by
+    /// `LorcFactors::packed_bytes` but resident as f32, like the packed
+    /// weights' f32 scales).
+    fn mem_bytes(&self) -> usize {
+        match self {
+            FactorStore::Codes(c) => c.codes.len() + 4,
+            FactorStore::Dense(v) => 4 * v.len(),
+        }
+    }
+}
+
+/// One fused sub-tensor's factors inside a [`PackedLorc`].
+#[derive(Debug, Clone)]
+struct LorcPart {
+    /// First fused output row this part covers.
+    row0: usize,
+    /// Output rows of this part.
+    rows: usize,
+    /// Compensation rank (0 ⇒ no factors for this part; contributes no
+    /// error).
+    rank: usize,
+    /// `[rows, rank]`.
+    e1: FactorStore,
+    /// `[rank, d_in]`.
+    e2: FactorStore,
+    /// Offset of this part's decoded E₂ rows in the shared scratch strip.
+    e2_off: usize,
+}
+
+/// Runtime LoRC attachment of one (possibly fused) packed linear: the
+/// low-rank factors at code precision, ready for the fused dequant GEMV.
+///
+/// ## Fused-slot stacking
+///
+/// A fused q|k|v (or gate|up) linear stacks its sub-tensors' weight rows;
+/// the factors follow the same geometry: each sub-tensor's `E₁` block
+/// covers its own row range (`row0 .. row0 + rows`), while each keeps its
+/// **own** `E₂` (the factorizations are per-tensor — there is no shared
+/// rank-r basis across q, k and v).
+///
+/// ## Accumulation-order contract
+///
+/// [`err_row_into`](Self::err_row_into) reproduces row `j` of
+/// `E₁·E₂` exactly as `Matrix::matmul` computes it (4-term groups over the
+/// rank with the zero-skip singles tail of
+/// [`matmul_into`](crate::tensor::matmul::matmul_into)), so
+/// `decoded Ŵ row + err row` equals the pipeline-folded effective weight
+/// row **bit-for-bit** — which is what makes the packed+LoRC plan
+/// bit-identical to the dense effective-checkpoint engine on every
+/// execution path (`tests/lorc_equivalence.rs`).
+///
+/// [`apply_into`](Self::apply_into) is the cheap `O(r·(in+out))`
+/// activation-side application (`acc += E₁·(E₂·x)`), deterministic in the
+/// same accumulation-order discipline — but *not* bit-equal to the fold
+/// (f32 addition is not associative across the two groupings), which is
+/// why the serving path does not use it. It exists for callers that trade
+/// the fold-equality contract for the low-rank FLOP count.
+#[derive(Debug, Clone)]
+pub struct PackedLorc {
+    pub d_in: usize,
+    pub d_out: usize,
+    parts: Vec<LorcPart>,
+    /// Total decoded-E₂ scratch elements (`Σ rank · d_in` over parts).
+    e2_elems: usize,
+    max_rank: usize,
+}
+
+impl PackedLorc {
+    /// Pack the factors of one or more fused sub-tensors. `parts` pairs
+    /// each sub-tensor's output-row count with its factors (`None` ⇒ that
+    /// part carries no compensation); at least one part must have factors.
+    pub fn pack(parts: &[(usize, Option<&LorcFactors>)]) -> PackedLorc {
+        let d_in = parts
+            .iter()
+            .find_map(|(_, f)| f.map(|f| f.e2.cols))
+            .expect("PackedLorc::pack needs at least one factored part");
+        let mut out_parts = Vec::with_capacity(parts.len());
+        let mut row0 = 0usize;
+        let mut e2_off = 0usize;
+        let mut max_rank = 0usize;
+        for &(rows, f) in parts {
+            let part = match f {
+                Some(f) => {
+                    assert_eq!(f.e1.rows, rows, "E1 rows must match the weight rows");
+                    assert_eq!(f.e2.cols, d_in, "fused parts must share the input dim");
+                    assert_eq!(f.e1.cols, f.e2.rows, "factor rank mismatch");
+                    let rank = f.rank();
+                    max_rank = max_rank.max(rank);
+                    let p = LorcPart {
+                        row0,
+                        rows,
+                        rank,
+                        e1: FactorStore::from_factors(&f.e1_codes, &f.e1),
+                        e2: FactorStore::from_factors(&f.e2_codes, &f.e2),
+                        e2_off,
+                    };
+                    e2_off += rank * d_in;
+                    p
+                }
+                None => LorcPart {
+                    row0,
+                    rows,
+                    rank: 0,
+                    e1: FactorStore::Dense(Vec::new()),
+                    e2: FactorStore::Dense(Vec::new()),
+                    e2_off,
+                },
+            };
+            row0 += rows;
+            out_parts.push(part);
+        }
+        PackedLorc { d_in, d_out: row0, parts: out_parts, e2_elems: e2_off, max_rank }
+    }
+
+    /// Scratch elements [`decode_e2_into`](Self::decode_e2_into) needs.
+    pub fn e2_elems(&self) -> usize {
+        self.e2_elems
+    }
+
+    /// Largest per-part rank.
+    pub fn max_rank(&self) -> usize {
+        self.max_rank
+    }
+
+    /// Actual resident bytes of the factors (codes/values + scales).
+    pub fn mem_bytes(&self) -> usize {
+        self.parts.iter().map(|p| p.e1.mem_bytes() + p.e2.mem_bytes()).sum()
+    }
+
+    /// Decode every part's E₂ rows into `strip` (once per GEMV call; the
+    /// strip is then shared read-only by all row workers). Each decoded
+    /// value is bit-identical to the folded factor value.
+    pub fn decode_e2_into(&self, strip: &mut [f32]) {
+        assert!(strip.len() >= self.e2_elems, "E2 decode strip too small");
+        for p in &self.parts {
+            for i in 0..p.rank * self.d_in {
+                strip[p.e2_off + i] = p.e2.get(i);
+            }
+        }
+    }
+
+    /// Materialize row `j` of `Ê = E₁·E₂` into `err[..d_in]`, reading E₂
+    /// from the predecoded strip — the exact accumulation order of
+    /// `Matrix::matmul` (zeroed output, 4-term groups over the rank,
+    /// zero-skip singles tail), so `ŵ_row + err_row` reproduces the
+    /// pipeline fold bit-for-bit.
+    pub fn err_row_into(&self, j: usize, e2_strip: &[f32], err: &mut [f32]) {
+        let n = self.d_in;
+        let err = &mut err[..n];
+        err.fill(0.0);
+        let part = self
+            .parts
+            .iter()
+            .find(|p| j >= p.row0 && j < p.row0 + p.rows)
+            .expect("row out of range");
+        let r = j - part.row0;
+        let k = part.rank;
+        let e2 = &e2_strip[part.e2_off..part.e2_off + k * n];
+        let mut kk = 0usize;
+        while kk + 4 <= k {
+            let a0 = part.e1.get(r * k + kk);
+            let a1 = part.e1.get(r * k + kk + 1);
+            let a2 = part.e1.get(r * k + kk + 2);
+            let a3 = part.e1.get(r * k + kk + 3);
+            let b0 = &e2[kk * n..kk * n + n];
+            let b1 = &e2[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &e2[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &e2[(kk + 3) * n..(kk + 3) * n + n];
+            for c in 0..n {
+                err[c] += a0 * b0[c] + a1 * b1[c] + a2 * b2[c] + a3 * b3[c];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = part.e1.get(r * k + kk);
+            if av != 0.0 {
+                let b = &e2[kk * n..kk * n + n];
+                for c in 0..n {
+                    err[c] += av * b[c];
+                }
+            }
+            kk += 1;
+        }
+    }
+
+    /// Fused activation-side application: `acc += E₁·(E₂·x)`, i.e.
+    /// `tmp = x·E₂ᵀ` (per part) followed by `acc[:, part] += tmp·E₁ᵀ`,
+    /// each stage accumulating in the exact 4-term-group + zero-skip-tail
+    /// order of [`matmul_into`](crate::tensor::matmul::matmul_into) — so
+    /// the result is deterministic and row-local (batch splits cannot
+    /// change any row's bits). `tmp_r` is a caller scratch reshaped to
+    /// `[x.rows, rank]` (no allocation once its capacity covers
+    /// `x.rows · max_rank`).
+    ///
+    /// Costs `O(r·(d_in + d_out))` per activation row — the low-rank FLOP
+    /// count — but is **not** bit-equal to folding `E₁·E₂` into the weight
+    /// (different f32 addition grouping), so the serving plan uses
+    /// [`err_row_into`](Self::err_row_into) instead; see the type docs.
+    pub fn apply_into(&self, x: &Matrix, tmp_r: &mut Matrix, acc: &mut Matrix) {
+        assert_eq!(x.cols, self.d_in, "lorc input dim mismatch");
+        assert_eq!(acc.rows, x.rows);
+        assert_eq!(acc.cols, self.d_out);
+        let n = self.d_in;
+        for part in &self.parts {
+            let k = part.rank;
+            if k == 0 {
+                continue;
+            }
+            // ---- stage 1: tmp[t][q] = Σ_c x[t][c] · E₂[q][c] ----
+            tmp_r.resize_to(x.rows, k);
+            for t in 0..x.rows {
+                let xrow = x.row(t);
+                let trow = tmp_r.row_mut(t);
+                for (q, tv) in trow.iter_mut().enumerate() {
+                    let mut accq = *tv; // zero from resize_to
+                    let mut c = 0usize;
+                    while c + 4 <= n {
+                        accq += xrow[c] * part.e2.get(q * n + c)
+                            + xrow[c + 1] * part.e2.get(q * n + c + 1)
+                            + xrow[c + 2] * part.e2.get(q * n + c + 2)
+                            + xrow[c + 3] * part.e2.get(q * n + c + 3);
+                        c += 4;
+                    }
+                    while c < n {
+                        let av = xrow[c];
+                        if av != 0.0 {
+                            accq += av * part.e2.get(q * n + c);
+                        }
+                        c += 1;
+                    }
+                    *tv = accq;
+                }
+            }
+            // ---- stage 2: acc[t][row0 + j] += Σ_q tmp[t][q] · E₁[j][q] ----
+            for t in 0..x.rows {
+                let trow = tmp_r.row(t);
+                let arow = &mut acc.row_mut(t)[part.row0..part.row0 + part.rows];
+                for (j, av) in arow.iter_mut().enumerate() {
+                    let mut s = *av;
+                    let mut q = 0usize;
+                    while q + 4 <= k {
+                        s += trow[q] * part.e1.get(j * k + q)
+                            + trow[q + 1] * part.e1.get(j * k + q + 1)
+                            + trow[q + 2] * part.e1.get(j * k + q + 2)
+                            + trow[q + 3] * part.e1.get(j * k + q + 3);
+                        q += 4;
+                    }
+                    while q < k {
+                        let tv = trow[q];
+                        if tv != 0.0 {
+                            s += tv * part.e1.get(j * k + q);
+                        }
+                        q += 1;
+                    }
+                    *av = s;
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -92,6 +488,7 @@ mod tests {
     use super::*;
     use crate::quant::{quantize_weight_rtn, WeightQuantConfig};
     use crate::rng::Rng;
+    use crate::tensor::matmul::matmul_into;
 
     #[test]
     fn lorc_reduces_weight_error() {
@@ -152,6 +549,11 @@ mod tests {
         assert_eq!(lorc.packed_bytes(), 2 * 256 * 8);
         assert!(lorc.packed_bytes() < q.packed_bytes() / 4);
         assert_eq!(lorc.rank(), 8);
+        // the serving representation: codes + one f32 scale per factor
+        let p = PackedLorc::pack(&[(256, Some(&lorc))]);
+        assert_eq!(p.mem_bytes(), 2 * 256 * 8 + 2 * 4);
+        assert_eq!((p.d_out, p.d_in), (256, 256));
+        assert_eq!(p.e2_elems(), 8 * 256);
     }
 
     #[test]
@@ -168,5 +570,163 @@ mod tests {
         assert_eq!(lorc.rank(), 6);
         // full-rank compensation recovers the weight exactly
         assert!(lorc.apply(&q.dequantize()).mse(&w) < 1e-10);
+    }
+
+    #[test]
+    fn fp8_codes_reproduce_factor_values_bitwise() {
+        // the code-storage invariant everything downstream rests on:
+        // decode(code) · scale IS the fake-quantized value, bit for bit
+        let mut rng = Rng::seeded(86);
+        let w = Matrix::randn(24, 40, 0.1, &mut rng);
+        let q = quantize_weight_rtn(&w, &WeightQuantConfig::new(NumericFormat::FP4_E2M1));
+        for fmt in [NumericFormat::FP8_E4M3, NumericFormat::FP8_E5M2, NumericFormat::FP4_E2M1] {
+            let lorc = LorcFactors::compute(
+                &w,
+                &q.dequantize(),
+                &LorcConfig { rank: 4, factor_format: fmt },
+            )
+            .unwrap();
+            assert!(lorc.has_codes(), "{}", fmt.name());
+            let p = PackedLorc::pack(&[(24, Some(&lorc))]);
+            let mut strip = vec![0.0f32; p.e2_elems()];
+            p.decode_e2_into(&mut strip);
+            for (i, &v) in strip.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    lorc.e2.data[i].to_bits(),
+                    "{} e2[{i}]",
+                    fmt.name()
+                );
+            }
+        }
+        // F16 factors carry no codes (stored f32, matching the fold)
+        let f16 = LorcFactors::compute(
+            &w,
+            &q.dequantize(),
+            &LorcConfig { rank: 4, factor_format: NumericFormat::F16 },
+        )
+        .unwrap();
+        assert!(!f16.has_codes());
+    }
+
+    #[test]
+    fn err_row_matches_fold_bitwise() {
+        // err_row_into must reproduce each row of e1.matmul(&e2) exactly —
+        // including non-multiple-of-4 ranks (singles tail)
+        let mut rng = Rng::seeded(87);
+        let w = Matrix::randn(16, 33, 0.1, &mut rng); // odd in-dim
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(16),
+        );
+        for (rank, fmt) in [
+            (2usize, NumericFormat::FP8_E4M3),
+            (5, NumericFormat::FP8_E4M3),
+            (8, NumericFormat::F16),
+        ] {
+            let lorc = LorcFactors::compute(
+                &w,
+                &q.dequantize(),
+                &LorcConfig { rank, factor_format: fmt },
+            )
+            .unwrap();
+            let reference = lorc.approx_error();
+            let p = PackedLorc::pack(&[(16, Some(&lorc))]);
+            let mut strip = vec![0.0f32; p.e2_elems()];
+            p.decode_e2_into(&mut strip);
+            let mut err = vec![7.0f32; 33]; // stale garbage must be overwritten
+            for j in 0..16 {
+                p.err_row_into(j, &strip, &mut err);
+                for (c, &v) in err[..33].iter().enumerate() {
+                    assert_eq!(
+                        v.to_bits(),
+                        reference.at(j, c).to_bits(),
+                        "rank {rank} {} row {j} col {c}",
+                        fmt.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_stacking_keeps_per_part_factors() {
+        // q|k|v-style fusion: E₁ blocks row-stacked, per-part E₂ kept
+        let mut rng = Rng::seeded(88);
+        let cfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(16);
+        let lcfg = LorcConfig { rank: 3, factor_format: NumericFormat::FP8_E4M3 };
+        let wa = Matrix::randn(6, 32, 0.1, &mut rng);
+        let wb = Matrix::randn(4, 32, 0.1, &mut rng);
+        let qa = quantize_weight_rtn(&wa, &cfg);
+        let qb = quantize_weight_rtn(&wb, &cfg);
+        let la = LorcFactors::compute(&wa, &qa.dequantize(), &lcfg).unwrap();
+        let lb = LorcFactors::compute(&wb, &qb.dequantize(), &lcfg).unwrap();
+        let ea = la.approx_error();
+        let eb = lb.approx_error();
+        let p = PackedLorc::pack(&[(6, Some(&la)), (4, Some(&lb))]);
+        assert_eq!((p.d_out, p.d_in), (10, 32));
+        assert_eq!(p.e2_elems(), 2 * 3 * 32);
+        let mut strip = vec![0.0f32; p.e2_elems()];
+        p.decode_e2_into(&mut strip);
+        let mut err = vec![0.0f32; 32];
+        for j in 0..10 {
+            p.err_row_into(j, &strip, &mut err);
+            let want = if j < 6 { ea.row(j) } else { eb.row(j - 6) };
+            for (c, &v) in err.iter().enumerate() {
+                assert_eq!(v.to_bits(), want[c].to_bits(), "fused row {j} col {c}");
+            }
+        }
+        // a part without factors contributes exactly zero
+        let p0 = PackedLorc::pack(&[(6, Some(&la)), (4, None)]);
+        p0.decode_e2_into(&mut strip[..p0.e2_elems()]);
+        p0.err_row_into(8, &strip, &mut err);
+        assert!(err.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn apply_into_matches_two_stage_matmul_reference() {
+        // apply_into's own contract: bit-equal to matmul_into over the
+        // prepacked transposes (tmp = x·E₂ᵀ, acc += tmp·E₁ᵀ), and
+        // row-local (batch splits don't change bits)
+        let mut rng = Rng::seeded(89);
+        let w = Matrix::randn(12, 20, 0.1, &mut rng);
+        let q = quantize_weight_rtn(
+            &w,
+            &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(10),
+        );
+        let lorc = LorcFactors::compute(
+            &w,
+            &q.dequantize(),
+            &LorcConfig { rank: 5, factor_format: NumericFormat::FP8_E4M3 },
+        )
+        .unwrap();
+        let p = PackedLorc::pack(&[(12, Some(&lorc))]);
+        let x = Matrix::randn(3, 20, 1.0, &mut rng);
+        let seed = Matrix::randn(3, 12, 0.5, &mut rng);
+
+        // reference: the same two stages through the reference kernel
+        let e2t = lorc.e2.transpose();
+        let mut tmp = Matrix::zeros(3, 5);
+        matmul_into(&x, &e2t, &mut tmp);
+        let e1t = lorc.e1.transpose();
+        let mut want = seed.clone();
+        matmul_into(&tmp, &e1t, &mut want);
+
+        let mut got = seed.clone();
+        let mut scratch = Matrix::zeros(0, 0);
+        p.apply_into(&x, &mut scratch, &mut got);
+        for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: {a} vs {b}");
+        }
+
+        // row-locality: applying each activation row alone gives the same bits
+        for t in 0..3 {
+            let xr = Matrix::from_vec(1, 20, x.row(t).to_vec());
+            let mut acc = Matrix::from_vec(1, 12, seed.row(t).to_vec());
+            p.apply_into(&xr, &mut scratch, &mut acc);
+            for (c, v) in acc.row(0).iter().enumerate() {
+                assert_eq!(v.to_bits(), got.at(t, c).to_bits(), "row {t} col {c}");
+            }
+        }
     }
 }

@@ -4,8 +4,10 @@
 //! This is the orchestration a downstream user runs (`zqfp quantize …`):
 //! feed a trained checkpoint and a calibration stream, get back (a) a
 //! checkpoint whose transformer linears carry the *effective* (fake-
-//! quantized, LoRC-compensated) weights for engine/PJRT replay, and (b) a
-//! sidecar [`PtqReport`] with per-layer losses and size accounting.
+//! quantized, LoRC-compensated) weights for engine/PJRT replay, (b) the
+//! quantized-artifact sidecar (codes + optional LoRC factors per linear)
+//! the packed serving plan compiles from, and (c) a [`PtqReport`] with
+//! per-layer losses and size accounting.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -98,7 +100,13 @@ pub struct PtqReport {
 }
 
 impl PtqReport {
+    /// FP16-bytes : quantized-bytes ratio of the transformer linears.
+    /// A W16 run quantizes nothing (`fp16_bytes == 0`), so its compression
+    /// is the identity `1.0` — not the `0.0` the plain ratio would yield.
     pub fn compression(&self) -> f64 {
+        if self.fp16_bytes == 0 {
+            return 1.0;
+        }
         self.fp16_bytes as f64 / self.quant_bytes.max(1) as f64
     }
 
@@ -177,13 +185,17 @@ pub fn quantize_checkpoint(
     (qck, report)
 }
 
-/// Like [`quantize_checkpoint`], additionally returning the quantized-code
-/// **sidecar**: one [`crate::quant::QuantizedWeight`] per transformer
-/// linear, the input the packed execution plan compiles from
-/// ([`CompiledModel::compile_quantized`]). The sidecar is empty for W16
-/// (nothing quantized) and when LoRC is enabled — LoRC folds a dense
-/// low-rank correction into the effective weights, so codes alone no
-/// longer reproduce them and the packed layout would break bit-identity.
+/// Like [`quantize_checkpoint`], additionally returning the quantized
+/// **sidecar**: one [`crate::quant::SidecarEntry`] per transformer linear
+/// (codes + the LoRC factors when the run used LoRC), the input the packed
+/// execution plan compiles from ([`CompiledModel::compile_quantized`]).
+/// The sidecar is empty only for W16 (nothing quantized). Under LoRC the
+/// *effective* checkpoint still carries the dense fold `Ŵ + E₁E₂` — the
+/// reference engine path and the Table-2/3 numbers are unchanged — while
+/// the sidecar keeps the codes and factors separate so the packed runtime
+/// can reproduce the same bits at packed-memory footprint
+/// (`entry.weight.dequantize() + entry.lorc.approx_error()` equals the
+/// effective weight bit-for-bit; `tests/lorc_equivalence.rs`).
 pub fn quantize_checkpoint_full(
     ck: &Checkpoint,
     calib_seqs: &[Vec<u16>],
@@ -260,12 +272,14 @@ pub fn quantize_checkpoint_with_hessians_full(
             quant_bytes += qw.packed_bytes();
             let mut effective = qw.dequantize();
             let mut lorc_bytes = 0usize;
+            let mut factors = None;
             if let Some(lcfg) = &cfg.lorc {
-                let factors = LorcFactors::compute(w, &effective, lcfg)
+                let f = LorcFactors::compute(w, &effective, lcfg)
                     .expect("lorc svd failed");
-                lorc_bytes = factors.packed_bytes();
+                lorc_bytes = f.packed_bytes();
                 quant_bytes += lorc_bytes;
-                effective = factors.apply(&effective);
+                effective = f.apply(&effective);
+                factors = Some(f);
             }
             let weight_mse = effective.mse(w);
             *out.get_mut(&tensor) = effective;
@@ -276,9 +290,11 @@ pub fn quantize_checkpoint_with_hessians_full(
                 packed_bytes: qw.packed_bytes(),
                 lorc_bytes,
             });
-            if cfg.lorc.is_none() {
-                sidecar.insert(tensor, qw);
-            }
+            // The sidecar stays populated under LoRC: codes + factors
+            // reproduce the folded effective weight bit-for-bit, which is
+            // what lets `--packed --lorc` serve the paper's best small-
+            // model configuration at packed-memory footprint.
+            sidecar.insert_with_lorc(tensor, qw, factors);
         }
     }
 
@@ -422,21 +438,50 @@ mod tests {
             .with_constraint(ScaleConstraint::M2 { rows: 8 });
         let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &seqs, &cfg);
         assert_eq!(sidecar.len(), report.layers.len());
-        for (name, qw) in &sidecar {
+        assert!(!sidecar.has_lorc());
+        for (name, entry) in sidecar.iter() {
             let effective = qck.get(name);
-            let deq = qw.dequantize();
+            let deq = entry.weight.dequantize();
             for (a, b) in effective.data.iter().zip(&deq.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{name}");
             }
-            assert_eq!(qw.constraint, ScaleConstraint::M2 { rows: 8 });
+            assert_eq!(entry.weight.constraint, ScaleConstraint::M2 { rows: 8 });
+            assert!(entry.lorc.is_none());
         }
-        // LoRC folds a dense correction in — codes no longer reproduce the
-        // effective weights, so no sidecar is produced.
+        // Under LoRC the sidecar stays populated: codes + factors together
+        // reproduce the folded effective weights bit-for-bit.
         let lorc_cfg = cfg
             .clone()
             .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
-        let (_, sidecar, _) = quantize_checkpoint_full(&ck, &seqs, &lorc_cfg);
-        assert!(sidecar.is_empty());
+        let (lck, sidecar, lreport) = quantize_checkpoint_full(&ck, &seqs, &lorc_cfg);
+        assert_eq!(sidecar.len(), lreport.layers.len());
+        assert!(sidecar.has_lorc());
+        for (name, entry) in sidecar.iter() {
+            let effective = lck.get(name);
+            let factors = entry.lorc.as_ref().expect("lorc factors in sidecar");
+            let rebuilt = factors.apply(&entry.weight.dequantize());
+            for (a, b) in effective.data.iter().zip(&rebuilt.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name} (codes + factors)");
+            }
+        }
+    }
+
+    #[test]
+    fn w16_compression_is_identity() {
+        // regression: fp16_bytes == 0 used to make compression() report
+        // 0.0x for a run that quantized nothing
+        let ck = tiny_ck(Arch::Opt);
+        let (_, report) =
+            quantize_checkpoint(&ck, &calib_seqs(2, 8), &PtqConfig::new(Scheme::W16A16));
+        assert_eq!(report.fp16_bytes, 0);
+        assert_eq!(report.compression(), 1.0);
+        // quantized runs still report the true ratio
+        let (_, r) = quantize_checkpoint(
+            &ck,
+            &calib_seqs(2, 8),
+            &PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap()),
+        );
+        assert!(r.compression() > 1.0);
     }
 
     #[test]

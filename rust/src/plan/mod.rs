@@ -55,8 +55,10 @@ pub use lut::FpQuantLut;
 
 use crate::engine::{EngineOpts, LinearSite, Site, WeightLayout};
 use crate::formats::{FpFormat, NumericFormat};
+use crate::lorc::PackedLorc;
 use crate::model::{Arch, Checkpoint, ModelConfig};
 use crate::quant::{PackedWeight, QuantSidecar};
+use crate::tensor::packed_matmul::GemvScratch;
 use crate::tensor::{matmul, packed_matmul, Matrix};
 
 /// A linear layer prepacked for the axpy kernel: transposed weight
@@ -128,55 +130,79 @@ impl PackedLinear {
 /// A linear whose weights live as bit-packed low-bit codes, executed by
 /// the fused dequant GEMV ([`crate::tensor::packed_matmul`]). Same fusion
 /// rules as [`PackedLinear`] (q|k|v and gate|up row-stacked), same bias
-/// seeding, bit-identical output.
+/// seeding, bit-identical output. When the PTQ run used LoRC the slot also
+/// carries the [`PackedLorc`] factors (per-sub-tensor E₁ blocks stacked in
+/// the fused row order, per-sub-tensor E₂), and the GEMV folds the
+/// compensation into each decoded row — output bit-identical to the dense
+/// plan over the *folded* effective checkpoint.
 #[derive(Debug, Clone)]
 pub struct PackedQLinear {
     pub d_in: usize,
     pub d_out: usize,
     w: PackedWeight,
+    lorc: Option<PackedLorc>,
     bias: Vec<f32>,
     threads: usize,
 }
 
+/// One fused source of a packed slot: quantized codes, optional LoRC
+/// factors, optional bias.
+type QPart<'a> = (
+    &'a crate::quant::QuantizedWeight,
+    Option<&'a crate::lorc::LorcFactors>,
+    Option<&'a Matrix>,
+);
+
 impl PackedQLinear {
-    fn pack(
-        parts: &[(&crate::quant::QuantizedWeight, Option<&Matrix>)],
-        threads: usize,
-    ) -> PackedQLinear {
-        let qs: Vec<&crate::quant::QuantizedWeight> = parts.iter().map(|(q, _)| *q).collect();
-        let n_biased = parts.iter().filter(|(_, b)| b.is_some()).count();
+    fn pack(parts: &[QPart<'_>], threads: usize) -> PackedQLinear {
+        let qs: Vec<&crate::quant::QuantizedWeight> = parts.iter().map(|(q, _, _)| *q).collect();
+        let n_biased = parts.iter().filter(|(_, _, b)| b.is_some()).count();
         assert!(
             n_biased == 0 || n_biased == parts.len(),
             "cannot fuse biased with bias-free linears"
         );
         let mut bias = Vec::new();
-        for (q, b) in parts {
+        for (q, _, b) in parts {
             if let Some(b) = b {
                 assert_eq!(b.data.len(), q.rows, "bias shape mismatch");
                 bias.extend_from_slice(&b.data);
             }
         }
         let w = PackedWeight::pack(&qs);
-        PackedQLinear { d_in: w.cols, d_out: w.rows, w, bias, threads: threads.max(1) }
+        let lorc = if parts.iter().any(|(_, l, _)| l.is_some()) {
+            let lparts: Vec<(usize, Option<&crate::lorc::LorcFactors>)> =
+                parts.iter().map(|(q, l, _)| (q.rows, *l)).collect();
+            let pl = PackedLorc::pack(&lparts);
+            assert_eq!((pl.d_out, pl.d_in), (w.rows, w.cols), "lorc factor geometry mismatch");
+            Some(pl)
+        } else {
+            None
+        };
+        PackedQLinear { d_in: w.cols, d_out: w.rows, w, lorc, bias, threads: threads.max(1) }
     }
 
-    /// `out = bias + x @ dequant(w)ᵀ`, decoded on the fly. `deq` is the
-    /// arena's decode strip (`len >= d_in`); allocation-free at
+    /// `out = bias + x @ (dequant(w) + E₁E₂)ᵀ`, decoded (and compensated)
+    /// on the fly. `s` holds the arena's decode strips; allocation-free at
     /// `threads == 1`.
-    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, deq: &mut [f32]) {
+    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch) {
         assert_eq!(x.cols, self.d_in, "linear input dim mismatch");
         if self.bias.is_empty() {
             out.resize_to(x.rows, self.d_out);
         } else {
             out.resize_rows_to(x.rows, &self.bias);
         }
-        packed_matmul::packed_matmul_into(x, &self.w, out, deq, self.threads);
+        packed_matmul::packed_matmul_into(x, &self.w, self.lorc.as_ref(), out, s, self.threads);
     }
 
     /// Resident bytes of the packed weight payload (codes + scales +
-    /// tables + shift metadata; bias excluded).
+    /// tables + shift metadata + LoRC factor codes; bias excluded).
     pub fn weight_bytes(&self) -> usize {
-        self.w.mem_bytes()
+        self.w.mem_bytes() + self.lorc.as_ref().map_or(0, |l| l.mem_bytes())
+    }
+
+    /// Decoded-E₂ scratch elements this slot's LoRC attachment needs.
+    fn lorc_e2_elems(&self) -> usize {
+        self.lorc.as_ref().map_or(0, |l| l.e2_elems())
     }
 }
 
@@ -190,18 +216,27 @@ pub enum LayerWeights {
 }
 
 impl LayerWeights {
-    fn run_into(&self, x: &Matrix, out: &mut Matrix, deq: &mut [f32]) {
+    fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch) {
         match self {
             LayerWeights::Dense(l) => l.run_into(x, out),
-            LayerWeights::Packed(l) => l.run_into(x, out, deq),
+            LayerWeights::Packed(l) => l.run_into(x, out, s),
         }
     }
 
-    /// Resident bytes of the weight payload (weights + bias).
+    /// Resident bytes of the weight payload (weights + LoRC factors +
+    /// bias).
     fn weight_bytes(&self) -> usize {
         match self {
             LayerWeights::Dense(l) => 4 * (l.wt.data.len() + l.bias.len()),
             LayerWeights::Packed(l) => l.weight_bytes() + 4 * l.bias.len(),
+        }
+    }
+
+    /// Decoded-E₂ scratch elements the slot needs (0 without LoRC).
+    fn lorc_e2_elems(&self) -> usize {
+        match self {
+            LayerWeights::Dense(_) => 0,
+            LayerWeights::Packed(l) => l.lorc_e2_elems(),
         }
     }
 }
@@ -287,6 +322,17 @@ impl CompiledLayer {
         };
         self.qkv.weight_bytes() + self.out_proj.weight_bytes() + mlp
     }
+
+    /// Largest decoded-E₂ scratch any of this layer's slots needs.
+    fn lorc_e2_elems(&self) -> usize {
+        let mlp = match &self.mlp {
+            CompiledMlp::Relu { fc1, fc2 } => fc1.lorc_e2_elems().max(fc2.lorc_e2_elems()),
+            CompiledMlp::GatedSilu { gate_up, down } => {
+                gate_up.lorc_e2_elems().max(down.lorc_e2_elems())
+            }
+        };
+        self.qkv.lorc_e2_elems().max(self.out_proj.lorc_e2_elems()).max(mlp)
+    }
 }
 
 /// How token-wise activation fake-quant executes in the compiled path.
@@ -337,9 +383,12 @@ pub struct DecodeScratch {
     /// Attention score row (`max_seq`) — shared by the full-recompute and
     /// the KV-cached attention kernels (one query row at a time each).
     scores: Vec<f32>,
-    /// Weight-row decode strip for the packed GEMV (`max(d, ff)`); unused
-    /// by the dense layout.
-    deq: Vec<f32>,
+    /// Decode strips of the packed GEMV: the weight-row strip (`max(d,
+    /// ff)`), the LoRC error-row strip (same length) and the decoded-E₂
+    /// strip (sized by [`CompiledModel::scratch`] to the largest LoRC
+    /// attachment in the plan — the arena's rank-r strip, so LoRC decode
+    /// stays allocation-free). Unused by the dense layout.
+    gemv: GemvScratch,
     /// Output logits `[rows, vocab]`.
     logits: Matrix,
 }
@@ -361,6 +410,13 @@ enum KvMode<'a> {
 
 impl DecodeScratch {
     pub fn new(cfg: &ModelConfig) -> DecodeScratch {
+        Self::with_lorc_capacity(cfg, 0)
+    }
+
+    /// Arena with the decoded-E₂ strip sized for `e2_elems` elements (the
+    /// largest LoRC attachment of the plan; 0 for LoRC-free plans).
+    /// [`CompiledModel::scratch`] computes the right capacity — use that.
+    pub fn with_lorc_capacity(cfg: &ModelConfig, e2_elems: usize) -> DecodeScratch {
         let s = cfg.max_seq;
         let d = cfg.d_model;
         let (hidden_cols, act2_rows) = match cfg.arch {
@@ -376,7 +432,7 @@ impl DecodeScratch {
             hidden: Matrix::zeros(s, hidden_cols),
             act2: Matrix::zeros(act2_rows, cfg.d_ff),
             scores: vec![0.0; s],
-            deq: vec![0.0; d.max(cfg.d_ff)],
+            gemv: GemvScratch::sized(d.max(cfg.d_ff), e2_elems),
             logits: Matrix::zeros(s, cfg.vocab_size),
         }
     }
@@ -397,14 +453,19 @@ impl CompiledModel {
     }
 
     /// Like [`compile`](Self::compile), but with the PTQ run's
-    /// quantized-code sidecar
+    /// quantized-artifact sidecar
     /// ([`crate::pipeline::quantize_checkpoint_full`]). When
     /// `opts.weights` selects [`WeightLayout::Packed`], every transformer
     /// linear is stored as bit-packed codes and executed by the fused
     /// dequant GEMV — bit-identical to the dense plan over the same
     /// (fake-quantized) checkpoint, at a fraction of the resident weight
-    /// bytes (`tests/packed_equivalence.rs` enforces both claims). With a
-    /// dense layout the sidecar is ignored.
+    /// bytes (`tests/packed_equivalence.rs` enforces both claims). Sidecar
+    /// entries carrying LoRC factors attach them to their slot: the GEMV
+    /// folds the low-rank compensation into each decoded row, so a
+    /// packed+LoRC plan stays bit-identical to the dense plan over the
+    /// LoRC-*folded* effective checkpoint on every execution path
+    /// (`tests/lorc_equivalence.rs`). With a dense layout the sidecar is
+    /// ignored (the effective checkpoint already carries the fold).
     pub fn compile_quantized(
         ck: &Checkpoint,
         sidecar: &QuantSidecar,
@@ -416,20 +477,21 @@ impl CompiledModel {
     fn build(ck: &Checkpoint, sidecar: Option<&QuantSidecar>, opts: EngineOpts) -> CompiledModel {
         let cfg = ck.config.clone();
         let threads = opts.weights.threads();
-        // One linear slot: dense prepack, or packed codes from the sidecar.
+        // One linear slot: dense prepack, or packed codes (+ optional LoRC
+        // factors) from the sidecar.
         let linear = |parts: &[(String, Option<String>)]| -> LayerWeights {
             match (&opts.weights, sidecar) {
                 (WeightLayout::Packed { .. }, Some(sc)) => {
-                    let qparts: Vec<(&crate::quant::QuantizedWeight, Option<&Matrix>)> = parts
+                    let qparts: Vec<QPart<'_>> = parts
                         .iter()
                         .map(|(w, b)| {
-                            let q = sc.get(w.as_str()).unwrap_or_else(|| {
+                            let e = sc.entry(w.as_str()).unwrap_or_else(|| {
                                 panic!(
                                     "packed layout: no quantized codes for {w} in the sidecar \
-                                     (W16 scheme or LoRC-compensated weights cannot pack)"
+                                     (a W16 scheme quantizes nothing and cannot pack)"
                                 )
                             });
-                            (q, b.as_ref().map(|b| ck.get(b)))
+                            (&e.weight, e.lorc.as_ref(), b.as_ref().map(|b| ck.get(b)))
                         })
                         .collect();
                     LayerWeights::Packed(PackedQLinear::pack(&qparts, threads))
@@ -496,9 +558,12 @@ impl CompiledModel {
         self.layers.iter().map(|l| l.weight_bytes()).sum()
     }
 
-    /// A fresh arena sized for this model's `max_seq`.
+    /// A fresh arena sized for this model's `max_seq` — including the
+    /// decoded-E₂ strip for the largest LoRC attachment in the plan, so
+    /// LoRC decode is allocation-free from the first call.
     pub fn scratch(&self) -> DecodeScratch {
-        DecodeScratch::new(&self.config)
+        let e2 = self.layers.iter().map(|l| l.lorc_e2_elems()).max().unwrap_or(0);
+        DecodeScratch::with_lorc_capacity(&self.config, e2)
     }
 
     /// A fresh exact (f32) K/V cache sized for this model's `max_seq`.
@@ -648,7 +713,7 @@ impl CompiledModel {
             cl.ln1.run_into(&s.x, &mut s.nrm);
             observe(Site { layer, site: LinearSite::Qkv }, &s.nrm);
             self.actq(&mut s.nrm);
-            cl.qkv.run_into(&s.nrm, &mut s.qkv, &mut s.deq);
+            cl.qkv.run_into(&s.nrm, &mut s.qkv, &mut s.gemv);
             match &mut kv {
                 KvMode::Off => {
                     attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
@@ -696,7 +761,7 @@ impl CompiledModel {
             }
             observe(Site { layer, site: LinearSite::OutProj }, &s.ctx);
             self.actq(&mut s.ctx);
-            cl.out_proj.run_into(&s.ctx, &mut s.proj, &mut s.deq);
+            cl.out_proj.run_into(&s.ctx, &mut s.proj, &mut s.gemv);
             s.x.add_assign(&s.proj);
             // ---- mlp ----
             cl.ln2.run_into(&s.x, &mut s.nrm);
@@ -704,16 +769,16 @@ impl CompiledModel {
             self.actq(&mut s.nrm);
             match &cl.mlp {
                 CompiledMlp::Relu { fc1, fc2 } => {
-                    fc1.run_into(&s.nrm, &mut s.hidden, &mut s.deq);
+                    fc1.run_into(&s.nrm, &mut s.hidden, &mut s.gemv);
                     for v in s.hidden.data.iter_mut() {
                         *v = v.max(0.0); // relu
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.hidden);
                     self.actq(&mut s.hidden);
-                    fc2.run_into(&s.hidden, &mut s.proj, &mut s.deq);
+                    fc2.run_into(&s.hidden, &mut s.proj, &mut s.gemv);
                 }
                 CompiledMlp::GatedSilu { gate_up, down } => {
-                    gate_up.run_into(&s.nrm, &mut s.hidden, &mut s.deq); // [rows, 2ff]
+                    gate_up.run_into(&s.nrm, &mut s.hidden, &mut s.gemv); // [rows, 2ff]
                     let ff = cfg.d_ff;
                     s.act2.resize_to(rows, ff);
                     for r in 0..rows {
@@ -728,7 +793,7 @@ impl CompiledModel {
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.act2);
                     self.actq(&mut s.act2);
-                    down.run_into(&s.act2, &mut s.proj, &mut s.deq);
+                    down.run_into(&s.act2, &mut s.proj, &mut s.gemv);
                 }
             }
             s.x.add_assign(&s.proj);

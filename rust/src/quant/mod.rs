@@ -12,7 +12,7 @@ pub mod weight;
 
 pub use activation::{fake_quant_tokenwise, ActQuantConfig};
 pub use constraints::{constrain_scales, is_pow2, next_pow2, ScaleConstraint};
-pub use packed::{PackedWeight, QuantSidecar};
+pub use packed::{PackedWeight, QuantSidecar, SidecarEntry};
 pub use weight::{encode_value, quantize_weight_rtn, QuantizedWeight, WeightQuantConfig};
 
 use crate::formats::NumericFormat;

@@ -55,10 +55,75 @@ use crate::tensor::Matrix;
 use super::constraints::ScaleConstraint;
 use super::weight::QuantizedWeight;
 
-/// Quantized-code sidecar of a PTQ run: tensor name → container, the input
-/// the packed execution plan compiles from (see
-/// [`crate::pipeline::quantize_checkpoint_full`]).
-pub type QuantSidecar = BTreeMap<String, QuantizedWeight>;
+/// One transformer linear's PTQ artifacts: the quantized codes, plus the
+/// LoRC low-rank compensation factors when the run used LoRC. The packed
+/// execution plan compiles both — codes into a [`PackedWeight`], factors
+/// into a [`crate::lorc::PackedLorc`] attachment — and together they
+/// reproduce the *effective* (folded) checkpoint weight bit-for-bit:
+/// `entry.weight.dequantize() + factors.approx_error()` is exactly what
+/// the pipeline wrote into the effective checkpoint.
+#[derive(Debug, Clone)]
+pub struct SidecarEntry {
+    pub weight: QuantizedWeight,
+    pub lorc: Option<crate::lorc::LorcFactors>,
+}
+
+/// Quantized-artifact sidecar of a PTQ run: tensor name → codes (+ optional
+/// LoRC factors), the input the packed execution plan compiles from (see
+/// [`crate::pipeline::quantize_checkpoint_full`]). Empty only for W16 runs,
+/// where nothing was quantized.
+#[derive(Debug, Clone, Default)]
+pub struct QuantSidecar {
+    entries: BTreeMap<String, SidecarEntry>,
+}
+
+impl QuantSidecar {
+    pub fn new() -> QuantSidecar {
+        QuantSidecar::default()
+    }
+
+    /// Insert codes without factors (non-LoRC runs).
+    pub fn insert(&mut self, name: String, weight: QuantizedWeight) {
+        self.entries.insert(name, SidecarEntry { weight, lorc: None });
+    }
+
+    /// Insert codes with their optional LoRC factors.
+    pub fn insert_with_lorc(
+        &mut self,
+        name: String,
+        weight: QuantizedWeight,
+        lorc: Option<crate::lorc::LorcFactors>,
+    ) {
+        self.entries.insert(name, SidecarEntry { weight, lorc });
+    }
+
+    /// The quantized codes of one tensor.
+    pub fn get(&self, name: &str) -> Option<&QuantizedWeight> {
+        self.entries.get(name).map(|e| &e.weight)
+    }
+
+    /// The full entry (codes + factors) of one tensor.
+    pub fn entry(&self, name: &str) -> Option<&SidecarEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True when any entry carries LoRC factors.
+    pub fn has_lorc(&self) -> bool {
+        self.entries.values().any(|e| e.lorc.is_some())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &SidecarEntry)> {
+        self.entries.iter()
+    }
+}
 
 /// How group dequant tables are materialized at GEMV time.
 #[derive(Debug, Clone)]

@@ -23,43 +23,112 @@
 //!    with only the final `k mod 4` elements handled singly (with the
 //!    same `a != 0` skip) — exactly the flat loop below.
 //!
-//! `tests/packed_equivalence.rs` enforces the end-to-end version of this
-//! across architectures, formats and scale constraints.
+//! ## LoRC on the packed path
+//!
+//! A packed linear may carry a [`PackedLorc`] attachment (the runtime form
+//! of the paper's low-rank compensation, `Ŵ + E₁E₂`). The GEMV then
+//! extends the contract to the *effective* weight: after decoding weight
+//! row `j`, the row of `E₁·E₂` is materialized into the `err` strip in the
+//! exact accumulation order of the pipeline's fold
+//! ([`PackedLorc::err_row_into`]) and added elementwise — so the strip the
+//! activations are dotted against is bit-equal to the folded effective
+//! weight row, and packed+LoRC logits are bit-identical to the dense
+//! effective-checkpoint plan (`tests/lorc_equivalence.rs`). E₂ is decoded
+//! **once per call** into the scratch's `e2` strip and shared read-only by
+//! all row workers. The cost is `rank` extra multiply-adds per weight —
+//! the price of fold-equality; the cheap `O(r·(in+out))` activation-side
+//! application exists as [`PackedLorc::apply_into`] but deliberately does
+//! not serve (its addition grouping differs from the fold by rounding).
+//!
+//! `tests/packed_equivalence.rs` and `tests/lorc_equivalence.rs` enforce
+//! the end-to-end versions of these claims across architectures, formats
+//! and scale constraints.
 //!
 //! ## Sharding
 //!
 //! With `threads > 1` the weight rows (output features) are sharded across
 //! `std::thread` workers — each worker decodes only its own rows, so the
-//! dequant work parallelizes with the FLOPs. Each worker accumulates into
-//! a private `[batch, shard]` strip that is scattered into `out` after the
-//! join, keeping the hot loops free of sharing. The threaded path spawns
-//! (and therefore allocates) per call; the zero-allocation decode contract
-//! (`tests/plan_alloc.rs`) applies to `threads == 1`, the default.
+//! dequant (and LoRC error) work parallelizes with the FLOPs. Each worker
+//! accumulates into a private `[batch, shard]` strip that is scattered
+//! into `out` after the join, keeping the hot loops free of sharing. The
+//! threaded path spawns (and therefore allocates) per call; the
+//! zero-allocation decode contract (`tests/plan_alloc.rs`) applies to
+//! `threads == 1`, the default.
 
+use crate::lorc::PackedLorc;
 use crate::quant::PackedWeight;
 
 use super::Matrix;
 
-/// `out += x · wᵀ` over packed codes. `out` must be pre-seeded (zeroed or
-/// bias rows) and shaped `[x.rows, w.rows]`; `deq` is the caller's decode
-/// scratch with `deq.len() >= w.cols` (unused when `threads > 1`, where
-/// each worker owns a private strip).
+/// The caller-owned scratch strips of the fused GEMV: the decoded
+/// weight-row strip, the decoded-E₂ strip and the LoRC error-row strip
+/// (both empty-capable when the plan carries no LoRC). Lives in the
+/// decode arena (`plan::DecodeScratch`) so steady-state decode stays
+/// allocation-free.
+#[derive(Debug, Clone, Default)]
+pub struct GemvScratch {
+    /// Decoded weight row (`len >= w.cols`).
+    pub deq: Vec<f32>,
+    /// Decoded E₂ rows of the current linear's LoRC attachment
+    /// (`len >= lorc.e2_elems()`).
+    pub e2: Vec<f32>,
+    /// LoRC error-row accumulator (`len >= w.cols`).
+    pub err: Vec<f32>,
+}
+
+impl GemvScratch {
+    /// Strips sized for matrices up to `cols` input features and LoRC
+    /// attachments up to `e2_elems` decoded-E₂ elements. LoRC-free plans
+    /// (`e2_elems == 0`) get empty LoRC strips — only compensated linears
+    /// ever read them (and the GEMV grows them on demand as a fallback).
+    pub fn sized(cols: usize, e2_elems: usize) -> GemvScratch {
+        let lorc_cols = if e2_elems > 0 { cols } else { 0 };
+        GemvScratch {
+            deq: vec![0.0; cols],
+            e2: vec![0.0; e2_elems],
+            err: vec![0.0; lorc_cols],
+        }
+    }
+}
+
+/// `out += x · wᵀ` over packed codes, with `lorc` compensation folded into
+/// each decoded row when present. `out` must be pre-seeded (zeroed or bias
+/// rows) and shaped `[x.rows, w.rows]`; `s` is the caller's scratch with
+/// `s.deq`/`s.err` at least `w.cols` long and `s.e2` at least
+/// `lorc.e2_elems()` (the `deq`/`err` strips are unused when
+/// `threads > 1`, where each worker owns private strips).
 pub fn packed_matmul_into(
     x: &Matrix,
     w: &PackedWeight,
+    lorc: Option<&PackedLorc>,
     out: &mut Matrix,
-    deq: &mut [f32],
+    s: &mut GemvScratch,
     threads: usize,
 ) {
     assert_eq!(x.cols, w.cols, "gemv input dim mismatch");
     assert_eq!(out.rows, x.rows);
     assert_eq!(out.cols, w.rows);
     if x.rows == 0 || w.rows == 0 {
-        return; // nothing to accumulate (and nothing to shard)
+        return; // nothing to accumulate (and nothing to decode or shard)
+    }
+    if let Some(l) = lorc {
+        assert_eq!((l.d_out, l.d_in), (w.rows, w.cols), "lorc factor shape mismatch");
+        // A cfg-only arena (DecodeScratch::new) cannot know the plan's
+        // attachment sizes — grow once here instead of panicking deep in
+        // the decode. CompiledModel::scratch presizes both strips, so the
+        // steady state (and the zero-alloc contract) never hits this.
+        if s.e2.len() < l.e2_elems() {
+            s.e2.resize(l.e2_elems(), 0.0);
+        }
+        if s.err.len() < w.cols {
+            s.err.resize(w.cols, 0.0);
+        }
+        l.decode_e2_into(&mut s.e2);
     }
     let threads = threads.max(1).min(w.rows);
     if threads == 1 {
-        packed_rows_into(x, w, 0..w.rows, &mut deq[..w.cols], &mut out.data, w.rows, 0);
+        let (deq, err) = (&mut s.deq[..w.cols], &mut s.err[..]);
+        packed_rows_into(x, w, lorc, 0..w.rows, deq, &s.e2, err, &mut out.data, w.rows, 0);
         return;
     }
 
@@ -68,7 +137,7 @@ pub fn packed_matmul_into(
     // [batch, span] strip (so the accumulator chain — seed first, then the
     // k-groups — is the same as the inline path, keeping the result
     // bit-identical to threads == 1), and the strips are scattered back
-    // after the join.
+    // after the join. The decoded-E₂ strip is shared read-only.
     let n = w.rows;
     let chunk = n.div_ceil(threads);
     let ranges: Vec<(usize, usize)> = (0..threads)
@@ -77,11 +146,12 @@ pub fn packed_matmul_into(
         .collect();
     let parts: Vec<(usize, Vec<f32>)> = {
         let out_data: &[f32] = &out.data;
-        std::thread::scope(|s| {
+        let e2: &[f32] = &s.e2;
+        std::thread::scope(|sc| {
             let handles: Vec<_> = ranges
                 .iter()
                 .map(|&(j0, j1)| {
-                    s.spawn(move || {
+                    sc.spawn(move || {
                         let span = j1 - j0;
                         let mut strip = vec![0.0f32; x.rows * span];
                         for r in 0..x.rows {
@@ -89,7 +159,12 @@ pub fn packed_matmul_into(
                                 .copy_from_slice(&out_data[r * n + j0..r * n + j1]);
                         }
                         let mut deq = vec![0.0f32; w.cols];
-                        packed_rows_into(x, w, j0..j1, &mut deq, &mut strip, span, j0);
+                        // only LoRC-attached linears read the error strip
+                        let mut err =
+                            vec![0.0f32; if lorc.is_some() { w.cols } else { 0 }];
+                        packed_rows_into(
+                            x, w, lorc, j0..j1, &mut deq, e2, &mut err, &mut strip, span, j0,
+                        );
                         (j0, strip)
                     })
                 })
@@ -109,12 +184,18 @@ pub fn packed_matmul_into(
 /// Decode-and-dot for one contiguous range of weight rows, accumulating
 /// into `sink` laid out `[x.rows, sink_cols]` at column `j - col_off`.
 /// The inner accumulation replicates `matmul_into`'s order exactly (see
-/// module docs).
+/// module docs). When `lorc` is present, each decoded row gets the
+/// fold-ordered `E₁·E₂` row added before the dot, making the strip
+/// bit-equal to the effective (folded) weight row.
+#[allow(clippy::too_many_arguments)]
 fn packed_rows_into(
     x: &Matrix,
     w: &PackedWeight,
+    lorc: Option<&PackedLorc>,
     rows: std::ops::Range<usize>,
     deq: &mut [f32],
+    e2: &[f32],
+    err: &mut [f32],
     sink: &mut [f32],
     sink_cols: usize,
     col_off: usize,
@@ -123,6 +204,16 @@ fn packed_rows_into(
     let deq = &mut deq[..k];
     for j in rows {
         w.dequant_row_into(j, deq);
+        if let Some(l) = lorc {
+            // effective row = Ŵ row + (E₁·E₂) row — the same elementwise
+            // add (and the same err-row accumulation order) as the
+            // pipeline's `LorcFactors::apply`, hence bit-equal to the
+            // folded checkpoint's weight row.
+            l.err_row_into(j, e2, err);
+            for (d, e) in deq.iter_mut().zip(&err[..k]) {
+                *d += e;
+            }
+        }
         for r in 0..x.rows {
             let xrow = &x.data[r * k..(r + 1) * k];
             let mut acc = sink[r * sink_cols + (j - col_off)];
@@ -153,14 +244,14 @@ fn packed_rows_into(
 mod tests {
     use super::*;
     use crate::formats::NumericFormat;
+    use crate::lorc::{LorcConfig, LorcFactors};
     use crate::quant::{quantize_weight_rtn, ScaleConstraint, WeightQuantConfig};
     use crate::rng::Rng;
     use crate::tensor::matmul::matmul_into;
 
-    fn reference(x: &Matrix, w: &PackedWeight, seed: &Matrix) -> Matrix {
-        let wt = w.dequantize().transpose();
+    fn reference(x: &Matrix, wt: &Matrix, seed: &Matrix) -> Matrix {
         let mut out = seed.clone();
-        matmul_into(x, &wt, &mut out);
+        matmul_into(x, wt, &mut out);
         out
     }
 
@@ -183,10 +274,10 @@ mod tests {
                     let w = PackedWeight::from_quantized(&q);
                     let x = Matrix::randn(batch, cols, 1.0, &mut rng);
                     let seed = Matrix::randn(batch, rows, 0.1, &mut rng); // bias rows
-                    let want = reference(&x, &w, &seed);
+                    let want = reference(&x, &w.dequantize().transpose(), &seed);
                     let mut got = seed.clone();
-                    let mut deq = vec![0.0f32; cols];
-                    packed_matmul_into(&x, &w, &mut got, &mut deq, 1);
+                    let mut s = GemvScratch::sized(cols, 0);
+                    packed_matmul_into(&x, &w, None, &mut got, &mut s, 1);
                     for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
                         assert_eq!(
                             a.to_bits(),
@@ -218,10 +309,10 @@ mod tests {
             x.data[39 + c] = 0.0;
         }
         let seed = Matrix::zeros(2, 6);
-        let want = reference(&x, &w, &seed);
+        let want = reference(&x, &w.dequantize().transpose(), &seed);
         let mut got = seed.clone();
-        let mut deq = vec![0.0f32; 39];
-        packed_matmul_into(&x, &w, &mut got, &mut deq, 1);
+        let mut s = GemvScratch::sized(39, 0);
+        packed_matmul_into(&x, &w, None, &mut got, &mut s, 1);
         assert_eq!(
             want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
@@ -240,11 +331,11 @@ mod tests {
         let x = Matrix::randn(3, 64, 1.0, &mut rng);
         let seed = Matrix::randn(3, 21, 0.1, &mut rng);
         let mut solo = seed.clone();
-        let mut deq = vec![0.0f32; 64];
-        packed_matmul_into(&x, &w, &mut solo, &mut deq, 1);
+        let mut s = GemvScratch::sized(64, 0);
+        packed_matmul_into(&x, &w, None, &mut solo, &mut s, 1);
         for threads in [2usize, 3, 5, 64] {
             let mut sharded = seed.clone();
-            packed_matmul_into(&x, &w, &mut sharded, &mut deq, threads);
+            packed_matmul_into(&x, &w, None, &mut sharded, &mut s, threads);
             assert_eq!(
                 solo.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 sharded.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
@@ -254,7 +345,56 @@ mod tests {
         // empty activation batch: a no-op on every thread count
         let empty = Matrix::zeros(0, 64);
         let mut empty_out = Matrix::zeros(0, 21);
-        packed_matmul_into(&empty, &w, &mut empty_out, &mut deq, 1);
-        packed_matmul_into(&empty, &w, &mut empty_out, &mut deq, 3);
+        packed_matmul_into(&empty, &w, None, &mut empty_out, &mut s, 1);
+        packed_matmul_into(&empty, &w, None, &mut empty_out, &mut s, 3);
+    }
+
+    #[test]
+    fn lorc_gemv_bit_identical_to_folded_dense_kernel() {
+        // the packed+LoRC contract at kernel scale: the GEMV over
+        // (codes, factors) must reproduce the dense kernel over the
+        // *folded* effective matrix `Ŵ + E₁E₂`, bit for bit — solo and
+        // sharded, even and odd dims, FP8 and F16 factors
+        let mut rng = Rng::seeded(0x6E6);
+        for (rows, cols, batch) in [(10, 64, 1), (9, 33, 3)] {
+            for (rank, ffmt) in [
+                (2usize, NumericFormat::FP8_E4M3),
+                (8, NumericFormat::FP8_E4M3),
+                (5, NumericFormat::F16),
+            ] {
+                let wm = Matrix::randn(rows, cols, 0.05, &mut rng);
+                let q = quantize_weight_rtn(
+                    &wm,
+                    &WeightQuantConfig::new(NumericFormat::FP4_E2M1)
+                        .with_group_size(16)
+                        .with_constraint(ScaleConstraint::M1),
+                );
+                let lorc = LorcFactors::compute(
+                    &wm,
+                    &q.dequantize(),
+                    &LorcConfig { rank, factor_format: ffmt },
+                )
+                .unwrap();
+                let effective = lorc.apply(&q.dequantize()); // the pipeline's fold
+                let w = PackedWeight::from_quantized(&q);
+                let pl = PackedLorc::pack(&[(rows, Some(&lorc))]);
+                let x = Matrix::randn(batch, cols, 1.0, &mut rng);
+                let seed = Matrix::randn(batch, rows, 0.1, &mut rng);
+                let want = reference(&x, &effective.transpose(), &seed);
+                for threads in [1usize, 3] {
+                    let mut got = seed.clone();
+                    let mut s = GemvScratch::sized(cols, pl.e2_elems());
+                    packed_matmul_into(&x, &w, Some(&pl), &mut got, &mut s, threads);
+                    for (i, (a, b)) in want.data.iter().zip(&got.data).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "rank {rank} {} threads {threads} elem {i}: {a} vs {b}",
+                            ffmt.name(),
+                        );
+                    }
+                }
+            }
+        }
     }
 }

@@ -3,9 +3,10 @@
 //! execution shapes: full-window `forward` scoring, and the KV-cached
 //! serving loop (`reset` → `prefill` → `decode_step`/`decode_step_batch`)
 //! once the arena, the caches and the cache pool are warm — for the dense
-//! f32 weight layout **and** the bit-packed layout (whose fused GEMV
-//! decodes weight rows into the arena's strip; `threads == 1`, the
-//! threaded shard path spawns by design).
+//! f32 weight layout, the bit-packed layout (whose fused GEMV decodes
+//! weight rows into the arena's strip; `threads == 1`, the threaded shard
+//! path spawns by design), **and** the packed+LoRC layout (whose decoded-E₂
+//! and error-row strips also live in the arena).
 //!
 //! This file holds exactly one test: the allocation counter is global, so
 //! any concurrently running test in the same binary would pollute it.
@@ -15,6 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use zeroquant_fp::engine::EngineOpts;
 use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
@@ -196,4 +198,70 @@ fn steady_state_decode_is_allocation_free() {
     }
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
     assert_eq!(after - before, 0, "packed kv serving loop allocated");
+
+    // ---- packed + LoRC: the factor decode/error strips live in the ----
+    // arena (DecodeScratch's GEMV strips, sized by CompiledModel::scratch),
+    // so the compensated decode loop is just as allocation-free.
+    let cfg = ModelConfig {
+        name: "alloc-test-lorc".into(),
+        arch: Arch::Opt,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 16,
+    };
+    let mut rng = Rng::seeded(0xA110E);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .with_constraint(ScaleConstraint::M1)
+        .with_lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 });
+    pcfg.use_gptq = false;
+    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
+    assert!(!sidecar.is_empty(), "lorc run must keep its sidecar");
+    let model = CompiledModel::compile_quantized(&qck, &sidecar, pcfg.engine_opts().packed(1));
+    let mut scratch = model.scratch();
+    let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
+    let short: Vec<u16> = long[..5].to_vec();
+
+    std::hint::black_box(model.forward(&long, &mut scratch));
+    std::hint::black_box(model.forward(&short, &mut scratch));
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..8 {
+        std::hint::black_box(model.forward(&long, &mut scratch));
+        std::hint::black_box(model.forward(&short, &mut scratch));
+        std::hint::black_box(model.score_nll(&long, &mut scratch));
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "packed+lorc steady-state decode allocated");
+
+    let mut cache = model.kv_cache();
+    let mut caches = vec![model.kv_cache(), model.kv_cache()];
+    let prompt = &long[..6];
+    let gen = &long[6..10];
+    let toks = [long[0], long[1]];
+    let mut serve_pass = |cache: &mut zeroquant_fp::plan::KvCache,
+                          caches: &mut Vec<zeroquant_fp::plan::KvCache>,
+                          scratch: &mut zeroquant_fp::plan::DecodeScratch| {
+        cache.reset();
+        std::hint::black_box(model.prefill(prompt, cache, scratch));
+        for &t in gen {
+            std::hint::black_box(model.decode_step(t, cache, scratch));
+        }
+        for c in caches.iter_mut() {
+            c.reset();
+            std::hint::black_box(model.prefill(&prompt[..3], c, scratch));
+        }
+        for _ in 0..3 {
+            std::hint::black_box(model.decode_step_batch(&toks, caches, scratch));
+        }
+    };
+    serve_pass(&mut cache, &mut caches, &mut scratch); // warm
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for _ in 0..6 {
+        serve_pass(&mut cache, &mut caches, &mut scratch);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(after - before, 0, "packed+lorc kv serving loop allocated");
 }
