@@ -2,6 +2,8 @@
 //! workload, proving every layer composes:
 //!
 //!   trained checkpoint (build-time JAX; random fallback on a fresh clone)
+//!     → one validated QuantRecipe (the w4a8-fp-m2 preset + LoRC) driving
+//!       every stage below through ServingStack
 //!     → Rust PTQ pipeline (GPTQ → FGQ FP4 → M2 constraint → LoRC)
 //!     → compiled execution plan (prepacked weights, arena, LUT A8)
 //!     → Rust serving coordinator (dynamic batcher) — L3 request path
@@ -23,20 +25,16 @@
 //! ```
 
 use std::path::Path;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use zeroquant_fp::coordinator::{
-    pick_backend, BatchPolicy, Coordinator, CoordinatorConfig, ScoreBackend,
-};
+use zeroquant_fp::coordinator::{pick_backend, ScoreBackend, ServingStack};
 use zeroquant_fp::data::{read_tokens, Corpus, CorpusKind};
-use zeroquant_fp::engine::Engine;
+use zeroquant_fp::engine::{Engine, WeightLayout};
 use zeroquant_fp::error::Result;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
-use zeroquant_fp::plan::logits_nll;
-use zeroquant_fp::plan::{argmax, CompiledModel};
-use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::plan::{argmax, logits_nll};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 fn main() -> Result<()> {
@@ -66,11 +64,26 @@ fn main() -> Result<()> {
 
     // ---- PTQ: the paper's headline configuration -------------------------
     // W4A8 FP-FP + M2 power-of-2 scales + E5M2 cast + LoRC — i.e. the
-    // deployable H100 configuration of Section 3, end to end.
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M2 { rows: 32 })
-        .with_lorc(LorcConfig::default());
-    pcfg.cast_fp4_to_e5m2 = true;
+    // deployable H100 configuration of Section 3, end to end: the
+    // `w4a8-fp-m2` preset with LoRC folded in. One validated recipe drives
+    // PTQ, the compiled plan and both coordinators below.
+    let recipe = {
+        let mut r = QuantRecipe::preset("w4a8-fp-m2")?;
+        r.name = "w4a8-fp-m2+lorc".to_string();
+        r.lorc = Some(LorcConfig::default());
+        r.max_wait_ms = 2;
+        r.validate()?;
+        r
+    };
+    // Same PTQ artifacts, bit-packed serving layout — the generation
+    // coordinator serves from this one.
+    let packed_recipe = {
+        let mut r = recipe.clone();
+        r.weights = WeightLayout::Packed { threads: 1 };
+        r.max_wait_ms = 0;
+        r.validate()?;
+        r
+    };
     let calib: Vec<Vec<u16>> = match read_tokens(Path::new("data/calib.tok")) {
         Ok(t) => t.chunks_exact(seq).map(|c| c.to_vec()).collect(),
         Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
@@ -83,16 +96,21 @@ fn main() -> Result<()> {
         }
         Err(e) => return Err(zeroquant_fp::anyhow!("data/calib.tok: {e}")),
     };
-    println!("[1/5] quantizing {} under {} ...", cfg.name, pcfg.scheme.name());
+    println!(
+        "[1/5] quantizing {} under {} (recipe {}) ...",
+        cfg.name,
+        recipe.scheme.name(),
+        recipe.name
+    );
     let t0 = Instant::now();
-    let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &calib, &pcfg);
+    let stack = ServingStack::build(&ck, &calib, &recipe)?;
     println!(
         "      {} tensors in {:.1}s, {:.2}x compression ({} -> {} bytes)",
-        report.layers.len(),
+        stack.report.layers.len(),
         t0.elapsed().as_secs_f64(),
-        report.compression(),
-        report.fp16_bytes,
-        report.quant_bytes
+        stack.report.compression(),
+        stack.report.fp16_bytes,
+        stack.report.quant_bytes
     );
 
     // ---- quality: compiled plan must match the reference bit-for-bit -----
@@ -115,10 +133,10 @@ fn main() -> Result<()> {
         Err(e) => return Err(zeroquant_fp::anyhow!("data/eval_c4.tok: {e}")),
     };
     let eval = &eval[..(seq * 16).min(eval.len())];
-    let opts = pcfg.engine_opts();
-    let model = CompiledModel::compile(&qck, opts);
+    let opts = recipe.engine_opts();
+    let model = stack.compile();
     let mut scratch = model.scratch();
-    let engine = Engine::with_opts(&qck, opts);
+    let engine = Engine::with_opts(&stack.checkpoint, opts);
     let mut mismatches = 0usize;
     let mut nll_sum = 0.0f64;
     let mut windows = 0usize;
@@ -145,7 +163,14 @@ fn main() -> Result<()> {
     zeroquant_fp::ensure!(mismatches == 0, "compiled/reference parity failed");
 
     // optional: PJRT parity when artifacts are present
-    match zeroquant_fp::runtime::hlo_perplexity(Path::new("artifacts"), &qck, &opts, eval, seq) {
+    let hlo = zeroquant_fp::runtime::hlo_perplexity(
+        Path::new("artifacts"),
+        &stack.checkpoint,
+        &opts,
+        eval,
+        seq,
+    );
+    match hlo {
         Ok(r_hlo) => {
             let rel = (ppl - r_hlo.ppl()).abs() / ppl;
             println!(
@@ -160,7 +185,7 @@ fn main() -> Result<()> {
     }
 
     // ---- serving: scoring -------------------------------------------------
-    let backend = pick_backend(Path::new("artifacts"), &qck, &opts);
+    let backend = pick_backend(Path::new("artifacts"), &stack.checkpoint, &opts);
     let backend_name = match &backend {
         ScoreBackend::Pjrt { .. } => "pjrt",
         ScoreBackend::Compiled => "compiled plan",
@@ -168,18 +193,9 @@ fn main() -> Result<()> {
     println!(
         "[3/5] serving {n_requests} scoring requests through the coordinator ({backend_name}) ..."
     );
-    let qck_gen = qck.clone(); // the generation coordinator compiles its own
-    let coord = Coordinator::new(CoordinatorConfig {
-        backend,
-        ck: qck,
-        opts,
-        policy: BatchPolicy {
-            max_batch: zeroquant_fp::runtime::SCORE_BATCH,
-            max_wait: Duration::from_millis(2),
-        },
-        kv_quant: None,
-        sidecar: None,
-    });
+    // the generation coordinator serves the same PTQ artifacts packed
+    let gen_stack = stack.with_recipe(&packed_recipe)?;
+    let coord = stack.coordinator_with_backend(backend);
     let corpus = Corpus::new(CorpusKind::C4);
     let stream = corpus.generate(n_requests * seq, 99);
     let windows: Vec<Vec<u16>> = stream.chunks_exact(seq).map(|c| c.to_vec()).collect();
@@ -242,17 +258,7 @@ fn main() -> Result<()> {
     // (W4A8+LoRC) at packed-memory footprint. The greedy-parity assert
     // below still checks against the *dense* plan's direct decode: the
     // packed+LoRC plan is bit-identical to it, so the tokens must match.
-    let gen_coord = Coordinator::new(CoordinatorConfig {
-        backend: ScoreBackend::Compiled,
-        ck: qck_gen,
-        opts: opts.packed(1),
-        policy: BatchPolicy {
-            max_batch: zeroquant_fp::runtime::SCORE_BATCH,
-            max_wait: Duration::ZERO,
-        },
-        kv_quant: None,
-        sidecar: Some(sidecar),
-    });
+    let gen_coord = gen_stack.coordinator();
     let mut gen_handles = Vec::new();
     for c in 0..3usize {
         let client = gen_coord.gen_client();

@@ -14,10 +14,9 @@ use std::path::Path;
 use zeroquant_fp::data::{read_tokens, CorpusKind};
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Checkpoint, ModelConfig, OutlierSpec};
-use zeroquant_fp::pipeline::{
-    calibrate_finalized, quantize_checkpoint_with_hessians, PtqConfig,
-};
+use zeroquant_fp::pipeline::{calibrate_finalized, ptq};
 use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 fn main() -> zeroquant_fp::error::Result<()> {
@@ -44,27 +43,32 @@ fn main() -> zeroquant_fp::error::Result<()> {
         .collect();
     println!("calibrating on {} sequences ...", calib.len());
     let hessians = calibrate_finalized(&ck, &calib);
-    let calib_tokens = calib.iter().map(|s| s.len()).sum();
 
-    let eval_ppl = |qck: &Checkpoint, cfg: &PtqConfig| -> zeroquant_fp::error::Result<Vec<f64>> {
-        let mut out = Vec::new();
-        for kind in CorpusKind::ALL {
-            let toks = read_tokens(Path::new(&format!("data/eval_{}.tok", kind.name())))?;
-            let r = if runtime == "hlo" {
-                zeroquant_fp::runtime::hlo_perplexity(
-                    Path::new("artifacts"),
-                    qck,
-                    &cfg.engine_opts(),
-                    &toks,
-                    qck.config.max_seq,
-                )?
-            } else {
-                zeroquant_fp::eval::perplexity(qck, cfg.engine_opts(), &toks, qck.config.max_seq)
-            };
-            out.push(r.ppl());
-        }
-        Ok(out)
-    };
+    let eval_ppl =
+        |qck: &Checkpoint, recipe: &QuantRecipe| -> zeroquant_fp::error::Result<Vec<f64>> {
+            let mut out = Vec::new();
+            for kind in CorpusKind::ALL {
+                let toks = read_tokens(Path::new(&format!("data/eval_{}.tok", kind.name())))?;
+                let r = if runtime == "hlo" {
+                    zeroquant_fp::runtime::hlo_perplexity(
+                        Path::new("artifacts"),
+                        qck,
+                        &recipe.engine_opts(),
+                        &toks,
+                        qck.config.max_seq,
+                    )?
+                } else {
+                    zeroquant_fp::eval::perplexity(
+                        qck,
+                        recipe.engine_opts(),
+                        &toks,
+                        qck.config.max_seq,
+                    )
+                };
+                out.push(r.ppl());
+            }
+            Ok(out)
+        };
 
     println!(
         "\n{:<22} {:>8} {:>8} {:>8} {:>8}  {:>9} {:>8}",
@@ -77,13 +81,13 @@ fn main() -> zeroquant_fp::error::Result<()> {
         ("W4A8 FP-FP", "w4a8-fp-fp", false),
         ("W4A8 FP-FP +LoRC", "w4a8-fp-fp", true),
     ] {
-        let mut pcfg = PtqConfig::new(Scheme::parse(scheme).unwrap());
+        let mut b = QuantRecipe::builder(Scheme::parse(scheme).unwrap());
         if lorc {
-            pcfg = pcfg.with_lorc(LorcConfig::default());
+            b = b.lorc(LorcConfig::default());
         }
-        let (qck, report) =
-            quantize_checkpoint_with_hessians(&ck, &hessians, calib_tokens, &pcfg);
-        let ppls = eval_ppl(&qck, &pcfg)?;
+        let recipe = b.build()?;
+        let out = ptq(&ck, &calib, Some(&hessians), &recipe);
+        let ppls = eval_ppl(&out.checkpoint, &recipe)?;
         let mean = ppls.iter().sum::<f64>() / 3.0;
         println!(
             "{:<22} {:>8.3} {:>8.3} {:>8.3} {:>8.3}  {:>9} {:>7.2}x",
@@ -92,8 +96,8 @@ fn main() -> zeroquant_fp::error::Result<()> {
             ppls[0],
             ppls[1],
             ppls[2],
-            report.quant_bytes,
-            report.compression()
+            out.report.quant_bytes,
+            out.report.compression()
         );
     }
     println!("\n(expected shape: FP-FP tracks W16A16; INT-INT degrades with alpha; LoRC helps)");

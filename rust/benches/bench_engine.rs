@@ -10,13 +10,14 @@
 use std::path::Path;
 
 use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
 
@@ -76,13 +77,15 @@ fn main() {
     // (same quantized checkpoint; the packed plan stores bit-packed codes
     // and decodes through the fused shift-dequant GEMV)
     println!("\n-- packed W4 plan (bit-packed codes, fused dequant GEMV) --");
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M2 { rows: 32 });
-    pcfg.use_gptq = false; // RTN: codes only, no calibration passes
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    let qopts = pcfg.engine_opts();
-    let dense_q = CompiledModel::compile(&qck, qopts);
-    let packed_q = CompiledModel::compile_quantized(&qck, &sidecar, qopts.packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false) // RTN: codes only, no calibration passes
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(&ck, &[], &recipe).unwrap();
+    let dense_q = stack.compile_dense();
+    let packed_q = stack.compile();
     let (db, pb) = (dense_q.linear_weight_bytes(), packed_q.linear_weight_bytes());
     bench.note("f32 plan linear weight bytes", db as f64);
     bench.note("packed plan linear weight bytes", pb as f64);
@@ -116,13 +119,17 @@ fn main() {
     // the rank-r error into each decoded row, bit-identical to the dense
     // plan over the LoRC-folded checkpoint)
     println!("\n-- packed W4 + LoRC (rank 8, FP8 factors) --");
-    let lorc_pcfg = pcfg
-        .clone()
-        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 });
-    let (lqck, lsidecar, lreport) = quantize_checkpoint_full(&ck, &[], &lorc_pcfg);
-    let dense_l = CompiledModel::compile(&lqck, qopts);
-    let packed_l = CompiledModel::compile_quantized(&lqck, &lsidecar, qopts.packed(1));
-    let lorc_factor_bytes: usize = lreport.layers.iter().map(|l| l.lorc_bytes).sum();
+    let lorc_recipe = QuantRecipe::builder(recipe.scheme)
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false)
+        .lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 })
+        .packed(1)
+        .build()
+        .unwrap();
+    let lstack = ServingStack::build(&ck, &[], &lorc_recipe).unwrap();
+    let dense_l = lstack.compile_dense();
+    let packed_l = lstack.compile();
+    let lorc_factor_bytes: usize = lstack.report.layers.iter().map(|l| l.lorc_bytes).sum();
     bench.note("packed+lorc plan linear weight bytes", packed_l.linear_weight_bytes() as f64);
     bench.note("lorc factor bytes (rank 8 fp8)", lorc_factor_bytes as f64);
     bench.note(

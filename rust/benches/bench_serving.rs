@@ -21,16 +21,14 @@ use std::path::Path;
 use std::time::Duration;
 
 use zeroquant_fp::bench_harness::{Bench, Measurement};
-use zeroquant_fp::coordinator::{
-    pick_backend, BatchPolicy, Coordinator, CoordinatorConfig, ScoreBackend,
-};
+use zeroquant_fp::coordinator::{pick_backend, ScoreBackend, ServingStack};
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::SCORE_BATCH;
 
@@ -66,19 +64,18 @@ fn main() {
         "{:>10} {:>10} {:>12} {:>10} {:>10} {:>10}",
         "wait(ms)", "clients", "req/s", "p50(ms)", "p95(ms)", "batch"
     );
+    // The W16 no-op preset with per-run batching overrides: the benches
+    // drive the same recipe → ServingStack path the CLI and the e2e
+    // example use, so the sweep also covers that wiring.
+    let w16 = QuantRecipe::preset("w16").unwrap();
     for &wait_ms in waits {
         for clients in [1usize, 4, 8] {
-            let coord = Coordinator::new(CoordinatorConfig {
-                backend: backend.clone(),
-                ck: ck.clone(),
-                opts,
-                policy: BatchPolicy {
-                    max_batch: SCORE_BATCH,
-                    max_wait: Duration::from_millis(wait_ms),
-                },
-                kv_quant: None,
-                sidecar: None,
-            });
+            let mut r = w16.clone();
+            r.max_batch = SCORE_BATCH;
+            r.max_wait_ms = wait_ms;
+            let coord = ServingStack::build(&ck, &[], &r)
+                .unwrap()
+                .coordinator_with_backend(backend.clone());
             let mut handles = Vec::new();
             for c in 0..clients {
                 let client = coord.client();
@@ -205,13 +202,15 @@ fn main() {
     // the JSON artifact (measurements + notes) as the packed-vs-f32 perf
     // trajectory.
     println!("\n-- packed W4 plan vs f32 plan (w4a8, batched kv decode) --");
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M2 { rows: 32 });
-    pcfg.use_gptq = false; // RTN: codes only, no calibration passes
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    let qopts = pcfg.engine_opts();
-    let dense_q = CompiledModel::compile(&qck, qopts);
-    let packed_q = CompiledModel::compile_quantized(&qck, &sidecar, qopts.packed(1));
+    let w4_recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false) // RTN: codes only, no calibration passes
+        .packed(1)
+        .build()
+        .unwrap();
+    let w4_stack = ServingStack::build(&ck, &[], &w4_recipe).unwrap();
+    let dense_q = w4_stack.compile_dense();
+    let packed_q = w4_stack.compile();
     let (db, pb) = (dense_q.linear_weight_bytes(), packed_q.linear_weight_bytes());
     bench.note("f32 plan linear weight bytes", db as f64);
     bench.note("packed plan linear weight bytes", pb as f64);
@@ -248,12 +247,16 @@ fn main() {
     // per weight; this section records how that lands in tokens/s, plus
     // the factor-byte overhead, in the JSON artifact.
     println!("\n-- packed W4A8 + LoRC (rank 8, FP8 factors): decode cost of compensation --");
-    let lorc_pcfg = pcfg
-        .clone()
-        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 });
-    let (lqck, lsidecar, lreport) = quantize_checkpoint_full(&ck, &[], &lorc_pcfg);
-    let packed_lorc = CompiledModel::compile_quantized(&lqck, &lsidecar, qopts.packed(1));
-    let lorc_factor_bytes: usize = lreport.layers.iter().map(|l| l.lorc_bytes).sum();
+    let lorc_recipe = QuantRecipe::builder(w4_recipe.scheme)
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false)
+        .lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 })
+        .packed(1)
+        .build()
+        .unwrap();
+    let lorc_stack = ServingStack::build(&ck, &[], &lorc_recipe).unwrap();
+    let packed_lorc = lorc_stack.compile();
+    let lorc_factor_bytes: usize = lorc_stack.report.layers.iter().map(|l| l.lorc_bytes).sum();
     bench.note("packed+lorc plan linear weight bytes", packed_lorc.linear_weight_bytes() as f64);
     bench.note("lorc factor bytes (rank 8 fp8)", lorc_factor_bytes as f64);
     {
@@ -288,14 +291,10 @@ fn main() {
     // ---- the same curve end to end: coordinator continuous batching -------
     println!("\n-- coordinator continuous-batching generation (8 clients, 48 requests) --");
     for max_batch in [1usize, 2, 4, 8] {
-        let coord = Coordinator::new(CoordinatorConfig {
-            backend: ScoreBackend::Compiled,
-            ck: ck.clone(),
-            opts,
-            policy: BatchPolicy { max_batch, max_wait: Duration::ZERO },
-            kv_quant: None,
-            sidecar: None,
-        });
+        let mut r = w16.clone();
+        r.max_batch = max_batch;
+        r.max_wait_ms = 0;
+        let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
         let mut handles = Vec::new();
         for c in 0..8usize {
             let client = coord.gen_client();

@@ -1,15 +1,19 @@
 //! Implementations of the non-experiment CLI commands.
+//!
+//! Every quantization/serving knob flows through one translation —
+//! [`QuantRecipe::from_args`] — so `quantize`, `eval` and `serve` cannot
+//! drift apart, and any run can be pinned to a reproducible artifact with
+//! `--recipe <path|preset>` (explicit flags still override; see
+//! `zqfp recipe list`).
 
 use std::path::{Path, PathBuf};
 
 use crate::cli::Args;
+use crate::coordinator::ServingStack;
 use crate::data::{read_tokens, write_tokens, Corpus, CorpusKind};
-use crate::engine::EngineOpts;
-use crate::formats::NumericFormat;
-use crate::lorc::LorcConfig;
 use crate::model::{inject_outliers, Checkpoint, OutlierSpec};
-use crate::pipeline::{quantize_checkpoint, PtqConfig};
-use crate::quant::{ScaleConstraint, Scheme};
+use crate::pipeline::ptq;
+use crate::recipe::{PRESET_NAMES, QuantRecipe};
 use crate::rng::Rng;
 
 pub fn gen_corpus(args: &Args) -> Result<(), String> {
@@ -67,6 +71,36 @@ pub fn info(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `zqfp recipe list` / `zqfp recipe show <name|path>` — inspect the typed
+/// configuration artifacts every quantize/eval/serve run is driven by.
+pub fn recipe(args: &Args) -> Result<(), String> {
+    let sub = args.positional.first().map(String::as_str).unwrap_or("list");
+    match sub {
+        "list" => {
+            args.finish()?;
+            for name in PRESET_NAMES {
+                let r = QuantRecipe::preset(name).map_err(|e| e.to_string())?;
+                println!("{name:<14} {}", r.summary());
+            }
+            println!("\nuse with: zqfp serve|eval|quantize --recipe <name|path> [overrides]");
+            println!("inspect:  zqfp recipe show <name|path>");
+            Ok(())
+        }
+        "show" => {
+            let spec = args
+                .positional
+                .get(1)
+                .ok_or("usage: zqfp recipe show <name|path>")?
+                .clone();
+            args.finish()?;
+            let r = QuantRecipe::load(&spec)?;
+            println!("{}", r.to_json_pretty());
+            Ok(())
+        }
+        other => Err(format!("unknown recipe subcommand '{other}' (try: list, show <name|path>)")),
+    }
+}
+
 /// Shared: load checkpoint and optionally apply outlier injection.
 pub fn load_ckpt_with_alpha(path: &Path, alpha: f32) -> Result<Checkpoint, String> {
     let mut ck = Checkpoint::load(path).map_err(|e| e.to_string())?;
@@ -77,61 +111,6 @@ pub fn load_ckpt_with_alpha(path: &Path, alpha: f32) -> Result<Checkpoint, Strin
     Ok(ck)
 }
 
-/// The one wording of the `--packed`-without-codes rejection, shared by
-/// `zqfp eval` and `zqfp serve` so the restriction lives (and is tested)
-/// in exactly one place. Only W16 trips it now — LoRC runs keep their
-/// codes (+ factors) in the sidecar and serve packed.
-pub const PACKED_NEEDS_CODES: &str =
-    "--packed needs quantized codes: pick a quantized --scheme (W16 leaves nothing to pack)";
-
-/// Shared: build a PtqConfig from CLI flags.
-pub fn ptq_config_from_args(args: &Args, scheme: Scheme) -> Result<PtqConfig, String> {
-    let mut cfg = PtqConfig::new(scheme);
-    cfg.group_size = args.get_usize("group", 64)?;
-    cfg.use_gptq = !args.flag("rtn");
-    cfg.cast_fp4_to_e5m2 = args.flag("cast");
-    if let Some(c) = args.get("constraint") {
-        cfg.constraint =
-            ScaleConstraint::parse(&c).ok_or(format!("bad --constraint {c}"))?;
-    }
-    if args.flag("lorc") {
-        // a valueless `--lorc-rank`/`--lorc-format`/`--rank` would
-        // silently fall back to the default (Args stores a sentinel `get`
-        // reports as absent) — reject instead of guessing
-        for knob in ["lorc-rank", "lorc-format", "rank"] {
-            if args.flag(knob) && args.get(knob).is_none() {
-                return Err(format!("--{knob} needs a value"));
-            }
-        }
-        // --rank is the historical spelling; --lorc-rank wins when both
-        // are given.
-        let rank = args.get_usize("lorc-rank", args.get_usize("rank", 8)?)?;
-        if rank == 0 {
-            return Err("--lorc-rank must be at least 1".to_string());
-        }
-        let fmt_s = args.get_or("lorc-format", "fp8-e4m3");
-        let factor_format = match NumericFormat::parse(&fmt_s) {
-            Some(f @ (NumericFormat::F16 | NumericFormat::Fp(_))) => f,
-            Some(_) => {
-                return Err(format!(
-                    "--lorc-format: factors are stored FP or F16, not integer: {fmt_s}"
-                ))
-            }
-            None => return Err(format!("bad --lorc-format {fmt_s}")),
-        };
-        cfg.lorc = Some(LorcConfig { rank, factor_format });
-    } else {
-        let _ = args.get_usize("rank", 8)?; // historical knob: consumed leniently
-        // the new knobs without --lorc are almost certainly a dropped flag —
-        // silently serving without compensation would be a quality surprise.
-        // (`flag`, not `get`: a valueless knob must trip this too.)
-        if args.flag("lorc-rank") || args.flag("lorc-format") {
-            return Err("--lorc-rank/--lorc-format have no effect without --lorc".to_string());
-        }
-    }
-    Ok(cfg)
-}
-
 /// Load calibration sequences from `<data>/calib.tok`.
 pub fn load_calib(data: &Path, seq: usize) -> Result<Vec<Vec<u16>>, String> {
     let toks = read_tokens(&data.join("calib.tok"))
@@ -139,22 +118,32 @@ pub fn load_calib(data: &Path, seq: usize) -> Result<Vec<Vec<u16>>, String> {
     Ok(toks.chunks_exact(seq).map(|c| c.to_vec()).collect())
 }
 
+/// Calibration data for `recipe`: loaded only when the recipe actually
+/// consumes it (GPTQ), so RTN/W16 runs work without a calib.tok.
+fn calib_for(recipe: &QuantRecipe, data: &Path, seq: usize) -> Result<Vec<Vec<u16>>, String> {
+    if recipe.needs_calibration() {
+        load_calib(data, seq)
+    } else {
+        Ok(Vec::new())
+    }
+}
+
 pub fn quantize(args: &Args) -> Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let out = args.get("out").ok_or("--out required")?;
-    let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
-    let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
     let data = PathBuf::from(args.get_or("data", "data"));
     let seq = args.get_usize("seq", 128)?;
     let alpha = args.get_f32("alpha", 1.0)?;
-    let cfg = ptq_config_from_args(args, scheme)?;
+    let recipe = QuantRecipe::from_args(args, "w4a8-fp")?;
     args.finish()?;
 
     let ck = load_ckpt_with_alpha(Path::new(&ckpt), alpha)?;
-    let calib = load_calib(&data, seq.min(ck.config.max_seq))?;
+    let calib = calib_for(&recipe, &data, seq.min(ck.config.max_seq))?;
     let t0 = std::time::Instant::now();
-    let (qck, report) = quantize_checkpoint(&ck, &calib, &cfg);
-    qck.save(Path::new(&out)).map_err(|e| e.to_string())?;
+    let result = ptq(&ck, &calib, None, &recipe);
+    drop(ck); // only the effective checkpoint is written out
+    result.checkpoint.save(Path::new(&out)).map_err(|e| e.to_string())?;
+    let report = &result.report;
     println!(
         "{}: quantized {} tensors in {:?}",
         report.scheme_name,
@@ -181,43 +170,32 @@ pub fn eval(args: &Args) -> Result<(), String> {
     let corpus = args.get_or("corpus", "all");
     let runtime = args.get_or("runtime", "engine");
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let packed = args.flag("packed");
-    let gemv_threads = args.get_usize("gemv-threads", 1)?;
-    let scheme_s = args.get("scheme");
+    // eval defaults to the no-op W16 recipe: with no quantization flags it
+    // scores the checkpoint exactly as stored (the pre-recipe behavior).
+    let recipe = QuantRecipe::from_args(args, "w16")?;
+    args.finish()?;
+    let packed = !recipe.weights.is_dense();
+    if packed && runtime == "hlo" {
+        return Err("--packed runs in-process; drop --runtime hlo".to_string());
+    }
 
     let ck = load_ckpt_with_alpha(Path::new(&ckpt), alpha)?;
-    // If a scheme is given, quantize first (weights) and set act format.
-    let (ck, mut opts, sidecar) = match &scheme_s {
-        None => {
-            args.finish()?;
-            (ck, EngineOpts::default(), crate::quant::QuantSidecar::new())
-        }
-        Some(s) => {
-            let scheme = Scheme::parse(s).ok_or(format!("bad --scheme {s}"))?;
-            let cfg = ptq_config_from_args(args, scheme)?;
-            args.finish()?;
-            let calib = load_calib(&data, seq.min(ck.config.max_seq))?;
-            let (qck, sidecar, _) = crate::pipeline::quantize_checkpoint_full(&ck, &calib, &cfg);
-            (qck, cfg.engine_opts(), sidecar)
-        }
-    };
+    let max_seq = ck.config.max_seq;
+    let calib = calib_for(&recipe, &data, seq.min(max_seq))?;
+    let stack = ServingStack::build(&ck, &calib, &recipe).map_err(|e| e.to_string())?;
+    drop(ck); // the stack's effective checkpoint is the one being scored
+    let opts = recipe.engine_opts();
 
-    // --packed: evaluate through the bit-packed weight plan (bit-identical
-    // logits; this flag changes memory and speed, never numbers).
+    // --packed (or a packed recipe): evaluate through the bit-packed
+    // weight plan (bit-identical logits; this knob changes memory and
+    // speed, never numbers).
     let packed_model = if packed {
-        if runtime == "hlo" {
-            return Err("--packed runs in-process; drop --runtime hlo".to_string());
-        }
-        if sidecar.is_empty() {
-            return Err(PACKED_NEEDS_CODES.to_string());
-        }
-        opts = opts.packed(gemv_threads);
-        let model = crate::plan::CompiledModel::compile_quantized(&ck, &sidecar, opts);
+        let model = stack.compile();
         println!(
             "packed plan: {} B of linear weights{} ({} gemv threads)",
             model.linear_weight_bytes(),
-            if sidecar.has_lorc() { " incl. LoRC factors" } else { "" },
-            opts.weights.threads()
+            if stack.sidecar.has_lorc() { " incl. LoRC factors" } else { "" },
+            recipe.weights.threads()
         );
         Some(model)
     } else {
@@ -234,14 +212,14 @@ pub fn eval(args: &Args) -> Result<(), String> {
         let toks = read_tokens(&data.join(format!("eval_{}.tok", kind.name())))
             .map_err(|e| format!("eval_{}.tok: {e}", kind.name()))?;
         let toks = &toks[..toks.len().min(max_tokens)];
-        let seqn = seq.min(ck.config.max_seq);
+        let seqn = seq.min(max_seq);
         let r = if let Some(model) = &packed_model {
             crate::eval::perplexity_model(model, toks, seqn)
         } else if runtime == "hlo" {
-            crate::runtime::hlo_perplexity(&artifacts, &ck, &opts, toks, seqn)
+            crate::runtime::hlo_perplexity(&artifacts, &stack.checkpoint, &opts, toks, seqn)
                 .map_err(|e| e.to_string())?
         } else {
-            crate::eval::perplexity(&ck, opts, toks, seqn)
+            crate::eval::perplexity(&stack.checkpoint, opts, toks, seqn)
         };
         println!("{}: ppl {:.4}  ({} tokens)", kind.name(), r.ppl(), r.tokens);
         ppls.push(r.ppl());
@@ -263,59 +241,58 @@ pub fn selfcheck(args: &Args) -> Result<(), String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::WeightLayout;
+    use crate::quant::ScaleConstraint;
 
     fn argv(s: &[&str]) -> Vec<String> {
         s.iter().map(|x| x.to_string()).collect()
     }
 
     #[test]
-    fn constraint_m2_rows_threads_through_cli() {
-        let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
-        let args = Args::parse(&argv(&["--constraint", "m2:16"])).unwrap();
-        let cfg = ptq_config_from_args(&args, scheme).unwrap();
-        assert_eq!(cfg.constraint, ScaleConstraint::M2 { rows: 16 });
-        // zero-row compute groups are rejected with a parse error
-        let bad = Args::parse(&argv(&["--constraint", "m2:0"])).unwrap();
-        assert!(ptq_config_from_args(&bad, scheme).is_err());
-        // default stays the paper's 32-row group
-        let dflt = Args::parse(&argv(&["--constraint", "m2"])).unwrap();
-        assert_eq!(
-            ptq_config_from_args(&dflt, scheme).unwrap().constraint,
-            ScaleConstraint::M2 { rows: 32 }
-        );
+    fn recipe_list_and_show_run() {
+        let list = Args::parse(&argv(&["list"])).unwrap();
+        recipe(&list).unwrap();
+        for name in PRESET_NAMES {
+            let show = Args::parse(&argv(&["show", name])).unwrap();
+            recipe(&show).unwrap();
+        }
+        let bogus = Args::parse(&argv(&["show", "not-a-preset-or-file"])).unwrap();
+        assert!(recipe(&bogus).is_err());
+        let bad_sub = Args::parse(&argv(&["frobnicate"])).unwrap();
+        assert!(recipe(&bad_sub).is_err());
     }
 
     #[test]
-    fn lorc_rank_and_format_thread_through_cli() {
-        let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
-        let args =
-            Args::parse(&argv(&["--lorc", "--lorc-rank", "16", "--lorc-format", "f16"])).unwrap();
-        let l = ptq_config_from_args(&args, scheme).unwrap().lorc.unwrap();
-        assert_eq!(l.rank, 16);
-        assert!(matches!(l.factor_format, NumericFormat::F16));
-        // the historical --rank spelling still works (and FP8 E4M3 stays
-        // the default factor format)
-        let args = Args::parse(&argv(&["--lorc", "--rank", "4"])).unwrap();
-        let l = ptq_config_from_args(&args, scheme).unwrap().lorc.unwrap();
-        assert_eq!(l.rank, 4);
-        assert_eq!(l.factor_format, NumericFormat::FP8_E4M3);
-        // integer factor formats and rank 0 are rejected
-        let bad = Args::parse(&argv(&["--lorc", "--lorc-format", "int8"])).unwrap();
-        assert!(ptq_config_from_args(&bad, scheme).is_err());
-        let bad = Args::parse(&argv(&["--lorc", "--lorc-rank", "0"])).unwrap();
-        assert!(ptq_config_from_args(&bad, scheme).is_err());
-        // LoRC knobs without --lorc are a dropped-flag mistake, not a no-op
-        // — with a value or bare (the bare form parses as a sentinel flag)
-        let off = Args::parse(&argv(&["--lorc-rank", "4"])).unwrap();
-        assert!(ptq_config_from_args(&off, scheme).is_err());
-        let bare = Args::parse(&argv(&["--lorc-format"])).unwrap();
-        assert!(ptq_config_from_args(&bare, scheme).is_err());
-        // a valueless knob under --lorc is rejected, not defaulted
-        let noval = Args::parse(&argv(&["--lorc", "--lorc-rank"])).unwrap();
-        assert!(ptq_config_from_args(&noval, scheme).is_err());
-        // ...but the bare run (no LoRC flags at all) stays clean
-        let none = Args::parse(&argv(&[])).unwrap();
-        assert!(ptq_config_from_args(&none, scheme).unwrap().lorc.is_none());
-        assert!(none.finish().is_ok());
+    fn serve_and_eval_share_one_translation() {
+        // the drift-prone knobs — constraint, LoRC, packed, kv-cache —
+        // resolve identically no matter which command parses them, because
+        // both go through QuantRecipe::from_args (with their own default
+        // preset)
+        let flags = argv(&[
+            "--scheme",
+            "w4a8-fp-fp",
+            "--constraint",
+            "m2:16",
+            "--lorc",
+            "--lorc-rank",
+            "4",
+            "--packed",
+            "--gemv-threads",
+            "2",
+        ]);
+        let serve_r = QuantRecipe::from_args(&Args::parse(&flags).unwrap(), "w4a8-fp").unwrap();
+        let eval_r = QuantRecipe::from_args(&Args::parse(&flags).unwrap(), "w16").unwrap();
+        assert_eq!(serve_r.constraint, eval_r.constraint);
+        assert_eq!(serve_r.constraint, ScaleConstraint::M2 { rows: 16 });
+        assert_eq!(serve_r.lorc, eval_r.lorc);
+        assert_eq!(serve_r.weights, WeightLayout::Packed { threads: 2 });
+        assert_eq!(serve_r.weights, eval_r.weights);
+        assert_eq!(serve_r.scheme, eval_r.scheme);
+        // only the per-command default differs — and only when the flag
+        // soup doesn't pin the scheme
+        let bare_serve = QuantRecipe::from_args(&Args::parse(&argv(&[])).unwrap(), "w4a8-fp");
+        let bare_eval = QuantRecipe::from_args(&Args::parse(&argv(&[])).unwrap(), "w16");
+        assert_eq!(bare_serve.unwrap().name, "w4a8-fp");
+        assert_eq!(bare_eval.unwrap().name, "w16");
     }
 }

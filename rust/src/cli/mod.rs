@@ -10,25 +10,37 @@ zqfp — ZeroQuant-FP: W4A8 post-training quantization with FP formats
 
 USAGE: zqfp <command> [options]
 
+Quantization + serving knobs are one typed recipe. `--recipe <name|path>`
+pins a run to a preset or a saved JSON artifact; explicit flags override
+recipe fields, and every boolean knob has an off-switch so a pinned
+recipe is fully overridable (--no-lorc, --no-cast, --dense, --rtn/--gptq,
+--kv-cache none). `zqfp recipe list` shows the in-tree presets.
+
 commands:
   gen-corpus   --out data/ [--train-tokens N] [--eval-tokens N] [--calib-seqs N]
                write synthetic train/calib/eval token streams (.tok)
   info         --ckpt m.zqckpt           inspect a checkpoint
-  quantize     --ckpt m.zqckpt --scheme w4a8-fp-fp --out q.zqckpt
+  recipe       list | show <name|path>   the named presets (w4a8-fp,
+               w4a8-fp-m1, w4a8-fp-m2, w4a8-fp-lorc, w8a8-int, w16) and
+               the JSON form of any recipe
+  quantize     --ckpt m.zqckpt --out q.zqckpt [--recipe <name|path>]
+               [--scheme w4a8-fp-fp]
                [--lorc [--lorc-rank N] [--lorc-format fp8|e5m2|f16]]
                [--constraint none|m1|m2|m2:<rows>]
                [--group N] [--rtn] [--cast] [--alpha A] [--data data/]
-  eval         --ckpt m.zqckpt [--scheme ...] [--corpus wiki|ptb|c4|all]
-               [--data data/] [--seq N] [--max-tokens N] [--alpha A]
-               [--runtime hlo|engine] [--artifacts artifacts/]
-               [--packed [--gemv-threads N]] evaluate through the
-               bit-packed weight plan (same bits, ~1/7 the weight bytes;
-               composes with --lorc — factors ride along as codes)
+  eval         --ckpt m.zqckpt [--recipe <name|path>] [--scheme ...]
+               [--corpus wiki|ptb|c4|all] [--data data/] [--seq N]
+               [--max-tokens N] [--alpha A] [--runtime hlo|engine]
+               [--artifacts artifacts/] [--packed [--gemv-threads N]]
+               evaluate through the bit-packed weight plan (same bits,
+               ~1/7 the weight bytes; composes with --lorc — factors
+               ride along as codes)
   table        --id 1|2|3|a1 [--data data/] [--ckpt-dir ckpt/] [--fast]
                [--runtime hlo|engine] regenerate a paper table
   figure       --id 1|2 [--ckpt m.zqckpt] regenerate a paper figure
-  serve        --ckpt m.zqckpt [--requests N] [--clients N] [--scheme ...]
-               [--max-batch N] [--max-wait-ms MS] [--artifacts artifacts/]
+  serve        --ckpt m.zqckpt [--recipe <name|path>] [--requests N]
+               [--clients N] [--scheme ...] [--max-batch N]
+               [--max-wait-ms MS] [--artifacts artifacts/]
                window-scoring demo (PJRT when artifacts exist, else the
                compiled engine); with --generate N [--kv-cache e4m3|e5m2]
                serves continuous-batching KV-cached generation instead;
@@ -48,6 +60,7 @@ pub fn run(argv: &[String]) -> Result<(), String> {
     match cmd {
         "gen-corpus" => commands::gen_corpus(&args),
         "info" => commands::info(&args),
+        "recipe" => commands::recipe(&args),
         "quantize" => commands::quantize(&args),
         "eval" => commands::eval(&args),
         "table" => crate::experiments::run_table(&args),

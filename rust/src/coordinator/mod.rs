@@ -67,11 +67,12 @@ use crate::cli::Args;
 use crate::data::{Corpus, CorpusKind};
 use crate::ensure;
 use crate::error::Result;
-use crate::formats::{FpFormat, NumericFormat};
+use crate::formats::FpFormat;
 use crate::model::Checkpoint;
-use crate::pipeline::quantize_checkpoint_full;
+use crate::pipeline::{ptq, PtqReport};
 use crate::plan::{argmax, CompiledModel, KvCache};
-use crate::quant::Scheme;
+use crate::quant::QuantSidecar;
+use crate::recipe::{QuantRecipe, RecipeError};
 use crate::runtime::HloScorer;
 
 /// Which execution engine serves scoring requests.
@@ -198,10 +199,110 @@ pub struct CoordinatorConfig {
     /// caches, bit-identical to full recompute.
     pub kv_quant: Option<FpFormat>,
     /// Quantized-artifact sidecar of the PTQ run (codes + optional LoRC
-    /// factors per linear, [`crate::pipeline::quantize_checkpoint_full`])
-    /// — required when `opts.weights` selects the packed layout; ignored
-    /// otherwise.
-    pub sidecar: Option<crate::quant::QuantSidecar>,
+    /// factors per linear, [`crate::pipeline::ptq`]) — required when
+    /// `opts.weights` selects the packed layout; ignored otherwise.
+    pub sidecar: Option<QuantSidecar>,
+}
+
+/// The checkpoint→sidecar→[`CompiledModel`]→[`Coordinator`] wiring that
+/// `zqfp serve`/`eval`, `examples/e2e_serve.rs` and the serving benches
+/// all share, driven by one validated [`QuantRecipe`].
+///
+/// [`build`](Self::build) runs PTQ under the recipe and keeps the three
+/// artifacts together; [`compile`](Self::compile) produces the execution
+/// plan in the recipe's weight layout (dense or bit-packed), and
+/// [`coordinator`](Self::coordinator) wires a full serving loop. The
+/// equivalence suites (`tests/{plan,packed,lorc,kv}_equivalence.rs`)
+/// drive their models through this path, so the recipe → plan wiring is
+/// covered by the same bit-identity contracts as the plans themselves.
+pub struct ServingStack {
+    /// The effective (fake-quantized, LoRC-folded) checkpoint.
+    pub checkpoint: Checkpoint,
+    /// Codes + optional LoRC factors per linear (empty only for W16).
+    pub sidecar: QuantSidecar,
+    pub report: PtqReport,
+    pub recipe: QuantRecipe,
+}
+
+impl ServingStack {
+    /// Quantize `ck` under `recipe` (calibrating from `calib` when the
+    /// recipe uses GPTQ) and wire the serving artifacts. The recipe is
+    /// re-validated here so a hand-mutated invalid one fails with its
+    /// typed [`RecipeError`] instead of a downstream panic.
+    pub fn build(
+        ck: &Checkpoint,
+        calib: &[Vec<u16>],
+        recipe: &QuantRecipe,
+    ) -> std::result::Result<ServingStack, RecipeError> {
+        recipe.validate()?;
+        let out = ptq(ck, calib, None, recipe);
+        Ok(ServingStack {
+            checkpoint: out.checkpoint,
+            sidecar: out.sidecar,
+            report: out.report,
+            recipe: recipe.clone(),
+        })
+    }
+
+    /// Re-wire the same PTQ artifacts under a different recipe — e.g. a
+    /// dense scoring stack and a packed generation stack from one
+    /// quantization run, or a GEMV-shard sweep over fixed codes. The new
+    /// recipe's serving side is honored; its PTQ side is assumed to match
+    /// the artifacts (they are not re-quantized).
+    pub fn with_recipe(
+        &self,
+        recipe: &QuantRecipe,
+    ) -> std::result::Result<ServingStack, RecipeError> {
+        recipe.validate()?;
+        Ok(ServingStack {
+            checkpoint: self.checkpoint.clone(),
+            sidecar: self.sidecar.clone(),
+            report: self.report.clone(),
+            recipe: recipe.clone(),
+        })
+    }
+
+    /// Compile the execution plan in the recipe's weight layout. The
+    /// packed layout compiles from the sidecar codes (bit-identical
+    /// logits, a fraction of the resident weight bytes); validation
+    /// guarantees the sidecar is non-empty whenever the layout is packed.
+    pub fn compile(&self) -> CompiledModel {
+        if self.recipe.weights.is_dense() {
+            CompiledModel::compile(&self.checkpoint, self.recipe.engine_opts())
+        } else {
+            CompiledModel::compile_quantized(
+                &self.checkpoint,
+                &self.sidecar,
+                self.recipe.engine_opts(),
+            )
+        }
+    }
+
+    /// The dense twin of [`compile`](Self::compile): the same effective
+    /// checkpoint compiled in the dense f32 layout *regardless* of the
+    /// recipe's serving layout — the oracle the packed plan is checked
+    /// against in the equivalence suites and benches. Activation options
+    /// still come from the recipe, so the two plans differ only in where
+    /// the same bits are stored.
+    pub fn compile_dense(&self) -> CompiledModel {
+        let mut opts = self.recipe.engine_opts();
+        opts.weights = crate::engine::WeightLayout::Dense;
+        CompiledModel::compile(&self.checkpoint, opts)
+    }
+
+    /// A coordinator on the compiled in-process backend (consumes the
+    /// stack — the coordinator owns the checkpoint and sidecar).
+    pub fn coordinator(self) -> Coordinator {
+        self.coordinator_with_backend(ScoreBackend::Compiled)
+    }
+
+    /// Same, with an explicit scoring backend (PJRT when artifacts exist;
+    /// see [`pick_backend`]).
+    pub fn coordinator_with_backend(self, backend: ScoreBackend) -> Coordinator {
+        let mut cfg = self.recipe.coordinator_config(self.checkpoint, Some(self.sidecar));
+        cfg.backend = backend;
+        Coordinator::new(cfg)
+    }
 }
 
 /// The request queue + serving loop.
@@ -519,74 +620,64 @@ impl Coordinator {
     }
 }
 
-/// `zqfp serve` — load a checkpoint, quantize it under `--scheme`, start
-/// the coordinator (PJRT when the artifact exists, otherwise the compiled
-/// in-process engine), fire `--requests` requests from `--clients`
-/// threads, and print the latency/throughput report (the e2e serving
-/// validation of DESIGN.md §5). With `--generate N` the workload is
-/// continuous-batching generation (N new tokens per request, compiled
-/// backend) instead of window scoring; `--kv-cache e4m3|e5m2` additionally
-/// stores the generation K/V caches in that FP8 format. `--packed` serves
-/// from the bit-packed weight layout (compiled backend; bit-identical
-/// logits, ~1/7 the resident weight bytes for W4), composable with
-/// `--lorc [--lorc-rank N] [--lorc-format fp8|f16]` — the low-rank
-/// compensation factors ride along as codes and the GEMV folds them into
-/// each decoded row, so W4A8+LoRC (the paper's best small-model recipe)
-/// serves at packed-memory footprint. `--gemv-threads N` shards the
-/// packed GEMV rows across N workers.
+/// `zqfp serve` — load a checkpoint, quantize it under the recipe
+/// (`--recipe <path|preset>` plus any overriding flags; default preset
+/// `w4a8-fp`), build the [`ServingStack`], fire `--requests` requests
+/// from `--clients` threads, and print the latency/throughput report (the
+/// e2e serving validation of DESIGN.md §5). Scoring runs on PJRT when the
+/// artifact exists, otherwise the compiled in-process engine. With
+/// `--generate N` the workload is continuous-batching generation (N new
+/// tokens per request, compiled backend) instead of window scoring;
+/// `--kv-cache e4m3|e5m2` additionally stores the generation K/V caches
+/// in that FP8 format. `--packed` serves from the bit-packed weight
+/// layout (compiled backend; bit-identical logits, ~1/7 the resident
+/// weight bytes for W4), composable with `--lorc [--lorc-rank N]
+/// [--lorc-format fp8|f16]` — the low-rank compensation factors ride
+/// along as codes and the GEMV folds them into each decoded row, so
+/// W4A8+LoRC (the paper's best small-model recipe) serves at
+/// packed-memory footprint. `--gemv-threads N` shards the packed GEMV
+/// rows across N workers.
 pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let data = PathBuf::from(args.get_or("data", "data"));
     let n_requests = args.get_usize("requests", 256)?;
     let n_clients = args.get_usize("clients", 4)?;
-    let max_wait_ms = args.get_usize("max-wait-ms", 2)?;
-    let max_batch = args.get_usize("max-batch", crate::runtime::SCORE_BATCH)?;
     let gen_new = args.get_usize("generate", 0)?;
-    let packed = args.flag("packed");
-    let gemv_threads = args.get_usize("gemv-threads", 1)?;
     let alpha = args.get_f32("alpha", 1.0)?;
-    let scheme_s = args.get_or("scheme", "w4a8-fp-fp");
-    let scheme = Scheme::parse(&scheme_s).ok_or(format!("bad --scheme {scheme_s}"))?;
-    let kv_quant = match args.get("kv-cache") {
-        None => None,
-        Some(s) => match NumericFormat::parse(&s) {
-            Some(NumericFormat::Fp(f)) => Some(f),
-            _ => return Err(format!("--kv-cache: not an FP format: {s}")),
-        },
-    };
-    let cfg = crate::cli::commands::ptq_config_from_args(args, scheme)?;
+    // One flag→recipe translation, shared with `zqfp quantize`/`eval`.
+    // serve keeps the paper's headline W4A8 FP-FP as its default recipe.
+    let recipe = QuantRecipe::from_args(args, "w4a8-fp")?;
     args.finish()?;
+    let packed = !recipe.weights.is_dense();
 
     let ck = crate::cli::commands::load_ckpt_with_alpha(std::path::Path::new(&ckpt), alpha)?;
     let seq = ck.config.max_seq;
     ensure_gen_fits(gen_new, seq)?;
-    let calib = crate::cli::commands::load_calib(&data, seq)?;
-    println!("quantizing under {} ...", scheme.name());
-    let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &calib, &cfg);
+    let calib = if recipe.needs_calibration() {
+        crate::cli::commands::load_calib(&data, seq)?
+    } else {
+        Vec::new()
+    };
+    println!("quantizing under {} (recipe {}) ...", recipe.scheme.name(), recipe.name);
+    let stack = ServingStack::build(&ck, &calib, &recipe).map_err(|e| e.to_string())?;
+    drop(ck); // the stack owns everything the serving run needs
     println!(
         "  {} tensors, {:.2}x compression",
-        report.layers.len(),
-        report.compression()
+        stack.report.layers.len(),
+        stack.report.compression()
     );
 
-    let mut opts = cfg.engine_opts();
-    if packed {
-        if sidecar.is_empty() {
-            return Err(crate::cli::commands::PACKED_NEEDS_CODES.to_string());
-        }
-        opts = opts.packed(gemv_threads);
-    }
     let backend = if gen_new > 0 || packed {
         ScoreBackend::Compiled // generation / packed path: compiled plan only
     } else {
-        pick_backend(&artifacts, &qck, &opts)
+        pick_backend(&artifacts, &stack.checkpoint, &recipe.engine_opts())
     };
     match &backend {
         ScoreBackend::Pjrt { .. } => println!("backend: pjrt ({})", artifacts.display()),
         ScoreBackend::Compiled => println!("backend: compiled in-process engine"),
     }
-    if let Some(fmt) = kv_quant {
+    if let Some(fmt) = recipe.kv_quant {
         println!("kv cache: {}", fmt.name());
     }
     if packed {
@@ -594,6 +685,7 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
         // pack pass (the serving loop builds the real packed plan once,
         // and `zqfp eval --packed` / the benches print the exact resident
         // bytes including scale/shift metadata).
+        let report = &stack.report;
         let dense_b = 2 * report.fp16_bytes; // f32 plan = 2 × fp16 accounting
         println!(
             "weights: ~{} B packed (codes + f16-scale accounting) vs {} B f32 plan \
@@ -601,9 +693,9 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             report.quant_bytes,
             dense_b,
             dense_b as f64 / report.quant_bytes.max(1) as f64,
-            gemv_threads.max(1),
+            recipe.weights.threads(),
         );
-        if cfg.lorc.is_some() {
+        if recipe.lorc.is_some() {
             let lorc_b: usize = report.layers.iter().map(|l| l.lorc_bytes).sum();
             // quant_bytes already includes the factors — subtract them so
             // the printed ratio is factors : codes, as labeled
@@ -621,18 +713,9 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let stream = corpus.generate(n_requests * seq, 7);
     let windows: Vec<Vec<u16>> = stream.chunks_exact(seq).map(|c| c.to_vec()).collect();
     let n_windows = windows.len();
+    let max_batch = recipe.max_batch;
 
-    let coord = Coordinator::new(CoordinatorConfig {
-        backend,
-        ck: qck,
-        opts,
-        policy: BatchPolicy {
-            max_batch,
-            max_wait: std::time::Duration::from_millis(max_wait_ms as u64),
-        },
-        kv_quant,
-        sidecar: if packed { Some(sidecar) } else { None },
-    });
+    let coord = stack.coordinator_with_backend(backend);
 
     let mut handles = Vec::new();
     let report = if gen_new > 0 {
@@ -657,7 +740,8 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     } else {
         println!(
             "serving {n_windows} scoring requests from {n_clients} clients \
-             (batch window {max_wait_ms} ms) ..."
+             (batch window {} ms) ...",
+            recipe.max_wait_ms
         );
         for c in 0..n_clients {
             let client = coord.client();
@@ -900,39 +984,41 @@ mod tests {
 
     #[test]
     fn packed_lorc_generation_matches_dense_generation() {
-        // the tentpole's serving-level contract: a coordinator serving from
-        // the packed layout with LoRC factors attached generates exactly
-        // the tokens the dense (folded-checkpoint) coordinator generates
+        // the serving-level contract, driven through the recipe API: a
+        // coordinator built from the packed recipe (LoRC factors attached)
+        // generates exactly the tokens the dense (folded-checkpoint)
+        // coordinator generates — same PTQ artifacts, two ServingStack
+        // rewirings
         use crate::lorc::LorcConfig;
-        use crate::pipeline::PtqConfig;
-        use crate::quant::QuantSidecar;
+        use crate::quant::Scheme;
 
         let ck = tiny_ck();
-        let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-            .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
-        pcfg.use_gptq = false;
-        let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-        assert!(!sidecar.is_empty() && sidecar.has_lorc());
-        let opts = pcfg.engine_opts();
+        let packed_recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .use_gptq(false)
+            .lorc(LorcConfig { rank: 2, factor_format: crate::formats::NumericFormat::FP8_E4M3 })
+            .packed(1)
+            .build()
+            .unwrap();
+        let dense_recipe = {
+            let mut r = packed_recipe.clone();
+            r.weights = crate::engine::WeightLayout::Dense;
+            r.validate().unwrap();
+            r
+        };
+        let stack = ServingStack::build(&ck, &[], &packed_recipe).unwrap();
+        assert!(!stack.sidecar.is_empty() && stack.sidecar.has_lorc());
         let prompt: Vec<u16> = vec![3, 14, 15];
 
-        let run = |opts: EngineOpts, sidecar: Option<QuantSidecar>| -> Vec<u16> {
-            let coord = Coordinator::new(CoordinatorConfig {
-                backend: ScoreBackend::Compiled,
-                ck: qck.clone(),
-                opts,
-                policy: BatchPolicy::default(),
-                kv_quant: None,
-                sidecar,
-            });
+        let run = |stack: ServingStack| -> Vec<u16> {
+            let coord = stack.coordinator();
             let client = coord.gen_client();
             let p = prompt.clone();
             let h = std::thread::spawn(move || client.generate(p, 4).unwrap());
             coord.run().unwrap();
             h.join().unwrap().tokens
         };
-        let dense = run(opts, None);
-        let packed = run(opts.packed(1), Some(sidecar));
+        let dense = run(stack.with_recipe(&dense_recipe).unwrap());
+        let packed = run(stack);
         assert_eq!(dense, packed);
         assert_eq!(dense.len(), 4);
     }

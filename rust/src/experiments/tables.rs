@@ -9,10 +9,9 @@ use crate::engine::EngineOpts;
 use crate::formats::NumericFormat;
 use crate::lorc::LorcConfig;
 use crate::model::{Arch, ModelConfig};
-use crate::pipeline::{
-    calibrate_finalized, quantize_checkpoint_with_hessians, FinalizedHessians, PtqConfig,
-};
+use crate::pipeline::{calibrate_finalized, ptq, FinalizedHessians};
 use crate::quant::{ScaleConstraint, Scheme};
+use crate::recipe::{QuantRecipe, RecipeBuilder};
 
 fn family_for(ctx: &ExpContext, arch: Arch) -> Vec<(ModelConfig, f32)> {
     let fam = ModelConfig::family(arch);
@@ -92,16 +91,15 @@ fn scheme_kind_label(s: &str) -> &'static str {
     }
 }
 
-/// Quantize (Hessians cached by the caller) + evaluate one scheme cell.
+/// Quantize (Hessians cached by the caller) + evaluate one recipe cell.
 fn cell(
     ctx: &mut ExpContext,
     ck: &crate::model::Checkpoint,
     hessians: &FinalizedHessians,
-    cfg: &PtqConfig,
+    recipe: &QuantRecipe,
 ) -> Result<PplRow, String> {
-    let calib_tokens = ctx.calib_seqs.iter().map(|s| s.len()).sum();
-    let (qck, _) = quantize_checkpoint_with_hessians(ck, hessians, calib_tokens, cfg);
-    ctx.ppl_row(&qck, cfg.engine_opts())
+    let out = ptq(ck, &ctx.calib_seqs, Some(hessians), recipe);
+    ctx.ppl_row(&out.checkpoint, recipe.engine_opts())
 }
 
 /// Table 2 — the main result: INT vs FP quantization for weight and
@@ -127,12 +125,13 @@ pub fn table2(ctx: &mut ExpContext) -> Result<String, String> {
                 for (mcfg, alpha) in &fam {
                     let ck = ctx.load_model(mcfg, *alpha)?;
                     let scheme = Scheme::parse(s).unwrap();
-                    let mut pcfg = PtqConfig::new(scheme);
+                    let mut b = RecipeBuilder::new(scheme);
                     if lorc {
-                        pcfg = pcfg.with_lorc(LorcConfig::default());
+                        b = b.lorc(LorcConfig::default());
                     }
+                    let recipe = b.build().map_err(|e| e.to_string())?;
                     let hessians = ctx.hessians_for(&ck)?;
-                    let cell = cell(ctx, &ck, &hessians, &pcfg)?;
+                    let cell = cell(ctx, &ck, &hessians, &recipe)?;
                     row.push_str(&format!("{:>30}", cell.fmt()));
                 }
                 writeln!(out, "{row}").ok();
@@ -177,15 +176,18 @@ pub fn table3(ctx: &mut ExpContext) -> Result<String, String> {
                 let mut row = format!("{qtype:<11}{clabel:<8}");
                 for (mcfg, alpha) in &fam {
                     let ck = ctx.load_model(mcfg, *alpha)?;
-                    let mut pcfg = PtqConfig::new(scheme).with_constraint(constraint);
                     // constrained scales are what the bit-shift cast needs;
                     // exercise the footnote-4 E5M2 cast in the same run
-                    pcfg.cast_fp4_to_e5m2 = !matches!(constraint, ScaleConstraint::None);
+                    // (exactly the w4a8-fp-m1 / w4a8-fp-m2 presets)
+                    let mut b = RecipeBuilder::new(scheme)
+                        .constraint(constraint)
+                        .cast_fp4_to_e5m2(!matches!(constraint, ScaleConstraint::None));
                     if lorc {
-                        pcfg = pcfg.with_lorc(LorcConfig::default());
+                        b = b.lorc(LorcConfig::default());
                     }
+                    let recipe = b.build().map_err(|e| e.to_string())?;
                     let hessians = ctx.hessians_for(&ck)?;
-                    let c = cell(ctx, &ck, &hessians, &pcfg)?;
+                    let c = cell(ctx, &ck, &hessians, &recipe)?;
                     row.push_str(&format!("{:>30}", c.fmt()));
                 }
                 writeln!(out, "{row}").ok();
@@ -223,12 +225,13 @@ pub fn table_a1(ctx: &mut ExpContext) -> Result<String, String> {
             for (mcfg, alpha) in &fam {
                 let ck = ctx.load_model(mcfg, *alpha)?;
                 let scheme = Scheme::parse(s).unwrap();
-                let mut pcfg = PtqConfig::new(scheme);
+                let mut b = RecipeBuilder::new(scheme);
                 if lorc {
-                    pcfg = pcfg.with_lorc(LorcConfig::default());
+                    b = b.lorc(LorcConfig::default());
                 }
+                let recipe = b.build().map_err(|e| e.to_string())?;
                 let hessians = ctx.hessians_for(&ck)?;
-                let c = cell(ctx, &ck, &hessians, &pcfg)?;
+                let c = cell(ctx, &ck, &hessians, &recipe)?;
                 row.push_str(&format!("{:>12.2}", c.mean()));
             }
             writeln!(out, "{row}").ok();

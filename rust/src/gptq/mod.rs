@@ -25,7 +25,7 @@ use crate::quant::{constrain_scales, QuantizedWeight, WeightQuantConfig};
 use crate::tensor::Matrix;
 
 /// GPTQ hyper-parameters (defaults follow the reference implementation).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GptqConfig {
     /// Dampening fraction of mean(diag(H)).
     pub percdamp: f64,

@@ -41,6 +41,7 @@ pub mod model;
 pub mod pipeline;
 pub mod plan;
 pub mod quant;
+pub mod recipe;
 pub mod rng;
 pub mod runtime;
 pub mod tensor;

@@ -39,7 +39,7 @@ use crate::linalg::{jacobi_svd, truncate_svd, LinalgError};
 use crate::tensor::Matrix;
 
 /// LoRC configuration.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LorcConfig {
     /// Rank of the compensation factors. The paper uses 8 for LLaMA and
     /// 16–56 for OPT; ZeroQuant-V2 reports insensitivity above 8.

@@ -2,78 +2,33 @@
 //! (optional) LoRC → effective checkpoint + report.
 //!
 //! This is the orchestration a downstream user runs (`zqfp quantize …`):
-//! feed a trained checkpoint and a calibration stream, get back (a) a
-//! checkpoint whose transformer linears carry the *effective* (fake-
-//! quantized, LoRC-compensated) weights for engine/PJRT replay, (b) the
-//! quantized-artifact sidecar (codes + optional LoRC factors per linear)
-//! the packed serving plan compiles from, and (c) a [`PtqReport`] with
-//! per-layer losses and size accounting.
+//! feed a trained checkpoint, calibration data and a
+//! [`QuantRecipe`](crate::recipe::QuantRecipe), get back a [`PtqOutput`]:
+//! (a) a checkpoint whose transformer linears carry the *effective*
+//! (fake-quantized, LoRC-compensated) weights for engine/PJRT replay,
+//! (b) the quantized-artifact sidecar (codes + optional LoRC factors per
+//! linear) the packed serving plan compiles from, and (c) a [`PtqReport`]
+//! with per-layer losses and size accounting.
+//!
+//! [`ptq`] is the **single** PTQ entry point (the old four-way
+//! `quantize_checkpoint*` family collapsed into it): pass
+//! `hessians: None` to calibrate from `calib_seqs` in place, or
+//! `Some(&hessians)` to reuse Hessians finalized once and swept across
+//! many recipes (the table-harness pattern — the Hessian depends only on
+//! the model + calibration data, never on the target format).
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::engine::{LinearSite, Site};
 use crate::formats::NumericFormat;
-use crate::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
-use crate::lorc::{LorcConfig, LorcFactors};
+use crate::gptq::{gptq_quantize, HessianAccumulator};
+use crate::lorc::LorcFactors;
 use crate::model::{Arch, Checkpoint};
 use crate::plan::CompiledModel;
-use crate::quant::{
-    quantize_weight_rtn, QuantSidecar, ScaleConstraint, Scheme, WeightQuantConfig,
-};
+use crate::quant::{quantize_weight_rtn, QuantSidecar, WeightQuantConfig};
+use crate::recipe::QuantRecipe;
 use crate::tensor::Matrix;
-
-/// Full PTQ configuration (one Table-2/3 cell).
-#[derive(Debug, Clone)]
-pub struct PtqConfig {
-    pub scheme: Scheme,
-    /// FGQ group size along input dims (paper: 256; our dims are smaller so
-    /// the default is 64 — same groups-per-row ratio).
-    pub group_size: usize,
-    pub constraint: ScaleConstraint,
-    /// Footnote-4 cast: requantize dequantized FP4 weights to E5M2.
-    pub cast_fp4_to_e5m2: bool,
-    /// GPTQ (true) or plain RTN (false, ablation baseline).
-    pub use_gptq: bool,
-    pub gptq: GptqConfig,
-    pub lorc: Option<LorcConfig>,
-}
-
-impl PtqConfig {
-    pub fn new(scheme: Scheme) -> Self {
-        PtqConfig {
-            scheme,
-            group_size: 64,
-            constraint: ScaleConstraint::None,
-            cast_fp4_to_e5m2: false,
-            use_gptq: true,
-            gptq: GptqConfig::default(),
-            lorc: None,
-        }
-    }
-
-    pub fn with_lorc(mut self, lorc: LorcConfig) -> Self {
-        self.lorc = Some(lorc);
-        self
-    }
-
-    pub fn with_constraint(mut self, c: ScaleConstraint) -> Self {
-        self.constraint = c;
-        self
-    }
-
-    /// Engine options matching this scheme's activation side.
-    pub fn engine_opts(&self) -> crate::engine::EngineOpts {
-        crate::engine::EngineOpts::with_act(self.scheme.activation)
-    }
-
-    fn weight_cfg(&self) -> WeightQuantConfig {
-        WeightQuantConfig::new(self.scheme.weight)
-            .with_group_size(self.group_size)
-            .with_constraint(self.constraint)
-            .with_cast(self.cast_fp4_to_e5m2)
-    }
-}
 
 /// Per-weight-tensor outcome.
 #[derive(Debug, Clone)]
@@ -113,6 +68,27 @@ impl PtqReport {
     pub fn total_weight_mse(&self) -> f64 {
         self.layers.iter().map(|l| l.weight_mse).sum::<f64>() / self.layers.len().max(1) as f64
     }
+}
+
+/// Everything one PTQ run produces.
+///
+/// Under LoRC the *effective* checkpoint carries the dense fold
+/// `Ŵ + E₁E₂` — the reference engine path and the Table-2/3 numbers are
+/// unchanged — while the sidecar keeps the codes and factors separate so
+/// the packed runtime can reproduce the same bits at packed-memory
+/// footprint (`entry.weight.dequantize() + entry.lorc.approx_error()`
+/// equals the effective weight bit-for-bit; `tests/lorc_equivalence.rs`).
+/// The sidecar is empty only for W16 (nothing quantized).
+#[derive(Debug, Clone)]
+pub struct PtqOutput {
+    /// The effective checkpoint: quantized linears replaced by their
+    /// dequantized + LoRC-compensated values; everything else untouched.
+    pub checkpoint: Checkpoint,
+    /// One [`crate::quant::SidecarEntry`] per transformer linear — the
+    /// input the packed execution plan compiles from
+    /// ([`CompiledModel::compile_quantized`]).
+    pub sidecar: QuantSidecar,
+    pub report: PtqReport,
 }
 
 /// The quantizable linear tensors of one layer, with their Hessian site.
@@ -160,7 +136,7 @@ pub fn calibrate(ck: &Checkpoint, calib_seqs: &[Vec<u16>]) -> HashMap<Site, Hess
     accs
 }
 
-/// Finalized per-site Hessians ready for reuse across many schemes (the
+/// Finalized per-site Hessians ready for reuse across many recipes (the
 /// Hessian depends only on the model + calibration data, not on the target
 /// format — the table harness calibrates once per model and sweeps formats).
 pub type FinalizedHessians = HashMap<Site, Matrix>;
@@ -173,97 +149,79 @@ pub fn calibrate_finalized(ck: &Checkpoint, calib_seqs: &[Vec<u16>]) -> Finalize
         .collect()
 }
 
-/// Quantize a checkpoint under `cfg`. Returns the *effective* checkpoint
-/// (quantized linears replaced by their dequantized + LoRC-compensated
-/// values; everything else untouched) and the report.
-pub fn quantize_checkpoint(
+/// Quantize a checkpoint under `recipe` — the one PTQ entry point.
+///
+/// * `calib_seqs` is the calibration set. With `hessians: None` and a
+///   GPTQ recipe it is forward-passed through [`calibrate_finalized`];
+///   RTN and W16 recipes never touch it (pass `&[]`). Either way its
+///   token count is recorded in the report.
+/// * `hessians: Some(h)` reuses Hessians finalized once by the caller
+///   (swept across recipes by the table harness).
+///
+/// The recipe must come from a validation gate
+/// ([`crate::recipe::RecipeBuilder::build`], a preset, or
+/// `QuantRecipe::from_json`); a hand-mutated invalid recipe panics here
+/// rather than producing an artifact no serving path can load.
+pub fn ptq(
     ck: &Checkpoint,
     calib_seqs: &[Vec<u16>],
-    cfg: &PtqConfig,
-) -> (Checkpoint, PtqReport) {
-    let (qck, _, report) = quantize_checkpoint_full(ck, calib_seqs, cfg);
-    (qck, report)
-}
-
-/// Like [`quantize_checkpoint`], additionally returning the quantized
-/// **sidecar**: one [`crate::quant::SidecarEntry`] per transformer linear
-/// (codes + the LoRC factors when the run used LoRC), the input the packed
-/// execution plan compiles from ([`CompiledModel::compile_quantized`]).
-/// The sidecar is empty only for W16 (nothing quantized). Under LoRC the
-/// *effective* checkpoint still carries the dense fold `Ŵ + E₁E₂` — the
-/// reference engine path and the Table-2/3 numbers are unchanged — while
-/// the sidecar keeps the codes and factors separate so the packed runtime
-/// can reproduce the same bits at packed-memory footprint
-/// (`entry.weight.dequantize() + entry.lorc.approx_error()` equals the
-/// effective weight bit-for-bit; `tests/lorc_equivalence.rs`).
-pub fn quantize_checkpoint_full(
-    ck: &Checkpoint,
-    calib_seqs: &[Vec<u16>],
-    cfg: &PtqConfig,
-) -> (Checkpoint, QuantSidecar, PtqReport) {
-    let calib_tokens: usize = calib_seqs.iter().map(|s| s.len()).sum();
-    let needs_hessians = cfg.use_gptq && !matches!(cfg.scheme.weight, NumericFormat::F16);
-    let hessians = if needs_hessians {
-        calibrate_finalized(ck, calib_seqs)
-    } else {
-        HashMap::new()
-    };
-    quantize_checkpoint_with_hessians_full(ck, &hessians, calib_tokens, cfg)
-}
-
-/// Same, with pre-computed Hessians (reused across schemes).
-pub fn quantize_checkpoint_with_hessians(
-    ck: &Checkpoint,
-    hessians: &FinalizedHessians,
-    calib_tokens: usize,
-    cfg: &PtqConfig,
-) -> (Checkpoint, PtqReport) {
-    let (qck, _, report) = quantize_checkpoint_with_hessians_full(ck, hessians, calib_tokens, cfg);
-    (qck, report)
-}
-
-/// The full-result form of [`quantize_checkpoint_with_hessians`]; see
-/// [`quantize_checkpoint_full`] for the sidecar contract.
-pub fn quantize_checkpoint_with_hessians_full(
-    ck: &Checkpoint,
-    hessians: &FinalizedHessians,
-    calib_tokens: usize,
-    cfg: &PtqConfig,
-) -> (Checkpoint, QuantSidecar, PtqReport) {
+    hessians: Option<&FinalizedHessians>,
+    recipe: &QuantRecipe,
+) -> PtqOutput {
+    recipe
+        .validate()
+        .expect("invalid recipe: construct through RecipeBuilder::build / preset / from_json");
     let t0 = Instant::now();
+    let calib_tokens: usize = calib_seqs.iter().map(|s| s.len()).sum();
     let mut out = ck.clone();
     let mut sidecar = QuantSidecar::new();
     let mut layers = Vec::new();
     let mut fp16_bytes = 0usize;
     let mut quant_bytes = 0usize;
 
-    if matches!(cfg.scheme.weight, NumericFormat::F16) {
+    if matches!(recipe.scheme.weight, NumericFormat::F16) {
         // W16: nothing to quantize; report is trivially empty.
-        return (
-            out,
+        return PtqOutput {
+            checkpoint: out,
             sidecar,
-            PtqReport {
-                scheme_name: cfg.scheme.name(),
+            report: PtqReport {
+                scheme_name: recipe.scheme.name(),
                 layers,
                 fp16_bytes: 0,
                 quant_bytes: 0,
                 calib_tokens,
                 wall_ms: t0.elapsed().as_millis(),
             },
-        );
+        };
     }
 
-    let wcfg = cfg.weight_cfg();
+    let owned_hessians;
+    let hessians: &FinalizedHessians = match hessians {
+        Some(h) => h,
+        None => {
+            owned_hessians = if recipe.needs_calibration() {
+                calibrate_finalized(ck, calib_seqs)
+            } else {
+                HashMap::new()
+            };
+            &owned_hessians
+        }
+    };
+
+    let wcfg = WeightQuantConfig::new(recipe.scheme.weight)
+        .with_group_size(recipe.group_size)
+        .with_constraint(recipe.constraint)
+        .with_cast(recipe.cast_fp4_to_e5m2);
 
     for layer in 0..ck.config.n_layers {
         for (tensor, site) in quantizable_tensors(ck.config.arch, layer) {
             let w = ck.get(&tensor);
             fp16_bytes += w.data.len() * 2;
-            let (qw, gptq_loss) = if cfg.use_gptq {
+            let (qw, gptq_loss) = if recipe.use_gptq {
                 let h = hessians
                     .get(&Site { layer, site })
                     .unwrap_or_else(|| panic!("no hessian for {tensor}"));
-                let r = gptq_quantize(w, h, &wcfg, &cfg.gptq)
+                let r = gptq_quantize(w, h, &wcfg, &recipe.gptq)
                     .expect("gptq failed even with escalated damping");
                 (r.weight, r.loss)
             } else {
@@ -273,9 +231,8 @@ pub fn quantize_checkpoint_with_hessians_full(
             let mut effective = qw.dequantize();
             let mut lorc_bytes = 0usize;
             let mut factors = None;
-            if let Some(lcfg) = &cfg.lorc {
-                let f = LorcFactors::compute(w, &effective, lcfg)
-                    .expect("lorc svd failed");
+            if let Some(lcfg) = &recipe.lorc {
+                let f = LorcFactors::compute(w, &effective, lcfg).expect("lorc svd failed");
                 lorc_bytes = f.packed_bytes();
                 quant_bytes += lorc_bytes;
                 effective = f.apply(&effective);
@@ -298,38 +255,29 @@ pub fn quantize_checkpoint_with_hessians_full(
         }
     }
 
-    (
-        out,
+    PtqOutput {
+        checkpoint: out,
         sidecar,
-        PtqReport {
-            scheme_name: cfg.scheme.name(),
+        report: PtqReport {
+            scheme_name: recipe.scheme.name(),
             layers,
             fp16_bytes,
             quant_bytes,
             calib_tokens,
             wall_ms: t0.elapsed().as_millis(),
         },
-    )
-}
-
-/// Convenience: quantize + evaluate perplexity on a token stream.
-pub fn quantize_and_eval(
-    ck: &Checkpoint,
-    calib_seqs: &[Vec<u16>],
-    eval_tokens: &[u16],
-    seq_len: usize,
-    cfg: &PtqConfig,
-) -> (f64, PtqReport) {
-    let (qck, report) = quantize_checkpoint(ck, calib_seqs, cfg);
-    let ppl = crate::eval::perplexity(&qck, cfg.engine_opts(), eval_tokens, seq_len).ppl();
-    (ppl, report)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::engine::Engine;
+    use crate::formats::NumericFormat;
+    use crate::lorc::LorcConfig;
     use crate::model::ModelConfig;
+    use crate::quant::{ScaleConstraint, Scheme};
+    use crate::recipe::QuantRecipe;
     use crate::rng::Rng;
 
     fn tiny_ck(arch: Arch) -> Checkpoint {
@@ -354,34 +302,35 @@ mod tests {
             .collect()
     }
 
+    fn recipe(scheme: &str) -> QuantRecipe {
+        QuantRecipe::builder(Scheme::parse(scheme).unwrap()).build().unwrap()
+    }
+
     #[test]
     fn w16_is_identity() {
         let ck = tiny_ck(Arch::Opt);
-        let cfg = PtqConfig::new(Scheme::W16A16);
-        let (qck, report) = quantize_checkpoint(&ck, &calib_seqs(2, 8), &cfg);
+        let out = ptq(&ck, &calib_seqs(2, 8), None, &QuantRecipe::preset("w16").unwrap());
         for (name, m) in &ck.tensors {
-            assert_eq!(m, qck.get(name), "{name}");
+            assert_eq!(m, out.checkpoint.get(name), "{name}");
         }
-        assert_eq!(report.quant_bytes, 0);
+        assert_eq!(out.report.quant_bytes, 0);
+        assert!(out.sidecar.is_empty());
     }
 
     #[test]
     fn w4a8_pipeline_produces_close_model() {
         for arch in [Arch::Opt, Arch::Llama] {
             let ck = tiny_ck(arch);
-            let cfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
+            let r = recipe("w4a8-fp-fp");
             let seqs = calib_seqs(4, 12);
-            let (qck, report) = quantize_checkpoint(&ck, &seqs, &cfg);
+            let out = ptq(&ck, &seqs, None, &r);
             // all quantizable tensors replaced, compression ~3-4x
-            assert_eq!(
-                report.layers.len(),
-                2 * quantizable_tensors(arch, 0).len()
-            );
-            assert!(report.compression() > 2.5, "{}", report.compression());
+            assert_eq!(out.report.layers.len(), 2 * quantizable_tensors(arch, 0).len());
+            assert!(out.report.compression() > 2.5, "{}", out.report.compression());
             // function approximately preserved
             let toks: Vec<u16> = (0..12).map(|i| (i * 5 % 48) as u16).collect();
             let base = Engine::new(&ck).forward(&toks);
-            let quant = Engine::with_opts(&qck, cfg.engine_opts()).forward(&toks);
+            let quant = Engine::with_opts(&out.checkpoint, r.engine_opts()).forward(&toks);
             let rel = base.sub(&quant).fro_norm() / base.fro_norm();
             assert!(rel < 0.35, "{arch:?}: rel={rel}");
         }
@@ -391,14 +340,15 @@ mod tests {
     fn lorc_reduces_weight_mse() {
         let ck = tiny_ck(Arch::Opt);
         let seqs = calib_seqs(4, 12);
-        let base_cfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
+        let base = recipe("w4a8-fp-fp");
         // rank 2: on 24-dim toy matrices rank-8 factors would rival the
         // codes themselves; real dims amortize this (see examples/).
-        let lorc_cfg = base_cfg
-            .clone()
-            .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
-        let (_, r0) = quantize_checkpoint(&ck, &seqs, &base_cfg);
-        let (_, r1) = quantize_checkpoint(&ck, &seqs, &lorc_cfg);
+        let lorc = QuantRecipe::builder(base.scheme)
+            .lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 })
+            .build()
+            .unwrap();
+        let r0 = ptq(&ck, &seqs, None, &base).report;
+        let r1 = ptq(&ck, &seqs, None, &lorc).report;
         assert!(r1.total_weight_mse() < r0.total_weight_mse());
         assert!(r1.quant_bytes > r0.quant_bytes); // factors cost something
         assert!(r1.quant_bytes < r0.quant_bytes * 2); // ...but not much
@@ -408,39 +358,60 @@ mod tests {
     fn rtn_vs_gptq_ablation() {
         let ck = tiny_ck(Arch::Opt);
         let seqs = calib_seqs(6, 12);
-        let mut cfg = PtqConfig::new(Scheme::parse("w4a8-int-int").unwrap());
+        let gptq = recipe("w4a8-int-int");
+        let rtn = QuantRecipe::builder(gptq.scheme).use_gptq(false).build().unwrap();
         let eval: Vec<u16> = {
             let mut rng = Rng::seeded(133);
             (0..160).map(|_| rng.below(48) as u16).collect()
         };
-        let (ppl_gptq, _) = quantize_and_eval(&ck, &seqs, &eval, 16, &cfg);
-        cfg.use_gptq = false;
-        let (ppl_rtn, _) = quantize_and_eval(&ck, &seqs, &eval, 16, &cfg);
+        let ppl_of = |r: &QuantRecipe| {
+            let out = ptq(&ck, &seqs, None, r);
+            crate::eval::perplexity(&out.checkpoint, r.engine_opts(), &eval, 16).ppl()
+        };
+        let ppl_gptq = ppl_of(&gptq);
+        let ppl_rtn = ppl_of(&rtn);
         assert!(ppl_gptq.is_finite() && ppl_rtn.is_finite());
         // On a random (untrained) model the ordering is noisy, but both
         // must stay within a sane band of the FP16 model.
-        let ppl_fp = crate::eval::perplexity(
-            &ck,
-            crate::engine::EngineOpts::default(),
-            &eval,
-            16,
-        )
-        .ppl();
+        let ppl_fp =
+            crate::eval::perplexity(&ck, crate::engine::EngineOpts::default(), &eval, 16).ppl();
         assert!(ppl_gptq < ppl_fp * 3.0);
         assert!(ppl_rtn < ppl_fp * 3.0);
+    }
+
+    #[test]
+    fn hessian_reuse_matches_inline_calibration() {
+        // the Some(hessians) path must produce the same artifacts as the
+        // None path over the same calibration set (the table harness
+        // depends on this equivalence)
+        let ck = tiny_ck(Arch::Llama);
+        let seqs = calib_seqs(3, 10);
+        let r = recipe("w4a8-fp-fp");
+        let inline = ptq(&ck, &seqs, None, &r);
+        let hessians = calibrate_finalized(&ck, &seqs);
+        let reused = ptq(&ck, &seqs, Some(&hessians), &r);
+        assert_eq!(inline.report.calib_tokens, reused.report.calib_tokens);
+        for (name, m) in &inline.checkpoint.tensors {
+            let other = reused.checkpoint.get(name);
+            for (a, b) in m.data.iter().zip(&other.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+            }
+        }
     }
 
     #[test]
     fn sidecar_codes_reproduce_effective_weights() {
         let ck = tiny_ck(Arch::Llama);
         let seqs = calib_seqs(3, 10);
-        let cfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-            .with_constraint(ScaleConstraint::M2 { rows: 8 });
-        let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &seqs, &cfg);
-        assert_eq!(sidecar.len(), report.layers.len());
-        assert!(!sidecar.has_lorc());
-        for (name, entry) in sidecar.iter() {
-            let effective = qck.get(name);
+        let r = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .constraint(ScaleConstraint::M2 { rows: 8 })
+            .build()
+            .unwrap();
+        let out = ptq(&ck, &seqs, None, &r);
+        assert_eq!(out.sidecar.len(), out.report.layers.len());
+        assert!(!out.sidecar.has_lorc());
+        for (name, entry) in out.sidecar.iter() {
+            let effective = out.checkpoint.get(name);
             let deq = entry.weight.dequantize();
             for (a, b) in effective.data.iter().zip(&deq.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{name}");
@@ -450,14 +421,16 @@ mod tests {
         }
         // Under LoRC the sidecar stays populated: codes + factors together
         // reproduce the folded effective weights bit-for-bit.
-        let lorc_cfg = cfg
-            .clone()
-            .with_lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
-        let (lck, sidecar, lreport) = quantize_checkpoint_full(&ck, &seqs, &lorc_cfg);
-        assert_eq!(sidecar.len(), lreport.layers.len());
-        assert!(sidecar.has_lorc());
-        for (name, entry) in sidecar.iter() {
-            let effective = lck.get(name);
+        let lr = QuantRecipe::builder(r.scheme)
+            .constraint(ScaleConstraint::M2 { rows: 8 })
+            .lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 })
+            .build()
+            .unwrap();
+        let lout = ptq(&ck, &seqs, None, &lr);
+        assert_eq!(lout.sidecar.len(), lout.report.layers.len());
+        assert!(lout.sidecar.has_lorc());
+        for (name, entry) in lout.sidecar.iter() {
+            let effective = lout.checkpoint.get(name);
             let factors = entry.lorc.as_ref().expect("lorc factors in sidecar");
             let rebuilt = factors.apply(&entry.weight.dequantize());
             for (a, b) in effective.data.iter().zip(&rebuilt.data) {
@@ -471,16 +444,11 @@ mod tests {
         // regression: fp16_bytes == 0 used to make compression() report
         // 0.0x for a run that quantized nothing
         let ck = tiny_ck(Arch::Opt);
-        let (_, report) =
-            quantize_checkpoint(&ck, &calib_seqs(2, 8), &PtqConfig::new(Scheme::W16A16));
+        let report = ptq(&ck, &calib_seqs(2, 8), None, &QuantRecipe::preset("w16").unwrap()).report;
         assert_eq!(report.fp16_bytes, 0);
         assert_eq!(report.compression(), 1.0);
         // quantized runs still report the true ratio
-        let (_, r) = quantize_checkpoint(
-            &ck,
-            &calib_seqs(2, 8),
-            &PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap()),
-        );
+        let r = ptq(&ck, &calib_seqs(2, 8), None, &recipe("w4a8-fp-fp")).report;
         assert!(r.compression() > 1.0);
     }
 
@@ -488,16 +456,17 @@ mod tests {
     fn constraints_flow_through() {
         let ck = tiny_ck(Arch::Opt);
         let seqs = calib_seqs(3, 10);
-        let cfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-            .with_constraint(ScaleConstraint::M1);
-        let (qck, report) = quantize_checkpoint(&ck, &seqs, &cfg);
-        assert!(report.total_weight_mse() > 0.0);
+        let m1 = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .constraint(ScaleConstraint::M1)
+            .build()
+            .unwrap();
+        let out = ptq(&ck, &seqs, None, &m1);
+        assert!(out.report.total_weight_mse() > 0.0);
         // spot check: effective weights differ from unconstrained run
-        let (qck0, _) =
-            quantize_checkpoint(&ck, &seqs, &PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap()));
+        let out0 = ptq(&ck, &seqs, None, &recipe("w4a8-fp-fp"));
         assert_ne!(
-            qck.get("layers.0.attn.q.w").data,
-            qck0.get("layers.0.attn.q.w").data
+            out.checkpoint.get("layers.0.attn.q.w").data,
+            out0.checkpoint.get("layers.0.attn.q.w").data
         );
     }
 }

@@ -454,7 +454,7 @@ impl CompiledModel {
 
     /// Like [`compile`](Self::compile), but with the PTQ run's
     /// quantized-artifact sidecar
-    /// ([`crate::pipeline::quantize_checkpoint_full`]). When
+    /// ([`crate::pipeline::ptq`]). When
     /// `opts.weights` selects [`WeightLayout::Packed`], every transformer
     /// linear is stored as bit-packed codes and executed by the fused
     /// dequant GEMV — bit-identical to the dense plan over the same

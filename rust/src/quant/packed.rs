@@ -70,7 +70,7 @@ pub struct SidecarEntry {
 
 /// Quantized-artifact sidecar of a PTQ run: tensor name → codes (+ optional
 /// LoRC factors), the input the packed execution plan compiles from (see
-/// [`crate::pipeline::quantize_checkpoint_full`]). Empty only for W16 runs,
+/// [`crate::pipeline::ptq`]). Empty only for W16 runs,
 /// where nothing was quantized.
 #[derive(Debug, Clone, Default)]
 pub struct QuantSidecar {

@@ -1,0 +1,983 @@
+//! `QuantRecipe` — the one typed, serializable configuration for the whole
+//! stack, from CLI flags to the compiled serving plan.
+//!
+//! The paper's result grid is a cross-product of knobs: weight format
+//! (FP4/INT4/W8), activation format (FP8/INT8), FGQ group size, M1/M2
+//! power-of-2 scale constraints, RTN vs GPTQ, LoRC rank/format — plus the
+//! serving-side choices (dense vs bit-packed weight layout, GEMV shard
+//! count, KV-cache quantization, batching limits). A recipe captures every
+//! one of them in a single struct that is
+//!
+//! * **built once** via [`RecipeBuilder`] (or a named
+//!   [`QuantRecipe::preset`] mirroring the paper's tables) and
+//!   **validated once** at
+//!   construction — every previously scattered rejection (the
+//!   packed-needs-codes W16 rule, LoRC rank/format rules, zero-sized
+//!   groups/batches) is a typed [`RecipeError`] here, nowhere else;
+//! * **serializable**: [`QuantRecipe::to_json`] /
+//!   [`QuantRecipe::from_json`] round-trip bit-exactly through the
+//!   in-crate JSON shim ([`json`]), so a serve/eval/bench run can be
+//!   reproduced from one artifact instead of a flag soup;
+//! * **the source of derived views**: [`QuantRecipe::engine_opts`],
+//!   [`QuantRecipe::batch_policy`] and
+//!   [`QuantRecipe::coordinator_config`] are thin projections — the old
+//!   config structs still exist but are no longer hand-assembled at every
+//!   call site.
+//!
+//! Downstream, [`crate::pipeline::ptq`] consumes a recipe to produce the
+//! quantized checkpoint + sidecar + report, and
+//! [`crate::coordinator::ServingStack::build`] carries the same recipe on
+//! through plan compilation to a running [`crate::coordinator::Coordinator`].
+
+pub mod json;
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::cli::Args;
+use crate::engine::{EngineOpts, WeightLayout};
+use crate::formats::{FpFormat, NumericFormat};
+use crate::gptq::GptqConfig;
+use crate::lorc::LorcConfig;
+use crate::quant::{ScaleConstraint, Scheme};
+
+use self::json::Json;
+
+/// The in-tree presets, mirroring the paper's tables: the W4A8 FP-FP
+/// headline row (Table 2), its M1/M2 scale-constraint variants (Table 3,
+/// with the footnote-4 E5M2 cast on), the LoRC variant, the W8A8 INT-INT
+/// baseline, and the W16 no-op.
+pub const PRESET_NAMES: [&str; 6] =
+    ["w4a8-fp", "w4a8-fp-m1", "w4a8-fp-m2", "w4a8-fp-lorc", "w8a8-int", "w16"];
+
+/// Every invalid knob combination a recipe can reject, in one place.
+/// (Before the recipe API these lived in `cli/commands.rs`, the serve
+/// command and the packed compile path, each with its own wording.)
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecipeError {
+    /// Packed weight layout with W16 weights: nothing is quantized, so
+    /// there are no codes to pack.
+    PackedNeedsCodes,
+    /// LoRC compensates quantization error; W16 weights have none.
+    LorcNeedsQuantizedWeights,
+    /// LoRC rank must be at least 1.
+    LorcRankZero,
+    /// LoRC factors are stored FP or F16, never integer.
+    LorcFactorFormatNotFp(NumericFormat),
+    /// FGQ group size must be at least 1.
+    GroupSizeZero,
+    /// An M2 compute group of zero rows is meaningless.
+    M2ZeroRows,
+    /// GPTQ dampening must be a finite non-negative fraction (negative
+    /// damping never converges; NaN poisons the Cholesky).
+    GptqPercdampInvalid,
+    /// The GPTQ column sweep needs blocks of at least 1 column.
+    GptqBlockSizeZero,
+    /// The KV cache quantizes through an FP format (or not at all).
+    KvCacheNotFp(NumericFormat),
+    /// The coordinator needs at least one in-flight slot.
+    MaxBatchZero,
+    /// Not one of [`PRESET_NAMES`].
+    UnknownPreset(String),
+    /// Malformed JSON, an unknown key, or an unparseable field value.
+    BadJson(String),
+}
+
+impl fmt::Display for RecipeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecipeError::PackedNeedsCodes => f.write_str(
+                "--packed needs quantized codes: pick a quantized scheme \
+                 (W16 leaves nothing to pack)",
+            ),
+            RecipeError::LorcNeedsQuantizedWeights => {
+                f.write_str("lorc compensates quantization error: W16 weights have none")
+            }
+            RecipeError::LorcRankZero => f.write_str("lorc rank must be at least 1"),
+            RecipeError::LorcFactorFormatNotFp(fmt_) => write!(
+                f,
+                "lorc factors are stored FP or F16, not integer: {}",
+                fmt_.name()
+            ),
+            RecipeError::GroupSizeZero => f.write_str("group size must be at least 1"),
+            RecipeError::M2ZeroRows => {
+                f.write_str("m2 compute groups need at least 1 row (m2:0 is meaningless)")
+            }
+            RecipeError::GptqPercdampInvalid => {
+                f.write_str("gptq percdamp must be a finite non-negative fraction")
+            }
+            RecipeError::GptqBlockSizeZero => {
+                f.write_str("gptq block size must be at least 1")
+            }
+            RecipeError::KvCacheNotFp(fmt_) => {
+                write!(f, "kv cache quantizes through an FP format, not {}", fmt_.name())
+            }
+            RecipeError::MaxBatchZero => f.write_str("max_batch must be at least 1"),
+            RecipeError::UnknownPreset(name) => {
+                write!(f, "unknown preset {name:?} (try: {})", PRESET_NAMES.join(", "))
+            }
+            RecipeError::BadJson(msg) => write!(f, "recipe json: {msg}"),
+        }
+    }
+}
+
+// `?`-compatibility with the crate error shim (and std error chains).
+impl std::error::Error for RecipeError {}
+
+/// One fully-specified quantization + serving configuration.
+///
+/// Fields are public for ergonomic read access (and for tests that sweep
+/// the grid), but construct through [`QuantRecipe::builder`],
+/// [`QuantRecipe::preset`] or [`QuantRecipe::from_json`] — those are the
+/// validation gates. After mutating fields directly, call
+/// [`validate`](Self::validate) before handing the recipe to the pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantRecipe {
+    /// Display label: a preset name, or "custom".
+    pub name: String,
+    /// Weight + activation formats (one Table-2 cell).
+    pub scheme: Scheme,
+    /// FGQ group size along input dims (paper: 256; our dims are smaller
+    /// so the default is 64 — same groups-per-row ratio).
+    pub group_size: usize,
+    /// Power-of-2 scale constraint (Table 3's ✗ / M1 / M2).
+    pub constraint: ScaleConstraint,
+    /// Footnote-4 cast: requantize dequantized FP4 weights to E5M2.
+    pub cast_fp4_to_e5m2: bool,
+    /// GPTQ (true) or plain RTN (false, ablation baseline).
+    pub use_gptq: bool,
+    pub gptq: GptqConfig,
+    /// Low-rank compensation (`None` = off).
+    pub lorc: Option<LorcConfig>,
+    /// Serving weight layout: dense f32 or bit-packed codes with
+    /// `threads` GEMV shards.
+    pub weights: WeightLayout,
+    /// `Some(fmt)` ⇒ generation K/V caches are fake-quantized to this FP
+    /// format; `None` = exact f32 caches.
+    pub kv_quant: Option<FpFormat>,
+    /// Coordinator: max in-flight sequences / max scoring batch.
+    pub max_batch: usize,
+    /// Coordinator: dynamic-batching wait window (PJRT scoring backend).
+    pub max_wait_ms: u64,
+}
+
+/// Chainable construction for [`QuantRecipe`]; `build()` validates.
+#[derive(Debug, Clone)]
+pub struct RecipeBuilder {
+    r: QuantRecipe,
+}
+
+impl RecipeBuilder {
+    pub fn new(scheme: Scheme) -> RecipeBuilder {
+        RecipeBuilder {
+            r: QuantRecipe {
+                name: "custom".to_string(),
+                scheme,
+                group_size: 64,
+                constraint: ScaleConstraint::None,
+                cast_fp4_to_e5m2: false,
+                use_gptq: true,
+                gptq: GptqConfig::default(),
+                lorc: None,
+                weights: WeightLayout::Dense,
+                kv_quant: None,
+                max_batch: crate::runtime::SCORE_BATCH,
+                max_wait_ms: 2,
+            },
+        }
+    }
+
+    pub fn name(mut self, name: impl Into<String>) -> Self {
+        self.r.name = name.into();
+        self
+    }
+
+    pub fn group_size(mut self, g: usize) -> Self {
+        self.r.group_size = g;
+        self
+    }
+
+    pub fn constraint(mut self, c: ScaleConstraint) -> Self {
+        self.r.constraint = c;
+        self
+    }
+
+    pub fn cast_fp4_to_e5m2(mut self, on: bool) -> Self {
+        self.r.cast_fp4_to_e5m2 = on;
+        self
+    }
+
+    pub fn use_gptq(mut self, on: bool) -> Self {
+        self.r.use_gptq = on;
+        self
+    }
+
+    pub fn gptq(mut self, g: GptqConfig) -> Self {
+        self.r.gptq = g;
+        self
+    }
+
+    pub fn lorc(mut self, l: LorcConfig) -> Self {
+        self.r.lorc = Some(l);
+        self
+    }
+
+    /// Bit-packed serving layout with `threads` GEMV shards (clamped ≥ 1
+    /// so the layout round-trips through JSON unchanged).
+    pub fn packed(mut self, threads: usize) -> Self {
+        self.r.weights = WeightLayout::Packed { threads: threads.max(1) };
+        self
+    }
+
+    pub fn dense(mut self) -> Self {
+        self.r.weights = WeightLayout::Dense;
+        self
+    }
+
+    pub fn kv_quant(mut self, f: Option<FpFormat>) -> Self {
+        self.r.kv_quant = f;
+        self
+    }
+
+    pub fn max_batch(mut self, b: usize) -> Self {
+        self.r.max_batch = b;
+        self
+    }
+
+    pub fn max_wait_ms(mut self, ms: u64) -> Self {
+        self.r.max_wait_ms = ms;
+        self
+    }
+
+    /// Validate and return the recipe.
+    pub fn build(self) -> Result<QuantRecipe, RecipeError> {
+        self.r.validate()?;
+        Ok(self.r)
+    }
+}
+
+impl QuantRecipe {
+    pub fn builder(scheme: Scheme) -> RecipeBuilder {
+        RecipeBuilder::new(scheme)
+    }
+
+    /// A named in-tree preset ([`PRESET_NAMES`]).
+    pub fn preset(name: &str) -> Result<QuantRecipe, RecipeError> {
+        let b = |s: &str| RecipeBuilder::new(Scheme::parse(s).expect("preset scheme"));
+        let builder = match name {
+            "w4a8-fp" => b("w4a8-fp-fp"),
+            "w4a8-fp-m1" => b("w4a8-fp-fp")
+                .constraint(ScaleConstraint::M1)
+                .cast_fp4_to_e5m2(true),
+            "w4a8-fp-m2" => b("w4a8-fp-fp")
+                .constraint(ScaleConstraint::M2 { rows: 32 })
+                .cast_fp4_to_e5m2(true),
+            "w4a8-fp-lorc" => b("w4a8-fp-fp").lorc(LorcConfig::default()),
+            "w8a8-int" => b("w8a8-int-int"),
+            "w16" => b("w16a16"),
+            other => return Err(RecipeError::UnknownPreset(other.to_string())),
+        };
+        builder.name(name).build()
+    }
+
+    /// The single validation gate — every construction path funnels here.
+    pub fn validate(&self) -> Result<(), RecipeError> {
+        if self.group_size == 0 {
+            return Err(RecipeError::GroupSizeZero);
+        }
+        if matches!(self.constraint, ScaleConstraint::M2 { rows: 0 }) {
+            return Err(RecipeError::M2ZeroRows);
+        }
+        if !self.gptq.percdamp.is_finite() || self.gptq.percdamp < 0.0 {
+            return Err(RecipeError::GptqPercdampInvalid);
+        }
+        if self.gptq.block_size == 0 {
+            return Err(RecipeError::GptqBlockSizeZero);
+        }
+        let w16 = matches!(self.scheme.weight, NumericFormat::F16);
+        if !self.weights.is_dense() && w16 {
+            return Err(RecipeError::PackedNeedsCodes);
+        }
+        if let Some(l) = &self.lorc {
+            if w16 {
+                return Err(RecipeError::LorcNeedsQuantizedWeights);
+            }
+            if l.rank == 0 {
+                return Err(RecipeError::LorcRankZero);
+            }
+            match l.factor_format {
+                NumericFormat::F16 | NumericFormat::Fp(_) => {}
+                other => return Err(RecipeError::LorcFactorFormatNotFp(other)),
+            }
+        }
+        if self.max_batch == 0 {
+            return Err(RecipeError::MaxBatchZero);
+        }
+        Ok(())
+    }
+
+    /// True when PTQ under this recipe consumes calibration data (GPTQ on
+    /// a quantized weight format — RTN and W16 runs need none).
+    pub fn needs_calibration(&self) -> bool {
+        self.use_gptq && !matches!(self.scheme.weight, NumericFormat::F16)
+    }
+
+    /// Derived view: engine/plan options (activation fake-quant + weight
+    /// layout) for this recipe.
+    pub fn engine_opts(&self) -> EngineOpts {
+        let mut opts = EngineOpts::with_act(self.scheme.activation);
+        opts.weights = self.weights;
+        opts
+    }
+
+    /// Derived view: the coordinator's batching policy.
+    pub fn batch_policy(&self) -> crate::coordinator::BatchPolicy {
+        crate::coordinator::BatchPolicy {
+            max_batch: self.max_batch,
+            max_wait: Duration::from_millis(self.max_wait_ms),
+        }
+    }
+
+    /// Derived view: a full [`crate::coordinator::CoordinatorConfig`] over
+    /// an already-quantized checkpoint + sidecar (the compiled in-process
+    /// backend; [`crate::coordinator::ServingStack::build`] is the usual
+    /// way to get here).
+    pub fn coordinator_config(
+        &self,
+        ck: crate::model::Checkpoint,
+        sidecar: Option<crate::quant::QuantSidecar>,
+    ) -> crate::coordinator::CoordinatorConfig {
+        crate::coordinator::CoordinatorConfig {
+            backend: crate::coordinator::ScoreBackend::Compiled,
+            ck,
+            opts: self.engine_opts(),
+            policy: self.batch_policy(),
+            kv_quant: self.kv_quant,
+            sidecar: if self.weights.is_dense() { None } else { sidecar },
+        }
+    }
+
+    /// One-line human summary (`zqfp recipe list`).
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{}  group {}  constraint {}  {}",
+            self.scheme.name(),
+            self.group_size,
+            self.constraint.label(),
+            if self.use_gptq { "gptq" } else { "rtn" },
+        );
+        if self.cast_fp4_to_e5m2 {
+            s.push_str("  cast-e5m2");
+        }
+        if let Some(l) = &self.lorc {
+            s.push_str(&format!("  lorc r{}/{}", l.rank, format_label(l.factor_format)));
+        }
+        match self.weights {
+            WeightLayout::Dense => s.push_str("  dense"),
+            WeightLayout::Packed { threads } => {
+                s.push_str(&format!("  packed x{}", threads.max(1)))
+            }
+        }
+        if let Some(f) = self.kv_quant {
+            s.push_str(&format!("  kv {}", f.name().to_ascii_lowercase()));
+        }
+        s
+    }
+
+    /// Resolve a preset name or a JSON file path (the `--recipe` flag and
+    /// `zqfp recipe show` share this).
+    pub fn load(spec: &str) -> Result<QuantRecipe, String> {
+        if PRESET_NAMES.contains(&spec) {
+            return QuantRecipe::preset(spec).map_err(|e| e.to_string());
+        }
+        match std::fs::read_to_string(spec) {
+            Ok(text) => QuantRecipe::from_json(&text).map_err(|e| format!("{spec}: {e}")),
+            Err(io) => Err(format!(
+                "{spec}: not a preset ({}) and not a readable recipe file: {io}",
+                PRESET_NAMES.join(", ")
+            )),
+        }
+    }
+
+    // ---- JSON ------------------------------------------------------------
+
+    /// Serialize to a compact JSON document; [`from_json`](Self::from_json)
+    /// round-trips it field-for-field.
+    pub fn to_json(&self) -> String {
+        self.to_json_value().to_string()
+    }
+
+    /// Pretty two-space-indented form (`zqfp recipe show`).
+    pub fn to_json_pretty(&self) -> String {
+        self.to_json_value().pretty()
+    }
+
+    fn to_json_value(&self) -> Json {
+        let lorc = match &self.lorc {
+            None => Json::Null,
+            Some(l) => Json::Obj(vec![
+                ("rank".to_string(), Json::Num(l.rank as f64)),
+                ("format".to_string(), Json::Str(format_label(l.factor_format))),
+            ]),
+        };
+        let kv = match self.kv_quant {
+            None => Json::Null,
+            Some(f) => Json::Str(f.name().to_ascii_lowercase()),
+        };
+        let layout = match self.weights {
+            WeightLayout::Dense => "dense",
+            WeightLayout::Packed { .. } => "packed",
+        };
+        Json::Obj(vec![
+            ("name".to_string(), Json::Str(self.name.clone())),
+            ("weight".to_string(), Json::Str(format_label(self.scheme.weight))),
+            ("act".to_string(), Json::Str(format_label(self.scheme.activation))),
+            ("group_size".to_string(), Json::Num(self.group_size as f64)),
+            ("constraint".to_string(), Json::Str(self.constraint.label())),
+            ("cast_fp4_to_e5m2".to_string(), Json::Bool(self.cast_fp4_to_e5m2)),
+            ("gptq".to_string(), Json::Bool(self.use_gptq)),
+            ("gptq_percdamp".to_string(), Json::Num(self.gptq.percdamp)),
+            ("gptq_block_size".to_string(), Json::Num(self.gptq.block_size as f64)),
+            ("lorc".to_string(), lorc),
+            ("layout".to_string(), Json::Str(layout.to_string())),
+            ("gemv_threads".to_string(), Json::Num(self.weights.threads() as f64)),
+            ("kv_cache".to_string(), kv),
+            ("max_batch".to_string(), Json::Num(self.max_batch as f64)),
+            ("max_wait_ms".to_string(), Json::Num(self.max_wait_ms as f64)),
+        ])
+    }
+
+    /// Parse + validate a recipe document. Unknown keys are rejected (a
+    /// typo in a reproducibility artifact must not silently change the
+    /// run); absent keys take the [`RecipeBuilder`] defaults.
+    pub fn from_json(text: &str) -> Result<QuantRecipe, RecipeError> {
+        const KEYS: [&str; 15] = [
+            "name",
+            "weight",
+            "act",
+            "group_size",
+            "constraint",
+            "cast_fp4_to_e5m2",
+            "gptq",
+            "gptq_percdamp",
+            "gptq_block_size",
+            "lorc",
+            "layout",
+            "gemv_threads",
+            "kv_cache",
+            "max_batch",
+            "max_wait_ms",
+        ];
+        let doc = Json::parse(text).map_err(RecipeError::BadJson)?;
+        let obj = match &doc {
+            Json::Obj(kv) => kv,
+            _ => return Err(RecipeError::BadJson("top level must be an object".to_string())),
+        };
+        for (k, _) in obj {
+            if !KEYS.contains(&k.as_str()) {
+                return Err(RecipeError::BadJson(format!("unknown key {k:?}")));
+            }
+        }
+        let bad = RecipeError::BadJson;
+        let str_field = |key: &str| -> Result<Option<String>, RecipeError> {
+            match doc.get(key) {
+                None => Ok(None),
+                Some(v) => v
+                    .as_str()
+                    .map(|s| Some(s.to_string()))
+                    .ok_or_else(|| bad(format!("{key} must be a string"))),
+            }
+        };
+        let usize_field = |key: &str, default: usize| -> Result<usize, RecipeError> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| bad(format!("{key} must be a non-negative integer"))),
+            }
+        };
+        let bool_field = |key: &str, default: bool| -> Result<bool, RecipeError> {
+            match doc.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_bool().ok_or_else(|| bad(format!("{key} must be a boolean"))),
+            }
+        };
+        let format_field = |key: &str| -> Result<Option<NumericFormat>, RecipeError> {
+            match str_field(key)? {
+                None => Ok(None),
+                Some(s) => NumericFormat::parse(&s)
+                    .map(Some)
+                    .ok_or_else(|| bad(format!("{key}: unknown format {s:?}"))),
+            }
+        };
+
+        let weight = format_field("weight")?.unwrap_or(NumericFormat::FP4_E2M1);
+        let act = format_field("act")?.unwrap_or(NumericFormat::FP8_E4M3);
+        let mut b = RecipeBuilder::new(Scheme { weight, activation: act });
+        if let Some(name) = str_field("name")? {
+            b = b.name(name);
+        }
+        b = b.group_size(usize_field("group_size", 64)?);
+        if let Some(c) = str_field("constraint")? {
+            let parsed = ScaleConstraint::parse(&c)
+                .ok_or_else(|| bad(format!("constraint: unknown label {c:?}")))?;
+            b = b.constraint(parsed);
+        }
+        b = b.cast_fp4_to_e5m2(bool_field("cast_fp4_to_e5m2", false)?);
+        b = b.use_gptq(bool_field("gptq", true)?);
+        let mut gptq = GptqConfig::default();
+        if let Some(v) = doc.get("gptq_percdamp") {
+            gptq.percdamp = v
+                .as_f64()
+                .filter(|d| d.is_finite() && *d >= 0.0)
+                .ok_or_else(|| bad("gptq_percdamp must be a non-negative number".to_string()))?;
+        }
+        gptq.block_size = usize_field("gptq_block_size", gptq.block_size)?;
+        b = b.gptq(gptq);
+        match doc.get("lorc") {
+            None => {}
+            Some(v) if v.is_null() => {}
+            Some(v @ Json::Obj(kv)) => {
+                for (k, _) in kv {
+                    if k != "rank" && k != "format" {
+                        return Err(bad(format!("lorc: unknown key {k:?}")));
+                    }
+                }
+                let rank = match v.get("rank") {
+                    None => LorcConfig::default().rank,
+                    Some(r) => r.as_usize().ok_or_else(|| {
+                        bad("lorc.rank must be a non-negative integer".to_string())
+                    })?,
+                };
+                let factor_format = match v.get("format") {
+                    None => LorcConfig::default().factor_format,
+                    Some(f) => {
+                        let s = f
+                            .as_str()
+                            .ok_or_else(|| bad("lorc.format must be a string".to_string()))?;
+                        NumericFormat::parse(s)
+                            .ok_or_else(|| bad(format!("lorc.format: unknown format {s:?}")))?
+                    }
+                };
+                b = b.lorc(LorcConfig { rank, factor_format });
+            }
+            Some(_) => return Err(bad("lorc must be an object or null".to_string())),
+        }
+        let threads = usize_field("gemv_threads", 1)?;
+        match str_field("layout")?.as_deref() {
+            None | Some("dense") => {}
+            Some("packed") => b = b.packed(threads),
+            Some(other) => {
+                return Err(bad(format!("layout: expected dense|packed, got {other:?}")))
+            }
+        }
+        match doc.get("kv_cache") {
+            None => {}
+            Some(v) if v.is_null() => {}
+            Some(v) => {
+                let s = v
+                    .as_str()
+                    .ok_or_else(|| bad("kv_cache must be a format string or null".to_string()))?;
+                match s {
+                    // the CLI spelling of "off" is accepted in the file too
+                    // (NumericFormat::parse would read "none" as F16 and
+                    // produce a misleading rejection)
+                    "none" | "off" => {}
+                    _ => match NumericFormat::parse(s) {
+                        Some(NumericFormat::Fp(f)) => b = b.kv_quant(Some(f)),
+                        Some(other) => return Err(RecipeError::KvCacheNotFp(other)),
+                        None => return Err(bad(format!("kv_cache: unknown format {s:?}"))),
+                    },
+                }
+            }
+        }
+        b = b.max_batch(usize_field("max_batch", crate::runtime::SCORE_BATCH)?);
+        b = b.max_wait_ms(usize_field("max_wait_ms", 2)? as u64);
+        b.build()
+    }
+
+    // ---- CLI translation -------------------------------------------------
+
+    /// The one flag→recipe translation shared by `zqfp quantize`, `eval`
+    /// and `serve` (previously each subcommand reassembled its own config,
+    /// and the serve/eval paths had drifted).
+    ///
+    /// Precedence: explicit flags override the `--recipe <path|preset>`
+    /// base, which overrides the per-command `default` preset. LoRC knobs
+    /// (`--lorc-rank`, `--lorc-format`, the historical `--rank`) require
+    /// LoRC to be on (via `--lorc` or the base recipe). Every boolean
+    /// knob has a symmetric off-switch so a base recipe is fully
+    /// overridable: `--no-lorc`, `--no-cast`, `--dense` (vs `--packed`),
+    /// `--gptq` (vs `--rtn`), `--kv-cache none`; contradictory pairs are
+    /// an error, not a silent winner.
+    pub fn from_args(args: &Args, default: &str) -> Result<QuantRecipe, String> {
+        // a valueless `--recipe` would silently fall back to the default
+        // preset (Args stores a sentinel `get` reports as absent) — the
+        // one flag whose whole point is pinning the run must not be
+        // droppable
+        if args.flag("recipe") && args.get("recipe").is_none() {
+            return Err("--recipe needs a value (a preset name or a file path)".to_string());
+        }
+        let mut r = match args.get("recipe") {
+            Some(spec) => QuantRecipe::load(&spec)?,
+            None => QuantRecipe::preset(default).map_err(|e| e.to_string())?,
+        };
+
+        if let Some(s) = args.get("scheme") {
+            r.scheme = Scheme::parse(&s).ok_or(format!("bad --scheme {s}"))?;
+        }
+        r.group_size = args.get_usize("group", r.group_size)?;
+        let rtn = args.flag("rtn");
+        let gptq_flag = args.flag("gptq");
+        if rtn && gptq_flag {
+            return Err("--rtn and --gptq are contradictory".to_string());
+        }
+        if rtn {
+            r.use_gptq = false;
+        }
+        if gptq_flag {
+            r.use_gptq = true;
+        }
+        let cast = args.flag("cast");
+        let no_cast = args.flag("no-cast");
+        if cast && no_cast {
+            return Err("--cast and --no-cast are contradictory".to_string());
+        }
+        if cast {
+            r.cast_fp4_to_e5m2 = true;
+        }
+        if no_cast {
+            r.cast_fp4_to_e5m2 = false;
+        }
+        if let Some(c) = args.get("constraint") {
+            r.constraint = ScaleConstraint::parse(&c).ok_or(format!("bad --constraint {c}"))?;
+        }
+
+        // LoRC: consume every knob up front so `Args::finish` never
+        // reports a knob this function already judged.
+        let no_lorc = args.flag("no-lorc");
+        let lorc_flag = args.flag("lorc");
+        if no_lorc && lorc_flag {
+            return Err("--lorc and --no-lorc are contradictory".to_string());
+        }
+        let lorc_on = lorc_flag || (r.lorc.is_some() && !no_lorc);
+        if lorc_on {
+            // a valueless `--lorc-rank`/`--lorc-format`/`--rank` would
+            // silently fall back to the base value (Args stores a sentinel
+            // `get` reports as absent) — reject instead of guessing
+            for knob in ["lorc-rank", "lorc-format", "rank"] {
+                if args.flag(knob) && args.get(knob).is_none() {
+                    return Err(format!("--{knob} needs a value"));
+                }
+            }
+            let base = r.lorc.unwrap_or_default();
+            // --rank is the historical spelling; --lorc-rank wins when
+            // both are given.
+            let rank = args.get_usize("lorc-rank", args.get_usize("rank", base.rank)?)?;
+            let factor_format = match args.get("lorc-format") {
+                None => base.factor_format,
+                Some(s) => match NumericFormat::parse(&s) {
+                    Some(f @ (NumericFormat::F16 | NumericFormat::Fp(_))) => f,
+                    Some(other) => {
+                        return Err(RecipeError::LorcFactorFormatNotFp(other).to_string())
+                    }
+                    None => return Err(format!("bad --lorc-format {s}")),
+                },
+            };
+            r.lorc = Some(LorcConfig { rank, factor_format });
+        } else {
+            let _ = args.get_usize("rank", 8)?; // historical knob: consumed leniently
+            // the targeted knobs without LoRC are almost certainly a
+            // dropped flag — silently serving without compensation would
+            // be a quality surprise. (`flag`, not `get`: a valueless knob
+            // must trip this too.)
+            if args.flag("lorc-rank") || args.flag("lorc-format") {
+                return Err(
+                    "--lorc-rank/--lorc-format have no effect without --lorc".to_string()
+                );
+            }
+            r.lorc = None;
+        }
+
+        // Serving side. `--dense` is the off-switch for a packed base
+        // recipe (the layout analogue of --no-lorc/--no-cast).
+        let dense_flag = args.flag("dense");
+        let packed_flag = args.flag("packed");
+        if dense_flag && packed_flag {
+            return Err("--dense and --packed are contradictory".to_string());
+        }
+        let gemv_given = args.flag("gemv-threads");
+        if gemv_given && args.get("gemv-threads").is_none() {
+            return Err("--gemv-threads needs a value".to_string());
+        }
+        let gemv = args.get_usize("gemv-threads", r.weights.threads())?;
+        if dense_flag {
+            if gemv_given {
+                return Err("--gemv-threads has no effect on the dense layout".to_string());
+            }
+            r.weights = WeightLayout::Dense;
+        } else if packed_flag || !r.weights.is_dense() {
+            r.weights = WeightLayout::Packed { threads: gemv.max(1) };
+        } else if gemv_given {
+            // a targeted knob without its enabling flag is almost certainly
+            // a dropped --packed — same policy as the LoRC knobs above
+            return Err("--gemv-threads has no effect without --packed".to_string());
+        }
+        if let Some(s) = args.get("kv-cache") {
+            r.kv_quant = match s.as_str() {
+                "none" | "off" => None,
+                _ => match NumericFormat::parse(&s) {
+                    Some(NumericFormat::Fp(f)) => Some(f),
+                    Some(other) => return Err(RecipeError::KvCacheNotFp(other).to_string()),
+                    None => return Err(format!("--kv-cache: not an FP format: {s}")),
+                },
+            };
+        }
+        r.max_batch = args.get_usize("max-batch", r.max_batch)?;
+        r.max_wait_ms = args.get_usize("max-wait-ms", r.max_wait_ms as usize)? as u64;
+
+        r.validate().map_err(|e| e.to_string())?;
+        Ok(r)
+    }
+}
+
+/// Canonical, parseable label for a format (`NumericFormat::parse`
+/// round-trips every label this emits — asserted by the recipe round-trip
+/// tests).
+fn format_label(f: NumericFormat) -> String {
+    match f {
+        NumericFormat::F16 => "f16".to_string(),
+        NumericFormat::Fp(fp) => fp.name().to_ascii_lowercase(),
+        NumericFormat::Int(i) => i.name().to_ascii_lowercase(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn every_preset_builds_and_is_distinct() {
+        let mut seen = Vec::new();
+        for name in PRESET_NAMES {
+            let r = QuantRecipe::preset(name).unwrap();
+            assert_eq!(r.name, name);
+            r.validate().unwrap();
+            assert!(!seen.contains(&r), "{name} duplicates another preset");
+            seen.push(r);
+        }
+        assert!(matches!(
+            QuantRecipe::preset("w2a2"),
+            Err(RecipeError::UnknownPreset(_))
+        ));
+    }
+
+    #[test]
+    fn builder_validates_at_construction() {
+        let w4 = Scheme::parse("w4a8-fp-fp").unwrap();
+        let w16 = Scheme::parse("w16a16").unwrap();
+        assert_eq!(
+            QuantRecipe::builder(w4).group_size(0).build(),
+            Err(RecipeError::GroupSizeZero)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w4)
+                .constraint(ScaleConstraint::M2 { rows: 0 })
+                .build(),
+            Err(RecipeError::M2ZeroRows)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w16).packed(2).build(),
+            Err(RecipeError::PackedNeedsCodes)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w16).lorc(LorcConfig::default()).build(),
+            Err(RecipeError::LorcNeedsQuantizedWeights)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w4)
+                .lorc(LorcConfig { rank: 0, factor_format: NumericFormat::FP8_E4M3 })
+                .build(),
+            Err(RecipeError::LorcRankZero)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w4)
+                .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::INT8 })
+                .build(),
+            Err(RecipeError::LorcFactorFormatNotFp(NumericFormat::INT8))
+        );
+        assert_eq!(
+            QuantRecipe::builder(w4).max_batch(0).build(),
+            Err(RecipeError::MaxBatchZero)
+        );
+        // and the happy path still builds
+        QuantRecipe::builder(w4)
+            .constraint(ScaleConstraint::M2 { rows: 8 })
+            .lorc(LorcConfig::default())
+            .packed(2)
+            .kv_quant(Some(FpFormat::E4M3))
+            .build()
+            .unwrap();
+    }
+
+    #[test]
+    fn engine_opts_view_carries_act_and_layout() {
+        let r = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .packed(3)
+            .build()
+            .unwrap();
+        let opts = r.engine_opts();
+        assert_eq!(opts.act.format, NumericFormat::FP8_E4M3);
+        assert_eq!(opts.weights, WeightLayout::Packed { threads: 3 });
+        let d = QuantRecipe::preset("w16").unwrap().engine_opts();
+        assert!(d.weights.is_dense());
+        assert_eq!(d.act.format, NumericFormat::F16);
+    }
+
+    #[test]
+    fn from_args_base_defaults_and_overrides() {
+        // no flags: the per-command default preset
+        let r = QuantRecipe::from_args(&argv(&[]), "w4a8-fp-m2").unwrap();
+        assert_eq!(r, QuantRecipe::preset("w4a8-fp-m2").unwrap());
+        // --recipe overrides the default; flags override the recipe
+        let a = argv(&["--recipe", "w4a8-fp-m2", "--constraint", "m1", "--rtn"]);
+        let r = QuantRecipe::from_args(&a, "w16").unwrap();
+        assert_eq!(r.constraint, ScaleConstraint::M1);
+        assert!(!r.use_gptq);
+        assert!(r.cast_fp4_to_e5m2, "unoverridden preset fields survive");
+        assert!(a.finish().is_ok());
+        // a valueless --recipe must not silently fall back to the default
+        // preset — the pin is the whole point of the flag
+        assert!(QuantRecipe::from_args(&argv(&["--recipe"]), "w16").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--recipe", "--rtn"]), "w16").is_err());
+        // contradictory GPTQ directions are an error, not a silent winner
+        assert!(QuantRecipe::from_args(&argv(&["--rtn", "--gptq"]), "w16").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--gptq"]), "w16").unwrap().use_gptq);
+        // every boolean knob has a working off-switch (and its pair errors)
+        let r = QuantRecipe::from_args(&argv(&["--recipe", "w4a8-fp-m2", "--no-cast"]), "w16");
+        assert!(!r.unwrap().cast_fp4_to_e5m2);
+        assert!(QuantRecipe::from_args(&argv(&["--cast", "--no-cast"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--packed", "--dense"]), "w4a8-fp").is_err());
+        // a targeted gemv knob without a packed layout is a dropped flag
+        assert!(QuantRecipe::from_args(&argv(&["--gemv-threads", "2"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--packed", "--gemv-threads"]), "w4a8-fp")
+            .is_err());
+    }
+
+    #[test]
+    fn from_args_lorc_knob_rules() {
+        let base: &[&str] = &["--scheme", "w4a8-fp-fp"];
+        let with = |extra: &[&str]| {
+            let mut v = base.to_vec();
+            v.extend_from_slice(extra);
+            QuantRecipe::from_args(&argv(&v), "w16")
+        };
+        let l = with(&["--lorc", "--lorc-rank", "16", "--lorc-format", "f16"])
+            .unwrap()
+            .lorc
+            .unwrap();
+        assert_eq!(l.rank, 16);
+        assert_eq!(l.factor_format, NumericFormat::F16);
+        // the historical --rank spelling still works (and FP8 E4M3 stays
+        // the default factor format)
+        let l = with(&["--lorc", "--rank", "4"]).unwrap().lorc.unwrap();
+        assert_eq!(l.rank, 4);
+        assert_eq!(l.factor_format, NumericFormat::FP8_E4M3);
+        // integer factor formats and rank 0 are rejected
+        assert!(with(&["--lorc", "--lorc-format", "int8"]).is_err());
+        assert!(with(&["--lorc", "--lorc-rank", "0"]).is_err());
+        // LoRC knobs without LoRC are a dropped-flag mistake, not a no-op
+        // — with a value or bare (the bare form parses as a sentinel flag)
+        assert!(with(&["--lorc-rank", "4"]).is_err());
+        assert!(with(&["--lorc-format"]).is_err());
+        // a valueless knob under --lorc is rejected, not defaulted
+        assert!(with(&["--lorc", "--lorc-rank"]).is_err());
+        // ...but the bare run (no LoRC flags at all) stays clean
+        assert!(with(&[]).unwrap().lorc.is_none());
+        // a LoRC base recipe keeps its factors, knobs adjust them without
+        // restating --lorc, and --no-lorc strips them
+        let a = argv(&["--recipe", "w4a8-fp-lorc", "--lorc-rank", "2"]);
+        assert_eq!(QuantRecipe::from_args(&a, "w16").unwrap().lorc.unwrap().rank, 2);
+        let a = argv(&["--recipe", "w4a8-fp-lorc", "--no-lorc"]);
+        assert!(QuantRecipe::from_args(&a, "w16").unwrap().lorc.is_none());
+        let a = argv(&["--lorc", "--no-lorc"]);
+        assert!(QuantRecipe::from_args(&a, "w16").is_err());
+    }
+
+    #[test]
+    fn from_args_constraint_and_serving_knobs() {
+        let r = QuantRecipe::from_args(
+            &argv(&["--scheme", "w4a8-fp-fp", "--constraint", "m2:16"]),
+            "w16",
+        )
+        .unwrap();
+        assert_eq!(r.constraint, ScaleConstraint::M2 { rows: 16 });
+        // zero-row compute groups are rejected with a parse error
+        assert!(QuantRecipe::from_args(
+            &argv(&["--scheme", "w4a8-fp-fp", "--constraint", "m2:0"]),
+            "w16"
+        )
+        .is_err());
+        // default stays the paper's 32-row group
+        let r = QuantRecipe::from_args(
+            &argv(&["--scheme", "w4a8-fp-fp", "--constraint", "m2"]),
+            "w16",
+        )
+        .unwrap();
+        assert_eq!(r.constraint, ScaleConstraint::M2 { rows: 32 });
+        // packed/kv/batching knobs land in the recipe
+        let r = QuantRecipe::from_args(
+            &argv(&[
+                "--scheme",
+                "w4a8-fp-fp",
+                "--packed",
+                "--gemv-threads",
+                "3",
+                "--kv-cache",
+                "e5m2",
+                "--max-batch",
+                "4",
+                "--max-wait-ms",
+                "0",
+            ]),
+            "w16",
+        )
+        .unwrap();
+        assert_eq!(r.weights, WeightLayout::Packed { threads: 3 });
+        assert_eq!(r.kv_quant, Some(FpFormat::E5M2));
+        assert_eq!(r.max_batch, 4);
+        assert_eq!(r.max_wait_ms, 0);
+        // an integer cache format is the typed rejection; --kv-cache none
+        // clears a base recipe's cache format
+        assert!(QuantRecipe::from_args(&argv(&["--kv-cache", "int8"]), "w4a8-fp").is_err());
+        let dir = std::env::temp_dir().join("zqfp_recipe_kv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kv.json");
+        let with_kv = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .kv_quant(Some(FpFormat::E4M3))
+            .build()
+            .unwrap();
+        std::fs::write(&path, with_kv.to_json()).unwrap();
+        let a = argv(&["--recipe", path.to_str().unwrap(), "--kv-cache", "none"]);
+        assert_eq!(QuantRecipe::from_args(&a, "w16").unwrap().kv_quant, None);
+        // packed + W16 is the typed rejection, end to end through flags
+        assert!(QuantRecipe::from_args(&argv(&["--packed"]), "w16").is_err());
+    }
+
+    #[test]
+    fn load_resolves_presets_and_files() {
+        let r = QuantRecipe::load("w8a8-int").unwrap();
+        assert_eq!(r.name, "w8a8-int");
+        let dir = std::env::temp_dir().join("zqfp_recipe_unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("r.json");
+        std::fs::write(&path, QuantRecipe::preset("w4a8-fp-lorc").unwrap().to_json()).unwrap();
+        let from_file = QuantRecipe::load(path.to_str().unwrap()).unwrap();
+        assert_eq!(from_file, QuantRecipe::preset("w4a8-fp-lorc").unwrap());
+        assert!(QuantRecipe::load("/nonexistent/nope.json").is_err());
+    }
+}

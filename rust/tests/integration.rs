@@ -7,8 +7,9 @@ use zeroquant_fp::eval::perplexity;
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{inject_outliers, Arch, Checkpoint, ModelConfig, OutlierSpec};
-use zeroquant_fp::pipeline::{quantize_checkpoint, PtqConfig};
+use zeroquant_fp::pipeline::ptq;
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 fn test_config(arch: Arch) -> ModelConfig {
@@ -69,8 +70,9 @@ fn full_ptq_pipeline_all_schemes() {
         let toks = eval_tokens(&ck, 320);
         let base = perplexity(&ck, EngineOpts::default(), &toks, 32).ppl();
         for scheme in ["w8a8-fp-fp", "w4a8-fp-fp", "w4a8-int-int", "w8a8-int-fp"] {
-            let cfg = PtqConfig::new(Scheme::parse(scheme).unwrap());
-            let (qck, report) = quantize_checkpoint(&ck, &seqs, &cfg);
+            let cfg = QuantRecipe::builder(Scheme::parse(scheme).unwrap()).build().unwrap();
+            let out = ptq(&ck, &seqs, None, &cfg);
+            let (qck, report) = (out.checkpoint, out.report);
             let ppl = perplexity(&qck, cfg.engine_opts(), &toks, 32).ppl();
             assert!(
                 ppl.is_finite() && ppl < base * 4.0,
@@ -87,8 +89,8 @@ fn w8a8_fp_is_near_lossless_on_engine_ppl() {
     let seqs = calib(&ck, 4);
     let toks = eval_tokens(&ck, 640);
     let base = perplexity(&ck, EngineOpts::default(), &toks, 32).ppl();
-    let cfg = PtqConfig::new(Scheme::parse("w8a8-fp-fp").unwrap());
-    let (qck, _) = quantize_checkpoint(&ck, &seqs, &cfg);
+    let cfg = QuantRecipe::builder(Scheme::parse("w8a8-fp-fp").unwrap()).build().unwrap();
+    let qck = ptq(&ck, &seqs, None, &cfg).checkpoint;
     let q = perplexity(&qck, cfg.engine_opts(), &toks, 32).ppl();
     let rel = (q - base).abs() / base;
     assert!(rel < 0.02, "base={base} q={q} rel={rel}");
@@ -123,13 +125,15 @@ fn lorc_and_constraints_compose() {
         ScaleConstraint::M1,
         ScaleConstraint::M2 { rows: 8 },
     ] {
-        let cfg = PtqConfig::new(scheme)
-            .with_constraint(constraint)
-            .with_lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 });
-        let (qck, report) = quantize_checkpoint(&ck, &seqs, &cfg);
-        assert!(report.total_weight_mse().is_finite());
+        let cfg = QuantRecipe::builder(scheme)
+            .constraint(constraint)
+            .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+            .build()
+            .unwrap();
+        let out = ptq(&ck, &seqs, None, &cfg);
+        assert!(out.report.total_weight_mse().is_finite());
         // every effective weight is finite
-        for (name, m) in &qck.tensors {
+        for (name, m) in &out.checkpoint.tensors {
             assert!(m.data.iter().all(|x| x.is_finite()), "{name}");
         }
     }
@@ -142,12 +146,17 @@ fn lorc_recovers_constraint_damage() {
     let ck = pseudo_trained(Arch::Opt, 46);
     let seqs = calib(&ck, 4);
     let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
-    let cfg_m1 = PtqConfig::new(scheme).with_constraint(ScaleConstraint::M1);
-    let cfg_m1_lorc = cfg_m1
-        .clone()
-        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::F16 });
-    let (_, r0) = quantize_checkpoint(&ck, &seqs, &cfg_m1);
-    let (_, r1) = quantize_checkpoint(&ck, &seqs, &cfg_m1_lorc);
+    let cfg_m1 = QuantRecipe::builder(scheme)
+        .constraint(ScaleConstraint::M1)
+        .build()
+        .unwrap();
+    let cfg_m1_lorc = QuantRecipe::builder(scheme)
+        .constraint(ScaleConstraint::M1)
+        .lorc(LorcConfig { rank: 8, factor_format: NumericFormat::F16 })
+        .build()
+        .unwrap();
+    let r0 = ptq(&ck, &seqs, None, &cfg_m1).report;
+    let r1 = ptq(&ck, &seqs, None, &cfg_m1_lorc).report;
     assert!(r1.total_weight_mse() < r0.total_weight_mse() * 0.8);
 }
 
@@ -157,11 +166,10 @@ fn cast_to_e5m2_is_cheap_in_quality() {
     let seqs = calib(&ck, 4);
     let toks = eval_tokens(&ck, 320);
     let scheme = Scheme::parse("w4a8-fp-fp").unwrap();
-    let plain = PtqConfig::new(scheme);
-    let mut cast = PtqConfig::new(scheme);
-    cast.cast_fp4_to_e5m2 = true;
-    let (q0, _) = quantize_checkpoint(&ck, &seqs, &plain);
-    let (q1, _) = quantize_checkpoint(&ck, &seqs, &cast);
+    let plain = QuantRecipe::builder(scheme).build().unwrap();
+    let cast = QuantRecipe::builder(scheme).cast_fp4_to_e5m2(true).build().unwrap();
+    let q0 = ptq(&ck, &seqs, None, &plain).checkpoint;
+    let q1 = ptq(&ck, &seqs, None, &cast).checkpoint;
     let p0 = perplexity(&q0, plain.engine_opts(), &toks, 32).ppl();
     let p1 = perplexity(&q1, cast.engine_opts(), &toks, 32).ppl();
     // FP4*pow2-scale values are exactly representable in E5M2 when scales
@@ -177,11 +185,10 @@ fn rtn_vs_gptq_on_structured_weights() {
     let seqs = calib(&ck, 6);
     let toks = eval_tokens(&ck, 640);
     let scheme = Scheme::parse("w4a8-int-int").unwrap();
-    let gptq_cfg = PtqConfig::new(scheme);
-    let mut rtn_cfg = PtqConfig::new(scheme);
-    rtn_cfg.use_gptq = false;
-    let (qg, _) = quantize_checkpoint(&ck, &seqs, &gptq_cfg);
-    let (qr, _) = quantize_checkpoint(&ck, &seqs, &rtn_cfg);
+    let gptq_cfg = QuantRecipe::builder(scheme).build().unwrap();
+    let rtn_cfg = QuantRecipe::builder(scheme).use_gptq(false).build().unwrap();
+    let qg = ptq(&ck, &seqs, None, &gptq_cfg).checkpoint;
+    let qr = ptq(&ck, &seqs, None, &rtn_cfg).checkpoint;
     // compare logits fidelity vs the fp model
     let window: Vec<u16> = toks[..32].to_vec();
     let base = Engine::new(&ck).forward(&window);

@@ -13,12 +13,25 @@
 //!    change the logits, because rows are quantized independently of when
 //!    they were appended.
 
-use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{CompiledModel, KvCache};
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::tensor::Matrix;
+
+/// Compile the plan the way the serving stack does: a W16 recipe (weights
+/// untouched) with `fmt` activations through [`ServingStack::build`] — so
+/// the incremental-decode contract is checked over the recipe → plan
+/// wiring the coordinator itself uses.
+fn stack_model(ck: &Checkpoint, fmt: NumericFormat) -> CompiledModel {
+    let recipe = QuantRecipe::builder(Scheme { weight: NumericFormat::F16, activation: fmt })
+        .build()
+        .unwrap();
+    ServingStack::build(ck, &[], &recipe).unwrap().compile()
+}
 
 fn tiny(arch: Arch) -> ModelConfig {
     ModelConfig {
@@ -89,8 +102,7 @@ fn prefill_plus_decode_bit_identical_to_forward() {
         let mut rng = Rng::seeded(0xCACE + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
         for fmt in ACT_FORMATS {
-            let opts = EngineOpts::with_act(fmt);
-            let model = CompiledModel::compile(&ck, opts);
+            let model = stack_model(&ck, fmt);
             let mut s = model.scratch();
             let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
             let full = model.forward(&window, &mut s).clone();
@@ -118,8 +130,7 @@ fn chunked_prefill_matches_single_shot() {
         let mut rng = Rng::seeded(0xC0FFEE + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
         for fmt in [NumericFormat::F16, NumericFormat::FP8_E4M3] {
-            let opts = EngineOpts::with_act(fmt);
-            let model = CompiledModel::compile(&ck, opts);
+            let model = stack_model(&ck, fmt);
             let mut s = model.scratch();
             let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
             let full = model.forward(&window, &mut s).clone();
@@ -152,7 +163,7 @@ fn cache_reuse_after_reset_is_clean() {
         let cfg = tiny(arch);
         let mut rng = Rng::seeded(0x5EED2 + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
-        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let model = stack_model(&ck, NumericFormat::F16);
         let mut s = model.scratch();
         let first = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
         let second = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
@@ -172,7 +183,7 @@ fn quantized_cache_is_split_invariant_and_actually_quantizes() {
         let cfg = tiny(arch);
         let mut rng = Rng::seeded(0xFB8 + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
-        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let model = stack_model(&ck, NumericFormat::F16);
         let mut s = model.scratch();
         let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
         let exact = model.forward(&window, &mut s).clone();
@@ -211,8 +222,7 @@ fn batched_decode_bit_identical_to_solo_decode() {
         let cfg = tiny(arch);
         let mut rng = Rng::seeded(0xBA7C4 + arch as u64);
         let ck = Checkpoint::random(&cfg, &mut rng);
-        let opts = EngineOpts::with_act(NumericFormat::FP8_E4M3);
-        let model = CompiledModel::compile(&ck, opts);
+        let model = stack_model(&ck, NumericFormat::FP8_E4M3);
         let mut s = model.scratch();
         // three sequences at different positions in their own windows
         let prompts: [Vec<u16>; 3] = [

@@ -16,13 +16,13 @@
 //! 3. GEMV row-sharding (`--gemv-threads`) changes wall-time, never bits,
 //!    with factors attached.
 
-use zeroquant_fp::engine::Engine;
+use zeroquant_fp::coordinator::ServingStack;
+use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
-use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 fn cfg(arch: Arch, name: &str, d: usize, heads: usize, ff: usize) -> ModelConfig {
@@ -60,18 +60,22 @@ fn check(
     ffmt: NumericFormat,
     what: &str,
 ) {
-    let mut cfg = PtqConfig::new(Scheme::parse(scheme).unwrap())
-        .with_constraint(constraint)
-        .with_lorc(LorcConfig { rank, factor_format: ffmt });
-    cfg.group_size = 16; // several groups per row even at toy dims
-    cfg.use_gptq = false; // RTN: the codes are the point, not the solver
-    let (qck, sidecar, _) = quantize_checkpoint_full(ck, &[], &cfg);
-    assert!(!sidecar.is_empty(), "{what}: sidecar missing");
-    assert!(sidecar.has_lorc(), "{what}: factors missing from sidecar");
+    let recipe = QuantRecipe::builder(Scheme::parse(scheme).unwrap())
+        .constraint(constraint)
+        .lorc(LorcConfig { rank, factor_format: ffmt })
+        .group_size(16) // several groups per row even at toy dims
+        .use_gptq(false) // RTN: the codes are the point, not the solver
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(ck, &[], &recipe).unwrap();
+    assert!(!stack.sidecar.is_empty(), "{what}: sidecar missing");
+    assert!(stack.sidecar.has_lorc(), "{what}: factors missing from sidecar");
 
-    let opts = cfg.engine_opts();
-    let dense = CompiledModel::compile(&qck, opts);
-    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let qck = &stack.checkpoint;
+    let opts = EngineOpts::with_act(recipe.scheme.activation);
+    let dense = stack.compile_dense();
+    let packed = stack.compile();
 
     let mut rng = Rng::seeded(0x10BC);
     let mut ds = dense.scratch();
@@ -83,7 +87,7 @@ fn check(
         let got = packed.forward(&tokens, &mut ps);
         assert_bit_identical(&want, got, &format!("{what} seq={seq}"));
         // and the reference engine over the folded checkpoint agrees
-        let reference = Engine::with_opts(&qck, opts).forward(&tokens);
+        let reference = Engine::with_opts(qck, opts).forward(&tokens);
         assert_bit_identical(&reference, got, &format!("{what} seq={seq} vs engine"));
     }
 }
@@ -122,16 +126,18 @@ fn lorc_packed_plan_bit_identical_with_gptq_codes_and_odd_dims() {
     for arch in [Arch::Opt, Arch::Llama] {
         let mut rng = Rng::seeded(0x10C9 + arch as u64);
         let ck = Checkpoint::random(&cfg(arch, "odd", 25, 5, 49), &mut rng);
-        let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-            .with_constraint(ScaleConstraint::M1)
-            .with_lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 });
-        pcfg.group_size = 16;
+        let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .constraint(ScaleConstraint::M1)
+            .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+            .group_size(16)
+            .packed(1)
+            .build()
+            .unwrap();
         let calib: Vec<Vec<u16>> =
             (0..3).map(|c| (0..8).map(|t| ((c * 7 + t) % 48) as u16).collect()).collect();
-        let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib, &pcfg);
-        let opts = pcfg.engine_opts();
-        let dense = CompiledModel::compile(&qck, opts);
-        let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+        let stack = ServingStack::build(&ck, &calib, &recipe).unwrap();
+        let dense = stack.compile_dense();
+        let packed = stack.compile();
         let tokens: Vec<u16> = (0..10).map(|i| (i * 5 % 48) as u16).collect();
         let mut ds = dense.scratch();
         let mut ps = packed.scratch();
@@ -148,14 +154,16 @@ fn lorc_packed_decode_paths_match_dense_decode() {
     for (arch, ffmt) in [(Arch::Llama, NumericFormat::FP8_E4M3), (Arch::Opt, NumericFormat::F16)] {
         let mut rng = Rng::seeded(0xDEC1 + arch as u64);
         let ck = Checkpoint::random(&cfg(arch, "decode", 24, 3, 48), &mut rng);
-        let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-            .with_constraint(ScaleConstraint::M2 { rows: 8 })
-            .with_lorc(LorcConfig { rank: 8, factor_format: ffmt });
-        pcfg.use_gptq = false;
-        let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-        let opts = pcfg.engine_opts();
-        let dense = CompiledModel::compile(&qck, opts);
-        let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+        let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+            .constraint(ScaleConstraint::M2 { rows: 8 })
+            .lorc(LorcConfig { rank: 8, factor_format: ffmt })
+            .use_gptq(false)
+            .packed(1)
+            .build()
+            .unwrap();
+        let stack = ServingStack::build(&ck, &[], &recipe).unwrap();
+        let dense = stack.compile_dense();
+        let packed = stack.compile();
 
         let window: Vec<u16> = (0..10).map(|i| (i * 7 % 48) as u16).collect();
         let mut ds = dense.scratch();
@@ -191,13 +199,21 @@ fn lorc_packed_decode_paths_match_dense_decode() {
 fn sharded_lorc_plan_matches_inline() {
     let mut rng = Rng::seeded(0x54A3);
     let ck = Checkpoint::random(&cfg(Arch::Opt, "shard", 24, 3, 48), &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 });
-    pcfg.use_gptq = false;
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    let opts = pcfg.engine_opts();
-    let solo = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
-    let sharded = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(3));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let sharded_recipe = {
+        let mut r = recipe.clone();
+        r.weights = zeroquant_fp::engine::WeightLayout::Packed { threads: 3 };
+        r.validate().unwrap();
+        r
+    };
+    let stack = ServingStack::build(&ck, &[], &recipe).unwrap();
+    let solo = stack.compile();
+    let sharded = stack.with_recipe(&sharded_recipe).unwrap().compile();
     let tokens: Vec<u16> = (0..8).map(|i| (i * 5 % 48) as u16).collect();
     assert_bit_identical(
         &solo.forward_alloc(&tokens),
@@ -225,14 +241,16 @@ fn lorc_packed_weights_fit_in_a_fifth_of_dense() {
         max_seq: 12,
     };
     let ck = Checkpoint::random(&mem_cfg, &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 });
-    pcfg.group_size = 64;
-    pcfg.use_gptq = false;
-    let (qck, sidecar, report) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    let opts = pcfg.engine_opts();
-    let dense = CompiledModel::compile(&qck, opts);
-    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 })
+        .group_size(64)
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(&ck, &[], &recipe).unwrap();
+    let dense = stack.compile_dense();
+    let packed = stack.compile();
     let (db, pb) = (dense.linear_weight_bytes(), packed.linear_weight_bytes());
     assert!(pb > 0 && db > 0);
     assert!(
@@ -241,11 +259,14 @@ fn lorc_packed_weights_fit_in_a_fifth_of_dense() {
     );
     // the factors really are accounted: a factor-free packed plan of the
     // same codes is smaller by at least the factor code bytes
-    let mut plain = pcfg.clone();
-    plain.lorc = None;
-    let (pqck, psidecar, _) = quantize_checkpoint_full(&ck, &[], &plain);
-    let packed_plain = CompiledModel::compile_quantized(&pqck, &psidecar, opts.packed(1));
-    let lorc_b: usize = report.layers.iter().map(|l| l.lorc_bytes).sum();
+    let plain = {
+        let mut r = recipe.clone();
+        r.lorc = None;
+        r.validate().unwrap();
+        r
+    };
+    let packed_plain = ServingStack::build(&ck, &[], &plain).unwrap().compile();
+    let lorc_b: usize = stack.report.layers.iter().map(|l| l.lorc_bytes).sum();
     assert!(lorc_b > 0);
     assert!(
         pb >= packed_plain.linear_weight_bytes() + lorc_b,

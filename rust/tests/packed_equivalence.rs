@@ -11,11 +11,11 @@
 //!    dense f32 plan for W4 — the memory claim `packed_bytes()` used to
 //!    only account for.
 
-use zeroquant_fp::engine::Engine;
+use zeroquant_fp::coordinator::ServingStack;
+use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
-use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 fn cfg(arch: Arch, name: &str, d: usize, heads: usize, ff: usize) -> ModelConfig {
@@ -47,19 +47,25 @@ fn assert_bit_identical(
     }
 }
 
-/// Quantize `ck` under `scheme`/`constraint`, then check packed-vs-dense
-/// bit-identity of full-window forwards (and the engine reference).
+/// Quantize `ck` under `scheme`/`constraint` (one packed recipe driven
+/// through `ServingStack::build`), then check packed-vs-dense bit-identity
+/// of full-window forwards (and the engine reference).
 fn check(ck: &Checkpoint, scheme: &str, constraint: ScaleConstraint, use_gptq: bool, what: &str) {
-    let mut cfg = PtqConfig::new(Scheme::parse(scheme).unwrap()).with_constraint(constraint);
-    cfg.group_size = 16; // several groups per row even at toy dims
-    cfg.use_gptq = use_gptq;
+    let recipe = QuantRecipe::builder(Scheme::parse(scheme).unwrap())
+        .constraint(constraint)
+        .group_size(16) // several groups per row even at toy dims
+        .use_gptq(use_gptq)
+        .packed(1)
+        .build()
+        .unwrap();
     let seqs = calib(3, 8, ck.config.vocab_size);
-    let (qck, sidecar, _) = quantize_checkpoint_full(ck, &seqs, &cfg);
-    assert!(!sidecar.is_empty(), "{what}: sidecar missing");
+    let stack = ServingStack::build(ck, &seqs, &recipe).unwrap();
+    assert!(!stack.sidecar.is_empty(), "{what}: sidecar missing");
 
-    let opts = cfg.engine_opts();
-    let dense = CompiledModel::compile(&qck, opts);
-    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let qck = &stack.checkpoint;
+    let opts = EngineOpts::with_act(recipe.scheme.activation);
+    let dense = stack.compile_dense();
+    let packed = stack.compile();
 
     let mut rng = Rng::seeded(0x7E57);
     let mut ds = dense.scratch();
@@ -72,7 +78,7 @@ fn check(ck: &Checkpoint, scheme: &str, constraint: ScaleConstraint, use_gptq: b
         assert_bit_identical(&want, got, &format!("{what} seq={seq}"));
         // and the reference engine agrees (the plan_equivalence contract
         // extended through the packed layout)
-        let reference = Engine::with_opts(&qck, opts).forward(&tokens);
+        let reference = Engine::with_opts(qck, opts).forward(&tokens);
         assert_bit_identical(&reference, got, &format!("{what} seq={seq} vs engine"));
     }
 }
@@ -125,13 +131,15 @@ fn packed_decode_path_matches_dense_decode() {
     // match the dense plan token for token, bit for bit.
     let mut rng = Rng::seeded(0xDEC0);
     let ck = Checkpoint::random(&cfg(Arch::Llama, "decode", 24, 3, 48), &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M2 { rows: 8 });
-    pcfg.use_gptq = false;
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
-    let opts = pcfg.engine_opts();
-    let dense = CompiledModel::compile(&qck, opts);
-    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M2 { rows: 8 })
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(&ck, &calib(2, 8, 48), &recipe).unwrap();
+    let dense = stack.compile_dense();
+    let packed = stack.compile();
 
     let window: Vec<u16> = (0..10).map(|i| (i * 7 % 48) as u16).collect();
     let mut ds = dense.scratch();
@@ -162,12 +170,16 @@ fn packed_decode_path_matches_dense_decode() {
 fn sharded_packed_plan_matches_inline() {
     let mut rng = Rng::seeded(0x54A2);
     let ck = Checkpoint::random(&cfg(Arch::Opt, "shard", 24, 3, 48), &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
-    pcfg.use_gptq = false;
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
-    let opts = pcfg.engine_opts();
-    let solo = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
-    let sharded = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(3));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let sharded_recipe =
+        QuantRecipe::builder(recipe.scheme).use_gptq(false).packed(3).build().unwrap();
+    let stack = ServingStack::build(&ck, &calib(2, 8, 48), &recipe).unwrap();
+    let solo = stack.compile();
+    let sharded = stack.with_recipe(&sharded_recipe).unwrap().compile();
     let tokens: Vec<u16> = (0..8).map(|i| (i * 5 % 48) as u16).collect();
     assert_bit_identical(
         &solo.forward_alloc(&tokens),
@@ -182,13 +194,15 @@ fn packed_w4_weights_fit_in_a_sixth_of_dense() {
     // real models amortize it (group 64 ⇒ one f32 scale per 64 codes).
     let mut rng = Rng::seeded(0x512E);
     let ck = Checkpoint::random(&cfg(Arch::Opt, "mem", 64, 4, 128), &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap());
-    pcfg.group_size = 64;
-    pcfg.use_gptq = false;
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &calib(2, 8, 48), &pcfg);
-    let opts = pcfg.engine_opts();
-    let dense = CompiledModel::compile(&qck, opts);
-    let packed = CompiledModel::compile_quantized(&qck, &sidecar, opts.packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .group_size(64)
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(&ck, &calib(2, 8, 48), &recipe).unwrap();
+    let dense = stack.compile_dense();
+    let packed = stack.compile();
     let (db, pb) = (dense.linear_weight_bytes(), packed.linear_weight_bytes());
     assert!(pb > 0 && db > 0);
     assert!(

@@ -14,13 +14,14 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::engine::EngineOpts;
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
-use zeroquant_fp::pipeline::{quantize_checkpoint_full, PtqConfig};
 use zeroquant_fp::plan::CompiledModel;
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 static ALLOC_CALLS: AtomicUsize = AtomicUsize::new(0);
@@ -150,11 +151,13 @@ fn steady_state_decode_is_allocation_free() {
     };
     let mut rng = Rng::seeded(0xA110D);
     let ck = Checkpoint::random(&cfg, &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M2 { rows: 8 });
-    pcfg.use_gptq = false; // RTN needs no calibration passes
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    let model = CompiledModel::compile_quantized(&qck, &sidecar, pcfg.engine_opts().packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M2 { rows: 8 })
+        .use_gptq(false) // RTN needs no calibration passes
+        .packed(1)
+        .build()
+        .unwrap();
+    let model = ServingStack::build(&ck, &[], &recipe).unwrap().compile();
     let mut scratch = model.scratch();
     let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
     let short: Vec<u16> = long[..5].to_vec();
@@ -214,13 +217,16 @@ fn steady_state_decode_is_allocation_free() {
     };
     let mut rng = Rng::seeded(0xA110E);
     let ck = Checkpoint::random(&cfg, &mut rng);
-    let mut pcfg = PtqConfig::new(Scheme::parse("w4a8-fp-fp").unwrap())
-        .with_constraint(ScaleConstraint::M1)
-        .with_lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 });
-    pcfg.use_gptq = false;
-    let (qck, sidecar, _) = quantize_checkpoint_full(&ck, &[], &pcfg);
-    assert!(!sidecar.is_empty(), "lorc run must keep its sidecar");
-    let model = CompiledModel::compile_quantized(&qck, &sidecar, pcfg.engine_opts().packed(1));
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M1)
+        .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+        .use_gptq(false)
+        .packed(1)
+        .build()
+        .unwrap();
+    let stack = ServingStack::build(&ck, &[], &recipe).unwrap();
+    assert!(!stack.sidecar.is_empty(), "lorc run must keep its sidecar");
+    let model = stack.compile();
     let mut scratch = model.scratch();
     let long: Vec<u16> = (0..cfg.max_seq).map(|_| rng.below(48) as u16).collect();
     let short: Vec<u16> = long[..5].to_vec();

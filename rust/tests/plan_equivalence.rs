@@ -7,11 +7,24 @@
 //!    every f32 exponent bucket and on all 2^16 upper-half bit patterns
 //!    (plus every representable code of every format).
 
+use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::engine::{Engine, EngineOpts, Site};
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{CompiledModel, FpQuantLut};
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
+
+/// Compile the plan the way the serving stack does: a W16 recipe (weights
+/// untouched) with `fmt` activations through [`ServingStack::build`] — so
+/// the whole equivalence grid also covers the recipe → plan wiring.
+fn stack_model(ck: &Checkpoint, fmt: NumericFormat) -> CompiledModel {
+    let recipe = QuantRecipe::builder(Scheme { weight: NumericFormat::F16, activation: fmt })
+        .build()
+        .unwrap();
+    ServingStack::build(ck, &[], &recipe).unwrap().compile()
+}
 
 fn tiny(arch: Arch) -> ModelConfig {
     ModelConfig {
@@ -57,7 +70,7 @@ fn compiled_logits_bit_identical_across_arch_format_seqlen() {
         for fmt in ACT_FORMATS {
             let opts = EngineOpts::with_act(fmt);
             let engine = Engine::with_opts(&ck, opts);
-            let model = CompiledModel::compile(&ck, opts);
+            let model = stack_model(&ck, fmt);
             let mut scratch = model.scratch();
             for seq in 1..=cfg.max_seq {
                 let tokens: Vec<u16> =
@@ -91,7 +104,7 @@ fn compiled_logits_bit_identical_with_injected_outliers() {
             let tokens: Vec<u16> =
                 (0..cfg.max_seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
             let reference = Engine::with_opts(&ck, opts).forward(&tokens);
-            let compiled = CompiledModel::compile(&ck, opts).forward_alloc(&tokens);
+            let compiled = stack_model(&ck, fmt).forward_alloc(&tokens);
             assert_bit_identical(&reference, &compiled, &format!("{arch:?} act={}", fmt.name()));
         }
     }
@@ -114,7 +127,7 @@ fn compiled_observed_activations_bit_identical() {
             ref_sites.insert(site, x.clone());
         });
 
-        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let model = stack_model(&ck, NumericFormat::F16);
         let mut scratch = model.scratch();
         let mut n = 0usize;
         model.forward_observed(&tokens, &mut scratch, &mut |site, x| {

@@ -1,0 +1,376 @@
+//! The recipe API's contracts, end to end:
+//!
+//! 1. Every in-tree preset constructs, validates, and round-trips through
+//!    JSON bit-exactly (the CI `recipes` job runs this file so presets
+//!    cannot silently rot).
+//! 2. JSON round-trip across the full knob grid:
+//!    `recipe == from_json(to_json(recipe))` for every valid combination
+//!    of scheme × constraint × GPTQ × cast × LoRC × layout × KV format ×
+//!    batching limits.
+//! 3. Every invalid combination [`RecipeError`] can report is actually
+//!    rejected, with its typed variant.
+//! 4. `--recipe <file>` + explicit flags: override precedence.
+//! 5. Presets drive [`ServingStack::build`] to plans that are
+//!    bit-identical to the reference engine (and, for quantized presets,
+//!    packed ≡ dense) — the recipe → PTQ → sidecar → plan wiring serves
+//!    the same bits the equivalence suites pin down.
+
+use zeroquant_fp::cli::Args;
+use zeroquant_fp::coordinator::ServingStack;
+use zeroquant_fp::engine::{Engine, WeightLayout};
+use zeroquant_fp::formats::{FpFormat, NumericFormat};
+use zeroquant_fp::gptq::GptqConfig;
+use zeroquant_fp::lorc::LorcConfig;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::recipe::{PRESET_NAMES, QuantRecipe, RecipeBuilder, RecipeError};
+use zeroquant_fp::rng::Rng;
+
+fn tiny_ck(arch: Arch) -> Checkpoint {
+    let cfg = ModelConfig {
+        name: "recipe-test".into(),
+        arch,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 12,
+    };
+    let mut rng = Rng::seeded(0x8EC1);
+    Checkpoint::random(&cfg, &mut rng)
+}
+
+fn calib(n: usize, len: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::seeded(0x8EC2);
+    (0..n).map(|_| (0..len).map(|_| rng.below(48) as u16).collect()).collect()
+}
+
+fn assert_bit_identical(
+    a: &zeroquant_fp::tensor::Matrix,
+    b: &zeroquant_fp::tensor::Matrix,
+    what: &str,
+) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} a={x} b={y}");
+    }
+}
+
+#[test]
+fn every_preset_validates_and_round_trips() {
+    for name in PRESET_NAMES {
+        let r = QuantRecipe::preset(name).unwrap();
+        assert_eq!(r.name, name);
+        r.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!r.summary().is_empty());
+        // compact and pretty JSON both reproduce the recipe exactly
+        let compact = QuantRecipe::from_json(&r.to_json())
+            .unwrap_or_else(|e| panic!("{name} compact: {e}"));
+        assert_eq!(compact, r, "{name}: compact round-trip");
+        let pretty = QuantRecipe::from_json(&r.to_json_pretty())
+            .unwrap_or_else(|e| panic!("{name} pretty: {e}"));
+        assert_eq!(pretty, r, "{name}: pretty round-trip");
+        // the --recipe resolver finds every preset by name
+        assert_eq!(QuantRecipe::load(name).unwrap(), r);
+    }
+}
+
+#[test]
+fn json_round_trip_across_the_knob_grid() {
+    let schemes = [
+        "w16a16",
+        "w16a8-int",
+        "w8a8-int-int",
+        "w8a8-fp-fp",
+        "w4a8-fp-fp",
+        "w4a8-int-int",
+        "w4a8-int-fp",
+        "w4a8-fpe3m0-fp",
+        "w4a16-fp",
+    ];
+    let constraints = [
+        ScaleConstraint::None,
+        ScaleConstraint::M1,
+        ScaleConstraint::M2 { rows: 4 },
+        ScaleConstraint::M2 { rows: 32 },
+    ];
+    let lorcs = [
+        None,
+        Some(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 }),
+        Some(LorcConfig { rank: 8, factor_format: NumericFormat::F16 }),
+    ];
+    let kvs = [None, Some(FpFormat::E4M3), Some(FpFormat::E5M2)];
+    let mut valid = 0usize;
+    let mut rejected = 0usize;
+    for scheme_s in schemes {
+        let scheme = Scheme::parse(scheme_s).unwrap();
+        let w16 = matches!(scheme.weight, NumericFormat::F16);
+        for constraint in constraints {
+            for lorc in lorcs {
+                for packed_threads in [0usize, 1, 3] {
+                    for kv in kvs {
+                        for use_gptq in [true, false] {
+                            let mut b = RecipeBuilder::new(scheme)
+                                .constraint(constraint)
+                                .use_gptq(use_gptq)
+                                .cast_fp4_to_e5m2(scheme_s.contains("w4"))
+                                .kv_quant(kv)
+                                .group_size(16)
+                                .max_batch(4)
+                                .max_wait_ms(0);
+                            if let Some(l) = lorc {
+                                b = b.lorc(l);
+                            }
+                            if packed_threads > 0 {
+                                b = b.packed(packed_threads);
+                            }
+                            match b.build() {
+                                Ok(r) => {
+                                    valid += 1;
+                                    let back = QuantRecipe::from_json(&r.to_json())
+                                        .unwrap_or_else(|e| {
+                                            panic!("{scheme_s} {}: {e}", constraint.label())
+                                        });
+                                    assert_eq!(back, r, "{scheme_s} {}", constraint.label());
+                                }
+                                Err(e) => {
+                                    // the only invalid cells in this grid are
+                                    // the W16 ones (nothing to pack/compensate)
+                                    rejected += 1;
+                                    assert!(w16, "{scheme_s}: unexpected rejection {e}");
+                                    assert!(matches!(
+                                        e,
+                                        RecipeError::PackedNeedsCodes
+                                            | RecipeError::LorcNeedsQuantizedWeights
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(valid > 1000, "grid too small: {valid}");
+    assert!(rejected > 0, "the grid must exercise rejections too");
+}
+
+#[test]
+fn every_recipe_error_variant_rejects() {
+    let w4 = Scheme::parse("w4a8-fp-fp").unwrap();
+    let w16 = Scheme::parse("w16a16").unwrap();
+    // builder-level rejections
+    assert_eq!(
+        RecipeBuilder::new(w4).group_size(0).build().unwrap_err(),
+        RecipeError::GroupSizeZero
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .constraint(ScaleConstraint::M2 { rows: 0 })
+            .build()
+            .unwrap_err(),
+        RecipeError::M2ZeroRows
+    );
+    assert_eq!(
+        RecipeBuilder::new(w16).packed(1).build().unwrap_err(),
+        RecipeError::PackedNeedsCodes
+    );
+    assert_eq!(
+        RecipeBuilder::new(w16).lorc(LorcConfig::default()).build().unwrap_err(),
+        RecipeError::LorcNeedsQuantizedWeights
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .lorc(LorcConfig { rank: 0, factor_format: NumericFormat::FP8_E4M3 })
+            .build()
+            .unwrap_err(),
+        RecipeError::LorcRankZero
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::INT4 })
+            .build()
+            .unwrap_err(),
+        RecipeError::LorcFactorFormatNotFp(NumericFormat::INT4)
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4).max_batch(0).build().unwrap_err(),
+        RecipeError::MaxBatchZero
+    );
+    // GPTQ hyper-parameters are validated too: negative damping would
+    // loop the Cholesky-escalation forever, NaN would poison it, and a
+    // zero column block would panic the sweep
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .gptq(GptqConfig { percdamp: -1.0, block_size: 128 })
+            .build()
+            .unwrap_err(),
+        RecipeError::GptqPercdampInvalid
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .gptq(GptqConfig { percdamp: f64::NAN, block_size: 128 })
+            .build()
+            .unwrap_err(),
+        RecipeError::GptqPercdampInvalid
+    );
+    assert_eq!(
+        RecipeBuilder::new(w4)
+            .gptq(GptqConfig { percdamp: 0.01, block_size: 0 })
+            .build()
+            .unwrap_err(),
+        RecipeError::GptqBlockSizeZero
+    );
+    // name-resolution rejection
+    assert_eq!(
+        QuantRecipe::preset("w2a2").unwrap_err(),
+        RecipeError::UnknownPreset("w2a2".to_string())
+    );
+    // JSON-level rejections
+    assert_eq!(
+        QuantRecipe::from_json(r#"{"kv_cache": "int8"}"#).unwrap_err(),
+        RecipeError::KvCacheNotFp(NumericFormat::INT8)
+    );
+    // ...but the CLI's "none"/"off" spelling means exactly null in a file
+    // (NumericFormat::parse would read "none" as F16 and mis-reject it)
+    let off = QuantRecipe::from_json(r#"{"kv_cache": "none"}"#).unwrap();
+    assert_eq!(off.kv_quant, None);
+    for bad in [
+        "{",                          // malformed document
+        "[1, 2]",                     // wrong top-level type
+        r#"{"weigth": "e2m1"}"#,      // typo'd key must not be ignored
+        r#"{"group_size": "many"}"#,  // wrong field type
+        r#"{"weight": "float7"}"#,    // unknown format
+        r#"{"constraint": "m3"}"#,    // unknown constraint
+        r#"{"layout": "sparse"}"#,    // unknown layout
+        r#"{"lorc": 5}"#,             // lorc must be object/null
+        r#"{"lorc": {"rnk": 4}}"#,    // typo'd nested key
+        r#"{"name": "x"} trailing"#,  // trailing input
+    ] {
+        match QuantRecipe::from_json(bad) {
+            Err(RecipeError::BadJson(_)) => {}
+            other => panic!("{bad:?}: expected BadJson, got {other:?}"),
+        }
+    }
+    // a validation failure surfaces through from_json too (the file is a
+    // reproducibility artifact; loading must re-run the same gate)
+    assert_eq!(
+        QuantRecipe::from_json(r#"{"weight": "f16", "act": "f16", "layout": "packed"}"#)
+            .unwrap_err(),
+        RecipeError::PackedNeedsCodes
+    );
+}
+
+#[test]
+fn recipe_file_plus_flags_override_precedence() {
+    // base artifact: w4a8 + M2:32 + cast + LoRC r4, packed x2
+    let base = RecipeBuilder::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .cast_fp4_to_e5m2(true)
+        .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+        .packed(2)
+        .name("pinned")
+        .build()
+        .unwrap();
+    let dir = std::env::temp_dir().join("zqfp_recipes_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pinned.json");
+    std::fs::write(&path, base.to_json()).unwrap();
+    let argv = |s: &[&str]| {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    };
+
+    // no flags: the file wins over the per-command default
+    let a = argv(&["--recipe", path.to_str().unwrap()]);
+    let r = QuantRecipe::from_args(&a, "w16").unwrap();
+    assert_eq!(r, base);
+    assert!(a.finish().is_ok());
+
+    // explicit flags beat the file, untouched fields survive
+    let a = argv(&[
+        "--recipe",
+        path.to_str().unwrap(),
+        "--constraint",
+        "m1",
+        "--lorc-rank",
+        "16",
+        "--gemv-threads",
+        "4",
+    ]);
+    let r = QuantRecipe::from_args(&a, "w16").unwrap();
+    assert_eq!(r.constraint, ScaleConstraint::M1, "flag beats file");
+    assert_eq!(r.lorc.unwrap().rank, 16, "lorc knob adjusts the file's factors");
+    assert_eq!(r.weights, WeightLayout::Packed { threads: 4 });
+    assert!(r.cast_fp4_to_e5m2, "unoverridden file fields survive");
+    assert_eq!(r.scheme, base.scheme);
+    assert!(a.finish().is_ok());
+
+    // off-switches un-pin what the file turned on: a packed artifact can
+    // be served dense without hand-editing the JSON
+    let a = argv(&["--recipe", path.to_str().unwrap(), "--dense", "--no-cast", "--no-lorc"]);
+    let r = QuantRecipe::from_args(&a, "w16").unwrap();
+    assert!(r.weights.is_dense());
+    assert!(!r.cast_fp4_to_e5m2);
+    assert!(r.lorc.is_none());
+    assert!(a.finish().is_ok());
+
+    // per-command default applies only when --recipe/--scheme are absent
+    let r = QuantRecipe::from_args(&argv(&[]), "w4a8-fp-lorc").unwrap();
+    assert_eq!(r, QuantRecipe::preset("w4a8-fp-lorc").unwrap());
+}
+
+#[test]
+fn presets_serve_bit_identically_through_the_stack() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let ck = tiny_ck(arch);
+        let window: Vec<u16> = (0..12).map(|i| (i * 7 % 48) as u16).collect();
+        for name in PRESET_NAMES {
+            let mut recipe = QuantRecipe::preset(name).unwrap();
+            // toy dims: a few groups per row instead of one
+            recipe.group_size = 16;
+            let seqs = if recipe.needs_calibration() { calib(2, 8) } else { Vec::new() };
+            let stack = ServingStack::build(&ck, &seqs, &recipe).unwrap();
+            let model = stack.compile();
+            let dense_logits = model.forward_alloc(&window);
+            // the plan serves exactly the reference engine's bits over the
+            // effective checkpoint
+            let reference =
+                Engine::with_opts(&stack.checkpoint, recipe.engine_opts()).forward(&window);
+            assert_bit_identical(&reference, &dense_logits, &format!("{arch:?} {name} dense"));
+            // quantized presets also serve packed, bit-identically
+            if !matches!(recipe.scheme.weight, NumericFormat::F16) {
+                let mut packed = recipe.clone();
+                packed.weights = WeightLayout::Packed { threads: 1 };
+                packed.validate().unwrap();
+                let packed_logits =
+                    stack.with_recipe(&packed).unwrap().compile().forward_alloc(&window);
+                assert_bit_identical(
+                    &dense_logits,
+                    &packed_logits,
+                    &format!("{arch:?} {name} packed"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stack_coordinator_serves_the_recipe() {
+    // one preset end to end: recipe → stack → coordinator → scored request
+    let ck = tiny_ck(Arch::Opt);
+    let mut recipe = QuantRecipe::preset("w8a8-int").unwrap();
+    recipe.group_size = 16;
+    recipe.max_wait_ms = 0;
+    let stack = ServingStack::build(&ck, &calib(2, 8), &recipe).unwrap();
+    let model = stack.compile();
+    let mut scratch = model.scratch();
+    let window: Vec<u16> = (0..12).map(|i| (i * 5 % 48) as u16).collect();
+    let direct = model.score_nll(&window, &mut scratch);
+    let coord = stack.coordinator();
+    let client = coord.client();
+    let w = window.clone();
+    let h = std::thread::spawn(move || client.score(w).unwrap());
+    coord.run().unwrap();
+    assert_eq!(h.join().unwrap(), direct);
+}
