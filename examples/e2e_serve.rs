@@ -202,7 +202,7 @@ fn main() -> Result<()> {
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..4usize {
-        let client = coord.client();
+        let client = coord.client()?;
         let mine: Vec<Vec<u16>> = windows.iter().skip(c).step_by(4).cloned().collect();
         handles.push(std::thread::spawn(move || -> Result<f64> {
             let mut nll = 0.0f64;
@@ -261,7 +261,7 @@ fn main() -> Result<()> {
     let gen_coord = gen_stack.coordinator();
     let mut gen_handles = Vec::new();
     for c in 0..3usize {
-        let client = gen_coord.gen_client();
+        let client = gen_coord.gen_client()?;
         let mine: Vec<Vec<u16>> = windows
             .iter()
             .take(n_gen)

@@ -78,7 +78,7 @@ fn main() {
                 .coordinator_with_backend(backend.clone());
             let mut handles = Vec::new();
             for c in 0..clients {
-                let client = coord.client();
+                let client = coord.client().unwrap();
                 let mine: Vec<Vec<u16>> =
                     windows.iter().skip(c).step_by(clients).cloned().collect();
                 handles.push(std::thread::spawn(move || {
@@ -297,7 +297,7 @@ fn main() {
         let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
         let mut handles = Vec::new();
         for c in 0..8usize {
-            let client = coord.gen_client();
+            let client = coord.gen_client().unwrap();
             let mine: Vec<Vec<u16>> = windows
                 .iter()
                 .skip(c)
@@ -331,6 +331,54 @@ fn main() {
             report.mean_decode_batch()
         );
         bench.results.push(m);
+    }
+
+    // ---- overload drill: bounded admission + deadlines under pressure ----
+    // A deliberately tiny queue and a tight deadline against a thundering
+    // herd: the interesting numbers are the robustness counters (how much
+    // load was shed typed instead of queued unbounded), recorded as JSON
+    // notes so the perf trajectory also tracks shedding behavior.
+    println!("\n-- overload drill (queue_depth=4, deadline 20ms, 8 clients) --");
+    {
+        let mut r = w16.clone();
+        r.max_batch = 4;
+        r.max_wait_ms = 0;
+        r.queue_depth = 4;
+        r.deadline_ms = 20;
+        let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
+        let mut handles = Vec::new();
+        for c in 0..8usize {
+            let client = coord.client().unwrap();
+            let mine: Vec<Vec<u16>> =
+                windows.iter().skip(c).step_by(8).take(12).cloned().collect();
+            handles.push(std::thread::spawn(move || {
+                let mut ok = 0usize;
+                let mut degraded = 0usize;
+                for w in mine {
+                    match client.score(w) {
+                        Ok(_) => ok += 1,
+                        Err(_) => degraded += 1,
+                    }
+                }
+                (ok, degraded)
+            }));
+        }
+        let report = coord.run().unwrap();
+        let (mut ok, mut degraded) = (0usize, 0usize);
+        for h in handles {
+            let (o, d) = h.join().unwrap();
+            ok += o;
+            degraded += d;
+        }
+        println!(
+            "   {ok} ok, {degraded} degraded (shed {}, expired {} at admission + {} mid-flight)",
+            report.shed_overloaded, report.expired_admission, report.expired_midflight
+        );
+        bench.note("overload shed_overloaded", report.shed_overloaded as f64);
+        bench.note("overload expired_admission", report.expired_admission as f64);
+        bench.note("overload expired_midflight", report.expired_midflight as f64);
+        bench.note("overload ok_requests", ok as f64);
+        bench.note("overload degraded_requests", degraded as f64);
     }
 
     let out = Path::new("bench_results/bench_serving.json");

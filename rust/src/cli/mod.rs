@@ -45,7 +45,14 @@ commands:
                compiled engine); with --generate N [--kv-cache e4m3|e5m2]
                serves continuous-batching KV-cached generation instead;
                --packed [--gemv-threads N] serves from bit-packed weights
-               (composes with --lorc: W4A8+LoRC at packed footprint)
+               (composes with --lorc: W4A8+LoRC at packed footprint);
+               robustness knobs: --queue-depth N bounds admission (full
+               queue sheds with a typed Overloaded), --deadline-ms MS
+               puts a per-request deadline on every submission (0 = none),
+               --fault <site>:<spec>[,...] injects deterministic faults
+               for chaos drills (sites admission|prefill|decode|respond;
+               specs always|once|nth=K|every=K|p=F|stall=MS) with
+               --fault-seed S pinning the probabilistic arms
   selfcheck    cross-check rust engine vs PJRT HLO on a tiny model
 ";
 

@@ -28,8 +28,14 @@
 //! slots for the next `try_fill`). A continuous loop therefore wants
 //! `max_wait = 0`: the join path replaces the wait window.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
+
+/// How long a blocking pull may park before re-checking the shutdown
+/// flag ([`next_batch_watching`]) — the upper bound on how stale a drain
+/// signal can go unnoticed while the loop is idle.
+const SHUTDOWN_POLL: Duration = Duration::from_millis(5);
 
 /// Batching policy parameters.
 #[derive(Debug, Clone, Copy)]
@@ -67,23 +73,89 @@ pub fn next_batch<T>(rx: &Receiver<T>, policy: BatchPolicy) -> Option<Vec<T>> {
     Some(batch)
 }
 
+/// What a blocking [`next_batch_watching`] pull woke up for.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Wakeup<T> {
+    /// At least one request (up to the policy's cap / wait window).
+    Batch(Vec<T>),
+    /// The shutdown flag was raised while waiting — no request consumed.
+    Shutdown,
+    /// Every sender is gone and the queue is drained.
+    Closed,
+}
+
+/// [`next_batch`] that also watches a shutdown flag: waits in
+/// [`SHUTDOWN_POLL`]-sized slices so a drain signal raised while the
+/// loop is parked idle is observed within one slice instead of whenever
+/// the next request happens to arrive. The shutdown check happens
+/// *before* consuming a request, so a [`Wakeup::Shutdown`] return
+/// leaves the queue untouched for the caller's drain pass.
+pub fn next_batch_watching<T>(
+    rx: &Receiver<T>,
+    policy: BatchPolicy,
+    stop: &AtomicBool,
+) -> Wakeup<T> {
+    let first = loop {
+        if stop.load(Ordering::SeqCst) {
+            return Wakeup::Shutdown;
+        }
+        match rx.recv_timeout(SHUTDOWN_POLL) {
+            Ok(item) => break item,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return Wakeup::Closed,
+        }
+    };
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch && !stop.load(Ordering::SeqCst) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout((deadline - now).min(SHUTDOWN_POLL)) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => continue, // re-check stop/deadline
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Wakeup::Batch(batch)
+}
+
+/// What a [`try_fill`] pull observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fill {
+    /// Items appended to `out`.
+    pub taken: usize,
+    /// True when the channel is disconnected (every sender dropped) *and*
+    /// drained — the loop-visible difference between "queue momentarily
+    /// empty" and "all clients gone", which is what lets a drain know no
+    /// further work can ever arrive.
+    pub disconnected: bool,
+}
+
 /// Non-blocking pull of at most `slots` already-queued items into `out`
-/// (appended; `out` is not cleared). Returns how many were taken. This is
-/// the continuous-batching *join* path: between decode steps the serving
-/// loop offers freed slots to waiting requests without ever stalling the
-/// sequences currently in flight.
-pub fn try_fill<T>(rx: &Receiver<T>, out: &mut Vec<T>, slots: usize) -> usize {
+/// (appended; `out` is not cleared). This is the continuous-batching
+/// *join* path: between decode steps the serving loop offers freed slots
+/// to waiting requests without ever stalling the sequences currently in
+/// flight. The returned [`Fill`] reports both how many items were taken
+/// and whether the queue can ever produce more.
+pub fn try_fill<T>(rx: &Receiver<T>, out: &mut Vec<T>, slots: usize) -> Fill {
     let mut taken = 0usize;
+    let mut disconnected = false;
     while taken < slots {
         match rx.try_recv() {
             Ok(item) => {
                 out.push(item);
                 taken += 1;
             }
-            Err(_) => break,
+            Err(TryRecvError::Empty) => break,
+            Err(TryRecvError::Disconnected) => {
+                disconnected = true;
+                break;
+            }
         }
     }
-    taken
+    Fill { taken, disconnected }
 }
 
 #[cfg(test)]
@@ -130,20 +202,78 @@ mod tests {
         let mut out = vec![0];
         // empty queue: returns immediately with nothing
         let t0 = Instant::now();
-        assert_eq!(try_fill(&rx, &mut out, 4), 0);
+        assert_eq!(try_fill(&rx, &mut out, 4).taken, 0);
         assert!(t0.elapsed() < Duration::from_millis(50));
         assert_eq!(out, vec![0]);
         // queued items: appended up to the slot cap
         for i in 1..=5 {
             tx.send(i).unwrap();
         }
-        assert_eq!(try_fill(&rx, &mut out, 3), 3);
+        assert_eq!(try_fill(&rx, &mut out, 3).taken, 3);
         assert_eq!(out, vec![0, 1, 2, 3]);
-        assert_eq!(try_fill(&rx, &mut out, 10), 2);
+        assert_eq!(try_fill(&rx, &mut out, 10).taken, 2);
         assert_eq!(out, vec![0, 1, 2, 3, 4, 5]);
-        // closed channel: still just returns 0
+        // closed channel: still takes nothing
         drop(tx);
-        assert_eq!(try_fill(&rx, &mut out, 4), 0);
+        assert_eq!(try_fill(&rx, &mut out, 4).taken, 0);
+    }
+
+    #[test]
+    fn try_fill_distinguishes_empty_from_disconnected() {
+        // regression: Disconnected used to be folded into Empty, so a
+        // draining loop could not tell "no work right now" from "no work
+        // ever again"
+        let (tx, rx) = channel();
+        let mut out: Vec<u32> = Vec::new();
+        assert_eq!(try_fill(&rx, &mut out, 4), Fill { taken: 0, disconnected: false });
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        // queued items are still drained after the last sender is gone,
+        // and the disconnect is reported alongside them
+        assert_eq!(try_fill(&rx, &mut out, 4), Fill { taken: 2, disconnected: true });
+        assert_eq!(out, vec![1, 2]);
+        assert_eq!(try_fill(&rx, &mut out, 4), Fill { taken: 0, disconnected: true });
+    }
+
+    #[test]
+    fn watching_pull_returns_batches_and_sees_shutdown() {
+        use std::sync::atomic::AtomicBool;
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        tx.send(8).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        assert_eq!(next_batch_watching(&rx, policy, &stop), Wakeup::Batch(vec![7, 8]));
+        // a raised flag wins over queued work and consumes nothing
+        tx.send(9).unwrap();
+        stop.store(true, Ordering::SeqCst);
+        assert_eq!(next_batch_watching(&rx, policy, &stop), Wakeup::<i32>::Shutdown);
+        assert_eq!(rx.try_recv().unwrap(), 9, "shutdown wakeup left the queue untouched");
+        // closed + drained reports Closed
+        stop.store(false, Ordering::SeqCst);
+        drop(tx);
+        assert_eq!(next_batch_watching(&rx, policy, &stop), Wakeup::<i32>::Closed);
+    }
+
+    #[test]
+    fn watching_pull_wakes_from_idle_block_on_shutdown() {
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = channel::<u32>();
+        let flag = stop.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            flag.store(true, Ordering::SeqCst);
+        });
+        let t0 = Instant::now();
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        // no request ever arrives: only the flag can end this wait
+        assert_eq!(next_batch_watching(&rx, policy, &stop), Wakeup::<u32>::Shutdown);
+        assert!(t0.elapsed() < Duration::from_secs(5), "woke via the flag, not a hang");
+        h.join().unwrap();
+        drop(tx);
     }
 
     #[test]

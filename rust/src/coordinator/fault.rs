@@ -1,0 +1,396 @@
+//! Deterministic fault injection for the serving loop.
+//!
+//! A [`FaultPlan`] names *where* faults strike (one of the four
+//! [`FaultSite`]s the coordinator arms) and *when* ([`FaultSpec`]); a
+//! [`FaultInjector`] executes the plan at run time. Every stochastic
+//! trigger draws from the in-crate [`Rng`] seeded from the plan, so a
+//! chaos run is reproducible bit-for-bit from `(--fault spec,
+//! --fault-seed)` — the same discipline the synthetic corpora and
+//! property tests already follow.
+//!
+//! Two fault kinds:
+//!
+//! * **panic** specs (`always`, `once`, `nth=K`, `every=K`, `p=F`) make
+//!   [`FaultInjector::fire`] panic with a typed [`FaultPayload`] through
+//!   the *real* panic machinery — the coordinator's `catch_unwind`
+//!   isolation is exercised end to end, not simulated.
+//! * **stall** specs (`stall=MS`) sleep at the site instead of
+//!   panicking — the deterministic way to drive deadline expiry and
+//!   drain-while-in-flight scenarios in tests without racing the clock.
+//!
+//! The plan is carried on [`CoordinatorConfig`](super::CoordinatorConfig)
+//! (CLI: `zqfp serve --fault <site>:<spec>[,...]`), never on a
+//! `QuantRecipe` — faults are a harness concern, not a reproducible
+//! serving configuration.
+
+use std::time::Duration;
+
+use crate::rng::Rng;
+
+/// Where the serving loop arms the injector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Per request, as it is pulled off the queue (before any work).
+    Admission,
+    /// Inside the guarded prefill of a generation request.
+    Prefill,
+    /// Inside the guarded decode step (batched and solo-retry paths).
+    Decode,
+    /// Just before a response is sent back to the client.
+    Respond,
+}
+
+impl FaultSite {
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Admission => "admission",
+            FaultSite::Prefill => "prefill",
+            FaultSite::Decode => "decode",
+            FaultSite::Respond => "respond",
+        }
+    }
+
+    fn parse(s: &str) -> Option<FaultSite> {
+        match s {
+            "admission" => Some(FaultSite::Admission),
+            "prefill" => Some(FaultSite::Prefill),
+            "decode" => Some(FaultSite::Decode),
+            "respond" => Some(FaultSite::Respond),
+            _ => None,
+        }
+    }
+}
+
+/// When a fault point strikes, counted in *armings* (calls to
+/// [`FaultInjector::fire`] for the point's site).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// Panic on every arming.
+    Always,
+    /// Panic on the first arming only.
+    Once,
+    /// Panic on exactly the `n`th arming (1-based).
+    Nth(u64),
+    /// Panic on every `n`th arming.
+    Every(u64),
+    /// Panic with probability `p` per arming (seeded, reproducible).
+    Prob(f64),
+    /// Sleep this long on every arming instead of panicking.
+    Stall(Duration),
+}
+
+impl FaultSpec {
+    fn parse(s: &str) -> Result<FaultSpec, String> {
+        let bad_num = |k: &str, v: &str| format!("fault spec {k}={v}: not a number");
+        match s.split_once('=') {
+            None => match s {
+                "always" => Ok(FaultSpec::Always),
+                "once" => Ok(FaultSpec::Once),
+                other => Err(format!(
+                    "unknown fault spec {other:?} (try always|once|nth=K|every=K|p=F|stall=MS)"
+                )),
+            },
+            Some(("nth", v)) => {
+                let n: u64 = v.parse().map_err(|_| bad_num("nth", v))?;
+                if n == 0 {
+                    return Err("fault spec nth=0: armings are 1-based".to_string());
+                }
+                Ok(FaultSpec::Nth(n))
+            }
+            Some(("every", v)) => {
+                let n: u64 = v.parse().map_err(|_| bad_num("every", v))?;
+                if n == 0 {
+                    return Err("fault spec every=0 would never fire".to_string());
+                }
+                Ok(FaultSpec::Every(n))
+            }
+            Some(("p", v)) => {
+                let p: f64 = v.parse().map_err(|_| bad_num("p", v))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault spec p={v}: probability must be in [0, 1]"));
+                }
+                Ok(FaultSpec::Prob(p))
+            }
+            Some(("stall", v)) => {
+                let ms: u64 = v.parse().map_err(|_| bad_num("stall", v))?;
+                Ok(FaultSpec::Stall(Duration::from_millis(ms)))
+            }
+            Some((k, _)) => Err(format!(
+                "unknown fault spec key {k:?} (try always|once|nth=K|every=K|p=F|stall=MS)"
+            )),
+        }
+    }
+}
+
+/// A parsed, seedable fault schedule: one or more `(site, spec)` points.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    points: Vec<(FaultSite, FaultSpec)>,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the CLI grammar: comma-separated `<site>:<spec>` points,
+    /// e.g. `"prefill:p=0.3,decode:every=4,respond:once"`. Sites may
+    /// repeat (each point keeps its own counter and rng stream).
+    pub fn parse(text: &str) -> Result<FaultPlan, String> {
+        let mut points = Vec::new();
+        for part in text.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (site, spec) = part
+                .split_once(':')
+                .ok_or_else(|| format!("fault point {part:?}: expected <site>:<spec>"))?;
+            let site = FaultSite::parse(site.trim()).ok_or_else(|| {
+                format!("unknown fault site {site:?} (try admission|prefill|decode|respond)")
+            })?;
+            points.push((site, FaultSpec::parse(spec.trim())?));
+        }
+        if points.is_empty() {
+            return Err("empty fault plan (expected <site>:<spec>[,...])".to_string());
+        }
+        Ok(FaultPlan { points, seed: 0 })
+    }
+
+    /// Build a plan directly (tests).
+    pub fn new(points: Vec<(FaultSite, FaultSpec)>) -> FaultPlan {
+        FaultPlan { points, seed: 0 }
+    }
+
+    /// Pin the rng seed the probabilistic specs draw from.
+    pub fn with_seed(mut self, seed: u64) -> FaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    pub fn points(&self) -> &[(FaultSite, FaultSpec)] {
+        &self.points
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// One-line human form for the serve banner.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .points
+            .iter()
+            .map(|(site, spec)| format!("{}:{spec:?}", site.name()))
+            .collect();
+        format!("{} (seed {})", parts.join(","), self.seed)
+    }
+}
+
+/// The panic payload injected panics carry — typed so the coordinator
+/// (and test panic hooks) can tell an injected fault from a genuine bug.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultPayload {
+    pub site: FaultSite,
+}
+
+/// One armed fault point at run time.
+#[derive(Debug)]
+struct Arm {
+    site: FaultSite,
+    spec: FaultSpec,
+    /// Armings seen so far (incremented per `fire` at this site).
+    count: u64,
+    fired: bool,
+    rng: Rng,
+}
+
+impl Arm {
+    /// Advance the arming counter; true ⇒ this arming panics.
+    fn trip(&mut self) -> bool {
+        self.count += 1;
+        match self.spec {
+            FaultSpec::Always => true,
+            FaultSpec::Once => {
+                let first = !self.fired;
+                self.fired = true;
+                first
+            }
+            FaultSpec::Nth(n) => self.count == n,
+            FaultSpec::Every(n) => self.count % n == 0,
+            FaultSpec::Prob(p) => self.rng.uniform() < p,
+            FaultSpec::Stall(_) => false,
+        }
+    }
+}
+
+/// Executes a [`FaultPlan`]: each point keeps its own arming counter and
+/// forked rng stream, so schedules are reproducible regardless of how
+/// sites interleave at run time.
+#[derive(Debug)]
+pub struct FaultInjector {
+    arms: Vec<Arm>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan) -> FaultInjector {
+        let mut root = Rng::seeded(plan.seed);
+        let arms = plan
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, &(site, spec))| Arm {
+                site,
+                spec,
+                count: 0,
+                fired: false,
+                rng: root.fork(i as u64),
+            })
+            .collect();
+        FaultInjector { arms }
+    }
+
+    /// Arm every point at `site`: stall points sleep, panic points that
+    /// trip panic with a [`FaultPayload`] (callers wrap the enclosing
+    /// work in `catch_unwind`). Sites with no points are free.
+    pub fn fire(&mut self, site: FaultSite) {
+        let mut tripped = false;
+        for arm in self.arms.iter_mut().filter(|a| a.site == site) {
+            if let FaultSpec::Stall(d) = arm.spec {
+                arm.count += 1;
+                std::thread::sleep(d);
+            } else {
+                tripped |= arm.trip();
+            }
+        }
+        if tripped {
+            std::panic::panic_any(FaultPayload { site });
+        }
+    }
+}
+
+/// Human-readable message for a caught panic payload: injected faults
+/// name their site, genuine panics keep their message.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(p) = payload.downcast_ref::<FaultPayload>() {
+        format!("injected fault at {}", p.site.name())
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn catches(f: impl FnOnce()) -> bool {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)).is_err()
+    }
+
+    #[test]
+    fn parse_grammar_round_trips() {
+        let plan = FaultPlan::parse("prefill:p=0.3, decode:every=4,respond:once").unwrap();
+        assert_eq!(
+            plan.points(),
+            &[
+                (FaultSite::Prefill, FaultSpec::Prob(0.3)),
+                (FaultSite::Decode, FaultSpec::Every(4)),
+                (FaultSite::Respond, FaultSpec::Once),
+            ]
+        );
+        let plan = FaultPlan::parse("admission:nth=3,decode:stall=20").unwrap();
+        assert_eq!(
+            plan.points(),
+            &[
+                (FaultSite::Admission, FaultSpec::Nth(3)),
+                (FaultSite::Decode, FaultSpec::Stall(Duration::from_millis(20))),
+            ]
+        );
+        assert_eq!(plan.with_seed(9).seed(), 9);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "",
+            "prefill",
+            "warp:always",
+            "decode:sometimes",
+            "decode:nth=0",
+            "decode:every=0",
+            "decode:p=1.5",
+            "decode:p=x",
+            "decode:stall=fast",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn once_nth_every_schedules() {
+        let plan = FaultPlan::parse("decode:once").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        assert!(catches(|| fi.fire(FaultSite::Decode)));
+        assert!(!catches(|| fi.fire(FaultSite::Decode)));
+        // other sites never trip
+        assert!(!catches(|| fi.fire(FaultSite::Prefill)));
+
+        let plan = FaultPlan::parse("decode:nth=3").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        let fires: Vec<bool> = (0..5).map(|_| catches(|| fi.fire(FaultSite::Decode))).collect();
+        assert_eq!(fires, [false, false, true, false, false]);
+
+        let plan = FaultPlan::parse("decode:every=2").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        let fires: Vec<bool> = (0..6).map(|_| catches(|| fi.fire(FaultSite::Decode))).collect();
+        assert_eq!(fires, [false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn prob_schedule_is_seed_reproducible() {
+        let run = |seed: u64| -> Vec<bool> {
+            let plan = FaultPlan::parse("respond:p=0.5").unwrap().with_seed(seed);
+            let mut fi = FaultInjector::new(&plan);
+            (0..64).map(|_| catches(|| fi.fire(FaultSite::Respond))).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed, same schedule");
+        assert_ne!(run(7), run(8), "different seeds diverge");
+        let fired = run(7).iter().filter(|&&b| b).count();
+        assert!((10..=54).contains(&fired), "p=0.5 over 64 armings fired {fired}");
+    }
+
+    #[test]
+    fn repeated_sites_keep_independent_counters() {
+        // two points on the same site: either tripping panics the arming
+        let plan = FaultPlan::parse("decode:nth=2,decode:nth=4").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        let fires: Vec<bool> = (0..5).map(|_| catches(|| fi.fire(FaultSite::Decode))).collect();
+        assert_eq!(fires, [false, true, false, true, false]);
+    }
+
+    #[test]
+    fn stall_sleeps_instead_of_panicking() {
+        let plan = FaultPlan::parse("admission:stall=15").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        let t0 = std::time::Instant::now();
+        assert!(!catches(|| fi.fire(FaultSite::Admission)));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn payload_is_typed_and_message_extraction_works() {
+        let plan = FaultPlan::parse("prefill:always").unwrap();
+        let mut fi = FaultInjector::new(&plan);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            fi.fire(FaultSite::Prefill)
+        }))
+        .unwrap_err();
+        let payload = err.downcast_ref::<FaultPayload>().expect("typed payload");
+        assert_eq!(payload.site, FaultSite::Prefill);
+        assert_eq!(panic_message(&*err), "injected fault at prefill");
+        // genuine panics keep their message
+        let err = std::panic::catch_unwind(|| panic!("kernel oob at row {}", 3)).unwrap_err();
+        assert_eq!(panic_message(&*err), "kernel oob at row 3");
+    }
+}

@@ -112,6 +112,23 @@ pub struct ServeReport {
     pub decode_wall: Duration,
     /// Per-request decode tokens/s (recorded when a generation finishes).
     pub request_tok_s: RateStats,
+    /// Requests rejected at submit because the bounded queue was full.
+    pub shed_overloaded: usize,
+    /// Requests whose deadline had already passed at admission.
+    pub expired_admission: usize,
+    /// Requests that expired mid-flight (during prefill or between decode
+    /// steps) and returned `DeadlineExceeded` with partial tokens.
+    pub expired_midflight: usize,
+    /// Responses answered with `Faulted` (a panic was caught and isolated).
+    pub faulted: usize,
+    /// KV caches quarantined after a panic unwound out of their layer walk
+    /// (dropped, never recycled into the free pool).
+    pub quarantined_caches: usize,
+    /// Queued requests answered `ShuttingDown` during a graceful drain.
+    pub rejected_shutdown: usize,
+    /// True when the run ended via the shutdown signal (graceful drain)
+    /// rather than by every client hanging up.
+    pub drained: bool,
 }
 
 impl ServeReport {
@@ -128,6 +145,16 @@ impl ServeReport {
     /// Mean sequences in flight per decode step.
     pub fn mean_decode_batch(&self) -> f64 {
         self.decode_tokens as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// Responses that were something other than `Ok` — the sum of every
+    /// robustness counter (shed, expired, faulted, drained-away).
+    pub fn degraded(&self) -> usize {
+        self.shed_overloaded
+            + self.expired_admission
+            + self.expired_midflight
+            + self.faulted
+            + self.rejected_shutdown
     }
 
     pub fn print(&self) {
@@ -163,6 +190,19 @@ impl ServeReport {
                 self.request_tok_s.mean(),
                 self.request_tok_s.min(),
                 self.request_tok_s.max(),
+            );
+        }
+        if self.degraded() > 0 || self.drained {
+            println!(
+                "robustness: shed {} | expired {} at admission + {} mid-flight | \
+                 faulted {} (caches quarantined {}) | shutdown-rejected {}{}",
+                self.shed_overloaded,
+                self.expired_admission,
+                self.expired_midflight,
+                self.faulted,
+                self.quarantined_caches,
+                self.rejected_shutdown,
+                if self.drained { " | drained" } else { "" },
             );
         }
     }
@@ -218,6 +258,23 @@ mod tests {
             let v = one.percentile_ms(p);
             assert!((v - 7.0).abs() < 0.01, "p={p}: {v}");
         }
+    }
+
+    #[test]
+    fn degraded_sums_every_robustness_counter() {
+        let report = ServeReport {
+            shed_overloaded: 1,
+            expired_admission: 2,
+            expired_midflight: 3,
+            faulted: 4,
+            quarantined_caches: 4, // not a response — excluded from the sum
+            rejected_shutdown: 5,
+            drained: true,
+            ..Default::default()
+        };
+        assert_eq!(report.degraded(), 15);
+        report.print(); // robustness line must not panic
+        assert_eq!(ServeReport::default().degraded(), 0);
     }
 
     #[test]

@@ -52,20 +52,55 @@
 //!
 //! Client threads only touch channels. `run` returns when every client
 //! handle has been dropped and the queue is drained.
+//!
+//! # Failure model & backpressure
+//!
+//! The fair-weather loop above is hardened by four mechanisms (see
+//! ARCHITECTURE.md §"Failure model & backpressure" for the full map):
+//!
+//! * **Bounded admission** — the work queue is a `sync_channel` of
+//!   [`CoordinatorConfig::queue_depth`] slots; submission *sheds* with a
+//!   typed [`ServeError::Overloaded`] when the queue is full instead of
+//!   hiding overload inside unbounded latency.
+//! * **Deadlines** — requests may carry one (per-client default from
+//!   [`CoordinatorConfig::deadline`], or per-call via `*_by`). It is
+//!   checked at admission, between prefill chunks, and between decode
+//!   steps; expired work returns [`ServeError::DeadlineExceeded`] with
+//!   whatever tokens were already decoded.
+//! * **Panic isolation** — plan execution runs under `catch_unwind`: a
+//!   panic answers the poisoned request with [`ServeError::Faulted`],
+//!   quarantines its KV cache (never recycled), and the loop keeps
+//!   serving everyone else (a batched-step panic is retried solo, which
+//!   is bit-safe because the layer walk commits KV cursors only at the
+//!   end).
+//! * **Graceful drain** — a [`ShutdownHandle`] stops admission, lets
+//!   in-flight sequences finish, and answers queued work with
+//!   [`ServeError::ShuttingDown`].
+//!
+//! The [`fault`] module injects deterministic panics/stalls at four
+//! sites (admission, prefill, decode, respond) so all of the above is
+//! testable by seed (`zqfp serve --fault <site>:<spec>`); the invariant
+//! under any schedule is *exactly one typed response per request* and a
+//! loop that never hangs.
 
 pub mod batcher;
+pub mod fault;
 pub mod metrics;
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-pub use batcher::{next_batch, try_fill, BatchPolicy};
+pub use batcher::{next_batch, next_batch_watching, try_fill, BatchPolicy, Fill, Wakeup};
+pub use fault::{FaultInjector, FaultPayload, FaultPlan, FaultSite, FaultSpec};
 pub use metrics::{LatencyStats, RateStats, ServeReport};
 
 use crate::cli::Args;
 use crate::data::{Corpus, CorpusKind};
-use crate::ensure;
 use crate::error::Result;
 use crate::formats::FpFormat;
 use crate::model::Checkpoint;
@@ -84,11 +119,82 @@ pub enum ScoreBackend {
     Compiled,
 }
 
+/// Default bound of the admission queue (requests), used when a recipe
+/// or config does not override it.
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
+
+/// Deadline probe granularity during prefill: the guarded prefill checks
+/// the request's deadline every this many prompt tokens, so an expiring
+/// prompt aborts without burning the rest of its prefill.
+const PREFILL_CHUNK: usize = 8;
+
+/// The typed outcome of one serving request — every client gets exactly
+/// one of these per submission, no matter what faults strike the loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request was malformed (bad window length, token out of vocab,
+    /// budget exceeding `max_seq`, …). Checked client-side for fast
+    /// failure and loop-side for defense.
+    Invalid(String),
+    /// Shed at submit: the bounded admission queue was full.
+    Overloaded,
+    /// The deadline passed — at admission (`partial` empty) or mid-flight
+    /// (`partial` holds the tokens decoded before expiry).
+    DeadlineExceeded { partial: Vec<u16> },
+    /// A panic was caught while executing this request; the message names
+    /// the injected fault site or carries the genuine panic text.
+    Faulted(String),
+    /// The coordinator is draining (or already gone) — the request was
+    /// not executed.
+    ShuttingDown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            ServeError::Overloaded => write!(f, "overloaded: admission queue full"),
+            ServeError::DeadlineExceeded { partial } => {
+                write!(f, "deadline exceeded ({} partial tokens)", partial.len())
+            }
+            ServeError::Faulted(msg) => write!(f, "request faulted: {msg}"),
+            ServeError::ShuttingDown => write!(f, "coordinator shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Per-request result type of the serving API.
+pub type ServeResult<T> = std::result::Result<T, ServeError>;
+
+/// Misuse of the [`Coordinator`] lifecycle itself (as opposed to
+/// [`ServeError`], which covers per-request outcomes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoordinatorError {
+    /// Client handles must be created before [`Coordinator::run`]
+    /// consumes the queue's sender.
+    NotAcceptingClients,
+}
+
+impl fmt::Display for CoordinatorError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CoordinatorError::NotAcceptingClients => {
+                write!(f, "coordinator is not accepting new clients (create handles before run)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CoordinatorError {}
+
 /// One in-flight scoring request.
 struct ScoreRequest {
     window: Vec<u16>,
     submitted: Instant,
-    respond: SyncSender<Result<f32>>,
+    deadline: Option<Instant>,
+    respond: SyncSender<ServeResult<f32>>,
 }
 
 /// One in-flight generation request.
@@ -96,7 +202,8 @@ struct GenRequest {
     prompt: Vec<u16>,
     max_new: usize,
     submitted: Instant,
-    respond: SyncSender<Result<Generated>>,
+    deadline: Option<Instant>,
+    respond: SyncSender<ServeResult<Generated>>,
 }
 
 /// Everything a client can ask of the coordinator.
@@ -106,7 +213,7 @@ enum Work {
 }
 
 /// A finished generation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Generated {
     /// The `max_new` greedily-decoded tokens (prompt not included).
     pub tokens: Vec<u16>,
@@ -118,73 +225,203 @@ pub struct Generated {
     pub decode_tok_s: f64,
 }
 
+/// Submit one `Work` item through the bounded queue, shedding typed
+/// errors instead of blocking: a full queue is [`ServeError::Overloaded`]
+/// (counted in the shared shed counter), a closed one is
+/// [`ServeError::ShuttingDown`].
+fn submit_work(
+    tx: &SyncSender<Work>,
+    shed: &AtomicUsize,
+    work: Work,
+) -> std::result::Result<(), ServeError> {
+    match tx.try_send(work) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(_)) => {
+            shed.fetch_add(1, Ordering::SeqCst);
+            Err(ServeError::Overloaded)
+        }
+        Err(TrySendError::Disconnected(_)) => Err(ServeError::ShuttingDown),
+    }
+}
+
 /// Handle client threads use to submit scoring requests. The serving loop
 /// exits once all client handles (score and generation) are dropped.
 #[derive(Clone)]
 pub struct ScoreClient {
-    tx: Sender<Work>,
+    tx: SyncSender<Work>,
     seq: usize,
+    deadline: Option<Duration>,
+    shed: Arc<AtomicUsize>,
 }
 
 impl ScoreClient {
     /// Score one window (blocking). Returns the summed NLL of the window.
-    pub fn score(&self, window: Vec<u16>) -> Result<f32> {
-        ensure!(window.len() == self.seq, "window must be {} tokens", self.seq);
-        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        self.tx
-            .send(Work::Score(ScoreRequest {
+    /// Carries the coordinator's default deadline, if any.
+    pub fn score(&self, window: Vec<u16>) -> ServeResult<f32> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.score_by(window, deadline)
+    }
+
+    /// [`score`](Self::score) with an explicit per-request deadline
+    /// (`None` = no deadline, overriding the coordinator default).
+    pub fn score_by(&self, window: Vec<u16>, deadline: Option<Instant>) -> ServeResult<f32> {
+        if window.len() != self.seq {
+            return Err(ServeError::Invalid(format!("window must be {} tokens", self.seq)));
+        }
+        let (rtx, rrx) = sync_channel(1);
+        submit_work(
+            &self.tx,
+            &self.shed,
+            Work::Score(ScoreRequest {
                 window,
                 submitted: Instant::now(),
+                deadline,
                 respond: rtx,
-            }))
-            .map_err(|_| crate::anyhow!("coordinator stopped"))?;
-        rrx.recv()
-            .map_err(|_| crate::anyhow!("coordinator dropped request"))?
+            }),
+        )?;
+        rrx.recv().map_err(|_| ServeError::ShuttingDown)?
     }
 }
+
+/// The response side of a [`GenClient::submit`] call: receives exactly
+/// one typed result (dropping it mid-generation is safe — the loop's
+/// response send just fails silently).
+pub type GenTicket = Receiver<ServeResult<Generated>>;
 
 /// Handle client threads use to submit generation requests.
 #[derive(Clone)]
 pub struct GenClient {
-    tx: Sender<Work>,
+    tx: SyncSender<Work>,
     max_seq: usize,
     vocab: usize,
+    deadline: Option<Duration>,
+    shed: Arc<AtomicUsize>,
 }
 
 impl GenClient {
     /// Greedily generate `max_new` tokens after `prompt` (blocking).
-    pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> Result<Generated> {
+    /// Carries the coordinator's default deadline, if any.
+    pub fn generate(&self, prompt: Vec<u16>, max_new: usize) -> ServeResult<Generated> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.generate_by(prompt, max_new, deadline)
+    }
+
+    /// [`generate`](Self::generate) with an explicit per-request deadline.
+    pub fn generate_by(
+        &self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        deadline: Option<Instant>,
+    ) -> ServeResult<Generated> {
+        let ticket = self.submit_by(prompt, max_new, deadline)?;
+        ticket.recv().map_err(|_| ServeError::ShuttingDown)?
+    }
+
+    /// Non-blocking submit: the request is queued (or shed, typed) and
+    /// the returned [`GenTicket`] delivers the one response later.
+    pub fn submit(&self, prompt: Vec<u16>, max_new: usize) -> ServeResult<GenTicket> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.submit_by(prompt, max_new, deadline)
+    }
+
+    /// [`submit`](Self::submit) with an explicit per-request deadline.
+    pub fn submit_by(
+        &self,
+        prompt: Vec<u16>,
+        max_new: usize,
+        deadline: Option<Instant>,
+    ) -> ServeResult<GenTicket> {
         validate_gen(&prompt, max_new, self.max_seq, self.vocab)?;
-        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
-        self.tx
-            .send(Work::Generate(GenRequest {
+        let (rtx, rrx) = sync_channel(1);
+        submit_work(
+            &self.tx,
+            &self.shed,
+            Work::Generate(GenRequest {
                 prompt,
                 max_new,
                 submitted: Instant::now(),
+                deadline,
                 respond: rtx,
-            }))
-            .map_err(|_| crate::anyhow!("coordinator stopped"))?;
-        rrx.recv()
-            .map_err(|_| crate::anyhow!("coordinator dropped request"))?
+            }),
+        )?;
+        Ok(rrx)
     }
 }
 
 /// Shared request validation (client side for fast failure, coordinator
-/// side for defense — an invalid token id would otherwise panic the loop).
-fn validate_gen(prompt: &[u16], max_new: usize, max_seq: usize, vocab: usize) -> Result<()> {
-    ensure!(!prompt.is_empty(), "prompt must be non-empty");
-    ensure!(max_new >= 1, "max_new must be at least 1");
+/// side for defense — an invalid token id would otherwise panic the
+/// loop). This is the *single* admission rule: `prompt + max_new` must
+/// fit `max_seq` (the CLI pre-check in [`serve_command`] delegates here
+/// rather than keeping its own drifted copy).
+fn validate_gen(
+    prompt: &[u16],
+    max_new: usize,
+    max_seq: usize,
+    vocab: usize,
+) -> std::result::Result<(), ServeError> {
+    if prompt.is_empty() {
+        return Err(ServeError::Invalid("prompt must be non-empty".into()));
+    }
+    if max_new < 1 {
+        return Err(ServeError::Invalid("max_new must be at least 1".into()));
+    }
     // saturating: `prompt.len() + max_new` could wrap for adversarial
     // max_new and sneak past the guard into a capacity-overflow panic
-    ensure!(
-        max_new <= max_seq.saturating_sub(prompt.len()),
-        "prompt ({}) + max_new ({max_new}) exceeds max_seq {max_seq}",
-        prompt.len()
-    );
+    if max_new > max_seq.saturating_sub(prompt.len()) {
+        return Err(ServeError::Invalid(format!(
+            "prompt ({}) + max_new ({max_new}) exceeds max_seq {max_seq}",
+            prompt.len()
+        )));
+    }
     if let Some(&bad) = prompt.iter().find(|&&t| t as usize >= vocab) {
-        return Err(crate::anyhow!("token id {bad} out of range (vocab size {vocab})"));
+        return Err(ServeError::Invalid(format!(
+            "token id {bad} out of range (vocab size {vocab})"
+        )));
     }
     Ok(())
+}
+
+/// True when a request's deadline (if any) has already passed.
+fn expired(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+/// Run `f` with panics caught; a panic becomes its human-readable
+/// message (injected faults name their site). `AssertUnwindSafe` is
+/// sound here because the loop never reuses state a panic may have
+/// poisoned: the scratch arena is fully rewritten by the next request
+/// and the touched KV cache is quarantined by the caller.
+fn guard<T>(f: impl FnOnce() -> T) -> std::result::Result<T, String> {
+    catch_unwind(AssertUnwindSafe(f)).map_err(|p| fault::panic_message(&*p))
+}
+
+/// Arm the injector at `site` with the panic caught, so fault sites
+/// outside the guarded plan sections (admission, respond) still turn
+/// into typed errors instead of killing the loop.
+fn fire(fi: &mut Option<FaultInjector>, site: FaultSite) -> std::result::Result<(), String> {
+    match fi.as_mut() {
+        Some(f) => guard(|| f.fire(site)),
+        None => Ok(()),
+    }
+}
+
+/// Send one typed response through a request's oneshot, arming the
+/// respond-site fault point first (a respond fault replaces the payload
+/// with [`ServeError::Faulted`] — the client still gets exactly one
+/// response). `faulted` counts every `Faulted` actually delivered.
+fn deliver<T>(
+    fi: &mut Option<FaultInjector>,
+    faulted: &mut usize,
+    respond: &SyncSender<ServeResult<T>>,
+    mut result: ServeResult<T>,
+) {
+    if let Err(msg) = fire(fi, FaultSite::Respond) {
+        result = Err(ServeError::Faulted(msg));
+    }
+    if matches!(&result, Err(ServeError::Faulted(_))) {
+        *faulted += 1;
+    }
+    let _ = respond.send(result); // a dropped client is not an error
 }
 
 /// Everything the serving loop needs.
@@ -202,6 +439,16 @@ pub struct CoordinatorConfig {
     /// factors per linear, [`crate::pipeline::ptq`]) — required when
     /// `opts.weights` selects the packed layout; ignored otherwise.
     pub sidecar: Option<QuantSidecar>,
+    /// Bound of the admission queue (requests). Submissions beyond it
+    /// shed with [`ServeError::Overloaded`]; clamped to at least 1.
+    pub queue_depth: usize,
+    /// Default per-request deadline handed to every client (`None` = no
+    /// deadline; `*_by` calls override per request).
+    pub deadline: Option<Duration>,
+    /// Deterministic fault schedule for chaos runs (`None` in
+    /// production — injection compiled in but disarmed costs nothing on
+    /// the hot path beyond an `Option` check).
+    pub faults: Option<FaultPlan>,
 }
 
 /// The checkpoint→sidecar→[`CompiledModel`]→[`Coordinator`] wiring that
@@ -305,11 +552,31 @@ impl ServingStack {
     }
 }
 
+/// Raises the drain signal of one [`Coordinator`] from any thread: the
+/// loop stops admitting, finishes in-flight sequences, answers queued
+/// work with [`ServeError::ShuttingDown`], and returns its report.
+#[derive(Clone)]
+pub struct ShutdownHandle {
+    stop: Arc<AtomicBool>,
+}
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
 /// The request queue + serving loop.
 pub struct Coordinator {
-    tx: Option<Sender<Work>>,
+    tx: Option<SyncSender<Work>>,
     rx: Receiver<Work>,
     cfg: CoordinatorConfig,
+    stop: Arc<AtomicBool>,
+    shed: Arc<AtomicUsize>,
 }
 
 /// Decode-side state of one in-flight generation (its [`KvCache`] lives in
@@ -320,38 +587,63 @@ struct ActiveGen {
     max_new: usize,
     prompt_len: usize,
     submitted: Instant,
+    deadline: Option<Instant>,
     decode_start: Instant,
-    respond: SyncSender<Result<Generated>>,
+    respond: SyncSender<ServeResult<Generated>>,
 }
 
 impl Coordinator {
     pub fn new(cfg: CoordinatorConfig) -> Coordinator {
-        let (tx, rx) = channel();
-        Coordinator { tx: Some(tx), rx, cfg }
+        let (tx, rx) = sync_channel(cfg.queue_depth.max(1));
+        Coordinator {
+            tx: Some(tx),
+            rx,
+            cfg,
+            stop: Arc::new(AtomicBool::new(false)),
+            shed: Arc::new(AtomicUsize::new(0)),
+        }
     }
 
     /// A scoring client handle. Create handles **before** calling
     /// [`run`](Self::run); `run` drops the coordinator's own sender, so the
     /// loop ends when the last client handle is gone.
-    pub fn client(&self) -> ScoreClient {
-        ScoreClient {
-            tx: self.tx.as_ref().expect("before run").clone(),
+    pub fn client(&self) -> std::result::Result<ScoreClient, CoordinatorError> {
+        let tx = self.tx.as_ref().ok_or(CoordinatorError::NotAcceptingClients)?.clone();
+        Ok(ScoreClient {
+            tx,
             seq: self.cfg.ck.config.max_seq,
-        }
+            deadline: self.cfg.deadline,
+            shed: self.shed.clone(),
+        })
     }
 
     /// A generation client handle (same lifetime rules as
     /// [`client`](Self::client)).
-    pub fn gen_client(&self) -> GenClient {
-        GenClient {
-            tx: self.tx.as_ref().expect("before run").clone(),
+    pub fn gen_client(&self) -> std::result::Result<GenClient, CoordinatorError> {
+        let tx = self.tx.as_ref().ok_or(CoordinatorError::NotAcceptingClients)?.clone();
+        Ok(GenClient {
+            tx,
             max_seq: self.cfg.ck.config.max_seq,
             vocab: self.cfg.ck.config.vocab_size,
-        }
+            deadline: self.cfg.deadline,
+            shed: self.shed.clone(),
+        })
+    }
+
+    /// A handle that triggers graceful drain from any thread.
+    pub fn shutdown_handle(&self) -> ShutdownHandle {
+        ShutdownHandle { stop: self.stop.clone() }
+    }
+
+    /// Arm a deterministic fault schedule for this run (chaos testing /
+    /// `zqfp serve --fault`).
+    pub fn inject_faults(&mut self, plan: FaultPlan) {
+        self.cfg.faults = Some(plan);
     }
 
     /// Run the serving loop on the current thread until every client is
-    /// dropped and the queue is drained; returns the serving report.
+    /// dropped and the queue is drained (or a [`ShutdownHandle`] drains
+    /// it); returns the serving report.
     pub fn run(mut self) -> Result<ServeReport> {
         drop(self.tx.take()); // only client handles keep the queue open
         match self.cfg.backend.clone() {
@@ -366,16 +658,78 @@ impl Coordinator {
         let b = scorer.batch;
         let policy = BatchPolicy { max_batch: b, ..self.cfg.policy };
         let seq = scorer.seq;
+        let mut fi: Option<FaultInjector> = self.cfg.faults.as_ref().map(FaultInjector::new);
         let mut flat: Vec<u16> = Vec::with_capacity(b * seq);
         let mut latency = LatencyStats::default();
         let mut batches = 0usize;
         let mut requests = 0usize;
+        let mut expired_admission = 0usize;
+        let mut faulted = 0usize;
+        let mut rejected_shutdown = 0usize;
+        let mut drained = false;
         let t0 = Instant::now();
-        while let Some(work) = next_batch(&self.rx, policy) {
+        loop {
+            let work = match next_batch_watching(&self.rx, policy, &self.stop) {
+                Wakeup::Batch(work) => work,
+                Wakeup::Shutdown => {
+                    // graceful drain: nothing is ever in flight between
+                    // batches here, so answer the queue and stop
+                    drained = true;
+                    while let Ok(w) = self.rx.try_recv() {
+                        requests += 1;
+                        rejected_shutdown += 1;
+                        match w {
+                            Work::Score(r) => {
+                                latency.record(Instant::now() - r.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &r.respond,
+                                    Err(ServeError::ShuttingDown),
+                                );
+                            }
+                            Work::Generate(g) => {
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &g.respond,
+                                    Err(ServeError::ShuttingDown),
+                                );
+                            }
+                        }
+                    }
+                    break;
+                }
+                Wakeup::Closed => break,
+            };
             let mut batch = Vec::with_capacity(work.len());
             for w in work {
                 match w {
-                    Work::Score(r) => batch.push(r),
+                    Work::Score(r) => {
+                        if let Err(msg) = fire(&mut fi, FaultSite::Admission) {
+                            requests += 1;
+                            latency.record(Instant::now() - r.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &r.respond,
+                                Err(ServeError::Faulted(msg)),
+                            );
+                        } else if expired(r.deadline) {
+                            requests += 1;
+                            expired_admission += 1;
+                            latency.record(Instant::now() - r.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &r.respond,
+                                Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
+                            );
+                        } else {
+                            batch.push(r);
+                        }
+                    }
                     Work::Generate(g) => {
                         // the incremental-decode state lives in the
                         // compiled plan; the AOT scoring executable has no
@@ -384,9 +738,14 @@ impl Coordinator {
                         // comparable for identical traffic.
                         requests += 1;
                         latency.record(Instant::now() - g.submitted);
-                        let _ = g.respond.send(Err(crate::anyhow!(
-                            "generation requires the compiled backend"
-                        )));
+                        deliver(
+                            &mut fi,
+                            &mut faulted,
+                            &g.respond,
+                            Err(ServeError::Invalid(
+                                "generation requires the compiled backend".into(),
+                            )),
+                        );
                     }
                 }
             }
@@ -400,7 +759,7 @@ impl Coordinator {
             for _ in batch.len()..b {
                 flat.extend_from_slice(&batch[0].window); // pad, discarded
             }
-            let result = scorer.score_batch(&flat, &weights);
+            let result = guard(|| scorer.score_batch(&flat, &weights));
             let now = Instant::now();
             batches += 1;
             requests += batch.len();
@@ -408,14 +767,32 @@ impl Coordinator {
                 latency.record(now - r.submitted);
             }
             match result {
-                Ok(nll) => {
+                Ok(Ok(nll)) => {
                     for (r, &v) in batch.iter().zip(nll.iter()) {
-                        let _ = r.respond.send(Ok(v));
+                        deliver(&mut fi, &mut faulted, &r.respond, Ok(v));
                     }
                 }
-                Err(e) => {
-                    for r in batch {
-                        let _ = r.respond.send(Err(crate::anyhow!("{e:#}")));
+                // a failed (or panicked) batch faults every request in
+                // it — each still gets its one typed response
+                Ok(Err(e)) => {
+                    let msg = format!("{e:#}");
+                    for r in &batch {
+                        deliver(
+                            &mut fi,
+                            &mut faulted,
+                            &r.respond,
+                            Err(ServeError::Faulted(msg.clone())),
+                        );
+                    }
+                }
+                Err(msg) => {
+                    for r in &batch {
+                        deliver(
+                            &mut fi,
+                            &mut faulted,
+                            &r.respond,
+                            Err(ServeError::Faulted(msg.clone())),
+                        );
                     }
                 }
             }
@@ -426,6 +803,11 @@ impl Coordinator {
             wall: t0.elapsed(),
             latency,
             mean_batch_size: requests as f64 / batches.max(1) as f64,
+            shed_overloaded: self.shed.load(Ordering::SeqCst),
+            expired_admission,
+            faulted,
+            rejected_shutdown,
+            drained,
             ..ServeReport::default()
         })
     }
@@ -466,6 +848,7 @@ impl Coordinator {
         // is pre-sized for max_seq rows and decode_step_batch asserts it.
         let policy = BatchPolicy { max_wait: Duration::ZERO, ..self.cfg.policy };
         let max_active = policy.max_batch.max(1).min(max_seq);
+        let mut fi: Option<FaultInjector> = self.cfg.faults.as_ref().map(FaultInjector::new);
 
         let mut latency = LatencyStats::default();
         let mut request_tok_s = RateStats::default();
@@ -476,91 +859,257 @@ impl Coordinator {
         let mut decode_tokens = 0usize;
         let mut decode_steps = 0usize;
         let mut decode_wall = Duration::ZERO;
+        let mut expired_admission = 0usize;
+        let mut expired_midflight = 0usize;
+        let mut faulted = 0usize;
+        let mut quarantined_caches = 0usize;
+        let mut rejected_shutdown = 0usize;
+        let mut drained = false;
 
         let mut active: Vec<ActiveGen> = Vec::new();
         let mut caches: Vec<KvCache> = Vec::new();
         let mut pool: Vec<KvCache> = Vec::new();
         let mut step_tokens: Vec<u16> = Vec::with_capacity(max_active);
+        let mut step_out: Vec<u16> = Vec::with_capacity(max_active);
         let mut admit: Vec<Work> = Vec::with_capacity(max_active);
+        // set once try_fill observes every sender gone: the queue can
+        // never produce work again, so the loop ends when `active` drains
+        let mut queue_closed = false;
 
         let t0 = Instant::now();
         loop {
-            // ---- admission: block when idle, join mid-flight when busy --
-            admit.clear();
-            if active.is_empty() {
-                match next_batch(&self.rx, policy) {
-                    Some(work) => {
-                        batches += 1;
-                        admit.extend(work);
-                    }
-                    None => break, // queue closed and drained, nothing in flight
-                }
-            } else if active.len() < max_active
-                && try_fill(&self.rx, &mut admit, max_active - active.len()) > 0
-            {
-                batches += 1;
-            }
-            for work in admit.drain(..) {
-                match work {
-                    Work::Score(r) => {
-                        requests += 1;
-                        // Validate before decoding: an out-of-range token id
-                        // would panic inside the embedding lookup and take
-                        // down the whole serving loop, where the PJRT
-                        // backend fails one request.
-                        let result = if r.window.len() < 2 {
-                            Err(crate::anyhow!("window needs at least 2 tokens for scoring"))
-                        } else if let Some(&bad) =
-                            r.window.iter().find(|&&t| t as usize >= vocab)
-                        {
-                            Err(crate::anyhow!(
-                                "token id {bad} out of range (vocab size {vocab})"
-                            ))
-                        } else {
-                            Ok(model.score_nll(&r.window, &mut scratch))
-                        };
-                        latency.record(Instant::now() - r.submitted);
-                        let _ = r.respond.send(result);
-                    }
-                    Work::Generate(g) => {
-                        requests += 1;
-                        if let Err(e) = validate_gen(&g.prompt, g.max_new, max_seq, vocab) {
+            if self.stop.load(Ordering::SeqCst) {
+                // ---- graceful drain: stop admission, answer the queue,
+                // keep decoding what is already in flight ----------------
+                drained = true;
+                while let Ok(w) = self.rx.try_recv() {
+                    requests += 1;
+                    rejected_shutdown += 1;
+                    match w {
+                        Work::Score(r) => {
+                            latency.record(Instant::now() - r.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &r.respond,
+                                Err(ServeError::ShuttingDown),
+                            );
+                        }
+                        Work::Generate(g) => {
                             latency.record(Instant::now() - g.submitted);
-                            let _ = g.respond.send(Err(e));
-                            continue;
-                        }
-                        gen_requests += 1;
-                        let mut cache = pool.pop().unwrap_or_else(|| match kv_quant {
-                            Some(fmt) => model.kv_cache_quantized(fmt),
-                            None => model.kv_cache(),
-                        });
-                        cache.reset();
-                        let logits = model.prefill(&g.prompt, &mut cache, &mut scratch);
-                        prefill_tokens += g.prompt.len();
-                        let first = argmax(logits.row(logits.rows - 1)) as u16;
-                        let mut generated = Vec::with_capacity(g.max_new);
-                        generated.push(first);
-                        if g.max_new == 1 {
-                            let now = Instant::now();
-                            latency.record(now - g.submitted);
-                            let _ = g.respond.send(Ok(Generated {
-                                tokens: generated,
-                                prompt_len: g.prompt.len(),
-                                decode_tok_s: 0.0,
-                            }));
-                            pool.push(cache);
-                        } else {
-                            active.push(ActiveGen {
-                                generated,
-                                max_new: g.max_new,
-                                prompt_len: g.prompt.len(),
-                                submitted: g.submitted,
-                                decode_start: Instant::now(),
-                                respond: g.respond,
-                            });
-                            caches.push(cache);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &g.respond,
+                                Err(ServeError::ShuttingDown),
+                            );
                         }
                     }
+                }
+                if active.is_empty() {
+                    break;
+                }
+            } else {
+                // ---- admission: block when idle, join mid-flight when
+                // busy ---------------------------------------------------
+                admit.clear();
+                if active.is_empty() {
+                    if queue_closed {
+                        break;
+                    }
+                    match next_batch_watching(&self.rx, policy, &self.stop) {
+                        Wakeup::Batch(work) => {
+                            batches += 1;
+                            admit.extend(work);
+                        }
+                        Wakeup::Shutdown => continue, // drain branch takes over
+                        Wakeup::Closed => break,
+                    }
+                } else if active.len() < max_active {
+                    let fill = try_fill(&self.rx, &mut admit, max_active - active.len());
+                    queue_closed |= fill.disconnected;
+                    if fill.taken > 0 {
+                        batches += 1;
+                    }
+                }
+                for work in admit.drain(..) {
+                    match work {
+                        Work::Score(r) => {
+                            requests += 1;
+                            // Validate before decoding: an out-of-range
+                            // token id would panic inside the embedding
+                            // lookup; with the guard that is survivable but
+                            // it should still be an Invalid, not a Faulted.
+                            let result = if let Err(msg) = fire(&mut fi, FaultSite::Admission)
+                            {
+                                Err(ServeError::Faulted(msg))
+                            } else if expired(r.deadline) {
+                                expired_admission += 1;
+                                Err(ServeError::DeadlineExceeded { partial: Vec::new() })
+                            } else if r.window.len() < 2 {
+                                Err(ServeError::Invalid(
+                                    "window needs at least 2 tokens for scoring".into(),
+                                ))
+                            } else if let Some(&bad) =
+                                r.window.iter().find(|&&t| t as usize >= vocab)
+                            {
+                                Err(ServeError::Invalid(format!(
+                                    "token id {bad} out of range (vocab size {vocab})"
+                                )))
+                            } else {
+                                guard(|| model.score_nll(&r.window, &mut scratch))
+                                    .map_err(ServeError::Faulted)
+                            };
+                            latency.record(Instant::now() - r.submitted);
+                            deliver(&mut fi, &mut faulted, &r.respond, result);
+                        }
+                        Work::Generate(g) => {
+                            requests += 1;
+                            if let Err(msg) = fire(&mut fi, FaultSite::Admission) {
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &g.respond,
+                                    Err(ServeError::Faulted(msg)),
+                                );
+                                continue;
+                            }
+                            if expired(g.deadline) {
+                                expired_admission += 1;
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &g.respond,
+                                    Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
+                                );
+                                continue;
+                            }
+                            if let Err(e) = validate_gen(&g.prompt, g.max_new, max_seq, vocab)
+                            {
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(&mut fi, &mut faulted, &g.respond, Err(e));
+                                continue;
+                            }
+                            gen_requests += 1;
+                            let mut cache = pool.pop().unwrap_or_else(|| match kv_quant {
+                                Some(fmt) => model.kv_cache_quantized(fmt),
+                                None => model.kv_cache(),
+                            });
+                            cache.reset();
+                            // Guarded prefill: the fault site fires inside
+                            // the guard, and a deadline adds probe points
+                            // between chunks so an expiring prompt aborts
+                            // without burning the rest of its prefill.
+                            // `Ok(None)` = deadline expired mid-prefill.
+                            let dl = g.deadline;
+                            let outcome = guard(|| {
+                                if let Some(f) = fi.as_mut() {
+                                    f.fire(FaultSite::Prefill);
+                                }
+                                let logits = match dl {
+                                    Some(d) => {
+                                        let mut probe = |_done: usize| Instant::now() < d;
+                                        match model.prefill_with_probe(
+                                            &g.prompt,
+                                            &mut cache,
+                                            &mut scratch,
+                                            PREFILL_CHUNK,
+                                            &mut probe,
+                                        ) {
+                                            Some(m) => m,
+                                            None => return None,
+                                        }
+                                    }
+                                    None => model.prefill(&g.prompt, &mut cache, &mut scratch),
+                                };
+                                Some(argmax(logits.row(logits.rows - 1)) as u16)
+                            });
+                            match outcome {
+                                Err(msg) => {
+                                    // the walk may have unwound mid-layer:
+                                    // poison the cache and drop it on the
+                                    // floor, never back into the pool
+                                    cache.quarantine();
+                                    quarantined_caches += 1;
+                                    latency.record(Instant::now() - g.submitted);
+                                    deliver(
+                                        &mut fi,
+                                        &mut faulted,
+                                        &g.respond,
+                                        Err(ServeError::Faulted(msg)),
+                                    );
+                                }
+                                Ok(None) => {
+                                    expired_midflight += 1;
+                                    pool.push(cache); // aborted cleanly: recyclable
+                                    latency.record(Instant::now() - g.submitted);
+                                    deliver(
+                                        &mut fi,
+                                        &mut faulted,
+                                        &g.respond,
+                                        Err(ServeError::DeadlineExceeded {
+                                            partial: Vec::new(),
+                                        }),
+                                    );
+                                }
+                                Ok(Some(first)) => {
+                                    prefill_tokens += g.prompt.len();
+                                    let mut generated = Vec::with_capacity(g.max_new);
+                                    generated.push(first);
+                                    if g.max_new == 1 {
+                                        latency.record(Instant::now() - g.submitted);
+                                        deliver(
+                                            &mut fi,
+                                            &mut faulted,
+                                            &g.respond,
+                                            Ok(Generated {
+                                                tokens: generated,
+                                                prompt_len: g.prompt.len(),
+                                                decode_tok_s: 0.0,
+                                            }),
+                                        );
+                                        pool.push(cache);
+                                    } else {
+                                        active.push(ActiveGen {
+                                            generated,
+                                            max_new: g.max_new,
+                                            prompt_len: g.prompt.len(),
+                                            submitted: g.submitted,
+                                            deadline: g.deadline,
+                                            decode_start: Instant::now(),
+                                            respond: g.respond,
+                                        });
+                                        caches.push(cache);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+
+            // ---- deadline sweep: shed expired sequences before spending
+            // a step on them; their caches are healthy, so recycle -------
+            let mut i = 0;
+            while i < active.len() {
+                if expired(active[i].deadline) {
+                    let done = active.swap_remove(i);
+                    pool.push(caches.swap_remove(i));
+                    expired_midflight += 1;
+                    latency.record(Instant::now() - done.submitted);
+                    deliver(
+                        &mut fi,
+                        &mut faulted,
+                        &done.respond,
+                        Err(ServeError::DeadlineExceeded { partial: done.generated }),
+                    );
+                } else {
+                    i += 1;
                 }
             }
             if active.is_empty() {
@@ -573,15 +1122,72 @@ impl Coordinator {
                 step_tokens.push(*a.generated.last().expect("active seq has a token"));
             }
             let ts = Instant::now();
-            let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
-            decode_wall += ts.elapsed();
+            // The whole batched step runs under the guard. A panic
+            // unwinds *before* any KV cursor commits (the layer walk
+            // advances caches only at its end), so retrying each
+            // sequence solo below replays the exact same step —
+            // bit-identical for the survivors — and pins the fault on
+            // the poisoned sequence(s) alone.
+            let stepped = guard(|| {
+                if let Some(f) = fi.as_mut() {
+                    f.fire(FaultSite::Decode);
+                }
+                let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
+                // sample by original row index — swap_remove in the
+                // completion sweep reorders `active`, the logits rows
+                // do not move with it
+                step_out.clear();
+                for row in 0..step_tokens.len() {
+                    step_out.push(argmax(logits.row(row)) as u16);
+                }
+            });
             decode_steps += 1;
-            decode_tokens += active.len();
-            // sample by original row index first — swap_remove below
-            // reorders `active`, the logits rows do not move with it
-            for (row, a) in active.iter_mut().enumerate() {
-                a.generated.push(argmax(logits.row(row)) as u16);
+            match stepped {
+                Ok(()) => {
+                    decode_tokens += active.len();
+                    for (a, &tok) in active.iter_mut().zip(step_out.iter()) {
+                        a.generated.push(tok);
+                    }
+                }
+                Err(_) => {
+                    // solo retry: find the poisoned sequence(s), answer
+                    // them Faulted with quarantined caches, keep everyone
+                    // else moving
+                    let mut i = 0;
+                    while i < active.len() {
+                        let tok = *active[i].generated.last().expect("active seq has a token");
+                        let solo = guard(|| {
+                            if let Some(f) = fi.as_mut() {
+                                f.fire(FaultSite::Decode);
+                            }
+                            let row = model.decode_step(tok, &mut caches[i], &mut scratch);
+                            argmax(row.row(0)) as u16
+                        });
+                        match solo {
+                            Ok(next) => {
+                                decode_tokens += 1;
+                                active[i].generated.push(next);
+                                i += 1;
+                            }
+                            Err(msg) => {
+                                let done = active.swap_remove(i);
+                                let mut cache = caches.swap_remove(i);
+                                cache.quarantine();
+                                quarantined_caches += 1;
+                                drop(cache); // poisoned: never recycled
+                                latency.record(Instant::now() - done.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &done.respond,
+                                    Err(ServeError::Faulted(msg)),
+                                );
+                            }
+                        }
+                    }
+                }
             }
+            decode_wall += ts.elapsed();
             let mut i = 0;
             while i < active.len() {
                 if active[i].generated.len() >= active[i].max_new {
@@ -593,11 +1199,16 @@ impl Coordinator {
                         steps as f64 / (now - done.decode_start).as_secs_f64().max(1e-9);
                     request_tok_s.record(rate);
                     latency.record(now - done.submitted);
-                    let _ = done.respond.send(Ok(Generated {
-                        tokens: done.generated,
-                        prompt_len: done.prompt_len,
-                        decode_tok_s: rate,
-                    }));
+                    deliver(
+                        &mut fi,
+                        &mut faulted,
+                        &done.respond,
+                        Ok(Generated {
+                            tokens: done.generated,
+                            prompt_len: done.prompt_len,
+                            decode_tok_s: rate,
+                        }),
+                    );
                     pool.push(cache); // recycle the ring for the next join
                 } else {
                     i += 1;
@@ -616,6 +1227,13 @@ impl Coordinator {
             decode_steps,
             decode_wall,
             request_tok_s,
+            shed_overloaded: self.shed.load(Ordering::SeqCst),
+            expired_admission,
+            expired_midflight,
+            faulted,
+            quarantined_caches,
+            rejected_shutdown,
+            drained,
         })
     }
 }
@@ -637,6 +1255,11 @@ impl Coordinator {
 /// W4A8+LoRC (the paper's best small-model recipe) serves at
 /// packed-memory footprint. `--gemv-threads N` shards the packed GEMV
 /// rows across N workers.
+///
+/// Robustness knobs: `--queue-depth N` bounds admission (overflow sheds
+/// typed `Overloaded`), `--deadline-ms MS` gives every request a
+/// deadline, and `--fault <site>:<spec>[,...]` (with `--fault-seed S`)
+/// arms the deterministic fault injector for chaos runs.
 pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let ckpt = args.get("ckpt").ok_or("--ckpt required")?;
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -645,6 +1268,23 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let n_clients = args.get_usize("clients", 4)?;
     let gen_new = args.get_usize("generate", 0)?;
     let alpha = args.get_f32("alpha", 1.0)?;
+    // Deterministic fault schedule (chaos harness — a run-time knob, not
+    // part of the serving recipe).
+    if args.flag("fault") && args.get("fault").is_none() {
+        return Err("--fault needs a value: <site>:<spec>[,<site>:<spec>...]".into());
+    }
+    if args.flag("fault-seed") && args.get("fault-seed").is_none() {
+        return Err("--fault-seed needs a value".into());
+    }
+    let fault_spec = args.get("fault");
+    let fault_seed = args.get_usize("fault-seed", 0)? as u64;
+    let faults = match &fault_spec {
+        Some(spec) => Some(FaultPlan::parse(spec)?.with_seed(fault_seed)),
+        None if args.flag("fault-seed") => {
+            return Err("--fault-seed requires --fault".into());
+        }
+        None => None,
+    };
     // One flag→recipe translation, shared with `zqfp quantize`/`eval`.
     // serve keeps the paper's headline W4A8 FP-FP as its default recipe.
     let recipe = QuantRecipe::from_args(args, "w4a8-fp")?;
@@ -653,7 +1293,14 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
 
     let ck = crate::cli::commands::load_ckpt_with_alpha(std::path::Path::new(&ckpt), alpha)?;
     let seq = ck.config.max_seq;
-    ensure_gen_fits(gen_new, seq)?;
+    if gen_new > 0 {
+        // same admission rule the serving loop enforces (validate_gen),
+        // applied to the workload shape serve generates below: prompts of
+        // `seq - gen_new` tokens plus `gen_new` new ones
+        let prompt = vec![0u16; seq.saturating_sub(gen_new)];
+        validate_gen(&prompt, gen_new, seq, ck.config.vocab_size)
+            .map_err(|e| format!("--generate {gen_new}: {e}"))?;
+    }
     let calib = if recipe.needs_calibration() {
         crate::cli::commands::load_calib(&data, seq)?
     } else {
@@ -668,8 +1315,10 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
         stack.report.compression()
     );
 
-    let backend = if gen_new > 0 || packed {
-        ScoreBackend::Compiled // generation / packed path: compiled plan only
+    let backend = if gen_new > 0 || packed || faults.is_some() {
+        // generation / packed path: compiled plan only; chaos runs force
+        // the compiled backend so every fault site is armed in-process
+        ScoreBackend::Compiled
     } else {
         pick_backend(&artifacts, &stack.checkpoint, &recipe.engine_opts())
     };
@@ -679,6 +1328,18 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     }
     if let Some(fmt) = recipe.kv_quant {
         println!("kv cache: {}", fmt.name());
+    }
+    println!(
+        "admission: queue depth {}, deadline {}",
+        recipe.queue_depth,
+        if recipe.deadline_ms > 0 {
+            format!("{} ms", recipe.deadline_ms)
+        } else {
+            "none".to_string()
+        }
+    );
+    if let Some(plan) = &faults {
+        println!("fault injection: {}", plan.summary());
     }
     if packed {
         // Banner from the accounting already in hand — no extra compile or
@@ -715,9 +1376,17 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let n_windows = windows.len();
     let max_batch = recipe.max_batch;
 
-    let coord = stack.coordinator_with_backend(backend);
+    let mut coord = stack.coordinator_with_backend(backend);
+    if let Some(plan) = faults {
+        coord.inject_faults(plan);
+    }
 
-    let mut handles = Vec::new();
+    // Client threads tally typed degradations (Overloaded / Deadline-
+    // Exceeded / Faulted / ShuttingDown) instead of aborting on them —
+    // that is the point of the hardened loop. Invalid still aborts: it
+    // means the workload itself is malformed.
+    type Tally = std::result::Result<(f64, usize, usize), String>;
+    let mut handles: Vec<std::thread::JoinHandle<Tally>> = Vec::new();
     let report = if gen_new > 0 {
         let prompt_len = seq - gen_new;
         println!(
@@ -725,15 +1394,22 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
              {gen_new} new tokens) from {n_clients} clients (max {max_batch} in flight) ..."
         );
         for c in 0..n_clients {
-            let client = coord.gen_client();
+            let client = coord.gen_client().map_err(|e| e.to_string())?;
             let my: Vec<Vec<u16>> =
                 windows.iter().skip(c).step_by(n_clients).cloned().collect();
-            handles.push(std::thread::spawn(move || -> Result<f64> {
-                let mut tokens = 0usize;
+            handles.push(std::thread::spawn(move || -> Tally {
+                let (mut tokens, mut ok, mut degraded) = (0usize, 0usize, 0usize);
                 for w in my {
-                    tokens += client.generate(w[..prompt_len].to_vec(), gen_new)?.tokens.len();
+                    match client.generate(w[..prompt_len].to_vec(), gen_new) {
+                        Ok(g) => {
+                            ok += 1;
+                            tokens += g.tokens.len();
+                        }
+                        Err(ServeError::Invalid(e)) => return Err(e),
+                        Err(_) => degraded += 1,
+                    }
                 }
-                Ok(tokens as f64)
+                Ok((tokens as f64, ok, degraded))
             }));
         }
         coord.run().map_err(|e| e.to_string())?
@@ -744,40 +1420,50 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             recipe.max_wait_ms
         );
         for c in 0..n_clients {
-            let client = coord.client();
+            let client = coord.client().map_err(|e| e.to_string())?;
             let my: Vec<Vec<u16>> =
                 windows.iter().skip(c).step_by(n_clients).cloned().collect();
-            handles.push(std::thread::spawn(move || -> Result<f64> {
-                let mut sum = 0.0f64;
+            handles.push(std::thread::spawn(move || -> Tally {
+                let (mut sum, mut ok, mut degraded) = (0.0f64, 0usize, 0usize);
                 for w in my {
-                    sum += client.score(w)? as f64;
+                    match client.score(w) {
+                        Ok(nll) => {
+                            ok += 1;
+                            sum += nll as f64;
+                        }
+                        Err(ServeError::Invalid(e)) => return Err(e),
+                        Err(_) => degraded += 1,
+                    }
                 }
-                Ok(sum)
+                Ok((sum, ok, degraded))
             }));
         }
         coord.run().map_err(|e| e.to_string())?
     };
-    let mut total = 0.0f64;
+    let (mut total, mut ok_requests, mut degraded) = (0.0f64, 0usize, 0usize);
     for h in handles {
-        total += h.join().map_err(|_| "client panicked")?.map_err(|e| e.to_string())?;
+        let (v, o, d) = h.join().map_err(|_| "client panicked".to_string())??;
+        total += v;
+        ok_requests += o;
+        degraded += d;
     }
     report.print();
     if gen_new > 0 {
-        println!("generated {} tokens total", total as usize);
-    } else {
-        let tokens = (seq - 1) * n_windows;
         println!(
-            "workload ppl {:.4} over {} scored tokens",
-            (total / tokens as f64).exp(),
-            tokens
+            "generated {} tokens total ({ok_requests} requests ok, {degraded} degraded)",
+            total as usize
         );
-    }
-    Ok(())
-}
-
-fn ensure_gen_fits(gen_new: usize, seq: usize) -> std::result::Result<(), String> {
-    if gen_new >= seq {
-        return Err(format!("--generate {gen_new} must be < max_seq {seq} (prompt needs room)"));
+    } else {
+        let tokens = (seq - 1) * ok_requests;
+        if tokens > 0 {
+            println!(
+                "workload ppl {:.4} over {} scored tokens ({degraded} degraded)",
+                (total / tokens as f64).exp(),
+                tokens
+            );
+        } else {
+            println!("no scoring requests succeeded ({degraded} degraded)");
+        }
     }
     Ok(())
 }
@@ -835,6 +1521,9 @@ mod tests {
             policy,
             kv_quant: None,
             sidecar: None,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            deadline: None,
+            faults: None,
         }
     }
 
@@ -847,7 +1536,7 @@ mod tests {
         ));
         let mut handles = Vec::new();
         for c in 0..3usize {
-            let client = coord.client();
+            let client = coord.client().unwrap();
             handles.push(std::thread::spawn(move || -> Result<Vec<f32>> {
                 let mut out = Vec::new();
                 for i in 0..5u16 {
@@ -873,7 +1562,7 @@ mod tests {
         let window: Vec<u16> = (0..8).map(|t| t % 48).collect();
         let direct = model.score_nll(&window, &mut s);
         let coord2 = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
-        let client = coord2.client();
+        let client = coord2.client().unwrap();
         let h = std::thread::spawn(move || client.score(window).unwrap());
         coord2.run().unwrap();
         assert_eq!(h.join().unwrap(), direct);
@@ -883,7 +1572,7 @@ mod tests {
     fn rejects_wrong_window_length() {
         let ck = tiny_ck();
         let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
-        let client = coord.client();
+        let client = coord.client().unwrap();
         assert!(client.score(vec![1, 2, 3]).is_err());
         drop(client);
         coord.run().unwrap();
@@ -907,7 +1596,7 @@ mod tests {
         }
 
         let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
-        let client = coord.gen_client();
+        let client = coord.gen_client().unwrap();
         let p = prompt.clone();
         let h = std::thread::spawn(move || client.generate(p, max_new).unwrap());
         let report = coord.run().unwrap();
@@ -929,12 +1618,12 @@ mod tests {
         ));
         // mixed lengths/budgets so sequences finish at different steps,
         // plus a scoring request sharing the same loop
-        let score_client = coord.client();
+        let score_client = coord.client().unwrap();
         let mut handles = Vec::new();
         for (c, (plen, max_new)) in
             [(1usize, 2usize), (2, 5), (3, 4), (1, 6), (4, 3)].iter().enumerate()
         {
-            let client = coord.gen_client();
+            let client = coord.gen_client().unwrap();
             let prompt: Vec<u16> = (0..*plen).map(|t| ((c + t) % 48) as u16).collect();
             let n = *max_new;
             handles.push(std::thread::spawn(move || client.generate(prompt, n).unwrap()));
@@ -962,7 +1651,7 @@ mod tests {
         // continuity: a sequence's result must not depend on batch mates —
         // re-serve one request alone and compare
         let coord2 = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
-        let client = coord2.gen_client();
+        let client = coord2.gen_client().unwrap();
         let prompt: Vec<u16> = (0..2).map(|t| ((1 + t) % 48) as u16).collect();
         let h = std::thread::spawn(move || client.generate(prompt, 5).unwrap());
         coord2.run().unwrap();
@@ -973,7 +1662,7 @@ mod tests {
     fn generation_rejects_bad_requests() {
         let ck = tiny_ck();
         let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
-        let client = coord.gen_client();
+        let client = coord.gen_client().unwrap();
         assert!(client.generate(vec![], 3).is_err(), "empty prompt");
         assert!(client.generate(vec![1, 2], 0).is_err(), "zero budget");
         assert!(client.generate(vec![1, 2, 3, 4, 5, 6, 7], 2).is_err(), "exceeds max_seq");
@@ -1011,7 +1700,7 @@ mod tests {
 
         let run = |stack: ServingStack| -> Vec<u16> {
             let coord = stack.coordinator();
-            let client = coord.gen_client();
+            let client = coord.gen_client().unwrap();
             let p = prompt.clone();
             let h = std::thread::spawn(move || client.generate(p, 4).unwrap());
             coord.run().unwrap();
@@ -1032,7 +1721,7 @@ mod tests {
             let mut cfg = compiled_cfg(ck.clone(), BatchPolicy::default());
             cfg.kv_quant = Some(crate::formats::FpFormat::E4M3);
             let coord = Coordinator::new(cfg);
-            let client = coord.gen_client();
+            let client = coord.gen_client().unwrap();
             let p = prompt.clone();
             let h = std::thread::spawn(move || client.generate(p, 4).unwrap());
             coord.run().unwrap();
@@ -1040,5 +1729,91 @@ mod tests {
         }
         assert_eq!(runs[0], runs[1]);
         assert_eq!(runs[0].len(), 4);
+    }
+
+    #[test]
+    fn typed_errors_display_and_convert() {
+        assert_eq!(
+            ServeError::Invalid("bad".into()).to_string(),
+            "invalid request: bad"
+        );
+        assert_eq!(ServeError::Overloaded.to_string(), "overloaded: admission queue full");
+        assert_eq!(
+            ServeError::DeadlineExceeded { partial: vec![1, 2] }.to_string(),
+            "deadline exceeded (2 partial tokens)"
+        );
+        assert_eq!(ServeError::Faulted("boom".into()).to_string(), "request faulted: boom");
+        assert_eq!(ServeError::ShuttingDown.to_string(), "coordinator shutting down");
+        assert!(CoordinatorError::NotAcceptingClients.to_string().contains("before run"));
+        // ServeError threads through `?` in crate-Result functions
+        let e: crate::error::Error = ServeError::Overloaded.into();
+        assert!(e.to_string().contains("overloaded"));
+    }
+
+    #[test]
+    fn bounded_queue_sheds_typed_overload_before_run() {
+        // queue depth 2, no loop consuming: the 3rd..5th submissions must
+        // shed deterministically, client-side, with a typed Overloaded
+        let ck = tiny_ck();
+        let mut cfg = compiled_cfg(ck, BatchPolicy::default());
+        cfg.queue_depth = 2;
+        let coord = Coordinator::new(cfg);
+        let client = coord.gen_client().unwrap();
+        let mut tickets = Vec::new();
+        let mut shed = 0usize;
+        for _ in 0..5 {
+            match client.submit(vec![1, 2, 3], 2) {
+                Ok(t) => tickets.push(t),
+                Err(e) => {
+                    assert_eq!(e, ServeError::Overloaded);
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!((tickets.len(), shed), (2, 3));
+        drop(client);
+        let report = coord.run().unwrap();
+        assert_eq!(report.shed_overloaded, 3);
+        assert_eq!(report.requests, 2);
+        for t in tickets {
+            assert_eq!(t.recv().unwrap().unwrap().tokens.len(), 2);
+        }
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_at_admission() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
+        let client = coord.gen_client().unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        let h = std::thread::spawn(move || client.generate_by(vec![1, 2, 3], 3, Some(past)));
+        let report = coord.run().unwrap();
+        assert_eq!(
+            h.join().unwrap(),
+            Err(ServeError::DeadlineExceeded { partial: Vec::new() })
+        );
+        assert_eq!(report.expired_admission, 1);
+        assert_eq!(report.gen_requests, 0, "no compute was spent on the expired request");
+        assert_eq!(report.requests, 1);
+    }
+
+    #[test]
+    fn shutdown_handle_drains_gracefully_when_idle() {
+        let ck = tiny_ck();
+        let coord = Coordinator::new(compiled_cfg(ck, BatchPolicy::default()));
+        let client = coord.client().unwrap();
+        let stopper = coord.shutdown_handle();
+        assert!(!stopper.is_shutdown());
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            stopper.shutdown();
+        });
+        // the client handle stays alive the whole run: only the shutdown
+        // signal can end the loop
+        let report = coord.run().unwrap();
+        h.join().unwrap();
+        assert!(report.drained);
+        assert_eq!(report.requests, 0);
+        drop(client);
     }
 }

@@ -77,6 +77,10 @@ pub struct KvCache {
     v: Vec<Matrix>,
     /// `Some` ⇒ every stored row is token-wise fake-quantized on append.
     quant: Option<FpQuantLut>,
+    /// Sticky poison flag: a cache whose layer walk panicked mid-flight
+    /// must never serve another sequence (see
+    /// [`quarantine`](Self::quarantine)).
+    quarantined: bool,
 }
 
 impl KvCache {
@@ -101,6 +105,7 @@ impl KvCache {
             k: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
             v: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
             quant,
+            quarantined: false,
         }
     }
 
@@ -133,6 +138,20 @@ impl KvCache {
     /// no zeroing pass, no allocation.
     pub fn reset(&mut self) {
         self.len = 0;
+    }
+
+    /// Mark this cache poisoned. A panic that unwinds out of a layer walk
+    /// leaves the walk's staged rows in an unknown state; the serving
+    /// coordinator quarantines (drops, never recycles) such a cache so a
+    /// later sequence cannot decode through it. Sticky:
+    /// [`reset`](Self::reset) does **not** clear it, and the plan's
+    /// decode entry points assert against quarantined caches.
+    pub fn quarantine(&mut self) {
+        self.quarantined = true;
+    }
+
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined
     }
 
     /// Store the K/V rows of one position in one layer's ring (quantizing
@@ -247,5 +266,15 @@ mod tests {
     #[test]
     fn exact_cache_reports_no_format() {
         assert_eq!(KvCache::new(&cfg()).quant_format(), None);
+    }
+
+    #[test]
+    fn quarantine_is_sticky_across_reset() {
+        let mut c = KvCache::new(&cfg());
+        assert!(!c.is_quarantined());
+        c.quarantine();
+        assert!(c.is_quarantined());
+        c.reset(); // reset recycles the ring, not the poison flag
+        assert!(c.is_quarantined());
     }
 }

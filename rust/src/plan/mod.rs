@@ -620,6 +620,43 @@ impl CompiledModel {
         self.run_mode(tokens, KvMode::Seq(cache), s, &mut |_, _| {})
     }
 
+    /// [`prefill`](Self::prefill) in deadline-checkable chunks: runs the
+    /// prompt `chunk` tokens at a time and calls `probe(tokens_done)`
+    /// before each chunk; a `false` return abandons the prefill and
+    /// yields `None` (the cache then holds only the chunks committed so
+    /// far — callers reset before reuse). Because any prefill split of a
+    /// window produces the same bits (the chunked-prefill contract
+    /// asserted by `tests/kv_equivalence.rs`), the completed path is
+    /// bit-identical to a one-shot `prefill` regardless of `chunk`.
+    pub fn prefill_with_probe<'s>(
+        &self,
+        tokens: &[u16],
+        cache: &mut KvCache,
+        s: &'s mut DecodeScratch,
+        chunk: usize,
+        probe: &mut dyn FnMut(usize) -> bool,
+    ) -> Option<&'s Matrix> {
+        assert!(chunk >= 1, "prefill chunk must be at least 1 token");
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let mut done = 0usize;
+        while tokens.len() - done > chunk {
+            if !probe(done) {
+                return None;
+            }
+            let _ = self.run_mode(
+                &tokens[done..done + chunk],
+                KvMode::Seq(cache),
+                &mut *s,
+                &mut |_, _| {},
+            );
+            done += chunk;
+        }
+        if !probe(done) {
+            return None;
+        }
+        Some(self.run_mode(&tokens[done..], KvMode::Seq(cache), s, &mut |_, _| {}))
+    }
+
     /// Decode one token at the next position of `cache`'s sequence,
     /// computing attention only for that position; returns the logits row
     /// `[1, vocab]`. Bit-identical to the corresponding row of a
@@ -675,6 +712,10 @@ impl CompiledModel {
             KvMode::Seq(cache) => {
                 assert!(rows >= 1, "prefill/decode needs at least one token");
                 assert!(
+                    !cache.is_quarantined(),
+                    "refusing to decode through a quarantined kv cache"
+                );
+                assert!(
                     cache.len() + rows <= cfg.max_seq,
                     "{} cached + {rows} new tokens exceeds max_seq {}",
                     cache.len(),
@@ -688,6 +729,10 @@ impl CompiledModel {
                 // would silently reallocate every buffer per step
                 assert!(rows <= cfg.max_seq, "decode batch {rows} exceeds max_seq {}", cfg.max_seq);
                 for c in caches.iter() {
+                    assert!(
+                        !c.is_quarantined(),
+                        "refusing to decode through a quarantined kv cache"
+                    );
                     assert!(c.len() < cfg.max_seq, "a batched sequence is already at max_seq");
                 }
             }
@@ -1157,5 +1202,59 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!((caches[0].len(), caches[1].len()), (4, 6));
+    }
+
+    #[test]
+    fn probed_prefill_matches_one_shot_and_aborts_cleanly() {
+        let mut rng = Rng::seeded(219);
+        let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window = [3u16, 1, 4, 1, 5, 9, 2, 6];
+        let mut oracle = model.kv_cache();
+        let full = model.prefill(&window, &mut oracle, &mut s).clone();
+
+        // completed probe runs are bit-identical for every chunk size
+        for chunk in [1usize, 3, 8, 100] {
+            let mut cache = model.kv_cache();
+            let mut probes = Vec::new();
+            let logits = model
+                .prefill_with_probe(&window, &mut cache, &mut s, chunk, &mut |done| {
+                    probes.push(done);
+                    true
+                })
+                .expect("probe never aborts");
+            for (a, b) in logits.row(logits.rows - 1).iter().zip(full.row(full.rows - 1)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk {chunk}");
+            }
+            assert_eq!(cache.len(), window.len());
+            assert_eq!(probes[0], 0, "probed before any work");
+            assert!(probes.len() >= window.len().div_ceil(chunk));
+        }
+
+        // an aborting probe stops the walk; the cache holds only the
+        // committed chunks and a reset makes it reusable
+        let mut cache = model.kv_cache();
+        let out = model.prefill_with_probe(&window, &mut cache, &mut s, 3, &mut |done| done < 3);
+        assert!(out.is_none());
+        assert_eq!(cache.len(), 3, "one 3-token chunk committed before the abort");
+        cache.reset();
+        let again = model.prefill(&window, &mut cache, &mut s);
+        for (a, b) in again.row(again.rows - 1).iter().zip(full.row(full.rows - 1)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "quarantined")]
+    fn decode_refuses_quarantined_cache() {
+        let mut rng = Rng::seeded(220);
+        let ck = Checkpoint::random(&tiny(Arch::Opt), &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let mut cache = model.kv_cache();
+        model.prefill(&[1, 2, 3], &mut cache, &mut s);
+        cache.quarantine();
+        let _ = model.decode_step(4, &mut cache, &mut s);
     }
 }

@@ -77,6 +77,9 @@ pub enum RecipeError {
     KvCacheNotFp(NumericFormat),
     /// The coordinator needs at least one in-flight slot.
     MaxBatchZero,
+    /// The admission queue needs at least one slot (depth 0 would shed
+    /// every request).
+    QueueDepthZero,
     /// Not one of [`PRESET_NAMES`].
     UnknownPreset(String),
     /// Malformed JSON, an unknown key, or an unparseable field value.
@@ -113,6 +116,9 @@ impl fmt::Display for RecipeError {
                 write!(f, "kv cache quantizes through an FP format, not {}", fmt_.name())
             }
             RecipeError::MaxBatchZero => f.write_str("max_batch must be at least 1"),
+            RecipeError::QueueDepthZero => {
+                f.write_str("queue_depth must be at least 1 (0 would shed every request)")
+            }
             RecipeError::UnknownPreset(name) => {
                 write!(f, "unknown preset {name:?} (try: {})", PRESET_NAMES.join(", "))
             }
@@ -159,6 +165,14 @@ pub struct QuantRecipe {
     pub max_batch: usize,
     /// Coordinator: dynamic-batching wait window (PJRT scoring backend).
     pub max_wait_ms: u64,
+    /// Coordinator: bound of the admission queue — submissions beyond it
+    /// shed with a typed `Overloaded` instead of queueing unbounded
+    /// latency.
+    pub queue_depth: usize,
+    /// Coordinator: default per-request deadline in milliseconds
+    /// (0 = none). Checked at admission, during prefill, and between
+    /// decode steps.
+    pub deadline_ms: u64,
 }
 
 /// Chainable construction for [`QuantRecipe`]; `build()` validates.
@@ -183,6 +197,8 @@ impl RecipeBuilder {
                 kv_quant: None,
                 max_batch: crate::runtime::SCORE_BATCH,
                 max_wait_ms: 2,
+                queue_depth: crate::coordinator::DEFAULT_QUEUE_DEPTH,
+                deadline_ms: 0,
             },
         }
     }
@@ -246,6 +262,17 @@ impl RecipeBuilder {
 
     pub fn max_wait_ms(mut self, ms: u64) -> Self {
         self.r.max_wait_ms = ms;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.r.queue_depth = depth;
+        self
+    }
+
+    /// Default per-request deadline in ms (0 = none).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.r.deadline_ms = ms;
         self
     }
 
@@ -313,6 +340,9 @@ impl QuantRecipe {
         if self.max_batch == 0 {
             return Err(RecipeError::MaxBatchZero);
         }
+        if self.queue_depth == 0 {
+            return Err(RecipeError::QueueDepthZero);
+        }
         Ok(())
     }
 
@@ -354,6 +384,14 @@ impl QuantRecipe {
             policy: self.batch_policy(),
             kv_quant: self.kv_quant,
             sidecar: if self.weights.is_dense() { None } else { sidecar },
+            queue_depth: self.queue_depth,
+            deadline: if self.deadline_ms > 0 {
+                Some(Duration::from_millis(self.deadline_ms))
+            } else {
+                None
+            },
+            // fault schedules are a harness knob, never part of a recipe
+            faults: None,
         }
     }
 
@@ -444,6 +482,8 @@ impl QuantRecipe {
             ("kv_cache".to_string(), kv),
             ("max_batch".to_string(), Json::Num(self.max_batch as f64)),
             ("max_wait_ms".to_string(), Json::Num(self.max_wait_ms as f64)),
+            ("queue_depth".to_string(), Json::Num(self.queue_depth as f64)),
+            ("deadline_ms".to_string(), Json::Num(self.deadline_ms as f64)),
         ])
     }
 
@@ -451,7 +491,7 @@ impl QuantRecipe {
     /// typo in a reproducibility artifact must not silently change the
     /// run); absent keys take the [`RecipeBuilder`] defaults.
     pub fn from_json(text: &str) -> Result<QuantRecipe, RecipeError> {
-        const KEYS: [&str; 15] = [
+        const KEYS: [&str; 17] = [
             "name",
             "weight",
             "act",
@@ -467,6 +507,8 @@ impl QuantRecipe {
             "kv_cache",
             "max_batch",
             "max_wait_ms",
+            "queue_depth",
+            "deadline_ms",
         ];
         let doc = Json::parse(text).map_err(RecipeError::BadJson)?;
         let obj = match &doc {
@@ -593,6 +635,11 @@ impl QuantRecipe {
         }
         b = b.max_batch(usize_field("max_batch", crate::runtime::SCORE_BATCH)?);
         b = b.max_wait_ms(usize_field("max_wait_ms", 2)? as u64);
+        b = b.queue_depth(usize_field(
+            "queue_depth",
+            crate::coordinator::DEFAULT_QUEUE_DEPTH,
+        )?);
+        b = b.deadline_ms(usize_field("deadline_ms", 0)? as u64);
         b.build()
     }
 
@@ -735,6 +782,8 @@ impl QuantRecipe {
         }
         r.max_batch = args.get_usize("max-batch", r.max_batch)?;
         r.max_wait_ms = args.get_usize("max-wait-ms", r.max_wait_ms as usize)? as u64;
+        r.queue_depth = args.get_usize("queue-depth", r.queue_depth)?;
+        r.deadline_ms = args.get_usize("deadline-ms", r.deadline_ms as usize)? as u64;
 
         r.validate().map_err(|e| e.to_string())?;
         Ok(r)
@@ -813,6 +862,10 @@ mod tests {
         assert_eq!(
             QuantRecipe::builder(w4).max_batch(0).build(),
             Err(RecipeError::MaxBatchZero)
+        );
+        assert_eq!(
+            QuantRecipe::builder(w4).queue_depth(0).build(),
+            Err(RecipeError::QueueDepthZero)
         );
         // and the happy path still builds
         QuantRecipe::builder(w4)
@@ -943,6 +996,10 @@ mod tests {
                 "4",
                 "--max-wait-ms",
                 "0",
+                "--queue-depth",
+                "12",
+                "--deadline-ms",
+                "250",
             ]),
             "w16",
         )
@@ -951,6 +1008,19 @@ mod tests {
         assert_eq!(r.kv_quant, Some(FpFormat::E5M2));
         assert_eq!(r.max_batch, 4);
         assert_eq!(r.max_wait_ms, 0);
+        assert_eq!(r.queue_depth, 12);
+        assert_eq!(r.deadline_ms, 250);
+        // the robustness knobs survive a JSON round trip
+        let back = QuantRecipe::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.queue_depth, 12);
+        assert_eq!(back.deadline_ms, 250);
+        // defaults: a recipe without the knobs keeps the crate defaults
+        let idle = QuantRecipe::preset("w16").unwrap();
+        assert_eq!(idle.queue_depth, crate::coordinator::DEFAULT_QUEUE_DEPTH);
+        assert_eq!(idle.deadline_ms, 0);
+        // a zero queue depth is rejected through the flag path too
+        assert!(QuantRecipe::from_args(&argv(&["--queue-depth", "0"]), "w16").is_err());
         // an integer cache format is the typed rejection; --kv-cache none
         // clears a base recipe's cache format
         assert!(QuantRecipe::from_args(&argv(&["--kv-cache", "int8"]), "w4a8-fp").is_err());

@@ -1,0 +1,413 @@
+//! Chaos suite: the serving loop under deterministic fault injection.
+//!
+//! The contract under test (ISSUE 6's tentpole invariant): under *any*
+//! fault schedule every client gets exactly one typed response
+//! (`Ok`/`Overloaded`/`DeadlineExceeded`/`Faulted`/`ShuttingDown`), the
+//! loop never hangs (every run here is bounded by a watchdog timeout),
+//! poisoned KV caches are quarantined instead of recycled, and the
+//! sequences a fault did *not* touch finish bit-identical to the dense
+//! reference — panic isolation must not perturb surviving traffic.
+//!
+//! Fault schedules are seeded (xoshiro-backed `FaultPlan::with_seed`),
+//! so every run of this suite replays the exact same faults.
+
+use std::sync::mpsc::sync_channel;
+use std::sync::Once;
+use std::time::{Duration, Instant};
+
+use zeroquant_fp::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, FaultPayload, FaultPlan, Generated,
+    ScoreBackend, ServeError, ServeReport,
+};
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::{argmax, CompiledModel};
+use zeroquant_fp::rng::Rng;
+
+/// Silence the default panic printout for *injected* panics (they are
+/// the point of this suite); genuine panics still print. Installed once
+/// per test binary.
+fn quiet_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<FaultPayload>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn tiny_ck() -> Checkpoint {
+    let cfg = ModelConfig {
+        name: "chaos-test".into(),
+        arch: Arch::Opt,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 16,
+    };
+    let mut rng = Rng::seeded(4242);
+    Checkpoint::random(&cfg, &mut rng)
+}
+
+fn cfg_with(ck: Checkpoint, max_batch: usize, faults: Option<FaultPlan>) -> CoordinatorConfig {
+    CoordinatorConfig {
+        backend: ScoreBackend::Compiled,
+        ck,
+        opts: EngineOpts::default(),
+        policy: BatchPolicy { max_batch, max_wait: Duration::ZERO },
+        kv_quant: None,
+        sidecar: None,
+        queue_depth: 64,
+        deadline: None,
+        faults,
+    }
+}
+
+/// Run the serving loop on its own thread with a watchdog: a loop that
+/// hangs under a fault schedule fails the suite instead of wedging it.
+fn run_within(coord: Coordinator, secs: u64) -> ServeReport {
+    let (tx, rx) = sync_channel(1);
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(coord.run());
+    });
+    let report = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("serving loop must terminate within the watchdog timeout")
+        .expect("serving loop must return a report, not an error");
+    h.join().unwrap();
+    report
+}
+
+/// Greedy reference decode straight through the compiled plan — what an
+/// unfaulted coordinator generation must match bit for bit.
+fn greedy_reference(model: &CompiledModel, prompt: &[u16], max_new: usize) -> Vec<u16> {
+    let mut scratch = model.scratch();
+    let mut cache = model.kv_cache();
+    let mut out = Vec::with_capacity(max_new);
+    let logits = model.prefill(prompt, &mut cache, &mut scratch);
+    let mut tok = argmax(logits.row(prompt.len() - 1)) as u16;
+    out.push(tok);
+    for _ in 1..max_new {
+        let logits = model.decode_step(tok, &mut cache, &mut scratch);
+        tok = argmax(logits.row(0)) as u16;
+        out.push(tok);
+    }
+    out
+}
+
+fn prompt_for(client: usize, i: usize) -> Vec<u16> {
+    (0..5).map(|k| ((client * 17 + i * 5 + k * 3) % 48) as u16).collect()
+}
+
+/// The headline chaos drill: probabilistic faults at all four sites,
+/// replayed over ≥4 fixed seeds. Every submission gets exactly one typed
+/// response, the loop terminates, the books balance, and every `Ok` that
+/// made it through is bit-identical to the dense reference.
+#[test]
+fn chaos_every_client_gets_exactly_one_typed_response() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    let mut ref_scratch = reference.scratch();
+    let seq = ck.config.max_seq;
+    let mut wrng = Rng::seeded(7);
+    let windows: Vec<Vec<u16>> =
+        (0..4).map(|_| (0..seq).map(|_| wrng.below(48) as u16).collect()).collect();
+    let ref_nll: Vec<f32> =
+        windows.iter().map(|w| reference.score_nll(w, &mut ref_scratch)).collect();
+
+    let mut total_degraded = 0usize;
+    for seed in [101u64, 202, 303, 404] {
+        let plan = FaultPlan::parse("admission:p=0.25,prefill:p=0.25,decode:p=0.15,respond:p=0.2")
+            .unwrap()
+            .with_seed(seed);
+        let coord = Coordinator::new(cfg_with(ck.clone(), 4, Some(plan)));
+
+        let mut score_handles = Vec::new();
+        for _ in 0..3usize {
+            let client = coord.client().unwrap();
+            let mine = windows.clone();
+            score_handles.push(std::thread::spawn(move || {
+                mine.into_iter().map(|w| client.score(w)).collect::<Vec<_>>()
+            }));
+        }
+        let mut gen_handles = Vec::new();
+        for c in 0..3usize {
+            let client = coord.gen_client().unwrap();
+            gen_handles.push(std::thread::spawn(move || {
+                (0..3)
+                    .map(|i| {
+                        let p = prompt_for(c, i);
+                        (p.clone(), client.generate(p, 4))
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+
+        let report = run_within(coord, 30);
+
+        let mut submissions = 0usize;
+        let mut responses = 0usize;
+        for h in score_handles {
+            for (i, res) in h.join().unwrap().into_iter().enumerate() {
+                submissions += 1;
+                responses += 1;
+                match res {
+                    Ok(nll) => assert_eq!(
+                        nll.to_bits(),
+                        ref_nll[i].to_bits(),
+                        "seed {seed}: surviving score must be bit-identical"
+                    ),
+                    Err(ServeError::Overloaded)
+                    | Err(ServeError::Faulted(_))
+                    | Err(ServeError::DeadlineExceeded { .. })
+                    | Err(ServeError::ShuttingDown) => total_degraded += 1,
+                    Err(other) => panic!("seed {seed}: untyped score failure {other:?}"),
+                }
+            }
+        }
+        for h in gen_handles {
+            for (prompt, res) in h.join().unwrap() {
+                submissions += 1;
+                responses += 1;
+                match res {
+                    Ok(Generated { tokens, prompt_len, .. }) => {
+                        assert_eq!(prompt_len, prompt.len());
+                        assert_eq!(
+                            tokens,
+                            greedy_reference(&reference, &prompt, 4),
+                            "seed {seed}: surviving generation must be bit-identical"
+                        );
+                    }
+                    Err(ServeError::Overloaded)
+                    | Err(ServeError::Faulted(_))
+                    | Err(ServeError::DeadlineExceeded { .. })
+                    | Err(ServeError::ShuttingDown) => total_degraded += 1,
+                    Err(other) => panic!("seed {seed}: untyped gen failure {other:?}"),
+                }
+            }
+        }
+        assert_eq!(responses, submissions, "exactly one response per submission");
+        // every submission is accounted for: either it reached the loop
+        // (requests) or it was shed at the bounded queue
+        assert_eq!(
+            report.requests + report.shed_overloaded,
+            submissions,
+            "seed {seed}: the books must balance"
+        );
+        assert!(report.faulted + report.expired_admission <= report.requests);
+    }
+    // across four seeds of p≥0.15 faults over ~84 requests, at least one
+    // fault must have tripped (deterministic given the fixed seeds)
+    assert!(total_degraded > 0, "the chaos schedules never tripped a fault");
+}
+
+/// `site:always` at each site: every generation answers typed `Faulted`
+/// naming the site, the loop survives, and caches are quarantined
+/// exactly when a panic unwound out of a layer walk (prefill/decode) —
+/// never for faults outside the plan (admission/respond).
+#[test]
+fn always_fault_at_each_site_answers_typed_and_quarantines() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let n = 3usize;
+    for (site, expect_quarantined, expect_gen_started) in [
+        ("admission", 0usize, false),
+        ("prefill", n, true),
+        ("decode", n, true),
+        ("respond", 0, true),
+    ] {
+        let plan = FaultPlan::parse(&format!("{site}:always")).unwrap();
+        let coord = Coordinator::new(cfg_with(ck.clone(), 4, Some(plan)));
+        let mut handles = Vec::new();
+        for c in 0..n {
+            let client = coord.gen_client().unwrap();
+            handles.push(std::thread::spawn(move || client.generate(prompt_for(c, 0), 3)));
+        }
+        let report = run_within(coord, 30);
+        for h in handles {
+            match h.join().unwrap() {
+                Err(ServeError::Faulted(msg)) => assert!(
+                    msg.contains(site),
+                    "{site}: fault message should name its site, got {msg:?}"
+                ),
+                other => panic!("{site}:always must answer Faulted, got {other:?}"),
+            }
+        }
+        assert_eq!(report.requests, n, "{site}");
+        assert_eq!(report.faulted, n, "{site}: every response Faulted");
+        assert_eq!(
+            report.quarantined_caches, expect_quarantined,
+            "{site}: quarantine exactly the caches a panic touched"
+        );
+        assert_eq!(report.gen_requests > 0, expect_gen_started, "{site}");
+    }
+}
+
+/// A batched decode step panics once (`decode:nth=2`); the solo retry
+/// replays the step for every sequence. Nothing faults outward, nothing
+/// is quarantined, and every generation still matches the reference bit
+/// for bit — the KV cursors only commit at the end of an unwound-free
+/// layer walk, so the retry is exact.
+#[test]
+fn survivors_bit_identical_after_batch_decode_panic() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    let plan = FaultPlan::parse("decode:nth=2").unwrap();
+    let coord = Coordinator::new(cfg_with(ck.clone(), 4, Some(plan)));
+    let mut handles = Vec::new();
+    for c in 0..3usize {
+        let client = coord.gen_client().unwrap();
+        handles.push(std::thread::spawn(move || {
+            let p = prompt_for(c, 1);
+            (p.clone(), client.generate(p, 4))
+        }));
+    }
+    let report = run_within(coord, 30);
+    for h in handles {
+        let (prompt, res) = h.join().unwrap();
+        let got = res.expect("a retried sequence must still succeed");
+        assert_eq!(got.tokens, greedy_reference(&reference, &prompt, 4));
+    }
+    assert_eq!(report.gen_requests, 3);
+    assert_eq!(report.faulted, 0, "the retry absorbed the batch panic");
+    assert_eq!(report.quarantined_caches, 0, "solo retries succeeded — nothing poisoned");
+    assert!(report.decode_steps > 0);
+}
+
+/// A deadline that expires between decode steps (each step stalls via
+/// `decode:stall=40`) answers `DeadlineExceeded` carrying the tokens
+/// generated so far; the abandoned cache is healthy and recyclable.
+#[test]
+fn deadline_expires_midflight_with_partial_tokens() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let plan = FaultPlan::parse("decode:stall=40").unwrap();
+    let coord = Coordinator::new(cfg_with(ck.clone(), 4, Some(plan)));
+    let client = coord.gen_client().unwrap();
+    let h = std::thread::spawn(move || {
+        let deadline = Some(Instant::now() + Duration::from_millis(150));
+        client.generate_by(prompt_for(0, 2), 8, deadline)
+    });
+    let report = run_within(coord, 30);
+    match h.join().unwrap() {
+        Err(ServeError::DeadlineExceeded { partial }) => {
+            assert!(
+                !partial.is_empty() && partial.len() < 8,
+                "mid-flight expiry returns the partial generation, got {} tokens",
+                partial.len()
+            );
+        }
+        other => panic!("expected a mid-flight DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(report.expired_midflight, 1);
+    assert_eq!(report.quarantined_caches, 0, "an expired sequence's cache is healthy");
+}
+
+/// Dropping a `GenTicket` mid-generation must not wedge or poison the
+/// loop: the orphaned response send fails silently and concurrent
+/// traffic still completes bit-identically.
+#[test]
+fn dropped_ticket_mid_generation_does_not_hang_the_loop() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    let plan = FaultPlan::parse("decode:stall=10").unwrap();
+    let coord = Coordinator::new(cfg_with(ck.clone(), 4, Some(plan)));
+    let dropper = coord.gen_client().unwrap();
+    let other = coord.gen_client().unwrap();
+    let h1 = std::thread::spawn(move || {
+        let ticket = dropper.submit(prompt_for(0, 3), 6).unwrap();
+        drop(ticket); // client walks away mid-generation
+    });
+    let h2 = std::thread::spawn(move || {
+        let p = prompt_for(1, 3);
+        (p.clone(), other.generate(p, 4))
+    });
+    let report = run_within(coord, 30);
+    h1.join().unwrap();
+    let (prompt, res) = h2.join().unwrap();
+    assert_eq!(res.unwrap().tokens, greedy_reference(&reference, &prompt, 4));
+    assert_eq!(report.gen_requests, 2, "the orphaned generation still ran to completion");
+    assert_eq!(report.quarantined_caches, 0);
+}
+
+/// Graceful drain with work in flight: shutdown stops admission and
+/// answers the queue `ShuttingDown`, but the in-flight generation runs
+/// to completion (slowed by a decode stall so the drain demonstrably
+/// overlaps it).
+#[test]
+fn graceful_drain_finishes_inflight_and_rejects_queued() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    let plan = FaultPlan::parse("decode:stall=20").unwrap();
+    // max_batch = 1: the second request must wait in the queue, where the
+    // drain will find it
+    let coord = Coordinator::new(cfg_with(ck.clone(), 1, Some(plan)));
+    let stopper = coord.shutdown_handle();
+    let first = coord.gen_client().unwrap();
+    let second = coord.gen_client().unwrap();
+    let h1 = std::thread::spawn(move || {
+        let p = prompt_for(0, 4);
+        (p.clone(), first.generate(p, 5))
+    });
+    let h2 = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(15));
+        second.generate(prompt_for(1, 4), 5)
+    });
+    let stop = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(45));
+        stopper.shutdown();
+    });
+    let report = run_within(coord, 30);
+    stop.join().unwrap();
+    let (prompt, res) = h1.join().unwrap();
+    let got = res.expect("the in-flight generation must finish during the drain");
+    assert_eq!(got.tokens.len(), 5);
+    assert_eq!(got.tokens, greedy_reference(&reference, &prompt, 5));
+    match h2.join().unwrap() {
+        Err(ServeError::ShuttingDown) => {}
+        other => panic!("queued work must be answered ShuttingDown, got {other:?}"),
+    }
+    assert!(report.drained, "the run ended via the shutdown signal");
+    assert_eq!(report.rejected_shutdown, 1);
+    assert_eq!(report.quarantined_caches, 0);
+}
+
+/// Bounded admission end to end: a depth-1 queue sheds every submission
+/// past the first with a typed `Overloaded` before the loop even starts,
+/// and the one admitted request still completes.
+#[test]
+fn overload_sheds_typed_overloaded() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    let mut cfg = cfg_with(ck.clone(), 4, None);
+    cfg.queue_depth = 1;
+    let coord = Coordinator::new(cfg);
+    let client = coord.gen_client().unwrap();
+    let prompt = prompt_for(2, 5);
+    let mut tickets = Vec::new();
+    let mut shed = 0usize;
+    for _ in 0..4 {
+        match client.submit(prompt.clone(), 3) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Overloaded) => shed += 1,
+            Err(other) => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+    drop(client);
+    assert_eq!((tickets.len(), shed), (1, 3), "depth-1 queue admits exactly one");
+    let report = run_within(coord, 30);
+    let got = tickets.pop().unwrap().recv().unwrap().unwrap();
+    assert_eq!(got.tokens, greedy_reference(&reference, &prompt, 3));
+    assert_eq!(report.shed_overloaded, 3);
+    assert_eq!(report.requests, 1);
+}

@@ -368,7 +368,7 @@ fn stack_coordinator_serves_the_recipe() {
     let window: Vec<u16> = (0..12).map(|i| (i * 5 % 48) as u16).collect();
     let direct = model.score_nll(&window, &mut scratch);
     let coord = stack.coordinator();
-    let client = coord.client();
+    let client = coord.client().unwrap();
     let w = window.clone();
     let h = std::thread::spawn(move || client.score(w).unwrap());
     coord.run().unwrap();

@@ -141,10 +141,13 @@ fn coordinator_serves_batches() {
         policy: BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_millis(4) },
         kv_quant: None,
         sidecar: None,
+        queue_depth: zeroquant_fp::coordinator::DEFAULT_QUEUE_DEPTH,
+        deadline: None,
+        faults: None,
     });
     let mut handles = Vec::new();
     for c in 0..3 {
-        let cl = coord.client();
+        let cl = coord.client().unwrap();
         let mut r = Rng::seeded(c as u64);
         let windows: Vec<Vec<u16>> = (0..6)
             .map(|_| (0..seq).map(|_| r.below(ck.config.vocab_size) as u16).collect())
