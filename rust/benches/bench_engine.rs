@@ -11,15 +11,21 @@ use std::path::Path;
 
 use zeroquant_fp::bench_harness::Bench;
 use zeroquant_fp::coordinator::ServingStack;
-use zeroquant_fp::engine::{Engine, EngineOpts};
+use zeroquant_fp::engine::{Engine, EngineOpts, KernelTier};
 use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::kernels::{FastKernels, Kernels, OracleKernels};
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::CompiledModel;
-use zeroquant_fp::quant::{ScaleConstraint, Scheme};
+use zeroquant_fp::quant::{
+    quantize_weight_rtn, PackedWeight, ScaleConstraint, Scheme, WeightQuantConfig,
+};
+use zeroquant_fp::recipe::json::Json;
 use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::{act_tag, score_artifact_name, HloScorer, SCORE_BATCH};
+use zeroquant_fp::tensor::packed_matmul::GemvScratch;
+use zeroquant_fp::tensor::Matrix;
 
 const FORMATS: [NumericFormat; 3] =
     [NumericFormat::F16, NumericFormat::INT8, NumericFormat::FP8_E4M3];
@@ -158,6 +164,35 @@ fn main() {
         println!("packed+lorc bit-identity check: OK");
     }
 
+    // ---- kernel tiers: oracle vs fast over the same packed stack ----------
+    // The fast tier is the same serving plan one recipe knob away
+    // (`kernel_tier: fast`): 8-lane dequant-GEMV + persistent worker pool,
+    // tolerance-gated by tests/kernel_tolerance.rs instead of bit-identity.
+    // Forward-level rows first, then the kernel-level batch-8 GEMV
+    // microbench whose speedup BENCH_TRAJECTORY.json tracks across PRs.
+    println!("\n-- kernel tiers: oracle vs fast (w4a8 packed plan) --");
+    let fast_recipe = QuantRecipe::builder(recipe.scheme)
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false)
+        .packed(1)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let fast_q = stack.with_recipe(&fast_recipe).unwrap().compile();
+    {
+        let mut fs = fast_q.scratch();
+        bench.run("compiled fwd w4a8 fast-tier", seq as f64, "tok", || {
+            std::hint::black_box(fast_q.forward(&window, &mut fs));
+        });
+        if let Some(sp) =
+            bench.speedup("compiled fwd w4a8 fast-tier", "compiled fwd w4a8 packed-plan")
+        {
+            println!("fast vs oracle tier (w4a8 fwd): {sp:.2}x");
+        }
+    }
+    let gemv_speedup = gemv_tier_microbench(&mut bench, &mut rng);
+    trajectory_gate(&mut bench, gemv_speedup);
+
     // sanity: compiled logits must match the reference bit-for-bit
     let opts = EngineOpts::with_act(NumericFormat::FP8_E4M3);
     let reference = Engine::with_opts(&ck, opts).forward(&window);
@@ -181,6 +216,113 @@ fn main() {
     match bench.write_json("bench_engine", out) {
         Ok(()) => println!("\n[json -> {}]", out.display()),
         Err(e) => println!("\n[json write failed: {e}]"),
+    }
+}
+
+/// The kernel-level trajectory number: fast vs oracle fused dequant-GEMV
+/// at batch 8 over one 256x512 W4 linear. Batch 8 amortizes the (shared)
+/// row-decode cost over eight dots, so the ratio isolates the dot engines:
+/// the oracle's serial 4-term accumulator chain against the fast tier's
+/// eight independent lanes.
+fn gemv_tier_microbench(bench: &mut Bench, rng: &mut Rng) -> f64 {
+    println!("\n-- packed GEMV microbench, batch 8, 256x512 W4 codes --");
+    let (rows, cols) = (256usize, 512usize);
+    let wm = Matrix::randn(rows, cols, 0.05, rng);
+    let q = quantize_weight_rtn(
+        &wm,
+        &WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64),
+    );
+    let w = PackedWeight::from_quantized(&q);
+    let x = Matrix::randn(8, cols, 0.5, rng);
+    let mut out = Matrix::zeros(8, rows);
+    let mut s = GemvScratch::sized(cols, 0);
+    let flops = 2.0 * (8 * rows * cols) as f64;
+    let oracle = OracleKernels::new(1);
+    bench.run("packed gemv B=8 (oracle)", flops, "FLOP", || {
+        out.data.fill(0.0);
+        oracle.packed_gemv(&x, &w, None, &mut out, &mut s);
+    });
+    let fast = FastKernels::new(1);
+    bench.run("packed gemv B=8 (fast)", flops, "FLOP", || {
+        out.data.fill(0.0);
+        fast.packed_gemv(&x, &w, None, &mut out, &mut s);
+    });
+    let sp = bench
+        .speedup("packed gemv B=8 (fast)", "packed gemv B=8 (oracle)")
+        .unwrap_or(1.0);
+    println!("fast vs oracle packed GEMV (B=8): {sp:.2}x");
+    bench.note("fast gemv speedup B=8", sp);
+    sp
+}
+
+/// `BENCH_TRAJECTORY.json` (repo root): the committed fast-tier perf
+/// trajectory. Each entry records one PR's fast-vs-oracle packed-GEMV
+/// speedup. The gate fails the bench (exit 1) when the measured speedup
+/// drops below the last committed entry's `floor` (default: 10% under its
+/// recorded speedup) — the fast tier is not allowed to silently regress
+/// toward the oracle. Run with `ZQFP_APPEND_TRAJECTORY=1` to append this
+/// run's measurement as a new entry (`ZQFP_TRAJECTORY_TAG` labels it).
+fn trajectory_gate(bench: &mut Bench, measured: f64) {
+    let path = Path::new("../BENCH_TRAJECTORY.json");
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("[trajectory gate skipped: {}: {e}]", path.display());
+            return;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("trajectory gate: {} is unreadable: {e}", path.display());
+            std::process::exit(1);
+        }
+    };
+    let Some(Json::Arr(entries)) = doc.get("entries") else {
+        eprintln!("trajectory gate: {} has no entries array", path.display());
+        std::process::exit(1);
+    };
+    if let Some(last) = entries.last() {
+        let recorded = last.get("fast_gemv_speedup").and_then(Json::as_f64).unwrap_or(1.0);
+        // Per-entry floors absorb runner-to-runner variance (shared CI
+        // machines differ widely in autovectorization win and load).
+        let floor = last.get("floor").and_then(Json::as_f64).unwrap_or(0.9 * recorded);
+        bench.note("trajectory floor", floor);
+        if measured < floor {
+            eprintln!(
+                "trajectory gate FAILED: fast GEMV speedup {measured:.2}x < floor {floor:.2}x \
+                 (last committed entry: {recorded:.2}x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "trajectory gate OK: {measured:.2}x >= floor {floor:.2}x (last entry {recorded:.2}x)"
+        );
+    }
+    if std::env::var("ZQFP_APPEND_TRAJECTORY").as_deref() == Ok("1") {
+        append_trajectory(path, doc, measured);
+    }
+}
+
+/// Append `measured` as a new trajectory entry and rewrite the file
+/// pretty-printed (the shape `Json::parse` round-trips).
+fn append_trajectory(path: &Path, doc: Json, measured: f64) {
+    let tag = std::env::var("ZQFP_TRAJECTORY_TAG").unwrap_or_else(|_| "local".to_string());
+    let Json::Obj(mut kv) = doc else { return };
+    for (key, value) in kv.iter_mut() {
+        if key == "entries" {
+            if let Json::Arr(entries) = value {
+                let rounded = (measured * 100.0).round() / 100.0;
+                entries.push(Json::Obj(vec![
+                    ("tag".to_string(), Json::Str(tag.clone())),
+                    ("fast_gemv_speedup".to_string(), Json::Num(rounded)),
+                ]));
+            }
+        }
+    }
+    match std::fs::write(path, Json::Obj(kv).pretty() + "\n") {
+        Ok(()) => println!("[trajectory entry appended -> {}]", path.display()),
+        Err(e) => println!("[trajectory append failed: {e}]"),
     }
 }
 

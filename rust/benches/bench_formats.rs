@@ -1,10 +1,17 @@
 //! Codec throughput: fake-quantization rates per format — the L3 hot-path
 //! primitive (token-wise activation quant runs on every linear input).
-//! §Perf baseline/after numbers live in EXPERIMENTS.md.
+//! The engine-hot-path section sweeps the activation format of every
+//! recipe preset (read off [`QuantRecipe::preset`], so the bench can't
+//! drift from the formats the serving stack actually configures).
+//! §Perf baseline/after numbers live in EXPERIMENTS.md; writes
+//! `bench_results/bench_formats.json` for the perf trajectory.
+
+use std::path::Path;
 
 use zeroquant_fp::bench_harness::Bench;
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::quant::{fake_quant_tokenwise, ActQuantConfig};
+use zeroquant_fp::recipe::{PRESET_NAMES, QuantRecipe};
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::tensor::Matrix;
 
@@ -41,13 +48,25 @@ fn main() {
         });
     }
 
-    println!("\n-- token-wise activation quant (engine hot path), [128 x 512] --");
+    // ---- token-wise activation quant per recipe preset --------------------
+    // The engine hot path exactly as each preset configures it: the
+    // activation format is read off `QuantRecipe::preset`, not a local
+    // list. Presets sharing a format share one row (the label names the
+    // first preset that selects it).
+    println!("\n-- token-wise activation quant per recipe preset, [128 x 512] --");
     let x0 = Matrix::randn(128, 512, 0.1, &mut rng);
-    for fmt in [NumericFormat::FP8_E4M3, NumericFormat::INT8] {
+    let mut seen: Vec<String> = Vec::new();
+    for name in PRESET_NAMES {
+        let recipe = QuantRecipe::preset(name).unwrap();
+        let fmt = recipe.scheme.activation;
+        if seen.contains(&fmt.name()) {
+            continue;
+        }
+        seen.push(fmt.name());
         let cfg = ActQuantConfig::new(fmt);
         let mut x = x0.clone();
         bench.run(
-            format!("tokenwise {}", fmt.name()),
+            format!("tokenwise {} ({name})", fmt.name()),
             (128 * 512) as f64,
             "elt",
             || {
@@ -55,5 +74,11 @@ fn main() {
                 fake_quant_tokenwise(&mut x, &cfg);
             },
         );
+    }
+
+    let out = Path::new("bench_results/bench_formats.json");
+    match bench.write_json("bench_formats", out) {
+        Ok(()) => println!("\n[json -> {}]", out.display()),
+        Err(e) => println!("\n[json write failed: {e}]"),
     }
 }

@@ -1,8 +1,18 @@
 //! Matmul kernels: the L3 engine hot path. Naive baseline vs the blocked/
-//! unrolled kernels in tensor::matmul (§Perf records the progression).
+//! unrolled dense kernels (§Perf records the progression), then the fused
+//! dequant-GEMV through both kernel tiers — the weight-quant config driven
+//! off the `w4a8-fp` recipe preset so this bench measures exactly the codes
+//! the serving stack packs, and can't drift from the serving configuration.
+//! Writes `bench_results/bench_matmul.json` for the perf trajectory.
+
+use std::path::Path;
 
 use zeroquant_fp::bench_harness::Bench;
+use zeroquant_fp::kernels::{FastKernels, Kernels, OracleKernels};
+use zeroquant_fp::quant::{quantize_weight_rtn, PackedWeight, WeightQuantConfig};
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::packed_matmul::GemvScratch;
 use zeroquant_fp::tensor::{matmul, Matrix};
 
 fn main() {
@@ -30,5 +40,53 @@ fn main() {
             println!("   blocked vs naive: {s:.2}x");
         }
         println!();
+    }
+
+    // ---- fused dequant-GEMV: oracle vs fast tier --------------------------
+    // The packed plan's hot path, quantized exactly as the `w4a8-fp` preset
+    // quantizes it (weight format, group size and scale constraint read off
+    // the recipe; RTN codes), at decode-like batch widths. B=1 is the
+    // decode-loop shape where row decode dominates; B=8 amortizes decode
+    // and isolates the dot engines (serial 4-term chain vs 8 lanes).
+    let recipe = QuantRecipe::preset("w4a8-fp").unwrap();
+    let wcfg = WeightQuantConfig::new(recipe.scheme.weight)
+        .with_group_size(recipe.group_size)
+        .with_constraint(recipe.constraint);
+    let (rows, cols) = (256usize, 512usize);
+    let wm = Matrix::randn(rows, cols, 0.05, &mut rng);
+    let w = PackedWeight::from_quantized(&quantize_weight_rtn(&wm, &wcfg));
+    println!(
+        "-- fused dequant-GEMV {rows}x{cols}, {} codes (group {}, {}) --",
+        recipe.scheme.name(),
+        recipe.group_size,
+        recipe.constraint.label()
+    );
+    let oracle = OracleKernels::new(1);
+    let fast = FastKernels::new(1);
+    for b in [1usize, 8] {
+        let x = Matrix::randn(b, cols, 0.5, &mut rng);
+        let mut out = Matrix::zeros(b, rows);
+        let mut s = GemvScratch::sized(cols, 0);
+        let flops = 2.0 * (b * rows * cols) as f64;
+        bench.run(format!("gemv oracle B={b}"), flops, "FLOP", || {
+            out.data.fill(0.0);
+            oracle.packed_gemv(&x, &w, None, &mut out, &mut s);
+        });
+        bench.run(format!("gemv fast   B={b}"), flops, "FLOP", || {
+            out.data.fill(0.0);
+            fast.packed_gemv(&x, &w, None, &mut out, &mut s);
+        });
+        if let Some(sp) =
+            bench.speedup(&format!("gemv fast   B={b}"), &format!("gemv oracle B={b}"))
+        {
+            println!("   fast vs oracle tier (B={b}): {sp:.2}x");
+        }
+        println!();
+    }
+
+    let out = Path::new("bench_results/bench_matmul.json");
+    match bench.write_json("bench_matmul", out) {
+        Ok(()) => println!("[json -> {}]", out.display()),
+        Err(e) => println!("[json write failed: {e}]"),
     }
 }

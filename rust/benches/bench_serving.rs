@@ -22,7 +22,7 @@ use std::time::Duration;
 
 use zeroquant_fp::bench_harness::{Bench, Measurement};
 use zeroquant_fp::coordinator::{pick_backend, ScoreBackend, ServingStack};
-use zeroquant_fp::engine::{Engine, EngineOpts};
+use zeroquant_fp::engine::{Engine, EngineOpts, KernelTier};
 use zeroquant_fp::formats::NumericFormat;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
@@ -237,6 +237,44 @@ fn main() {
     }
     if let Some(sp) = bench.speedup("w4a8 decode B=4 (packed-plan)", "w4a8 decode B=4 (f32-plan)") {
         println!("   packed vs f32 plan decode: {sp:.2}x");
+    }
+
+    // fast tier on the same stack: the tolerance-gated 8-lane GEMV +
+    // persistent worker pool, one recipe knob (`kernel_tier: fast`) away
+    // from the oracle packed-plan row above — the serving-side view of the
+    // kernel-level trajectory number bench_engine gates.
+    let fast_recipe = QuantRecipe::builder(w4_recipe.scheme)
+        .constraint(ScaleConstraint::M2 { rows: 32 })
+        .use_gptq(false)
+        .packed(1)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let fast_q = w4_stack.with_recipe(&fast_recipe).unwrap().compile();
+    {
+        let mut qscratch = fast_q.scratch();
+        let mut caches: Vec<KvCache> = (0..4).map(|_| fast_q.kv_cache()).collect();
+        let mut toks: Vec<u16> = vec![0; 4];
+        bench.run("w4a8 decode B=4 (fast-tier)", (4 * 48) as f64, "tok", || {
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.reset();
+                fast_q.prefill(&windows[i][..16], c, &mut qscratch);
+            }
+            for (i, t) in toks.iter_mut().enumerate() {
+                *t = windows[i][16];
+            }
+            for _ in 0..48 {
+                let logits = fast_q.decode_step_batch(&toks, &mut caches, &mut qscratch);
+                for (i, t) in toks.iter_mut().enumerate() {
+                    *t = argmax(logits.row(i)) as u16;
+                }
+            }
+        });
+    }
+    if let Some(sp) =
+        bench.speedup("w4a8 decode B=4 (fast-tier)", "w4a8 decode B=4 (packed-plan)")
+    {
+        println!("   fast vs oracle tier decode: {sp:.2}x");
     }
 
     // ---- packed W4A8 + LoRC: the compensation's decode cost ---------------

@@ -192,10 +192,11 @@ pub fn eval(args: &Args) -> Result<(), String> {
     let packed_model = if packed {
         let model = stack.compile();
         println!(
-            "packed plan: {} B of linear weights{} ({} gemv threads)",
+            "packed plan: {} B of linear weights{} ({} gemv threads, {} kernels)",
             model.linear_weight_bytes(),
             if stack.sidecar.has_lorc() { " incl. LoRC factors" } else { "" },
-            recipe.weights.threads()
+            recipe.weights.threads(),
+            recipe.kernel_tier.name()
         );
         Some(model)
     } else {

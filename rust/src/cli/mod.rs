@@ -32,9 +32,12 @@ commands:
                [--corpus wiki|ptb|c4|all] [--data data/] [--seq N]
                [--max-tokens N] [--alpha A] [--runtime hlo|engine]
                [--artifacts artifacts/] [--packed [--gemv-threads N]]
+               [--kernels oracle|fast]
                evaluate through the bit-packed weight plan (same bits,
                ~1/7 the weight bytes; composes with --lorc — factors
-               ride along as codes)
+               ride along as codes); --kernels fast scores through the
+               tolerance-gated 8-lane GEMV tier instead of the bit-exact
+               oracle
   table        --id 1|2|3|a1 [--data data/] [--ckpt-dir ckpt/] [--fast]
                [--runtime hlo|engine] regenerate a paper table
   figure       --id 1|2 [--ckpt m.zqckpt] regenerate a paper figure
@@ -46,6 +49,9 @@ commands:
                serves continuous-batching KV-cached generation instead;
                --packed [--gemv-threads N] serves from bit-packed weights
                (composes with --lorc: W4A8+LoRC at packed footprint);
+               --kernels oracle|fast picks the kernel tier (fast = 8-lane
+               GEMV + persistent decode worker pool, ULP/NLL
+               tolerance-gated vs the bit-exact oracle default);
                robustness knobs: --queue-depth N bounds admission (full
                queue sheds with a typed Overloaded), --deadline-ms MS
                puts a per-request deadline on every submission (0 = none),

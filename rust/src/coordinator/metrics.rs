@@ -278,6 +278,62 @@ mod tests {
     }
 
     #[test]
+    fn two_sample_percentile_interpolation() {
+        // n = 2 pins the index formula `round(p/100 · (n-1))` at its
+        // smallest non-degenerate size: everything below the rounding
+        // midpoint maps to the first sample, the midpoint and above to the
+        // second (round-half-away-from-zero), and the endpoints are exact.
+        let mut s = LatencyStats::default();
+        s.record(Duration::from_millis(10));
+        s.record(Duration::from_millis(20));
+        assert_eq!(s.count(), 2);
+        for (p, want) in [
+            (0.0, 10.0),
+            (25.0, 10.0),
+            (49.0, 10.0),
+            (50.0, 20.0), // 0.5 rounds away from zero → the upper sample
+            (95.0, 20.0),
+            (100.0, 20.0),
+        ] {
+            let v = s.percentile_ms(p);
+            assert!((v - want).abs() < 0.01, "p={p}: got {v}, want {want}");
+        }
+        // clamped / non-finite arguments behave like the endpoints
+        assert_eq!(s.percentile_ms(-10.0), s.percentile_ms(0.0));
+        assert_eq!(s.percentile_ms(400.0), s.percentile_ms(100.0));
+        assert_eq!(s.percentile_ms(f64::NAN), s.percentile_ms(100.0));
+        // insertion order must not matter: the recorder sorts per query
+        let mut rev = LatencyStats::default();
+        rev.record(Duration::from_millis(20));
+        rev.record(Duration::from_millis(10));
+        assert_eq!(rev.percentile_ms(0.0), s.percentile_ms(0.0));
+        assert_eq!(rev.percentile_ms(100.0), s.percentile_ms(100.0));
+    }
+
+    #[test]
+    fn zero_decode_tokens_yields_zero_rate_not_nan() {
+        // A run whose generations all faulted (or expired) before the
+        // first decode step still spent wall time in the decode loop:
+        // decode_tok_s must come back exactly 0.0 — finite, printable —
+        // not NaN/∞ from a 0/0 or x/0.
+        let report = ServeReport {
+            gen_requests: 2,
+            decode_tokens: 0,
+            decode_steps: 0,
+            decode_wall: Duration::from_millis(350),
+            ..Default::default()
+        };
+        assert_eq!(report.decode_tok_s(), 0.0);
+        assert!(report.decode_tok_s().is_finite());
+        assert_eq!(report.mean_decode_batch(), 0.0);
+        report.print(); // the generation block prints zeros, no panic
+        // and with zero wall as well (nothing ever reached decode)
+        let idle = ServeReport { gen_requests: 1, ..Default::default() };
+        assert_eq!(idle.decode_tok_s(), 0.0);
+        assert!(idle.decode_tok_s().is_finite());
+    }
+
+    #[test]
     fn rate_stats_aggregate() {
         let mut r = RateStats::default();
         for v in [10.0, 20.0, 30.0] {

@@ -530,10 +530,13 @@ impl ServingStack {
     /// recipe's serving layout — the oracle the packed plan is checked
     /// against in the equivalence suites and benches. Activation options
     /// still come from the recipe, so the two plans differ only in where
-    /// the same bits are stored.
+    /// the same bits are stored. The kernel tier is pinned to the oracle
+    /// for the same reason: this plan is the reference side of every
+    /// differential check, whatever tier the recipe serves with.
     pub fn compile_dense(&self) -> CompiledModel {
         let mut opts = self.recipe.engine_opts();
         opts.weights = crate::engine::WeightLayout::Dense;
+        opts.kernels = crate::engine::KernelTier::Oracle;
         CompiledModel::compile(&self.checkpoint, opts)
     }
 
@@ -1328,6 +1331,13 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     }
     if let Some(fmt) = recipe.kv_quant {
         println!("kv cache: {}", fmt.name());
+    }
+    if recipe.kernel_tier.is_fast() {
+        println!(
+            "kernels: fast tier (8-lane GEMV, {} pool workers; \
+             tolerance-gated by tests/kernel_tolerance.rs)",
+            recipe.weights.threads()
+        );
     }
     println!(
         "admission: queue depth {}, deadline {}",

@@ -93,6 +93,47 @@ impl WeightLayout {
     }
 }
 
+/// Which kernel backend the compiled plan executes through (the
+/// two-tier contract of [`crate::kernels`]). The reference [`Engine`]
+/// ignores this — it *is* the scalar arithmetic both tiers are measured
+/// against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelTier {
+    /// The scalar reference path — bit-identical to the reference engine
+    /// on every execution mode (the existing equivalence-suite contract).
+    #[default]
+    Oracle,
+    /// Blocked 8-lane dequant-GEMV + persistent decode worker pool.
+    /// Not bit-identical to the oracle; gated by the differential
+    /// ULP/NLL tolerance suite (`tests/kernel_tolerance.rs`) and
+    /// bit-deterministic across worker counts.
+    Fast,
+}
+
+impl KernelTier {
+    /// Parse a CLI/JSON tier name (`"oracle"` / `"fast"`).
+    pub fn parse(s: &str) -> Option<KernelTier> {
+        match s {
+            "oracle" => Some(KernelTier::Oracle),
+            "fast" => Some(KernelTier::Fast),
+            _ => None,
+        }
+    }
+
+    /// The canonical lowercase name (inverse of [`parse`](Self::parse)).
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelTier::Oracle => "oracle",
+            KernelTier::Fast => "fast",
+        }
+    }
+
+    /// `true` for the tolerance-gated fast tier.
+    pub fn is_fast(&self) -> bool {
+        matches!(self, KernelTier::Fast)
+    }
+}
+
 /// Engine options.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineOpts {
@@ -102,6 +143,9 @@ pub struct EngineOpts {
     /// Weight storage/execution layout of the compiled plan (the
     /// reference engine ignores this — it is always dense).
     pub weights: WeightLayout,
+    /// Kernel backend of the compiled plan (the reference engine ignores
+    /// this — it is always the scalar oracle arithmetic).
+    pub kernels: KernelTier,
 }
 
 impl Default for EngineOpts {
@@ -114,12 +158,22 @@ impl EngineOpts {
     /// Options with the given activation format and the default dense
     /// weight layout — the common construction across tests and benches.
     pub fn with_act(fmt: crate::formats::NumericFormat) -> EngineOpts {
-        EngineOpts { act: ActQuantConfig::new(fmt), weights: WeightLayout::Dense }
+        EngineOpts {
+            act: ActQuantConfig::new(fmt),
+            weights: WeightLayout::Dense,
+            kernels: KernelTier::Oracle,
+        }
     }
 
     /// Switch to the packed weight layout with `threads` GEMV shards.
     pub fn packed(mut self, threads: usize) -> EngineOpts {
         self.weights = WeightLayout::Packed { threads: threads.max(1) };
+        self
+    }
+
+    /// Select the kernel backend tier of the compiled plan.
+    pub fn kernels(mut self, tier: KernelTier) -> EngineOpts {
+        self.kernels = tier;
         self
     }
 }

@@ -1,0 +1,262 @@
+//! A persistent worker pool for decode-step parallelism.
+//!
+//! The packed GEMV path used to shard rows across short-lived
+//! `std::thread::scope` threads on *every* call — a spawn/join pair per
+//! linear, per decode step. `WorkerPool` replaces that with a fixed set of
+//! threads that live as long as the compiled plan and pull closures off a
+//! shared channel. `run` blocks until every submitted task has completed,
+//! which is what makes the (internally unsafe) lifetime erasure in
+//! [`WorkerPool::run`] sound: no task can outlive the borrow it captures.
+//!
+//! Panic behaviour is part of the serving fault contract: a panic inside a
+//! pooled task is caught on the worker (the worker itself survives and keeps
+//! serving future jobs), ferried back over the ack channel, and re-raised on
+//! the caller via `resume_unwind` with the *original payload*. Typed fault
+//! payloads (`FaultPayload`) therefore reach the coordinator's quarantine
+//! logic exactly as they would from a solo run.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// A borrowed task submitted to [`WorkerPool::run`]. The lifetime ties the
+/// closure to the caller's stack frame; `run` erases it only after arranging
+/// to block until the task has finished.
+pub type ScopedTask<'s> = Box<dyn FnOnce() + Send + 's>;
+
+type ErasedTask = Box<dyn FnOnce() + Send + 'static>;
+type PanicPayload = Box<dyn Any + Send>;
+
+struct Job {
+    task: ErasedTask,
+    ack: Sender<Result<(), PanicPayload>>,
+}
+
+/// Fixed-size pool of persistent worker threads.
+///
+/// With `threads <= 1` the pool spawns nothing and [`run`](Self::run)
+/// executes tasks inline on the caller, so a solo configuration has zero
+/// threading overhead and trivially identical results.
+pub struct WorkerPool {
+    threads: usize,
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads)
+            .finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool with `threads` workers (0 and 1 both mean "inline").
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        if threads == 1 {
+            return WorkerPool {
+                threads,
+                tx: None,
+                workers: Vec::new(),
+            };
+        }
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                std::thread::spawn(move || loop {
+                    let job = {
+                        let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+                        guard.recv()
+                    };
+                    let Ok(Job { task, ack }) = job else {
+                        return; // channel closed: pool is being dropped
+                    };
+                    let outcome = catch_unwind(AssertUnwindSafe(task));
+                    // The caller may itself be unwinding from an earlier
+                    // task's panic; a dead ack receiver is fine.
+                    let _ = ack.send(outcome);
+                })
+            })
+            .collect();
+        WorkerPool {
+            threads,
+            tx: Some(tx),
+            workers,
+        }
+    }
+
+    /// Number of workers this pool was built with (>= 1; 1 means inline).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion, then return. Tasks may borrow from the
+    /// caller's stack. If any task panicked, the first panic payload (in
+    /// submission order) is re-raised here via `resume_unwind` after all
+    /// tasks have finished, so no task is left running against freed stack.
+    pub fn run(&self, tasks: Vec<ScopedTask<'_>>) {
+        let Some(tx) = &self.tx else {
+            // Inline path: execute sequentially on the caller. A panic
+            // propagates naturally with its original payload.
+            for task in tasks {
+                task();
+            }
+            return;
+        };
+        let n = tasks.len();
+        let (ack_tx, ack_rx) = channel::<Result<(), PanicPayload>>();
+        for task in tasks {
+            // SAFETY: we block on `n` acks below before returning, and
+            // workers send an ack only after the task has run (or been
+            // consumed by a panic). The closure therefore cannot outlive
+            // the borrows it captures.
+            let erased: ErasedTask = unsafe {
+                std::mem::transmute::<ScopedTask<'_>, ErasedTask>(task)
+            };
+            tx.send(Job {
+                task: erased,
+                ack: ack_tx.clone(),
+            })
+            .expect("worker pool channel closed while pool is alive");
+        }
+        drop(ack_tx);
+        let mut first_panic: Option<PanicPayload> = None;
+        for _ in 0..n {
+            match ack_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(payload)) => {
+                    if first_panic.is_none() {
+                        first_panic = Some(payload);
+                    }
+                }
+                Err(_) => unreachable!("worker dropped ack without sending"),
+            }
+        }
+        if let Some(payload) = first_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the job channel makes every worker's recv fail and return.
+        self.tx = None;
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_borrowed_tasks_to_completion() {
+        let pool = WorkerPool::new(4);
+        let mut out = vec![0usize; 64];
+        let tasks: Vec<ScopedTask<'_>> = out
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let t: ScopedTask<'_> = Box::new(move || {
+                    for (j, slot) in chunk.iter_mut().enumerate() {
+                        *slot = i * 100 + j;
+                    }
+                });
+                t
+            })
+            .collect();
+        pool.run(tasks);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i / 16) * 100 + (i % 16));
+        }
+    }
+
+    #[test]
+    fn inline_pool_spawns_no_threads() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        assert!(pool.workers.is_empty());
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..8)
+            .map(|_| {
+                let t: ScopedTask<'_> = Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+                t
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn panic_payload_survives_the_pool() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        let pool = WorkerPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<ScopedTask<'_>> = vec![
+                Box::new(|| {}),
+                Box::new(|| std::panic::panic_any(Typed(7))),
+                Box::new(|| {}),
+            ];
+            pool.run(tasks);
+        }));
+        let payload = result.expect_err("panic must propagate to the caller");
+        let typed = payload.downcast::<Typed>().expect("payload type preserved");
+        assert_eq!(*typed, Typed(7));
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = WorkerPool::new(2);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<ScopedTask<'_>> = vec![Box::new(|| panic!("boom"))];
+            pool.run(tasks);
+        }));
+        // All workers are still alive and serving.
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<ScopedTask<'_>> = (0..16)
+            .map(|_| {
+                let t: ScopedTask<'_> = Box::new(|| {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                });
+                t
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    #[test]
+    fn all_tasks_finish_even_when_one_panics() {
+        let pool = WorkerPool::new(4);
+        let done = AtomicUsize::new(0);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<ScopedTask<'_>> = (0..8)
+                .map(|i| {
+                    let done = &done;
+                    let t: ScopedTask<'_> = Box::new(move || {
+                        if i == 3 {
+                            panic!("shard fault");
+                        }
+                        done.fetch_add(1, Ordering::SeqCst);
+                    });
+                    t
+                })
+                .collect();
+            pool.run(tasks);
+        }));
+        assert_eq!(done.load(Ordering::SeqCst), 7);
+    }
+}

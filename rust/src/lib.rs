@@ -35,6 +35,7 @@ pub mod eval;
 pub mod experiments;
 pub mod formats;
 pub mod gptq;
+pub mod kernels;
 pub mod linalg;
 pub mod lorc;
 pub mod model;

@@ -53,13 +53,16 @@ mod lut;
 pub use kv::KvCache;
 pub use lut::FpQuantLut;
 
+use std::sync::Arc;
+
 use crate::engine::{EngineOpts, LinearSite, Site, WeightLayout};
 use crate::formats::{FpFormat, NumericFormat};
+use crate::kernels::Kernels;
 use crate::lorc::PackedLorc;
 use crate::model::{Arch, Checkpoint, ModelConfig};
 use crate::quant::{PackedWeight, QuantSidecar};
 use crate::tensor::packed_matmul::GemvScratch;
-use crate::tensor::{matmul, packed_matmul, Matrix};
+use crate::tensor::{matmul, Matrix};
 
 /// A linear layer prepacked for the axpy kernel: transposed weight
 /// (`[d_in, d_out]`) plus an optional fused bias. Several source linears
@@ -113,8 +116,10 @@ impl PackedLinear {
 
     /// `out = bias + x @ wt` into a scratch buffer (resized, no allocation
     /// when the buffer's capacity suffices). Bias seeds the accumulator —
-    /// the same operation order as the reference engine's linear.
-    pub fn run_into(&self, x: &Matrix, out: &mut Matrix) {
+    /// the same operation order as the reference engine's linear. The GEMV
+    /// itself dispatches through the kernel backend (both tiers default to
+    /// the reference axpy kernel, so the dense path stays bit-identical).
+    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, k: &dyn Kernels) {
         assert_eq!(x.cols, self.d_in, "linear input dim mismatch");
         if self.bias.is_empty() {
             out.resize_to(x.rows, self.d_out); // zeroed accumulation base
@@ -123,7 +128,7 @@ impl PackedLinear {
             // instead of a zero fill followed by a bias copy.
             out.resize_rows_to(x.rows, &self.bias);
         }
-        matmul::matmul_into(x, &self.wt, out);
+        k.gemv(x, &self.wt, out);
     }
 }
 
@@ -142,7 +147,6 @@ pub struct PackedQLinear {
     w: PackedWeight,
     lorc: Option<PackedLorc>,
     bias: Vec<f32>,
-    threads: usize,
 }
 
 /// One fused source of a packed slot: quantized codes, optional LoRC
@@ -154,7 +158,7 @@ type QPart<'a> = (
 );
 
 impl PackedQLinear {
-    fn pack(parts: &[QPart<'_>], threads: usize) -> PackedQLinear {
+    fn pack(parts: &[QPart<'_>]) -> PackedQLinear {
         let qs: Vec<&crate::quant::QuantizedWeight> = parts.iter().map(|(q, _, _)| *q).collect();
         let n_biased = parts.iter().filter(|(_, _, b)| b.is_some()).count();
         assert!(
@@ -178,20 +182,20 @@ impl PackedQLinear {
         } else {
             None
         };
-        PackedQLinear { d_in: w.cols, d_out: w.rows, w, lorc, bias, threads: threads.max(1) }
+        PackedQLinear { d_in: w.cols, d_out: w.rows, w, lorc, bias }
     }
 
     /// `out = bias + x @ (dequant(w) + E₁E₂)ᵀ`, decoded (and compensated)
-    /// on the fly. `s` holds the arena's decode strips; allocation-free at
-    /// `threads == 1`.
-    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch) {
+    /// on the fly by the kernel backend. `s` holds the arena's decode
+    /// strips; allocation-free on both tiers' single-worker paths.
+    pub fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch, k: &dyn Kernels) {
         assert_eq!(x.cols, self.d_in, "linear input dim mismatch");
         if self.bias.is_empty() {
             out.resize_to(x.rows, self.d_out);
         } else {
             out.resize_rows_to(x.rows, &self.bias);
         }
-        packed_matmul::packed_matmul_into(x, &self.w, self.lorc.as_ref(), out, s, self.threads);
+        k.packed_gemv(x, &self.w, self.lorc.as_ref(), out, s);
     }
 
     /// Resident bytes of the packed weight payload (codes + scales +
@@ -216,10 +220,10 @@ pub enum LayerWeights {
 }
 
 impl LayerWeights {
-    fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch) {
+    fn run_into(&self, x: &Matrix, out: &mut Matrix, s: &mut GemvScratch, k: &dyn Kernels) {
         match self {
-            LayerWeights::Dense(l) => l.run_into(x, out),
-            LayerWeights::Packed(l) => l.run_into(x, out, s),
+            LayerWeights::Dense(l) => l.run_into(x, out, k),
+            LayerWeights::Packed(l) => l.run_into(x, out, s, k),
         }
     }
 
@@ -260,11 +264,14 @@ impl CompiledNorm {
     }
 
     /// Normalize `x` into `out` — the exact arithmetic of `Engine::norm`.
-    fn run_into(&self, x: &Matrix, out: &mut Matrix) {
-        out.resize_to(x.rows, x.cols);
-        let eps = 1e-5f32;
+    /// RMSNorm dispatches through the kernel backend (both tiers default
+    /// to the oracle arithmetic); LayerNorm has no backend override yet
+    /// and runs the reference loop inline.
+    fn run_into(&self, x: &Matrix, out: &mut Matrix, k: &dyn Kernels) {
         match &self.bias {
             Some(bias) => {
+                out.resize_to(x.rows, x.cols);
+                let eps = 1e-5f32;
                 for r in 0..x.rows {
                     let row = x.row(r);
                     let mean = row.iter().sum::<f32>() / row.len() as f32;
@@ -277,17 +284,7 @@ impl CompiledNorm {
                     }
                 }
             }
-            None => {
-                for r in 0..x.rows {
-                    let row = x.row(r);
-                    let ms = row.iter().map(|&v| v * v).sum::<f32>() / row.len() as f32;
-                    let inv = 1.0 / (ms + eps).sqrt();
-                    let orow = out.row_mut(r);
-                    for c in 0..row.len() {
-                        orow[c] = row[c] * inv * self.gain[c];
-                    }
-                }
-            }
+            None => k.rms_norm(x, &self.gain, out),
         }
     }
 }
@@ -356,6 +353,10 @@ pub struct CompiledModel {
     layers: Vec<CompiledLayer>,
     final_norm: CompiledNorm,
     act: ActPath,
+    /// The kernel backend every primitive dispatches through, selected by
+    /// [`EngineOpts::kernels`] at compile time. Shared by `Arc` so cloning
+    /// a plan shares one worker pool rather than spawning another.
+    kernels: Arc<dyn Kernels>,
 }
 
 /// Reusable activation arena: every buffer is sized for `max_seq` rows at
@@ -494,7 +495,7 @@ impl CompiledModel {
                             (&e.weight, e.lorc.as_ref(), b.as_ref().map(|b| ck.get(b)))
                         })
                         .collect();
-                    LayerWeights::Packed(PackedQLinear::pack(&qparts, threads))
+                    LayerWeights::Packed(PackedQLinear::pack(&qparts))
                 }
                 (WeightLayout::Packed { .. }, None) => {
                     panic!("packed weight layout needs the quantized-code sidecar")
@@ -547,7 +548,14 @@ impl CompiledModel {
             opts,
             layers,
             act,
+            kernels: crate::kernels::for_tier(opts.kernels, threads),
         }
+    }
+
+    /// The kernel backend this plan executes through (tier selected by
+    /// [`EngineOpts::kernels`]).
+    pub fn kernels(&self) -> &dyn Kernels {
+        self.kernels.as_ref()
     }
 
     /// Resident bytes of the transformer linears' weight payloads (the
@@ -703,6 +711,7 @@ impl CompiledModel {
         observe: &mut dyn FnMut(Site, &Matrix),
     ) -> &'s Matrix {
         let cfg = &self.config;
+        let k = self.kernels.as_ref();
         let rows = tokens.len();
         let d = cfg.d_model;
         match &kv {
@@ -755,13 +764,13 @@ impl CompiledModel {
 
         for (layer, cl) in self.layers.iter().enumerate() {
             // ---- attention ----
-            cl.ln1.run_into(&s.x, &mut s.nrm);
+            cl.ln1.run_into(&s.x, &mut s.nrm, k);
             observe(Site { layer, site: LinearSite::Qkv }, &s.nrm);
             self.actq(&mut s.nrm);
-            cl.qkv.run_into(&s.nrm, &mut s.qkv, &mut s.gemv);
+            cl.qkv.run_into(&s.nrm, &mut s.qkv, &mut s.gemv, k);
             match &mut kv {
                 KvMode::Off => {
-                    attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores);
+                    attention_into(cfg, &s.qkv, &mut s.ctx, &mut s.scores, k);
                 }
                 KvMode::Seq(cache) => {
                     // stage the new K/V rows, then attend each new position
@@ -782,6 +791,7 @@ impl CompiledModel {
                             base + t,
                             s.ctx.row_mut(t),
                             &mut s.scores,
+                            k,
                         );
                     }
                 }
@@ -800,30 +810,31 @@ impl CompiledModel {
                             pos,
                             s.ctx.row_mut(t),
                             &mut s.scores,
+                            k,
                         );
                     }
                 }
             }
             observe(Site { layer, site: LinearSite::OutProj }, &s.ctx);
             self.actq(&mut s.ctx);
-            cl.out_proj.run_into(&s.ctx, &mut s.proj, &mut s.gemv);
+            cl.out_proj.run_into(&s.ctx, &mut s.proj, &mut s.gemv, k);
             s.x.add_assign(&s.proj);
             // ---- mlp ----
-            cl.ln2.run_into(&s.x, &mut s.nrm);
+            cl.ln2.run_into(&s.x, &mut s.nrm, k);
             observe(Site { layer, site: LinearSite::Fc1 }, &s.nrm);
             self.actq(&mut s.nrm);
             match &cl.mlp {
                 CompiledMlp::Relu { fc1, fc2 } => {
-                    fc1.run_into(&s.nrm, &mut s.hidden, &mut s.gemv);
+                    fc1.run_into(&s.nrm, &mut s.hidden, &mut s.gemv, k);
                     for v in s.hidden.data.iter_mut() {
                         *v = v.max(0.0); // relu
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.hidden);
                     self.actq(&mut s.hidden);
-                    fc2.run_into(&s.hidden, &mut s.proj, &mut s.gemv);
+                    fc2.run_into(&s.hidden, &mut s.proj, &mut s.gemv, k);
                 }
                 CompiledMlp::GatedSilu { gate_up, down } => {
-                    gate_up.run_into(&s.nrm, &mut s.hidden, &mut s.gemv); // [rows, 2ff]
+                    gate_up.run_into(&s.nrm, &mut s.hidden, &mut s.gemv, k); // [rows, 2ff]
                     let ff = cfg.d_ff;
                     s.act2.resize_to(rows, ff);
                     for r in 0..rows {
@@ -838,7 +849,7 @@ impl CompiledModel {
                     }
                     observe(Site { layer, site: LinearSite::Fc2 }, &s.act2);
                     self.actq(&mut s.act2);
-                    down.run_into(&s.act2, &mut s.proj, &mut s.gemv);
+                    down.run_into(&s.act2, &mut s.proj, &mut s.gemv, k);
                 }
             }
             s.x.add_assign(&s.proj);
@@ -855,7 +866,7 @@ impl CompiledModel {
             }
         }
 
-        self.final_norm.run_into(&s.x, &mut s.nrm);
+        self.final_norm.run_into(&s.x, &mut s.nrm, k);
         // tied LM head: logits = x @ embedᵀ — the embed matrix is already in
         // the `[n, k]` layout the bt kernel wants, no prepack needed.
         s.logits.resize_to(rows, cfg.vocab_size);
@@ -918,7 +929,13 @@ pub fn logits_nll(logits: &Matrix, window: &[u16]) -> f64 {
 /// Multi-head causal self-attention over the fused q|k|v buffer `[seq, 3d]`
 /// (q at column 0, k at `d`, v at `2d`), writing `[seq, d]` into `ctx`.
 /// The exact arithmetic of `Engine::attention`.
-fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mut [f32]) {
+fn attention_into(
+    cfg: &ModelConfig,
+    qkv: &Matrix,
+    ctx: &mut Matrix,
+    scores: &mut [f32],
+    k: &dyn Kernels,
+) {
     let seq = qkv.rows;
     let d = cfg.d_model;
     let h = cfg.n_heads;
@@ -931,7 +948,6 @@ fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mu
         for i in 0..seq {
             let qrow = &qkv.row(i)[off..off + dh];
             // scores over j <= i
-            let mut mx = f32::NEG_INFINITY;
             for (j, sc) in scores.iter_mut().enumerate().take(i + 1) {
                 let krow = &qkv.row(j)[d + off..d + off + dh];
                 let mut dot = 0.0f32;
@@ -939,20 +955,17 @@ fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mu
                     dot += qrow[t] * krow[t];
                 }
                 *sc = dot * scale;
-                mx = mx.max(*sc);
             }
-            let mut denom = 0.0f32;
-            for sc in scores.iter_mut().take(i + 1) {
-                *sc = (*sc - mx).exp();
-                denom += *sc;
-            }
-            let inv = 1.0 / denom;
+            // The backend's softmax replicates the original inline
+            // max/exp/normalize operation order, so extracting it keeps
+            // the attention weights bit-identical (the normalized weight
+            // `p` below equals the old `exp · inv` product exactly).
+            k.softmax(&mut scores[..i + 1]);
             let crow = &mut ctx.row_mut(i)[off..off + dh];
             for (j, &p) in scores.iter().enumerate().take(i + 1) {
-                let w = p * inv;
                 let vrow = &qkv.row(j)[2 * d + off..2 * d + off + dh];
                 for t in 0..dh {
-                    crow[t] += w * vrow[t];
+                    crow[t] += p * vrow[t];
                 }
             }
         }
@@ -965,6 +978,7 @@ fn attention_into(cfg: &ModelConfig, qkv: &Matrix, ctx: &mut Matrix, scores: &mu
 /// [`attention_into`] with the K/V loads redirected at the cache — the same
 /// dot/softmax/weighted-sum operations in the same order, which is what
 /// makes cached decode bit-identical to full recompute (exact cache).
+#[allow(clippy::too_many_arguments)]
 fn attend_cached_row(
     cfg: &ModelConfig,
     qrow: &[f32],
@@ -973,6 +987,7 @@ fn attend_cached_row(
     pos: usize,
     crow: &mut [f32],
     scores: &mut [f32],
+    k: &dyn Kernels,
 ) {
     let dh = cfg.head_dim();
     let scale = 1.0 / (dh as f32).sqrt();
@@ -980,7 +995,6 @@ fn attend_cached_row(
     for head in 0..cfg.n_heads {
         let off = head * dh;
         let q = &qrow[off..off + dh];
-        let mut mx = f32::NEG_INFINITY;
         for (j, sc) in scores.iter_mut().enumerate() {
             let krow = &kc.row(j)[off..off + dh];
             let mut dot = 0.0f32;
@@ -988,20 +1002,14 @@ fn attend_cached_row(
                 dot += q[t] * krow[t];
             }
             *sc = dot * scale;
-            mx = mx.max(*sc);
         }
-        let mut denom = 0.0f32;
-        for sc in scores.iter_mut() {
-            *sc = (*sc - mx).exp();
-            denom += *sc;
-        }
-        let inv = 1.0 / denom;
+        // Same bit-preserving softmax extraction as `attention_into`.
+        k.softmax(scores);
         let c = &mut crow[off..off + dh];
         for (j, &p) in scores.iter().enumerate() {
-            let w = p * inv;
             let vrow = &vc.row(j)[off..off + dh];
             for t in 0..dh {
-                c[t] += w * vrow[t];
+                c[t] += p * vrow[t];
             }
         }
     }
@@ -1071,7 +1079,7 @@ mod tests {
         let x = Matrix::randn(9, 10, 1.0, &mut rng);
         let p = PackedLinear::pack(&[(&w1, None), (&w2, None)]);
         let mut out = Matrix::zeros(0, 0);
-        p.run_into(&x, &mut out);
+        p.run_into(&x, &mut out, &crate::kernels::OracleKernels::new(1));
         let y1 = x.matmul(&w1.transpose());
         let y2 = x.matmul(&w2.transpose());
         for r in 0..9 {

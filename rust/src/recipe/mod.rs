@@ -35,7 +35,7 @@ use std::fmt;
 use std::time::Duration;
 
 use crate::cli::Args;
-use crate::engine::{EngineOpts, WeightLayout};
+use crate::engine::{EngineOpts, KernelTier, WeightLayout};
 use crate::formats::{FpFormat, NumericFormat};
 use crate::gptq::GptqConfig;
 use crate::lorc::LorcConfig;
@@ -173,6 +173,10 @@ pub struct QuantRecipe {
     /// (0 = none). Checked at admission, during prefill, and between
     /// decode steps.
     pub deadline_ms: u64,
+    /// Kernel backend tier of the compiled plan: the bit-exact scalar
+    /// `oracle` (default) or the tolerance-gated `fast` tier
+    /// (8-lane GEMV + persistent decode worker pool).
+    pub kernel_tier: KernelTier,
 }
 
 /// Chainable construction for [`QuantRecipe`]; `build()` validates.
@@ -199,6 +203,7 @@ impl RecipeBuilder {
                 max_wait_ms: 2,
                 queue_depth: crate::coordinator::DEFAULT_QUEUE_DEPTH,
                 deadline_ms: 0,
+                kernel_tier: KernelTier::Oracle,
             },
         }
     }
@@ -273,6 +278,12 @@ impl RecipeBuilder {
     /// Default per-request deadline in ms (0 = none).
     pub fn deadline_ms(mut self, ms: u64) -> Self {
         self.r.deadline_ms = ms;
+        self
+    }
+
+    /// Kernel backend tier (`oracle` default, `fast`).
+    pub fn kernels(mut self, tier: KernelTier) -> Self {
+        self.r.kernel_tier = tier;
         self
     }
 
@@ -357,6 +368,7 @@ impl QuantRecipe {
     pub fn engine_opts(&self) -> EngineOpts {
         let mut opts = EngineOpts::with_act(self.scheme.activation);
         opts.weights = self.weights;
+        opts.kernels = self.kernel_tier;
         opts
     }
 
@@ -419,6 +431,9 @@ impl QuantRecipe {
         if let Some(f) = self.kv_quant {
             s.push_str(&format!("  kv {}", f.name().to_ascii_lowercase()));
         }
+        if self.kernel_tier.is_fast() {
+            s.push_str("  kernels=fast");
+        }
         s
     }
 
@@ -479,6 +494,7 @@ impl QuantRecipe {
             ("lorc".to_string(), lorc),
             ("layout".to_string(), Json::Str(layout.to_string())),
             ("gemv_threads".to_string(), Json::Num(self.weights.threads() as f64)),
+            ("kernels".to_string(), Json::Str(self.kernel_tier.name().to_string())),
             ("kv_cache".to_string(), kv),
             ("max_batch".to_string(), Json::Num(self.max_batch as f64)),
             ("max_wait_ms".to_string(), Json::Num(self.max_wait_ms as f64)),
@@ -491,7 +507,7 @@ impl QuantRecipe {
     /// typo in a reproducibility artifact must not silently change the
     /// run); absent keys take the [`RecipeBuilder`] defaults.
     pub fn from_json(text: &str) -> Result<QuantRecipe, RecipeError> {
-        const KEYS: [&str; 17] = [
+        const KEYS: [&str; 18] = [
             "name",
             "weight",
             "act",
@@ -504,6 +520,7 @@ impl QuantRecipe {
             "lorc",
             "layout",
             "gemv_threads",
+            "kernels",
             "kv_cache",
             "max_batch",
             "max_wait_ms",
@@ -612,6 +629,11 @@ impl QuantRecipe {
             Some(other) => {
                 return Err(bad(format!("layout: expected dense|packed, got {other:?}")))
             }
+        }
+        if let Some(tier) = str_field("kernels")? {
+            let parsed = KernelTier::parse(&tier)
+                .ok_or_else(|| bad(format!("kernels: expected oracle|fast, got {tier:?}")))?;
+            b = b.kernels(parsed);
         }
         match doc.get("kv_cache") {
             None => {}
@@ -779,6 +801,15 @@ impl QuantRecipe {
                     None => return Err(format!("--kv-cache: not an FP format: {s}")),
                 },
             };
+        }
+        // Kernel tier: a valueless `--kernels` must not silently keep the
+        // base tier (same policy as --recipe / --gemv-threads).
+        if args.flag("kernels") && args.get("kernels").is_none() {
+            return Err("--kernels needs a value (oracle or fast)".to_string());
+        }
+        if let Some(tier) = args.get("kernels") {
+            r.kernel_tier = KernelTier::parse(&tier)
+                .ok_or(format!("--kernels: expected oracle or fast, got {tier}"))?;
         }
         r.max_batch = args.get_usize("max-batch", r.max_batch)?;
         r.max_wait_ms = args.get_usize("max-wait-ms", r.max_wait_ms as usize)? as u64;
@@ -1036,6 +1067,35 @@ mod tests {
         assert_eq!(QuantRecipe::from_args(&a, "w16").unwrap().kv_quant, None);
         // packed + W16 is the typed rejection, end to end through flags
         assert!(QuantRecipe::from_args(&argv(&["--packed"]), "w16").is_err());
+    }
+
+    #[test]
+    fn kernels_knob_flags_json_and_views() {
+        // default: every construction path lands on the oracle tier
+        let base = QuantRecipe::preset("w4a8-fp").unwrap();
+        assert_eq!(base.kernel_tier, KernelTier::Oracle);
+        assert_eq!(base.engine_opts().kernels, KernelTier::Oracle);
+        assert!(!base.summary().contains("kernels"));
+        // --kernels fast threads through the recipe into the engine opts
+        let r = QuantRecipe::from_args(
+            &argv(&["--scheme", "w4a8-fp-fp", "--packed", "--kernels", "fast"]),
+            "w16",
+        )
+        .unwrap();
+        assert_eq!(r.kernel_tier, KernelTier::Fast);
+        assert_eq!(r.engine_opts().kernels, KernelTier::Fast);
+        assert!(r.summary().contains("kernels=fast"));
+        // the tier survives a JSON round trip field-for-field
+        let back = QuantRecipe::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert_eq!(back.kernel_tier, KernelTier::Fast);
+        // bad values and a valueless flag are rejected, not defaulted
+        assert!(QuantRecipe::from_args(&argv(&["--kernels", "turbo"]), "w16").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--kernels"]), "w16").is_err());
+        assert!(QuantRecipe::from_json(r#"{"kernels":"turbo"}"#).is_err());
+        // explicit oracle is accepted and is the same as the default
+        let r = QuantRecipe::from_args(&argv(&["--kernels", "oracle"]), "w16").unwrap();
+        assert_eq!(r.kernel_tier, KernelTier::Oracle);
     }
 
     #[test]

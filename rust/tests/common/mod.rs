@@ -1,0 +1,191 @@
+//! Shared fixtures for the integration suites: the toy model configs, the
+//! seeded calibration streams, the bit-identity assertion, and the seeded
+//! adversarial GEMV-input generator used by both `kernel_tolerance.rs`
+//! (differential fast-vs-oracle gate) and `packed_equivalence.rs`
+//! (bit-identity gate) — one generator, two contracts, so the fast tier is
+//! tested on exactly the inputs the oracle's equivalence suite considers
+//! hard.
+#![allow(dead_code)]
+
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::lorc::{LorcConfig, LorcFactors, PackedLorc};
+use zeroquant_fp::model::{Arch, ModelConfig};
+use zeroquant_fp::quant::{
+    quantize_weight_rtn, PackedWeight, ScaleConstraint, WeightQuantConfig,
+};
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::Matrix;
+
+/// Toy transformer config shared by the equivalence and tolerance suites.
+/// `max_seq` is a parameter because the greedy-parity checks need room for
+/// long generations while the equivalence grids stay tiny and fast.
+pub fn model_cfg(
+    arch: Arch,
+    name: &str,
+    d: usize,
+    heads: usize,
+    ff: usize,
+    max_seq: usize,
+) -> ModelConfig {
+    ModelConfig {
+        name: format!("{name}-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: d,
+        n_heads: heads,
+        n_layers: 2,
+        d_ff: ff,
+        max_seq,
+    }
+}
+
+/// Seeded calibration token streams (`n` sequences of `len` tokens).
+pub fn calib(n: usize, len: usize, vocab: usize) -> Vec<Vec<u16>> {
+    let mut rng = Rng::seeded(0xCA11);
+    (0..n).map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect()).collect()
+}
+
+/// Element-wise `to_bits` equality — the bit-identity contract's assertion.
+pub fn assert_bit_identical(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} a={x} b={y}");
+    }
+}
+
+/// One generated fused-GEMV input: a batch of activations against a packed
+/// weight (optionally LoRC-compensated), plus the label that names the
+/// adversarial property being exercised.
+pub struct GemvCase {
+    pub name: String,
+    pub x: Matrix,
+    pub w: PackedWeight,
+    pub lorc: Option<PackedLorc>,
+}
+
+/// The dense effective matrix a packed GEMV is specified against: the
+/// decoded weights with the LoRC error rows folded in the fold's exact
+/// accumulation order (`dequant_row + E₁E₂ row`, elementwise).
+pub fn effective_dense(w: &PackedWeight, lorc: Option<&PackedLorc>) -> Matrix {
+    let mut eff = w.dequantize();
+    if let Some(l) = lorc {
+        let mut e2 = vec![0.0; l.e2_elems()];
+        l.decode_e2_into(&mut e2);
+        let mut err = vec![0.0; w.cols];
+        for j in 0..w.rows {
+            l.err_row_into(j, &e2, &mut err);
+            for (d, e) in eff.data[j * w.cols..(j + 1) * w.cols].iter_mut().zip(&err) {
+                *d += e;
+            }
+        }
+    }
+    eff
+}
+
+fn quantize(wm: &Matrix, group: usize) -> PackedWeight {
+    let cfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1)
+        .with_group_size(group)
+        .with_constraint(ScaleConstraint::None);
+    PackedWeight::from_quantized(&quantize_weight_rtn(wm, &cfg))
+}
+
+fn lorc_for(wm: &Matrix, group: usize, rank: usize) -> PackedLorc {
+    let cfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1)
+        .with_group_size(group)
+        .with_constraint(ScaleConstraint::None);
+    let q = quantize_weight_rtn(wm, &cfg);
+    let f = LorcFactors::compute(
+        wm,
+        &q.dequantize(),
+        &LorcConfig { rank, factor_format: NumericFormat::FP8_E4M3 },
+    )
+    .expect("lorc factors on a toy matrix");
+    PackedLorc::pack(&[(wm.rows, Some(&f))])
+}
+
+/// Seeded generator of adversarial fused-GEMV inputs. Properties covered:
+///
+/// * shape grid including `cols % group != 0`, `cols % 8 != 0` (the fast
+///   tier's lane width) and single-row batches;
+/// * all-negative weight rows (sign-carrying codes end to end);
+/// * adversarial **group scales**, mutated post-pack on the multiply
+///   dequant plan: exact zeros (dead groups), subnormals (underflow on
+///   dequant), and non-finite scales (`inf`/`NaN` groups must poison both
+///   tiers identically rather than diverge);
+/// * a LoRC-compensated case (error-row fold on top of decode).
+///
+/// Both suites iterate this one list: `packed_equivalence.rs` asserts the
+/// oracle GEMV stays bit-identical to the dense reference on every case,
+/// `kernel_tolerance.rs` asserts the fast tier stays inside the ULP gate
+/// on the same cases.
+pub fn gemv_cases(seed: u64) -> Vec<GemvCase> {
+    let mut rng = Rng::seeded(seed);
+    let mut cases = Vec::new();
+    let mut push = |name: &str, x: Matrix, w: PackedWeight, lorc: Option<PackedLorc>| {
+        cases.push(GemvCase { name: name.to_string(), x, w, lorc });
+    };
+
+    // shape grid: (batch rows, weight out-rows, in-cols, group)
+    for &(b, rows, cols, group) in &[
+        (1usize, 8usize, 32usize, 8usize),
+        (3, 7, 29, 8),   // cols % 8 != 0 and cols % group != 0
+        (5, 16, 33, 16), // odd cols against a wider group
+        (2, 5, 8, 4),    // tiny: fewer rows than a typical worker count
+        (4, 24, 64, 32),
+    ] {
+        let wm = Matrix::randn(rows, cols, 0.05, &mut rng);
+        let x = Matrix::randn(b, cols, 0.5, &mut rng);
+        push(&format!("randn b{b} {rows}x{cols} g{group}"), x, quantize(&wm, group), None);
+    }
+
+    // all-negative weight rows
+    {
+        let mut wm = Matrix::randn(9, 24, 0.05, &mut rng);
+        for v in wm.data.iter_mut() {
+            *v = -v.abs() - 1e-3;
+        }
+        let x = Matrix::randn(3, 24, 0.5, &mut rng);
+        push("all-negative rows", x, quantize(&wm, 8), None);
+    }
+
+    // adversarial scales, mutated post-pack (unconstrained scales select
+    // the multiply dequant plan, which reads `scales` at decode time)
+    {
+        let wm = Matrix::randn(10, 32, 0.05, &mut rng);
+        let x = Matrix::randn(3, 32, 0.5, &mut rng);
+
+        let mut w = quantize(&wm, 8);
+        assert!(
+            !w.uses_shift_dequant(),
+            "unconstrained scales must select the multiply plan"
+        );
+        for (g, s) in w.scales.iter_mut().enumerate() {
+            if g % 3 == 0 {
+                *s = 0.0; // dead group
+            } else if g % 3 == 1 {
+                *s = f32::MIN_POSITIVE / 4.0; // subnormal scale
+            }
+        }
+        push("zero + subnormal scales", x.clone(), w, None);
+
+        let mut w = quantize(&wm, 8);
+        for (g, s) in w.scales.iter_mut().enumerate() {
+            if g % 4 == 0 {
+                *s = f32::INFINITY;
+            } else if g % 4 == 1 {
+                *s = f32::NAN;
+            }
+        }
+        push("non-finite scales", x, w, None);
+    }
+
+    // LoRC fold riding on the decode
+    {
+        let wm = Matrix::randn(12, 32, 0.05, &mut rng);
+        let x = Matrix::randn(3, 32, 0.5, &mut rng);
+        let l = lorc_for(&wm, 8, 4);
+        push("lorc fold", x, quantize(&wm, 8), Some(l));
+    }
+
+    cases
+}

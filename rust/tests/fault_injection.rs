@@ -17,11 +17,13 @@ use std::time::{Duration, Instant};
 
 use zeroquant_fp::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, FaultPayload, FaultPlan, Generated,
-    ScoreBackend, ServeError, ServeReport,
+    ScoreBackend, ServeError, ServeReport, ServingStack,
 };
-use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::engine::{EngineOpts, KernelTier};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{argmax, CompiledModel};
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
 
 /// Silence the default panic printout for *injected* panics (they are
@@ -379,6 +381,79 @@ fn graceful_drain_finishes_inflight_and_rejects_queued() {
     assert!(report.drained, "the run ended via the shutdown signal");
     assert_eq!(report.rejected_shutdown, 1);
     assert_eq!(report.quarantined_caches, 0);
+}
+
+/// The chaos invariants with the **fast kernel tier and its persistent
+/// worker pool active** (`kernel_tier: fast`, packed layout, 2 pool
+/// workers): one seeded schedule panics inside prefill/decode layer walks
+/// while pooled GEMV shards are in flight. Every submission still gets
+/// exactly one typed response, the watchdog proves the loop (and the
+/// pool) never hangs on an unwound panic, quarantine stays bounded by the
+/// faults that actually unwound a walk, and survivors are bit-identical
+/// to the fast packed plan's own greedy reference.
+#[test]
+fn chaos_with_fast_tier_pool_stays_typed_and_quarantined() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .group_size(16)
+        .use_gptq(false)
+        .packed(2)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let calib: Vec<Vec<u16>> = (0..3).map(|i| prompt_for(i, 6)).collect();
+    let stack = ServingStack::build(&ck, &calib, &recipe).unwrap();
+    // survivors must match the fast packed plan (deterministic per tier),
+    // not the oracle — the tier is part of the serving contract under test
+    let reference = stack.compile();
+    let mut cfg =
+        recipe.coordinator_config(stack.checkpoint.clone(), Some(stack.sidecar.clone()));
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::ZERO };
+    cfg.faults = Some(FaultPlan::parse("prefill:p=0.3,decode:p=0.2").unwrap().with_seed(515));
+    let coord = Coordinator::new(cfg);
+
+    let mut handles = Vec::new();
+    for c in 0..3usize {
+        let client = coord.gen_client().unwrap();
+        handles.push(std::thread::spawn(move || {
+            (0..3)
+                .map(|i| {
+                    let p = prompt_for(c, i);
+                    (p.clone(), client.generate(p, 4))
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let report = run_within(coord, 30);
+
+    let mut responses = 0usize;
+    let mut degraded = 0usize;
+    for h in handles {
+        for (prompt, res) in h.join().unwrap() {
+            responses += 1;
+            match res {
+                Ok(Generated { tokens, .. }) => assert_eq!(
+                    tokens,
+                    greedy_reference(&reference, &prompt, 4),
+                    "survivors must match the fast packed plan bit for bit"
+                ),
+                Err(ServeError::Overloaded)
+                | Err(ServeError::Faulted(_))
+                | Err(ServeError::ShuttingDown) => degraded += 1,
+                Err(other) => panic!("untyped failure with the pool active: {other:?}"),
+            }
+        }
+    }
+    assert_eq!(responses, 9, "exactly one typed response per submission");
+    assert_eq!(report.requests + report.shed_overloaded, 9, "the books must balance");
+    assert!(
+        report.quarantined_caches <= report.faulted,
+        "quarantine only the caches a panic actually touched ({} quarantined, {} faulted)",
+        report.quarantined_caches,
+        report.faulted
+    );
+    assert!(degraded > 0, "the seeded schedule must trip at least one fault");
 }
 
 /// Bounded admission end to end: a depth-1 queue sheds every submission

@@ -1,0 +1,350 @@
+//! The fast tier's admission gate — the differential tolerance contract
+//! between [`FastKernels`] and the bit-exact [`OracleKernels`] reference:
+//!
+//! 1. **Per-element ULP bound at GEMV scale.** On every adversarial case
+//!    of the shared generator (`tests/common`: zero/subnormal/non-finite
+//!    group scales, all-negative rows, lane-unfriendly shapes, LoRC fold),
+//!    each fast output element is within `MAX_ULP` ULPs of the oracle —
+//!    or, where cancellation makes result-relative ULPs meaningless,
+//!    within `MAX_ULP` ULPs *at the problem's scale* `‖x_row‖·‖ŵ_row‖`.
+//!    Non-finite elements must poison identically, not approximately.
+//! 2. **Model-level drift bounds.** Through full packed plans (both archs,
+//!    odd dims, LoRC), logits drift stays inside a relative band and the
+//!    corpus NLL moves by ≤ 1e-4 relative — quantization claims measured
+//!    under the oracle transfer to the fast tier.
+//! 3. **Greedy-decode token parity.** ≥ 64 KV-cached greedy tokens are
+//!    identical between tiers — serving output is unchanged, not merely
+//!    close.
+//! 4. **Pool determinism.** The fast tier is bit-identical to itself
+//!    across worker counts {1, 2, 4}, at kernel scale and through the
+//!    compiled plan — the persistent pool shards work without touching
+//!    the arithmetic.
+//! 5. **Dense layout bit-identity.** On the dense layout the tiers share
+//!    the reference axpy kernel, so fast-vs-oracle is bit-identical there.
+
+mod common;
+
+use common::{assert_bit_identical, calib, model_cfg};
+use zeroquant_fp::engine::KernelTier;
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::kernels::{FastKernels, Kernels, OracleKernels};
+use zeroquant_fp::lorc::LorcConfig;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::CompiledModel;
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::QuantRecipe;
+use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::packed_matmul::GemvScratch;
+use zeroquant_fp::tensor::Matrix;
+
+/// The contract's ULP budget per GEMV element (either arm of the gate).
+const MAX_ULP: i64 = 4;
+/// The contract's relative NLL drift bound.
+const MAX_NLL_DRIFT: f64 = 1e-4;
+/// Greedy generations must match for at least this many tokens.
+const PARITY_TOKENS: usize = 64;
+
+// ---- the hybrid ULP gate ------------------------------------------------
+
+/// Map a finite f32 onto the integer ULP line (negatives mirrored below
+/// zero, so `ulp_index(a) - ulp_index(b)` counts representable values
+/// between `a` and `b`; ±0 coincide).
+fn ulp_index(x: f32) -> i64 {
+    let b = x.to_bits();
+    if b & 0x8000_0000 != 0 {
+        -((b & 0x7FFF_FFFF) as i64)
+    } else {
+        b as i64
+    }
+}
+
+fn ulp_diff(a: f32, b: f32) -> i64 {
+    (ulp_index(a) - ulp_index(b)).abs()
+}
+
+/// The spacing of representable values at magnitude `scale`.
+fn ulp_at(scale: f32) -> f32 {
+    let a = scale.abs().max(f32::MIN_POSITIVE);
+    f32::from_bits(a.to_bits() + 1) - a
+}
+
+/// The tolerance contract for one element: equal-kind non-finites pass,
+/// finite values pass within `MAX_ULP` ULPs of each other **or** within
+/// `MAX_ULP` ULPs at the problem's scale (the summation-error bound when
+/// cancellation shrinks the result far below the terms).
+fn assert_within_gate(a: f32, b: f32, scale: f32, what: &str) {
+    if a.is_nan() && b.is_nan() {
+        return;
+    }
+    if a.is_infinite() || b.is_infinite() || a.is_nan() || b.is_nan() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: non-finite values must poison identically (oracle={a} fast={b})"
+        );
+        return;
+    }
+    let ud = ulp_diff(a, b);
+    if ud <= MAX_ULP {
+        return;
+    }
+    let tol = MAX_ULP as f32 * ulp_at(scale);
+    assert!(
+        (a - b).abs() <= tol,
+        "{what}: oracle={a} fast={b} ulp_diff={ud} |Δ|={} > {tol} at scale {scale}",
+        (a - b).abs()
+    );
+}
+
+fn l2(row: &[f32]) -> f32 {
+    row.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt() as f32
+}
+
+// ---- kernel-scale gates -------------------------------------------------
+
+fn run_tier(k: &dyn Kernels, case: &common::GemvCase) -> Matrix {
+    let e2 = case.lorc.as_ref().map_or(0, |l| l.e2_elems());
+    let mut out = Matrix::zeros(case.x.rows, case.w.rows);
+    let mut s = GemvScratch::sized(case.w.cols, e2);
+    k.packed_gemv(&case.x, &case.w, case.lorc.as_ref(), &mut out, &mut s);
+    out
+}
+
+#[test]
+fn fast_gemv_within_ulp_gate_on_adversarial_cases() {
+    let oracle = OracleKernels::new(1);
+    let fast = FastKernels::new(1);
+    for case in common::gemv_cases(0xFA57) {
+        let want = run_tier(&oracle, &case);
+        let got = run_tier(&fast, &case);
+        // the gate's scale: ‖x_row‖·‖ŵ_row‖ over the effective (decoded,
+        // LoRC-folded) weight — an upper bound on the dot's term mass
+        let eff = common::effective_dense(&case.w, case.lorc.as_ref());
+        let xn: Vec<f32> = (0..case.x.rows).map(|r| l2(case.x.row(r))).collect();
+        let wn: Vec<f32> = (0..eff.rows).map(|j| l2(eff.row(j))).collect();
+        for r in 0..want.rows {
+            for j in 0..want.cols {
+                assert_within_gate(
+                    want.data[r * want.cols + j],
+                    got.data[r * want.cols + j],
+                    xn[r] * wn[j],
+                    &format!("case '{}' element [{r},{j}]", case.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fast_gemv_bit_identical_across_pool_sizes() {
+    for case in common::gemv_cases(0xD00F) {
+        let solo = run_tier(&FastKernels::new(1), &case);
+        for threads in [2usize, 4] {
+            let pooled = run_tier(&FastKernels::new(threads), &case);
+            assert_bit_identical(
+                &solo,
+                &pooled,
+                &format!("case '{}' threads={threads}", case.name),
+            );
+        }
+    }
+}
+
+// ---- compiled-plan gates ------------------------------------------------
+
+fn recipe(tier: KernelTier, threads: usize, lorc: bool) -> QuantRecipe {
+    let mut b = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .group_size(16)
+        .use_gptq(false)
+        .packed(threads)
+        .kernels(tier);
+    if lorc {
+        b = b.lorc(LorcConfig { rank: 2, factor_format: NumericFormat::FP8_E4M3 });
+    }
+    b.build().unwrap()
+}
+
+/// Compile the oracle plan and its fast-tier twin over one quantization of
+/// `ck` (same stack, same sidecar bits — the tiers are the only delta).
+fn twins(ck: &Checkpoint, lorc: bool) -> (CompiledModel, CompiledModel) {
+    let stack = zeroquant_fp::coordinator::ServingStack::build(
+        ck,
+        &calib(3, 8, ck.config.vocab_size),
+        &recipe(KernelTier::Oracle, 1, lorc),
+    )
+    .unwrap();
+    let oracle = stack.compile();
+    let fast = stack.with_recipe(&recipe(KernelTier::Fast, 1, lorc)).unwrap().compile();
+    (oracle, fast)
+}
+
+/// Mean NLL of `tokens` under the model (f64 log-sum-exp).
+fn nll(m: &CompiledModel, tokens: &[u16]) -> f64 {
+    let mut s = m.scratch();
+    let logits = m.forward(tokens, &mut s);
+    let mut total = 0.0f64;
+    for t in 0..tokens.len() - 1 {
+        let row = &logits.data[t * logits.cols..(t + 1) * logits.cols];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let lse = mx + row.iter().map(|&v| (v as f64 - mx).exp()).sum::<f64>().ln();
+        total += lse - row[tokens[t + 1] as usize] as f64;
+    }
+    total / (tokens.len() - 1) as f64
+}
+
+fn tolerance_shapes() -> Vec<(ModelConfig, bool, &'static str)> {
+    let mut shapes = Vec::new();
+    for arch in [Arch::Opt, Arch::Llama] {
+        // even dims, odd dims (trailing nibble + 8-lane tail), LoRC fold
+        shapes.push((model_cfg(arch, "tol-even", 24, 3, 48, 12), false, "even"));
+        shapes.push((model_cfg(arch, "tol-odd", 25, 5, 49, 12), false, "odd"));
+        shapes.push((model_cfg(arch, "tol-lorc", 24, 3, 48, 12), true, "lorc"));
+    }
+    shapes
+}
+
+#[test]
+fn fast_plan_keeps_logits_and_nll_within_drift_bounds() {
+    for (cfg, lorc, tag) in tolerance_shapes() {
+        let mut rng = Rng::seeded(0x701 + cfg.arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let (oracle, fast) = twins(&ck, lorc);
+        let mut os = oracle.scratch();
+        let mut fs = fast.scratch();
+        let what = format!("{:?} {tag}", cfg.arch);
+        for seq in [1usize, 5, cfg.max_seq] {
+            let tokens: Vec<u16> =
+                (0..seq).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+            let want = oracle.forward(&tokens, &mut os).clone();
+            let got = fast.forward(&tokens, &mut fs);
+            assert_eq!((want.rows, want.cols), (got.rows, got.cols), "{what}: shape");
+            // logits drift: relative to each row's dominant magnitude —
+            // per-linear ULP noise composed over layers, still tiny
+            for r in 0..want.rows {
+                let row = &want.data[r * want.cols..(r + 1) * want.cols];
+                let scale = row.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-3);
+                for c in 0..want.cols {
+                    let (a, b) = (row[c], got.data[r * got.cols + c]);
+                    assert!(
+                        (a - b).abs() <= 1e-4 * scale,
+                        "{what} seq={seq} logit [{r},{c}]: oracle={a} fast={b} scale={scale}"
+                    );
+                }
+            }
+        }
+        // NLL drift over held-out streams
+        for (i, tokens) in calib(4, 10, cfg.vocab_size).iter().enumerate() {
+            let base = nll(&oracle, tokens);
+            let drift = (nll(&fast, tokens) - base).abs();
+            assert!(
+                drift <= MAX_NLL_DRIFT * base.abs().max(1.0),
+                "{what} stream {i}: NLL drift {drift} vs base {base}"
+            );
+        }
+    }
+}
+
+fn argmax_last(m: &Matrix) -> u16 {
+    let row = &m.data[(m.rows - 1) * m.cols..];
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in row.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best as u16
+}
+
+/// KV-cached greedy generation: prefill the prompt, then decode `steps`
+/// tokens taking the argmax at every step.
+fn greedy(m: &CompiledModel, prompt: &[u16], steps: usize) -> Vec<u16> {
+    let mut s = m.scratch();
+    let mut cache = m.kv_cache();
+    let mut out = Vec::with_capacity(steps);
+    let mut next = argmax_last(m.prefill(prompt, &mut cache, &mut s));
+    for _ in 0..steps {
+        out.push(next);
+        next = argmax_last(m.decode_step(next, &mut cache, &mut s));
+    }
+    out
+}
+
+#[test]
+fn fast_plan_greedy_decode_token_parity() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        // max_seq 80: an 8-token prompt plus 64 decode steps with headroom
+        let cfg = model_cfg(arch, "tol-gen", 24, 3, 48, 80);
+        let mut rng = Rng::seeded(0x6E2E + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let (oracle, fast) = twins(&ck, false);
+        let prompt: Vec<u16> = (0..8).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+        let want = greedy(&oracle, &prompt, PARITY_TOKENS);
+        let got = greedy(&fast, &prompt, PARITY_TOKENS);
+        assert_eq!(want.len(), PARITY_TOKENS);
+        assert_eq!(
+            want, got,
+            "{arch:?}: greedy generations must be token-identical across tiers"
+        );
+    }
+}
+
+#[test]
+fn fast_plan_bit_identical_across_pool_sizes() {
+    let cfg = model_cfg(Arch::Llama, "tol-pool", 24, 3, 48, 12);
+    let mut rng = Rng::seeded(0xB001);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let stack = zeroquant_fp::coordinator::ServingStack::build(
+        &ck,
+        &calib(3, 8, cfg.vocab_size),
+        &recipe(KernelTier::Fast, 1, false),
+    )
+    .unwrap();
+    let solo = stack.compile();
+    let tokens: Vec<u16> = (0..10).map(|i| (i * 7 % cfg.vocab_size) as u16).collect();
+    let want = solo.forward_alloc(&tokens);
+    for threads in [2usize, 4] {
+        let pooled =
+            stack.with_recipe(&recipe(KernelTier::Fast, threads, false)).unwrap().compile();
+        assert_bit_identical(
+            &want,
+            &pooled.forward_alloc(&tokens),
+            &format!("fast plan threads={threads}"),
+        );
+    }
+}
+
+#[test]
+fn fast_tier_is_bit_identical_on_the_dense_layout() {
+    // On the dense layout both tiers share the reference axpy kernel and
+    // the default norm/softmax methods — the differential gate tightens to
+    // full bit-identity.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = model_cfg(arch, "tol-dense", 24, 3, 48, 12);
+        let mut rng = Rng::seeded(0xDE45 + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let mk = |tier: KernelTier| {
+            QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+                .group_size(16)
+                .use_gptq(false)
+                .kernels(tier)
+                .build()
+                .unwrap()
+        };
+        let stack = zeroquant_fp::coordinator::ServingStack::build(
+            &ck,
+            &calib(3, 8, cfg.vocab_size),
+            &mk(KernelTier::Oracle),
+        )
+        .unwrap();
+        let oracle = stack.compile();
+        let fast = stack.with_recipe(&mk(KernelTier::Fast)).unwrap().compile();
+        let tokens: Vec<u16> = (0..cfg.max_seq).map(|i| (i * 5 % 48) as u16).collect();
+        assert_bit_identical(
+            &oracle.forward_alloc(&tokens),
+            &fast.forward_alloc(&tokens),
+            &format!("{arch:?} dense layout"),
+        );
+    }
+}

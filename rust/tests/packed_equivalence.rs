@@ -10,41 +10,27 @@
 //! 2. The packed plan's resident linear-weight bytes are ≤ 1/6 of the
 //!    dense f32 plan for W4 — the memory claim `packed_bytes()` used to
 //!    only account for.
+//! 3. At kernel scale, the oracle GEMV stays bit-identical to the dense
+//!    reference kernel on the shared **adversarial generator**'s cases
+//!    (`tests/common`): zero/subnormal/non-finite group scales,
+//!    all-negative rows, lane-unfriendly odd dims — the same inputs the
+//!    fast tier is tolerance-gated on in `tests/kernel_tolerance.rs`.
 
+mod common;
+
+use common::{assert_bit_identical, calib, model_cfg};
 use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::engine::{Engine, EngineOpts};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
 use zeroquant_fp::recipe::QuantRecipe;
 use zeroquant_fp::rng::Rng;
+use zeroquant_fp::tensor::matmul::matmul_into;
+use zeroquant_fp::tensor::packed_matmul::{packed_matmul_into, GemvScratch};
+use zeroquant_fp::tensor::Matrix;
 
 fn cfg(arch: Arch, name: &str, d: usize, heads: usize, ff: usize) -> ModelConfig {
-    ModelConfig {
-        name: format!("packed-{name}-{}", arch.name()),
-        arch,
-        vocab_size: 48,
-        d_model: d,
-        n_heads: heads,
-        n_layers: 2,
-        d_ff: ff,
-        max_seq: 12,
-    }
-}
-
-fn calib(n: usize, len: usize, vocab: usize) -> Vec<Vec<u16>> {
-    let mut rng = Rng::seeded(0xCA11);
-    (0..n).map(|_| (0..len).map(|_| rng.below(vocab) as u16).collect()).collect()
-}
-
-fn assert_bit_identical(
-    a: &zeroquant_fp::tensor::Matrix,
-    b: &zeroquant_fp::tensor::Matrix,
-    what: &str,
-) {
-    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
-    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
-        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} dense={x} packed={y}");
-    }
+    model_cfg(arch, &format!("packed-{name}"), d, heads, ff, 12)
 }
 
 /// Quantize `ck` under `scheme`/`constraint` (one packed recipe driven
@@ -121,6 +107,31 @@ fn packed_plan_bit_identical_with_odd_dims() {
         for scheme in ["w4a8-fp-fp", "w4a8-int-int"] {
             let what = format!("{arch:?} {scheme} odd-dims");
             check(&ck, scheme, ScaleConstraint::M1, false, &what);
+        }
+    }
+}
+
+#[test]
+fn oracle_gemv_bit_identical_to_dense_on_adversarial_cases() {
+    // The shared generator's cases (adversarial scales, all-negative rows,
+    // lane-unfriendly shapes, LoRC fold) put the hardest inputs through
+    // the oracle GEMV's bit-identity contract: fused decode-and-dot must
+    // equal `matmul_into` over the decoded (and LoRC-folded) effective
+    // matrix, bit for bit — non-finite groups must poison identically, not
+    // merely approximately.
+    for case in common::gemv_cases(0x6E40) {
+        let w = &case.w;
+        // dense reference: decode the effective matrix the contract names
+        let eff = common::effective_dense(w, case.lorc.as_ref());
+        let mut want = Matrix::zeros(case.x.rows, w.rows);
+        matmul_into(&case.x, &eff.transpose(), &mut want);
+
+        let e2_elems = case.lorc.as_ref().map_or(0, |l| l.e2_elems());
+        for threads in [1usize, 3] {
+            let mut got = Matrix::zeros(case.x.rows, w.rows);
+            let mut s = GemvScratch::sized(w.cols, e2_elems);
+            packed_matmul_into(&case.x, w, case.lorc.as_ref(), &mut got, &mut s, threads);
+            assert_bit_identical(&want, &got, &format!("{} threads={threads}", case.name));
         }
     }
 }
