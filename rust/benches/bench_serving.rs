@@ -419,6 +419,72 @@ fn main() {
         bench.note("overload degraded_requests", degraded as f64);
     }
 
+    // ---- mixed-length traffic: ring vs paged KV residency -----------------
+    // The paged pool's reason to exist: with rings every admitted sequence
+    // pins a full max_seq ring regardless of its actual length, so a mix of
+    // short and long prompts pays peak bytes proportional to slots; pages
+    // make the peak track live tokens. Three runs over identical traffic —
+    // ring, paged with the auto (ring-equivalent) budget, and paged with a
+    // deliberately tight budget that forces preemption — recorded as JSON
+    // notes so the trajectory tracks residency and preemption behavior.
+    println!("\n-- mixed-length traffic: ring vs paged kv residency (8 clients, 16/64-token prompts) --");
+    {
+        let page_positions = 16usize;
+        let page_bytes =
+            cfg.n_layers * 2 * page_positions * cfg.d_model * std::mem::size_of::<f32>();
+        // half of the auto budget (max_batch × pages-per-ring): long
+        // sequences must collide with it and preempt
+        let tight_budget = 4 * cfg.max_seq.div_ceil(page_positions) / 2 * page_bytes;
+        for (tag, page, budget) in [
+            ("ring", 0usize, 0usize),
+            ("paged-auto", page_positions, 0),
+            ("paged-tight", page_positions, tight_budget),
+        ] {
+            let mut r = w16.clone();
+            r.max_batch = 4;
+            r.max_wait_ms = 0;
+            r.kv_page_positions = page;
+            r.kv_budget_bytes = budget;
+            let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
+            let mut handles = Vec::new();
+            for c in 0..8usize {
+                let client = coord.gen_client().unwrap();
+                let mine: Vec<(Vec<u16>, usize)> = windows
+                    .iter()
+                    .skip(c)
+                    .step_by(8)
+                    .take(4)
+                    .enumerate()
+                    .map(|(i, w)| {
+                        // alternate short (16 + 16 new) and long (64 + 32 new)
+                        if i % 2 == 0 {
+                            (w[..16].to_vec(), 16)
+                        } else {
+                            (w[..64].to_vec(), 32)
+                        }
+                    })
+                    .collect();
+                handles.push(std::thread::spawn(move || {
+                    for (p, n) in mine {
+                        client.generate(p, n).unwrap();
+                    }
+                }));
+            }
+            let report = coord.run().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            println!(
+                "   {tag:>11}: peak kv {:>9} B, pooled {:>9} B, preemptions {}, requeues {}",
+                report.kv_peak_bytes, report.kv_pool_bytes, report.kv_preemptions, report.kv_requeues
+            );
+            bench.note(format!("mixed {tag} kv peak bytes"), report.kv_peak_bytes as f64);
+            bench.note(format!("mixed {tag} kv pool bytes"), report.kv_pool_bytes as f64);
+            bench.note(format!("mixed {tag} kv preemptions"), report.kv_preemptions as f64);
+            bench.note(format!("mixed {tag} kv requeues"), report.kv_requeues as f64);
+        }
+    }
+
     let out = Path::new("bench_results/bench_serving.json");
     match bench.write_json("bench_serving", out) {
         Ok(()) => println!("\n[json -> {}]", out.display()),

@@ -47,6 +47,11 @@ commands:
                window-scoring demo (PJRT when artifacts exist, else the
                compiled engine); with --generate N [--kv-cache e4m3|e5m2]
                serves continuous-batching KV-cached generation instead;
+               --kv-page P stores generation K/V in a block-paged pool
+               (P positions per page; resident bytes track live tokens)
+               with --kv-budget BYTES capping the pool (admission waits
+               and the youngest sequence is preempted + requeued when it
+               runs dry; 0/absent = auto ring-equivalent budget);
                --packed [--gemv-threads N] serves from bit-packed weights
                (composes with --lorc: W4A8+LoRC at packed footprint);
                --kernels oracle|fast picks the kernel tier (fast = 8-lane

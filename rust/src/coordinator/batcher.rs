@@ -11,8 +11,12 @@
 //! * `max_batch` — the hard cap. On PJRT it is the executable's lowered
 //!   batch size `B` (padded slots burn compute, so filling real slots is
 //!   pure win). On the compiled backend it caps how many sequences decode
-//!   interleaved (each one holds a `max_seq`-sized KV cache, so this is
-//!   also the memory bound).
+//!   interleaved. With contiguous-ring KV caches each slot pins a full
+//!   `max_seq`-sized ring, so the cap doubles as the memory bound; under
+//!   the paged pool (`kv_page_positions > 0`) memory is bounded by the
+//!   pool's byte budget instead and `max_batch` is purely a concurrency
+//!   cap — admission and preemption against the byte budget live in the
+//!   coordinator's start phase, not here.
 //! * `max_wait` — how long the head request may wait for the batch to
 //!   fill. Longer windows raise mean batch size (throughput) and p50
 //!   latency together; §Perf in EXPERIMENTS.md sweeps it.

@@ -129,6 +129,29 @@ pub struct ServeReport {
     /// True when the run ended via the shutdown signal (graceful drain)
     /// rather than by every client hanging up.
     pub drained: bool,
+    /// KV bytes resident when the run ended (paged: pages checked out to
+    /// sequences; ring: in-flight rings × ring size).
+    pub kv_resident_bytes: usize,
+    /// High-water mark of resident KV bytes over the run.
+    pub kv_peak_bytes: usize,
+    /// Total KV bytes owned by the backing store (paged: the whole pool,
+    /// free pages included; ring: recycled + in-flight rings).
+    pub kv_pool_bytes: usize,
+    /// Pages owned by the [`KvPagePool`] (0 when serving from rings).
+    pub kv_pages_total: usize,
+    /// Pages on the free list when the run ended.
+    pub kv_pages_free: usize,
+    /// Pages checked out to sequences when the run ended.
+    pub kv_pages_resident: usize,
+    /// High-water mark of resident pages over the run.
+    pub kv_pages_peak: usize,
+    /// Pages leaked by quarantined caches (free + resident + leaked
+    /// = total, always).
+    pub kv_pages_leaked: usize,
+    /// Sequences evicted mid-decode because the page pool ran dry.
+    pub kv_preemptions: usize,
+    /// Preempted sequences re-admitted for re-prefill.
+    pub kv_requeues: usize,
 }
 
 impl ServeReport {
@@ -190,6 +213,29 @@ impl ServeReport {
                 self.request_tok_s.mean(),
                 self.request_tok_s.min(),
                 self.request_tok_s.max(),
+            );
+        }
+        if self.kv_pool_bytes > 0 {
+            println!(
+                "kv memory: resident {} B (peak {} B) of {} B pooled{}",
+                self.kv_resident_bytes,
+                self.kv_peak_bytes,
+                self.kv_pool_bytes,
+                if self.kv_pages_total > 0 {
+                    format!(
+                        " | pages {} free + {} resident + {} leaked of {} \
+                         (peak {}) | preemptions {} requeues {}",
+                        self.kv_pages_free,
+                        self.kv_pages_resident,
+                        self.kv_pages_leaked,
+                        self.kv_pages_total,
+                        self.kv_pages_peak,
+                        self.kv_preemptions,
+                        self.kv_requeues,
+                    )
+                } else {
+                    String::new()
+                },
             );
         }
         if self.degraded() > 0 || self.drained {
@@ -275,6 +321,40 @@ mod tests {
         assert_eq!(report.degraded(), 15);
         report.print(); // robustness line must not panic
         assert_eq!(ServeReport::default().degraded(), 0);
+    }
+
+    #[test]
+    fn kv_memory_accounting_is_not_degradation() {
+        // Preemption/requeue churn and page accounting are memory-pressure
+        // telemetry, not failed responses: degraded() must stay zero, and
+        // the kv print block must hold the pool identity.
+        let report = ServeReport {
+            kv_resident_bytes: 4096,
+            kv_peak_bytes: 8192,
+            kv_pool_bytes: 16384,
+            kv_pages_total: 8,
+            kv_pages_free: 5,
+            kv_pages_resident: 2,
+            kv_pages_peak: 4,
+            kv_pages_leaked: 1,
+            kv_preemptions: 3,
+            kv_requeues: 3,
+            ..Default::default()
+        };
+        assert_eq!(
+            report.kv_pages_free + report.kv_pages_resident + report.kv_pages_leaked,
+            report.kv_pages_total
+        );
+        assert_eq!(report.degraded(), 0);
+        report.print(); // kv memory block must not panic
+        // ring-mode report: bytes without pages still prints
+        let ring = ServeReport {
+            kv_resident_bytes: 1024,
+            kv_peak_bytes: 2048,
+            kv_pool_bytes: 4096,
+            ..Default::default()
+        };
+        ring.print();
     }
 
     #[test]

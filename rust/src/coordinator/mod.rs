@@ -87,6 +87,7 @@ pub mod batcher;
 pub mod fault;
 pub mod metrics;
 
+use std::collections::VecDeque;
 use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
@@ -105,7 +106,7 @@ use crate::error::Result;
 use crate::formats::FpFormat;
 use crate::model::Checkpoint;
 use crate::pipeline::{ptq, PtqReport};
-use crate::plan::{argmax, CompiledModel, KvCache};
+use crate::plan::{argmax, CompiledModel, KvCache, KvPagePool};
 use crate::quant::QuantSidecar;
 use crate::recipe::{QuantRecipe, RecipeError};
 use crate::runtime::HloScorer;
@@ -439,6 +440,17 @@ pub struct CoordinatorConfig {
     /// factors per linear, [`crate::pipeline::ptq`]) — required when
     /// `opts.weights` selects the packed layout; ignored otherwise.
     pub sidecar: Option<QuantSidecar>,
+    /// `> 0` ⇒ generation K/V lives in a shared block-paged
+    /// [`KvPagePool`] with this many positions per page: resident bytes
+    /// scale with live tokens, admission is gated on free pages, and a
+    /// dry pool preempts (requeues) the youngest sequence instead of
+    /// deadlocking. `0` = the classic per-sequence `max_seq` rings.
+    pub kv_page_positions: usize,
+    /// Byte budget of the paged pool (whole pages; clamped up so one
+    /// `max_seq` sequence always fits). `0` = auto: `max_batch` full
+    /// sequences' worth of pages — the ring plan's bound, paged. Ignored
+    /// when `kv_page_positions == 0`.
+    pub kv_budget_bytes: usize,
     /// Bound of the admission queue (requests). Submissions beyond it
     /// shed with [`ServeError::Overloaded`]; clamped to at least 1.
     pub queue_depth: usize,
@@ -588,10 +600,16 @@ struct ActiveGen {
     /// Tokens decoded so far; the last one is the next step's input.
     generated: Vec<u16>,
     max_new: usize,
-    prompt_len: usize,
+    /// The original prompt — kept so a paged-pool preemption can requeue
+    /// this sequence for re-prefill (greedy decode is deterministic, so
+    /// the restarted request reproduces the same tokens).
+    prompt: Vec<u16>,
     submitted: Instant,
     deadline: Option<Instant>,
     decode_start: Instant,
+    /// Monotonic admission number: preemption evicts the *youngest*
+    /// in-flight sequence (largest `seq_no`) — it loses the least work.
+    seq_no: u64,
     respond: SyncSender<ServeResult<Generated>>,
 }
 
@@ -852,6 +870,29 @@ impl Coordinator {
         let policy = BatchPolicy { max_wait: Duration::ZERO, ..self.cfg.policy };
         let max_active = policy.max_batch.max(1).min(max_seq);
         let mut fi: Option<FaultInjector> = self.cfg.faults.as_ref().map(FaultInjector::new);
+        // Bytes one per-sequence ring pins (f32 storage even under FP8
+        // fake-quant) — the unit of ring-mode KV accounting.
+        let ring_bytes = {
+            let c = &self.cfg.ck.config;
+            c.n_layers * 2 * max_seq * c.d_model * std::mem::size_of::<f32>()
+        };
+        // Paged mode: one shared pool, eagerly allocated. Auto budget
+        // (`0`) buys `max_active` full sequences' worth of pages — the
+        // ring plan's bound — so paging can only tighten admission when a
+        // budget is set explicitly.
+        let mut page_pool: Option<KvPagePool> = if self.cfg.kv_page_positions > 0 {
+            let p = self.cfg.kv_page_positions;
+            let budget = if self.cfg.kv_budget_bytes > 0 {
+                self.cfg.kv_budget_bytes
+            } else {
+                let c = &self.cfg.ck.config;
+                let page_bytes = c.n_layers * 2 * p * c.d_model * std::mem::size_of::<f32>();
+                max_active * max_seq.div_ceil(p) * page_bytes
+            };
+            Some(model.kv_page_pool(p, budget, kv_quant))
+        } else {
+            None
+        };
 
         let mut latency = LatencyStats::default();
         let mut request_tok_s = RateStats::default();
@@ -868,10 +909,22 @@ impl Coordinator {
         let mut quarantined_caches = 0usize;
         let mut rejected_shutdown = 0usize;
         let mut drained = false;
+        let mut kv_peak_bytes = 0usize;
+        let mut kv_preemptions = 0usize;
+        let mut kv_requeues = 0usize;
+        let mut next_seq_no = 0u64;
 
         let mut active: Vec<ActiveGen> = Vec::new();
         let mut caches: Vec<KvCache> = Vec::new();
+        // Recycled cache husks (rings, or paged caches holding no pages).
+        // Retention is capped at `max_active`: the loop never decodes more
+        // sequences at once, so a burst of departures must not pin a
+        // burst's worth of rings forever.
         let mut pool: Vec<KvCache> = Vec::new();
+        // Admitted generation prompts awaiting an in-flight slot (and, in
+        // paged mode, enough free pages). The `bool` marks a preemption
+        // requeue (counted once when it re-enters flight).
+        let mut waiting: VecDeque<(GenRequest, bool)> = VecDeque::new();
         let mut step_tokens: Vec<u16> = Vec::with_capacity(max_active);
         let mut step_out: Vec<u16> = Vec::with_capacity(max_active);
         let mut admit: Vec<Work> = Vec::with_capacity(max_active);
@@ -909,6 +962,13 @@ impl Coordinator {
                         }
                     }
                 }
+                // admitted-but-not-started prompts are not in flight:
+                // answer them too (already counted in `requests`)
+                for (g, _) in waiting.drain(..) {
+                    rejected_shutdown += 1;
+                    latency.record(Instant::now() - g.submitted);
+                    deliver(&mut fi, &mut faulted, &g.respond, Err(ServeError::ShuttingDown));
+                }
                 if active.is_empty() {
                     break;
                 }
@@ -916,7 +976,7 @@ impl Coordinator {
                 // ---- admission: block when idle, join mid-flight when
                 // busy ---------------------------------------------------
                 admit.clear();
-                if active.is_empty() {
+                if active.is_empty() && waiting.is_empty() {
                     if queue_closed {
                         break;
                     }
@@ -928,8 +988,9 @@ impl Coordinator {
                         Wakeup::Shutdown => continue, // drain branch takes over
                         Wakeup::Closed => break,
                     }
-                } else if active.len() < max_active {
-                    let fill = try_fill(&self.rx, &mut admit, max_active - active.len());
+                } else if active.len() + waiting.len() < max_active {
+                    let fill =
+                        try_fill(&self.rx, &mut admit, max_active - active.len() - waiting.len());
                     queue_closed |= fill.disconnected;
                     if fill.taken > 0 {
                         batches += 1;
@@ -995,102 +1056,190 @@ impl Coordinator {
                                 deliver(&mut fi, &mut faulted, &g.respond, Err(e));
                                 continue;
                             }
-                            gen_requests += 1;
-                            let mut cache = pool.pop().unwrap_or_else(|| match kv_quant {
+                            // admission checks passed: queue for the start
+                            // phase below (which additionally gates on free
+                            // pool pages in paged mode)
+                            waiting.push_back((g, false));
+                        }
+                    }
+                }
+
+                // ---- start phase: move waiting prompts into flight while
+                // slots and (paged) free pages allow ----------------------
+                while active.len() < max_active {
+                    let Some((front, _)) = waiting.front() else { break };
+                    if expired(front.deadline) {
+                        let (g, _) = waiting.pop_front().expect("front checked");
+                        expired_admission += 1;
+                        latency.record(Instant::now() - g.submitted);
+                        deliver(
+                            &mut fi,
+                            &mut faulted,
+                            &g.respond,
+                            Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
+                        );
+                        continue;
+                    }
+                    if let Some(pp) = page_pool.as_ref() {
+                        if !pp.can_reserve(front.prompt.len()) {
+                            if active.is_empty() {
+                                // nothing in flight will ever release pages
+                                // (resident is 0, so free == total − leaked):
+                                // this prompt can *never* fit — answer it
+                                // rather than livelock
+                                let (g, _) = waiting.pop_front().expect("front checked");
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &g.respond,
+                                    Err(ServeError::Faulted(format!(
+                                        "kv page pool cannot fit a {}-token prompt \
+                                         ({} of {} pages leaked by quarantine)",
+                                        g.prompt.len(),
+                                        pp.leaked_pages(),
+                                        pp.total_pages()
+                                    ))),
+                                );
+                                continue;
+                            }
+                            // in-flight completions will release pages —
+                            // retry next loop turn
+                            break;
+                        }
+                    }
+                    let (g, requeued) = waiting.pop_front().expect("front checked");
+                    if requeued {
+                        kv_requeues += 1;
+                    } else {
+                        gen_requests += 1;
+                    }
+                    let mut cache = match pool.pop() {
+                        Some(c) => c,
+                        None => match page_pool.as_ref() {
+                            Some(pp) => pp.new_cache(),
+                            None => match kv_quant {
                                 Some(fmt) => model.kv_cache_quantized(fmt),
                                 None => model.kv_cache(),
-                            });
-                            cache.reset();
-                            // Guarded prefill: the fault site fires inside
-                            // the guard, and a deadline adds probe points
-                            // between chunks so an expiring prompt aborts
-                            // without burning the rest of its prefill.
-                            // `Ok(None)` = deadline expired mid-prefill.
-                            let dl = g.deadline;
-                            let outcome = guard(|| {
-                                if let Some(f) = fi.as_mut() {
-                                    f.fire(FaultSite::Prefill);
+                            },
+                        },
+                    };
+                    cache.reset();
+                    if let Some(pp) = page_pool.as_mut() {
+                        let reserved = pp.reserve(&mut cache, g.prompt.len());
+                        debug_assert!(reserved, "start phase verified page availability");
+                        let _ = reserved;
+                    }
+                    // Guarded prefill: the fault site fires inside the
+                    // guard, and a deadline adds probe points between
+                    // chunks so an expiring prompt aborts without burning
+                    // the rest of its prefill. `Ok(None)` = deadline
+                    // expired mid-prefill.
+                    let dl = g.deadline;
+                    let outcome = guard(|| {
+                        if let Some(f) = fi.as_mut() {
+                            f.fire(FaultSite::Prefill);
+                        }
+                        let logits = match dl {
+                            Some(d) => {
+                                let mut probe = |_done: usize| Instant::now() < d;
+                                match model.prefill_with_probe(
+                                    &g.prompt,
+                                    &mut cache,
+                                    &mut scratch,
+                                    PREFILL_CHUNK,
+                                    &mut probe,
+                                ) {
+                                    Some(m) => m,
+                                    None => return None,
                                 }
-                                let logits = match dl {
-                                    Some(d) => {
-                                        let mut probe = |_done: usize| Instant::now() < d;
-                                        match model.prefill_with_probe(
-                                            &g.prompt,
-                                            &mut cache,
-                                            &mut scratch,
-                                            PREFILL_CHUNK,
-                                            &mut probe,
-                                        ) {
-                                            Some(m) => m,
-                                            None => return None,
-                                        }
-                                    }
-                                    None => model.prefill(&g.prompt, &mut cache, &mut scratch),
-                                };
-                                Some(argmax(logits.row(logits.rows - 1)) as u16)
-                            });
-                            match outcome {
-                                Err(msg) => {
-                                    // the walk may have unwound mid-layer:
-                                    // poison the cache and drop it on the
-                                    // floor, never back into the pool
-                                    cache.quarantine();
-                                    quarantined_caches += 1;
-                                    latency.record(Instant::now() - g.submitted);
-                                    deliver(
-                                        &mut fi,
-                                        &mut faulted,
-                                        &g.respond,
-                                        Err(ServeError::Faulted(msg)),
-                                    );
+                            }
+                            None => model.prefill(&g.prompt, &mut cache, &mut scratch),
+                        };
+                        Some(argmax(logits.row(logits.rows - 1)) as u16)
+                    });
+                    match outcome {
+                        Err(msg) => {
+                            // the walk may have unwound mid-layer: poison
+                            // the cache and drop it on the floor, never
+                            // back into the pool — a paged cache leaks
+                            // exactly its own pages
+                            cache.quarantine();
+                            quarantined_caches += 1;
+                            if let Some(pp) = page_pool.as_mut() {
+                                pp.release(&mut cache);
+                            }
+                            latency.record(Instant::now() - g.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &g.respond,
+                                Err(ServeError::Faulted(msg)),
+                            );
+                        }
+                        Ok(None) => {
+                            expired_midflight += 1;
+                            // aborted cleanly: pages back, husk recyclable
+                            if let Some(pp) = page_pool.as_mut() {
+                                pp.release(&mut cache);
+                            }
+                            if pool.len() < max_active {
+                                pool.push(cache);
+                            }
+                            latency.record(Instant::now() - g.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &g.respond,
+                                Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
+                            );
+                        }
+                        Ok(Some(first)) => {
+                            prefill_tokens += g.prompt.len();
+                            let mut generated = Vec::with_capacity(g.max_new);
+                            generated.push(first);
+                            if g.max_new == 1 {
+                                latency.record(Instant::now() - g.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &g.respond,
+                                    Ok(Generated {
+                                        tokens: generated,
+                                        prompt_len: g.prompt.len(),
+                                        decode_tok_s: 0.0,
+                                    }),
+                                );
+                                if let Some(pp) = page_pool.as_mut() {
+                                    pp.release(&mut cache);
                                 }
-                                Ok(None) => {
-                                    expired_midflight += 1;
-                                    pool.push(cache); // aborted cleanly: recyclable
-                                    latency.record(Instant::now() - g.submitted);
-                                    deliver(
-                                        &mut fi,
-                                        &mut faulted,
-                                        &g.respond,
-                                        Err(ServeError::DeadlineExceeded {
-                                            partial: Vec::new(),
-                                        }),
-                                    );
+                                if pool.len() < max_active {
+                                    pool.push(cache);
                                 }
-                                Ok(Some(first)) => {
-                                    prefill_tokens += g.prompt.len();
-                                    let mut generated = Vec::with_capacity(g.max_new);
-                                    generated.push(first);
-                                    if g.max_new == 1 {
-                                        latency.record(Instant::now() - g.submitted);
-                                        deliver(
-                                            &mut fi,
-                                            &mut faulted,
-                                            &g.respond,
-                                            Ok(Generated {
-                                                tokens: generated,
-                                                prompt_len: g.prompt.len(),
-                                                decode_tok_s: 0.0,
-                                            }),
-                                        );
-                                        pool.push(cache);
-                                    } else {
-                                        active.push(ActiveGen {
-                                            generated,
-                                            max_new: g.max_new,
-                                            prompt_len: g.prompt.len(),
-                                            submitted: g.submitted,
-                                            deadline: g.deadline,
-                                            decode_start: Instant::now(),
-                                            respond: g.respond,
-                                        });
-                                        caches.push(cache);
-                                    }
-                                }
+                            } else {
+                                active.push(ActiveGen {
+                                    generated,
+                                    max_new: g.max_new,
+                                    prompt: g.prompt,
+                                    submitted: g.submitted,
+                                    deadline: g.deadline,
+                                    decode_start: Instant::now(),
+                                    seq_no: next_seq_no,
+                                    respond: g.respond,
+                                });
+                                next_seq_no += 1;
+                                caches.push(cache);
                             }
                         }
                     }
                 }
+            }
+            // ---- KV accounting high-water mark (in-flight growth happens
+            // only in the start phase above and the per-step reserve below,
+            // which tracks the paged peak inside the pool) ----------------
+            match page_pool.as_ref() {
+                Some(pp) => kv_peak_bytes = kv_peak_bytes.max(pp.resident_bytes()),
+                None => kv_peak_bytes = kv_peak_bytes.max(caches.len() * ring_bytes),
             }
             if active.is_empty() {
                 continue;
@@ -1102,7 +1251,13 @@ impl Coordinator {
             while i < active.len() {
                 if expired(active[i].deadline) {
                     let done = active.swap_remove(i);
-                    pool.push(caches.swap_remove(i));
+                    let mut cache = caches.swap_remove(i);
+                    if let Some(pp) = page_pool.as_mut() {
+                        pp.release(&mut cache);
+                    }
+                    if pool.len() < max_active {
+                        pool.push(cache);
+                    }
                     expired_midflight += 1;
                     latency.record(Instant::now() - done.submitted);
                     deliver(
@@ -1117,6 +1272,54 @@ impl Coordinator {
             }
             if active.is_empty() {
                 continue;
+            }
+
+            // ---- paged mode: every sequence needs a reserved position for
+            // the token this step appends. If the pool runs dry, preempt
+            // the *youngest* sequence (largest seq_no): release its pages
+            // and requeue it at the front of `waiting` for re-prefill —
+            // greedy decode is deterministic, so the re-served request
+            // regenerates the identical tokens. Terminates because each
+            // evicted sequence frees at least one page. ------------------
+            if page_pool.is_some() {
+                let mut i = 0;
+                while i < caches.len() {
+                    let pp = page_pool.as_mut().expect("paged mode checked");
+                    if caches[i].remaining() == 0 && !pp.reserve(&mut caches[i], 1) {
+                        let y = active
+                            .iter()
+                            .enumerate()
+                            .max_by_key(|(_, a)| a.seq_no)
+                            .map(|(j, _)| j)
+                            .expect("active is non-empty");
+                        let done = active.swap_remove(y);
+                        let mut cache = caches.swap_remove(y);
+                        pp.release(&mut cache);
+                        if pool.len() < max_active {
+                            pool.push(cache);
+                        }
+                        kv_preemptions += 1;
+                        waiting.push_front((
+                            GenRequest {
+                                prompt: done.prompt,
+                                max_new: done.max_new,
+                                submitted: done.submitted,
+                                deadline: done.deadline,
+                                respond: done.respond,
+                            },
+                            true,
+                        ));
+                        i = 0; // indices shifted; rescan from the top
+                        continue;
+                    }
+                    i += 1;
+                }
+                if let Some(pp) = page_pool.as_ref() {
+                    kv_peak_bytes = kv_peak_bytes.max(pp.resident_bytes());
+                }
+                if active.is_empty() {
+                    continue;
+                }
             }
 
             // ---- one interleaved decode step for every in-flight seq ----
@@ -1177,6 +1380,9 @@ impl Coordinator {
                                 let mut cache = caches.swap_remove(i);
                                 cache.quarantine();
                                 quarantined_caches += 1;
+                                if let Some(pp) = page_pool.as_mut() {
+                                    pp.release(&mut cache); // leaks its pages
+                                }
                                 drop(cache); // poisoned: never recycled
                                 latency.record(Instant::now() - done.submitted);
                                 deliver(
@@ -1195,7 +1401,7 @@ impl Coordinator {
             while i < active.len() {
                 if active[i].generated.len() >= active[i].max_new {
                     let done = active.swap_remove(i);
-                    let cache = caches.swap_remove(i);
+                    let mut cache = caches.swap_remove(i);
                     let now = Instant::now();
                     let steps = done.generated.len() - 1;
                     let rate =
@@ -1208,11 +1414,16 @@ impl Coordinator {
                         &done.respond,
                         Ok(Generated {
                             tokens: done.generated,
-                            prompt_len: done.prompt_len,
+                            prompt_len: done.prompt.len(),
                             decode_tok_s: rate,
                         }),
                     );
-                    pool.push(cache); // recycle the ring for the next join
+                    if let Some(pp) = page_pool.as_mut() {
+                        pp.release(&mut cache); // pages back to the free list
+                    }
+                    if pool.len() < max_active {
+                        pool.push(cache); // recycle the husk for the next join
+                    }
                 } else {
                     i += 1;
                 }
@@ -1237,6 +1448,22 @@ impl Coordinator {
             quarantined_caches,
             rejected_shutdown,
             drained,
+            kv_resident_bytes: match page_pool.as_ref() {
+                Some(pp) => pp.resident_bytes(),
+                None => caches.len() * ring_bytes,
+            },
+            kv_peak_bytes,
+            kv_pool_bytes: match page_pool.as_ref() {
+                Some(pp) => pp.total_bytes(),
+                None => (pool.len() + caches.len()) * ring_bytes,
+            },
+            kv_pages_total: page_pool.as_ref().map_or(0, KvPagePool::total_pages),
+            kv_pages_free: page_pool.as_ref().map_or(0, KvPagePool::free_pages),
+            kv_pages_resident: page_pool.as_ref().map_or(0, KvPagePool::resident_pages),
+            kv_pages_peak: page_pool.as_ref().map_or(0, KvPagePool::peak_resident_pages),
+            kv_pages_leaked: page_pool.as_ref().map_or(0, KvPagePool::leaked_pages),
+            kv_preemptions,
+            kv_requeues,
         })
     }
 }
@@ -1348,6 +1575,17 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             "none".to_string()
         }
     );
+    if recipe.kv_page_positions > 0 {
+        println!(
+            "kv paging: {}-position pages, budget {}",
+            recipe.kv_page_positions,
+            if recipe.kv_budget_bytes > 0 {
+                format!("{} B", recipe.kv_budget_bytes)
+            } else {
+                "auto (ring-equivalent)".to_string()
+            }
+        );
+    }
     if let Some(plan) = &faults {
         println!("fault injection: {}", plan.summary());
     }
@@ -1534,6 +1772,8 @@ mod tests {
             queue_depth: DEFAULT_QUEUE_DEPTH,
             deadline: None,
             faults: None,
+            kv_page_positions: 0,
+            kv_budget_bytes: 0,
         }
     }
 
@@ -1617,6 +1857,47 @@ mod tests {
         assert_eq!(report.prefill_tokens, 3);
         assert_eq!(report.decode_tokens, max_new - 1);
         assert_eq!(report.request_tok_s.count(), 1);
+    }
+
+    #[test]
+    fn free_cache_pool_retention_is_capped_at_max_batch() {
+        // regression: a burst of B ≫ max_batch generations must not leave
+        // B recycled rings parked in the free pool — retention is capped
+        // at the concurrency limit, observable through kv_pool_bytes
+        let ck = tiny_ck();
+        let ring_bytes = 2 * 2 * 8 * 24 * 4; // n_layers × {K,V} × max_seq × d_model × f32
+        let coord = Coordinator::new(compiled_cfg(
+            ck,
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        ));
+        let mut handles = Vec::new();
+        for c in 0..6usize {
+            let client = coord.gen_client().unwrap();
+            handles.push(std::thread::spawn(move || {
+                (0..2)
+                    .map(|i| {
+                        let prompt: Vec<u16> =
+                            (0..4).map(|k| ((c * 7 + i * 3 + k) % 48) as u16).collect();
+                        client.generate(prompt, 3).unwrap().tokens.len()
+                    })
+                    .sum::<usize>()
+            }));
+        }
+        let report = coord.run().unwrap();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 6);
+        }
+        assert_eq!(report.gen_requests, 12);
+        assert_eq!(report.kv_resident_bytes, 0, "every ring is recycled by drain");
+        assert!(
+            report.kv_pool_bytes <= 2 * ring_bytes,
+            "free pool retained more rings than max_batch: {} B of {} B allowed",
+            report.kv_pool_bytes,
+            2 * ring_bytes
+        );
+        assert!(report.kv_peak_bytes >= ring_bytes, "at least one ring was live mid-run");
+        assert_eq!(report.kv_pages_total, 0, "ring mode mints no pages");
+        assert_eq!(report.kv_preemptions, 0);
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! Per-sequence K/V cache — the state that makes decode incremental.
+//! Per-sequence K/V storage — the state that makes decode incremental —
+//! in two layouts: a contiguous per-sequence **ring** and a block-**paged**
+//! layout backed by a shared [`KvPagePool`].
 //!
 //! # Why
 //!
@@ -11,7 +13,7 @@
 //! token — each step computes the q/k/v projections for the *new* position
 //! only and attends against the cached keys/values, `O(n·d)` per token.
 //!
-//! # Layout
+//! # Ring layout
 //!
 //! One ring per layer, two matrices per ring:
 //!
@@ -25,56 +27,126 @@
 //! attention kernel walks the same unit-stride slices as the full-recompute
 //! kernel — this is what makes the bit-equivalence contract (below) cheap.
 //!
-//! Every buffer is allocated once at construction and sized to the model's
-//! `max_seq`; appending rows and [`reset`](KvCache::reset) never
+//! Every ring buffer is allocated once at construction and sized to the
+//! model's `max_seq`; appending rows and [`reset`](KvCache::reset) never
 //! touch the heap, so the serving loop's steady state stays allocation-free
 //! (asserted by `tests/plan_alloc.rs`).
 //!
+//! # Paged layout
+//!
+//! A ring pins `max_seq × d_model` per layer for the whole life of a
+//! sequence, so resident serving memory is `max_batch × max_seq` even when
+//! prompts are short. The paged layout instead stores position `p` in row
+//! `p % P` of page `p / P`, where a **page** ([`PageBuf`]) holds `P`
+//! positions × `d_model` for *every* layer, and a sequence's page list **is**
+//! its page table (pages in position order). Pages come from a
+//! [`KvPagePool`]: all pages are allocated eagerly at pool construction from
+//! a byte budget and recycle through a free list, so resident bytes scale
+//! with tokens actually live and steady-state page churn performs zero heap
+//! allocations (`tests/plan_alloc.rs` extends the counting-allocator
+//! contract to reserve/release cycles).
+//!
+//! Within a row both layouts are byte-identical — same head-interleaved
+//! `d_model` slice, same [`FpQuantLut`] quantization on append, same
+//! per-position attention walk ([`KvLayerView`] only redirects *which*
+//! buffer a row lives in, never the arithmetic over it) — which is why
+//! paged prefill+decode is bit-identical to the ring plan
+//! (`tests/kv_paged.rs`).
+//!
 //! # Eviction and reset rules
 //!
-//! The ring is sized to `max_seq` — the hard window of the learned position
-//! table — so a *single* sequence can never overflow it: the write cursor
-//! advances from 0 to at most `max_seq` and `prefill`/`decode_step` assert
-//! before ever wrapping a live sequence (evicting position 0 mid-sequence
-//! would silently change attention semantics, and the position table has no
-//! row to give the overflowing token anyway). Eviction is therefore always
-//! *whole-sequence*: [`reset`](KvCache::reset) rewinds the cursor to slot 0
-//! and the next sequence lazily overwrites the stale rows — no zeroing
-//! pass. The serving coordinator keeps finished sequences' caches in a free
-//! pool and recycles them via `reset` (see `coordinator/`).
+//! Capacity is bounded by `max_seq` — the hard window of the learned
+//! position table — so a *single* sequence can never overflow it: the write
+//! cursor advances from 0 to at most `max_seq` and `prefill`/`decode_step`
+//! assert before ever wrapping a live sequence (evicting position 0
+//! mid-sequence would silently change attention semantics, and the position
+//! table has no row to give the overflowing token anyway). Eviction is
+//! therefore always *whole-sequence*: [`reset`](KvCache::reset) rewinds the
+//! cursor to slot 0 and the next sequence lazily overwrites the stale rows —
+//! no zeroing pass. The serving coordinator keeps finished sequences' caches
+//! in a bounded free pool and recycles them via `reset`; paged caches
+//! additionally return their pages to the pool via
+//! [`KvPagePool::release`] (see `coordinator/`).
+//!
+//! # Quarantine and page leaks
+//!
+//! A panic that unwinds out of a layer walk leaves staged rows in an
+//! unknown state, so the coordinator [`quarantine`](KvCache::quarantine)s
+//! the cache (sticky — `reset` does not clear it). Releasing a quarantined
+//! *paged* cache deliberately **leaks exactly its own pages**: the buffers
+//! are dropped rather than recycled (a later sequence must never decode
+//! through them) and the pool counts them in
+//! [`leaked_pages`](KvPagePool::leaked_pages) so accounting stays balanced:
+//! `free + resident + leaked == total`, always.
 //!
 //! # FP8 quantization (the paper's formats, applied to the cache)
 //!
-//! [`KvCache::quantized`] stores every appended K/V row through the same
-//! [`FpQuantLut`] fast path the A8 activation hot loop uses: one absmax
-//! scan + LUT quantize per row (token-wise scaling, exactly
-//! `NumericFormat::fake_quant_slice_dynamic` semantics). This halves the
-//! dominant serving memory stream the way ZeroQuant-FP's W4A8 formats are
-//! meant to be deployed, at the cost of leaving the bit-equivalence
-//! contract: a quantized cache is **not** bit-identical to
-//! full-recompute `forward` (the reference keeps exact f32 K/V). What it
-//! *does* keep is split-invariance — where the prompt/decode boundary falls
-//! cannot change the logits, because rows are quantized independently of
-//! when they were appended (`tests/kv_equivalence.rs` asserts both
-//! properties).
+//! [`KvCache::quantized`] (and [`KvPagePool::new`] with a format) stores
+//! every appended K/V row through the same [`FpQuantLut`] fast path the A8
+//! activation hot loop uses: one absmax scan + LUT quantize per row
+//! (token-wise scaling, exactly `NumericFormat::fake_quant_slice_dynamic`
+//! semantics). This halves the dominant serving memory stream the way
+//! ZeroQuant-FP's W4A8 formats are meant to be deployed, at the cost of
+//! leaving the bit-equivalence contract: a quantized cache is **not**
+//! bit-identical to full-recompute `forward` (the reference keeps exact f32
+//! K/V). What it *does* keep is split-invariance — where the prompt/decode
+//! boundary falls cannot change the logits, because rows are quantized
+//! independently of when they were appended (`tests/kv_equivalence.rs`
+//! asserts both properties). Note fake-quant stores f32 either way, so page
+//! byte accounting is always `4` bytes per element.
 
 use super::FpQuantLut;
 use crate::formats::FpFormat;
 use crate::model::ModelConfig;
 use crate::tensor::Matrix;
 
-/// Per-layer K/V rings for one sequence. See the module docs for layout,
-/// reset/eviction rules and the quantization contract.
+/// One fixed-size block of K/V storage: `P` positions × `d_model` for
+/// every layer. The unit of allocation, recycling and leakage in a
+/// [`KvPagePool`].
+#[derive(Debug, Clone)]
+pub struct PageBuf {
+    /// Per-layer key rows `[page_positions, d_model]`.
+    k: Vec<Matrix>,
+    /// Per-layer value rows `[page_positions, d_model]`.
+    v: Vec<Matrix>,
+}
+
+impl PageBuf {
+    fn new(n_layers: usize, positions: usize, d_model: usize) -> PageBuf {
+        PageBuf {
+            k: (0..n_layers).map(|_| Matrix::zeros(positions, d_model)).collect(),
+            v: (0..n_layers).map(|_| Matrix::zeros(positions, d_model)).collect(),
+        }
+    }
+}
+
+/// The two storage layouts behind a [`KvCache`]. The cursor/staging
+/// contract is identical for both; only row addressing differs.
+#[derive(Debug, Clone)]
+enum Store {
+    /// Contiguous per-layer rings sized to `max_seq`.
+    Ring {
+        /// Per-layer key rows `[capacity, d_model]`.
+        k: Vec<Matrix>,
+        /// Per-layer value rows `[capacity, d_model]`.
+        v: Vec<Matrix>,
+    },
+    /// Block-paged: position `p` lives in row `p % page_positions` of
+    /// `pages[p / page_positions]`. The Vec **is** the page table; pages
+    /// are owned here (checked out of a [`KvPagePool`]) so the plan's
+    /// layer walk needs no pool access.
+    Paged { page_positions: usize, pages: Vec<PageBuf> },
+}
+
+/// Per-sequence K/V storage (ring or paged). See the module docs for
+/// layout, reset/eviction rules and the quantization contract.
 #[derive(Debug, Clone)]
 pub struct KvCache {
-    /// Ring capacity in positions (= the model's `max_seq`).
+    /// Positions currently storable: ring capacity, or reserved pages × P.
     capacity: usize,
-    /// Valid positions: rows `0..len` of every ring hold live K/V.
+    /// Valid positions: rows `0..len` hold live K/V.
     len: usize,
-    /// Per-layer key rows `[capacity, d_model]`.
-    k: Vec<Matrix>,
-    /// Per-layer value rows `[capacity, d_model]`.
-    v: Vec<Matrix>,
+    store: Store,
     /// `Some` ⇒ every stored row is token-wise fake-quantized on append.
     quant: Option<FpQuantLut>,
     /// Sticky poison flag: a cache whose layer walk panicked mid-flight
@@ -84,14 +156,14 @@ pub struct KvCache {
 }
 
 impl KvCache {
-    /// An exact (f32) cache: decode through it is bit-identical to
+    /// An exact (f32) ring cache: decode through it is bit-identical to
     /// `CompiledModel::forward` over the same window.
     pub fn new(cfg: &ModelConfig) -> KvCache {
         KvCache::build(cfg, None)
     }
 
-    /// A cache that fake-quantizes every stored K/V row to `fmt` (token-wise
-    /// absmax scaling through the LUT fast path).
+    /// A ring cache that fake-quantizes every stored K/V row to `fmt`
+    /// (token-wise absmax scaling through the LUT fast path).
     pub fn quantized(cfg: &ModelConfig, fmt: FpFormat) -> KvCache {
         KvCache::build(cfg, Some(FpQuantLut::new(fmt)))
     }
@@ -102,8 +174,10 @@ impl KvCache {
         KvCache {
             capacity,
             len: 0,
-            k: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
-            v: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+            store: Store::Ring {
+                k: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+                v: (0..cfg.n_layers).map(|_| Matrix::zeros(capacity, d)).collect(),
+            },
             quant,
             quarantined: false,
         }
@@ -118,12 +192,14 @@ impl KvCache {
         self.len == 0
     }
 
-    /// Ring capacity in positions (= the model's `max_seq`).
+    /// Positions currently storable. For a ring this is the model's
+    /// `max_seq`; for a paged cache it is reserved pages × page size and
+    /// grows/shrinks with [`KvPagePool::reserve`] / [`release`](KvPagePool::release).
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Positions still available before the ring is full.
+    /// Positions still available before reserved storage is full.
     pub fn remaining(&self) -> usize {
         self.capacity - self.len
     }
@@ -133,19 +209,36 @@ impl KvCache {
         self.quant.as_ref().map(|lut| lut.format())
     }
 
+    /// `true` if this cache stores positions in pool pages rather than a
+    /// private ring.
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, Store::Paged { .. })
+    }
+
+    /// Pages currently held (always 0 for a ring cache).
+    pub fn pages_held(&self) -> usize {
+        match &self.store {
+            Store::Ring { .. } => 0,
+            Store::Paged { pages, .. } => pages.len(),
+        }
+    }
+
     /// Rewind the write cursor to slot 0, invalidating every cached
     /// position. Stale rows are overwritten lazily by the next sequence —
-    /// no zeroing pass, no allocation.
+    /// no zeroing pass, no allocation. A paged cache keeps its reserved
+    /// pages; return them with [`KvPagePool::release`] instead if the
+    /// sequence is done.
     pub fn reset(&mut self) {
         self.len = 0;
     }
 
     /// Mark this cache poisoned. A panic that unwinds out of a layer walk
     /// leaves the walk's staged rows in an unknown state; the serving
-    /// coordinator quarantines (drops, never recycles) such a cache so a
-    /// later sequence cannot decode through it. Sticky:
-    /// [`reset`](Self::reset) does **not** clear it, and the plan's
-    /// decode entry points assert against quarantined caches.
+    /// coordinator quarantines such a cache so a later sequence cannot
+    /// decode through it — a ring is dropped, a paged cache's pages are
+    /// leaked by [`KvPagePool::release`]. Sticky: [`reset`](Self::reset)
+    /// does **not** clear it, and the plan's decode entry points assert
+    /// against quarantined caches.
     pub fn quarantine(&mut self) {
         self.quarantined = true;
     }
@@ -154,34 +247,257 @@ impl KvCache {
         self.quarantined
     }
 
-    /// Store the K/V rows of one position in one layer's ring (quantizing
-    /// if configured). Does **not** advance the cursor: callers stage every
+    /// Store the K/V rows of one position in one layer (quantizing if
+    /// configured). Does **not** advance the cursor: callers stage every
     /// layer's rows for a token first and [`advance`](Self::advance) once.
     pub(super) fn store(&mut self, layer: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
-        debug_assert!(pos < self.capacity, "kv store past ring capacity");
-        let KvCache { k, v, quant, .. } = self;
-        let kr = k[layer].row_mut(pos);
+        debug_assert!(pos < self.capacity, "kv store past reserved capacity");
+        let (kr, vr): (&mut [f32], &mut [f32]) = match &mut self.store {
+            Store::Ring { k, v } => (k[layer].row_mut(pos), v[layer].row_mut(pos)),
+            Store::Paged { page_positions, pages } => {
+                let page = &mut pages[pos / *page_positions];
+                let row = pos % *page_positions;
+                (page.k[layer].row_mut(row), page.v[layer].row_mut(row))
+            }
+        };
         kr.copy_from_slice(k_row);
-        if let Some(lut) = quant.as_ref() {
-            lut.fake_quant_row(kr);
-        }
-        let vr = v[layer].row_mut(pos);
         vr.copy_from_slice(v_row);
-        if let Some(lut) = quant.as_ref() {
+        if let Some(lut) = self.quant.as_ref() {
+            lut.fake_quant_row(kr);
             lut.fake_quant_row(vr);
         }
     }
 
-    /// One layer's (K, V) rings; rows `0..len()` are live (plus any rows
-    /// staged by [`store`](Self::store) ahead of the cursor).
-    pub(super) fn layer(&self, layer: usize) -> (&Matrix, &Matrix) {
-        (&self.k[layer], &self.v[layer])
+    /// A read view over one layer's K/V rows; positions `0..len()` are live
+    /// (plus any rows staged by [`store`](Self::store) ahead of the
+    /// cursor).
+    pub(super) fn layer(&self, layer: usize) -> KvLayerView<'_> {
+        match &self.store {
+            Store::Ring { k, v } => KvLayerView::Ring { k: &k[layer], v: &v[layer] },
+            Store::Paged { page_positions, pages } => {
+                KvLayerView::Paged { pages, layer, page_positions: *page_positions }
+            }
+        }
     }
 
     /// Commit `n` staged positions.
     pub(super) fn advance(&mut self, n: usize) {
         self.len += n;
-        debug_assert!(self.len <= self.capacity, "kv ring overfull");
+        debug_assert!(self.len <= self.capacity, "kv cache overfull");
+    }
+}
+
+/// A borrowed view of one layer's cached K/V rows, independent of storage
+/// layout. The attention kernel reads rows exclusively through
+/// [`k_row`](Self::k_row)/[`v_row`](Self::v_row), so relocating a row into
+/// a page cannot change any arithmetic over it — the foundation of the
+/// paged-≡-ring bit-equivalence contract.
+#[derive(Clone, Copy)]
+pub(super) enum KvLayerView<'a> {
+    Ring { k: &'a Matrix, v: &'a Matrix },
+    Paged { pages: &'a [PageBuf], layer: usize, page_positions: usize },
+}
+
+impl<'a> KvLayerView<'a> {
+    /// The key row of position `j` (head-interleaved, `d_model` wide).
+    #[inline(always)]
+    pub(super) fn k_row(&self, j: usize) -> &'a [f32] {
+        match self {
+            KvLayerView::Ring { k, .. } => k.row(j),
+            KvLayerView::Paged { pages, layer, page_positions } => {
+                pages[j / page_positions].k[*layer].row(j % page_positions)
+            }
+        }
+    }
+
+    /// The value row of position `j` (head-interleaved, `d_model` wide).
+    #[inline(always)]
+    pub(super) fn v_row(&self, j: usize) -> &'a [f32] {
+        match self {
+            KvLayerView::Ring { v, .. } => v.row(j),
+            KvLayerView::Paged { pages, layer, page_positions } => {
+                pages[j / page_positions].v[*layer].row(j % page_positions)
+            }
+        }
+    }
+}
+
+/// A shared pool of fixed-size K/V pages plus the accounting that makes a
+/// byte budget enforceable: every page the pool ever owned is either on
+/// the free list, resident in some sequence's cache, or leaked by a
+/// quarantine — `free + resident + leaked == total`, always.
+///
+/// All pages are allocated eagerly at construction (clamped up so at least
+/// one `max_seq` sequence always fits); [`reserve`](Self::reserve) and
+/// [`release`](Self::release) only move `PageBuf`s between the free list
+/// and caches, so steady-state page churn never touches the heap.
+#[derive(Debug)]
+pub struct KvPagePool {
+    /// Recycled pages ready for checkout.
+    free: Vec<PageBuf>,
+    /// Pages allocated at construction (the budget, in pages).
+    total_pages: usize,
+    /// Pages permanently lost to quarantined caches.
+    leaked: usize,
+    /// High-water mark of checked-out (resident) pages.
+    peak_resident: usize,
+    /// Positions per page (`P`).
+    page_positions: usize,
+    n_layers: usize,
+    d_model: usize,
+    max_seq: usize,
+    /// `Some` ⇒ caches minted by this pool quantize rows on append.
+    quant: Option<FpFormat>,
+}
+
+impl KvPagePool {
+    /// Build a pool of `P`-position pages holding as many whole pages as
+    /// `budget_bytes` buys, clamped up so one full `max_seq` sequence
+    /// always fits (`budget_bytes == 0` ⇒ exactly that minimum). `quant`
+    /// selects FP8 fake-quant on append for every cache the pool mints.
+    pub fn new(
+        cfg: &ModelConfig,
+        page_positions: usize,
+        budget_bytes: usize,
+        quant: Option<FpFormat>,
+    ) -> KvPagePool {
+        assert!(page_positions > 0, "page size must be at least one position");
+        let mut pool = KvPagePool {
+            free: Vec::new(),
+            total_pages: 0,
+            leaked: 0,
+            peak_resident: 0,
+            page_positions,
+            n_layers: cfg.n_layers,
+            d_model: cfg.d_model,
+            max_seq: cfg.max_seq,
+            quant,
+        };
+        let min_pages = pool.pages_for(cfg.max_seq);
+        let total = (budget_bytes / pool.page_bytes()).max(min_pages);
+        pool.free =
+            (0..total).map(|_| PageBuf::new(cfg.n_layers, page_positions, cfg.d_model)).collect();
+        pool.total_pages = total;
+        pool
+    }
+
+    /// Positions per page (`P`).
+    pub fn page_positions(&self) -> usize {
+        self.page_positions
+    }
+
+    /// Pages needed to hold `positions` (ceiling division; 0 ⇒ 0).
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_positions)
+    }
+
+    /// Bytes of one page: `n_layers × 2 (K,V) × P × d_model × 4`. Storage
+    /// is f32 even under FP8 fake-quant.
+    pub fn page_bytes(&self) -> usize {
+        self.n_layers * 2 * self.page_positions * self.d_model * std::mem::size_of::<f32>()
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Pages currently checked out into live caches.
+    pub fn resident_pages(&self) -> usize {
+        self.total_pages - self.free.len() - self.leaked
+    }
+
+    /// Pages permanently lost to quarantined caches.
+    pub fn leaked_pages(&self) -> usize {
+        self.leaked
+    }
+
+    /// High-water mark of [`resident_pages`](Self::resident_pages).
+    pub fn peak_resident_pages(&self) -> usize {
+        self.peak_resident
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.total_pages * self.page_bytes()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_pages() * self.page_bytes()
+    }
+
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak_resident * self.page_bytes()
+    }
+
+    /// `true` if `positions` more positions' worth of pages can be
+    /// checked out right now.
+    pub fn can_reserve(&self, positions: usize) -> bool {
+        self.pages_for(positions) <= self.free.len()
+    }
+
+    /// Mint an empty paged cache bound to this pool's page size and quant
+    /// format. The page-table Vec is pre-sized for a full `max_seq`
+    /// sequence so later [`reserve`](Self::reserve) pushes never
+    /// reallocate; holds no pages until reserved.
+    pub fn new_cache(&self) -> KvCache {
+        let table_slots = self.pages_for(self.max_seq);
+        KvCache {
+            capacity: 0,
+            len: 0,
+            store: Store::Paged {
+                page_positions: self.page_positions,
+                pages: Vec::with_capacity(table_slots),
+            },
+            quant: self.quant.map(FpQuantLut::new),
+            quarantined: false,
+        }
+    }
+
+    /// Ensure `cache` can store `positions` more rows past its current
+    /// `len()`, checking out pages from the free list as needed. Returns
+    /// `false` — taking nothing — if the free list cannot cover the
+    /// shortfall (the caller preempts or requeues). All-or-nothing, never
+    /// allocates.
+    pub fn reserve(&mut self, cache: &mut KvCache, positions: usize) -> bool {
+        let pages = match &mut cache.store {
+            Store::Ring { .. } => panic!("reserve() on a ring cache"),
+            Store::Paged { pages, .. } => pages,
+        };
+        let needed_pages = self.pages_for(cache.len + positions);
+        let shortfall = needed_pages.saturating_sub(pages.len());
+        if shortfall > self.free.len() {
+            return false;
+        }
+        for _ in 0..shortfall {
+            pages.push(self.free.pop().expect("shortfall checked against free list"));
+        }
+        cache.capacity = pages.len() * self.page_positions;
+        self.peak_resident = self.peak_resident.max(self.resident_pages());
+        true
+    }
+
+    /// Take back every page `cache` holds and rewind it to empty, leaving
+    /// the husk (page-table Vec capacity, quant LUT) recyclable. Pages
+    /// from a healthy cache return to the free list; pages from a
+    /// **quarantined** cache are dropped and counted as leaked — they must
+    /// never store another sequence, and only the poisoned sequence's own
+    /// pages are lost.
+    pub fn release(&mut self, cache: &mut KvCache) {
+        let pages = match &mut cache.store {
+            Store::Ring { .. } => panic!("release() on a ring cache"),
+            Store::Paged { pages, .. } => pages,
+        };
+        if cache.quarantined {
+            self.leaked += pages.len();
+            pages.clear(); // buffers dropped, never recycled
+        } else {
+            self.free.append(pages);
+        }
+        cache.capacity = 0;
+        cache.len = 0;
     }
 }
 
@@ -209,6 +525,7 @@ mod tests {
         let mut c = KvCache::new(&cfg);
         assert_eq!((c.len(), c.capacity(), c.remaining()), (0, 4, 4));
         assert!(c.is_empty());
+        assert!(!c.is_paged());
         let krow: Vec<f32> = (0..8).map(|i| i as f32).collect();
         let vrow: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
         for layer in 0..3 {
@@ -216,9 +533,9 @@ mod tests {
         }
         c.advance(1);
         assert_eq!(c.len(), 1);
-        let (k, v) = c.layer(2);
-        assert_eq!(k.row(0), &krow[..]);
-        assert_eq!(v.row(0), &vrow[..]);
+        let view = c.layer(2);
+        assert_eq!(view.k_row(0), &krow[..]);
+        assert_eq!(view.v_row(0), &vrow[..]);
     }
 
     #[test]
@@ -235,7 +552,7 @@ mod tests {
         let row2 = [2.0f32; 8];
         c.store(0, 0, &row2, &row2);
         c.advance(1);
-        assert_eq!(c.layer(0).0.row(0), &row2[..]);
+        assert_eq!(c.layer(0).k_row(0), &row2[..]);
     }
 
     #[test]
@@ -254,13 +571,13 @@ mod tests {
         lut.fake_quant_row(&mut ek);
         let mut ev = vrow;
         lut.fake_quant_row(&mut ev);
-        let (k, v) = c.layer(0);
+        let view = c.layer(0);
         for i in 0..8 {
-            assert_eq!(k.row(0)[i].to_bits(), ek[i].to_bits());
-            assert_eq!(v.row(0)[i].to_bits(), ev[i].to_bits());
+            assert_eq!(view.k_row(0)[i].to_bits(), ek[i].to_bits());
+            assert_eq!(view.v_row(0)[i].to_bits(), ev[i].to_bits());
         }
         // and quantization actually engaged (some element moved)
-        assert!(k.row(0).iter().zip(&krow).any(|(a, b)| a.to_bits() != b.to_bits()));
+        assert!(view.k_row(0).iter().zip(&krow).any(|(a, b)| a.to_bits() != b.to_bits()));
     }
 
     #[test]
@@ -276,5 +593,112 @@ mod tests {
         assert!(c.is_quarantined());
         c.reset(); // reset recycles the ring, not the poison flag
         assert!(c.is_quarantined());
+    }
+
+    #[test]
+    fn paged_store_matches_ring_bytes_across_page_boundaries() {
+        let cfg = cfg();
+        // P = 3 with max_seq = 4: position 3 crosses into a second page.
+        let mut pool = KvPagePool::new(&cfg, 3, 0, None);
+        let mut ring = KvCache::new(&cfg);
+        let mut paged = pool.new_cache();
+        assert!(paged.is_paged());
+        assert_eq!(paged.capacity(), 0, "no pages before reserve");
+        assert!(pool.reserve(&mut paged, cfg.max_seq));
+        assert_eq!(paged.capacity(), 6, "2 pages × 3 positions");
+        for pos in 0..cfg.max_seq {
+            let krow: Vec<f32> = (0..8).map(|i| (pos * 8 + i) as f32).collect();
+            let vrow: Vec<f32> = krow.iter().map(|x| -x).collect();
+            for layer in 0..3 {
+                ring.store(layer, pos, &krow, &vrow);
+                paged.store(layer, pos, &krow, &vrow);
+            }
+            ring.advance(1);
+            paged.advance(1);
+        }
+        for layer in 0..3 {
+            let rv = ring.layer(layer);
+            let pv = paged.layer(layer);
+            for pos in 0..cfg.max_seq {
+                assert_eq!(rv.k_row(pos), pv.k_row(pos), "k layer {layer} pos {pos}");
+                assert_eq!(rv.v_row(pos), pv.v_row(pos), "v layer {layer} pos {pos}");
+            }
+        }
+        pool.release(&mut paged);
+        assert_eq!(paged.len(), 0);
+    }
+
+    #[test]
+    fn pool_reserve_is_all_or_nothing_and_accounting_balances() {
+        let cfg = cfg();
+        let mut pool = KvPagePool::new(&cfg, 2, 0, None);
+        assert_eq!(pool.total_pages(), 2, "budget 0 clamps to one max_seq sequence");
+        assert_eq!(pool.page_bytes(), 3 * 2 * 2 * 8 * 4);
+        assert_eq!(pool.total_bytes(), 2 * pool.page_bytes());
+
+        let mut a = pool.new_cache();
+        let mut b = pool.new_cache();
+        assert!(pool.reserve(&mut a, 2)); // 1 page
+        assert_eq!((pool.free_pages(), pool.resident_pages(), pool.leaked_pages()), (1, 1, 0));
+        assert!(!pool.reserve(&mut b, 3), "2 pages needed, 1 free");
+        assert_eq!(b.pages_held(), 0, "failed reserve takes nothing");
+        assert!(pool.reserve(&mut b, 2));
+        assert_eq!(pool.free_pages(), 0);
+        assert!(!pool.can_reserve(1));
+
+        // grow `a` past its page: fails dry, succeeds after b releases
+        a.advance(2);
+        assert_eq!(a.remaining(), 0);
+        assert!(!pool.reserve(&mut a, 1));
+        pool.release(&mut b);
+        assert!(pool.reserve(&mut a, 1));
+        assert_eq!(a.capacity(), 4);
+
+        assert_eq!(pool.peak_resident_pages(), 2);
+        assert_eq!(
+            pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+            pool.total_pages()
+        );
+    }
+
+    #[test]
+    fn quarantined_release_leaks_only_its_own_pages() {
+        let cfg = cfg();
+        let mut pool = KvPagePool::new(&cfg, 1, 16 * 1024, None);
+        let total = pool.total_pages();
+        assert!(total >= cfg.max_seq);
+
+        let mut healthy = pool.new_cache();
+        let mut poisoned = pool.new_cache();
+        assert!(pool.reserve(&mut healthy, 3));
+        assert!(pool.reserve(&mut poisoned, 2));
+        poisoned.quarantine();
+        pool.release(&mut poisoned);
+        assert_eq!(pool.leaked_pages(), 2, "exactly the poisoned cache's pages");
+        assert_eq!(pool.resident_pages(), 3, "healthy pages untouched");
+        pool.release(&mut healthy);
+        assert_eq!(pool.free_pages(), total - 2);
+        assert_eq!(
+            pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+            pool.total_pages()
+        );
+    }
+
+    #[test]
+    fn quantized_pool_mints_quantizing_caches() {
+        let cfg = cfg();
+        let mut pool = KvPagePool::new(&cfg, 4, 0, Some(FpFormat::E5M2));
+        let mut c = pool.new_cache();
+        assert_eq!(c.quant_format(), Some(FpFormat::E5M2));
+        assert!(pool.reserve(&mut c, 1));
+        let krow = [0.1f32, -1.7, 3.14, 0.0, 42.0, -0.003, 7.5, 1.0];
+        c.store(0, 0, &krow, &krow);
+        c.advance(1);
+        let lut = FpQuantLut::new(FpFormat::E5M2);
+        let mut expect = krow;
+        lut.fake_quant_row(&mut expect);
+        for i in 0..8 {
+            assert_eq!(c.layer(0).k_row(0)[i].to_bits(), expect[i].to_bits());
+        }
     }
 }

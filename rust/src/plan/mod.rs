@@ -50,8 +50,10 @@
 pub mod kv;
 mod lut;
 
-pub use kv::KvCache;
+pub use kv::{KvCache, KvPagePool};
 pub use lut::FpQuantLut;
+
+use kv::KvLayerView;
 
 use std::sync::Arc;
 
@@ -585,6 +587,21 @@ impl CompiledModel {
         KvCache::quantized(&self.config, fmt)
     }
 
+    /// A shared block-paged K/V pool for this model: `page_positions`
+    /// positions per page, as many pages as `budget_bytes` buys (clamped so
+    /// one `max_seq` sequence always fits), minting caches that quantize to
+    /// `quant` on append. Decode through pool-minted caches is bit-identical
+    /// to the per-sequence rings — see [`kv`] for the paged layout and
+    /// accounting contract.
+    pub fn kv_page_pool(
+        &self,
+        page_positions: usize,
+        budget_bytes: usize,
+        quant: Option<FpFormat>,
+    ) -> KvPagePool {
+        KvPagePool::new(&self.config, page_positions, budget_bytes, quant)
+    }
+
     /// Full-window forward pass into the arena; returns the logits buffer
     /// `[seq, vocab]`. Allocation-free once `s` is warm.
     ///
@@ -730,6 +747,15 @@ impl CompiledModel {
                     cache.len(),
                     cfg.max_seq
                 );
+                // a ring always has max_seq reserved; a paged cache only
+                // what the pool checked out (KvPagePool::reserve first)
+                assert!(
+                    rows <= cache.remaining(),
+                    "{rows} new tokens exceed the cache's reserved capacity \
+                     ({} of {} positions free)",
+                    cache.remaining(),
+                    cache.capacity()
+                );
             }
             KvMode::Batch(caches) => {
                 assert!(rows >= 1, "decode batch must be non-empty");
@@ -743,6 +769,11 @@ impl CompiledModel {
                         "refusing to decode through a quarantined kv cache"
                     );
                     assert!(c.len() < cfg.max_seq, "a batched sequence is already at max_seq");
+                    assert!(
+                        c.remaining() >= 1,
+                        "a batched sequence has no reserved position left \
+                         (KvPagePool::reserve before each step)"
+                    );
                 }
             }
         }
@@ -781,13 +812,12 @@ impl CompiledModel {
                         cache.store(layer, base + t, &row[d..2 * d], &row[2 * d..]);
                     }
                     s.ctx.resize_to(rows, d);
-                    let (kc, vc) = cache.layer(layer);
+                    let view = cache.layer(layer);
                     for t in 0..rows {
                         attend_cached_row(
                             cfg,
                             &s.qkv.row(t)[..d],
-                            kc,
-                            vc,
+                            view,
                             base + t,
                             s.ctx.row_mut(t),
                             &mut s.scores,
@@ -801,12 +831,11 @@ impl CompiledModel {
                         let pos = caches[t].len();
                         let row = s.qkv.row(t);
                         caches[t].store(layer, pos, &row[d..2 * d], &row[2 * d..]);
-                        let (kc, vc) = caches[t].layer(layer);
+                        let view = caches[t].layer(layer);
                         attend_cached_row(
                             cfg,
                             &s.qkv.row(t)[..d],
-                            kc,
-                            vc,
+                            view,
                             pos,
                             s.ctx.row_mut(t),
                             &mut s.scores,
@@ -973,17 +1002,18 @@ fn attention_into(
 }
 
 /// Causal attention for **one** query row at absolute position `pos`,
-/// reading K/V rows `0..=pos` from a cache layer and accumulating into the
-/// (zeroed) context row. This is the per-`(head, i)` body of
+/// reading K/V rows `0..=pos` from a cache layer view and accumulating into
+/// the (zeroed) context row. This is the per-`(head, i)` body of
 /// [`attention_into`] with the K/V loads redirected at the cache — the same
 /// dot/softmax/weighted-sum operations in the same order, which is what
-/// makes cached decode bit-identical to full recompute (exact cache).
-#[allow(clippy::too_many_arguments)]
+/// makes cached decode bit-identical to full recompute (exact cache). The
+/// view resolves each position to its row (ring offset or page cell)
+/// *outside* the arithmetic, so the ring and paged layouts produce
+/// identical bits by construction.
 fn attend_cached_row(
     cfg: &ModelConfig,
     qrow: &[f32],
-    kc: &Matrix,
-    vc: &Matrix,
+    kv: KvLayerView<'_>,
     pos: usize,
     crow: &mut [f32],
     scores: &mut [f32],
@@ -996,7 +1026,7 @@ fn attend_cached_row(
         let off = head * dh;
         let q = &qrow[off..off + dh];
         for (j, sc) in scores.iter_mut().enumerate() {
-            let krow = &kc.row(j)[off..off + dh];
+            let krow = &kv.k_row(j)[off..off + dh];
             let mut dot = 0.0f32;
             for t in 0..dh {
                 dot += q[t] * krow[t];
@@ -1007,7 +1037,7 @@ fn attend_cached_row(
         k.softmax(scores);
         let c = &mut crow[off..off + dh];
         for (j, &p) in scores.iter().enumerate() {
-            let vrow = &vc.row(j)[off..off + dh];
+            let vrow = &kv.v_row(j)[off..off + dh];
             for t in 0..dh {
                 c[t] += p * vrow[t];
             }

@@ -80,6 +80,9 @@ pub enum RecipeError {
     /// The admission queue needs at least one slot (depth 0 would shed
     /// every request).
     QueueDepthZero,
+    /// A KV byte budget only means something to the paged pool — with
+    /// rings the bound is `max_batch × max_seq` by construction.
+    KvBudgetNeedsPaging,
     /// Not one of [`PRESET_NAMES`].
     UnknownPreset(String),
     /// Malformed JSON, an unknown key, or an unparseable field value.
@@ -119,6 +122,10 @@ impl fmt::Display for RecipeError {
             RecipeError::QueueDepthZero => {
                 f.write_str("queue_depth must be at least 1 (0 would shed every request)")
             }
+            RecipeError::KvBudgetNeedsPaging => f.write_str(
+                "kv_budget_bytes needs the paged pool: set kv_page_positions \
+                 (--kv-page) too",
+            ),
             RecipeError::UnknownPreset(name) => {
                 write!(f, "unknown preset {name:?} (try: {})", PRESET_NAMES.join(", "))
             }
@@ -161,6 +168,14 @@ pub struct QuantRecipe {
     /// `Some(fmt)` ⇒ generation K/V caches are fake-quantized to this FP
     /// format; `None` = exact f32 caches.
     pub kv_quant: Option<FpFormat>,
+    /// Positions per KV page. `> 0` ⇒ generation K/V storage is the
+    /// block-paged [`crate::plan::KvPagePool`] (resident bytes scale with
+    /// live tokens); `0` = per-sequence contiguous rings.
+    pub kv_page_positions: usize,
+    /// Byte budget of the paged KV pool (admission + preemption bound).
+    /// `0` = auto: the ring plan's worst case, `max_batch` full-length
+    /// sequences. Requires `kv_page_positions > 0`.
+    pub kv_budget_bytes: usize,
     /// Coordinator: max in-flight sequences / max scoring batch.
     pub max_batch: usize,
     /// Coordinator: dynamic-batching wait window (PJRT scoring backend).
@@ -199,6 +214,8 @@ impl RecipeBuilder {
                 lorc: None,
                 weights: WeightLayout::Dense,
                 kv_quant: None,
+                kv_page_positions: 0,
+                kv_budget_bytes: 0,
                 max_batch: crate::runtime::SCORE_BATCH,
                 max_wait_ms: 2,
                 queue_depth: crate::coordinator::DEFAULT_QUEUE_DEPTH,
@@ -257,6 +274,18 @@ impl RecipeBuilder {
 
     pub fn kv_quant(mut self, f: Option<FpFormat>) -> Self {
         self.r.kv_quant = f;
+        self
+    }
+
+    /// Positions per KV page (0 = contiguous rings, no paging).
+    pub fn kv_page(mut self, positions: usize) -> Self {
+        self.r.kv_page_positions = positions;
+        self
+    }
+
+    /// Byte budget of the paged KV pool (0 = auto ring-equivalent).
+    pub fn kv_budget(mut self, bytes: usize) -> Self {
+        self.r.kv_budget_bytes = bytes;
         self
     }
 
@@ -354,6 +383,9 @@ impl QuantRecipe {
         if self.queue_depth == 0 {
             return Err(RecipeError::QueueDepthZero);
         }
+        if self.kv_budget_bytes > 0 && self.kv_page_positions == 0 {
+            return Err(RecipeError::KvBudgetNeedsPaging);
+        }
         Ok(())
     }
 
@@ -395,6 +427,8 @@ impl QuantRecipe {
             opts: self.engine_opts(),
             policy: self.batch_policy(),
             kv_quant: self.kv_quant,
+            kv_page_positions: self.kv_page_positions,
+            kv_budget_bytes: self.kv_budget_bytes,
             sidecar: if self.weights.is_dense() { None } else { sidecar },
             queue_depth: self.queue_depth,
             deadline: if self.deadline_ms > 0 {
@@ -430,6 +464,12 @@ impl QuantRecipe {
         }
         if let Some(f) = self.kv_quant {
             s.push_str(&format!("  kv {}", f.name().to_ascii_lowercase()));
+        }
+        if self.kv_page_positions > 0 {
+            s.push_str(&format!("  paged:{}", self.kv_page_positions));
+            if self.kv_budget_bytes > 0 {
+                s.push_str(&format!("/{}B", self.kv_budget_bytes));
+            }
         }
         if self.kernel_tier.is_fast() {
             s.push_str("  kernels=fast");
@@ -496,6 +536,8 @@ impl QuantRecipe {
             ("gemv_threads".to_string(), Json::Num(self.weights.threads() as f64)),
             ("kernels".to_string(), Json::Str(self.kernel_tier.name().to_string())),
             ("kv_cache".to_string(), kv),
+            ("kv_page_positions".to_string(), Json::Num(self.kv_page_positions as f64)),
+            ("kv_budget_bytes".to_string(), Json::Num(self.kv_budget_bytes as f64)),
             ("max_batch".to_string(), Json::Num(self.max_batch as f64)),
             ("max_wait_ms".to_string(), Json::Num(self.max_wait_ms as f64)),
             ("queue_depth".to_string(), Json::Num(self.queue_depth as f64)),
@@ -507,7 +549,7 @@ impl QuantRecipe {
     /// typo in a reproducibility artifact must not silently change the
     /// run); absent keys take the [`RecipeBuilder`] defaults.
     pub fn from_json(text: &str) -> Result<QuantRecipe, RecipeError> {
-        const KEYS: [&str; 18] = [
+        const KEYS: [&str; 20] = [
             "name",
             "weight",
             "act",
@@ -522,6 +564,8 @@ impl QuantRecipe {
             "gemv_threads",
             "kernels",
             "kv_cache",
+            "kv_page_positions",
+            "kv_budget_bytes",
             "max_batch",
             "max_wait_ms",
             "queue_depth",
@@ -655,6 +699,8 @@ impl QuantRecipe {
                 }
             }
         }
+        b = b.kv_page(usize_field("kv_page_positions", 0)?);
+        b = b.kv_budget(usize_field("kv_budget_bytes", 0)?);
         b = b.max_batch(usize_field("max_batch", crate::runtime::SCORE_BATCH)?);
         b = b.max_wait_ms(usize_field("max_wait_ms", 2)? as u64);
         b = b.queue_depth(usize_field(
@@ -802,6 +848,15 @@ impl QuantRecipe {
                 },
             };
         }
+        // Paged KV pool: a valueless knob is rejected, not defaulted, and
+        // a budget without paging is the typed validation error below.
+        for knob in ["kv-page", "kv-budget"] {
+            if args.flag(knob) && args.get(knob).is_none() {
+                return Err(format!("--{knob} needs a value"));
+            }
+        }
+        r.kv_page_positions = args.get_usize("kv-page", r.kv_page_positions)?;
+        r.kv_budget_bytes = args.get_usize("kv-budget", r.kv_budget_bytes)?;
         // Kernel tier: a valueless `--kernels` must not silently keep the
         // base tier (same policy as --recipe / --gemv-threads).
         if args.flag("kernels") && args.get("kernels").is_none() {
@@ -1096,6 +1151,45 @@ mod tests {
         // explicit oracle is accepted and is the same as the default
         let r = QuantRecipe::from_args(&argv(&["--kernels", "oracle"]), "w16").unwrap();
         assert_eq!(r.kernel_tier, KernelTier::Oracle);
+    }
+
+    #[test]
+    fn kv_paging_knob_flags_json_and_views() {
+        // default: rings everywhere, no budget, no paged summary tag
+        let base = QuantRecipe::preset("w4a8-fp").unwrap();
+        assert_eq!(base.kv_page_positions, 0);
+        assert_eq!(base.kv_budget_bytes, 0);
+        assert!(!base.summary().contains("paged"));
+        // --kv-page / --kv-budget thread through to the coordinator view
+        let r = QuantRecipe::from_args(
+            &argv(&["--kv-page", "16", "--kv-budget", "65536"]),
+            "w4a8-fp",
+        )
+        .unwrap();
+        assert_eq!(r.kv_page_positions, 16);
+        assert_eq!(r.kv_budget_bytes, 65536);
+        assert!(r.summary().contains("paged:16/65536B"));
+        // and survive a JSON round trip field-for-field
+        let back = QuantRecipe::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // budget without paging is the typed rejection, on every path
+        assert_eq!(
+            QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+                .kv_budget(4096)
+                .build(),
+            Err(RecipeError::KvBudgetNeedsPaging)
+        );
+        assert!(QuantRecipe::from_args(&argv(&["--kv-budget", "4096"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_json(r#"{"kv_budget_bytes":4096}"#).is_err());
+        // valueless knobs are rejected, not defaulted
+        assert!(QuantRecipe::from_args(&argv(&["--kv-page"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--kv-page", "8", "--kv-budget"]), "w4a8-fp")
+            .is_err());
+        // paging without a budget is fine (auto ring-equivalent bound)
+        let r = QuantRecipe::from_args(&argv(&["--kv-page", "8"]), "w4a8-fp").unwrap();
+        assert_eq!(r.kv_page_positions, 8);
+        assert_eq!(r.kv_budget_bytes, 0);
+        assert!(r.summary().contains("paged:8"));
     }
 
     #[test]

@@ -67,6 +67,8 @@ fn cfg_with(ck: Checkpoint, max_batch: usize, faults: Option<FaultPlan>) -> Coor
         queue_depth: 64,
         deadline: None,
         faults,
+        kv_page_positions: 0,
+        kv_budget_bytes: 0,
     }
 }
 
@@ -454,6 +456,78 @@ fn chaos_with_fast_tier_pool_stays_typed_and_quarantined() {
         report.faulted
     );
     assert!(degraded > 0, "the seeded schedule must trip at least one fault");
+}
+
+/// Pool-exhaustion chaos: the paged KV pool is squeezed to 4 pages while
+/// three clients push 5-token prompts growing to 11 positions each (up to
+/// 9 pages of concurrent demand) *and* seeded panics leak pages through
+/// quarantine. Every submission still gets exactly one typed response,
+/// the loop terminates (admission waits and preemption instead of
+/// deadlocking), survivors are bit-identical to the dense reference, and
+/// the pool's books balance: free + resident + leaked = total pages.
+#[test]
+fn pool_exhaustion_chaos_keeps_typed_responses_and_balanced_books() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    // one page = n_layers × (K,V) × P positions × d_model × 4 bytes
+    let page_bytes = 2 * 2 * 4 * 24 * 4;
+    for seed in [11u64, 22, 33] {
+        let plan =
+            FaultPlan::parse("prefill:p=0.2,decode:p=0.1").unwrap().with_seed(seed);
+        let mut cfg = cfg_with(ck.clone(), 4, Some(plan));
+        cfg.kv_page_positions = 4;
+        cfg.kv_budget_bytes = 4 * page_bytes;
+        let coord = Coordinator::new(cfg);
+
+        let mut handles = Vec::new();
+        for c in 0..3usize {
+            let client = coord.gen_client().unwrap();
+            handles.push(std::thread::spawn(move || {
+                (0..3)
+                    .map(|i| {
+                        let p = prompt_for(c, i);
+                        (p.clone(), client.generate(p, 6))
+                    })
+                    .collect::<Vec<_>>()
+            }));
+        }
+        let report = run_within(coord, 30);
+
+        let mut responses = 0usize;
+        for h in handles {
+            for (prompt, res) in h.join().unwrap() {
+                responses += 1;
+                match res {
+                    Ok(Generated { tokens, .. }) => assert_eq!(
+                        tokens,
+                        greedy_reference(&reference, &prompt, 6),
+                        "seed {seed}: survivors (preempted-and-requeued included) \
+                         must match the reference bit for bit"
+                    ),
+                    Err(ServeError::Overloaded)
+                    | Err(ServeError::Faulted(_))
+                    | Err(ServeError::DeadlineExceeded { .. })
+                    | Err(ServeError::ShuttingDown) => {}
+                    Err(other) => panic!("seed {seed}: untyped failure {other:?}"),
+                }
+            }
+        }
+        assert_eq!(responses, 9, "seed {seed}: exactly one response per submission");
+        assert_eq!(report.requests + report.shed_overloaded, 9, "seed {seed}: books");
+        assert_eq!(report.kv_pages_total, 4, "seed {seed}: the budget bought 4 pages");
+        assert_eq!(
+            report.kv_pages_free + report.kv_pages_resident + report.kv_pages_leaked,
+            report.kv_pages_total,
+            "seed {seed}: pool accounting must balance"
+        );
+        assert_eq!(report.kv_pages_resident, 0, "seed {seed}: nothing in flight at exit");
+        if report.quarantined_caches == 0 {
+            assert_eq!(report.kv_pages_leaked, 0, "seed {seed}: leaks only via quarantine");
+        }
+        assert!(report.kv_pages_peak <= report.kv_pages_total, "seed {seed}");
+        assert_eq!(report.kv_pool_bytes, 4 * page_bytes, "seed {seed}");
+    }
 }
 
 /// Bounded admission end to end: a depth-1 queue sheds every submission

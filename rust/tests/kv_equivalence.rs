@@ -217,6 +217,61 @@ fn quantized_cache_is_split_invariant_and_actually_quantizes() {
 }
 
 #[test]
+fn page_boundary_splits_are_bit_identical_to_forward() {
+    // Paged-pool extension of contract (1): prompt/decode splits landing
+    // exactly on, one before, and one after a page boundary (and a later
+    // boundary), plus chunked prefill whose chunks straddle a page edge —
+    // all bit-identical to the full-recompute forward. tests/kv_paged.rs
+    // carries the exhaustive paged-vs-ring matrix; this pins the boundary
+    // cases into the incremental-decode contract itself.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xB0DA + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = stack_model(&ck, NumericFormat::F16);
+        let mut s = model.scratch();
+        let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let full = model.forward(&window, &mut s).clone();
+        for p in [3usize, 4] {
+            for split in [p - 1, p, p + 1, 2 * p] {
+                let mut pool = model.kv_page_pool(p, 0, None);
+                let mut cache = pool.new_cache();
+                assert!(pool.reserve(&mut cache, window.len()), "reserve the whole window");
+                check_split(
+                    &model,
+                    &mut cache,
+                    &window,
+                    split,
+                    &full,
+                    &format!("{arch:?} page={p}"),
+                );
+                pool.release(&mut cache);
+                assert_eq!(pool.free_pages(), pool.total_pages(), "{arch:?} page={p}");
+            }
+        }
+        // chunked prefill over 4-position pages with chunk boundaries at
+        // 3 and 7 — both straddle a page edge (4, 8)
+        let mut pool = model.kv_page_pool(4, 0, None);
+        let mut cache = pool.new_cache();
+        assert!(pool.reserve(&mut cache, window.len()));
+        let mut done = 0usize;
+        for chunk in [3usize, 4, 5] {
+            let pre = model.prefill(&window[done..done + chunk], &mut cache, &mut s);
+            for t in 0..chunk {
+                assert_eq!(
+                    bits(pre.row(t)),
+                    bits(full.row(done + t)),
+                    "{arch:?}: straddling chunk row {}",
+                    done + t
+                );
+            }
+            done += chunk;
+        }
+        assert_eq!(cache.len(), cfg.max_seq);
+    }
+}
+
+#[test]
 fn batched_decode_bit_identical_to_solo_decode() {
     for arch in [Arch::Opt, Arch::Llama] {
         let cfg = tiny(arch);

@@ -1,0 +1,389 @@
+//! The paged-KV contract (ISSUE 8's tentpole gate):
+//!
+//! 1. A block-paged cache checked out of a [`KvPagePool`] produces logits
+//!    **bit-identical** to the contiguous-ring cache token for token —
+//!    across both architectures, exact and FP8-quantized KV, every page
+//!    size (including degenerate 1-position pages and one page spanning
+//!    the whole ring), prompt/decode splits landing exactly on / one
+//!    before / one after a page boundary, chunked prefill whose chunks
+//!    straddle pages, and incremental page-at-a-time reservation (the
+//!    coordinator's decode pattern).
+//! 2. Pages recycle: release returns them to the free list and a reused
+//!    page serves a fresh sequence bit-identically — stale rows from the
+//!    previous tenant are invisible. Quarantined caches leak exactly
+//!    their own pages; the books (`free + resident + leaked == total`)
+//!    balance at every step.
+//! 3. Under a byte budget too small for the offered load, the
+//!    coordinator preempts the youngest sequence, requeues it, and every
+//!    client still receives the bit-exact greedy tokens — preemption is
+//!    invisible in the response, visible only in the report counters.
+
+use std::sync::mpsc::sync_channel;
+use std::time::Duration;
+
+use zeroquant_fp::coordinator::{
+    BatchPolicy, Coordinator, CoordinatorConfig, Generated, ScoreBackend, ServeReport,
+};
+use zeroquant_fp::engine::EngineOpts;
+use zeroquant_fp::formats::FpFormat;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
+use zeroquant_fp::rng::Rng;
+
+fn tiny(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        name: format!("kv-paged-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 12,
+    }
+}
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+fn random_window(len: usize, vocab: usize, rng: &mut Rng) -> Vec<u16> {
+    (0..len).map(|_| rng.below(vocab) as u16).collect()
+}
+
+/// Run `window` as `prefill(window[..split])` + one `decode_step` per
+/// remaining token through `cache`, returning the bit pattern of every
+/// produced logits row. The cache must already have capacity for the
+/// whole window (ring, or paged with an up-front reservation).
+fn rows_via(
+    model: &CompiledModel,
+    cache: &mut KvCache,
+    window: &[u16],
+    split: usize,
+) -> Vec<Vec<u32>> {
+    let mut s = model.scratch();
+    let mut out = Vec::with_capacity(window.len());
+    let pre = model.prefill(&window[..split], cache, &mut s);
+    assert_eq!(pre.rows, split);
+    for t in 0..split {
+        out.push(bits(pre.row(t)));
+    }
+    for &tok in &window[split..] {
+        out.push(bits(model.decode_step(tok, cache, &mut s).row(0)));
+    }
+    assert_eq!(cache.len(), window.len());
+    out
+}
+
+fn ring_cache(model: &CompiledModel, quant: Option<FpFormat>) -> KvCache {
+    match quant {
+        None => model.kv_cache(),
+        Some(f) => model.kv_cache_quantized(f),
+    }
+}
+
+/// The headline gate: every (arch × KV format × page size × boundary
+/// split) cell of the matrix, paged vs ring, bit for bit. Splits are
+/// chosen to land exactly on, one before, and one after a page boundary.
+#[test]
+fn paged_decode_bit_identical_to_ring_across_formats_and_page_sizes() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xFA6ED + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        for quant in [None, Some(FpFormat::E4M3), Some(FpFormat::E5M2)] {
+            for p in [1usize, 3, 4, cfg.max_seq] {
+                // splits around the first page boundary, plus the two ends
+                let mut splits = vec![1, p.max(2) - 1, p, p + 1, window.len()];
+                splits.retain(|s| (1..=window.len()).contains(s));
+                splits.dedup();
+                for &split in &splits {
+                    let what = format!(
+                        "{arch:?} kv={:?} page={p} split={split}",
+                        quant.map(|f| f.name())
+                    );
+                    let mut ring = ring_cache(&model, quant);
+                    let expect = rows_via(&model, &mut ring, &window, split);
+                    let mut pool = model.kv_page_pool(p, 0, quant);
+                    let mut cache = pool.new_cache();
+                    assert!(pool.reserve(&mut cache, window.len()), "{what}: reserve");
+                    assert_eq!(cache.pages_held(), pool.pages_for(window.len()), "{what}");
+                    let got = rows_via(&model, &mut cache, &window, split);
+                    assert_eq!(got, expect, "{what}: paged logits differ from ring");
+                    pool.release(&mut cache);
+                    assert_eq!(pool.free_pages(), pool.total_pages(), "{what}: release");
+                }
+            }
+        }
+    }
+}
+
+/// The coordinator never reserves the whole window up front: it reserves
+/// the prompt at admission and then one position at a time as decode
+/// fills each page. That incremental pattern must be bit-identical to
+/// the up-front reservation, and resident pages must track exactly
+/// `pages_for(live positions)` at every step.
+#[test]
+fn incremental_page_reserve_matches_upfront_reservation() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0x1CE + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let split = 5usize;
+        let p = 3usize;
+
+        let mut up_pool = model.kv_page_pool(p, 0, None);
+        let mut up = up_pool.new_cache();
+        assert!(up_pool.reserve(&mut up, window.len()));
+        let expect = rows_via(&model, &mut up, &window, split);
+
+        let mut pool = model.kv_page_pool(p, 0, None);
+        let mut cache = pool.new_cache();
+        let mut s = model.scratch();
+        assert!(pool.reserve(&mut cache, split));
+        assert_eq!(pool.resident_pages(), pool.pages_for(split));
+        let pre = model.prefill(&window[..split], &mut cache, &mut s);
+        let mut got: Vec<Vec<u32>> = (0..split).map(|t| bits(pre.row(t))).collect();
+        for &tok in &window[split..] {
+            // a no-op while the tail page has room, a one-page checkout
+            // when it does not — exactly the coordinator's pre-step call
+            assert!(pool.reserve(&mut cache, 1), "{arch:?}: step reserve");
+            got.push(bits(model.decode_step(tok, &mut cache, &mut s).row(0)));
+            assert_eq!(pool.resident_pages(), pool.pages_for(cache.len()), "{arch:?}");
+        }
+        assert_eq!(got, expect, "{arch:?}: incremental reserve changed the bits");
+        pool.release(&mut cache);
+        assert_eq!(pool.resident_pages(), 0);
+    }
+}
+
+/// Chunked prefill whose chunk boundaries straddle page boundaries
+/// (chunks [3,4,3,2] over 4-position pages: boundaries 3/7/10 against
+/// page edges 4/8) — bit-identical to the full-recompute forward.
+#[test]
+fn chunked_prefill_straddling_page_boundaries_is_bit_identical() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xC41C + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let model = CompiledModel::compile(&ck, EngineOpts::default());
+        let mut s = model.scratch();
+        let window = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+        let full = model.forward(&window, &mut s).clone();
+        let mut pool = model.kv_page_pool(4, 0, None);
+        let mut cache = pool.new_cache();
+        let mut done = 0usize;
+        for chunk in [3usize, 4, 3, 2] {
+            assert!(pool.reserve(&mut cache, chunk));
+            let pre = model.prefill(&window[done..done + chunk], &mut cache, &mut s);
+            for t in 0..chunk {
+                assert_eq!(
+                    bits(pre.row(t)),
+                    bits(full.row(done + t)),
+                    "{arch:?}: chunked paged row {}",
+                    done + t
+                );
+            }
+            done += chunk;
+        }
+        assert_eq!(cache.len(), cfg.max_seq);
+        assert_eq!(cache.pages_held(), pool.pages_for(cfg.max_seq));
+    }
+}
+
+/// Pages recycle through the free list, a recycled page serves a fresh
+/// sequence bit-identically, and a quarantined cache leaks exactly its
+/// own pages — with the accounting identity holding throughout.
+#[test]
+fn pages_recycle_and_quarantine_leaks_only_its_own() {
+    let cfg = tiny(Arch::Opt);
+    let mut rng = Rng::seeded(0x2EC7C1E);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let model = CompiledModel::compile(&ck, EngineOpts::default());
+    let first = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+    let second = random_window(cfg.max_seq, cfg.vocab_size, &mut rng);
+
+    let mut pool = model.kv_page_pool(3, 0, None);
+    assert_eq!(pool.total_pages(), pool.pages_for(cfg.max_seq), "budget 0 = one full ring");
+
+    // tenant A fills every page, then leaves
+    let mut a = pool.new_cache();
+    assert!(pool.reserve(&mut a, first.len()));
+    rows_via(&model, &mut a, &first, 4);
+    assert_eq!(pool.free_pages(), 0);
+    pool.release(&mut a);
+    assert_eq!(pool.free_pages(), pool.total_pages());
+    assert_eq!(pool.peak_resident_pages(), pool.total_pages());
+
+    // tenant B through the recycled pages must match a fresh ring
+    let mut ring = model.kv_cache();
+    let expect = rows_via(&model, &mut ring, &second, 7);
+    let mut b = pool.new_cache();
+    assert!(pool.reserve(&mut b, second.len()));
+    let got = rows_via(&model, &mut b, &second, 7);
+    assert_eq!(got, expect, "recycled pages leaked the previous tenant's rows");
+    pool.release(&mut b);
+
+    // a quarantined cache leaks exactly the pages it held
+    let mut poisoned = pool.new_cache();
+    assert!(pool.reserve(&mut poisoned, 2)); // one 3-position page
+    poisoned.quarantine();
+    pool.release(&mut poisoned);
+    assert_eq!(pool.leaked_pages(), 1);
+    assert_eq!(pool.resident_pages(), 0);
+    assert_eq!(
+        pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+        pool.total_pages(),
+        "the books must balance after a leak"
+    );
+    // the leak shrinks what the pool can ever serve again
+    assert!(!pool.can_reserve(cfg.max_seq));
+    assert!(pool.can_reserve(3 * (pool.total_pages() - 1)));
+}
+
+// ---- coordinator-level preemption ------------------------------------
+
+fn ck16() -> Checkpoint {
+    let cfg = ModelConfig {
+        name: "kv-paged-serve".into(),
+        arch: Arch::Opt,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 16,
+    };
+    let mut rng = Rng::seeded(0xD0D0);
+    Checkpoint::random(&cfg, &mut rng)
+}
+
+fn paged_cfg(ck: Checkpoint, page: usize, budget: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        backend: ScoreBackend::Compiled,
+        ck,
+        opts: EngineOpts::default(),
+        policy: BatchPolicy { max_batch: 4, max_wait: Duration::ZERO },
+        kv_quant: None,
+        sidecar: None,
+        queue_depth: 64,
+        deadline: None,
+        faults: None,
+        kv_page_positions: page,
+        kv_budget_bytes: budget,
+    }
+}
+
+fn run_within(coord: Coordinator, secs: u64) -> ServeReport {
+    let (tx, rx) = sync_channel(1);
+    let h = std::thread::spawn(move || {
+        let _ = tx.send(coord.run());
+    });
+    let report = rx
+        .recv_timeout(Duration::from_secs(secs))
+        .expect("serving loop must terminate within the watchdog timeout")
+        .expect("serving loop must return a report, not an error");
+    h.join().unwrap();
+    report
+}
+
+fn greedy_reference(model: &CompiledModel, prompt: &[u16], max_new: usize) -> Vec<u16> {
+    let mut scratch = model.scratch();
+    let mut cache = model.kv_cache();
+    let mut out = Vec::with_capacity(max_new);
+    let logits = model.prefill(prompt, &mut cache, &mut scratch);
+    let mut tok = argmax(logits.row(prompt.len() - 1)) as u16;
+    out.push(tok);
+    for _ in 1..max_new {
+        let logits = model.decode_step(tok, &mut cache, &mut scratch);
+        tok = argmax(logits.row(0)) as u16;
+        out.push(tok);
+    }
+    out
+}
+
+fn prompt_for(i: usize) -> Vec<u16> {
+    (0..5).map(|k| ((i * 11 + k * 3) % 48) as u16).collect()
+}
+
+/// Run six 5-token-prompt / 6-new-token generations through a paged
+/// coordinator, all enqueued before the loop starts so admission sees
+/// them together. Returns (per-request tokens, report).
+fn serve_six(ck: &Checkpoint, budget: usize) -> (Vec<Vec<u16>>, ServeReport) {
+    let coord = Coordinator::new(paged_cfg(ck.clone(), 4, budget));
+    let mut handles = Vec::new();
+    for i in 0..6usize {
+        let client = coord.gen_client().unwrap();
+        handles.push(std::thread::spawn(move || client.generate(prompt_for(i), 6)));
+    }
+    // let every submission land in the (deep enough) queue before the
+    // loop starts, so at least two sequences are always in flight and a
+    // too-small pool must preempt rather than serialize
+    std::thread::sleep(Duration::from_millis(300));
+    let report = run_within(coord, 60);
+    let tokens = handles
+        .into_iter()
+        .map(|h| {
+            let Generated { tokens, prompt_len, .. } =
+                h.join().unwrap().expect("paged serving must answer Ok, not shed");
+            assert_eq!(prompt_len, 5);
+            tokens
+        })
+        .collect();
+    (tokens, report)
+}
+
+/// A 4-page budget against three concurrent sequences that each grow to
+/// 11 positions (3 pages): the pool runs dry mid-decode, the youngest
+/// sequence is evicted and requeued, and *every* client still gets the
+/// bit-exact greedy tokens — then the same traffic under the auto
+/// (ring-equivalent) budget finishes preemption-free with identical bits.
+#[test]
+fn preemption_under_tiny_budget_is_bit_identical_and_balanced() {
+    let ck = ck16();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    // n_layers × {K,V} × page positions × d_model × sizeof(f32)
+    let page_bytes = 2 * 2 * 4 * 24 * 4;
+
+    let (tokens, report) = serve_six(&ck, 4 * page_bytes);
+    for (i, toks) in tokens.iter().enumerate() {
+        assert_eq!(
+            *toks,
+            greedy_reference(&reference, &prompt_for(i), 6),
+            "request {i}: preemption must not change the tokens"
+        );
+    }
+    assert_eq!(report.requests, 6);
+    assert_eq!(report.gen_requests, 6, "requeues must not double-count first attempts");
+    assert!(report.kv_preemptions > 0, "a 4-page pool against 9 pages of demand must preempt");
+    assert_eq!(
+        report.kv_requeues, report.kv_preemptions,
+        "every preempted sequence re-enters flight exactly once per eviction"
+    );
+    assert_eq!(report.kv_pages_total, 4);
+    assert_eq!(report.kv_pool_bytes, 4 * page_bytes);
+    assert_eq!(
+        report.kv_pages_free + report.kv_pages_resident + report.kv_pages_leaked,
+        report.kv_pages_total,
+        "the books must balance at drain"
+    );
+    assert_eq!(report.kv_pages_resident, 0, "drain must return every page");
+    assert_eq!(report.kv_pages_leaked, 0, "no panics, so no quarantine leaks");
+    assert!(report.kv_pages_peak <= report.kv_pages_total);
+    // the loop samples resident bytes at phase boundaries while the pool
+    // tracks its page high-water exactly, so sampled ≤ exact
+    assert!(report.kv_peak_bytes > 0);
+    assert!(report.kv_peak_bytes <= report.kv_pages_peak * page_bytes);
+
+    // control: auto budget sizes the pool to the ring plan's bound, so
+    // the identical traffic must finish without a single preemption
+    let (easy_tokens, easy) = serve_six(&ck, 0);
+    assert_eq!(easy_tokens, tokens, "budget pressure must be invisible in the tokens");
+    assert_eq!(easy.kv_preemptions, 0, "auto budget must never preempt");
+    assert_eq!(easy.kv_requeues, 0);
+    assert!(easy.kv_pages_total > 4, "auto budget covers max_active full rings");
+}

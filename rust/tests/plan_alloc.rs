@@ -16,7 +16,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use zeroquant_fp::coordinator::ServingStack;
 use zeroquant_fp::engine::EngineOpts;
-use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::CompiledModel;
@@ -131,6 +131,42 @@ fn steady_state_decode_is_allocation_free() {
             after - before,
             0,
             "kv serving loop allocated ({arch:?}, act={})",
+            fmt.name()
+        );
+
+        // ---- the paged pool: page churn is allocation-free -------------
+        // Pages are minted eagerly at pool construction and page tables
+        // pre-size to the deepest walk, so once a cache has been through
+        // one full admit → prefill → page-at-a-time decode → release
+        // cycle, every later cycle just moves PageBufs between the free
+        // list and the page table — exact and FP8-quantizing pools alike.
+        let mut pool = model.kv_page_pool(4, 0, None);
+        let mut qpool = model.kv_page_pool(4, 0, Some(FpFormat::E4M3));
+        let mut pcache = pool.new_cache();
+        let mut qcache = qpool.new_cache();
+        let mut paged_pass = |pool: &mut zeroquant_fp::plan::KvPagePool,
+                              cache: &mut zeroquant_fp::plan::KvCache,
+                              scratch: &mut zeroquant_fp::plan::DecodeScratch| {
+            assert!(pool.reserve(cache, prompt.len()));
+            std::hint::black_box(model.prefill(prompt, cache, scratch));
+            for &t in gen {
+                assert!(pool.reserve(cache, 1));
+                std::hint::black_box(model.decode_step(t, cache, scratch));
+            }
+            pool.release(cache);
+        };
+        paged_pass(&mut pool, &mut pcache, &mut scratch); // warm
+        paged_pass(&mut qpool, &mut qcache, &mut scratch);
+        let before = ALLOC_CALLS.load(Ordering::SeqCst);
+        for _ in 0..6 {
+            paged_pass(&mut pool, &mut pcache, &mut scratch);
+            paged_pass(&mut qpool, &mut qcache, &mut scratch);
+        }
+        let after = ALLOC_CALLS.load(Ordering::SeqCst);
+        assert_eq!(
+            after - before,
+            0,
+            "paged kv reserve/release churn allocated ({arch:?}, act={})",
             fmt.name()
         );
     }
