@@ -260,8 +260,11 @@ fn gemv_tier_microbench(bench: &mut Bench, rng: &mut Rng) -> f64 {
 /// speedup. The gate fails the bench (exit 1) when the measured speedup
 /// drops below the last committed entry's `floor` (default: 10% under its
 /// recorded speedup) — the fast tier is not allowed to silently regress
-/// toward the oracle. Run with `ZQFP_APPEND_TRAJECTORY=1` to append this
-/// run's measurement as a new entry (`ZQFP_TRAJECTORY_TAG` labels it).
+/// toward the oracle. The file is shared with other benches (bench_serving
+/// gates `spec_decode_speedup` entries), so the gate keys on the last
+/// entry that actually carries `fast_gemv_speedup`. Run with
+/// `ZQFP_APPEND_TRAJECTORY=1` to append this run's measurement as a new
+/// entry (`ZQFP_TRAJECTORY_TAG` labels it).
 fn trajectory_gate(bench: &mut Bench, measured: f64) {
     let path = Path::new("../BENCH_TRAJECTORY.json");
     let text = match std::fs::read_to_string(path) {
@@ -282,7 +285,7 @@ fn trajectory_gate(bench: &mut Bench, measured: f64) {
         eprintln!("trajectory gate: {} has no entries array", path.display());
         std::process::exit(1);
     };
-    if let Some(last) = entries.last() {
+    if let Some(last) = entries.iter().rev().find(|e| e.get("fast_gemv_speedup").is_some()) {
         let recorded = last.get("fast_gemv_speedup").and_then(Json::as_f64).unwrap_or(1.0);
         // Per-entry floors absorb runner-to-runner variance (shared CI
         // machines differ widely in autovectorization win and load).

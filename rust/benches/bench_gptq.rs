@@ -1,29 +1,55 @@
 //! GPTQ pipeline cost: Hessian accumulation, Cholesky inversion, and the
 //! column sweep, per layer size — the PTQ wall-time the paper's Appendix A
 //! reports as "a single V100" (ours: a single CPU core).
+//!
+//! The per-preset section derives every knob (weight format, group size,
+//! scale constraint, FP4→E5M2 cast, GPTQ damping, LoRC rank/format) from
+//! the recipe layer — the exact `QuantRecipe` fields
+//! `pipeline::quantize_checkpoint` reads — so the bench cannot drift from
+//! what the quantize/serve pipeline actually runs. Writes
+//! `bench_results/bench_gptq.json` so future PRs have a PTQ-cost
+//! trajectory alongside the serving and kernel benches.
+
+use std::path::Path;
 
 use zeroquant_fp::bench_harness::Bench;
-use zeroquant_fp::formats::NumericFormat;
-use zeroquant_fp::gptq::{gptq_quantize, GptqConfig, HessianAccumulator};
+use zeroquant_fp::gptq::{gptq_quantize, HessianAccumulator};
 use zeroquant_fp::linalg;
-use zeroquant_fp::lorc::{LorcConfig, LorcFactors};
+use zeroquant_fp::lorc::LorcFactors;
 use zeroquant_fp::quant::{quantize_weight_rtn, WeightQuantConfig};
+use zeroquant_fp::recipe::{QuantRecipe, PRESET_NAMES};
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::tensor::Matrix;
+
+/// The PTQ-side weight config a recipe pins — the same derivation as
+/// `pipeline::quantize_checkpoint` (format, grouping, scale constraint,
+/// optional FP4→E5M2 scale cast).
+fn weight_config(recipe: &QuantRecipe) -> WeightQuantConfig {
+    WeightQuantConfig::new(recipe.scheme.weight)
+        .with_group_size(recipe.group_size)
+        .with_constraint(recipe.constraint)
+        .with_cast(recipe.cast_fp4_to_e5m2)
+}
 
 fn main() {
     let mut rng = Rng::seeded(13);
     let mut bench = Bench::quick();
+
+    // ---- recipe-independent stages: Hessian + Cholesky per layer size ----
+    // (the calibration cost every GPTQ recipe pays, whatever its knobs)
     for dim in [128usize, 256, 512] {
-        let rows = dim;
-        let w = Matrix::randn(rows, dim, 0.05, &mut rng);
         let x = Matrix::randn(512, dim, 1.0, &mut rng);
-        println!("-- layer [{}x{}], calib 512 tokens --", rows, dim);
-        bench.run(format!("hessian accumulate d={dim}"), (512 * dim * dim) as f64 / 2.0, "MAC", || {
-            let mut acc = HessianAccumulator::new(dim);
-            acc.add_batch(&x);
-            acc.finalize()
-        });
+        println!("-- calibration [{dim}x{dim}], 512 tokens --");
+        bench.run(
+            format!("hessian accumulate d={dim}"),
+            (512 * dim * dim) as f64 / 2.0,
+            "MAC",
+            || {
+                let mut acc = HessianAccumulator::new(dim);
+                acc.add_batch(&x);
+                acc.finalize()
+            },
+        );
         let mut acc = HessianAccumulator::new(dim);
         acc.add_batch(&x);
         let h = acc.finalize();
@@ -34,18 +60,55 @@ fn main() {
             }
             linalg::cholesky_inverse_upper(&hd).unwrap()
         });
-        let wcfg = WeightQuantConfig::new(NumericFormat::FP4_E2M1).with_group_size(64);
-        bench.run(format!("gptq sweep         d={dim}"), (rows * dim * dim) as f64 / 2.0, "op", || {
-            gptq_quantize(&w, &h, &wcfg, &GptqConfig::default()).unwrap()
-        });
-        bench.run(format!("rtn (baseline)     d={dim}"), (rows * dim) as f64, "elt", || {
-            quantize_weight_rtn(&w, &wcfg)
-        });
-        let q = quantize_weight_rtn(&w, &wcfg);
-        let deq = q.dequantize();
-        bench.run(format!("lorc svd rank8     d={dim}"), 0.0, "", || {
-            LorcFactors::compute(&w, &deq, &LorcConfig::default()).unwrap()
-        });
         println!();
+    }
+
+    // ---- per-preset PTQ cost on one 256x256 layer ------------------------
+    // Every quantizing preset, knobs straight off the recipe: the GPTQ
+    // sweep (or the RTN baseline for non-GPTQ recipes) plus the LoRC SVD
+    // when the recipe compensates. W16 quantizes nothing and is skipped.
+    let dim = 256usize;
+    let w = Matrix::randn(dim, dim, 0.05, &mut rng);
+    let x = Matrix::randn(512, dim, 1.0, &mut rng);
+    let mut acc = HessianAccumulator::new(dim);
+    acc.add_batch(&x);
+    let h = acc.finalize();
+    println!("-- per-preset PTQ cost, layer [{dim}x{dim}], calib 512 tokens --");
+    for name in PRESET_NAMES {
+        let recipe = QuantRecipe::preset(name).unwrap();
+        if recipe.scheme.weight.bits() >= 16 {
+            println!("   {name}: dense no-op preset, nothing to quantize");
+            continue;
+        }
+        let wcfg = weight_config(&recipe);
+        let q = if recipe.use_gptq {
+            bench.run(
+                format!("gptq sweep {name:<12} d={dim}"),
+                (dim * dim * dim) as f64 / 2.0,
+                "op",
+                || gptq_quantize(&w, &h, &wcfg, &recipe.gptq).unwrap(),
+            );
+            gptq_quantize(&w, &h, &wcfg, &recipe.gptq).unwrap().weight
+        } else {
+            bench.run(
+                format!("rtn        {name:<12} d={dim}"),
+                (dim * dim) as f64,
+                "elt",
+                || quantize_weight_rtn(&w, &wcfg),
+            );
+            quantize_weight_rtn(&w, &wcfg)
+        };
+        if let Some(lcfg) = &recipe.lorc {
+            let deq = q.dequantize();
+            bench.run(format!("lorc svd r{} {name:<12} d={dim}", lcfg.rank), 0.0, "", || {
+                LorcFactors::compute(&w, &deq, lcfg).unwrap()
+            });
+        }
+    }
+
+    let out = Path::new("bench_results/bench_gptq.json");
+    match bench.write_json("bench_gptq", out) {
+        Ok(()) => println!("\n[json -> {}]", out.display()),
+        Err(e) => println!("\n[json write failed: {e}]"),
     }
 }

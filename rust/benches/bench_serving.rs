@@ -12,7 +12,13 @@
 //!    batch width (weight-streaming amortization, the continuous-batching
 //!    rationale);
 //! 4. coordinator continuous-batching generation, `max_batch ∈ {1,2,4,8}`
-//!    — the same curve end to end through the request queue.
+//!    — the same curve end to end through the request queue;
+//! 5. self-speculative decoding — draft/target recipe pairs at
+//!    `max_batch ∈ {1,2,4}`: effective decode tokens/s and acceptance rate
+//!    vs the target-only baseline over identical traffic, with the B=1
+//!    speedup gated against the `spec_decode_speedup` entries of
+//!    `BENCH_TRAJECTORY.json` (floor 1.0: speculation must never decode
+//!    slower than the target alone).
 //!
 //! Writes `bench_results/bench_serving.json` (decode tokens/s in the
 //! `throughput` fields) so future PRs have a perf trajectory.
@@ -28,7 +34,8 @@ use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::plan::{argmax, CompiledModel, KvCache};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
-use zeroquant_fp::recipe::QuantRecipe;
+use zeroquant_fp::recipe::json::Json;
+use zeroquant_fp::recipe::{QuantRecipe, SpeculateConfig};
 use zeroquant_fp::rng::Rng;
 use zeroquant_fp::runtime::SCORE_BATCH;
 
@@ -485,9 +492,193 @@ fn main() {
         }
     }
 
+    // ---- self-speculative decoding: cheap-plan draft, target verify -------
+    // Two plans of the same checkpoint: the draft proposes k tokens, the
+    // target verifies all k+1 positions in one batched prefill pass and
+    // commits the agreeing prefix. Output is exactly target-only greedy
+    // decode (tests/speculative.rs holds the parity), so the only question
+    // is throughput: effective decode tok/s and acceptance rate per
+    // draft/target pair, against the target-only baseline over identical
+    // traffic. The B=1 speedup of the headline pair (rank-0 fast-tier
+    // draft under the packed LoRC target) is the `spec_decode_speedup`
+    // trajectory number.
+    println!("\n-- self-speculative decoding: draft/target recipe pairs (k=4) --");
+    {
+        let w4 = Scheme::parse("w4a8-fp-fp").unwrap();
+        // Headline pair: the target serves packed W4+LoRC on the bit-exact
+        // oracle tier; the draft strips the rank-8 correction and decodes
+        // through the tolerance-gated 8-lane GEMV — materially cheaper per
+        // step, close enough for high greedy agreement.
+        let lorc_target = QuantRecipe::builder(w4)
+            .constraint(ScaleConstraint::M2 { rows: 32 })
+            .use_gptq(false)
+            .lorc(LorcConfig { rank: 8, factor_format: NumericFormat::FP8_E4M3 })
+            .packed(1)
+            .build()
+            .unwrap();
+        let rank0_fast_draft = QuantRecipe::builder(w4)
+            .constraint(ScaleConstraint::M2 { rows: 32 })
+            .use_gptq(false)
+            .packed(1)
+            .kernels(KernelTier::Fast)
+            .build()
+            .unwrap();
+        // Contrast pair: dense W16 target with a dense W4-scheme draft.
+        // The draft differs only on activation numerics (same dense
+        // weights), so acceptance is near-total but each drafted token
+        // costs about a target step — the honest overhead floor of the
+        // draft/verify loop itself.
+        let dense_w4_draft = QuantRecipe::builder(w4)
+            .constraint(ScaleConstraint::M2 { rows: 32 })
+            .use_gptq(false)
+            .build()
+            .unwrap();
+        let mut spec_b1_speedup = None;
+        for (pair, target, draft) in [
+            ("lorc+rank0fast", &lorc_target, &rank0_fast_draft),
+            ("w16+densew4", &w16, &dense_w4_draft),
+        ] {
+            for b in [1usize, 2, 4] {
+                let mut base_tok_s = 0.0f64;
+                for spec_on in [false, true] {
+                    let mut r = target.clone();
+                    r.max_batch = b;
+                    r.max_wait_ms = 0;
+                    r.speculate = spec_on
+                        .then(|| SpeculateConfig { draft: Box::new(draft.clone()), k: 4 });
+                    let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
+                    let mut handles = Vec::new();
+                    for c in 0..4usize {
+                        let client = coord.gen_client().unwrap();
+                        let mine: Vec<Vec<u16>> = windows
+                            .iter()
+                            .skip(c)
+                            .step_by(4)
+                            .take(3)
+                            .map(|w| w[..16].to_vec())
+                            .collect();
+                        handles.push(std::thread::spawn(move || {
+                            for p in mine {
+                                client.generate(p, 24).unwrap();
+                            }
+                        }));
+                    }
+                    let report = coord.run().unwrap();
+                    for h in handles {
+                        h.join().unwrap();
+                    }
+                    let tok_s = report.decode_tok_s();
+                    if spec_on {
+                        let speedup = tok_s / base_tok_s.max(1e-9);
+                        println!(
+                            "   {pair:>15} B={b}: spec {tok_s:>7.0} tok/s vs target-only \
+                             {base_tok_s:>7.0} ({speedup:.2}x), acceptance {:.2}, \
+                             {:.2} tok/round, {} fallbacks",
+                            report.spec_acceptance_rate(),
+                            report.spec_tokens_per_round(),
+                            report.spec_fallbacks
+                        );
+                        bench.note(format!("spec {pair} B={b} decode speedup"), speedup);
+                        bench.note(
+                            format!("spec {pair} B={b} acceptance"),
+                            report.spec_acceptance_rate(),
+                        );
+                        bench.note(
+                            format!("spec {pair} B={b} tokens per round"),
+                            report.spec_tokens_per_round(),
+                        );
+                        if pair == "lorc+rank0fast" && b == 1 {
+                            spec_b1_speedup = Some(speedup);
+                        }
+                    } else {
+                        base_tok_s = tok_s;
+                    }
+                }
+            }
+        }
+        if let Some(speedup) = spec_b1_speedup {
+            bench.note("spec decode speedup B=1", speedup);
+            spec_trajectory_gate(&mut bench, speedup);
+        }
+    }
+
     let out = Path::new("bench_results/bench_serving.json");
     match bench.write_json("bench_serving", out) {
         Ok(()) => println!("\n[json -> {}]", out.display()),
         Err(e) => println!("\n[json write failed: {e}]"),
+    }
+}
+
+/// The speculative-decode arm of `BENCH_TRAJECTORY.json` (repo root,
+/// shared with bench_engine's `fast_gemv_speedup` gate). Each entry here
+/// records one PR's B=1 speculative-vs-target-only decode speedup for the
+/// headline pair; the gate fails the bench (exit 1) when the measured
+/// speedup drops below the last `spec_decode_speedup` entry's `floor`
+/// (default 1.0 — speculation is never allowed to decode slower than the
+/// target alone). Run with `ZQFP_APPEND_TRAJECTORY=1` to append this
+/// run's measurement (`ZQFP_TRAJECTORY_TAG` labels it).
+fn spec_trajectory_gate(bench: &mut Bench, measured: f64) {
+    let path = Path::new("../BENCH_TRAJECTORY.json");
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            println!("[spec trajectory gate skipped: {}: {e}]", path.display());
+            return;
+        }
+    };
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("spec trajectory gate: {} is unreadable: {e}", path.display());
+            std::process::exit(1);
+        }
+    };
+    let Some(Json::Arr(entries)) = doc.get("entries") else {
+        eprintln!("spec trajectory gate: {} has no entries array", path.display());
+        std::process::exit(1);
+    };
+    if let Some(last) = entries.iter().rev().find(|e| e.get("spec_decode_speedup").is_some()) {
+        let recorded = last.get("spec_decode_speedup").and_then(Json::as_f64).unwrap_or(1.0);
+        let floor = last.get("floor").and_then(Json::as_f64).unwrap_or(1.0);
+        bench.note("spec trajectory floor", floor);
+        if measured < floor {
+            eprintln!(
+                "spec trajectory gate FAILED: speculative B=1 decode speedup {measured:.2}x \
+                 < floor {floor:.2}x (last committed entry: {recorded:.2}x)"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "spec trajectory gate OK: {measured:.2}x >= floor {floor:.2}x \
+             (last entry {recorded:.2}x)"
+        );
+    }
+    if std::env::var("ZQFP_APPEND_TRAJECTORY").as_deref() == Ok("1") {
+        append_spec_trajectory(path, doc, measured);
+    }
+}
+
+/// Append `measured` as a new `spec_decode_speedup` trajectory entry and
+/// rewrite the file pretty-printed (the shape `Json::parse` round-trips).
+/// The floor stays pinned at 1.0: the invariant is "no slower than the
+/// target alone", not a ratchet on runner-dependent speedups.
+fn append_spec_trajectory(path: &Path, doc: Json, measured: f64) {
+    let tag = std::env::var("ZQFP_TRAJECTORY_TAG").unwrap_or_else(|_| "local".to_string());
+    let Json::Obj(mut kv) = doc else { return };
+    for (key, value) in kv.iter_mut() {
+        if key == "entries" {
+            if let Json::Arr(entries) = value {
+                let rounded = (measured * 100.0).round() / 100.0;
+                entries.push(Json::Obj(vec![
+                    ("tag".to_string(), Json::Str(tag.clone())),
+                    ("spec_decode_speedup".to_string(), Json::Num(rounded)),
+                    ("floor".to_string(), Json::Num(1.0)),
+                ]));
+            }
+        }
+    }
+    match std::fs::write(path, Json::Obj(kv).pretty() + "\n") {
+        Ok(()) => println!("[spec trajectory entry appended -> {}]", path.display()),
+        Err(e) => println!("[spec trajectory append failed: {e}]"),
     }
 }

@@ -57,13 +57,19 @@ commands:
                --kernels oracle|fast picks the kernel tier (fast = 8-lane
                GEMV + persistent decode worker pool, ULP/NLL
                tolerance-gated vs the bit-exact oracle default);
+               --speculate <name|path> [--draft-k N] decodes
+               speculatively: the named (strictly cheaper) draft recipe
+               proposes up to N tokens per round and the target plan
+               verifies them in one batched pass — output is exactly
+               target-only greedy decode, only faster (--no-speculate
+               strips a recipe-pinned draft);
                robustness knobs: --queue-depth N bounds admission (full
                queue sheds with a typed Overloaded), --deadline-ms MS
                puts a per-request deadline on every submission (0 = none),
                --fault <site>:<spec>[,...] injects deterministic faults
-               for chaos drills (sites admission|prefill|decode|respond;
-               specs always|once|nth=K|every=K|p=F|stall=MS) with
-               --fault-seed S pinning the probabilistic arms
+               for chaos drills (sites admission|prefill|decode|draft|
+               respond; specs always|once|nth=K|every=K|p=F|stall=MS)
+               with --fault-seed S pinning the probabilistic arms
   selfcheck    cross-check rust engine vs PJRT HLO on a tiny model
 ";
 

@@ -1,6 +1,6 @@
 //! Deterministic fault injection for the serving loop.
 //!
-//! A [`FaultPlan`] names *where* faults strike (one of the four
+//! A [`FaultPlan`] names *where* faults strike (one of the five
 //! [`FaultSite`]s the coordinator arms) and *when* ([`FaultSpec`]); a
 //! [`FaultInjector`] executes the plan at run time. Every stochastic
 //! trigger draws from the in-crate [`Rng`] seeded from the plan, so a
@@ -34,8 +34,15 @@ pub enum FaultSite {
     Admission,
     /// Inside the guarded prefill of a generation request.
     Prefill,
-    /// Inside the guarded decode step (batched and solo-retry paths).
+    /// Inside the guarded decode step (batched and solo-retry paths) and
+    /// the speculative verify pass (both touch the *target* KV cache).
     Decode,
+    /// Inside the guarded speculative draft phase (draft-plan prompt
+    /// prefill and token proposal). A draft fault poisons only the
+    /// sequence's draft cache: the coordinator quarantines it and the
+    /// sequence falls back to target-only decode with its output
+    /// unchanged — the client never sees the fault.
+    Draft,
     /// Just before a response is sent back to the client.
     Respond,
 }
@@ -46,6 +53,7 @@ impl FaultSite {
             FaultSite::Admission => "admission",
             FaultSite::Prefill => "prefill",
             FaultSite::Decode => "decode",
+            FaultSite::Draft => "draft",
             FaultSite::Respond => "respond",
         }
     }
@@ -55,6 +63,7 @@ impl FaultSite {
             "admission" => Some(FaultSite::Admission),
             "prefill" => Some(FaultSite::Prefill),
             "decode" => Some(FaultSite::Decode),
+            "draft" => Some(FaultSite::Draft),
             "respond" => Some(FaultSite::Respond),
             _ => None,
         }
@@ -144,7 +153,9 @@ impl FaultPlan {
                 .split_once(':')
                 .ok_or_else(|| format!("fault point {part:?}: expected <site>:<spec>"))?;
             let site = FaultSite::parse(site.trim()).ok_or_else(|| {
-                format!("unknown fault site {site:?} (try admission|prefill|decode|respond)")
+                format!(
+                    "unknown fault site {site:?} (try admission|prefill|decode|draft|respond)"
+                )
             })?;
             points.push((site, FaultSpec::parse(spec.trim())?));
         }

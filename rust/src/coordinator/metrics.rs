@@ -152,6 +152,22 @@ pub struct ServeReport {
     pub kv_preemptions: usize,
     /// Preempted sequences re-admitted for re-prefill.
     pub kv_requeues: usize,
+    /// Speculative draft/verify rounds executed (0 when the run does not
+    /// speculate).
+    pub spec_rounds: usize,
+    /// Tokens proposed by the draft plan across all rounds.
+    pub spec_drafted: usize,
+    /// Proposed tokens the target plan accepted. Every round additionally
+    /// commits one correction/bonus token of the target's own, so
+    /// committed tokens = `spec_accepted + spec_rounds` (before the
+    /// final-round clamp to each request's budget).
+    pub spec_accepted: usize,
+    /// KV positions rolled back from the two caches by rejections.
+    pub spec_rolled_back: usize,
+    /// Sequences that fell back to target-only decode (a draft-site fault
+    /// or a dry page pool at draft-cache creation). Their token streams
+    /// are unchanged — speculation only ever changes the rate.
+    pub spec_fallbacks: usize,
 }
 
 impl ServeReport {
@@ -168,6 +184,28 @@ impl ServeReport {
     /// Mean sequences in flight per decode step.
     pub fn mean_decode_batch(&self) -> f64 {
         self.decode_tokens as f64 / self.decode_steps.max(1) as f64
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 with no
+    /// speculation).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_drafted as f64
+        }
+    }
+
+    /// Mean tokens committed per speculative round (≥ 1 once rounds ran;
+    /// the per-round speedup lever — a plain decode step commits exactly
+    /// one).
+    pub fn spec_tokens_per_round(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            // each round commits its accepted prefix + 1 correction/bonus
+            (self.spec_accepted + self.spec_rounds) as f64 / self.spec_rounds as f64
+        }
     }
 
     /// Responses that were something other than `Ok` — the sum of every
@@ -213,6 +251,19 @@ impl ServeReport {
                 self.request_tok_s.mean(),
                 self.request_tok_s.min(),
                 self.request_tok_s.max(),
+            );
+        }
+        if self.spec_rounds > 0 || self.spec_fallbacks > 0 {
+            println!(
+                "speculative: {} rounds | drafted {} accepted {} ({:.0}% acceptance) | \
+                 {:.2} tok/round | rolled back {} kv positions | fallbacks {}",
+                self.spec_rounds,
+                self.spec_drafted,
+                self.spec_accepted,
+                100.0 * self.spec_acceptance_rate(),
+                self.spec_tokens_per_round(),
+                self.spec_rolled_back,
+                self.spec_fallbacks,
             );
         }
         if self.kv_pool_bytes > 0 {
@@ -411,6 +462,26 @@ mod tests {
         let idle = ServeReport { gen_requests: 1, ..Default::default() };
         assert_eq!(idle.decode_tok_s(), 0.0);
         assert!(idle.decode_tok_s().is_finite());
+    }
+
+    #[test]
+    fn spec_counters_derive_rates_and_print() {
+        let report = ServeReport {
+            spec_rounds: 4,
+            spec_drafted: 16,
+            spec_accepted: 12,
+            spec_rolled_back: 4,
+            spec_fallbacks: 1,
+            ..Default::default()
+        };
+        assert!((report.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        // 12 accepted + 4 corrections/bonuses over 4 rounds
+        assert!((report.spec_tokens_per_round() - 4.0).abs() < 1e-12);
+        assert_eq!(report.degraded(), 0, "speculation telemetry is not degradation");
+        report.print(); // speculative block must not panic
+        let none = ServeReport::default();
+        assert_eq!(none.spec_acceptance_rate(), 0.0);
+        assert_eq!(none.spec_tokens_per_round(), 0.0);
     }
 
     #[test]

@@ -77,8 +77,8 @@
 //!   in-flight sequences finish, and answers queued work with
 //!   [`ServeError::ShuttingDown`].
 //!
-//! The [`fault`] module injects deterministic panics/stalls at four
-//! sites (admission, prefill, decode, respond) so all of the above is
+//! The [`fault`] module injects deterministic panics/stalls at five
+//! sites (admission, prefill, decode, draft, respond) so all of the above is
 //! testable by seed (`zqfp serve --fault <site>:<spec>`); the invariant
 //! under any schedule is *exactly one typed response per request* and a
 //! loop that never hangs.
@@ -106,9 +106,10 @@ use crate::error::Result;
 use crate::formats::FpFormat;
 use crate::model::Checkpoint;
 use crate::pipeline::{ptq, PtqReport};
+use crate::plan::speculate::{draft_propose, verify_commit, AdaptiveK, SpecSequence, SpecStats};
 use crate::plan::{argmax, CompiledModel, KvCache, KvPagePool};
 use crate::quant::QuantSidecar;
-use crate::recipe::{QuantRecipe, RecipeError};
+use crate::recipe::{QuantRecipe, RecipeError, SpeculateConfig};
 use crate::runtime::HloScorer;
 
 /// Which execution engine serves scoring requests.
@@ -461,6 +462,12 @@ pub struct CoordinatorConfig {
     /// production — injection compiled in but disarmed costs nothing on
     /// the hot path beyond an `Option` check).
     pub faults: Option<FaultPlan>,
+    /// `Some` ⇒ the compiled backend decodes speculatively: a second
+    /// (cheaper) plan of the same checkpoint drafts `k` tokens per round
+    /// and the target plan verifies them in one batched pass — exact
+    /// greedy parity, see [`crate::plan::speculate`]. Every in-flight
+    /// sequence then carries a draft KV cache next to its target cache.
+    pub speculate: Option<SpeculateConfig>,
 }
 
 /// The checkpoint→sidecar→[`CompiledModel`]→[`Coordinator`] wiring that
@@ -552,6 +559,24 @@ impl ServingStack {
         CompiledModel::compile(&self.checkpoint, opts)
     }
 
+    /// Compile the **draft** plan of the recipe's
+    /// [`speculate`](QuantRecipe::speculate) config — a second view of the
+    /// same PTQ artifacts, or `None` when the recipe does not speculate.
+    ///
+    /// The draft recipe selects the view: a dense draft recompiles the
+    /// effective checkpoint under the draft's activation/kernel options;
+    /// a packed draft compiles from the sidecar codes, and a draft
+    /// *without* LoRC strips the factors
+    /// ([`QuantSidecar::without_lorc`]) so it is a genuine rank-0 W4
+    /// plan — cheaper per token than the target it drafts for. Recipe
+    /// validation guarantees the pairing is well-formed (the draft is
+    /// strictly cheaper, and packed drafts only appear when the target
+    /// run produced codes).
+    pub fn compile_draft(&self) -> Option<CompiledModel> {
+        let sc = self.recipe.speculate.as_ref()?;
+        Some(compile_draft_plan(&self.checkpoint, Some(&self.sidecar), &sc.draft))
+    }
+
     /// A coordinator on the compiled in-process backend (consumes the
     /// stack — the coordinator owns the checkpoint and sidecar).
     pub fn coordinator(self) -> Coordinator {
@@ -564,6 +589,31 @@ impl ServingStack {
         let mut cfg = self.recipe.coordinator_config(self.checkpoint, Some(self.sidecar));
         cfg.backend = backend;
         Coordinator::new(cfg)
+    }
+}
+
+/// The draft-plan compile rule [`ServingStack::compile_draft`] and the
+/// serving loop share: dense drafts recompile the effective checkpoint
+/// under the draft's engine options; packed drafts compile from the
+/// sidecar codes, stripping the LoRC factors when the draft recipe
+/// carries none (a genuine rank-0 W4 view of a LoRC target's artifacts).
+/// Panics when a packed draft is requested without a sidecar — recipe
+/// validation and the coordinator's own sidecar check make that
+/// unreachable from validated configs.
+fn compile_draft_plan(
+    ck: &Checkpoint,
+    sidecar: Option<&QuantSidecar>,
+    draft: &QuantRecipe,
+) -> CompiledModel {
+    if draft.weights.is_dense() {
+        CompiledModel::compile(ck, draft.engine_opts())
+    } else {
+        let sidecar = sidecar.expect("packed draft plan requires the quantized-code sidecar");
+        if draft.lorc.is_none() {
+            CompiledModel::compile_quantized(ck, &sidecar.without_lorc(), draft.engine_opts())
+        } else {
+            CompiledModel::compile_quantized(ck, sidecar, draft.engine_opts())
+        }
     }
 }
 
@@ -611,6 +661,20 @@ struct ActiveGen {
     /// in-flight sequence (largest `seq_no`) — it loses the least work.
     seq_no: u64,
     respond: SyncSender<ServeResult<Generated>>,
+    /// Speculative-decode state (`None` when the run does not speculate,
+    /// or after a draft-site fault permanently downgraded this sequence
+    /// to target-only decode — the degradation is invisible in the
+    /// output, only in the rate).
+    spec: Option<SpecState>,
+}
+
+/// The draft half of one speculating sequence: its own KV cache on the
+/// draft plan, the catch-up/pending accounting, and the per-sequence
+/// adaptive draft window.
+struct SpecState {
+    cache: KvCache,
+    seq: SpecSequence,
+    window: AdaptiveK,
 }
 
 impl Coordinator {
@@ -849,6 +913,25 @@ impl Coordinator {
             })?;
             CompiledModel::compile_quantized(&self.cfg.ck, sidecar, self.cfg.opts)
         };
+        // Speculative decoding: compile the cheap draft plan as a second
+        // view of the same artifacts — it must happen *before* the
+        // artifacts are freed below.
+        let draft: Option<(CompiledModel, usize)> = match &self.cfg.speculate {
+            Some(sc) => {
+                if !sc.draft.weights.is_dense() && self.cfg.sidecar.is_none() {
+                    return Err(crate::anyhow!(
+                        "speculative draft in the packed layout requires the \
+                         quantized-code sidecar"
+                    ));
+                }
+                Some((
+                    compile_draft_plan(&self.cfg.ck, self.cfg.sidecar.as_ref(), &sc.draft),
+                    sc.k.max(1),
+                ))
+            }
+            None => None,
+        };
+        let mut draft_scratch = draft.as_ref().map(|(m, _)| m.scratch());
         // The plan owns copies of everything it serves (prepacked or
         // bit-packed weights, factor codes, embeddings, norms). Free the
         // PTQ artifacts for the serving run's lifetime: the sidecar
@@ -879,7 +962,11 @@ impl Coordinator {
         // Paged mode: one shared pool, eagerly allocated. Auto budget
         // (`0`) buys `max_active` full sequences' worth of pages — the
         // ring plan's bound — so paging can only tighten admission when a
-        // budget is set explicitly.
+        // budget is set explicitly. A speculative run doubles the
+        // per-sequence cache count (draft + target), so the auto budget
+        // doubles with it and the minimum clamp covers both caches —
+        // admission never deadlocks on the second cache.
+        let caches_per_seq = if draft.is_some() { 2 } else { 1 };
         let mut page_pool: Option<KvPagePool> = if self.cfg.kv_page_positions > 0 {
             let p = self.cfg.kv_page_positions;
             let budget = if self.cfg.kv_budget_bytes > 0 {
@@ -887,9 +974,9 @@ impl Coordinator {
             } else {
                 let c = &self.cfg.ck.config;
                 let page_bytes = c.n_layers * 2 * p * c.d_model * std::mem::size_of::<f32>();
-                max_active * max_seq.div_ceil(p) * page_bytes
+                caches_per_seq * max_active * max_seq.div_ceil(p) * page_bytes
             };
-            Some(model.kv_page_pool(p, budget, kv_quant))
+            Some(KvPagePool::sized_for(&self.cfg.ck.config, p, budget, kv_quant, caches_per_seq))
         } else {
             None
         };
@@ -912,6 +999,8 @@ impl Coordinator {
         let mut kv_peak_bytes = 0usize;
         let mut kv_preemptions = 0usize;
         let mut kv_requeues = 0usize;
+        let mut spec_stats = SpecStats::default();
+        let mut spec_fallbacks = 0usize;
         let mut next_seq_no = 0u64;
 
         let mut active: Vec<ActiveGen> = Vec::new();
@@ -1217,6 +1306,65 @@ impl Coordinator {
                                     pool.push(cache);
                                 }
                             } else {
+                                // Speculation: mint this sequence's draft
+                                // cache and prefill the prompt into it under
+                                // the draft-site guard. Failure is never
+                                // fatal — the sequence just decodes
+                                // target-only (same tokens, no draft rate),
+                                // and a dry paged pool skips the draft cache
+                                // the same way.
+                                let spec = if let Some((dm, dk)) = draft.as_ref() {
+                                    let ds = draft_scratch
+                                        .as_mut()
+                                        .expect("draft scratch exists with the draft plan");
+                                    let mut dcache = match pool.pop() {
+                                        Some(c) => c,
+                                        None => match page_pool.as_ref() {
+                                            Some(pp) => pp.new_cache(),
+                                            None => match kv_quant {
+                                                Some(fmt) => model.kv_cache_quantized(fmt),
+                                                None => model.kv_cache(),
+                                            },
+                                        },
+                                    };
+                                    dcache.reset();
+                                    let reserved = match page_pool.as_mut() {
+                                        Some(pp) => pp.reserve(&mut dcache, g.prompt.len()),
+                                        None => true,
+                                    };
+                                    if !reserved {
+                                        if pool.len() < max_active {
+                                            pool.push(dcache);
+                                        }
+                                        spec_fallbacks += 1;
+                                        None
+                                    } else {
+                                        let ok = guard(|| {
+                                            if let Some(f) = fi.as_mut() {
+                                                f.fire(FaultSite::Draft);
+                                            }
+                                            let _ = dm.prefill(&g.prompt, &mut dcache, &mut *ds);
+                                        });
+                                        match ok {
+                                            Ok(()) => Some(SpecState {
+                                                cache: dcache,
+                                                seq: SpecSequence::start(first),
+                                                window: AdaptiveK::new(*dk),
+                                            }),
+                                            Err(_) => {
+                                                dcache.quarantine();
+                                                quarantined_caches += 1;
+                                                if let Some(pp) = page_pool.as_mut() {
+                                                    pp.release(&mut dcache);
+                                                }
+                                                spec_fallbacks += 1;
+                                                None
+                                            }
+                                        }
+                                    }
+                                } else {
+                                    None
+                                };
                                 active.push(ActiveGen {
                                     generated,
                                     max_new: g.max_new,
@@ -1226,6 +1374,7 @@ impl Coordinator {
                                     decode_start: Instant::now(),
                                     seq_no: next_seq_no,
                                     respond: g.respond,
+                                    spec,
                                 });
                                 next_seq_no += 1;
                                 caches.push(cache);
@@ -1239,7 +1388,11 @@ impl Coordinator {
             // which tracks the paged peak inside the pool) ----------------
             match page_pool.as_ref() {
                 Some(pp) => kv_peak_bytes = kv_peak_bytes.max(pp.resident_bytes()),
-                None => kv_peak_bytes = kv_peak_bytes.max(caches.len() * ring_bytes),
+                None => {
+                    // draft rings pin the same bytes as target rings
+                    let spec_rings = active.iter().filter(|a| a.spec.is_some()).count();
+                    kv_peak_bytes = kv_peak_bytes.max((caches.len() + spec_rings) * ring_bytes);
+                }
             }
             if active.is_empty() {
                 continue;
@@ -1250,13 +1403,21 @@ impl Coordinator {
             let mut i = 0;
             while i < active.len() {
                 if expired(active[i].deadline) {
-                    let done = active.swap_remove(i);
+                    let mut done = active.swap_remove(i);
                     let mut cache = caches.swap_remove(i);
                     if let Some(pp) = page_pool.as_mut() {
                         pp.release(&mut cache);
                     }
                     if pool.len() < max_active {
                         pool.push(cache);
+                    }
+                    if let Some(mut sp) = done.spec.take() {
+                        if let Some(pp) = page_pool.as_mut() {
+                            pp.release(&mut sp.cache);
+                        }
+                        if pool.len() < max_active {
+                            pool.push(sp.cache);
+                        }
                     }
                     expired_midflight += 1;
                     latency.record(Instant::now() - done.submitted);
@@ -1292,11 +1453,19 @@ impl Coordinator {
                             .max_by_key(|(_, a)| a.seq_no)
                             .map(|(j, _)| j)
                             .expect("active is non-empty");
-                        let done = active.swap_remove(y);
+                        let mut done = active.swap_remove(y);
                         let mut cache = caches.swap_remove(y);
                         pp.release(&mut cache);
                         if pool.len() < max_active {
                             pool.push(cache);
+                        }
+                        // the draft cache restarts from scratch with the
+                        // requeued prompt — its pages go back too
+                        if let Some(mut sp) = done.spec.take() {
+                            pp.release(&mut sp.cache);
+                            if pool.len() < max_active {
+                                pool.push(sp.cache);
+                            }
                         }
                         kv_preemptions += 1;
                         waiting.push_front((
@@ -1322,75 +1491,261 @@ impl Coordinator {
                 }
             }
 
-            // ---- one interleaved decode step for every in-flight seq ----
-            step_tokens.clear();
-            for a in &active {
-                step_tokens.push(*a.generated.last().expect("active seq has a token"));
-            }
             let ts = Instant::now();
-            // The whole batched step runs under the guard. A panic
-            // unwinds *before* any KV cursor commits (the layer walk
-            // advances caches only at its end), so retrying each
-            // sequence solo below replays the exact same step —
-            // bit-identical for the survivors — and pins the fault on
-            // the poisoned sequence(s) alone.
-            let stepped = guard(|| {
-                if let Some(f) = fi.as_mut() {
-                    f.fire(FaultSite::Decode);
-                }
-                let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
-                // sample by original row index — swap_remove in the
-                // completion sweep reorders `active`, the logits rows
-                // do not move with it
-                step_out.clear();
-                for row in 0..step_tokens.len() {
-                    step_out.push(argmax(logits.row(row)) as u16);
-                }
-            });
-            decode_steps += 1;
-            match stepped {
-                Ok(()) => {
-                    decode_tokens += active.len();
-                    for (a, &tok) in active.iter_mut().zip(step_out.iter()) {
-                        a.generated.push(tok);
+            if let Some((dm, _)) = draft.as_ref() {
+                // ---- speculative decode: one draft/verify round per
+                // in-flight sequence. The draft phase runs under its own
+                // guard and fault site: a draft panic poisons only that
+                // sequence's draft cache — quarantine it, permanently
+                // downgrade the sequence to target-only decode, and its
+                // token stream is unchanged (exact greedy parity means
+                // the draft can only change speed, never content). The
+                // verify phase touches the target cache and carries the
+                // same site/quarantine contract as a plain decode step.
+                let ds = draft_scratch
+                    .as_mut()
+                    .expect("draft scratch exists with the draft plan");
+                let mut i = 0;
+                while i < active.len() {
+                    let remaining = active[i].max_new - active[i].generated.len();
+                    let mut proposal: Option<Vec<u16>> = None;
+                    if active[i].spec.is_some() {
+                        // clamp the window so the verify chunk stays
+                        // inside max_seq: committed + remaining ==
+                        // prompt + max_new <= max_seq (validate_gen)
+                        let kr = {
+                            let sp = active[i].spec.as_ref().expect("checked above");
+                            sp.window.current().min(remaining)
+                        };
+                        // paged: the whole round's appends are reserved up
+                        // front; a dry pool falls back to a plain step
+                        // this turn — speculation is opportunistic, and
+                        // the pending chunk catches the draft cache up
+                        // next round
+                        let reserved = match page_pool.as_mut() {
+                            Some(pp) => {
+                                let sp = active[i].spec.as_mut().expect("checked above");
+                                pp.reserve(&mut caches[i], sp.seq.verify_positions(kr))
+                                    && pp.reserve(&mut sp.cache, sp.seq.draft_positions(kr))
+                            }
+                            None => true,
+                        };
+                        if reserved {
+                            let sp = active[i].spec.as_mut().expect("checked above");
+                            let drafted = guard(|| {
+                                if let Some(f) = fi.as_mut() {
+                                    f.fire(FaultSite::Draft);
+                                }
+                                draft_propose(dm, &mut sp.cache, &sp.seq, kr, &mut *ds)
+                            });
+                            match drafted {
+                                Ok(d) => proposal = Some(d),
+                                Err(_) => {
+                                    let mut sp =
+                                        active[i].spec.take().expect("checked above");
+                                    sp.cache.quarantine();
+                                    quarantined_caches += 1;
+                                    if let Some(pp) = page_pool.as_mut() {
+                                        pp.release(&mut sp.cache); // leaks its pages
+                                    }
+                                    spec_fallbacks += 1;
+                                }
+                            }
+                        }
+                    }
+                    match proposal {
+                        Some(drafts) => {
+                            let out = {
+                                let sp = active[i].spec.as_mut().expect("proposal has spec");
+                                guard(|| {
+                                    if let Some(f) = fi.as_mut() {
+                                        f.fire(FaultSite::Decode);
+                                    }
+                                    verify_commit(
+                                        &model,
+                                        &mut caches[i],
+                                        &mut sp.cache,
+                                        page_pool.as_mut(),
+                                        &mut sp.seq,
+                                        &drafts,
+                                        &mut scratch,
+                                    )
+                                })
+                            };
+                            decode_steps += 1;
+                            match out {
+                                Ok(out) => {
+                                    {
+                                        let sp =
+                                            active[i].spec.as_mut().expect("proposal has spec");
+                                        sp.window.observe(out.drafted, out.agreed);
+                                    }
+                                    spec_stats.record(&out);
+                                    // a fully accepted last round overshoots
+                                    // max_new by the bonus token — clamp
+                                    let take = out.committed.len().min(remaining);
+                                    decode_tokens += take;
+                                    active[i].generated.extend_from_slice(&out.committed[..take]);
+                                    i += 1;
+                                }
+                                Err(msg) => {
+                                    // the verify pass may have unwound with
+                                    // either cache mid-mutation: quarantine
+                                    // both, answer Faulted
+                                    let mut done = active.swap_remove(i);
+                                    let mut cache = caches.swap_remove(i);
+                                    cache.quarantine();
+                                    quarantined_caches += 1;
+                                    if let Some(pp) = page_pool.as_mut() {
+                                        pp.release(&mut cache); // leaks its pages
+                                    }
+                                    drop(cache); // poisoned: never recycled
+                                    if let Some(mut sp) = done.spec.take() {
+                                        sp.cache.quarantine();
+                                        quarantined_caches += 1;
+                                        if let Some(pp) = page_pool.as_mut() {
+                                            pp.release(&mut sp.cache);
+                                        }
+                                    }
+                                    latency.record(Instant::now() - done.submitted);
+                                    deliver(
+                                        &mut fi,
+                                        &mut faulted,
+                                        &done.respond,
+                                        Err(ServeError::Faulted(msg)),
+                                    );
+                                }
+                            }
+                        }
+                        None => {
+                            // plain guarded target step: a downgraded
+                            // sequence, a draft fault this turn, or a dry
+                            // paged pool
+                            let tok =
+                                *active[i].generated.last().expect("active seq has a token");
+                            let solo = guard(|| {
+                                if let Some(f) = fi.as_mut() {
+                                    f.fire(FaultSite::Decode);
+                                }
+                                let row = model.decode_step(tok, &mut caches[i], &mut scratch);
+                                argmax(row.row(0)) as u16
+                            });
+                            decode_steps += 1;
+                            match solo {
+                                Ok(next) => {
+                                    decode_tokens += 1;
+                                    let a = &mut active[i];
+                                    a.generated.push(next);
+                                    if let Some(sp) = a.spec.as_mut() {
+                                        // the draft cache did not see this
+                                        // token: it joins the catch-up chunk
+                                        sp.seq.append_committed(next);
+                                    }
+                                    i += 1;
+                                }
+                                Err(msg) => {
+                                    let mut done = active.swap_remove(i);
+                                    let mut cache = caches.swap_remove(i);
+                                    cache.quarantine();
+                                    quarantined_caches += 1;
+                                    if let Some(pp) = page_pool.as_mut() {
+                                        pp.release(&mut cache); // leaks its pages
+                                    }
+                                    drop(cache); // poisoned: never recycled
+                                    if let Some(mut sp) = done.spec.take() {
+                                        // the draft cache was not involved
+                                        // in the faulted step: healthy,
+                                        // pages and husk are recyclable
+                                        if let Some(pp) = page_pool.as_mut() {
+                                            pp.release(&mut sp.cache);
+                                        }
+                                        if pool.len() < max_active {
+                                            pool.push(sp.cache);
+                                        }
+                                    }
+                                    latency.record(Instant::now() - done.submitted);
+                                    deliver(
+                                        &mut fi,
+                                        &mut faulted,
+                                        &done.respond,
+                                        Err(ServeError::Faulted(msg)),
+                                    );
+                                }
+                            }
+                        }
                     }
                 }
-                Err(_) => {
-                    // solo retry: find the poisoned sequence(s), answer
-                    // them Faulted with quarantined caches, keep everyone
-                    // else moving
-                    let mut i = 0;
-                    while i < active.len() {
-                        let tok = *active[i].generated.last().expect("active seq has a token");
-                        let solo = guard(|| {
-                            if let Some(f) = fi.as_mut() {
-                                f.fire(FaultSite::Decode);
-                            }
-                            let row = model.decode_step(tok, &mut caches[i], &mut scratch);
-                            argmax(row.row(0)) as u16
-                        });
-                        match solo {
-                            Ok(next) => {
-                                decode_tokens += 1;
-                                active[i].generated.push(next);
-                                i += 1;
-                            }
-                            Err(msg) => {
-                                let done = active.swap_remove(i);
-                                let mut cache = caches.swap_remove(i);
-                                cache.quarantine();
-                                quarantined_caches += 1;
-                                if let Some(pp) = page_pool.as_mut() {
-                                    pp.release(&mut cache); // leaks its pages
+            } else {
+                // ---- one interleaved decode step for every in-flight seq
+                step_tokens.clear();
+                for a in &active {
+                    step_tokens.push(*a.generated.last().expect("active seq has a token"));
+                }
+                // The whole batched step runs under the guard. A panic
+                // unwinds *before* any KV cursor commits (the layer walk
+                // advances caches only at its end), so retrying each
+                // sequence solo below replays the exact same step —
+                // bit-identical for the survivors — and pins the fault on
+                // the poisoned sequence(s) alone.
+                let stepped = guard(|| {
+                    if let Some(f) = fi.as_mut() {
+                        f.fire(FaultSite::Decode);
+                    }
+                    let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
+                    // sample by original row index — swap_remove in the
+                    // completion sweep reorders `active`, the logits rows
+                    // do not move with it
+                    step_out.clear();
+                    for row in 0..step_tokens.len() {
+                        step_out.push(argmax(logits.row(row)) as u16);
+                    }
+                });
+                decode_steps += 1;
+                match stepped {
+                    Ok(()) => {
+                        decode_tokens += active.len();
+                        for (a, &tok) in active.iter_mut().zip(step_out.iter()) {
+                            a.generated.push(tok);
+                        }
+                    }
+                    Err(_) => {
+                        // solo retry: find the poisoned sequence(s), answer
+                        // them Faulted with quarantined caches, keep everyone
+                        // else moving
+                        let mut i = 0;
+                        while i < active.len() {
+                            let tok =
+                                *active[i].generated.last().expect("active seq has a token");
+                            let solo = guard(|| {
+                                if let Some(f) = fi.as_mut() {
+                                    f.fire(FaultSite::Decode);
                                 }
-                                drop(cache); // poisoned: never recycled
-                                latency.record(Instant::now() - done.submitted);
-                                deliver(
-                                    &mut fi,
-                                    &mut faulted,
-                                    &done.respond,
-                                    Err(ServeError::Faulted(msg)),
-                                );
+                                let row = model.decode_step(tok, &mut caches[i], &mut scratch);
+                                argmax(row.row(0)) as u16
+                            });
+                            match solo {
+                                Ok(next) => {
+                                    decode_tokens += 1;
+                                    active[i].generated.push(next);
+                                    i += 1;
+                                }
+                                Err(msg) => {
+                                    let done = active.swap_remove(i);
+                                    let mut cache = caches.swap_remove(i);
+                                    cache.quarantine();
+                                    quarantined_caches += 1;
+                                    if let Some(pp) = page_pool.as_mut() {
+                                        pp.release(&mut cache); // leaks its pages
+                                    }
+                                    drop(cache); // poisoned: never recycled
+                                    latency.record(Instant::now() - done.submitted);
+                                    deliver(
+                                        &mut fi,
+                                        &mut faulted,
+                                        &done.respond,
+                                        Err(ServeError::Faulted(msg)),
+                                    );
+                                }
                             }
                         }
                     }
@@ -1400,8 +1755,16 @@ impl Coordinator {
             let mut i = 0;
             while i < active.len() {
                 if active[i].generated.len() >= active[i].max_new {
-                    let done = active.swap_remove(i);
+                    let mut done = active.swap_remove(i);
                     let mut cache = caches.swap_remove(i);
+                    if let Some(mut sp) = done.spec.take() {
+                        if let Some(pp) = page_pool.as_mut() {
+                            pp.release(&mut sp.cache);
+                        }
+                        if pool.len() < max_active {
+                            pool.push(sp.cache);
+                        }
+                    }
                     let now = Instant::now();
                     let steps = done.generated.len() - 1;
                     let rate =
@@ -1457,6 +1820,11 @@ impl Coordinator {
                 Some(pp) => pp.total_bytes(),
                 None => (pool.len() + caches.len()) * ring_bytes,
             },
+            spec_rounds: spec_stats.rounds,
+            spec_drafted: spec_stats.drafted,
+            spec_accepted: spec_stats.accepted,
+            spec_rolled_back: spec_stats.rolled_back,
+            spec_fallbacks,
             kv_pages_total: page_pool.as_ref().map_or(0, KvPagePool::total_pages),
             kv_pages_free: page_pool.as_ref().map_or(0, KvPagePool::free_pages),
             kv_pages_resident: page_pool.as_ref().map_or(0, KvPagePool::resident_pages),
@@ -1564,6 +1932,16 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             "kernels: fast tier (8-lane GEMV, {} pool workers; \
              tolerance-gated by tests/kernel_tolerance.rs)",
             recipe.weights.threads()
+        );
+    }
+    if let Some(sc) = &recipe.speculate {
+        println!(
+            "speculative decode: draft recipe {} ({} layout, {} kernels) proposes \
+             k={} tokens/round; output is exactly target-only greedy decode",
+            sc.draft.name,
+            if sc.draft.weights.is_dense() { "dense" } else { "packed" },
+            sc.draft.kernel_tier.name(),
+            sc.k,
         );
     }
     println!(
@@ -1772,6 +2150,7 @@ mod tests {
             queue_depth: DEFAULT_QUEUE_DEPTH,
             deadline: None,
             faults: None,
+            speculate: None,
             kv_page_positions: 0,
             kv_budget_bytes: 0,
         }

@@ -232,6 +232,22 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll the write cursor back to `new_len` positions, invalidating
+    /// every later position — the speculative-decode rejection path
+    /// (`plan/speculate.rs`): draft continuations past the accepted prefix
+    /// are discarded and the next append overwrites them lazily, exactly
+    /// like [`reset`](Self::reset) but partial. Storage is untouched, so
+    /// positions `0..new_len` keep serving attention bit-for-bit.
+    ///
+    /// A paged cache keeps every reserved page (capacity is unchanged);
+    /// use [`KvPagePool::truncate`] instead to also return now-empty
+    /// trailing pages to the pool.
+    pub fn truncate(&mut self, new_len: usize) {
+        assert!(new_len <= self.len, "truncate({new_len}) past len {}", self.len);
+        assert!(!self.quarantined, "truncate() on a quarantined cache");
+        self.len = new_len;
+    }
+
     /// Mark this cache poisoned. A panic that unwinds out of a layer walk
     /// leaves the walk's staged rows in an unknown state; the serving
     /// coordinator quarantines such a cache so a later sequence cannot
@@ -361,6 +377,22 @@ impl KvPagePool {
         budget_bytes: usize,
         quant: Option<FpFormat>,
     ) -> KvPagePool {
+        KvPagePool::sized_for(cfg, page_positions, budget_bytes, quant, 1)
+    }
+
+    /// Like [`new`](Self::new), but clamp the budget up so `min_sequences`
+    /// concurrent `max_seq` sequences always fit (each cache rounds its
+    /// page count up independently, so the clamp is per-sequence, not on
+    /// the position sum). Speculative serving uses `min_sequences = 2`:
+    /// every in-flight sequence carries a draft cache *and* a target
+    /// cache, and admission must never deadlock on the second cache.
+    pub fn sized_for(
+        cfg: &ModelConfig,
+        page_positions: usize,
+        budget_bytes: usize,
+        quant: Option<FpFormat>,
+        min_sequences: usize,
+    ) -> KvPagePool {
         assert!(page_positions > 0, "page size must be at least one position");
         let mut pool = KvPagePool {
             free: Vec::new(),
@@ -373,7 +405,7 @@ impl KvPagePool {
             max_seq: cfg.max_seq,
             quant,
         };
-        let min_pages = pool.pages_for(cfg.max_seq);
+        let min_pages = pool.pages_for(cfg.max_seq) * min_sequences.max(1);
         let total = (budget_bytes / pool.page_bytes()).max(min_pages);
         pool.free =
             (0..total).map(|_| PageBuf::new(cfg.n_layers, page_positions, cfg.d_model)).collect();
@@ -477,6 +509,28 @@ impl KvPagePool {
         cache.capacity = pages.len() * self.page_positions;
         self.peak_resident = self.peak_resident.max(self.resident_pages());
         true
+    }
+
+    /// Roll `cache` back to `new_len` positions and return every trailing
+    /// page that no longer holds a live position to the free list — the
+    /// paged form of [`KvCache::truncate`], used by the speculative-decode
+    /// rejection path. Pages `0..pages_for(new_len)` stay checked out (the
+    /// last may be partially filled; its stale tail rows are overwritten
+    /// lazily); accounting stays balanced because pages only move between
+    /// the cache and the free list.
+    pub fn truncate(&mut self, cache: &mut KvCache, new_len: usize) {
+        assert!(!cache.quarantined, "truncate() on a quarantined cache");
+        assert!(new_len <= cache.len, "truncate({new_len}) past len {}", cache.len);
+        let pages = match &mut cache.store {
+            Store::Ring { .. } => panic!("pool truncate() on a ring cache"),
+            Store::Paged { pages, .. } => pages,
+        };
+        let keep = self.pages_for(new_len);
+        while pages.len() > keep {
+            self.free.push(pages.pop().expect("len checked above"));
+        }
+        cache.capacity = pages.len() * self.page_positions;
+        cache.len = new_len;
     }
 
     /// Take back every page `cache` holds and rewind it to empty, leaving
@@ -682,6 +736,66 @@ mod tests {
             pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
             pool.total_pages()
         );
+    }
+
+    #[test]
+    fn ring_truncate_rewinds_partially_and_keeps_prefix_rows() {
+        let cfg = cfg();
+        let mut c = KvCache::new(&cfg);
+        for pos in 0..3 {
+            let row = [pos as f32; 8];
+            c.store(0, pos, &row, &row);
+            c.advance(1);
+        }
+        c.truncate(1);
+        assert_eq!((c.len(), c.capacity()), (1, 4), "ring capacity is untouched");
+        assert_eq!(c.layer(0).k_row(0), &[0.0f32; 8][..], "accepted prefix survives");
+        // rejected positions are overwritten lazily, exactly like reset
+        let row = [9.0f32; 8];
+        c.store(0, 1, &row, &row);
+        c.advance(1);
+        assert_eq!(c.layer(0).k_row(1), &row[..]);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate(3) past len 1")]
+    fn ring_truncate_past_len_panics() {
+        let cfg = cfg();
+        let mut c = KvCache::new(&cfg);
+        c.advance(1);
+        c.truncate(3);
+    }
+
+    #[test]
+    fn pool_truncate_frees_trailing_pages_and_books_balance() {
+        let cfg = cfg();
+        // P = 1 so every position is its own page.
+        let mut pool = KvPagePool::new(&cfg, 1, 0, None);
+        let total = pool.total_pages();
+        let mut c = pool.new_cache();
+        assert!(pool.reserve(&mut c, 4));
+        c.advance(4);
+        pool.truncate(&mut c, 1);
+        assert_eq!((c.len(), c.pages_held(), c.capacity()), (1, 1, 1));
+        assert_eq!(pool.free_pages(), total - 1, "trailing pages returned");
+        assert_eq!(
+            pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+            pool.total_pages()
+        );
+        // truncate to zero releases every page but keeps the husk usable
+        pool.truncate(&mut c, 0);
+        assert_eq!((c.len(), c.pages_held(), c.capacity()), (0, 0, 0));
+        assert_eq!(pool.free_pages(), total);
+        assert!(pool.reserve(&mut c, 2), "husk is still reservable");
+    }
+
+    #[test]
+    fn sized_for_clamps_to_two_sequences() {
+        let cfg = cfg();
+        let one = KvPagePool::new(&cfg, 3, 0, None);
+        let two = KvPagePool::sized_for(&cfg, 3, 0, None, 2);
+        assert_eq!(one.total_pages(), 2, "max_seq 4 over P=3 is 2 pages");
+        assert_eq!(two.total_pages(), 4, "per-sequence round-up, not position sum");
     }
 
     #[test]

@@ -49,6 +49,7 @@
 
 pub mod kv;
 mod lut;
+pub mod speculate;
 
 pub use kv::{KvCache, KvPagePool};
 pub use lut::FpQuantLut;

@@ -1,0 +1,403 @@
+//! Self-speculative decoding: draft tokens on a cheap plan of a
+//! checkpoint, verify them in one batched pass on the target plan, accept
+//! the agreeing prefix — **exact greedy parity by construction**.
+//!
+//! # The loop
+//!
+//! Draft and target are two compiled plans of the *same* checkpoint (e.g.
+//! packed rank-0 W4 with fast kernels drafting for the dense W4+LoRC
+//! target — see `ServingStack::compile_draft` in the coordinator). Each
+//! sequence carries **two** KV caches, one per plan. A round:
+//!
+//! 1. **Draft** `k` tokens greedily with the cheap plan, appending to the
+//!    draft cache (`O(k)` cheap steps).
+//! 2. **Verify** all of them in *one* target pass: feed the chunk
+//!    `[last committed token, draft₁ .. draft_k]` through
+//!    [`CompiledModel::prefill`] on the target cache. Row `i` of the
+//!    `k+1` logits rows is the target's next-token distribution after
+//!    accepting `i` draft tokens — the chunked-prefill contract
+//!    (`tests/kv_equivalence.rs`) guarantees each row is bit-identical to
+//!    the corresponding solo `decode_step`, which is what makes the
+//!    single batched pass a *verifier* and not an approximation.
+//! 3. **Accept** the longest prefix where `draft_i == argmax(row_{i-1})`.
+//!    The first disagreeing position commits the target's own argmax
+//!    instead, so every round commits at least one token; a fully
+//!    accepted round commits `k+1` (the bonus token from the last row).
+//! 4. **Roll back** both caches to the committed length
+//!    ([`KvCache::truncate`] / [`KvPagePool::truncate`]): rejected draft
+//!    positions are invalidated and trailing paged pages return to the
+//!    pool. Storage for the accepted prefix is untouched, so the next
+//!    round attends over exactly the bits a target-only decode would
+//!    have cached.
+//!
+//! # Why the output is exactly greedy target decode
+//!
+//! Every committed token is the argmax of a target logits row over the
+//! committed history — either a verified draft token (agreed with that
+//! argmax) or the target's own correction/bonus. By induction the token
+//! stream equals target-only greedy decode **token for token**; the draft
+//! plan can only change *how fast* tokens commit, never *which* tokens.
+//! `tests/speculative.rs` asserts this with `assert_eq!` on whole
+//! streams, including against adversarial drafts from a different
+//! checkpoint. The speedup comes from the verify pass amortizing one
+//! weight-matrix stream over `k+1` positions (like batching, but along
+//! the sequence axis) while the cheap plan pays the per-token cost.
+//!
+//! # Adaptive k
+//!
+//! A sequence that keeps disagreeing wastes draft work and rollbacks, so
+//! [`AdaptiveK`] halves `k` after a zero-acceptance round and creeps back
+//! up by one after a fully accepted round, clamped to `[1, configured k]`
+//! — per sequence, because acceptance is a property of the text, not the
+//! fleet.
+
+use super::{argmax, CompiledModel, DecodeScratch, KvCache, KvPagePool};
+
+/// Per-sequence draft-window controller: multiplicative decrease on full
+/// rejection, additive increase on full acceptance, clamped to
+/// `[1, configured k]`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptiveK {
+    k: usize,
+    max: usize,
+}
+
+impl AdaptiveK {
+    /// Start at the configured window (`max >= 1`).
+    pub fn new(max: usize) -> AdaptiveK {
+        assert!(max >= 1, "draft window must be at least 1");
+        AdaptiveK { k: max, max }
+    }
+
+    /// The window the next round should draft.
+    pub fn current(&self) -> usize {
+        self.k
+    }
+
+    /// Feed back one round's outcome.
+    pub fn observe(&mut self, drafted: usize, agreed: usize) {
+        if agreed == drafted {
+            self.k = (self.k + 1).min(self.max);
+        } else if agreed == 0 {
+            self.k = (self.k / 2).max(1);
+        }
+        // partial acceptance: the window is about right — keep it
+    }
+}
+
+/// The draft cache's catch-up state for one sequence. The invariant
+/// between rounds: `draft_cache.len() + pending().len()` equals the
+/// committed token count, and `pending()` ends with the most recently
+/// committed token (the one the next round drafts from). After a fully
+/// accepted round the draft cache is one position behind the bonus token,
+/// so `pending()` is two tokens; otherwise one.
+#[derive(Debug, Clone)]
+pub struct SpecSequence {
+    pending: Vec<u16>,
+}
+
+impl SpecSequence {
+    /// Start speculating a sequence whose prompt is already prefilled
+    /// into **both** caches and whose first token (`first`) came from the
+    /// target prefill.
+    pub fn start(first: u16) -> SpecSequence {
+        SpecSequence { pending: vec![first] }
+    }
+
+    /// Committed tokens the draft cache has not consumed yet.
+    pub fn pending(&self) -> &[u16] {
+        &self.pending
+    }
+
+    /// Record a token committed *outside* a speculative round (the
+    /// coordinator falls back to a plain target `decode_step` when a paged
+    /// reserve for the round fails). The draft cache did not see it, so it
+    /// joins the catch-up chunk the next round prefills.
+    pub fn append_committed(&mut self, tok: u16) {
+        self.pending.push(tok);
+    }
+
+    /// Positions a round with window `k` appends to the **draft** cache
+    /// (reserve this before [`speculative_round`] on a paged cache).
+    pub fn draft_positions(&self, k: usize) -> usize {
+        self.pending.len() + k - 1
+    }
+
+    /// Positions a round with window `k` appends to the **target** cache
+    /// before rollback (reserve this before [`speculative_round`]).
+    pub fn verify_positions(&self, k: usize) -> usize {
+        k + 1
+    }
+}
+
+/// One round's result.
+#[derive(Debug, Clone)]
+pub struct RoundOutcome {
+    /// Tokens committed to the output stream this round (`1 ..= k+1`,
+    /// always at least one).
+    pub committed: Vec<u16>,
+    /// Tokens the draft plan proposed (`== k`).
+    pub drafted: usize,
+    /// Proposed tokens the target agreed with (`committed` is these plus
+    /// one correction or bonus token).
+    pub agreed: usize,
+    /// KV positions truncated from the two caches (0 on full acceptance).
+    pub rolled_back: usize,
+}
+
+/// Running totals across rounds — the numbers `ServeReport` aggregates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SpecStats {
+    pub rounds: usize,
+    pub drafted: usize,
+    pub accepted: usize,
+    pub rolled_back: usize,
+}
+
+impl SpecStats {
+    pub fn record(&mut self, out: &RoundOutcome) {
+        self.rounds += 1;
+        self.drafted += out.drafted;
+        self.accepted += out.agreed;
+        self.rolled_back += out.rolled_back;
+    }
+
+    /// Fraction of drafted tokens the target accepted (0 when nothing
+    /// was drafted).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
+        }
+    }
+}
+
+/// Truncate through the pool when the cache is paged (frees trailing
+/// pages), directly otherwise.
+fn rollback(cache: &mut KvCache, pool: Option<&mut KvPagePool>, new_len: usize) {
+    match pool {
+        Some(p) if cache.is_paged() => p.truncate(cache, new_len),
+        _ => cache.truncate(new_len),
+    }
+}
+
+/// Phase 1 of a round: catch the draft cache up on
+/// [`pending`](SpecSequence::pending) and propose `k` tokens greedily
+/// with the cheap plan. The catch-up chunk and the first proposal come
+/// out of one prefill — chunked-prefill exactness applies to the draft
+/// cache too. Mutates only the **draft** cache (by
+/// [`draft_positions`](SpecSequence::draft_positions) rows), so the
+/// coordinator can guard it separately: a draft-plan panic poisons
+/// nothing the target decode needs.
+pub fn draft_propose(
+    draft: &CompiledModel,
+    draft_cache: &mut KvCache,
+    seq: &SpecSequence,
+    k: usize,
+    draft_scratch: &mut DecodeScratch,
+) -> Vec<u16> {
+    assert!(k >= 1, "a round must draft at least one token");
+    let mut drafts: Vec<u16> = Vec::with_capacity(k);
+    let logits = draft.prefill(&seq.pending, draft_cache, draft_scratch);
+    drafts.push(argmax(logits.row(logits.rows - 1)) as u16);
+    for _ in 1..k {
+        let logits = draft.decode_step(*drafts.last().unwrap(), draft_cache, draft_scratch);
+        drafts.push(argmax(logits.row(0)) as u16);
+    }
+    drafts
+}
+
+/// Phase 2 of a round: verify `drafts` in one batched target pass, commit
+/// the agreeing prefix plus the target's correction/bonus token, and roll
+/// both caches back to the committed length. On entry the caches satisfy
+/// the [`SpecSequence`] invariant (draft cache already advanced by
+/// [`draft_propose`]); on exit they satisfy it again for the committed
+/// stream.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_commit(
+    target: &CompiledModel,
+    target_cache: &mut KvCache,
+    draft_cache: &mut KvCache,
+    mut pool: Option<&mut KvPagePool>,
+    seq: &mut SpecSequence,
+    drafts: &[u16],
+    target_scratch: &mut DecodeScratch,
+) -> RoundOutcome {
+    let k = drafts.len();
+    assert!(k >= 1, "a round must draft at least one token");
+    let last = *seq.pending.last().expect("SpecSequence always holds the last token");
+    let committed_before = target_cache.len() + 1; // the invariant: len == C - 1
+
+    // verify all k+1 positions in one batched target pass
+    let mut chunk: Vec<u16> = Vec::with_capacity(k + 1);
+    chunk.push(last);
+    chunk.extend_from_slice(drafts);
+    let logits = target.prefill(&chunk, target_cache, target_scratch);
+    let targets: Vec<u16> = (0..logits.rows).map(|i| argmax(logits.row(i)) as u16).collect();
+
+    // accept the agreeing prefix plus the target's correction/bonus
+    let mut agreed = 0usize;
+    while agreed < k && drafts[agreed] == targets[agreed] {
+        agreed += 1;
+    }
+    let mut committed = drafts[..agreed].to_vec();
+    committed.push(targets[agreed]); // agreed == k ⇒ the bonus token
+
+    // roll both caches back to the committed length
+    let mut rolled_back = 0usize;
+    if agreed < k {
+        let target_len = committed_before + agreed; // C' - 1
+        rolled_back += target_cache.len() - target_len;
+        rollback(target_cache, pool.as_deref_mut(), target_len);
+        let draft_len = committed_before + agreed; // pending' is one token
+        rolled_back += draft_cache.len() - draft_len;
+        rollback(draft_cache, pool, draft_len);
+        seq.pending.clear();
+        seq.pending.push(targets[agreed]);
+    } else {
+        // full acceptance: nothing to roll back; the draft cache is one
+        // position (d_k) behind and must also catch up on the bonus
+        seq.pending.clear();
+        seq.pending.push(drafts[k - 1]);
+        seq.pending.push(targets[k]);
+    }
+    RoundOutcome { committed, drafted: k, agreed, rolled_back }
+}
+
+/// One draft/verify/accept/rollback round — [`draft_propose`] then
+/// [`verify_commit`] (the module docs walk through the phases; the
+/// coordinator calls the two halves itself so each runs under its own
+/// fault guard). Paged callers must reserve
+/// [`SpecSequence::draft_positions`] /
+/// [`verify_positions`](SpecSequence::verify_positions) first; `k` must
+/// leave the verify chunk inside `max_seq`
+/// (`target_cache.len() + k + 1 <= max_seq`).
+#[allow(clippy::too_many_arguments)]
+pub fn speculative_round(
+    target: &CompiledModel,
+    draft: &CompiledModel,
+    target_cache: &mut KvCache,
+    draft_cache: &mut KvCache,
+    mut pool: Option<&mut KvPagePool>,
+    seq: &mut SpecSequence,
+    k: usize,
+    target_scratch: &mut DecodeScratch,
+    draft_scratch: &mut DecodeScratch,
+) -> RoundOutcome {
+    let drafts = draft_propose(draft, draft_cache, seq, k, draft_scratch);
+    verify_commit(
+        target,
+        target_cache,
+        draft_cache,
+        pool.as_deref_mut(),
+        seq,
+        &drafts,
+        target_scratch,
+    )
+}
+
+/// Full greedy speculative generation of one sequence — the standalone
+/// driver `tests/speculative.rs` and `bench_serving` exercise (the
+/// coordinator interleaves [`speculative_round`] across its in-flight set
+/// instead). Both caches must be fresh; paged caches must come from
+/// `pool`, which the driver reserves from as it goes. Returns the token
+/// stream (`max_new` tokens, identical to target-only greedy decode) and
+/// the round totals.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_speculative(
+    target: &CompiledModel,
+    draft: &CompiledModel,
+    prompt: &[u16],
+    max_new: usize,
+    k: usize,
+    target_cache: &mut KvCache,
+    draft_cache: &mut KvCache,
+    mut pool: Option<&mut KvPagePool>,
+) -> (Vec<u16>, SpecStats) {
+    assert!(!prompt.is_empty() && max_new >= 1);
+    assert!(
+        prompt.len() + max_new <= target.config.max_seq,
+        "prompt + max_new exceeds max_seq"
+    );
+    let mut ts = target.scratch();
+    let mut ds = draft.scratch();
+    if let Some(p) = pool.as_deref_mut() {
+        assert!(p.reserve(target_cache, prompt.len()), "pool too small for the prompt");
+        assert!(p.reserve(draft_cache, prompt.len()), "pool too small for the draft prompt");
+    }
+    let logits = target.prefill(prompt, target_cache, &mut ts);
+    let first = argmax(logits.row(logits.rows - 1)) as u16;
+    let _ = draft.prefill(prompt, draft_cache, &mut ds);
+
+    let mut generated = vec![first];
+    let mut seq = SpecSequence::start(first);
+    let mut window = AdaptiveK::new(k);
+    let mut stats = SpecStats::default();
+    while generated.len() < max_new {
+        let remaining = max_new - generated.len();
+        let kr = window.current().min(remaining);
+        if let Some(p) = pool.as_deref_mut() {
+            assert!(p.reserve(target_cache, seq.verify_positions(kr)), "pool exhausted");
+            assert!(p.reserve(draft_cache, seq.draft_positions(kr)), "pool exhausted");
+        }
+        let out = speculative_round(
+            target,
+            draft,
+            target_cache,
+            draft_cache,
+            pool.as_deref_mut(),
+            &mut seq,
+            kr,
+            &mut ts,
+            &mut ds,
+        );
+        stats.record(&out);
+        window.observe(out.drafted, out.agreed);
+        generated.extend_from_slice(&out.committed);
+    }
+    generated.truncate(max_new); // a fully accepted last round overshoots by the bonus
+    (generated, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adaptive_k_halves_on_rejection_and_creeps_back() {
+        let mut w = AdaptiveK::new(4);
+        assert_eq!(w.current(), 4);
+        w.observe(4, 0);
+        assert_eq!(w.current(), 2);
+        w.observe(2, 0);
+        w.observe(1, 0);
+        assert_eq!(w.current(), 1, "floor is 1");
+        w.observe(1, 1);
+        w.observe(2, 2);
+        assert_eq!(w.current(), 3);
+        w.observe(3, 2); // partial acceptance holds the window
+        assert_eq!(w.current(), 3);
+        w.observe(3, 3);
+        w.observe(4, 4);
+        assert_eq!(w.current(), 4, "ceiling is the configured k");
+    }
+
+    #[test]
+    fn spec_sequence_accounts_round_appends() {
+        let seq = SpecSequence::start(7);
+        assert_eq!(seq.pending(), &[7]);
+        assert_eq!(seq.draft_positions(4), 4);
+        assert_eq!(seq.verify_positions(4), 5);
+    }
+
+    #[test]
+    fn stats_acceptance_rate() {
+        let mut s = SpecStats::default();
+        assert_eq!(s.acceptance_rate(), 0.0);
+        s.record(&RoundOutcome { committed: vec![1, 2, 3], drafted: 4, agreed: 2, rolled_back: 3 });
+        s.record(&RoundOutcome { committed: vec![9], drafted: 4, agreed: 4, rolled_back: 0 });
+        assert_eq!((s.rounds, s.drafted, s.accepted, s.rolled_back), (2, 8, 6, 3));
+        assert!((s.acceptance_rate() - 0.75).abs() < 1e-12);
+    }
+}

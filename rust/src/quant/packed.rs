@@ -120,6 +120,21 @@ impl QuantSidecar {
         self.entries.values().any(|e| e.lorc.is_some())
     }
 
+    /// A copy with every LoRC attachment stripped: the same quantized
+    /// codes, rank 0. This is how a speculative *draft* plan is compiled
+    /// from a LoRC target's artifacts — packing the stripped sidecar
+    /// yields the cheap uncompensated W4 model (the paper's accuracy/cost
+    /// grid, one rung down) while the target keeps the factors.
+    pub fn without_lorc(&self) -> QuantSidecar {
+        QuantSidecar {
+            entries: self
+                .entries
+                .iter()
+                .map(|(n, e)| (n.clone(), SidecarEntry { weight: e.weight.clone(), lorc: None }))
+                .collect(),
+        }
+    }
+
     pub fn iter(&self) -> impl Iterator<Item = (&String, &SidecarEntry)> {
         self.entries.iter()
     }

@@ -87,6 +87,19 @@ pub enum RecipeError {
     UnknownPreset(String),
     /// Malformed JSON, an unknown key, or an unparseable field value.
     BadJson(String),
+    /// The speculative draft window must be at least 1 token.
+    SpeculateKZero,
+    /// The draft recipe itself failed validation.
+    SpeculateDraft(Box<RecipeError>),
+    /// A draft recipe that speculates in turn: one level only.
+    SpeculateNested,
+    /// The draft plan must be strictly cheaper than the target on the
+    /// accuracy/cost grid (weight bits, LoRC rank, layout, kernel tier)
+    /// — a draft as expensive as the target can only add overhead.
+    SpeculateDraftNotCheaper,
+    /// A packed draft compiles from the target PTQ run's quantized codes;
+    /// a W16 target quantizes nothing, so there are none.
+    SpeculateDraftNeedsTargetCodes,
 }
 
 impl fmt::Display for RecipeError {
@@ -130,6 +143,22 @@ impl fmt::Display for RecipeError {
                 write!(f, "unknown preset {name:?} (try: {})", PRESET_NAMES.join(", "))
             }
             RecipeError::BadJson(msg) => write!(f, "recipe json: {msg}"),
+            RecipeError::SpeculateKZero => {
+                f.write_str("speculate: the draft window k must be at least 1")
+            }
+            RecipeError::SpeculateDraft(inner) => write!(f, "speculate draft recipe: {inner}"),
+            RecipeError::SpeculateNested => {
+                f.write_str("speculate: the draft recipe must not itself speculate")
+            }
+            RecipeError::SpeculateDraftNotCheaper => f.write_str(
+                "speculate: the draft must be strictly cheaper than the target \
+                 (fewer weight bits, lower lorc rank, packed vs dense, or fast \
+                 vs oracle kernels — and no axis more expensive)",
+            ),
+            RecipeError::SpeculateDraftNeedsTargetCodes => f.write_str(
+                "speculate: a packed draft needs the target's quantized codes \
+                 (a W16 target quantizes nothing — use a dense draft layout)",
+            ),
         }
     }
 }
@@ -192,6 +221,33 @@ pub struct QuantRecipe {
     /// `oracle` (default) or the tolerance-gated `fast` tier
     /// (8-lane GEMV + persistent decode worker pool).
     pub kernel_tier: KernelTier,
+    /// Self-speculative decoding: draft tokens with a second, strictly
+    /// cheaper plan of the *same* artifacts and verify them in one
+    /// batched target pass (`None` = off). Greedy output is exactly the
+    /// target-only stream — see `plan/speculate.rs`.
+    pub speculate: Option<SpeculateConfig>,
+}
+
+/// Default draft window when `--speculate` is given without `--draft-k`.
+pub const DEFAULT_DRAFT_K: usize = 4;
+
+/// The speculative-decoding knobs of a recipe: which cheaper view of the
+/// target's PTQ artifacts drafts, and how many tokens per verify pass.
+///
+/// The draft recipe's PTQ-side fields (scheme, LoRC, layout, kernel tier)
+/// select the *view* — the coordinator compiles it from the target run's
+/// checkpoint + sidecar (a rank-0 packed draft of a LoRC target strips the
+/// factors; see `ServingStack::compile_draft`). The draft's serving-side
+/// fields (batching, KV paging, deadlines) are ignored: both caches of a
+/// sequence live under the target's KV configuration, and the paged pool
+/// is sized so two caches per sequence always fit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpeculateConfig {
+    /// The draft plan's recipe (boxed: a recipe contains its draft).
+    pub draft: Box<QuantRecipe>,
+    /// Draft window: tokens proposed per verify pass. Per-sequence
+    /// adaptive k treats this as the ceiling.
+    pub k: usize,
 }
 
 /// Chainable construction for [`QuantRecipe`]; `build()` validates.
@@ -221,6 +277,7 @@ impl RecipeBuilder {
                 queue_depth: crate::coordinator::DEFAULT_QUEUE_DEPTH,
                 deadline_ms: 0,
                 kernel_tier: KernelTier::Oracle,
+                speculate: None,
             },
         }
     }
@@ -316,6 +373,13 @@ impl RecipeBuilder {
         self
     }
 
+    /// Self-speculative decoding: draft with `draft` (a strictly cheaper
+    /// recipe of the same artifacts), `k` tokens per verify pass.
+    pub fn speculate(mut self, draft: QuantRecipe, k: usize) -> Self {
+        self.r.speculate = Some(SpeculateConfig { draft: Box::new(draft), k });
+        self
+    }
+
     /// Validate and return the recipe.
     pub fn build(self) -> Result<QuantRecipe, RecipeError> {
         self.r.validate()?;
@@ -386,6 +450,39 @@ impl QuantRecipe {
         if self.kv_budget_bytes > 0 && self.kv_page_positions == 0 {
             return Err(RecipeError::KvBudgetNeedsPaging);
         }
+        if let Some(sc) = &self.speculate {
+            if sc.k == 0 {
+                return Err(RecipeError::SpeculateKZero);
+            }
+            if sc.draft.speculate.is_some() {
+                return Err(RecipeError::SpeculateNested);
+            }
+            sc.draft
+                .validate()
+                .map_err(|e| RecipeError::SpeculateDraft(Box::new(e)))?;
+            if w16 && !sc.draft.weights.is_dense() {
+                return Err(RecipeError::SpeculateDraftNeedsTargetCodes);
+            }
+            // The draft must sit strictly below the target on the
+            // accuracy/cost grid. Accuracy axes (weight bits, LoRC rank —
+            // the bits actually served) must be no heavier; "strictly
+            // cheaper" is any accuracy axis lower, or a pure speed win at
+            // equal accuracy (packed layout under a dense target, fast
+            // kernels under an oracle target). A draft exactly as
+            // expensive as the target can only slow the round down.
+            let dw = sc.draft.scheme.weight.bits();
+            let tw = self.scheme.weight.bits();
+            let dr = sc.draft.lorc.as_ref().map_or(0, |l| l.rank);
+            let tr = self.lorc.as_ref().map_or(0, |l| l.rank);
+            let no_worse = dw <= tw && dr <= tr;
+            let cheaper = dw < tw
+                || dr < tr
+                || (self.weights.is_dense() && !sc.draft.weights.is_dense())
+                || (!self.kernel_tier.is_fast() && sc.draft.kernel_tier.is_fast());
+            if !(no_worse && cheaper) {
+                return Err(RecipeError::SpeculateDraftNotCheaper);
+            }
+        }
         Ok(())
     }
 
@@ -438,6 +535,7 @@ impl QuantRecipe {
             },
             // fault schedules are a harness knob, never part of a recipe
             faults: None,
+            speculate: self.speculate.clone(),
         }
     }
 
@@ -471,8 +569,12 @@ impl QuantRecipe {
                 s.push_str(&format!("/{}B", self.kv_budget_bytes));
             }
         }
-        if self.kernel_tier.is_fast() {
-            s.push_str("  kernels=fast");
+        // the tier is always shown — a summary that only mentioned the
+        // fast tier made "oracle" ambiguous with "tier unknown" in
+        // `zqfp recipe list` output
+        s.push_str(&format!("  kernels={}", self.kernel_tier.name()));
+        if let Some(sc) = &self.speculate {
+            s.push_str(&format!("  speculate={}/k{}", sc.draft.name, sc.k));
         }
         s
     }
@@ -521,6 +623,15 @@ impl QuantRecipe {
             WeightLayout::Dense => "dense",
             WeightLayout::Packed { .. } => "packed",
         };
+        let speculate = match &self.speculate {
+            None => Json::Null,
+            Some(sc) => Json::Obj(vec![
+                // the full draft document, not just a name: a custom draft
+                // must round-trip field-for-field like everything else
+                ("draft".to_string(), sc.draft.to_json_value()),
+                ("k".to_string(), Json::Num(sc.k as f64)),
+            ]),
+        };
         Json::Obj(vec![
             ("name".to_string(), Json::Str(self.name.clone())),
             ("weight".to_string(), Json::Str(format_label(self.scheme.weight))),
@@ -542,6 +653,7 @@ impl QuantRecipe {
             ("max_wait_ms".to_string(), Json::Num(self.max_wait_ms as f64)),
             ("queue_depth".to_string(), Json::Num(self.queue_depth as f64)),
             ("deadline_ms".to_string(), Json::Num(self.deadline_ms as f64)),
+            ("speculate".to_string(), speculate),
         ])
     }
 
@@ -549,7 +661,15 @@ impl QuantRecipe {
     /// typo in a reproducibility artifact must not silently change the
     /// run); absent keys take the [`RecipeBuilder`] defaults.
     pub fn from_json(text: &str) -> Result<QuantRecipe, RecipeError> {
-        const KEYS: [&str; 20] = [
+        let doc = Json::parse(text).map_err(RecipeError::BadJson)?;
+        Self::from_json_value(&doc)
+    }
+
+    /// The document-level parser behind [`from_json`](Self::from_json) —
+    /// also the recursive entry point for the nested `speculate.draft`
+    /// document.
+    fn from_json_value(doc: &Json) -> Result<QuantRecipe, RecipeError> {
+        const KEYS: [&str; 21] = [
             "name",
             "weight",
             "act",
@@ -570,9 +690,9 @@ impl QuantRecipe {
             "max_wait_ms",
             "queue_depth",
             "deadline_ms",
+            "speculate",
         ];
-        let doc = Json::parse(text).map_err(RecipeError::BadJson)?;
-        let obj = match &doc {
+        let obj = match doc {
             Json::Obj(kv) => kv,
             _ => return Err(RecipeError::BadJson("top level must be an object".to_string())),
         };
@@ -708,6 +828,38 @@ impl QuantRecipe {
             crate::coordinator::DEFAULT_QUEUE_DEPTH,
         )?);
         b = b.deadline_ms(usize_field("deadline_ms", 0)? as u64);
+        match doc.get("speculate") {
+            None => {}
+            Some(v) if v.is_null() => {}
+            Some(v @ Json::Obj(kv)) => {
+                for (k, _) in kv {
+                    if k != "draft" && k != "k" {
+                        return Err(bad(format!("speculate: unknown key {k:?}")));
+                    }
+                }
+                let draft = match v.get("draft") {
+                    None => return Err(bad("speculate needs a draft recipe".to_string())),
+                    // a preset name is accepted as shorthand for its document
+                    Some(Json::Str(name)) => QuantRecipe::preset(name)
+                        .map_err(|e| RecipeError::SpeculateDraft(Box::new(e)))?,
+                    Some(d @ Json::Obj(_)) => Self::from_json_value(d)
+                        .map_err(|e| RecipeError::SpeculateDraft(Box::new(e)))?,
+                    Some(_) => {
+                        return Err(bad(
+                            "speculate.draft must be a recipe object or a preset name".to_string(),
+                        ))
+                    }
+                };
+                let k = match v.get("k") {
+                    None => DEFAULT_DRAFT_K,
+                    Some(n) => n.as_usize().ok_or_else(|| {
+                        bad("speculate.k must be a non-negative integer".to_string())
+                    })?,
+                };
+                b = b.speculate(draft, k);
+            }
+            Some(_) => return Err(bad("speculate must be an object or null".to_string())),
+        }
         b.build()
     }
 
@@ -870,6 +1022,41 @@ impl QuantRecipe {
         r.max_wait_ms = args.get_usize("max-wait-ms", r.max_wait_ms as usize)? as u64;
         r.queue_depth = args.get_usize("queue-depth", r.queue_depth)?;
         r.deadline_ms = args.get_usize("deadline-ms", r.deadline_ms as usize)? as u64;
+
+        // Speculative decoding: `--speculate <preset|path>` selects the
+        // draft recipe, `--draft-k` the window, `--no-speculate` strips a
+        // speculating base recipe — same policies as every knob above
+        // (valueless flags rejected, contradictions are errors, targeted
+        // knobs need their enabler).
+        let no_spec = args.flag("no-speculate");
+        let spec_flag = args.flag("speculate");
+        if no_spec && spec_flag {
+            return Err("--speculate and --no-speculate are contradictory".to_string());
+        }
+        if spec_flag && args.get("speculate").is_none() {
+            return Err("--speculate needs a value (a preset name or a recipe file)".to_string());
+        }
+        if args.flag("draft-k") && args.get("draft-k").is_none() {
+            return Err("--draft-k needs a value".to_string());
+        }
+        if no_spec {
+            if args.flag("draft-k") {
+                return Err("--draft-k has no effect with --no-speculate".to_string());
+            }
+            r.speculate = None;
+        } else if let Some(spec) = args.get("speculate") {
+            let draft = QuantRecipe::load(&spec)?;
+            let k = args.get_usize(
+                "draft-k",
+                r.speculate.as_ref().map_or(DEFAULT_DRAFT_K, |s| s.k),
+            )?;
+            r.speculate = Some(SpeculateConfig { draft: Box::new(draft), k });
+        } else if r.speculate.is_some() {
+            let sc = r.speculate.as_mut().expect("checked above");
+            sc.k = args.get_usize("draft-k", sc.k)?;
+        } else if args.flag("draft-k") {
+            return Err("--draft-k has no effect without --speculate".to_string());
+        }
 
         r.validate().map_err(|e| e.to_string())?;
         Ok(r)
@@ -1130,7 +1317,9 @@ mod tests {
         let base = QuantRecipe::preset("w4a8-fp").unwrap();
         assert_eq!(base.kernel_tier, KernelTier::Oracle);
         assert_eq!(base.engine_opts().kernels, KernelTier::Oracle);
-        assert!(!base.summary().contains("kernels"));
+        // the summary names the tier even at the default — "oracle" must
+        // not be ambiguous with "not shown"
+        assert!(base.summary().contains("kernels=oracle"));
         // --kernels fast threads through the recipe into the engine opts
         let r = QuantRecipe::from_args(
             &argv(&["--scheme", "w4a8-fp-fp", "--packed", "--kernels", "fast"]),
@@ -1190,6 +1379,128 @@ mod tests {
         assert_eq!(r.kv_page_positions, 8);
         assert_eq!(r.kv_budget_bytes, 0);
         assert!(r.summary().contains("paged:8"));
+    }
+
+    #[test]
+    fn speculate_validation_rules() {
+        let target = QuantRecipe::preset("w4a8-fp-lorc").unwrap();
+        let cheap = QuantRecipe::preset("w4a8-fp").unwrap();
+        // the happy path: rank-0 draft under a LoRC target
+        let mut r = target.clone();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(cheap.clone()), k: 4 });
+        r.validate().unwrap();
+        // k = 0 is rejected
+        r.speculate.as_mut().unwrap().k = 0;
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateKZero));
+        // a draft identical to the target can only add overhead
+        let mut r = cheap.clone();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(cheap.clone()), k: 2 });
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateDraftNotCheaper));
+        // ...but the same bits with a pure speed win (packed layout or
+        // fast kernels) is a legitimate draft
+        let mut packed_fast = cheap.clone();
+        packed_fast.weights = WeightLayout::Packed { threads: 1 };
+        packed_fast.kernel_tier = KernelTier::Fast;
+        let mut r = cheap.clone();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(packed_fast), k: 2 });
+        r.validate().unwrap();
+        // a draft heavier than the target is rejected (w16 drafting w4)
+        let mut r = cheap.clone();
+        r.speculate =
+            Some(SpeculateConfig { draft: Box::new(QuantRecipe::preset("w16").unwrap()), k: 2 });
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateDraftNotCheaper));
+        // a packed draft under a W16 target has no codes to pack
+        let mut packed = cheap.clone();
+        packed.weights = WeightLayout::Packed { threads: 1 };
+        let mut r = QuantRecipe::preset("w16").unwrap();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(packed), k: 2 });
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateDraftNeedsTargetCodes));
+        // one level of speculation only
+        let mut nested = cheap.clone();
+        nested.speculate = Some(SpeculateConfig {
+            draft: Box::new(QuantRecipe::preset("w4a8-fp-m1").unwrap()),
+            k: 1,
+        });
+        let mut r = target.clone();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(nested), k: 2 });
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateNested));
+        // an invalid draft recipe surfaces as the wrapped error
+        let mut broken = cheap.clone();
+        broken.group_size = 0;
+        let mut r = target.clone();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(broken), k: 2 });
+        assert_eq!(
+            r.validate(),
+            Err(RecipeError::SpeculateDraft(Box::new(RecipeError::GroupSizeZero)))
+        );
+    }
+
+    #[test]
+    fn speculate_json_flags_and_summary() {
+        // full JSON round trip with a nested draft document
+        let mut r = QuantRecipe::preset("w4a8-fp-lorc").unwrap();
+        let mut draft = QuantRecipe::preset("w4a8-fp").unwrap();
+        draft.weights = WeightLayout::Packed { threads: 2 };
+        draft.kernel_tier = KernelTier::Fast;
+        r.speculate = Some(SpeculateConfig { draft: Box::new(draft), k: 3 });
+        r.validate().unwrap();
+        let back = QuantRecipe::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // a preset name is accepted as draft shorthand
+        let short = QuantRecipe::from_json(
+            r#"{"weight":"fp4_e2m1","act":"fp8_e4m3","lorc":{"rank":8},
+                "speculate":{"draft":"w4a8-fp","k":2}}"#,
+        )
+        .unwrap();
+        assert_eq!(short.speculate.as_ref().unwrap().k, 2);
+        assert_eq!(short.speculate.as_ref().unwrap().draft.name, "w4a8-fp");
+        // k defaults when absent; unknown nested keys are rejected
+        let d = QuantRecipe::from_json(
+            r#"{"lorc":{"rank":8},"speculate":{"draft":"w4a8-fp"}}"#,
+        )
+        .unwrap();
+        assert_eq!(d.speculate.unwrap().k, DEFAULT_DRAFT_K);
+        assert!(QuantRecipe::from_json(r#"{"speculate":{"draft":"w4a8-fp","kk":2}}"#).is_err());
+        assert!(QuantRecipe::from_json(r#"{"speculate":{"k":2}}"#).is_err());
+        assert!(QuantRecipe::from_json(r#"{"speculate":"w4a8-fp"}"#).is_err());
+        // the flag path: --speculate / --draft-k / --no-speculate
+        let a = argv(&["--recipe", "w4a8-fp-lorc", "--speculate", "w4a8-fp", "--draft-k", "2"]);
+        let r = QuantRecipe::from_args(&a, "w16").unwrap();
+        let sc = r.speculate.as_ref().unwrap();
+        assert_eq!((sc.draft.name.as_str(), sc.k), ("w4a8-fp", 2));
+        assert!(a.finish().is_ok(), "speculate knobs are consumed");
+        assert!(r.summary().contains("speculate=w4a8-fp/k2"));
+        // --draft-k defaults to 4 when --speculate is given alone
+        let a = argv(&["--recipe", "w4a8-fp-lorc", "--speculate", "w4a8-fp"]);
+        assert_eq!(QuantRecipe::from_args(&a, "w16").unwrap().speculate.unwrap().k, 4);
+        // knob rules: valueless, contradictory, targeted-without-enabler
+        assert!(QuantRecipe::from_args(&argv(&["--speculate"]), "w16").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--draft-k", "2"]), "w16").is_err());
+        assert!(QuantRecipe::from_args(
+            &argv(&["--speculate", "w4a8-fp", "--no-speculate"]),
+            "w4a8-fp-lorc"
+        )
+        .is_err());
+        assert!(QuantRecipe::from_args(
+            &argv(&["--speculate", "w4a8-fp", "--draft-k"]),
+            "w4a8-fp-lorc"
+        )
+        .is_err());
+        // --no-speculate strips a speculating base recipe
+        let dir = std::env::temp_dir().join("zqfp_recipe_spec");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("spec.json");
+        let mut speculating = QuantRecipe::preset("w4a8-fp-lorc").unwrap();
+        speculating.speculate = Some(SpeculateConfig {
+            draft: Box::new(QuantRecipe::preset("w4a8-fp").unwrap()),
+            k: 4,
+        });
+        std::fs::write(&path, speculating.to_json()).unwrap();
+        let a = argv(&["--recipe", path.to_str().unwrap(), "--no-speculate"]);
+        assert!(QuantRecipe::from_args(&a, "w16").unwrap().speculate.is_none());
+        // ...and --draft-k alone adjusts the base recipe's window
+        let a = argv(&["--recipe", path.to_str().unwrap(), "--draft-k", "1"]);
+        assert_eq!(QuantRecipe::from_args(&a, "w16").unwrap().speculate.unwrap().k, 1);
     }
 
     #[test]

@@ -67,6 +67,7 @@ fn cfg_with(ck: Checkpoint, max_batch: usize, faults: Option<FaultPlan>) -> Coor
         queue_depth: 64,
         deadline: None,
         faults,
+        speculate: None,
         kv_page_positions: 0,
         kv_budget_bytes: 0,
     }
@@ -528,6 +529,113 @@ fn pool_exhaustion_chaos_keeps_typed_responses_and_balanced_books() {
         assert!(report.kv_pages_peak <= report.kv_pages_total, "seed {seed}");
         assert_eq!(report.kv_pool_bytes, 4 * page_bytes, "seed {seed}");
     }
+}
+
+/// A speculating recipe (packed oracle target, packed fast-tier draft)
+/// under draft-site faults. The contract: a draft fault is never fatal
+/// and never inexact — the sequence's draft cache is quarantined, the
+/// sequence permanently downgrades to target-only decode, and every
+/// response is still a typed `Ok` whose tokens are bit-identical to the
+/// target plan decoding alone. The target's caches stay healthy.
+#[test]
+fn draft_faults_fall_back_to_target_only_greedy_identical() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let draft_recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .name("chaos-draft")
+        .group_size(16)
+        .use_gptq(false)
+        .packed(1)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let recipe = QuantRecipe::builder(Scheme::parse("w4a8-fp-fp").unwrap())
+        .name("chaos-spec")
+        .group_size(16)
+        .use_gptq(false)
+        .packed(1)
+        .speculate(draft_recipe, 4)
+        .build()
+        .unwrap();
+    let calib: Vec<Vec<u16>> = (0..3).map(|i| prompt_for(i, 7)).collect();
+    let stack = ServingStack::build(&ck, &calib, &recipe).unwrap();
+    // speculation must not change content, so survivors match the TARGET
+    // plan's own greedy decode — draft faults only remove the speedup
+    let reference = stack.compile();
+
+    // -- every draft use faults: each sequence downgrades at mint --------
+    let mut cfg =
+        recipe.coordinator_config(stack.checkpoint.clone(), Some(stack.sidecar.clone()));
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::ZERO };
+    cfg.faults = Some(FaultPlan::parse("draft:always").unwrap());
+    let coord = Coordinator::new(cfg);
+    let mut handles = Vec::new();
+    for c in 0..3usize {
+        let client = coord.gen_client().unwrap();
+        handles.push(std::thread::spawn(move || {
+            (0..3)
+                .map(|i| {
+                    let p = prompt_for(c, i);
+                    (p.clone(), client.generate(p, 4))
+                })
+                .collect::<Vec<_>>()
+        }));
+    }
+    let report = run_within(coord, 30);
+    for h in handles {
+        for (prompt, res) in h.join().unwrap() {
+            let got = res.expect("a draft fault must never fault the request outward");
+            assert_eq!(
+                got.tokens,
+                greedy_reference(&reference, &prompt, 4),
+                "fallback output must be the target plan's own greedy decode"
+            );
+        }
+    }
+    assert_eq!(report.requests, 9);
+    assert_eq!(report.faulted, 0, "draft faults never surface as Faulted");
+    assert_eq!(report.spec_fallbacks, 9, "every sequence fell back at draft mint");
+    assert_eq!(
+        report.quarantined_caches, 9,
+        "exactly the 9 poisoned draft caches are quarantined — no target cache"
+    );
+    assert_eq!(report.spec_rounds, 0, "no speculative round survived draft:always");
+
+    // -- deterministic one-shot fault (draft:nth=3): with a solo batch the
+    // first two draft-site firings are request 1's mint and its first
+    // proposal round, so the third lands only after a full round committed
+    // — exactly one sequence downgrades, everything stays exact ----------
+    let mut cfg =
+        recipe.coordinator_config(stack.checkpoint.clone(), Some(stack.sidecar.clone()));
+    cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::ZERO };
+    cfg.faults = Some(FaultPlan::parse("draft:nth=3").unwrap());
+    let coord = Coordinator::new(cfg);
+    let client = coord.gen_client().unwrap();
+    let h = std::thread::spawn(move || {
+        (0..3)
+            .map(|i| {
+                let p = prompt_for(1, i);
+                (p.clone(), client.generate(p, 6))
+            })
+            .collect::<Vec<_>>()
+    });
+    let report = run_within(coord, 30);
+    for (prompt, res) in h.join().unwrap() {
+        let got = res.expect("a mid-stream draft fault must never fault the request outward");
+        assert_eq!(
+            got.tokens,
+            greedy_reference(&reference, &prompt, 6),
+            "mid-stream fallback must stay bit-identical to target-only decode"
+        );
+    }
+    assert_eq!(report.faulted, 0);
+    assert_eq!(report.spec_fallbacks, 1, "one sequence downgraded mid-stream");
+    assert_eq!(report.quarantined_caches, 1, "only that sequence's draft cache");
+    assert!(
+        report.spec_rounds > 0,
+        "rounds before the fault (and the unfaulted requests) still speculated"
+    );
+    assert!(report.spec_rolled_back > 0 || report.spec_accepted > 0);
 }
 
 /// Bounded admission end to end: a depth-1 queue sheds every submission

@@ -273,6 +273,7 @@ fn paged_cfg(ck: Checkpoint, page: usize, budget: usize) -> CoordinatorConfig {
         queue_depth: 64,
         deadline: None,
         faults: None,
+        speculate: None,
         kv_page_positions: page,
         kv_budget_bytes: budget,
     }

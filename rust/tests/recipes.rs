@@ -17,13 +17,13 @@
 
 use zeroquant_fp::cli::Args;
 use zeroquant_fp::coordinator::ServingStack;
-use zeroquant_fp::engine::{Engine, WeightLayout};
+use zeroquant_fp::engine::{Engine, KernelTier, WeightLayout};
 use zeroquant_fp::formats::{FpFormat, NumericFormat};
 use zeroquant_fp::gptq::GptqConfig;
 use zeroquant_fp::lorc::LorcConfig;
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
 use zeroquant_fp::quant::{ScaleConstraint, Scheme};
-use zeroquant_fp::recipe::{PRESET_NAMES, QuantRecipe, RecipeBuilder, RecipeError};
+use zeroquant_fp::recipe::{PRESET_NAMES, QuantRecipe, RecipeBuilder, RecipeError, SpeculateConfig};
 use zeroquant_fp::rng::Rng;
 
 fn tiny_ck(arch: Arch) -> Checkpoint {
@@ -373,4 +373,70 @@ fn stack_coordinator_serves_the_recipe() {
     let h = std::thread::spawn(move || client.score(w).unwrap());
     coord.run().unwrap();
     assert_eq!(h.join().unwrap(), direct);
+}
+
+#[test]
+fn speculate_summary_and_json_round_trip() {
+    // The serving knobs a speculating deployment pins — kernel tier and the
+    // nested draft recipe — must survive summary() (human-facing) and the
+    // JSON round-trip (config-file-facing) without drifting.
+    let draft = RecipeBuilder::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .name("cheap-draft")
+        .group_size(16)
+        .use_gptq(false)
+        .packed(2)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let target = RecipeBuilder::new(Scheme::parse("w4a8-fp-fp").unwrap())
+        .name("spec-target")
+        .group_size(16)
+        .use_gptq(false)
+        .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+        .packed(1)
+        .speculate(draft.clone(), 3)
+        .build()
+        .unwrap();
+
+    // summary surfaces both knobs, on draft and target alike
+    let s = target.summary();
+    assert!(s.contains("kernels=oracle"), "target summary missing kernel tier: {s}");
+    assert!(s.contains("speculate=cheap-draft/k3"), "target summary missing speculate: {s}");
+    assert!(draft.summary().contains("kernels=fast"), "draft summary missing fast tier");
+    assert!(!draft.summary().contains("speculate="), "non-speculating draft grew a speculate knob");
+
+    // compact and pretty JSON both round-trip bit-exactly, draft included
+    for text in [target.to_json(), target.to_json_pretty()] {
+        let back = QuantRecipe::from_json(&text).unwrap();
+        assert_eq!(back, target, "speculating recipe drifted through JSON");
+        let sc = back.speculate.as_ref().unwrap();
+        assert_eq!(*sc.draft, draft);
+        assert_eq!(sc.k, 3);
+        assert_eq!(sc.draft.kernel_tier, KernelTier::Fast);
+    }
+
+    // a preset name is accepted as draft shorthand in a recipe document
+    // (the sparse doc's default scheme is W4A8, so the LoRC'd target is
+    // strictly heavier than the plain w4a8-fp preset on the rank axis)
+    let doc = r#"{
+        "name": "from-doc",
+        "group_size": 16,
+        "lorc": {"rank": 4, "format": "fp8_e4m3"},
+        "speculate": {"draft": "w4a8-fp", "k": 2}
+    }"#;
+    let from_doc = QuantRecipe::from_json(doc).unwrap();
+    let sc = from_doc.speculate.as_ref().unwrap();
+    assert_eq!(*sc.draft, QuantRecipe::preset("w4a8-fp").unwrap());
+    assert_eq!(sc.k, 2);
+    // and the shorthand round-trips through the expanded form
+    assert_eq!(QuantRecipe::from_json(&from_doc.to_json()).unwrap(), from_doc);
+
+    // field mutation after build still funnels through validate() on parse:
+    // a draft that itself speculates serializes fine but is rejected typed
+    let mut bad = from_doc.clone();
+    bad.speculate = Some(SpeculateConfig { draft: Box::new(bad.clone()), k: 2 });
+    assert!(matches!(
+        QuantRecipe::from_json(&bad.to_json()),
+        Err(RecipeError::SpeculateNested)
+    ));
 }

@@ -144,6 +144,7 @@ fn coordinator_serves_batches() {
         queue_depth: zeroquant_fp::coordinator::DEFAULT_QUEUE_DEPTH,
         deadline: None,
         faults: None,
+        speculate: None,
         kv_page_positions: 0,
         kv_budget_bytes: 0,
     });

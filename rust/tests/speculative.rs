@@ -1,0 +1,355 @@
+//! Self-speculative decoding: the exact-greedy-parity gate (ISSUE 9's
+//! tentpole invariant).
+//!
+//! 1. For every draft/target recipe pair, both architectures, and
+//!    `k ∈ {1, 2, 4}`, speculative greedy decode is **token-for-token
+//!    identical** to target-only greedy decode — on ring KV and on paged
+//!    KV. The draft plan may only change how fast tokens commit, never
+//!    which tokens.
+//! 2. The parity holds for *arbitrary* drafts: an adversarial draft
+//!    compiled from a completely different checkpoint (guaranteed
+//!    mid-stream rejections and rollbacks) still yields the exact target
+//!    stream.
+//! 3. KV rollback at paged-page boundaries: truncating to an exact page
+//!    edge frees the trailing pages, truncating mid-page keeps the
+//!    partial page, the pool books (`free + resident + leaked == total`)
+//!    balance throughout, and decode regrown over the truncated tail is
+//!    bit-identical to a fresh cache.
+//! 4. The same parity end to end through the serving stack: a coordinator
+//!    with `recipe.speculate` set returns exactly the target-only token
+//!    streams, with the `spec_*` report counters accounting the rounds.
+
+use zeroquant_fp::coordinator::{ServeReport, ServingStack};
+use zeroquant_fp::engine::{EngineOpts, KernelTier};
+use zeroquant_fp::formats::NumericFormat;
+use zeroquant_fp::lorc::LorcConfig;
+use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
+use zeroquant_fp::plan::speculate::generate_speculative;
+use zeroquant_fp::plan::{argmax, CompiledModel, KvPagePool};
+use zeroquant_fp::quant::Scheme;
+use zeroquant_fp::recipe::{QuantRecipe, SpeculateConfig};
+use zeroquant_fp::rng::Rng;
+
+fn tiny(arch: Arch) -> ModelConfig {
+    ModelConfig {
+        name: format!("speculative-{}", arch.name()),
+        arch,
+        vocab_size: 48,
+        d_model: 24,
+        n_heads: 3,
+        n_layers: 2,
+        d_ff: 48,
+        max_seq: 48,
+    }
+}
+
+fn bits(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Target-only greedy decode — the stream every speculative run must
+/// reproduce exactly.
+fn greedy(model: &CompiledModel, prompt: &[u16], max_new: usize) -> Vec<u16> {
+    let mut s = model.scratch();
+    let mut cache = model.kv_cache();
+    let logits = model.prefill(prompt, &mut cache, &mut s);
+    let mut next = argmax(logits.row(logits.rows - 1)) as u16;
+    let mut out = vec![next];
+    while out.len() < max_new {
+        let row = model.decode_step(next, &mut cache, &mut s);
+        next = argmax(row.row(0)) as u16;
+        out.push(next);
+    }
+    out
+}
+
+/// Three draft/target plan pairs of one checkpoint, built through the
+/// production path (`ServingStack::compile` + `compile_draft`):
+/// rank-0 fast draft under the packed W4+LoRC target, fast-tier draft of
+/// the same packed W4 codes under the oracle target, and a dense
+/// FP8-activation draft under the dense W16 target.
+fn recipe_pairs(ck: &Checkpoint) -> Vec<(&'static str, CompiledModel, CompiledModel)> {
+    let w4 = Scheme::parse("w4a8-fp-fp").unwrap();
+    let mut out = Vec::new();
+    {
+        let draft = QuantRecipe::builder(w4)
+            .group_size(16)
+            .use_gptq(false)
+            .packed(1)
+            .kernels(KernelTier::Fast)
+            .build()
+            .unwrap();
+        let target = QuantRecipe::builder(w4)
+            .group_size(16)
+            .use_gptq(false)
+            .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+            .packed(1)
+            .speculate(draft, 4)
+            .build()
+            .unwrap();
+        let stack = ServingStack::build(ck, &[], &target).unwrap();
+        out.push((
+            "lorc-target<-rank0-fast-draft",
+            stack.compile(),
+            stack.compile_draft().expect("recipe speculates"),
+        ));
+    }
+    {
+        let draft = QuantRecipe::builder(w4)
+            .group_size(16)
+            .use_gptq(false)
+            .packed(1)
+            .kernels(KernelTier::Fast)
+            .build()
+            .unwrap();
+        let target = QuantRecipe::builder(w4)
+            .group_size(16)
+            .use_gptq(false)
+            .packed(1)
+            .speculate(draft, 4)
+            .build()
+            .unwrap();
+        let stack = ServingStack::build(ck, &[], &target).unwrap();
+        out.push((
+            "oracle-target<-fast-tier-draft",
+            stack.compile(),
+            stack.compile_draft().expect("recipe speculates"),
+        ));
+    }
+    {
+        let draft = QuantRecipe::builder(w4).group_size(16).use_gptq(false).build().unwrap();
+        let mut target = QuantRecipe::preset("w16").unwrap();
+        target.speculate = Some(SpeculateConfig { draft: Box::new(draft), k: 4 });
+        let stack = ServingStack::build(ck, &[], &target).unwrap();
+        out.push((
+            "w16-target<-dense-fp8act-draft",
+            stack.compile(),
+            stack.compile_draft().expect("recipe speculates"),
+        ));
+    }
+    out
+}
+
+#[test]
+fn speculative_decode_matches_target_only_greedy() {
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0x5BEC + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let prompt: Vec<u16> = (0..8).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+        for (label, target, draft) in recipe_pairs(&ck) {
+            let want = greedy(&target, &prompt, 24);
+            for k in [1usize, 2, 4] {
+                // ring KV
+                let mut tc = target.kv_cache();
+                let mut dc = draft.kv_cache();
+                let (got, stats) =
+                    generate_speculative(&target, &draft, &prompt, 24, k, &mut tc, &mut dc, None);
+                assert_eq!(got, want, "{label} {} k={k} ring diverged", cfg.name);
+                assert!(stats.rounds >= 1, "{label}: no rounds ran");
+                assert!(stats.accepted <= stats.drafted);
+
+                // paged KV: 5-position pages (misaligned with every k) from
+                // a pool sized for the two caches the sequence carries
+                let mut pool = KvPagePool::sized_for(&cfg, 5, 0, None, 2);
+                let mut tc = pool.new_cache();
+                let mut dc = pool.new_cache();
+                let (got, _) = generate_speculative(
+                    &target,
+                    &draft,
+                    &prompt,
+                    24,
+                    k,
+                    &mut tc,
+                    &mut dc,
+                    Some(&mut pool),
+                );
+                assert_eq!(got, want, "{label} {} k={k} paged diverged", cfg.name);
+                // rollback books: each cache holds exactly the pages its
+                // committed length needs, and release returns everything
+                assert_eq!(tc.pages_held(), pool.pages_for(tc.len()), "{label}: target pages");
+                assert_eq!(dc.pages_held(), pool.pages_for(dc.len()), "{label}: draft pages");
+                pool.release(&mut tc);
+                pool.release(&mut dc);
+                assert_eq!(pool.free_pages(), pool.total_pages(), "{label}: pages leaked");
+                assert_eq!(pool.leaked_pages(), 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn adversarial_draft_from_another_checkpoint_stays_exact() {
+    // Exactness must hold for ARBITRARY draft proposals, not just close
+    // plans: a draft compiled from an unrelated checkpoint disagrees
+    // constantly, forcing the rejection/rollback path mid-stream on
+    // nearly every round — and the output must still be the exact target
+    // stream.
+    for arch in [Arch::Opt, Arch::Llama] {
+        let cfg = tiny(arch);
+        let mut rng = Rng::seeded(0xADB0 + arch as u64);
+        let ck = Checkpoint::random(&cfg, &mut rng);
+        let other = Checkpoint::random(&cfg, &mut rng);
+        let target = CompiledModel::compile(&ck, EngineOpts::default());
+        let draft = CompiledModel::compile(&other, EngineOpts::default());
+        let prompt: Vec<u16> = (0..8).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+        let want = greedy(&target, &prompt, 24);
+        for k in [1usize, 2, 4] {
+            let mut tc = target.kv_cache();
+            let mut dc = draft.kv_cache();
+            let (got, stats) =
+                generate_speculative(&target, &draft, &prompt, 24, k, &mut tc, &mut dc, None);
+            assert_eq!(got, want, "{} k={k} ring diverged under adversarial draft", cfg.name);
+            assert!(stats.rolled_back > 0, "an unrelated draft must hit the rollback path");
+
+            let mut pool = KvPagePool::sized_for(&cfg, 3, 0, None, 2);
+            let mut tc = pool.new_cache();
+            let mut dc = pool.new_cache();
+            let (got, stats) = generate_speculative(
+                &target,
+                &draft,
+                &prompt,
+                24,
+                k,
+                &mut tc,
+                &mut dc,
+                Some(&mut pool),
+            );
+            assert_eq!(got, want, "{} k={k} paged diverged under adversarial draft", cfg.name);
+            assert!(stats.rolled_back > 0);
+            pool.release(&mut tc);
+            pool.release(&mut dc);
+            assert_eq!(pool.free_pages(), pool.total_pages());
+            assert_eq!(pool.leaked_pages(), 0);
+        }
+    }
+}
+
+#[test]
+fn paged_rollback_at_page_boundaries_frees_pages_and_regrows_bit_exact() {
+    // The rollback primitive verify_commit leans on, at both boundary
+    // cases: truncating to an exact page edge must free the trailing
+    // pages, truncating mid-page must keep the partial page, and decode
+    // regrown over the truncated tail must be bit-identical to a fresh
+    // cache — rollback may not disturb the surviving prefix.
+    let cfg = tiny(Arch::Opt);
+    let mut rng = Rng::seeded(0xB0DA);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let model = CompiledModel::compile(&ck, EngineOpts::default());
+    let window: Vec<u16> = (0..12).map(|_| rng.below(cfg.vocab_size) as u16).collect();
+    let mut pool = KvPagePool::new(&cfg, 4, 0, None);
+    let total = pool.total_pages();
+
+    // fresh-cache reference rows for positions 6..12
+    let reference: Vec<Vec<u32>> = {
+        let mut s = model.scratch();
+        let mut c = pool.new_cache();
+        assert!(pool.reserve(&mut c, 12));
+        model.prefill(&window[..6], &mut c, &mut s);
+        let rows: Vec<Vec<u32>> = window[6..12]
+            .iter()
+            .map(|&t| bits(model.decode_step(t, &mut c, &mut s).row(0)))
+            .collect();
+        pool.release(&mut c);
+        rows
+    };
+    assert_eq!(pool.free_pages(), total);
+
+    let mut s = model.scratch();
+    let mut c = pool.new_cache();
+    assert!(pool.reserve(&mut c, 12));
+    model.prefill(&window, &mut c, &mut s);
+    assert_eq!((c.len(), c.pages_held()), (12, 3));
+
+    // exact page edge: 12 -> 8 drops page 3 back to the free list
+    pool.truncate(&mut c, 8);
+    assert_eq!((c.len(), c.pages_held()), (8, 2));
+    assert_eq!(pool.free_pages(), total - 2);
+    assert_eq!(pool.free_pages() + pool.resident_pages() + pool.leaked_pages(), total);
+
+    // mid-page: 8 -> 6 keeps the partially-live second page
+    pool.truncate(&mut c, 6);
+    assert_eq!((c.len(), c.pages_held()), (6, 2));
+    assert_eq!(pool.free_pages(), total - 2);
+    assert_eq!(pool.free_pages() + pool.resident_pages() + pool.leaked_pages(), total);
+
+    // regrow over the truncated tail: bit-identical to the fresh run
+    assert!(pool.reserve(&mut c, 6));
+    for (i, &t) in window[6..12].iter().enumerate() {
+        let row = bits(model.decode_step(t, &mut c, &mut s).row(0));
+        assert_eq!(row, reference[i], "regrown decode row {i} diverged after rollback");
+    }
+    assert_eq!((c.len(), c.pages_held()), (12, 3));
+    pool.release(&mut c);
+    assert_eq!(pool.free_pages(), total);
+    assert_eq!(pool.leaked_pages(), 0);
+}
+
+#[test]
+fn coordinator_speculative_serving_matches_target_only_and_counts() {
+    let cfg = tiny(Arch::Opt);
+    let mut rng = Rng::seeded(0xC0DE);
+    let ck = Checkpoint::random(&cfg, &mut rng);
+    let w4 = Scheme::parse("w4a8-fp-fp").unwrap();
+    let draft = QuantRecipe::builder(w4)
+        .group_size(16)
+        .use_gptq(false)
+        .packed(1)
+        .kernels(KernelTier::Fast)
+        .build()
+        .unwrap();
+    let mut target = QuantRecipe::builder(w4)
+        .group_size(16)
+        .use_gptq(false)
+        .lorc(LorcConfig { rank: 4, factor_format: NumericFormat::FP8_E4M3 })
+        .packed(1)
+        .speculate(draft, 4)
+        .build()
+        .unwrap();
+    target.max_batch = 2;
+    target.max_wait_ms = 0;
+
+    let prompts: Vec<Vec<u16>> =
+        (0..6).map(|i| (0..8).map(|j| ((i * 17 + j * 5) % 48) as u16).collect()).collect();
+
+    // identical traffic through one recipe: 3 clients x 2 generations
+    let run = |r: &QuantRecipe| -> (Vec<Vec<u16>>, ServeReport) {
+        let coord = ServingStack::build(&ck, &[], r).unwrap().coordinator();
+        let mut handles = Vec::new();
+        for chunk in prompts.chunks(2) {
+            let client = coord.gen_client().unwrap();
+            let mine = chunk.to_vec();
+            handles.push(std::thread::spawn(move || {
+                mine.into_iter()
+                    .map(|p| client.generate(p, 12).unwrap().tokens)
+                    .collect::<Vec<Vec<u16>>>()
+            }));
+        }
+        let report = coord.run().unwrap();
+        let mut outs = Vec::new();
+        for h in handles {
+            outs.extend(h.join().unwrap());
+        }
+        (outs, report)
+    };
+
+    let mut base = target.clone();
+    base.speculate = None;
+    let (want, base_report) = run(&base);
+    assert_eq!(base_report.spec_rounds, 0);
+    assert_eq!(base_report.spec_fallbacks, 0);
+
+    let (got, report) = run(&target);
+    assert_eq!(got, want, "speculative serving changed the token streams (ring KV)");
+    assert!(report.spec_rounds > 0, "speculation never engaged");
+    assert!(report.spec_accepted <= report.spec_drafted);
+    assert_eq!(report.spec_fallbacks, 0, "ring serving has no reserve failures");
+    assert!((0.0..=1.0).contains(&report.spec_acceptance_rate()));
+    assert!(report.spec_tokens_per_round() >= 1.0, "every round commits at least one token");
+
+    let mut paged = target.clone();
+    paged.kv_page_positions = 5;
+    let (got, preport) = run(&paged);
+    assert_eq!(got, want, "speculative serving changed the token streams (paged KV)");
+    assert!(preport.spec_rounds > 0);
+}
