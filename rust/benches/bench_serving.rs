@@ -18,7 +18,11 @@
 //!    vs the target-only baseline over identical traffic, with the B=1
 //!    speedup gated against the `spec_decode_speedup` entries of
 //!    `BENCH_TRAJECTORY.json` (floor 1.0: speculation must never decode
-//!    slower than the target alone).
+//!    slower than the target alone);
+//! 6. multi-turn chat — the same dialogs replayed as fresh full-history
+//!    prefills vs persistent-session delta prefills at `turns ∈ {2,4,8}`:
+//!    prefilled tokens, the savings ratio, and the restore/eviction
+//!    counters, recorded as JSON notes.
 //!
 //! Writes `bench_results/bench_serving.json` (decode tokens/s in the
 //! `throughput` fields) so future PRs have a perf trajectory.
@@ -600,6 +604,83 @@ fn main() {
             bench.note("spec decode speedup B=1", speedup);
             spec_trajectory_gate(&mut bench, speedup);
         }
+    }
+
+    // ---- multi-turn chat: fresh prefill vs session kv reuse ---------------
+    // The session subsystem's reason to exist, measured: the same four
+    // dialogs (64 prompt tokens, 32 generated) replayed two ways. The
+    // fresh leg re-sends the whole accumulated history to `generate` every
+    // turn, so prefill work grows quadratically with turn count; the
+    // session leg sends only each turn's delta against the resident KV
+    // cache, so prefill work stays linear. Greedy decode makes both legs
+    // token-identical — the only difference is the prefill bill.
+    println!("\n-- multi-turn chat: fresh prefill vs session kv reuse (4 dialogs, 64+32 tok) --");
+    for turns in [2usize, 4, 8] {
+        let mut prefill_by_leg = [0usize; 2];
+        for (leg, (tag, reuse)) in [("fresh", false), ("session", true)].into_iter().enumerate() {
+            let mut r = w16.clone();
+            r.max_batch = 4;
+            r.max_wait_ms = 0;
+            let coord = ServingStack::build(&ck, &[], &r).unwrap().coordinator();
+            let mut handles = Vec::new();
+            for c in 0..4usize {
+                let prompt = windows[c][..64].to_vec();
+                if reuse {
+                    let client = coord.session_client().unwrap();
+                    handles.push(std::thread::spawn(move || {
+                        let id = format!("dialog-{c}");
+                        client.open(&id).unwrap();
+                        for t in 0..turns {
+                            let delta = prompt[t * 64 / turns..(t + 1) * 64 / turns].to_vec();
+                            let quota = (t + 1) * 32 / turns - t * 32 / turns;
+                            client.turn(&id, delta, quota).unwrap();
+                        }
+                    }));
+                } else {
+                    let client = coord.gen_client().unwrap();
+                    handles.push(std::thread::spawn(move || {
+                        let mut hist: Vec<u16> = Vec::new();
+                        for t in 0..turns {
+                            hist.extend_from_slice(&prompt[t * 64 / turns..(t + 1) * 64 / turns]);
+                            let quota = (t + 1) * 32 / turns - t * 32 / turns;
+                            let g = client.generate(hist.clone(), quota).unwrap();
+                            hist.extend_from_slice(&g.tokens);
+                        }
+                    }));
+                }
+            }
+            let report = coord.run().unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            prefill_by_leg[leg] = report.prefill_tokens;
+            println!(
+                "   turns={turns} {tag:>7}: prefilled {:>6} tok, decode {:>6.0} tok/s, \
+                 restores {}, evicted {}",
+                report.prefill_tokens,
+                report.decode_tok_s(),
+                report.session_restores,
+                report.sessions_evicted
+            );
+            bench.note(
+                format!("chat turns={turns} {tag} prefill tokens"),
+                report.prefill_tokens as f64,
+            );
+            if reuse {
+                bench.note(
+                    format!("chat turns={turns} session restores"),
+                    report.session_restores as f64,
+                );
+                bench.note(
+                    format!("chat turns={turns} sessions evicted"),
+                    report.sessions_evicted as f64,
+                );
+            }
+        }
+        let [fresh, session] = prefill_by_leg;
+        let savings = 1.0 - session as f64 / fresh.max(1) as f64;
+        println!("   turns={turns}: delta prefill saves {:.0}% of prefilled tokens", savings * 100.0);
+        bench.note(format!("chat turns={turns} prefill savings"), savings);
     }
 
     let out = Path::new("bench_results/bench_serving.json");

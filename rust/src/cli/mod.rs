@@ -63,6 +63,19 @@ commands:
                verifies them in one batched pass — output is exactly
                target-only greedy decode, only faster (--no-speculate
                strips a recipe-pinned draft);
+               sampling knobs: --temperature T draws from
+               softmax(logits/T) instead of greedy argmax (0 = greedy,
+               the default, bit-for-bit), shaped by --top-k K and
+               --top-p P, seeded by --seed S — draws hash the seed plus
+               the token prefix, so outputs are reproducible and
+               batch-composition-invariant;
+               multi-turn sessions: --turns N splits each generation
+               into an N-turn chat over a persistent session whose KV
+               cache survives between turns (turn N+1 prefills only the
+               token delta; output is bit-identical to the one-shot),
+               --max-sessions N caps resident idle session caches (LRU
+               eviction; an evicted session's next turn transparently
+               re-prefills from its committed history);
                robustness knobs: --queue-depth N bounds admission (full
                queue sheds with a typed Overloaded), --deadline-ms MS
                puts a per-request deadline on every submission (0 = none),

@@ -38,8 +38,11 @@ use std::time::{Duration, Instant};
 
 /// How long a blocking pull may park before re-checking the shutdown
 /// flag ([`next_batch_watching`]) — the upper bound on how stale a drain
-/// signal can go unnoticed while the loop is idle.
-const SHUTDOWN_POLL: Duration = Duration::from_millis(5);
+/// signal can go unnoticed while the loop is idle. Public (it used to be
+/// a buried 5 ms magic number) so callers can reason about worst-case
+/// wake latency; urgent work skips the slice entirely via
+/// [`next_batch_watching_urgent`].
+pub const POLL_SLICE: Duration = Duration::from_millis(5);
 
 /// Batching policy parameters.
 #[derive(Debug, Clone, Copy)]
@@ -89,7 +92,7 @@ pub enum Wakeup<T> {
 }
 
 /// [`next_batch`] that also watches a shutdown flag: waits in
-/// [`SHUTDOWN_POLL`]-sized slices so a drain signal raised while the
+/// [`POLL_SLICE`]-sized slices so a drain signal raised while the
 /// loop is parked idle is observed within one slice instead of whenever
 /// the next request happens to arrive. The shutdown check happens
 /// *before* consuming a request, so a [`Wakeup::Shutdown`] return
@@ -99,25 +102,49 @@ pub fn next_batch_watching<T>(
     policy: BatchPolicy,
     stop: &AtomicBool,
 ) -> Wakeup<T> {
+    next_batch_watching_urgent(rx, policy, stop, |_| false)
+}
+
+/// [`next_batch_watching`] with an urgency predicate: an item for which
+/// `urgent` returns true flushes the batch immediately instead of
+/// sleeping out the rest of the company window (or a full poll slice)
+/// with latency-bound work pending. The serving loop marks streaming
+/// session turns and session control ops urgent — a chat client waiting
+/// for its first token should never pay `max_wait` for batch company.
+pub fn next_batch_watching_urgent<T>(
+    rx: &Receiver<T>,
+    policy: BatchPolicy,
+    stop: &AtomicBool,
+    urgent: impl Fn(&T) -> bool,
+) -> Wakeup<T> {
     let first = loop {
         if stop.load(Ordering::SeqCst) {
             return Wakeup::Shutdown;
         }
-        match rx.recv_timeout(SHUTDOWN_POLL) {
+        match rx.recv_timeout(POLL_SLICE) {
             Ok(item) => break item,
             Err(RecvTimeoutError::Timeout) => continue,
             Err(RecvTimeoutError::Disconnected) => return Wakeup::Closed,
         }
     };
     let mut batch = vec![first];
+    if urgent(&batch[0]) {
+        return Wakeup::Batch(batch);
+    }
     let deadline = Instant::now() + policy.max_wait;
     while batch.len() < policy.max_batch && !stop.load(Ordering::SeqCst) {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
-        match rx.recv_timeout((deadline - now).min(SHUTDOWN_POLL)) {
-            Ok(item) => batch.push(item),
+        match rx.recv_timeout((deadline - now).min(POLL_SLICE)) {
+            Ok(item) => {
+                let hot = urgent(&item);
+                batch.push(item);
+                if hot {
+                    break; // tokens pending: wake the loop now
+                }
+            }
             Err(RecvTimeoutError::Timeout) => continue, // re-check stop/deadline
             Err(RecvTimeoutError::Disconnected) => break,
         }
@@ -277,6 +304,47 @@ mod tests {
         assert_eq!(next_batch_watching(&rx, policy, &stop), Wakeup::<u32>::Shutdown);
         assert!(t0.elapsed() < Duration::from_secs(5), "woke via the flag, not a hang");
         h.join().unwrap();
+        drop(tx);
+    }
+
+    #[test]
+    fn urgent_head_skips_the_company_wait() {
+        use std::sync::atomic::AtomicBool;
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = channel();
+        tx.send(99).unwrap();
+        // a wait window far longer than the test budget: only the urgency
+        // predicate can return this fast
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(30) };
+        let t0 = Instant::now();
+        let got = next_batch_watching_urgent(&rx, policy, &stop, |&v| v >= 50);
+        assert_eq!(got, Wakeup::Batch(vec![99]));
+        assert!(t0.elapsed() < Duration::from_secs(1), "urgent head returned immediately");
+        drop(tx);
+    }
+
+    #[test]
+    fn urgent_joiner_flushes_a_forming_batch_early() {
+        use std::sync::atomic::AtomicBool;
+        let stop = AtomicBool::new(false);
+        let (tx, rx) = channel();
+        tx.send(1).unwrap(); // ordinary head: starts the company wait
+        let sender = tx.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            sender.send(2).unwrap(); // ordinary company
+            sender.send(77).unwrap(); // urgent: must flush the batch
+        });
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(30) };
+        let t0 = Instant::now();
+        let got = next_batch_watching_urgent(&rx, policy, &stop, |&v| v >= 50);
+        h.join().unwrap();
+        assert_eq!(got, Wakeup::Batch(vec![1, 2, 77]));
+        assert!(t0.elapsed() < Duration::from_secs(5), "urgent joiner ended the wait");
+        // the never-urgent delegate preserves the old deadline behavior
+        tx.send(3).unwrap();
+        let quick = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        assert_eq!(next_batch_watching(&rx, quick, &stop), Wakeup::Batch(vec![3]));
         drop(tx);
     }
 

@@ -168,6 +168,17 @@ pub struct ServeReport {
     /// or a dry page pool at draft-cache creation). Their token streams
     /// are unchanged — speculation only ever changes the rate.
     pub spec_fallbacks: usize,
+    /// Sessions still open in the `SessionManager` when the run ended.
+    pub sessions_active: usize,
+    /// Idle session caches dropped by the LRU under capacity pressure
+    /// (the sessions stay open; their next turn re-prefills).
+    pub sessions_evicted: usize,
+    /// Turns that re-prefilled a whole session history because the
+    /// resident cache was gone (evicted, or quarantined by a fault).
+    pub session_restores: usize,
+    /// Tokens streamed to turn clients as per-step `TurnEvent::Token`
+    /// items (before each turn's final typed result).
+    pub streamed_tokens: usize,
 }
 
 impl ServeReport {
@@ -289,6 +300,19 @@ impl ServeReport {
                 },
             );
         }
+        if self.sessions_active > 0
+            || self.sessions_evicted > 0
+            || self.session_restores > 0
+            || self.streamed_tokens > 0
+        {
+            println!(
+                "sessions: {} active | evicted {} restored {} | streamed {} tok",
+                self.sessions_active,
+                self.sessions_evicted,
+                self.session_restores,
+                self.streamed_tokens,
+            );
+        }
         if self.degraded() > 0 || self.drained {
             println!(
                 "robustness: shed {} | expired {} at admission + {} mid-flight | \
@@ -372,6 +396,28 @@ mod tests {
         assert_eq!(report.degraded(), 15);
         report.print(); // robustness line must not panic
         assert_eq!(ServeReport::default().degraded(), 0);
+    }
+
+    #[test]
+    fn session_counters_print_and_are_not_degradation() {
+        // Session telemetry (active/evicted/restored/streamed) is reuse
+        // accounting, not failed responses: degraded() must ignore it,
+        // and both the populated and the empty report must print — the
+        // empty-report regression contract of the PR 3 LatencyStats fix
+        // extended to the new counters.
+        let report = ServeReport {
+            sessions_active: 3,
+            sessions_evicted: 2,
+            session_restores: 2,
+            streamed_tokens: 40,
+            ..Default::default()
+        };
+        assert_eq!(report.degraded(), 0);
+        report.print(); // sessions line must not panic
+        let empty = ServeReport::default();
+        assert_eq!(empty.sessions_active, 0);
+        assert_eq!(empty.streamed_tokens, 0);
+        empty.print(); // no sessions line, no panic
     }
 
     #[test]

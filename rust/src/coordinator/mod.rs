@@ -86,6 +86,8 @@
 pub mod batcher;
 pub mod fault;
 pub mod metrics;
+pub mod sampling;
+pub mod session;
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -96,9 +98,14 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-pub use batcher::{next_batch, next_batch_watching, try_fill, BatchPolicy, Fill, Wakeup};
+pub use batcher::{
+    next_batch, next_batch_watching, next_batch_watching_urgent, try_fill, BatchPolicy, Fill,
+    Wakeup, POLL_SLICE,
+};
 pub use fault::{FaultInjector, FaultPayload, FaultPlan, FaultSite, FaultSpec};
 pub use metrics::{LatencyStats, RateStats, ServeReport};
+pub use sampling::{extend_hash, sample_token, seed_hash, SamplingConfig};
+pub use session::{SessionManager, TurnCheckout, DEFAULT_MAX_SESSIONS};
 
 use crate::cli::Args;
 use crate::data::{Corpus, CorpusKind};
@@ -149,6 +156,13 @@ pub enum ServeError {
     /// The coordinator is draining (or already gone) — the request was
     /// not executed.
     ShuttingDown,
+    /// No session with this id is open.
+    SessionNotFound(String),
+    /// The session already has a turn in flight (one turn per session),
+    /// or a control op (close/fork/revert) raced an in-flight turn.
+    SessionBusy(String),
+    /// `open` (or a fork destination) collided with an existing session.
+    DuplicateSession(String),
 }
 
 impl fmt::Display for ServeError {
@@ -161,6 +175,11 @@ impl fmt::Display for ServeError {
             }
             ServeError::Faulted(msg) => write!(f, "request faulted: {msg}"),
             ServeError::ShuttingDown => write!(f, "coordinator shutting down"),
+            ServeError::SessionNotFound(id) => write!(f, "session not found: {id}"),
+            ServeError::SessionBusy(id) => {
+                write!(f, "session busy: {id} already has a turn in flight")
+            }
+            ServeError::DuplicateSession(id) => write!(f, "session already exists: {id}"),
         }
     }
 }
@@ -205,13 +224,80 @@ struct GenRequest {
     max_new: usize,
     submitted: Instant,
     deadline: Option<Instant>,
-    respond: SyncSender<ServeResult<Generated>>,
+    respond: GenRespond,
+}
+
+/// One streamed item of a session turn: every decoded token as it lands,
+/// then exactly one final typed result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TurnEvent {
+    /// One freshly decoded token (sent per decode step, before `Done`).
+    Token(u16),
+    /// The turn's single terminal result — same contract as a one-shot
+    /// generate: exactly one `Done` per turn, whatever faults strike.
+    Done(ServeResult<Generated>),
+}
+
+/// The response side of a streamed turn: `Token`s as they decode, then
+/// one `Done`. The channel is sized `max_new + 1`, so the loop's sends
+/// never block on a slow stream consumer.
+pub type TurnTicket = Receiver<TurnEvent>;
+
+/// Where a generation's results go: the classic oneshot, or a session
+/// turn's token stream. Keeping both behind one responder lets the
+/// continuous-batching loop treat turns as ordinary generations
+/// everywhere except the commit/stream points.
+enum GenRespond {
+    Oneshot(SyncSender<ServeResult<Generated>>),
+    Stream(SyncSender<TurnEvent>),
+}
+
+impl GenRespond {
+    /// Stream one decoded token (no-op for oneshot responders). True when
+    /// the event was actually delivered to a listening client.
+    fn stream_token(&self, tok: u16) -> bool {
+        match self {
+            GenRespond::Oneshot(_) => false,
+            GenRespond::Stream(tx) => tx.send(TurnEvent::Token(tok)).is_ok(),
+        }
+    }
+}
+
+/// One session turn: decode `max_new` tokens after the session's
+/// committed history extended by `delta`.
+struct TurnRequest {
+    session: String,
+    delta: Vec<u16>,
+    max_new: usize,
+    submitted: Instant,
+    deadline: Option<Instant>,
+    respond: SyncSender<TurnEvent>,
+}
+
+/// Session control verbs (admission-phase ops — they never decode).
+enum SessionOp {
+    Open,
+    Close,
+    Fork { dst: String },
+    Revert { to_len: usize },
+    Tokens,
+}
+
+/// One session control request; answers with the session's committed
+/// tokens where that is meaningful (revert/tokens), empty otherwise.
+struct SessionCtl {
+    id: String,
+    op: SessionOp,
+    submitted: Instant,
+    respond: SyncSender<ServeResult<Vec<u16>>>,
 }
 
 /// Everything a client can ask of the coordinator.
 enum Work {
     Score(ScoreRequest),
     Generate(GenRequest),
+    Turn(TurnRequest),
+    Session(SessionCtl),
 }
 
 /// A finished generation.
@@ -343,6 +429,138 @@ impl GenClient {
                 max_new,
                 submitted: Instant::now(),
                 deadline,
+                respond: GenRespond::Oneshot(rtx),
+            }),
+        )?;
+        Ok(rrx)
+    }
+}
+
+/// Handle client threads use to drive persistent sessions: open/close,
+/// fork, revert, and token-streaming turns. Same lifetime rules as
+/// [`ScoreClient`] — create handles before [`Coordinator::run`].
+#[derive(Clone)]
+pub struct SessionClient {
+    tx: SyncSender<Work>,
+    max_seq: usize,
+    vocab: usize,
+    deadline: Option<Duration>,
+    shed: Arc<AtomicUsize>,
+}
+
+impl SessionClient {
+    fn ctl(&self, id: &str, op: SessionOp) -> ServeResult<Vec<u16>> {
+        let (rtx, rrx) = sync_channel(1);
+        submit_work(
+            &self.tx,
+            &self.shed,
+            Work::Session(SessionCtl {
+                id: id.to_string(),
+                op,
+                submitted: Instant::now(),
+                respond: rtx,
+            }),
+        )?;
+        rrx.recv().map_err(|_| ServeError::ShuttingDown)?
+    }
+
+    /// Create an empty session ([`ServeError::DuplicateSession`] if taken).
+    pub fn open(&self, id: &str) -> ServeResult<()> {
+        self.ctl(id, SessionOp::Open).map(|_| ())
+    }
+
+    /// Close an idle session, freeing its KV state.
+    pub fn close(&self, id: &str) -> ServeResult<()> {
+        self.ctl(id, SessionOp::Close).map(|_| ())
+    }
+
+    /// Duplicate `src`'s dialog position as a new session `dst` (paged
+    /// caches copy page-by-page; rings deep-copy).
+    pub fn fork(&self, src: &str, dst: &str) -> ServeResult<()> {
+        self.ctl(src, SessionOp::Fork { dst: dst.to_string() }).map(|_| ())
+    }
+
+    /// Truncate a session to its first `to_len` committed tokens; returns
+    /// the surviving history.
+    pub fn revert(&self, id: &str, to_len: usize) -> ServeResult<Vec<u16>> {
+        self.ctl(id, SessionOp::Revert { to_len })
+    }
+
+    /// The session's committed token history.
+    pub fn tokens(&self, id: &str) -> ServeResult<Vec<u16>> {
+        self.ctl(id, SessionOp::Tokens)
+    }
+
+    /// Run one turn to completion (blocking), discarding the intermediate
+    /// stream: append `delta` to the session's history, decode `max_new`
+    /// tokens, commit. The returned [`Generated::prompt_len`] covers the
+    /// full conversation (history + delta), even though only the delta
+    /// was prefilled.
+    pub fn turn(&self, id: &str, delta: Vec<u16>, max_new: usize) -> ServeResult<Generated> {
+        let ticket = self.turn_stream(id, delta, max_new)?;
+        loop {
+            match ticket.recv() {
+                Ok(TurnEvent::Token(_)) => continue,
+                Ok(TurnEvent::Done(result)) => return result,
+                Err(_) => return Err(ServeError::ShuttingDown),
+            }
+        }
+    }
+
+    /// Submit one turn and stream it: the [`TurnTicket`] yields a
+    /// [`TurnEvent::Token`] per decode step, then exactly one
+    /// [`TurnEvent::Done`]. Carries the coordinator's default deadline.
+    pub fn turn_stream(
+        &self,
+        id: &str,
+        delta: Vec<u16>,
+        max_new: usize,
+    ) -> ServeResult<TurnTicket> {
+        let deadline = self.deadline.map(|d| Instant::now() + d);
+        self.turn_stream_by(id, delta, max_new, deadline)
+    }
+
+    /// [`turn_stream`](Self::turn_stream) with an explicit deadline.
+    /// Client-side validation covers what is knowable without the session
+    /// history (the full-length check happens loop-side at checkout).
+    pub fn turn_stream_by(
+        &self,
+        id: &str,
+        delta: Vec<u16>,
+        max_new: usize,
+        deadline: Option<Instant>,
+    ) -> ServeResult<TurnTicket> {
+        if delta.is_empty() {
+            return Err(ServeError::Invalid("turn delta must be non-empty".into()));
+        }
+        if max_new < 1 {
+            return Err(ServeError::Invalid("max_new must be at least 1".into()));
+        }
+        if delta.len() >= self.max_seq {
+            return Err(ServeError::Invalid(format!(
+                "turn delta ({}) leaves no room in max_seq {}",
+                delta.len(),
+                self.max_seq
+            )));
+        }
+        if let Some(&bad) = delta.iter().find(|&&t| t as usize >= self.vocab) {
+            return Err(ServeError::Invalid(format!(
+                "token id {bad} out of range (vocab size {})",
+                self.vocab
+            )));
+        }
+        // max_new tokens + the final Done always fit: the loop never
+        // blocks streaming into this ticket
+        let (rtx, rrx) = sync_channel(max_new + 1);
+        submit_work(
+            &self.tx,
+            &self.shed,
+            Work::Turn(TurnRequest {
+                session: id.to_string(),
+                delta,
+                max_new,
+                submitted: Instant::now(),
+                deadline,
                 respond: rtx,
             }),
         )?;
@@ -426,6 +644,32 @@ fn deliver<T>(
     let _ = respond.send(result); // a dropped client is not an error
 }
 
+/// [`deliver`] for generation responders: the same respond-site fault
+/// arming and `faulted` accounting, routed to the oneshot channel or
+/// wrapped as a stream's final [`TurnEvent::Done`] — either way the
+/// client gets exactly one terminal result.
+fn deliver_gen(
+    fi: &mut Option<FaultInjector>,
+    faulted: &mut usize,
+    respond: &GenRespond,
+    mut result: ServeResult<Generated>,
+) {
+    if let Err(msg) = fire(fi, FaultSite::Respond) {
+        result = Err(ServeError::Faulted(msg));
+    }
+    if matches!(&result, Err(ServeError::Faulted(_))) {
+        *faulted += 1;
+    }
+    match respond {
+        GenRespond::Oneshot(tx) => {
+            let _ = tx.send(result);
+        }
+        GenRespond::Stream(tx) => {
+            let _ = tx.send(TurnEvent::Done(result));
+        }
+    }
+}
+
 /// Everything the serving loop needs.
 pub struct CoordinatorConfig {
     pub backend: ScoreBackend,
@@ -468,6 +712,16 @@ pub struct CoordinatorConfig {
     /// greedy parity, see [`crate::plan::speculate`]. Every in-flight
     /// sequence then carries a draft KV cache next to its target cache.
     pub speculate: Option<SpeculateConfig>,
+    /// How decode steps pick the next token: greedy argmax at
+    /// `temperature == 0` (bit-identical to the historical path), else
+    /// temperature/top-k/top-p sampling seeded per position from a prefix
+    /// hash — reproducible across runs, batch compositions, preemption
+    /// replays and session restores (see [`sampling`]).
+    pub sampling: SamplingConfig,
+    /// LRU capacity on resident idle session caches (sessions beyond it
+    /// stay open; their caches re-prefill on the next turn). Clamped to
+    /// at least 1.
+    pub max_sessions: usize,
 }
 
 /// The checkpoint→sidecar→[`CompiledModel`]→[`Coordinator`] wiring that
@@ -660,12 +914,43 @@ struct ActiveGen {
     /// Monotonic admission number: preemption evicts the *youngest*
     /// in-flight sequence (largest `seq_no`) — it loses the least work.
     seq_no: u64,
-    respond: SyncSender<ServeResult<Generated>>,
+    respond: GenRespond,
     /// Speculative-decode state (`None` when the run does not speculate,
     /// or after a draft-site fault permanently downgraded this sequence
     /// to target-only decode — the degradation is invisible in the
     /// output, only in the rate).
     spec: Option<SpecState>,
+    /// Session-turn bookkeeping (`None` for one-shot generations).
+    /// Turn sequences never mint speculative state — their cache must end
+    /// the turn as a strict prefix of the committed history, which the
+    /// verify pass's bonus-token appends would violate.
+    turn: Option<TurnState>,
+    /// Positional sampling hash over `prompt ++ generated` (see
+    /// [`sampling::seed_hash`]); unused (and unmaintained) on the greedy
+    /// and speculative paths, which are argmax by construction.
+    hash: u64,
+}
+
+/// Session bookkeeping of one in-flight (or waiting) turn.
+struct TurnState {
+    id: String,
+    /// Committed history length at checkout; a deadline abort truncates
+    /// the cache back to (at most) this prefix.
+    committed: usize,
+    /// Tokens of this turn already streamed — preserved across preemption
+    /// replays so a re-decoded token is never re-sent.
+    streamed: usize,
+}
+
+/// One admitted generation waiting for an in-flight slot.
+struct PendingGen {
+    g: GenRequest,
+    /// A preemption requeue (counted as `kv_requeues` when it restarts,
+    /// not as a new request).
+    requeued: bool,
+    /// Present for session turns: the checked-out cache rides to the
+    /// start phase (`None` = restore or preemption — full re-prefill).
+    turn: Option<(TurnState, Option<KvCache>)>,
 }
 
 /// The draft half of one speculating sequence: its own KV cache on the
@@ -715,6 +1000,20 @@ impl Coordinator {
         })
     }
 
+    /// A session client handle: persistent multi-turn conversations with
+    /// delta prefill, fork/revert, and streamed turns (same lifetime
+    /// rules as [`client`](Self::client); compiled backend only).
+    pub fn session_client(&self) -> std::result::Result<SessionClient, CoordinatorError> {
+        let tx = self.tx.as_ref().ok_or(CoordinatorError::NotAcceptingClients)?.clone();
+        Ok(SessionClient {
+            tx,
+            max_seq: self.cfg.ck.config.max_seq,
+            vocab: self.cfg.ck.config.vocab_size,
+            deadline: self.cfg.deadline,
+            shed: self.shed.clone(),
+        })
+    }
+
     /// A handle that triggers graceful drain from any thread.
     pub fn shutdown_handle(&self) -> ShutdownHandle {
         ShutdownHandle { stop: self.stop.clone() }
@@ -754,7 +1053,8 @@ impl Coordinator {
         let mut drained = false;
         let t0 = Instant::now();
         loop {
-            let work = match next_batch_watching(&self.rx, policy, &self.stop) {
+            let urgent = |w: &Work| matches!(w, Work::Turn(_) | Work::Session(_));
+            let work = match next_batch_watching_urgent(&self.rx, policy, &self.stop, urgent) {
                 Wakeup::Batch(work) => work,
                 Wakeup::Shutdown => {
                     // graceful drain: nothing is ever in flight between
@@ -775,10 +1075,28 @@ impl Coordinator {
                             }
                             Work::Generate(g) => {
                                 latency.record(Instant::now() - g.submitted);
-                                deliver(
+                                deliver_gen(
                                     &mut fi,
                                     &mut faulted,
                                     &g.respond,
+                                    Err(ServeError::ShuttingDown),
+                                );
+                            }
+                            Work::Turn(t) => {
+                                latency.record(Instant::now() - t.submitted);
+                                deliver_gen(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &GenRespond::Stream(t.respond),
+                                    Err(ServeError::ShuttingDown),
+                                );
+                            }
+                            Work::Session(c) => {
+                                latency.record(Instant::now() - c.submitted);
+                                deliver(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &c.respond,
                                     Err(ServeError::ShuttingDown),
                                 );
                             }
@@ -823,12 +1141,38 @@ impl Coordinator {
                         // comparable for identical traffic.
                         requests += 1;
                         latency.record(Instant::now() - g.submitted);
-                        deliver(
+                        deliver_gen(
                             &mut fi,
                             &mut faulted,
                             &g.respond,
                             Err(ServeError::Invalid(
                                 "generation requires the compiled backend".into(),
+                            )),
+                        );
+                    }
+                    Work::Turn(t) => {
+                        // sessions decode incrementally — compiled backend
+                        // only, same rule as plain generation
+                        requests += 1;
+                        latency.record(Instant::now() - t.submitted);
+                        deliver_gen(
+                            &mut fi,
+                            &mut faulted,
+                            &GenRespond::Stream(t.respond),
+                            Err(ServeError::Invalid(
+                                "sessions require the compiled backend".into(),
+                            )),
+                        );
+                    }
+                    Work::Session(c) => {
+                        requests += 1;
+                        latency.record(Instant::now() - c.submitted);
+                        deliver(
+                            &mut fi,
+                            &mut faulted,
+                            &c.respond,
+                            Err(ServeError::Invalid(
+                                "sessions require the compiled backend".into(),
                             )),
                         );
                     }
@@ -945,6 +1289,7 @@ impl Coordinator {
         let vocab = self.cfg.ck.config.vocab_size;
         let max_seq = self.cfg.ck.config.max_seq;
         let kv_quant = self.cfg.kv_quant;
+        let sampling = self.cfg.sampling;
         // No lowered batch dimension to fill on this backend, and joins
         // happen between decode steps anyway — drain the queue eagerly
         // instead of holding the head request for company. In-flight
@@ -980,6 +1325,12 @@ impl Coordinator {
         } else {
             None
         };
+        // Sessions: resident caches survive between turns so the next
+        // turn prefills only its delta. Evicted sessions keep their
+        // transcript and re-prefill transparently on the next touch.
+        let mut mgr = SessionManager::new(self.cfg.max_sessions);
+        let mut streamed_tokens = 0usize;
+        let mut session_restores = 0usize;
 
         let mut latency = LatencyStats::default();
         let mut request_tok_s = RateStats::default();
@@ -1011,10 +1362,12 @@ impl Coordinator {
         // burst's worth of rings forever.
         let mut pool: Vec<KvCache> = Vec::new();
         // Admitted generation prompts awaiting an in-flight slot (and, in
-        // paged mode, enough free pages). The `bool` marks a preemption
-        // requeue (counted once when it re-enters flight).
-        let mut waiting: VecDeque<(GenRequest, bool)> = VecDeque::new();
+        // paged mode, enough free pages). `requeued` marks a preemption
+        // requeue (counted once when it re-enters flight); `turn` carries
+        // a checked-out session turn's state and cache alongside.
+        let mut waiting: VecDeque<PendingGen> = VecDeque::new();
         let mut step_tokens: Vec<u16> = Vec::with_capacity(max_active);
+        let mut step_hash: Vec<u64> = Vec::with_capacity(max_active);
         let mut step_out: Vec<u16> = Vec::with_capacity(max_active);
         let mut admit: Vec<Work> = Vec::with_capacity(max_active);
         // set once try_fill observes every sender gone: the queue can
@@ -1042,10 +1395,29 @@ impl Coordinator {
                         }
                         Work::Generate(g) => {
                             latency.record(Instant::now() - g.submitted);
-                            deliver(
+                            deliver_gen(
                                 &mut fi,
                                 &mut faulted,
                                 &g.respond,
+                                Err(ServeError::ShuttingDown),
+                            );
+                        }
+                        Work::Turn(t) => {
+                            // never checked out: the session stays idle
+                            latency.record(Instant::now() - t.submitted);
+                            deliver_gen(
+                                &mut fi,
+                                &mut faulted,
+                                &GenRespond::Stream(t.respond),
+                                Err(ServeError::ShuttingDown),
+                            );
+                        }
+                        Work::Session(c) => {
+                            latency.record(Instant::now() - c.submitted);
+                            deliver(
+                                &mut fi,
+                                &mut faulted,
+                                &c.respond,
                                 Err(ServeError::ShuttingDown),
                             );
                         }
@@ -1053,10 +1425,18 @@ impl Coordinator {
                 }
                 // admitted-but-not-started prompts are not in flight:
                 // answer them too (already counted in `requests`)
-                for (g, _) in waiting.drain(..) {
+                for p in waiting.drain(..) {
                     rejected_shutdown += 1;
-                    latency.record(Instant::now() - g.submitted);
-                    deliver(&mut fi, &mut faulted, &g.respond, Err(ServeError::ShuttingDown));
+                    latency.record(Instant::now() - p.g.submitted);
+                    if let Some((t, cache)) = p.turn {
+                        mgr.abort(&t.id, cache);
+                    }
+                    deliver_gen(
+                        &mut fi,
+                        &mut faulted,
+                        &p.g.respond,
+                        Err(ServeError::ShuttingDown),
+                    );
                 }
                 if active.is_empty() {
                     break;
@@ -1069,7 +1449,10 @@ impl Coordinator {
                     if queue_closed {
                         break;
                     }
-                    match next_batch_watching(&self.rx, policy, &self.stop) {
+                    // session traffic wakes the loop immediately: a turn's
+                    // first token should not wait out the batching window
+                    let urgent = |w: &Work| matches!(w, Work::Turn(_) | Work::Session(_));
+                    match next_batch_watching_urgent(&self.rx, policy, &self.stop, urgent) {
                         Wakeup::Batch(work) => {
                             batches += 1;
                             admit.extend(work);
@@ -1120,7 +1503,7 @@ impl Coordinator {
                             requests += 1;
                             if let Err(msg) = fire(&mut fi, FaultSite::Admission) {
                                 latency.record(Instant::now() - g.submitted);
-                                deliver(
+                                deliver_gen(
                                     &mut fi,
                                     &mut faulted,
                                     &g.respond,
@@ -1131,7 +1514,7 @@ impl Coordinator {
                             if expired(g.deadline) {
                                 expired_admission += 1;
                                 latency.record(Instant::now() - g.submitted);
-                                deliver(
+                                deliver_gen(
                                     &mut fi,
                                     &mut faulted,
                                     &g.respond,
@@ -1142,13 +1525,117 @@ impl Coordinator {
                             if let Err(e) = validate_gen(&g.prompt, g.max_new, max_seq, vocab)
                             {
                                 latency.record(Instant::now() - g.submitted);
-                                deliver(&mut fi, &mut faulted, &g.respond, Err(e));
+                                deliver_gen(&mut fi, &mut faulted, &g.respond, Err(e));
                                 continue;
                             }
                             // admission checks passed: queue for the start
                             // phase below (which additionally gates on free
                             // pool pages in paged mode)
-                            waiting.push_back((g, false));
+                            waiting.push_back(PendingGen { g, requeued: false, turn: None });
+                        }
+                        Work::Session(c) => {
+                            // control-plane ops run inline at admission:
+                            // they touch only the manager's books (and the
+                            // page pool for close/fork/revert), never the
+                            // model, so they cannot stall a decode step
+                            requests += 1;
+                            let result = if let Err(msg) = fire(&mut fi, FaultSite::Admission)
+                            {
+                                Err(ServeError::Faulted(msg))
+                            } else {
+                                match c.op {
+                                    SessionOp::Open => mgr.open(&c.id).map(|_| Vec::new()),
+                                    SessionOp::Close => {
+                                        mgr.close(&c.id, page_pool.as_mut()).map(|_| Vec::new())
+                                    }
+                                    SessionOp::Fork { dst } => mgr
+                                        .fork(&c.id, &dst, page_pool.as_mut())
+                                        .map(|_| Vec::new())
+                                        .inspect(|_| mgr.enforce_cap(page_pool.as_mut())),
+                                    SessionOp::Revert { to_len } => {
+                                        mgr.revert(&c.id, to_len, page_pool.as_mut())
+                                    }
+                                    SessionOp::Tokens => mgr.tokens(&c.id),
+                                }
+                            };
+                            latency.record(Instant::now() - c.submitted);
+                            deliver(&mut fi, &mut faulted, &c.respond, result);
+                        }
+                        Work::Turn(t) => {
+                            requests += 1;
+                            let respond = GenRespond::Stream(t.respond);
+                            if let Err(msg) = fire(&mut fi, FaultSite::Admission) {
+                                latency.record(Instant::now() - t.submitted);
+                                deliver_gen(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &respond,
+                                    Err(ServeError::Faulted(msg)),
+                                );
+                                continue;
+                            }
+                            if expired(t.deadline) {
+                                expired_admission += 1;
+                                latency.record(Instant::now() - t.submitted);
+                                deliver_gen(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &respond,
+                                    Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
+                                );
+                                continue;
+                            }
+                            // checkout marks the session busy (one turn in
+                            // flight per session) and hands us its resident
+                            // cache, if the LRU still holds one
+                            let co = match mgr.checkout(&t.session) {
+                                Ok(co) => co,
+                                Err(e) => {
+                                    latency.record(Instant::now() - t.submitted);
+                                    deliver_gen(&mut fi, &mut faulted, &respond, Err(e));
+                                    continue;
+                                }
+                            };
+                            if t.delta.is_empty() {
+                                mgr.abort(&t.session, co.cache);
+                                latency.record(Instant::now() - t.submitted);
+                                deliver_gen(
+                                    &mut fi,
+                                    &mut faulted,
+                                    &respond,
+                                    Err(ServeError::Invalid(
+                                        "turn delta needs at least 1 token".into(),
+                                    )),
+                                );
+                                continue;
+                            }
+                            let committed = co.tokens.len();
+                            let mut full = co.tokens;
+                            full.extend_from_slice(&t.delta);
+                            if let Err(e) = validate_gen(&full, t.max_new, max_seq, vocab) {
+                                mgr.abort(&t.session, co.cache);
+                                latency.record(Instant::now() - t.submitted);
+                                deliver_gen(&mut fi, &mut faulted, &respond, Err(e));
+                                continue;
+                            }
+                            waiting.push_back(PendingGen {
+                                g: GenRequest {
+                                    prompt: full,
+                                    max_new: t.max_new,
+                                    submitted: t.submitted,
+                                    deadline: t.deadline,
+                                    respond,
+                                },
+                                requeued: false,
+                                turn: Some((
+                                    TurnState {
+                                        id: t.session,
+                                        committed,
+                                        streamed: 0,
+                                    },
+                                    co.cache,
+                                )),
+                            });
                         }
                     }
                 }
@@ -1156,36 +1643,49 @@ impl Coordinator {
                 // ---- start phase: move waiting prompts into flight while
                 // slots and (paged) free pages allow ----------------------
                 while active.len() < max_active {
-                    let Some((front, _)) = waiting.front() else { break };
-                    if expired(front.deadline) {
-                        let (g, _) = waiting.pop_front().expect("front checked");
+                    let Some(front) = waiting.front() else { break };
+                    if expired(front.g.deadline) {
+                        let p = waiting.pop_front().expect("front checked");
                         expired_admission += 1;
-                        latency.record(Instant::now() - g.submitted);
-                        deliver(
+                        latency.record(Instant::now() - p.g.submitted);
+                        if let Some((t, cache)) = p.turn {
+                            mgr.abort(&t.id, cache);
+                        }
+                        deliver_gen(
                             &mut fi,
                             &mut faulted,
-                            &g.respond,
+                            &p.g.respond,
                             Err(ServeError::DeadlineExceeded { partial: Vec::new() }),
                         );
                         continue;
                     }
                     if let Some(pp) = page_pool.as_ref() {
-                        if !pp.can_reserve(front.prompt.len()) {
+                        // a turn with a resident cache only prefills its
+                        // delta — only the delta's positions need pages
+                        let held = front
+                            .turn
+                            .as_ref()
+                            .and_then(|(_, c)| c.as_ref())
+                            .map_or(0, KvCache::len);
+                        if !pp.can_reserve(front.g.prompt.len() - held) {
                             if active.is_empty() {
                                 // nothing in flight will ever release pages
                                 // (resident is 0, so free == total − leaked):
                                 // this prompt can *never* fit — answer it
                                 // rather than livelock
-                                let (g, _) = waiting.pop_front().expect("front checked");
-                                latency.record(Instant::now() - g.submitted);
-                                deliver(
+                                let p = waiting.pop_front().expect("front checked");
+                                latency.record(Instant::now() - p.g.submitted);
+                                if let Some((t, cache)) = p.turn {
+                                    mgr.abort(&t.id, cache);
+                                }
+                                deliver_gen(
                                     &mut fi,
                                     &mut faulted,
-                                    &g.respond,
+                                    &p.g.respond,
                                     Err(ServeError::Faulted(format!(
                                         "kv page pool cannot fit a {}-token prompt \
                                          ({} of {} pages leaked by quarantine)",
-                                        g.prompt.len(),
+                                        p.g.prompt.len(),
                                         pp.leaked_pages(),
                                         pp.total_pages()
                                     ))),
@@ -1197,69 +1697,90 @@ impl Coordinator {
                             break;
                         }
                     }
-                    let (g, requeued) = waiting.pop_front().expect("front checked");
+                    let PendingGen { g, requeued, mut turn } = waiting.pop_front().expect("front checked");
                     if requeued {
                         kv_requeues += 1;
                     } else {
                         gen_requests += 1;
                     }
-                    let mut cache = match pool.pop() {
+                    // A fresh (never-requeued) turn on a session with
+                    // committed history but no resident cache means the LRU
+                    // evicted it: this prefill transparently restores it.
+                    if let Some((t, cache)) = turn.as_ref() {
+                        if !requeued && t.committed > 0 && cache.is_none() {
+                            session_restores += 1;
+                        }
+                    }
+                    let mut cache = match turn.as_mut().and_then(|(_, c)| c.take()) {
+                        // a session's resident cache arrives mid-sequence:
+                        // keep its committed positions, prefill the delta
                         Some(c) => c,
-                        None => match page_pool.as_ref() {
-                            Some(pp) => pp.new_cache(),
-                            None => match kv_quant {
-                                Some(fmt) => model.kv_cache_quantized(fmt),
-                                None => model.kv_cache(),
-                            },
-                        },
+                        None => {
+                            let mut c = match pool.pop() {
+                                Some(c) => c,
+                                None => match page_pool.as_ref() {
+                                    Some(pp) => pp.new_cache(),
+                                    None => match kv_quant {
+                                        Some(fmt) => model.kv_cache_quantized(fmt),
+                                        None => model.kv_cache(),
+                                    },
+                                },
+                            };
+                            c.reset();
+                            c
+                        }
                     };
-                    cache.reset();
                     if let Some(pp) = page_pool.as_mut() {
-                        let reserved = pp.reserve(&mut cache, g.prompt.len());
+                        let reserved = pp.reserve(&mut cache, g.prompt.len() - cache.len());
                         debug_assert!(reserved, "start phase verified page availability");
                         let _ = reserved;
                     }
-                    // Guarded prefill: the fault site fires inside the
-                    // guard, and a deadline adds probe points between
-                    // chunks so an expiring prompt aborts without burning
+                    // Guarded delta prefill: the fault site fires inside
+                    // the guard, and the probe adds abort points between
+                    // chunks so an expiring prompt stops without burning
                     // the rest of its prefill. `Ok(None)` = deadline
-                    // expired mid-prefill.
+                    // expired mid-prefill. Chunked prefill is
+                    // split-invariant, so prefilling only the suffix past
+                    // `cache.len()` is bit-identical to a fresh prefill of
+                    // the whole prompt.
                     let dl = g.deadline;
+                    let start_len = cache.len();
+                    let h0 = seed_hash(sampling.seed, &g.prompt);
                     let outcome = guard(|| {
                         if let Some(f) = fi.as_mut() {
                             f.fire(FaultSite::Prefill);
                         }
-                        let logits = match dl {
-                            Some(d) => {
-                                let mut probe = |_done: usize| Instant::now() < d;
-                                match model.prefill_with_probe(
-                                    &g.prompt,
-                                    &mut cache,
-                                    &mut scratch,
-                                    PREFILL_CHUNK,
-                                    &mut probe,
-                                ) {
-                                    Some(m) => m,
-                                    None => return None,
-                                }
-                            }
-                            None => model.prefill(&g.prompt, &mut cache, &mut scratch),
+                        let mut probe = |_done: usize| dl.map_or(true, |d| Instant::now() < d);
+                        let logits = match model.prefill_delta(
+                            &g.prompt,
+                            &mut cache,
+                            &mut scratch,
+                            PREFILL_CHUNK,
+                            &mut probe,
+                        ) {
+                            Some(m) => m,
+                            None => return None,
                         };
-                        Some(argmax(logits.row(logits.rows - 1)) as u16)
+                        Some(sample_token(&sampling, logits.row(logits.rows - 1), h0))
                     });
                     match outcome {
                         Err(msg) => {
                             // the walk may have unwound mid-layer: poison
                             // the cache and drop it on the floor, never
                             // back into the pool — a paged cache leaks
-                            // exactly its own pages
+                            // exactly its own pages. A turn's session
+                            // survives with its transcript intact (the next
+                            // touch re-prefills from scratch).
                             cache.quarantine();
                             quarantined_caches += 1;
                             if let Some(pp) = page_pool.as_mut() {
                                 pp.release(&mut cache);
                             }
+                            if let Some((t, _)) = turn.take() {
+                                mgr.abort(&t.id, None);
+                            }
                             latency.record(Instant::now() - g.submitted);
-                            deliver(
+                            deliver_gen(
                                 &mut fi,
                                 &mut faulted,
                                 &g.respond,
@@ -1268,15 +1789,30 @@ impl Coordinator {
                         }
                         Ok(None) => {
                             expired_midflight += 1;
-                            // aborted cleanly: pages back, husk recyclable
-                            if let Some(pp) = page_pool.as_mut() {
-                                pp.release(&mut cache);
-                            }
-                            if pool.len() < max_active {
-                                pool.push(cache);
+                            match turn.take() {
+                                Some((t, _)) => {
+                                    // aborted cleanly mid-delta: rewind to
+                                    // the committed history and hand the
+                                    // cache back to the session
+                                    let keep = cache.len().min(t.committed);
+                                    match page_pool.as_mut() {
+                                        Some(pp) => pp.truncate(&mut cache, keep),
+                                        None => cache.truncate(keep),
+                                    }
+                                    mgr.abort(&t.id, Some(cache));
+                                }
+                                None => {
+                                    // pages back, husk recyclable
+                                    if let Some(pp) = page_pool.as_mut() {
+                                        pp.release(&mut cache);
+                                    }
+                                    if pool.len() < max_active {
+                                        pool.push(cache);
+                                    }
+                                }
                             }
                             latency.record(Instant::now() - g.submitted);
-                            deliver(
+                            deliver_gen(
                                 &mut fi,
                                 &mut faulted,
                                 &g.respond,
@@ -1284,12 +1820,40 @@ impl Coordinator {
                             );
                         }
                         Ok(Some(first)) => {
-                            prefill_tokens += g.prompt.len();
+                            prefill_tokens += g.prompt.len() - start_len;
                             let mut generated = Vec::with_capacity(g.max_new);
                             generated.push(first);
+                            if let Some((t, _)) = turn.as_mut() {
+                                if t.streamed == 0 {
+                                    if g.respond.stream_token(first) {
+                                        streamed_tokens += 1;
+                                    }
+                                    t.streamed = 1;
+                                }
+                            }
                             if g.max_new == 1 {
                                 latency.record(Instant::now() - g.submitted);
-                                deliver(
+                                match turn.take() {
+                                    Some((t, _)) => {
+                                        // commit: transcript grows by delta
+                                        // + generated; the cache (holding
+                                        // everything but the last sampled
+                                        // token) stays resident for the
+                                        // next turn's delta prefill
+                                        let mut hist = g.prompt.clone();
+                                        hist.extend_from_slice(&generated);
+                                        mgr.commit(&t.id, hist, cache, page_pool.as_mut());
+                                    }
+                                    None => {
+                                        if let Some(pp) = page_pool.as_mut() {
+                                            pp.release(&mut cache);
+                                        }
+                                        if pool.len() < max_active {
+                                            pool.push(cache);
+                                        }
+                                    }
+                                }
+                                deliver_gen(
                                     &mut fi,
                                     &mut faulted,
                                     &g.respond,
@@ -1299,12 +1863,6 @@ impl Coordinator {
                                         decode_tok_s: 0.0,
                                     }),
                                 );
-                                if let Some(pp) = page_pool.as_mut() {
-                                    pp.release(&mut cache);
-                                }
-                                if pool.len() < max_active {
-                                    pool.push(cache);
-                                }
                             } else {
                                 // Speculation: mint this sequence's draft
                                 // cache and prefill the prompt into it under
@@ -1312,8 +1870,13 @@ impl Coordinator {
                                 // fatal — the sequence just decodes
                                 // target-only (same tokens, no draft rate),
                                 // and a dry paged pool skips the draft cache
-                                // the same way.
-                                let spec = if let Some((dm, dk)) = draft.as_ref() {
+                                // the same way. Session turns never mint
+                                // spec state: a verify pass can overshoot by
+                                // the bonus token, which would break the
+                                // session cache's strict-prefix invariant.
+                                let spec = if turn.is_some() {
+                                    None
+                                } else if let Some((dm, dk)) = draft.as_ref() {
                                     let ds = draft_scratch
                                         .as_mut()
                                         .expect("draft scratch exists with the draft plan");
@@ -1375,6 +1938,8 @@ impl Coordinator {
                                     seq_no: next_seq_no,
                                     respond: g.respond,
                                     spec,
+                                    turn: turn.take().map(|(t, _)| t),
+                                    hash: extend_hash(h0, first),
                                 });
                                 next_seq_no += 1;
                                 caches.push(cache);
@@ -1389,9 +1954,11 @@ impl Coordinator {
             match page_pool.as_ref() {
                 Some(pp) => kv_peak_bytes = kv_peak_bytes.max(pp.resident_bytes()),
                 None => {
-                    // draft rings pin the same bytes as target rings
+                    // draft rings pin the same bytes as target rings, and
+                    // idle sessions' resident rings pin theirs too
                     let spec_rings = active.iter().filter(|a| a.spec.is_some()).count();
-                    kv_peak_bytes = kv_peak_bytes.max((caches.len() + spec_rings) * ring_bytes);
+                    kv_peak_bytes = kv_peak_bytes
+                        .max((caches.len() + spec_rings + mgr.resident_caches()) * ring_bytes);
                 }
             }
             if active.is_empty() {
@@ -1405,11 +1972,25 @@ impl Coordinator {
                 if expired(active[i].deadline) {
                     let mut done = active.swap_remove(i);
                     let mut cache = caches.swap_remove(i);
-                    if let Some(pp) = page_pool.as_mut() {
-                        pp.release(&mut cache);
-                    }
-                    if pool.len() < max_active {
-                        pool.push(cache);
+                    match done.turn.take() {
+                        Some(t) => {
+                            // rewind to the committed history so the session
+                            // cache stays a strict prefix of its transcript
+                            let keep = cache.len().min(t.committed);
+                            match page_pool.as_mut() {
+                                Some(pp) => pp.truncate(&mut cache, keep),
+                                None => cache.truncate(keep),
+                            }
+                            mgr.abort(&t.id, Some(cache));
+                        }
+                        None => {
+                            if let Some(pp) = page_pool.as_mut() {
+                                pp.release(&mut cache);
+                            }
+                            if pool.len() < max_active {
+                                pool.push(cache);
+                            }
+                        }
                     }
                     if let Some(mut sp) = done.spec.take() {
                         if let Some(pp) = page_pool.as_mut() {
@@ -1468,16 +2049,21 @@ impl Coordinator {
                             }
                         }
                         kv_preemptions += 1;
-                        waiting.push_front((
-                            GenRequest {
+                        // a preempted turn keeps its TurnState (streamed
+                        // count suppresses re-streaming after the
+                        // bit-identical replay) but restarts from an empty
+                        // cache; the session stays busy throughout
+                        waiting.push_front(PendingGen {
+                            g: GenRequest {
                                 prompt: done.prompt,
                                 max_new: done.max_new,
                                 submitted: done.submitted,
                                 deadline: done.deadline,
                                 respond: done.respond,
                             },
-                            true,
-                        ));
+                            requeued: true,
+                            turn: done.turn.take().map(|t| (t, None)),
+                        });
                         i = 0; // indices shifted; rescan from the top
                         continue;
                     }
@@ -1607,8 +2193,11 @@ impl Coordinator {
                                             pp.release(&mut sp.cache);
                                         }
                                     }
+                                    if let Some(t) = done.turn.take() {
+                                        mgr.abort(&t.id, None);
+                                    }
                                     latency.record(Instant::now() - done.submitted);
-                                    deliver(
+                                    deliver_gen(
                                         &mut fi,
                                         &mut faulted,
                                         &done.respond,
@@ -1663,8 +2252,11 @@ impl Coordinator {
                                             pool.push(sp.cache);
                                         }
                                     }
+                                    if let Some(t) = done.turn.take() {
+                                        mgr.abort(&t.id, None);
+                                    }
                                     latency.record(Instant::now() - done.submitted);
-                                    deliver(
+                                    deliver_gen(
                                         &mut fi,
                                         &mut faulted,
                                         &done.respond,
@@ -1678,8 +2270,10 @@ impl Coordinator {
             } else {
                 // ---- one interleaved decode step for every in-flight seq
                 step_tokens.clear();
+                step_hash.clear();
                 for a in &active {
                     step_tokens.push(*a.generated.last().expect("active seq has a token"));
+                    step_hash.push(a.hash);
                 }
                 // The whole batched step runs under the guard. A panic
                 // unwinds *before* any KV cursor commits (the layer walk
@@ -1694,10 +2288,12 @@ impl Coordinator {
                     let logits = model.decode_step_batch(&step_tokens, &mut caches, &mut scratch);
                     // sample by original row index — swap_remove in the
                     // completion sweep reorders `active`, the logits rows
-                    // do not move with it
+                    // do not move with it. Each row samples under its own
+                    // prefix hash, so the drawn token is independent of
+                    // the batch composition around it.
                     step_out.clear();
                     for row in 0..step_tokens.len() {
-                        step_out.push(argmax(logits.row(row)) as u16);
+                        step_out.push(sample_token(&sampling, logits.row(row), step_hash[row]));
                     }
                 });
                 decode_steps += 1;
@@ -1706,6 +2302,7 @@ impl Coordinator {
                         decode_tokens += active.len();
                         for (a, &tok) in active.iter_mut().zip(step_out.iter()) {
                             a.generated.push(tok);
+                            a.hash = extend_hash(a.hash, tok);
                         }
                     }
                     Err(_) => {
@@ -1716,21 +2313,23 @@ impl Coordinator {
                         while i < active.len() {
                             let tok =
                                 *active[i].generated.last().expect("active seq has a token");
+                            let h = active[i].hash;
                             let solo = guard(|| {
                                 if let Some(f) = fi.as_mut() {
                                     f.fire(FaultSite::Decode);
                                 }
                                 let row = model.decode_step(tok, &mut caches[i], &mut scratch);
-                                argmax(row.row(0)) as u16
+                                sample_token(&sampling, row.row(0), h)
                             });
                             match solo {
                                 Ok(next) => {
                                     decode_tokens += 1;
                                     active[i].generated.push(next);
+                                    active[i].hash = extend_hash(h, next);
                                     i += 1;
                                 }
                                 Err(msg) => {
-                                    let done = active.swap_remove(i);
+                                    let mut done = active.swap_remove(i);
                                     let mut cache = caches.swap_remove(i);
                                     cache.quarantine();
                                     quarantined_caches += 1;
@@ -1738,8 +2337,11 @@ impl Coordinator {
                                         pp.release(&mut cache); // leaks its pages
                                     }
                                     drop(cache); // poisoned: never recycled
+                                    if let Some(t) = done.turn.take() {
+                                        mgr.abort(&t.id, None);
+                                    }
                                     latency.record(Instant::now() - done.submitted);
-                                    deliver(
+                                    deliver_gen(
                                         &mut fi,
                                         &mut faulted,
                                         &done.respond,
@@ -1752,6 +2354,20 @@ impl Coordinator {
                 }
             }
             decode_wall += ts.elapsed();
+            // ---- stream sweep: every turn's unstreamed tokens go out the
+            // moment the step that produced them lands — the client sees
+            // token-by-token progress, not one burst at completion -------
+            for a in active.iter_mut() {
+                let ActiveGen { respond, generated, turn, .. } = a;
+                if let Some(t) = turn.as_mut() {
+                    while t.streamed < generated.len() {
+                        if respond.stream_token(generated[t.streamed]) {
+                            streamed_tokens += 1;
+                        }
+                        t.streamed += 1;
+                    }
+                }
+            }
             let mut i = 0;
             while i < active.len() {
                 if active[i].generated.len() >= active[i].max_new {
@@ -1771,7 +2387,26 @@ impl Coordinator {
                         steps as f64 / (now - done.decode_start).as_secs_f64().max(1e-9);
                     request_tok_s.record(rate);
                     latency.record(now - done.submitted);
-                    deliver(
+                    match done.turn.take() {
+                        Some(t) => {
+                            // commit: the cache holds prompt + generated
+                            // minus the final sampled token — a strict
+                            // prefix of the new transcript, so the next
+                            // turn's delta prefill is never empty
+                            let mut hist = done.prompt.clone();
+                            hist.extend_from_slice(&done.generated);
+                            mgr.commit(&t.id, hist, cache, page_pool.as_mut());
+                        }
+                        None => {
+                            if let Some(pp) = page_pool.as_mut() {
+                                pp.release(&mut cache); // pages back to the free list
+                            }
+                            if pool.len() < max_active {
+                                pool.push(cache); // recycle the husk for the next join
+                            }
+                        }
+                    }
+                    deliver_gen(
                         &mut fi,
                         &mut faulted,
                         &done.respond,
@@ -1781,12 +2416,6 @@ impl Coordinator {
                             decode_tok_s: rate,
                         }),
                     );
-                    if let Some(pp) = page_pool.as_mut() {
-                        pp.release(&mut cache); // pages back to the free list
-                    }
-                    if pool.len() < max_active {
-                        pool.push(cache); // recycle the husk for the next join
-                    }
                 } else {
                     i += 1;
                 }
@@ -1813,12 +2442,12 @@ impl Coordinator {
             drained,
             kv_resident_bytes: match page_pool.as_ref() {
                 Some(pp) => pp.resident_bytes(),
-                None => caches.len() * ring_bytes,
+                None => (caches.len() + mgr.resident_caches()) * ring_bytes,
             },
             kv_peak_bytes,
             kv_pool_bytes: match page_pool.as_ref() {
                 Some(pp) => pp.total_bytes(),
-                None => (pool.len() + caches.len()) * ring_bytes,
+                None => (pool.len() + caches.len() + mgr.resident_caches()) * ring_bytes,
             },
             spec_rounds: spec_stats.rounds,
             spec_drafted: spec_stats.drafted,
@@ -1832,6 +2461,10 @@ impl Coordinator {
             kv_pages_leaked: page_pool.as_ref().map_or(0, KvPagePool::leaked_pages),
             kv_preemptions,
             kv_requeues,
+            sessions_active: mgr.len(),
+            sessions_evicted: mgr.evicted(),
+            session_restores,
+            streamed_tokens,
         })
     }
 }
@@ -1865,6 +2498,10 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     let n_requests = args.get_usize("requests", 256)?;
     let n_clients = args.get_usize("clients", 4)?;
     let gen_new = args.get_usize("generate", 0)?;
+    // Multi-turn chat mode: each request becomes a session whose prompt
+    // arrives split across `--turns` turns; every turn after the first
+    // prefills only its delta against the session's resident KV cache.
+    let turns = args.get_usize("turns", 1)?;
     let alpha = args.get_f32("alpha", 1.0)?;
     // Deterministic fault schedule (chaos harness — a run-time knob, not
     // part of the serving recipe).
@@ -1891,6 +2528,21 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
 
     let ck = crate::cli::commands::load_ckpt_with_alpha(std::path::Path::new(&ckpt), alpha)?;
     let seq = ck.config.max_seq;
+    if turns == 0 {
+        return Err("--turns must be at least 1".into());
+    }
+    if turns > 1 {
+        if gen_new == 0 {
+            return Err("--turns requires --generate".into());
+        }
+        let prompt_len = seq.saturating_sub(gen_new);
+        if turns > prompt_len || turns > gen_new {
+            return Err(format!(
+                "--turns {turns} exceeds the per-session budget \
+                 ({prompt_len}-token prompts, {gen_new} new tokens)"
+            ));
+        }
+    }
     if gen_new > 0 {
         // same admission rule the serving loop enforces (validate_gen),
         // applied to the workload shape serve generates below: prompts of
@@ -1942,6 +2594,16 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
             if sc.draft.weights.is_dense() { "dense" } else { "packed" },
             sc.draft.kernel_tier.name(),
             sc.k,
+        );
+    }
+    if !recipe.sampling.is_greedy() {
+        println!(
+            "sampling: temperature {} top-k {} top-p {} seed {} \
+             (prefix-hash positional draws: reproducible and batch-invariant)",
+            recipe.sampling.temperature,
+            recipe.sampling.top_k,
+            recipe.sampling.top_p,
+            recipe.sampling.seed,
         );
     }
     println!(
@@ -2013,7 +2675,64 @@ pub fn serve_command(args: &Args) -> std::result::Result<(), String> {
     // means the workload itself is malformed.
     type Tally = std::result::Result<(f64, usize, usize), String>;
     let mut handles: Vec<std::thread::JoinHandle<Tally>> = Vec::new();
-    let report = if gen_new > 0 {
+    let report = if gen_new > 0 && turns > 1 {
+        let prompt_len = seq - gen_new;
+        println!(
+            "serving {n_windows} chat sessions ({prompt_len}-token prompts over \
+             {turns} turns, {gen_new} new tokens) from {n_clients} clients \
+             (max {max_batch} in flight) ..."
+        );
+        for c in 0..n_clients {
+            let client = coord.session_client().map_err(|e| e.to_string())?;
+            let my: Vec<(usize, Vec<u16>)> = windows
+                .iter()
+                .enumerate()
+                .skip(c)
+                .step_by(n_clients)
+                .map(|(i, w)| (i, w.clone()))
+                .collect();
+            handles.push(std::thread::spawn(move || -> Tally {
+                let (mut tokens, mut ok, mut degraded) = (0usize, 0usize, 0usize);
+                for (wi, w) in my {
+                    let id = format!("c{c}-w{wi}");
+                    if let Err(e) = client.open(&id) {
+                        match e {
+                            ServeError::Invalid(e) => return Err(e),
+                            _ => {
+                                degraded += 1;
+                                continue;
+                            }
+                        }
+                    }
+                    // split the prompt into `turns` deltas and the token
+                    // budget into per-turn quotas; remainders land on the
+                    // last turn so the totals match the one-shot workload
+                    let mut session_ok = true;
+                    for t in 0..turns {
+                        let d0 = t * prompt_len / turns;
+                        let d1 = (t + 1) * prompt_len / turns;
+                        let quota =
+                            (t + 1) * gen_new / turns - t * gen_new / turns;
+                        match client.turn(&id, w[d0..d1].to_vec(), quota) {
+                            Ok(g) => tokens += g.tokens.len(),
+                            Err(ServeError::Invalid(e)) => return Err(e),
+                            Err(_) => {
+                                degraded += 1;
+                                session_ok = false;
+                                break;
+                            }
+                        }
+                    }
+                    if session_ok {
+                        ok += 1;
+                    }
+                    let _ = client.close(&id);
+                }
+                Ok((tokens as f64, ok, degraded))
+            }));
+        }
+        coord.run().map_err(|e| e.to_string())?
+    } else if gen_new > 0 {
         let prompt_len = seq - gen_new;
         println!(
             "serving {n_windows} generation requests ({prompt_len}-token prompts, \
@@ -2153,6 +2872,8 @@ mod tests {
             speculate: None,
             kv_page_positions: 0,
             kv_budget_bytes: 0,
+            sampling: SamplingConfig::default(),
+            max_sessions: DEFAULT_MAX_SESSIONS,
         }
     }
 
@@ -2414,6 +3135,18 @@ mod tests {
         );
         assert_eq!(ServeError::Faulted("boom".into()).to_string(), "request faulted: boom");
         assert_eq!(ServeError::ShuttingDown.to_string(), "coordinator shutting down");
+        assert_eq!(
+            ServeError::SessionNotFound("chat".into()).to_string(),
+            "session not found: chat"
+        );
+        assert_eq!(
+            ServeError::SessionBusy("chat".into()).to_string(),
+            "session busy: chat already has a turn in flight"
+        );
+        assert_eq!(
+            ServeError::DuplicateSession("chat".into()).to_string(),
+            "session already exists: chat"
+        );
         assert!(CoordinatorError::NotAcceptingClients.to_string().contains("before run"));
         // ServeError threads through `?` in crate-Result functions
         let e: crate::error::Error = ServeError::Overloaded.into();

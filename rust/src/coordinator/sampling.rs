@@ -1,0 +1,371 @@
+//! Reproducible token sampling over decode logits.
+//!
+//! Temperature / top-k / top-p sampling driven by the in-crate
+//! deterministic [`crate::rng::Rng`] — no global RNG, no thread-local
+//! state. Determinism here is *positional*, not sequential: the draw for
+//! the token at position `p` of a sequence is seeded from a hash of the
+//! recipe seed and every token before `p` (see [`seed_hash`] /
+//! [`extend_hash`]). That gives three properties the serving stack
+//! depends on:
+//!
+//! * **Run reproducibility** — the same seed and the same prompt produce
+//!   the same continuation, across processes and platforms.
+//! * **Batch-composition invariance** — a sequence samples the same
+//!   tokens whether it decodes alone, in a batch of 8, or after being
+//!   preempted and replayed: nothing about *other* sequences enters the
+//!   hash, and replaying a prefix recomputes the identical hash chain.
+//! * **Session ≡ one-shot identity** — a multi-turn session that decodes
+//!   the conversation incrementally draws the exact bits a one-shot
+//!   generate over the concatenated history would, because both walk the
+//!   same token prefix.
+//!
+//! Temperature 0 bypasses sampling entirely and routes through the same
+//! [`crate::plan::argmax`] the greedy decode loop uses, so a
+//! `temperature = 0` recipe is bit-for-bit the historical greedy path.
+
+use crate::plan::argmax;
+use crate::rng::Rng;
+
+/// The sampling knobs of a recipe (`QuantRecipe::sampling`,
+/// `zqfp serve --temperature/--top-k/--top-p/--seed`).
+///
+/// The default is greedy: `temperature = 0` short-circuits to
+/// [`crate::plan::argmax`] and the other knobs are inert.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SamplingConfig {
+    /// Softmax temperature. `0` = greedy argmax (the knobs below are
+    /// ignored); `> 0` = sample from `softmax(logits / temperature)`.
+    pub temperature: f32,
+    /// Keep only the `top_k` highest-logit tokens before sampling
+    /// (`0` = no top-k cut).
+    pub top_k: usize,
+    /// Nucleus sampling: keep the smallest prefix of the
+    /// probability-sorted vocabulary whose mass reaches `top_p`, then
+    /// renormalize (`1.0` = no cut). Must be in `(0, 1]`.
+    pub top_p: f32,
+    /// Recipe-level seed every sequence's per-position draws derive from.
+    pub seed: u64,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        SamplingConfig { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 0 }
+    }
+}
+
+impl SamplingConfig {
+    /// True when this config is the greedy path (`temperature == 0`).
+    pub fn is_greedy(&self) -> bool {
+        self.temperature == 0.0
+    }
+}
+
+/// splitmix64-style finalizer — the avalanche stage only (the additive
+/// walk lives in the callers' token folds). `rng::splitmix64` is private
+/// to its module on purpose; this is an independent mix with the same
+/// pedigree, pinned here so sampling hashes never drift with rng
+/// internals.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Fold one more token into a position hash: the hash for position
+/// `p + 1` given the hash for position `p` and the token at `p`.
+#[inline]
+pub fn extend_hash(h: u64, tok: u16) -> u64 {
+    mix(h ^ (tok as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15))
+}
+
+/// The position hash after an entire token prefix: seed the chain from
+/// the recipe seed and fold every token in order. Incremental callers
+/// keep the running hash and call [`extend_hash`] per appended token —
+/// `seed_hash(s, &all)` ≡ folding `extend_hash` over the same tokens.
+pub fn seed_hash(seed: u64, tokens: &[u16]) -> u64 {
+    let mut h = mix(seed ^ 0x5EEDu64.wrapping_mul(0x9E3779B97F4A7C15));
+    for &t in tokens {
+        h = extend_hash(h, t);
+    }
+    h
+}
+
+/// Sample the next token from one logits row.
+///
+/// `hash` is the position hash of the prefix *before* this token
+/// ([`seed_hash`] / [`extend_hash`]); exactly one uniform draw is made
+/// from `Rng::seeded(hash)`. Temperature 0 returns `argmax(row)` without
+/// touching the RNG — bit-for-bit the greedy decode path.
+///
+/// Pipeline: scale logits by `1/temperature` (f64, max-subtracted
+/// softmax), sort descending (index-ascending tiebreak, matching
+/// `argmax`'s first-max-wins), truncate to `top_k`, softmax, truncate to
+/// the smallest prefix with cumulative mass ≥ `top_p` (never below one
+/// candidate), renormalize, inverse-CDF walk on the single draw.
+pub fn sample_token(cfg: &SamplingConfig, row: &[f32], hash: u64) -> u16 {
+    if cfg.is_greedy() {
+        return argmax(row) as u16;
+    }
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    if cfg.top_k > 0 && cfg.top_k < idx.len() {
+        idx.truncate(cfg.top_k);
+    }
+    let inv_t = 1.0 / cfg.temperature as f64;
+    // idx is logit-descending and inv_t > 0, so idx[0] carries the max.
+    let m = row[idx[0]] as f64 * inv_t;
+    let mut probs: Vec<f64> = idx.iter().map(|&i| (row[i] as f64 * inv_t - m).exp()).collect();
+    let z: f64 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= z;
+    }
+    if cfg.top_p < 1.0 {
+        let mut cum = 0.0;
+        let mut cut = probs.len();
+        for (i, &p) in probs.iter().enumerate() {
+            cum += p;
+            if cum >= cfg.top_p as f64 {
+                cut = i + 1;
+                break;
+            }
+        }
+        idx.truncate(cut);
+        probs.truncate(cut);
+        let z2: f64 = probs.iter().sum();
+        for p in probs.iter_mut() {
+            *p /= z2;
+        }
+    }
+    let u = Rng::seeded(hash).uniform();
+    let mut acc = 0.0;
+    for (i, &p) in probs.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return idx[i] as u16;
+        }
+    }
+    idx[idx.len() - 1] as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force reference: materialize the full truncated-renormalized
+    /// distribution independently of `sample_token`'s incremental walk,
+    /// then invert the same single uniform draw against it.
+    fn reference_sample(cfg: &SamplingConfig, row: &[f32], hash: u64) -> u16 {
+        assert!(cfg.temperature > 0.0);
+        let mut order: Vec<usize> = (0..row.len()).collect();
+        order.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+        if cfg.top_k > 0 && cfg.top_k < order.len() {
+            order.truncate(cfg.top_k);
+        }
+        let m = order.iter().map(|&i| row[i] as f64).fold(f64::NEG_INFINITY, f64::max)
+            / cfg.temperature as f64;
+        let weights: Vec<f64> = order
+            .iter()
+            .map(|&i| (row[i] as f64 / cfg.temperature as f64 - m).exp())
+            .collect();
+        let z: f64 = weights.iter().sum();
+        let mut probs: Vec<f64> = weights.iter().map(|w| w / z).collect();
+        if cfg.top_p < 1.0 {
+            let mut cum = 0.0;
+            let mut keep = probs.len();
+            for (i, &p) in probs.iter().enumerate() {
+                cum += p;
+                if cum >= cfg.top_p as f64 {
+                    keep = i + 1;
+                    break;
+                }
+            }
+            order.truncate(keep);
+            probs.truncate(keep);
+            let z2: f64 = probs.iter().sum();
+            for p in probs.iter_mut() {
+                *p /= z2;
+            }
+        }
+        // the renormalized mass must be unity — the top-p cut must not
+        // leave a deflated distribution behind
+        let total: f64 = probs.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12, "mass {total}");
+        let u = Rng::seeded(hash).uniform();
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return order[i] as u16;
+            }
+        }
+        order[order.len() - 1] as u16
+    }
+
+    fn adversarial_rows(n: usize, width: usize) -> Vec<Vec<f32>> {
+        let mut rng = Rng::seeded(0xBADC0DE);
+        (0..n)
+            .map(|k| {
+                (0..width)
+                    .map(|j| {
+                        let base = rng.normal_f32() * 4.0;
+                        // fold in ties and extremes to stress the sort
+                        // tiebreak and the max-subtracted softmax
+                        match (k + j) % 7 {
+                            0 => 0.0,
+                            1 => base.round(),
+                            _ => base,
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn matches_brute_force_reference_across_knobs() {
+        let rows = adversarial_rows(24, 48);
+        let knobs = [
+            (0.7, 0, 1.0),
+            (1.0, 5, 1.0),
+            (1.3, 0, 0.9),
+            (0.5, 8, 0.75),
+            (2.0, 3, 0.5),
+            (1.0, 1, 1.0), // top-k 1 ≡ greedy regardless of the draw
+        ];
+        for (r, row) in rows.iter().enumerate() {
+            for (t, k, p) in knobs {
+                let cfg =
+                    SamplingConfig { temperature: t, top_k: k, top_p: p, seed: 99 };
+                let hash = seed_hash(cfg.seed, &[r as u16, 7, 11]);
+                assert_eq!(
+                    sample_token(&cfg, row, hash),
+                    reference_sample(&cfg, row, hash),
+                    "row {r} knobs T={t} k={k} p={p}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn temperature_zero_is_argmax_bit_for_bit() {
+        for row in adversarial_rows(16, 48) {
+            let cfg = SamplingConfig { seed: 12345, ..SamplingConfig::default() };
+            assert_eq!(
+                sample_token(&cfg, &row, seed_hash(cfg.seed, &[1, 2, 3])),
+                argmax(&row) as u16
+            );
+        }
+    }
+
+    #[test]
+    fn vanishing_temperature_degenerates_to_greedy() {
+        // as T → 0 the softmax collapses onto the argmax long before the
+        // draw can pick anything else (rows get a unique max: with exact
+        // ties the limit distribution is uniform over the tie set, which
+        // is not what argmax-first-wins picks)
+        let rows: Vec<Vec<f32>> = adversarial_rows(16, 48)
+            .into_iter()
+            .map(|mut row| {
+                let top = argmax(&row);
+                row[top] += 1.0;
+                row
+            })
+            .collect();
+        for (i, row) in rows.into_iter().enumerate() {
+            let cfg = SamplingConfig {
+                temperature: 1e-4,
+                seed: 7,
+                ..SamplingConfig::default()
+            };
+            let hash = seed_hash(cfg.seed, &[i as u16]);
+            assert_eq!(sample_token(&cfg, &row, hash), argmax(&row) as u16);
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy_at_any_temperature() {
+        for row in adversarial_rows(8, 32) {
+            let cfg =
+                SamplingConfig { temperature: 3.0, top_k: 1, top_p: 1.0, seed: 5 };
+            assert_eq!(
+                sample_token(&cfg, &row, seed_hash(5, &[9])),
+                argmax(&row) as u16
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_same_prefix_reproduces_across_runs() {
+        let rows = adversarial_rows(8, 48);
+        let cfg = SamplingConfig { temperature: 0.9, top_k: 10, top_p: 0.95, seed: 42 };
+        let draw = |_: usize| -> Vec<u16> {
+            let mut out = Vec::new();
+            let mut h = seed_hash(cfg.seed, &[3, 1, 4]);
+            for row in &rows {
+                let t = sample_token(&cfg, row, h);
+                h = extend_hash(h, t);
+                out.push(t);
+            }
+            out
+        };
+        assert_eq!(draw(0), draw(1));
+    }
+
+    #[test]
+    fn hash_is_positional_not_sequential() {
+        // incremental extend_hash over a growing prefix lands on exactly
+        // seed_hash of the whole prefix — the invariant that makes
+        // delta-prefilled sessions and preemption replay sample the same
+        // tokens as a fresh one-shot walk
+        let tokens = [5u16, 0, 17, 3, 3, 29];
+        let mut h = seed_hash(77, &[]);
+        for (i, &t) in tokens.iter().enumerate() {
+            assert_eq!(h, seed_hash(77, &tokens[..i]), "prefix {i}");
+            h = extend_hash(h, t);
+        }
+        assert_eq!(h, seed_hash(77, &tokens));
+    }
+
+    #[test]
+    fn different_seeds_or_prefixes_diverge() {
+        assert_ne!(seed_hash(1, &[2, 3]), seed_hash(2, &[2, 3]));
+        assert_ne!(seed_hash(1, &[2, 3]), seed_hash(1, &[3, 2]));
+        assert_ne!(seed_hash(1, &[2]), seed_hash(1, &[2, 2]));
+    }
+
+    #[test]
+    fn top_p_keeps_at_least_one_candidate() {
+        // one spiked logit: its probability alone exceeds any top_p, so
+        // the nucleus is a single token
+        let mut row = vec![0.0f32; 16];
+        row[11] = 50.0;
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 0, top_p: 0.01, seed: 0 };
+        for extra in 0..32u16 {
+            assert_eq!(sample_token(&cfg, &row, seed_hash(0, &[extra])), 11);
+        }
+    }
+
+    #[test]
+    fn sampled_distribution_tracks_probabilities() {
+        // statistical sanity on the inverse-CDF walk: over many prefix
+        // hashes the empirical frequencies approach the softmax
+        let row = vec![2.0f32, 1.0, 0.0, -1.0];
+        let cfg = SamplingConfig { temperature: 1.0, top_k: 0, top_p: 1.0, seed: 31 };
+        let mut counts = [0usize; 4];
+        let n = 20_000;
+        for i in 0..n {
+            counts[sample_token(&cfg, &row, seed_hash(31, &[i as u16, (i >> 16) as u16]))
+                as usize] += 1;
+        }
+        let z: f64 = row.iter().map(|&l| (l as f64).exp()).sum();
+        for (i, &l) in row.iter().enumerate() {
+            let expect = (l as f64).exp() / z;
+            let got = counts[i] as f64 / n as f64;
+            assert!(
+                (got - expect).abs() < 0.02,
+                "token {i}: expected {expect:.3}, got {got:.3}"
+            );
+        }
+    }
+}

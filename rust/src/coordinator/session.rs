@@ -1,0 +1,481 @@
+//! Persistent multi-turn sessions: KV reuse across turns, fork/revert,
+//! and LRU eviction of idle caches.
+//!
+//! A session is a conversation the serving loop remembers between
+//! requests: its committed token history plus (usually) a resident
+//! [`KvCache`] holding the attention state of a *strict prefix* of that
+//! history. Turn N+1 then prefills only the token delta since the last
+//! committed position instead of the whole conversation — the serving-side
+//! half of the paper's cheap-deployment economy, where re-prefilling a
+//! long chat every turn would dwarf the W4A8 savings.
+//!
+//! # State machine
+//!
+//! ```text
+//!           open                 checkout               commit
+//!   (none) ─────→ idle{tokens,cache?} ─────→ busy ────────────→ idle
+//!                      │    ↑                  │ abort (fault/deadline/drain)
+//!               evict  │    │ restore          └────────────────→ idle
+//!                      ▼    │ (next checkout re-prefills)
+//!                 idle{tokens, cache=None}
+//! ```
+//!
+//! * **One in-flight turn per session** — `checkout` flips `busy` and
+//!   *takes* the cache out of the session; a second checkout (or any
+//!   `close`/`fork`/`revert`) answers [`ServeError::SessionBusy`] until
+//!   the turn commits or aborts.
+//! * **The cache is always a strict prefix of `tokens`.** The final
+//!   generated token of a turn is sampled from the last decode step's
+//!   logits but never decoded *into* the cache, so after a committed turn
+//!   the cache lags the history by exactly one position — which is also
+//!   why the next turn's delta prefill is never empty.
+//! * **Eviction is invisible.** `enforce_cap` drops the least-recently
+//!   used idle caches beyond the capacity bound (paged caches hand their
+//!   pages back to the pool); the tokens survive, and the next checkout
+//!   simply re-prefills the whole history (the coordinator counts it as a
+//!   `session_restores`). Busy sessions are never evicted — their cache
+//!   is checked out anyway.
+//!
+//! Determinism: because sampling draws from a positional prefix hash
+//! (see [`super::sampling`]), a restored (or forked, or preempted) session
+//! regenerates bit-identical tokens — eviction and restore are observable
+//! only in the counters, never in the stream.
+
+use std::collections::BTreeMap;
+
+use super::ServeError;
+use crate::plan::{KvCache, KvPagePool};
+
+/// Default LRU capacity: how many idle sessions may keep their KV cache
+/// resident at once (the [`super::CoordinatorConfig::max_sessions`] /
+/// `QuantRecipe.max_sessions` default). Sessions beyond the cap stay
+/// open — only their caches are dropped, to be re-prefilled on the next
+/// turn.
+pub const DEFAULT_MAX_SESSIONS: usize = 64;
+
+/// One persistent conversation.
+struct Session {
+    /// Committed history: every turn's full prompt (history + delta) plus
+    /// its generated tokens.
+    tokens: Vec<u16>,
+    /// Resident KV state over a strict prefix of `tokens`; `None` after
+    /// eviction, a mid-turn fault, or for a fresh session.
+    cache: Option<KvCache>,
+    /// A turn is in flight (the cache is checked out with it).
+    busy: bool,
+    /// LRU stamp: larger = touched more recently.
+    last_touch: u64,
+}
+
+/// What [`SessionManager::checkout`] hands the serving loop for one turn.
+pub struct TurnCheckout {
+    /// The committed history (the turn's delta is appended to this to form
+    /// the full prompt).
+    pub tokens: Vec<u16>,
+    /// The session's resident cache, taken for the duration of the turn;
+    /// `None` means the turn must re-prefill the whole history.
+    pub cache: Option<KvCache>,
+}
+
+/// Owns every persistent session of one serving loop. Single-threaded by
+/// construction — it lives inside the coordinator's run loop, so no locks;
+/// clients reach it through the same bounded queue as every other request.
+pub struct SessionManager {
+    sessions: BTreeMap<String, Session>,
+    clock: u64,
+    /// Capacity bound on *resident idle caches* (not on open sessions).
+    max_resident: usize,
+    evicted: usize,
+}
+
+impl SessionManager {
+    pub fn new(max_resident: usize) -> SessionManager {
+        SessionManager {
+            sessions: BTreeMap::new(),
+            clock: 0,
+            max_resident: max_resident.max(1),
+            evicted: 0,
+        }
+    }
+
+    /// Open sessions (busy and idle).
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    /// Idle caches dropped by the LRU so far.
+    pub fn evicted(&self) -> usize {
+        self.evicted
+    }
+
+    /// Sessions currently holding a resident cache (for ring-mode byte
+    /// accounting — paged bytes are already visible in the pool).
+    pub fn resident_caches(&self) -> usize {
+        self.sessions.values().filter(|s| s.cache.is_some()).count()
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Create an empty session.
+    pub fn open(&mut self, id: &str) -> Result<(), ServeError> {
+        if self.sessions.contains_key(id) {
+            return Err(ServeError::DuplicateSession(id.to_string()));
+        }
+        let stamp = self.tick();
+        self.sessions.insert(
+            id.to_string(),
+            Session { tokens: Vec::new(), cache: None, busy: false, last_touch: stamp },
+        );
+        Ok(())
+    }
+
+    /// Close an idle session, returning its pages to the pool.
+    pub fn close(&mut self, id: &str, pool: Option<&mut KvPagePool>) -> Result<(), ServeError> {
+        let s = self
+            .sessions
+            .get(id)
+            .ok_or_else(|| ServeError::SessionNotFound(id.to_string()))?;
+        if s.busy {
+            return Err(ServeError::SessionBusy(id.to_string()));
+        }
+        let mut s = self.sessions.remove(id).expect("looked up above");
+        if let (Some(cache), Some(pp)) = (s.cache.as_mut(), pool) {
+            if cache.is_paged() {
+                pp.release(cache);
+            }
+        }
+        Ok(())
+    }
+
+    /// Duplicate `src`'s dialog position as a new idle session `dst`.
+    /// Ring caches deep-copy (`Clone`); paged caches copy page-by-page
+    /// through [`KvPagePool::fork_cache`] — and when the pool cannot fit
+    /// the copy, the fork degrades to an *evicted* duplicate (tokens only,
+    /// first touch re-prefills) instead of failing, the same transparent
+    /// contract as LRU eviction.
+    pub fn fork(
+        &mut self,
+        src: &str,
+        dst: &str,
+        pool: Option<&mut KvPagePool>,
+    ) -> Result<(), ServeError> {
+        if self.sessions.contains_key(dst) {
+            return Err(ServeError::DuplicateSession(dst.to_string()));
+        }
+        let s = self
+            .sessions
+            .get(src)
+            .ok_or_else(|| ServeError::SessionNotFound(src.to_string()))?;
+        if s.busy {
+            return Err(ServeError::SessionBusy(src.to_string()));
+        }
+        let tokens = s.tokens.clone();
+        let cache = match (s.cache.as_ref(), pool) {
+            (Some(c), Some(pp)) if c.is_paged() => pp.fork_cache(c),
+            (Some(c), _) => Some(c.clone()),
+            (None, _) => None,
+        };
+        let stamp = self.tick();
+        self.sessions.insert(
+            dst.to_string(),
+            Session { tokens, cache, busy: false, last_touch: stamp },
+        );
+        Ok(())
+    }
+
+    /// Truncate an idle session to its first `to_len` committed tokens;
+    /// the cache truncates with it (paged positions hand their pages
+    /// back). Returns the surviving history.
+    pub fn revert(
+        &mut self,
+        id: &str,
+        to_len: usize,
+        pool: Option<&mut KvPagePool>,
+    ) -> Result<Vec<u16>, ServeError> {
+        let stamp = self.tick();
+        let s = self
+            .sessions
+            .get_mut(id)
+            .ok_or_else(|| ServeError::SessionNotFound(id.to_string()))?;
+        if s.busy {
+            return Err(ServeError::SessionBusy(id.to_string()));
+        }
+        if to_len > s.tokens.len() {
+            return Err(ServeError::Invalid(format!(
+                "revert({to_len}) past the session's {} committed tokens",
+                s.tokens.len()
+            )));
+        }
+        s.tokens.truncate(to_len);
+        if let Some(cache) = s.cache.as_mut() {
+            let keep = cache.len().min(to_len);
+            match pool {
+                Some(pp) if cache.is_paged() => pp.truncate(cache, keep),
+                _ => cache.truncate(keep),
+            }
+        }
+        s.last_touch = stamp;
+        Ok(s.tokens.clone())
+    }
+
+    /// The committed history (readable while a turn is in flight — the
+    /// history is immutable until that turn commits).
+    pub fn tokens(&self, id: &str) -> Result<Vec<u16>, ServeError> {
+        self.sessions
+            .get(id)
+            .map(|s| s.tokens.clone())
+            .ok_or_else(|| ServeError::SessionNotFound(id.to_string()))
+    }
+
+    /// Start a turn: mark the session busy and take its cache. Exactly one
+    /// of [`commit`](Self::commit) / [`abort`](Self::abort) must follow.
+    pub fn checkout(&mut self, id: &str) -> Result<TurnCheckout, ServeError> {
+        let stamp = self.tick();
+        let s = self
+            .sessions
+            .get_mut(id)
+            .ok_or_else(|| ServeError::SessionNotFound(id.to_string()))?;
+        if s.busy {
+            return Err(ServeError::SessionBusy(id.to_string()));
+        }
+        s.busy = true;
+        s.last_touch = stamp;
+        Ok(TurnCheckout { tokens: s.tokens.clone(), cache: s.cache.take() })
+    }
+
+    /// Finish a turn: store the new history and the advanced cache, then
+    /// enforce the resident-cache cap (evicting *other* idle sessions
+    /// LRU-first — the just-committed one is the most recently touched).
+    pub fn commit(
+        &mut self,
+        id: &str,
+        tokens: Vec<u16>,
+        cache: KvCache,
+        pool: Option<&mut KvPagePool>,
+    ) {
+        let stamp = self.tick();
+        let s = self.sessions.get_mut(id).expect("commit() on a checked-out session");
+        debug_assert!(s.busy, "commit() without checkout");
+        debug_assert!(
+            cache.len() < tokens.len(),
+            "session cache must be a strict prefix of the committed history"
+        );
+        s.busy = false;
+        s.tokens = tokens;
+        s.cache = Some(cache);
+        s.last_touch = stamp;
+        self.enforce_cap(pool);
+    }
+
+    /// Abandon a turn: the history stays at its pre-turn state. `cache`
+    /// is whatever survived — `Some` (truncated back to the committed
+    /// prefix) after a deadline expiry, `None` after a fault quarantined
+    /// it or a preemption released it; `None` makes the next checkout a
+    /// restore.
+    pub fn abort(&mut self, id: &str, cache: Option<KvCache>) {
+        let stamp = self.tick();
+        let s = self.sessions.get_mut(id).expect("abort() on a checked-out session");
+        debug_assert!(s.busy, "abort() without checkout");
+        s.busy = false;
+        s.cache = cache;
+        s.last_touch = stamp;
+    }
+
+    /// Drop least-recently-used idle caches until at most `max_resident`
+    /// remain. Tokens survive; paged caches hand their pages back to the
+    /// pool. Busy sessions are untouched (their cache is checked out).
+    pub fn enforce_cap(&mut self, mut pool: Option<&mut KvPagePool>) {
+        loop {
+            let resident = self.resident_caches();
+            if resident <= self.max_resident {
+                return;
+            }
+            let victim = self
+                .sessions
+                .iter()
+                .filter(|(_, s)| !s.busy && s.cache.is_some())
+                .min_by_key(|(_, s)| s.last_touch)
+                .map(|(id, _)| id.clone());
+            let Some(id) = victim else { return };
+            let s = self.sessions.get_mut(&id).expect("victim looked up above");
+            let mut cache = s.cache.take().expect("victim holds a cache");
+            if let (true, Some(pp)) = (cache.is_paged(), pool.as_deref_mut()) {
+                pp.release(&mut cache);
+            }
+            self.evicted += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Arch, ModelConfig};
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "session-test".into(),
+            arch: Arch::Opt,
+            vocab_size: 32,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            max_seq: 8,
+        }
+    }
+
+    fn ring(cfg: &ModelConfig) -> KvCache {
+        KvCache::new(cfg)
+    }
+
+    #[test]
+    fn open_close_and_typed_errors() {
+        let mut m = SessionManager::new(4);
+        assert!(m.is_empty());
+        m.open("a").unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.open("a"), Err(ServeError::DuplicateSession("a".into())));
+        assert_eq!(m.close("b", None), Err(ServeError::SessionNotFound("b".into())));
+        assert_eq!(m.tokens("b"), Err(ServeError::SessionNotFound("b".into())));
+        m.close("a", None).unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn checkout_enforces_one_turn_per_session() {
+        let mut m = SessionManager::new(4);
+        m.open("s").unwrap();
+        let co = m.checkout("s").unwrap();
+        assert!(co.tokens.is_empty() && co.cache.is_none());
+        // busy: second checkout and every mutation are typed-rejected
+        assert!(matches!(m.checkout("s"), Err(ServeError::SessionBusy(_))));
+        assert_eq!(m.close("s", None), Err(ServeError::SessionBusy("s".into())));
+        assert_eq!(m.fork("s", "t", None), Err(ServeError::SessionBusy("s".into())));
+        assert_eq!(m.revert("s", 0, None), Err(ServeError::SessionBusy("s".into())));
+        // the committed history stays readable mid-turn
+        assert_eq!(m.tokens("s").unwrap(), Vec::<u16>::new());
+        let cfg = tiny_cfg();
+        m.commit("s", vec![1, 2, 3], ring(&cfg), None);
+        assert_eq!(m.tokens("s").unwrap(), vec![1, 2, 3]);
+        assert_eq!(m.resident_caches(), 1);
+        // idle again: checkout succeeds and takes the cache
+        let co = m.checkout("s").unwrap();
+        assert_eq!(co.tokens, vec![1, 2, 3]);
+        assert!(co.cache.is_some());
+        assert_eq!(m.resident_caches(), 0);
+        m.abort("s", co.cache);
+        assert_eq!(m.resident_caches(), 1);
+    }
+
+    #[test]
+    fn abort_without_cache_marks_restore_path() {
+        let mut m = SessionManager::new(4);
+        let cfg = tiny_cfg();
+        m.open("s").unwrap();
+        let _ = m.checkout("s").unwrap();
+        m.commit("s", vec![4, 5], ring(&cfg), None);
+        // a fault mid-turn: tokens survive, cache gone
+        let co = m.checkout("s").unwrap();
+        drop(co.cache);
+        m.abort("s", None);
+        assert_eq!(m.tokens("s").unwrap(), vec![4, 5]);
+        let co = m.checkout("s").unwrap();
+        assert!(co.cache.is_none(), "next checkout re-prefills from scratch");
+        assert_eq!(co.tokens, vec![4, 5]);
+    }
+
+    #[test]
+    fn fork_copies_tokens_and_ring_cache() {
+        let mut m = SessionManager::new(8);
+        let cfg = tiny_cfg();
+        m.open("src").unwrap();
+        let _ = m.checkout("src").unwrap();
+        m.commit("src", vec![7, 8, 9], ring(&cfg), None);
+        m.fork("src", "dst", None).unwrap();
+        assert_eq!(m.fork("src", "dst", None), Err(ServeError::DuplicateSession("dst".into())));
+        assert_eq!(m.fork("gone", "x", None), Err(ServeError::SessionNotFound("gone".into())));
+        assert_eq!(m.tokens("dst").unwrap(), vec![7, 8, 9]);
+        assert_eq!(m.resident_caches(), 2, "ring fork deep-copies the cache");
+        // the two sessions are independent: reverting one leaves the other
+        m.revert("dst", 1, None).unwrap();
+        assert_eq!(m.tokens("dst").unwrap(), vec![7]);
+        assert_eq!(m.tokens("src").unwrap(), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn revert_truncates_tokens_and_rejects_overshoot() {
+        let mut m = SessionManager::new(4);
+        let cfg = tiny_cfg();
+        m.open("s").unwrap();
+        let _ = m.checkout("s").unwrap();
+        m.commit("s", vec![1, 2, 3, 4], ring(&cfg), None);
+        assert!(matches!(m.revert("s", 9, None), Err(ServeError::Invalid(_))));
+        assert_eq!(m.revert("s", 2, None).unwrap(), vec![1, 2]);
+        assert_eq!(m.tokens("s").unwrap(), vec![1, 2]);
+        // revert to zero keeps the session open but empty
+        assert_eq!(m.revert("s", 0, None).unwrap(), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_idle_cache_only() {
+        let mut m = SessionManager::new(2);
+        let cfg = tiny_cfg();
+        for id in ["a", "b", "c"] {
+            m.open(id).unwrap();
+            let _ = m.checkout(id).unwrap();
+            m.commit(id, vec![1], ring(&cfg), None);
+        }
+        // cap 2: committing "c" evicted the LRU ("a"); tokens survive
+        assert_eq!(m.evicted(), 1);
+        assert_eq!(m.resident_caches(), 2);
+        assert_eq!(m.tokens("a").unwrap(), vec![1]);
+        let co = m.checkout("a").unwrap();
+        assert!(co.cache.is_none(), "evicted session restores on touch");
+        // busy sessions are never evicted: with "a" busy, committing two
+        // more sessions can only evict "b" then "c"
+        for id in ["d", "e"] {
+            m.open(id).unwrap();
+            let _ = m.checkout(id).unwrap();
+            m.commit(id, vec![2], ring(&cfg), None);
+        }
+        assert_eq!(m.evicted(), 3);
+        m.commit("a", vec![1, 2], ring(&cfg), None);
+        assert_eq!(m.len(), 5, "eviction never closes a session");
+    }
+
+    #[test]
+    fn paged_eviction_returns_pages_to_the_pool() {
+        let cfg = tiny_cfg();
+        let mut pool = KvPagePool::new(&cfg, 4, 0, None);
+        let total = pool.total_pages();
+        let mut m = SessionManager::new(1);
+        for id in ["a", "b"] {
+            m.open(id).unwrap();
+            let co = m.checkout(id).unwrap();
+            assert!(co.cache.is_none());
+            let mut cache = pool.new_cache();
+            assert!(pool.reserve(&mut cache, 3));
+            m.commit(id, vec![1], cache, Some(&mut pool));
+        }
+        // "a" was evicted when "b" committed; its page went back
+        assert_eq!(m.evicted(), 1);
+        assert_eq!(pool.resident_pages(), 1, "only \"b\"'s reservation stays");
+        assert_eq!(
+            pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+            total,
+            "books balance through eviction"
+        );
+        // close returns the last reservation too
+        m.close("b", Some(&mut pool)).unwrap();
+        assert_eq!(pool.resident_pages(), 0);
+        assert_eq!(pool.free_pages(), total);
+    }
+}

@@ -533,6 +533,48 @@ impl KvPagePool {
         cache.len = new_len;
     }
 
+    /// Duplicate `src` into a fresh cache of this pool: reserve exactly
+    /// the pages its live positions occupy and copy their rows byte-for-
+    /// byte (no re-quantization — stored rows are already through the
+    /// LUT, and a fork must be bit-identical to its source). Returns
+    /// `None` — taking nothing — when the free list cannot cover the
+    /// copy; the caller falls back to dropping the fork's cache and
+    /// re-prefilling on first touch, exactly like an evicted session.
+    ///
+    /// This is the session `fork` primitive. Pages are *copied*, not
+    /// refcount-shared: true copy-on-write prefix sharing across the pool
+    /// is ROADMAP item 2 and must not pre-empt its `free + resident +
+    /// leaked == total` bookkeeping here — a fork's pages are ordinary
+    /// resident pages that release like any other.
+    pub fn fork_cache(&mut self, src: &KvCache) -> Option<KvCache> {
+        assert!(!src.quarantined, "fork_cache() on a quarantined cache");
+        let src_pages = match &src.store {
+            Store::Ring { .. } => panic!("fork_cache() on a ring cache (Clone it instead)"),
+            Store::Paged { pages, .. } => pages,
+        };
+        let mut dst = self.new_cache();
+        if !self.reserve(&mut dst, src.len) {
+            return None;
+        }
+        let dst_pages = match &mut dst.store {
+            Store::Ring { .. } => unreachable!("new_cache mints paged caches"),
+            Store::Paged { pages, .. } => pages,
+        };
+        // dst holds pages_for(src.len) pages; src may hold more (reserved
+        // ahead of its cursor) — zip stops at the live prefix, and stale
+        // tail rows within the last page copy harmlessly.
+        for (d, s) in dst_pages.iter_mut().zip(src_pages.iter()) {
+            for layer in 0..self.n_layers {
+                for r in 0..self.page_positions {
+                    d.k[layer].row_mut(r).copy_from_slice(s.k[layer].row(r));
+                    d.v[layer].row_mut(r).copy_from_slice(s.v[layer].row(r));
+                }
+            }
+        }
+        dst.len = src.len;
+        Some(dst)
+    }
+
     /// Take back every page `cache` holds and rewind it to empty, leaving
     /// the husk (page-table Vec capacity, quant LUT) recyclable. Pages
     /// from a healthy cache return to the free list; pages from a
@@ -787,6 +829,51 @@ mod tests {
         assert_eq!((c.len(), c.pages_held(), c.capacity()), (0, 0, 0));
         assert_eq!(pool.free_pages(), total);
         assert!(pool.reserve(&mut c, 2), "husk is still reservable");
+    }
+
+    #[test]
+    fn fork_cache_copies_bits_and_books_balance() {
+        let cfg = cfg();
+        // P = 3 so the fork's last page is partially filled.
+        let mut pool = KvPagePool::sized_for(&cfg, 3, 0, None, 3);
+        let total = pool.total_pages();
+        let mut src = pool.new_cache();
+        assert!(pool.reserve(&mut src, 4));
+        for pos in 0..4 {
+            let krow: Vec<f32> = (0..8).map(|i| (pos * 8 + i) as f32).collect();
+            let vrow: Vec<f32> = krow.iter().map(|x| -x).collect();
+            for layer in 0..3 {
+                src.store(layer, pos, &krow, &vrow);
+            }
+            src.advance(1);
+        }
+        let fork = pool.fork_cache(&src).expect("pool has room");
+        assert_eq!((fork.len(), fork.pages_held()), (4, 2));
+        for layer in 0..3 {
+            for pos in 0..4 {
+                assert_eq!(
+                    src.layer(layer).k_row(pos),
+                    fork.layer(layer).k_row(pos),
+                    "k layer {layer} pos {pos}"
+                );
+                assert_eq!(src.layer(layer).v_row(pos), fork.layer(layer).v_row(pos));
+            }
+        }
+        assert_eq!(pool.resident_pages(), 4, "source + fork pages both resident");
+        assert_eq!(
+            pool.free_pages() + pool.resident_pages() + pool.leaked_pages(),
+            pool.total_pages()
+        );
+        // a dry pool forks nothing and takes nothing
+        let mut hog = pool.new_cache();
+        assert!(pool.reserve(&mut hog, (total - 4) * 3));
+        assert!(pool.fork_cache(&src).is_none());
+        assert_eq!(pool.free_pages(), 0);
+        pool.release(&mut hog);
+        let mut f2 = pool.fork_cache(&src).expect("room again");
+        pool.release(&mut f2);
+        pool.release(&mut src);
+        assert_eq!(pool.free_pages(), total);
     }
 
     #[test]

@@ -683,6 +683,39 @@ impl CompiledModel {
         Some(self.run_mode(&tokens[done..], KvMode::Seq(cache), s, &mut |_, _| {}))
     }
 
+    /// Prefill only the *delta* of a sequence the cache already partially
+    /// holds: given the full token history, runs the suffix
+    /// `full_tokens[cache.len()..]` through
+    /// [`prefill_with_probe`](Self::prefill_with_probe) — the multi-turn
+    /// session entry point. The cache must hold a strict prefix of
+    /// `full_tokens` (the session layer maintains that invariant; an
+    /// evicted/empty cache degenerates to a full prefill of the whole
+    /// history).
+    ///
+    /// By the chunked-prefill split-invariance contract
+    /// (`tests/kv_equivalence.rs`), the logits of the final chunk — and
+    /// every K/V row appended — are bit-identical to a fresh one-shot
+    /// prefill of `full_tokens`, no matter where previous turns left the
+    /// prefix boundary. That identity is what makes a session turn
+    /// token-for-token equal to a one-shot generate over the
+    /// concatenated conversation.
+    pub fn prefill_delta<'s>(
+        &self,
+        full_tokens: &[u16],
+        cache: &mut KvCache,
+        s: &'s mut DecodeScratch,
+        chunk: usize,
+        probe: &mut dyn FnMut(usize) -> bool,
+    ) -> Option<&'s Matrix> {
+        assert!(
+            cache.len() < full_tokens.len(),
+            "prefill_delta: cache holds {} of {} tokens — nothing new to prefill",
+            cache.len(),
+            full_tokens.len()
+        );
+        self.prefill_with_probe(&full_tokens[cache.len()..], cache, s, chunk, probe)
+    }
+
     /// Decode one token at the next position of `cache`'s sequence,
     /// computing attention only for that position; returns the logits row
     /// `[1, vocab]`. Bit-identical to the corresponding row of a

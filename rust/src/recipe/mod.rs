@@ -100,6 +100,17 @@ pub enum RecipeError {
     /// A packed draft compiles from the target PTQ run's quantized codes;
     /// a W16 target quantizes nothing, so there are none.
     SpeculateDraftNeedsTargetCodes,
+    /// Sampling temperature must be a finite non-negative number
+    /// (0 = greedy).
+    SamplingTemperatureInvalid,
+    /// Nucleus mass must be in (0, 1] — `top_p = 0` would keep no
+    /// candidates and `> 1` is a typo'd percentage.
+    SamplingTopPInvalid,
+    /// The speculative parity contract is *greedy* parity
+    /// (`tests/speculative.rs`); a sampling recipe cannot speculate.
+    SpeculateNeedsGreedy,
+    /// The session LRU needs at least one resident slot.
+    MaxSessionsZero,
 }
 
 impl fmt::Display for RecipeError {
@@ -159,6 +170,19 @@ impl fmt::Display for RecipeError {
                 "speculate: a packed draft needs the target's quantized codes \
                  (a W16 target quantizes nothing — use a dense draft layout)",
             ),
+            RecipeError::SamplingTemperatureInvalid => {
+                f.write_str("sampling temperature must be finite and >= 0 (0 = greedy)")
+            }
+            RecipeError::SamplingTopPInvalid => {
+                f.write_str("sampling top_p must be in (0, 1] (1 = no nucleus cut)")
+            }
+            RecipeError::SpeculateNeedsGreedy => f.write_str(
+                "speculate proves exact greedy parity only: set temperature 0 \
+                 (or drop --speculate) to sample",
+            ),
+            RecipeError::MaxSessionsZero => {
+                f.write_str("max_sessions must be at least 1 (the session LRU needs a slot)")
+            }
         }
     }
 }
@@ -226,6 +250,14 @@ pub struct QuantRecipe {
     /// batched target pass (`None` = off). Greedy output is exactly the
     /// target-only stream — see `plan/speculate.rs`.
     pub speculate: Option<SpeculateConfig>,
+    /// Decode-time sampling knobs (temperature / top-k / top-p / seed).
+    /// The default is greedy (`temperature = 0`), bit-for-bit the
+    /// historical argmax path — see `coordinator/sampling.rs`.
+    pub sampling: crate::coordinator::SamplingConfig,
+    /// Coordinator: resident-cache bound of the session LRU — idle
+    /// sessions beyond it drop their KV state (pages return to the pool)
+    /// and transparently re-prefill on next touch.
+    pub max_sessions: usize,
 }
 
 /// Default draft window when `--speculate` is given without `--draft-k`.
@@ -278,6 +310,8 @@ impl RecipeBuilder {
                 deadline_ms: 0,
                 kernel_tier: KernelTier::Oracle,
                 speculate: None,
+                sampling: crate::coordinator::SamplingConfig::default(),
+                max_sessions: crate::coordinator::DEFAULT_MAX_SESSIONS,
             },
         }
     }
@@ -380,6 +414,18 @@ impl RecipeBuilder {
         self
     }
 
+    /// Decode-time sampling knobs (default greedy, `temperature = 0`).
+    pub fn sampling(mut self, cfg: crate::coordinator::SamplingConfig) -> Self {
+        self.r.sampling = cfg;
+        self
+    }
+
+    /// Resident-cache bound of the session LRU.
+    pub fn max_sessions(mut self, n: usize) -> Self {
+        self.r.max_sessions = n;
+        self
+    }
+
     /// Validate and return the recipe.
     pub fn build(self) -> Result<QuantRecipe, RecipeError> {
         self.r.validate()?;
@@ -450,9 +496,23 @@ impl QuantRecipe {
         if self.kv_budget_bytes > 0 && self.kv_page_positions == 0 {
             return Err(RecipeError::KvBudgetNeedsPaging);
         }
+        if !self.sampling.temperature.is_finite() || self.sampling.temperature < 0.0 {
+            return Err(RecipeError::SamplingTemperatureInvalid);
+        }
+        if !(self.sampling.top_p > 0.0 && self.sampling.top_p <= 1.0) {
+            return Err(RecipeError::SamplingTopPInvalid);
+        }
+        if self.max_sessions == 0 {
+            return Err(RecipeError::MaxSessionsZero);
+        }
         if let Some(sc) = &self.speculate {
             if sc.k == 0 {
                 return Err(RecipeError::SpeculateKZero);
+            }
+            // the speculative suite pins *greedy* parity; sampled draws
+            // over draft-vs-target logits have no such contract
+            if !self.sampling.is_greedy() {
+                return Err(RecipeError::SpeculateNeedsGreedy);
             }
             if sc.draft.speculate.is_some() {
                 return Err(RecipeError::SpeculateNested);
@@ -536,6 +596,8 @@ impl QuantRecipe {
             // fault schedules are a harness knob, never part of a recipe
             faults: None,
             speculate: self.speculate.clone(),
+            sampling: self.sampling,
+            max_sessions: self.max_sessions,
         }
     }
 
@@ -575,6 +637,18 @@ impl QuantRecipe {
         s.push_str(&format!("  kernels={}", self.kernel_tier.name()));
         if let Some(sc) = &self.speculate {
             s.push_str(&format!("  speculate={}/k{}", sc.draft.name, sc.k));
+        }
+        if !self.sampling.is_greedy() {
+            s.push_str(&format!(
+                "  sample T={} k={} p={} seed={}",
+                self.sampling.temperature,
+                self.sampling.top_k,
+                self.sampling.top_p,
+                self.sampling.seed
+            ));
+        }
+        if self.max_sessions != crate::coordinator::DEFAULT_MAX_SESSIONS {
+            s.push_str(&format!("  sessions {}", self.max_sessions));
         }
         s
     }
@@ -654,6 +728,22 @@ impl QuantRecipe {
             ("queue_depth".to_string(), Json::Num(self.queue_depth as f64)),
             ("deadline_ms".to_string(), Json::Num(self.deadline_ms as f64)),
             ("speculate".to_string(), speculate),
+            (
+                "sampling".to_string(),
+                Json::Obj(vec![
+                    (
+                        "temperature".to_string(),
+                        Json::Num(self.sampling.temperature as f64),
+                    ),
+                    ("top_k".to_string(), Json::Num(self.sampling.top_k as f64)),
+                    ("top_p".to_string(), Json::Num(self.sampling.top_p as f64)),
+                    // seeds above 2^53 would lose bits through the f64
+                    // number representation; the validate/round-trip tests
+                    // pin the practical range
+                    ("seed".to_string(), Json::Num(self.sampling.seed as f64)),
+                ]),
+            ),
+            ("max_sessions".to_string(), Json::Num(self.max_sessions as f64)),
         ])
     }
 
@@ -669,7 +759,7 @@ impl QuantRecipe {
     /// also the recursive entry point for the nested `speculate.draft`
     /// document.
     fn from_json_value(doc: &Json) -> Result<QuantRecipe, RecipeError> {
-        const KEYS: [&str; 21] = [
+        const KEYS: [&str; 23] = [
             "name",
             "weight",
             "act",
@@ -691,6 +781,8 @@ impl QuantRecipe {
             "queue_depth",
             "deadline_ms",
             "speculate",
+            "sampling",
+            "max_sessions",
         ];
         let obj = match doc {
             Json::Obj(kv) => kv,
@@ -860,6 +952,46 @@ impl QuantRecipe {
             }
             Some(_) => return Err(bad("speculate must be an object or null".to_string())),
         }
+        match doc.get("sampling") {
+            None => {}
+            Some(v) if v.is_null() => {}
+            Some(v @ Json::Obj(kv)) => {
+                for (k, _) in kv {
+                    if !["temperature", "top_k", "top_p", "seed"].contains(&k.as_str()) {
+                        return Err(bad(format!("sampling: unknown key {k:?}")));
+                    }
+                }
+                let mut sc = crate::coordinator::SamplingConfig::default();
+                if let Some(t) = v.get("temperature") {
+                    sc.temperature = t
+                        .as_f64()
+                        .ok_or_else(|| bad("sampling.temperature must be a number".to_string()))?
+                        as f32;
+                }
+                if let Some(k) = v.get("top_k") {
+                    sc.top_k = k.as_usize().ok_or_else(|| {
+                        bad("sampling.top_k must be a non-negative integer".to_string())
+                    })?;
+                }
+                if let Some(p) = v.get("top_p") {
+                    sc.top_p = p
+                        .as_f64()
+                        .ok_or_else(|| bad("sampling.top_p must be a number".to_string()))?
+                        as f32;
+                }
+                if let Some(s) = v.get("seed") {
+                    sc.seed = s.as_usize().ok_or_else(|| {
+                        bad("sampling.seed must be a non-negative integer".to_string())
+                    })? as u64;
+                }
+                b = b.sampling(sc);
+            }
+            Some(_) => return Err(bad("sampling must be an object or null".to_string())),
+        }
+        b = b.max_sessions(usize_field(
+            "max_sessions",
+            crate::coordinator::DEFAULT_MAX_SESSIONS,
+        )?);
         b.build()
     }
 
@@ -1057,6 +1189,29 @@ impl QuantRecipe {
         } else if args.flag("draft-k") {
             return Err("--draft-k has no effect without --speculate".to_string());
         }
+
+        // Sampling + sessions: valueless knobs are rejected (same policy
+        // as --recipe / --kernels), and the targeted knobs need sampling
+        // actually on — `--top-k` under greedy decode would silently do
+        // nothing, which is almost certainly a dropped --temperature.
+        for knob in ["temperature", "top-k", "top-p", "seed", "max-sessions"] {
+            if args.flag(knob) && args.get(knob).is_none() {
+                return Err(format!("--{knob} needs a value"));
+            }
+        }
+        r.sampling.temperature = args.get_f32("temperature", r.sampling.temperature)?;
+        r.sampling.top_k = args.get_usize("top-k", r.sampling.top_k)?;
+        r.sampling.top_p = args.get_f32("top-p", r.sampling.top_p)?;
+        r.sampling.seed = args.get_usize("seed", r.sampling.seed as usize)? as u64;
+        if r.sampling.is_greedy()
+            && (args.flag("top-k") || args.flag("top-p") || args.flag("seed"))
+        {
+            return Err(
+                "--top-k/--top-p/--seed have no effect at temperature 0: add --temperature"
+                    .to_string(),
+            );
+        }
+        r.max_sessions = args.get_usize("max-sessions", r.max_sessions)?;
 
         r.validate().map_err(|e| e.to_string())?;
         Ok(r)
@@ -1379,6 +1534,80 @@ mod tests {
         assert_eq!(r.kv_page_positions, 8);
         assert_eq!(r.kv_budget_bytes, 0);
         assert!(r.summary().contains("paged:8"));
+    }
+
+    #[test]
+    fn sampling_and_session_knob_flags_json_and_views() {
+        use crate::coordinator::SamplingConfig;
+        // default: greedy decode, default LRU bound, no summary tags
+        let base = QuantRecipe::preset("w4a8-fp").unwrap();
+        assert!(base.sampling.is_greedy());
+        assert_eq!(base.max_sessions, crate::coordinator::DEFAULT_MAX_SESSIONS);
+        assert!(!base.summary().contains("sample"));
+        // the serve flags thread through
+        let r = QuantRecipe::from_args(
+            &argv(&[
+                "--temperature",
+                "0.8",
+                "--top-k",
+                "40",
+                "--top-p",
+                "0.95",
+                "--seed",
+                "7",
+                "--max-sessions",
+                "4",
+            ]),
+            "w4a8-fp",
+        )
+        .unwrap();
+        assert_eq!(
+            r.sampling,
+            SamplingConfig { temperature: 0.8, top_k: 40, top_p: 0.95, seed: 7 }
+        );
+        assert_eq!(r.max_sessions, 4);
+        assert!(r.summary().contains("sample T=0.8 k=40 p=0.95 seed=7"));
+        assert!(r.summary().contains("sessions 4"));
+        // and survive a JSON round trip field-for-field
+        let back = QuantRecipe::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        // targeted knobs without sampling on are almost certainly a
+        // dropped --temperature — rejected, not silently inert
+        assert!(QuantRecipe::from_args(&argv(&["--top-k", "5"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_args(&argv(&["--seed", "3"]), "w4a8-fp").is_err());
+        // valueless knobs are rejected, not defaulted
+        assert!(QuantRecipe::from_args(&argv(&["--temperature"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_args(
+            &argv(&["--temperature", "0.5", "--top-k"]),
+            "w4a8-fp"
+        )
+        .is_err());
+        // range validation is the same typed error on every path
+        let mut bad = base.clone();
+        bad.sampling.temperature = -1.0;
+        assert_eq!(bad.validate(), Err(RecipeError::SamplingTemperatureInvalid));
+        let mut bad = base.clone();
+        bad.sampling.top_p = 0.0;
+        assert_eq!(bad.validate(), Err(RecipeError::SamplingTopPInvalid));
+        let mut bad = base.clone();
+        bad.max_sessions = 0;
+        assert_eq!(bad.validate(), Err(RecipeError::MaxSessionsZero));
+        assert!(QuantRecipe::from_args(&argv(&["--temperature", "-2"]), "w4a8-fp").is_err());
+        assert!(QuantRecipe::from_json(r#"{"sampling":{"top_p":1.5}}"#).is_err());
+        assert!(QuantRecipe::from_json(r#"{"max_sessions":0}"#).is_err());
+        // unknown nested keys are rejected like any other
+        assert!(QuantRecipe::from_json(r#"{"sampling":{"temp":1}}"#).is_err());
+        // a sampling recipe cannot speculate: the parity contract is greedy
+        let cheap = QuantRecipe::preset("w4a8-fp").unwrap();
+        let mut r = QuantRecipe::preset("w4a8-fp-lorc").unwrap();
+        r.speculate = Some(SpeculateConfig { draft: Box::new(cheap), k: 2 });
+        r.sampling.temperature = 0.7;
+        assert_eq!(r.validate(), Err(RecipeError::SpeculateNeedsGreedy));
+        assert!(QuantRecipe::from_args(
+            &argv(&["--speculate", "w4a8-fp", "--temperature", "0.7"]),
+            "w4a8-fp-lorc"
+        )
+        .is_err());
     }
 
     #[test]

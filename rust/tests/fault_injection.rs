@@ -17,7 +17,7 @@ use std::time::{Duration, Instant};
 
 use zeroquant_fp::coordinator::{
     BatchPolicy, Coordinator, CoordinatorConfig, FaultPayload, FaultPlan, Generated,
-    ScoreBackend, ServeError, ServeReport, ServingStack,
+    SamplingConfig, ScoreBackend, ServeError, ServeReport, ServingStack, DEFAULT_MAX_SESSIONS,
 };
 use zeroquant_fp::engine::{EngineOpts, KernelTier};
 use zeroquant_fp::model::{Arch, Checkpoint, ModelConfig};
@@ -70,6 +70,8 @@ fn cfg_with(ck: Checkpoint, max_batch: usize, faults: Option<FaultPlan>) -> Coor
         speculate: None,
         kv_page_positions: 0,
         kv_budget_bytes: 0,
+        sampling: SamplingConfig::default(),
+        max_sessions: DEFAULT_MAX_SESSIONS,
     }
 }
 
@@ -636,6 +638,101 @@ fn draft_faults_fall_back_to_target_only_greedy_identical() {
         "rounds before the fault (and the unfaulted requests) still speculated"
     );
     assert!(report.spec_rolled_back > 0 || report.spec_accepted > 0);
+}
+
+/// Session chaos (ISSUE 10's satellite): a fault striking mid-turn
+/// quarantines only that session's cache. The faulted turn answers one
+/// typed `Faulted`, the session itself survives with its committed
+/// transcript intact, its next turn transparently re-prefills from the
+/// history (counted in `session_restores`), and a concurrent session the
+/// fault did not touch stays bit-identical to the greedy reference. In
+/// paged mode the poisoned cache leaks exactly its own pages and the
+/// books still balance.
+#[test]
+fn session_fault_midturn_quarantines_only_that_cache() {
+    quiet_injected_panics();
+    let ck = tiny_ck();
+    let reference = CompiledModel::compile(&ck, EngineOpts::default());
+    for page in [0usize, 4] {
+        // solo batches + a single driving thread make the prefill-site
+        // firing order exact: a#1, b#1, a#2 (faults), b#2, a#2 retry
+        let plan = FaultPlan::parse("prefill:nth=3").unwrap();
+        let mut cfg = cfg_with(ck.clone(), 1, Some(plan));
+        cfg.kv_page_positions = page;
+        let coord = Coordinator::new(cfg);
+        let sc = coord.session_client().unwrap();
+        let h = std::thread::spawn(move || {
+            let d1a: Vec<u16> = prompt_for(0, 8)[..4].to_vec();
+            let d1b: Vec<u16> = prompt_for(1, 8)[..4].to_vec();
+            let d2: Vec<u16> = prompt_for(2, 8)[..3].to_vec();
+            sc.open("a").unwrap();
+            sc.open("b").unwrap();
+            let a1 = sc.turn("a", d1a.clone(), 3).unwrap(); // firing 1
+            let b1 = sc.turn("b", d1b.clone(), 3).unwrap(); // firing 2
+            let mut hist_a = d1a;
+            hist_a.extend_from_slice(&a1.tokens);
+            let mut hist_b = d1b;
+            hist_b.extend_from_slice(&b1.tokens);
+
+            // firing 3: the injected panic unwinds a's delta prefill
+            match sc.turn("a", d2.clone(), 3) {
+                Err(ServeError::Faulted(msg)) => {
+                    assert!(msg.contains("prefill"), "fault names its site, got {msg:?}")
+                }
+                other => panic!("the struck turn must answer Faulted, got {other:?}"),
+            }
+            // the session survived: transcript intact, nothing from the
+            // faulted turn leaked into it
+            assert_eq!(sc.tokens("a").unwrap(), hist_a, "fault must not pollute the history");
+
+            let b2 = sc.turn("b", d2.clone(), 3).unwrap(); // firing 4
+            let a2 = sc.turn("a", d2.clone(), 3).unwrap(); // firing 5: restore
+            (hist_a, hist_b, d2, a2.tokens, b2.tokens)
+        });
+        let report = run_within(coord, 30);
+        let (hist_a, hist_b, d2, a2, b2) = h.join().unwrap();
+
+        let mut full_b = hist_b;
+        full_b.extend_from_slice(&d2);
+        assert_eq!(
+            b2,
+            greedy_reference(&reference, &full_b, 3),
+            "page={page}: the untouched session must stay bit-identical"
+        );
+        let mut full_a = hist_a;
+        full_a.extend_from_slice(&d2);
+        assert_eq!(
+            a2,
+            greedy_reference(&reference, &full_a, 3),
+            "page={page}: the restored turn must re-prefill to the exact same tokens"
+        );
+
+        assert_eq!(report.faulted, 1, "page={page}: exactly the struck turn faulted");
+        assert_eq!(
+            report.quarantined_caches, 1,
+            "page={page}: only the struck session's cache is quarantined"
+        );
+        assert!(
+            report.session_restores >= 1,
+            "page={page}: the next touch of the quarantined session counts a restore"
+        );
+        assert_eq!(report.sessions_active, 2, "page={page}: both sessions survive the fault");
+        assert_eq!(
+            report.streamed_tokens, 12,
+            "page={page}: four successful 3-token turns streamed; the faulted turn streamed none"
+        );
+        if page > 0 {
+            assert_eq!(
+                report.kv_pages_free + report.kv_pages_resident + report.kv_pages_leaked,
+                report.kv_pages_total,
+                "page={page}: books must balance around the quarantine"
+            );
+            assert!(
+                report.kv_pages_leaked >= 1,
+                "page={page}: the poisoned cache leaks its own pages"
+            );
+        }
+    }
 }
 
 /// Bounded admission end to end: a depth-1 queue sheds every submission

@@ -22,7 +22,8 @@ use std::sync::mpsc::sync_channel;
 use std::time::Duration;
 
 use zeroquant_fp::coordinator::{
-    BatchPolicy, Coordinator, CoordinatorConfig, Generated, ScoreBackend, ServeReport,
+    BatchPolicy, Coordinator, CoordinatorConfig, Generated, SamplingConfig, ScoreBackend,
+    ServeReport, DEFAULT_MAX_SESSIONS,
 };
 use zeroquant_fp::engine::EngineOpts;
 use zeroquant_fp::formats::FpFormat;
@@ -276,6 +277,8 @@ fn paged_cfg(ck: Checkpoint, page: usize, budget: usize) -> CoordinatorConfig {
         speculate: None,
         kv_page_positions: page,
         kv_budget_bytes: budget,
+        sampling: SamplingConfig::default(),
+        max_sessions: DEFAULT_MAX_SESSIONS,
     }
 }
 

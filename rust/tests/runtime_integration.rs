@@ -147,6 +147,8 @@ fn coordinator_serves_batches() {
         speculate: None,
         kv_page_positions: 0,
         kv_budget_bytes: 0,
+        sampling: zeroquant_fp::coordinator::SamplingConfig::default(),
+        max_sessions: zeroquant_fp::coordinator::DEFAULT_MAX_SESSIONS,
     });
     let mut handles = Vec::new();
     for c in 0..3 {
